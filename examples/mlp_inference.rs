@@ -1,0 +1,207 @@
+//! End-to-end driver: quantized MLP inference on the simulated PiCaSO
+//! overlay, golden-checked **bit-for-bit** against the AOT-compiled JAX
+//! model executed through PJRT — all three layers of the stack composing:
+//!
+//!   L1 (Pallas bit-plane MAC) + L2 (JAX MLP) --aot.py--> artifacts/*.hlo.txt
+//!   L3 (this binary): corner-turn -> PIM microcode -> cycle-accurate sim
+//!                     -> XLA golden cross-check -> latency/throughput report
+//!
+//! Workload: batch of 16 synthetic samples through a 64→32→10 int8 MLP
+//! (the MLP/RNN class the paper's introduction motivates: low operational
+//! intensity, dominated by memory — exactly PIM's target).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mlp_inference
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use picaso::compiler::{execute_gemm, GemmShape, PimCompiler};
+use picaso::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind};
+use picaso::prelude::*;
+use picaso::runtime::{artifact, XlaRuntime, ARTIFACTS_DIR};
+use picaso::util::Xoshiro256;
+use std::time::Instant;
+
+// Keep in sync with python/compile/model.py.
+const IN: usize = 64;
+const HIDDEN: usize = 32;
+const OUT: usize = 10;
+const BATCH: usize = 16;
+const SHIFT: u32 = 7;
+
+struct MlpParams {
+    w1: Vec<i64>, // IN x HIDDEN
+    b1: Vec<i64>,
+    w2: Vec<i64>, // HIDDEN x OUT
+    b2: Vec<i64>,
+}
+
+/// Matched-filter parameters: hidden unit `j < OUT` is the template
+/// detector for class `j` (a hand-constructed classifier — the weights a
+/// trained MLP would converge to on this synthetic task); remaining
+/// hidden units carry small random weights to exercise full width.
+fn synth_params(rng: &mut Xoshiro256) -> MlpParams {
+    let mut w1 = vec![0i64; IN * HIDDEN];
+    let mut w2 = vec![0i64; HIDDEN * OUT];
+    let b1 = vec![0i64; HIDDEN];
+    let b2 = vec![0i64; OUT];
+    for j in 0..HIDDEN {
+        for i in 0..IN {
+            w1[i * HIDDEN + j] = if j < OUT {
+                // matched filter for class j's template
+                if (i + j * 7) % OUT == 0 { 4 } else { -1 }
+            } else {
+                rng.range_i64(-2, 2)
+            };
+        }
+    }
+    for j in 0..OUT {
+        w2[j * OUT + j] = 8; // route detector j to logit j
+    }
+    MlpParams { w1, b1, w2, b2 }
+}
+
+/// Synthetic "digits": each sample is a noisy template of its class —
+/// a tiny stand-in for the sensor workloads of SPAR-2's IoT setting.
+fn synth_batch(rng: &mut Xoshiro256) -> (Vec<i64>, Vec<usize>) {
+    let mut x = vec![0i64; BATCH * IN];
+    let mut labels = vec![0usize; BATCH];
+    for s in 0..BATCH {
+        let class = s % OUT;
+        labels[s] = class;
+        for i in 0..IN {
+            let template = if (i + class * 7) % OUT == 0 { 90 } else { -30 };
+            let noise = rng.range_i64(-25, 25);
+            x[s * IN + i] = (template + noise).clamp(-128, 127);
+        }
+    }
+    (x, labels)
+}
+
+/// The integer MLP semantics (mirrors python/compile/model.py exactly).
+fn mlp_postproc_layer1(acc: &[i64], b1: &[i64]) -> Vec<i64> {
+    acc.iter()
+        .enumerate()
+        .map(|(idx, &v)| {
+            let j = idx % HIDDEN;
+            let z = (v + b1[j]).max(0) >> SHIFT;
+            z.min(127)
+        })
+        .collect()
+}
+
+fn main() -> picaso::Result<()> {
+    println!("=== PiCaSO end-to-end MLP inference ===\n");
+    let mut rng = Xoshiro256::seeded(0xD161);
+    let params = synth_params(&mut rng);
+    let (x, labels) = synth_batch(&mut rng);
+
+    // ---------------------------------------------------------------- L3
+    // The PIM path: two GEMMs on the simulated overlay + integer postproc.
+    let geom = ArrayGeometry::new(8, 4); // 8 rows x 64 lanes
+    let mut array = PimArray::new(geom, PipelineConfig::FullPipe);
+    let compiler = PimCompiler::new(geom);
+    let plan1 = compiler.gemm(GemmShape { m: BATCH, k: IN, n: HIDDEN }, 8)?;
+    let plan2 = compiler.gemm(GemmShape { m: BATCH, k: HIDDEN, n: OUT }, 8)?;
+
+    let t0 = Instant::now();
+    let (acc1, stats1) = execute_gemm(&mut array, &plan1, &x, &params.w1)?;
+    let h = mlp_postproc_layer1(&acc1, &params.b1);
+    let (acc2, stats2) = execute_gemm(&mut array, &plan2, &h, &params.w2)?;
+    let logits_pim: Vec<i64> = acc2
+        .iter()
+        .enumerate()
+        .map(|(idx, &v)| v + params.b2[idx % OUT])
+        .collect();
+    let wall = t0.elapsed();
+
+    let cycles = stats1.cycles + stats2.cycles;
+    let freq = 737e6; // PiCaSO-F at U55 BRAM Fmax
+    let pim_time_s = cycles as f64 / freq;
+    let macs = (BATCH * IN * HIDDEN + BATCH * HIDDEN * OUT) as f64;
+    println!("PIM path (cycle-accurate sim, {}x{} blocks):", geom.rows, geom.cols);
+    println!("  pim cycles        : {cycles}");
+    println!("  modeled latency   : {} @ 737 MHz", picaso::util::fmt_ns(pim_time_s * 1e9));
+    println!(
+        "  modeled throughput: {} ({} samples/s)",
+        picaso::util::fmt_rate(macs / pim_time_s, "MAC"),
+        (BATCH as f64 / pim_time_s).round()
+    );
+    println!("  sim wall          : {wall:?}\n");
+
+    // ---------------------------------------------------------------- XLA
+    // Golden path: the AOT-compiled JAX MLP through PJRT.
+    let mut rt = XlaRuntime::cpu(ARTIFACTS_DIR)?;
+    if !rt.has_artifact(artifact::MLP) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    rt.load(artifact::MLP)?;
+    println!("XLA golden model loaded on {}", rt.platform());
+    let f32v = |v: &[i64]| -> Vec<f32> { v.iter().map(|&x| x as f32).collect() };
+    let t1 = Instant::now();
+    let logits_xla = rt.run_f32(
+        artifact::MLP,
+        &[
+            (f32v(&x), vec![BATCH, IN]),
+            (f32v(&params.w1), vec![IN, HIDDEN]),
+            (f32v(&params.b1), vec![HIDDEN]),
+            (f32v(&params.w2), vec![HIDDEN, OUT]),
+            (f32v(&params.b2), vec![OUT]),
+        ],
+    )?;
+    let xla_wall = t1.elapsed();
+    println!("  xla wall          : {xla_wall:?}\n");
+
+    // ------------------------------------------------------------ verify
+    let logits_xla_i: Vec<i64> = logits_xla.iter().map(|&v| v.round() as i64).collect();
+    assert_eq!(
+        logits_pim, logits_xla_i,
+        "PIM and XLA golden logits must match bit-for-bit"
+    );
+    println!("golden check: PIM logits == XLA logits for all {} values ✔", logits_pim.len());
+
+    let classify = |logits: &[i64]| -> Vec<usize> {
+        (0..BATCH)
+            .map(|s| {
+                (0..OUT)
+                    .max_by_key(|&c| logits[s * OUT + c])
+                    .unwrap_or(0)
+            })
+            .collect()
+    };
+    let preds = classify(&logits_pim);
+    let agree = preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+    println!("classification accuracy: {agree}/{BATCH} on the synthetic template task\n");
+    assert!(agree >= BATCH * 3 / 4, "matched-filter MLP should classify its templates");
+
+    // ----------------------------------------------------- batch serving
+    // Throughput under the coordinator: many batches across workers.
+    let jobs = 32;
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        workers: 4,
+        geom,
+        ..Default::default()
+    })?;
+    let mut batch_jobs = Vec::new();
+    for id in 0..jobs as u64 {
+        batch_jobs.push(Job {
+            id,
+            kind: JobKind::Gemm {
+                shape: GemmShape { m: BATCH, k: IN, n: HIDDEN },
+                width: 8,
+                a: x.clone(),
+                b: params.w1.clone(),
+            },
+        });
+    }
+    let (results, mut metrics) = coord.run_batch(batch_jobs)?;
+    let failures = results.iter().filter(|r| r.error.is_some()).count();
+    coord.shutdown();
+    println!("serving: {}", metrics.summary());
+    assert_eq!(failures, 0);
+
+    println!("\nmlp_inference OK — record in EXPERIMENTS.md §End-to-end");
+    Ok(())
+}

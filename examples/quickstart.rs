@@ -1,0 +1,68 @@
+//! Quickstart: build a PiCaSO array, run a multiply-accumulate, verify it
+//! against software, and cross-check the cycle count against the paper's
+//! Table V algebra.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use picaso::compiler::{BUF_A, BUF_B, BUF_OUT};
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+
+fn main() -> picaso::Result<()> {
+    // An 8-block row: q = 128 PEs, the Table V test configuration.
+    let geom = ArrayGeometry::new(1, 8);
+    let mut array = PimArray::new(geom, PipelineConfig::FullPipe);
+    println!(
+        "PiCaSO-F array: {} blocks x 16 PEs = {} PEs (q = {})",
+        geom.rows * geom.cols,
+        geom.pes(),
+        geom.row_lanes()
+    );
+
+    // Random int8 operands, one pair per PE.
+    let mut rng = Xoshiro256::seeded(2023);
+    let mut a = vec![0i64; geom.pes()];
+    let mut b = vec![0i64; geom.pes()];
+    rng.fill_signed(&mut a, 8);
+    rng.fill_signed(&mut b, 8);
+    array.set_buffer(BUF_A, a.clone());
+    array.set_buffer(BUF_B, b.clone());
+
+    // Multiply every pair, then reduce the row with the OpMux folds and
+    // the binary-hopping network.
+    let program = MacProgram::elementwise_mul_then_accumulate(8, geom.row_lanes());
+    println!("\nmicrocode:\n{}", picaso::isa::asm::format_program(&program));
+    let stats = array.execute(&program)?;
+
+    let expect: i64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    let got = array.buffer(BUF_OUT).expect("stored")[0];
+    assert_eq!(got, expect, "PIM result must match software");
+    println!("dot product of {} int8 pairs = {got}  (software agrees)", geom.pes());
+
+    // Cycle accounting vs the paper's closed forms.
+    let model = ArchKind::PICASO_F.cycles();
+    println!("\ncycles: {} total", stats.cycles);
+    println!("  MULT       : {:5} (Table V: 2N^2+2N = {})", stats.breakdown.mult, model.mult(8));
+    println!(
+        "  Accumulate : {:5} (Table V @ q=128: {})",
+        stats.breakdown.accumulate,
+        model.accumulate(128, 16)
+    );
+    let f = 737e6; // U55 BRAM Fmax — PiCaSO-F runs at BRAM speed (§IV-A)
+    println!(
+        "  at 737 MHz (U55 BRAM Fmax): {}",
+        picaso::util::fmt_ns(stats.time_ns(f))
+    );
+
+    // The headline Table V comparison: same reduction on SPAR-2.
+    let spar2 = ArchKind::Spar2.cycles().accumulate(128, 32);
+    let picaso = model.accumulate(128, 32);
+    println!(
+        "\nTable V (q=128, N=32): SPAR-2 {spar2} cycles vs PiCaSO-F {picaso} — {:.1}x faster",
+        spar2 as f64 / picaso as f64
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""AOT lowering: JAX → HLO text artifacts for the Rust PJRT runtime.
+
+Interchange is HLO **text**, not ``.serialize()`` / serialized
+HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the published xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Idempotent: artifacts are only rewritten when inputs change (the
+Makefile additionally guards with file mtimes), so ``make artifacts``
+is a no-op on an up-to-date tree and Python never runs on the Rust
+request path.
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jitted-and-lowered function to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifacts():
+    """(name, function, example-arg specs) for every artifact."""
+    return [
+        (
+            "gemm_int8",
+            model.gemm_int8,
+            (_spec(model.GEMM_M, model.GEMM_K), _spec(model.GEMM_K, model.GEMM_N)),
+        ),
+        (
+            "mlp_golden",
+            model.mlp_forward,
+            (
+                _spec(model.MLP_BATCH, model.MLP_IN),
+                _spec(model.MLP_IN, model.MLP_HIDDEN),
+                _spec(model.MLP_HIDDEN),
+                _spec(model.MLP_HIDDEN, model.MLP_OUT),
+                _spec(model.MLP_OUT),
+            ),
+        ),
+        (
+            "bitserial_mac",
+            model.bitserial_mac_model,
+            (_spec(8, 64), _spec(8, 64)),
+        ),
+    ]
+
+
+def lower_all(out_dir: pathlib.Path) -> list[pathlib.Path]:
+    """Lower every artifact into ``out_dir``; returns written paths."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, fn, specs in artifacts():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        prev = path.read_text() if path.exists() else None
+        if prev != text:
+            path.write_text(text)
+        print(f"{name}: {len(text)} chars -> {path}")
+        written.append(path)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    lower_all(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

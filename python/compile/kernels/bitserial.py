@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernel: the bit-serial MAC, rethought for TPU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+overlay stores operands as bit-planes striped down BRAM columns, runs a
+bit-serial shift-add multiply (Booth radix-2, Table II), and reduces
+products with the zero-copy OpMux fold (Fig 2(a)). On TPU:
+
+* the BRAM column striping becomes **bit-plane tensors resident in
+  VMEM** — ``BlockSpec`` tiles one row-block of operands at a time, so
+  the HBM↔VMEM schedule plays the role of DRAM↔BRAM corner turning;
+* the per-PE FA/S ALU becomes a **plane-wise vector op on the VPU**:
+  one multiplier bit-plane is consumed per step across every lane at
+  once — the same SIMD broadcast as the overlay, with VPU lanes standing
+  in for the PE array;
+* the OpMux fold becomes a **strided slice + add inside the kernel** —
+  a log-depth in-register reduction with no HBM round trip, preserving
+  the "zero-copy" property that distinguishes PiCaSO from the
+  streaming custom tiles.
+
+The kernel is exact integer arithmetic and is validated against
+``ref.py`` by ``python/tests/test_kernel.py`` (hypothesis sweep over
+shapes and widths). It MUST be lowered with ``interpret=True``: real
+TPU lowering emits a Mosaic custom-call the CPU PJRT client cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default operand width (int8 — the paper's headline precision).
+NBITS_DEFAULT = 8
+
+
+def _mac_kernel(a_ref, b_ref, o_ref, *, nbits: int):
+    """One row-block: bit-serial multiply + fold-reduce.
+
+    ``a_ref``/``b_ref``: int32 (rows_tile, q) integer operands in VMEM.
+    ``o_ref``: int32 (rows_tile,) row dot products.
+    """
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    bmask = b & ((1 << nbits) - 1)  # two's-complement planes of B
+
+    # Bit-serial shift-add over the multiplier planes: plane i contributes
+    # (A << i) where B's bit i is set; the MSB plane carries negative
+    # weight (two's complement) — exactly the FA/S + Op-Encoder dataflow.
+    acc = jnp.zeros_like(a)
+    for i in range(nbits):
+        plane = (bmask >> i) & 1  # one wordline read per step (§III-A)
+        weight = -(1 << (nbits - 1)) if i == nbits - 1 else (1 << i)
+        acc = acc + a * plane * weight
+
+    # Zero-copy fold reduction (OpMux A-FOLD-x, Fig 2(a)): halving adds
+    # until lane 0 holds the row sum. Unrolled: q is static.
+    q = acc.shape[-1]
+    while q > 1:
+        half = q // 2
+        acc = acc[..., :half] + acc[..., half:q]
+        q = half
+    o_ref[...] = acc[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "rows_tile"))
+def bitserial_mac(a, b, *, nbits: int = NBITS_DEFAULT, rows_tile: int = 8):
+    """Row-wise dot products via the bit-serial Pallas kernel.
+
+    ``a``, ``b``: int32 (rows, q) with q a power of two; returns
+    int32 (rows,). ``rows_tile`` controls the VMEM block height
+    (the BlockSpec tile is ``rows_tile × q`` per grid step).
+    """
+    rows, q = a.shape
+    assert b.shape == (rows, q), (a.shape, b.shape)
+    assert q & (q - 1) == 0, f"q={q} must be a power of two"
+    rows_tile = min(rows_tile, rows)
+    assert rows % rows_tile == 0, (rows, rows_tile)
+    grid = (rows // rows_tile,)
+    return pl.pallas_call(
+        functools.partial(_mac_kernel, nbits=nbits),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_tile, q), lambda r: (r, 0)),
+            pl.BlockSpec((rows_tile, q), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_tile,), lambda r: (r,)),
+        interpret=True,  # CPU-PJRT executable; Mosaic is TPU-only
+    )(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def vmem_footprint_bytes(rows_tile: int, q: int, nbits: int = NBITS_DEFAULT) -> int:
+    """Estimated VMEM bytes resident per grid step (perf model, L1).
+
+    Two int32 operand tiles + the accumulator tile + the output slice.
+    Recorded in EXPERIMENTS.md §Perf; the tile is sized to stay well
+    under ~16 MiB of VMEM.
+    """
+    del nbits  # planes are consumed in place; no extra residency
+    operand = rows_tile * q * 4
+    return 3 * operand + rows_tile * 4

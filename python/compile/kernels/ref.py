@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracle for the bit-serial PIM compute path.
+
+This is the correctness anchor of Layer 1: the Pallas kernel in
+``bitserial.py`` must agree with these functions exactly (integer
+arithmetic, no tolerance) for every shape/width the test sweep draws.
+
+The functions also document the data layout contract shared with the
+Rust simulator (``rust/src/bits``): operands are two's-complement,
+LSB-first bit-planes; folding follows the paper's Fig 2(a) halving
+pattern; reductions leave the row sum in lane 0.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bitplane_decompose(x: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """Decompose signed integers into ``nbits`` LSB-first bit-planes.
+
+    Returns an array of shape ``(nbits, *x.shape)`` with 0/1 int32
+    entries — plane ``b`` is bit ``b`` of the two's-complement
+    representation, exactly the corner-turned storage of paper §III-A.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    masked = x & ((1 << nbits) - 1)  # two's complement truncation
+    planes = [(masked >> b) & 1 for b in range(nbits)]
+    return jnp.stack(planes).astype(jnp.int32)
+
+
+def bitplane_compose(planes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`bitplane_decompose` (sign-extending)."""
+    nbits = planes.shape[0]
+    weights = jnp.array(
+        [1 << b for b in range(nbits - 1)] + [-(1 << (nbits - 1))],
+        dtype=jnp.int32,
+    )
+    return jnp.tensordot(weights, planes.astype(jnp.int32), axes=1)
+
+
+def booth_digits(y: np.ndarray, nbits: int) -> np.ndarray:
+    """Radix-2 Booth digits d_i ∈ {-1, 0, +1} of the multiplier (Table II).
+
+    numpy-only helper used by tests: sum(d_i · 2^i) == y for any
+    ``nbits``-bit two's-complement ``y``.
+    """
+    y = np.asarray(y, np.int64)
+    masked = y & ((1 << nbits) - 1)
+    digits = []
+    prev = np.zeros_like(masked)
+    for i in range(nbits):
+        cur = (masked >> i) & 1
+        digits.append((prev - cur).astype(np.int64))  # 01->+1, 10->-1
+        prev = cur
+    return np.stack(digits)
+
+
+def fold_reduce_ref(v: jnp.ndarray) -> jnp.ndarray:
+    """Log-depth halving fold over the last axis (paper Fig 2(a)).
+
+    After all levels, lane 0 holds the row sum — the zero-copy OpMux
+    reduction. The last axis length must be a power of two.
+    """
+    q = v.shape[-1]
+    assert q & (q - 1) == 0, f"q={q} must be a power of two"
+    while q > 1:
+        half = q // 2
+        v = v[..., :half] + v[..., half:q]
+        q = half
+    return v[..., 0]
+
+
+def bitserial_mac_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference MAC: exact int32 row-wise dot product ``sum_q a*b``.
+
+    ``a``, ``b``: integer arrays of shape (rows, q).
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    return jnp.sum(a * b, axis=-1, dtype=jnp.int32)
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer GEMM reference (int32 accumulation)."""
+    return jnp.matmul(
+        jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32)
+    ).astype(jnp.int32)

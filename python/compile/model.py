@@ -1,0 +1,62 @@
+"""Layer-2 JAX models: the golden compute graphs the PIM array must match.
+
+Three exported functions, each AOT-lowered to HLO text by ``aot.py``:
+
+* :func:`gemm_int8` — the int8 GEMM golden model. Values are carried as
+  f32 (exact for |v| < 2^24), because the Rust PJRT loader feeds f32
+  literals; semantics are integer.
+* :func:`mlp_forward` — a quantized 2-layer MLP (64→32→10) with
+  shift-based requantization between layers. Integer-exact: the Rust
+  coordinator reproduces it bit-for-bit with i64 arithmetic on the
+  simulated PIM array (examples/mlp_inference.rs).
+* :func:`bitserial_mac_model` — wraps the Layer-1 Pallas kernel so it
+  lowers into the same HLO artifact (f32 interface, int32 core).
+
+Python runs only at build time; the Rust request path loads the lowered
+artifacts via PJRT (rust/src/runtime).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.bitserial import bitserial_mac
+
+# MLP architecture constants shared with the Rust side (keep in sync with
+# examples/mlp_inference.rs).
+MLP_IN = 64
+MLP_HIDDEN = 32
+MLP_OUT = 10
+MLP_BATCH = 16
+MLP_SHIFT = 7  # requantization right-shift between layers
+
+# GEMM golden-model shape (rust/src/runtime/mod.rs::gemm_golden).
+GEMM_M, GEMM_K, GEMM_N = 16, 64, 16
+
+
+def gemm_int8(a, b):
+    """Integer GEMM carried in f32: ``c = a @ b`` (exact below 2^24)."""
+    return (jnp.matmul(a, b),)
+
+
+def mlp_forward(x, w1, b1, w2, b2):
+    """Quantized MLP forward pass with integer-exact f32 semantics.
+
+    ``h = clip(floor(relu(x@w1 + b1) / 2^MLP_SHIFT), 0, 127)``
+    ``y = h @ w2 + b2``
+
+    relu guarantees non-negative pre-shift values, so ``floor`` equals
+    arithmetic right shift and the Rust i64 reimplementation matches
+    exactly.
+    """
+    acc1 = jnp.matmul(x, w1) + b1
+    h = jnp.maximum(acc1, 0.0)
+    h = jnp.clip(jnp.floor(h / float(1 << MLP_SHIFT)), 0.0, 127.0)
+    y = jnp.matmul(h, w2) + b2
+    return (y,)
+
+
+def bitserial_mac_model(a, b):
+    """The Pallas bit-serial MAC with an f32 interface for the loader."""
+    ai = a.astype(jnp.int32)
+    bi = b.astype(jnp.int32)
+    out = bitserial_mac(ai, bi)
+    return (out.astype(jnp.float32),)

@@ -1,0 +1,132 @@
+"""Layer-1 correctness: the Pallas bit-serial kernel vs the pure-jnp
+oracle — the CORE correctness signal of the Python side.
+
+hypothesis sweeps shapes, widths and operand values; every comparison is
+exact integer equality (no tolerance): a bit-serial datapath that is off
+by one ULP is simply wrong.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bitserial import bitserial_mac, vmem_footprint_bytes
+from compile.kernels.ref import (
+    bitplane_compose,
+    bitplane_decompose,
+    bitserial_mac_ref,
+    booth_digits,
+    fold_reduce_ref,
+    gemm_ref,
+)
+
+
+def signed_arrays(rows, q, nbits, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (nbits - 1)), (1 << (nbits - 1)) - 1
+    a = rng.integers(lo, hi + 1, size=(rows, q), dtype=np.int32)
+    b = rng.integers(lo, hi + 1, size=(rows, q), dtype=np.int32)
+    return a, b
+
+
+# ---------------------------------------------------------------- oracle
+
+
+@given(
+    nbits=st.sampled_from([2, 4, 8, 12, 16]),
+    seed=st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_bitplane_roundtrip(nbits, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (nbits - 1)), (1 << (nbits - 1)) - 1
+    x = rng.integers(lo, hi + 1, size=(5, 7), dtype=np.int32)
+    planes = bitplane_decompose(jnp.asarray(x), nbits)
+    assert planes.shape == (nbits, 5, 7)
+    back = bitplane_compose(planes)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@given(nbits=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_booth_digits_resum(nbits, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (nbits - 1)), (1 << (nbits - 1)) - 1
+    y = rng.integers(lo, hi + 1, size=64, dtype=np.int64)
+    d = booth_digits(y, nbits)
+    resum = sum(d[i] * (1 << i) for i in range(nbits))
+    np.testing.assert_array_equal(resum, y)
+
+
+@given(logq=st.integers(0, 7), seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fold_reduce_matches_sum(logq, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.integers(-1000, 1000, size=(3, 1 << logq)).astype(np.int32)
+    got = fold_reduce_ref(jnp.asarray(v))
+    np.testing.assert_array_equal(np.asarray(got), v.sum(axis=-1))
+
+
+def test_fold_reduce_rejects_non_pow2():
+    with pytest.raises(AssertionError):
+        fold_reduce_ref(jnp.zeros((2, 12), jnp.int32))
+
+
+# ---------------------------------------------------------------- kernel
+
+
+@given(
+    rows_pow=st.integers(0, 4),
+    q_pow=st.integers(1, 7),
+    nbits=st.sampled_from([2, 4, 8, 12, 16]),
+    seed=st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_kernel_matches_ref_exactly(rows_pow, q_pow, nbits, seed):
+    rows, q = 1 << rows_pow, 1 << q_pow
+    a, b = signed_arrays(rows, q, nbits, seed)
+    got = bitserial_mac(jnp.asarray(a), jnp.asarray(b), nbits=nbits, rows_tile=rows)
+    expect = bitserial_mac_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@pytest.mark.parametrize("rows_tile", [1, 2, 4, 8])
+def test_kernel_tile_invariance(rows_tile):
+    # The BlockSpec tiling must not change results.
+    a, b = signed_arrays(8, 64, 8, 42)
+    full = bitserial_mac(jnp.asarray(a), jnp.asarray(b), rows_tile=8)
+    tiled = bitserial_mac(jnp.asarray(a), jnp.asarray(b), rows_tile=rows_tile)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(tiled))
+
+
+def test_kernel_extremes_int8():
+    # Worst-case operands: -128 * -128 across q=64 accumulates past 2^16.
+    a = jnp.full((2, 64), -128, jnp.int32)
+    b = jnp.full((2, 64), -128, jnp.int32)
+    out = bitserial_mac(a, b, nbits=8, rows_tile=2)
+    np.testing.assert_array_equal(np.asarray(out), np.full(2, 64 * 128 * 128))
+
+
+def test_kernel_rejects_bad_q():
+    with pytest.raises(AssertionError):
+        bitserial_mac(jnp.zeros((2, 12), jnp.int32), jnp.zeros((2, 12), jnp.int32))
+
+
+def test_vmem_footprint_model():
+    # The default tile stays far below a 16 MiB VMEM budget.
+    assert vmem_footprint_bytes(8, 64) < 1 << 16
+    assert vmem_footprint_bytes(8, 64) == 3 * 8 * 64 * 4 + 8 * 4
+
+
+# ------------------------------------------------------------ gemm oracle
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_gemm_ref_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, size=(5, 9), dtype=np.int32)
+    b = rng.integers(-128, 128, size=(9, 4), dtype=np.int32)
+    got = gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), a.astype(np.int64) @ b)

@@ -1,0 +1,91 @@
+"""Layer-2 model tests: shapes, integer-exactness of the quantized MLP,
+and the AOT lowering path (HLO text emission)."""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+
+
+def rand_mlp_params(seed):
+    rng = np.random.default_rng(seed)
+    w1 = rng.integers(-8, 9, size=(model.MLP_IN, model.MLP_HIDDEN)).astype(np.float32)
+    b1 = rng.integers(-64, 65, size=(model.MLP_HIDDEN,)).astype(np.float32)
+    w2 = rng.integers(-8, 9, size=(model.MLP_HIDDEN, model.MLP_OUT)).astype(np.float32)
+    b2 = rng.integers(-64, 65, size=(model.MLP_OUT,)).astype(np.float32)
+    return w1, b1, w2, b2
+
+
+def mlp_int_ref(x, w1, b1, w2, b2):
+    """Integer reference of the quantized MLP (mirrors the Rust side)."""
+    xi = x.astype(np.int64)
+    acc1 = xi @ w1.astype(np.int64) + b1.astype(np.int64)
+    h = np.maximum(acc1, 0) >> model.MLP_SHIFT
+    h = np.minimum(h, 127)
+    return h @ w2.astype(np.int64) + b2.astype(np.int64)
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_mlp_matches_integer_reference(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=(model.MLP_BATCH, model.MLP_IN)).astype(np.float32)
+    w1, b1, w2, b2 = rand_mlp_params(seed)
+    (y,) = model.mlp_forward(
+        jnp.asarray(x), jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), jnp.asarray(b2)
+    )
+    expect = mlp_int_ref(x, w1, b1, w2, b2)
+    np.testing.assert_array_equal(np.asarray(y).astype(np.int64), expect)
+
+
+def test_mlp_shapes():
+    x = jnp.zeros((model.MLP_BATCH, model.MLP_IN), jnp.float32)
+    w1, b1, w2, b2 = (jnp.asarray(p) for p in rand_mlp_params(0))
+    (y,) = model.mlp_forward(x, w1, b1, w2, b2)
+    assert y.shape == (model.MLP_BATCH, model.MLP_OUT)
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_gemm_int8_exact(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, size=(model.GEMM_M, model.GEMM_K)).astype(np.float32)
+    b = rng.integers(-128, 128, size=(model.GEMM_K, model.GEMM_N)).astype(np.float32)
+    (c,) = model.gemm_int8(jnp.asarray(a), jnp.asarray(b))
+    expect = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(c).astype(np.int64), expect)
+
+
+def test_bitserial_mac_model_wraps_kernel():
+    rng = np.random.default_rng(3)
+    a = rng.integers(-128, 128, size=(8, 64)).astype(np.float32)
+    b = rng.integers(-128, 128, size=(8, 64)).astype(np.float32)
+    (out,) = model.bitserial_mac_model(jnp.asarray(a), jnp.asarray(b))
+    expect = (a.astype(np.int64) * b.astype(np.int64)).sum(axis=-1)
+    np.testing.assert_array_equal(np.asarray(out).astype(np.int64), expect)
+
+
+# ----------------------------------------------------------------- AOT
+
+
+@pytest.mark.parametrize("name,fn,specs", aot.artifacts())
+def test_artifacts_lower_to_hlo_text(name, fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), f"{name}: {text[:40]}"
+    # Tuple return, as the Rust loader expects.
+    assert "tuple" in text or "ROOT" in text
+
+
+def test_lower_all_is_idempotent(tmp_path: pathlib.Path):
+    first = aot.lower_all(tmp_path)
+    stamps = {p: p.stat().st_mtime_ns for p in first}
+    second = aot.lower_all(tmp_path)
+    assert first == second
+    for p in second:
+        assert p.stat().st_mtime_ns == stamps[p], f"{p} rewritten without change"

@@ -1,0 +1,108 @@
+//! Ablation bench: the design choices the paper motivates, isolated.
+//!
+//! 1. **Pipeline configuration** (§III-E): same cycle counts, different
+//!    achievable clock → effective MAC latency per config per device.
+//! 2. **Booth NOP skipping** (§V): expected multiply latency with/without
+//!    the skip, measured on the simulator over random operands.
+//! 3. **Fold pattern** (Fig 2a vs 2b): both reduce in log depth; the
+//!    adjacent pattern additionally supports pooling windows.
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::analytic::design_clock_hz;
+use picaso::arch::{ArchKind, PipelineConfig};
+use picaso::array::{ArrayGeometry, PimArray, RunStats};
+use picaso::compiler::{BUF_A, BUF_B};
+use picaso::device::Device;
+use picaso::isa::{BufId, FoldPattern, Instruction, Microcode, RfAddr};
+use picaso::util::Xoshiro256;
+
+fn main() {
+    harness::section("ablation 1 — pipeline config: effective MAC latency (N=8, q=16)");
+    let u55 = Device::by_id("U55").unwrap();
+    let v7 = Device::by_id("V7").unwrap();
+    for cfg in PipelineConfig::ALL {
+        let kind = ArchKind::Overlay(cfg);
+        let cycles = kind.cycles().mult(8) + kind.cycles().accumulate(16, 8);
+        for dev in [v7, u55] {
+            let f = design_clock_hz(kind, dev);
+            println!(
+                "  {:12} on {:3}: {} cycles @ {} = {}",
+                cfg.name(),
+                dev.id,
+                cycles,
+                picaso::util::fmt_freq(f),
+                picaso::util::fmt_ns(cycles as f64 / f * 1e9)
+            );
+        }
+    }
+
+    harness::section("ablation 2 — Booth NOP skipping (N=8, 64 lanes)");
+    // The paper's 'potential 50%' reduction (§V) needs the *sequencer* to
+    // skip a step, which lock-step SIMD only can when every lane recodes
+    // NOP. Two workloads isolate this:
+    //  (a) per-lane random multipliers  -> some step is active somewhere,
+    //      no skipping despite ~50% per-lane NOPs;
+    //  (b) broadcast multiplier (weight-stationary MV product) -> all
+    //      lanes share the recode and ~half the steps vanish.
+    let geom = ArrayGeometry::new(1, 4);
+    let mut rng = Xoshiro256::seeded(0xAB1A);
+    let mut a = vec![0i64; 64];
+    rng.fill_signed(&mut a, 8);
+    let mut b_lane = vec![0i64; 64];
+    rng.fill_signed(&mut b_lane, 8);
+    let b_bcast = vec![0b0110_0110i64; 64]; // 4 of 8 Booth steps active
+    for (label, b, skip) in [
+        ("per-lane, no skip   ", &b_lane, false),
+        ("per-lane, skip      ", &b_lane, true),
+        ("broadcast, skip     ", &b_bcast, true),
+    ] {
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        arr.set_booth_skip(skip);
+        arr.set_buffer(BUF_A, a.clone());
+        arr.set_buffer(BUF_B, b.clone());
+        let mut mc = Microcode::new("m", 8);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) });
+        mc.push(Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) });
+        mc.push(Instruction::Mult { dst: RfAddr(16), mand: RfAddr(0), mier: RfAddr(8), width: 8 });
+        let stats = arr.execute(&mc).unwrap();
+        println!(
+            "  {label}: {:3} mult cycles (worst case 2N^2+2N = 144)",
+            stats.breakdown.mult
+        );
+    }
+
+    harness::section("ablation 3 — fold pattern (both reduce 16 lanes to lane 0)");
+    for pattern in [FoldPattern::Halving, FoldPattern::Adjacent] {
+        let mut arr = PimArray::new(ArrayGeometry::new(1, 1), PipelineConfig::FullPipe);
+        arr.set_buffer(BUF_A, (1..=16).collect());
+        let mut mc = Microcode::new("fold", 16);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 16, buf: BufId(0) });
+        for level in 1..=4 {
+            mc.push(Instruction::Fold { pattern, level, dst: RfAddr(0), width: 16 });
+        }
+        arr.execute(&mc).unwrap();
+        let sum = arr.row_result(0, RfAddr(0), 16);
+        assert_eq!(sum, 136);
+        println!("  {pattern:?}: row sum = {sum} (correct), 4 levels");
+    }
+
+    harness::section("timing — full MAC group across configs");
+    for cfg in [PipelineConfig::SingleCycle, PipelineConfig::FullPipe] {
+        let mut arr = PimArray::new(geom, cfg);
+        arr.set_buffer(BUF_A, a.clone());
+        arr.set_buffer(BUF_B, b_lane.clone());
+        let mut mc = Microcode::new("mac", 8);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) });
+        mc.push(Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) });
+        mc.push(Instruction::Mult { dst: RfAddr(16), mand: RfAddr(0), mier: RfAddr(8), width: 8 });
+        mc.push(Instruction::Accumulate { dst: RfAddr(16), width: 16 });
+        harness::bench(&format!("mac_group_{}", cfg.name()), 5, || {
+            let mut s = RunStats::default();
+            for i in &mc.instrs {
+                arr.step(*i, &mut s).unwrap();
+            }
+            std::hint::black_box(s.cycles);
+        });
+    }
+}

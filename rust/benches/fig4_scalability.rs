@@ -1,0 +1,17 @@
+//! Bench: paper Fig 4 (scalability across Table VII devices).
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::device::table7_devices;
+use picaso::report::paper;
+use picaso::synth::ImplModel;
+
+fn main() {
+    harness::section("Fig 4 — scalability study");
+    print!("{}", paper::fig4());
+    harness::section("timing");
+    let devs = table7_devices();
+    harness::bench("scalability_sweep_8_devices", 10, || {
+        std::hint::black_box(ImplModel::scalability(&devs));
+    });
+}

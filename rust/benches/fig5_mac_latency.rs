@@ -1,0 +1,51 @@
+//! Bench: paper Fig 5 (relative MAC latency w.r.t. PiCaSO) — analytic
+//! series, behavioural cross-check on the custom-tile simulators, and
+//! timing of the behavioural models.
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::analytic::MacLatencyModel;
+use picaso::arch::{ArchKind, CustomDesign};
+use picaso::custom::CustomTile;
+use picaso::report::paper;
+use picaso::util::Xoshiro256;
+
+fn main() {
+    harness::section("Fig 5 — relative MAC latency");
+    print!("{}", paper::fig5());
+
+    // Behavioural check: tile simulators charge exactly the analytic MAC
+    // cycles used in the figure (at accumulate width N).
+    let m = MacLatencyModel::u55();
+    let mut rng = Xoshiro256::seeded(9);
+    let mut a = vec![0i64; 16];
+    let mut b = vec![0i64; 16];
+    rng.fill_signed(&mut a, 4);
+    rng.fill_signed(&mut b, 4);
+    for design in CustomDesign::ALL {
+        let mut tile = CustomTile::new(design);
+        // mac_group accumulates at 2N; the figure pairs Table VIII\'s
+        // width-N row — check the mult portion matches either way.
+        let (_, cycles) = tile.mac_group(&a, &b, 4, 16).unwrap();
+        let kind = ArchKind::Custom(design);
+        assert_eq!(
+            cycles,
+            kind.cycles().mult(4) + kind.cycles().accumulate(16, 8),
+            "{design:?}"
+        );
+        let _ = m.relative(kind, 4);
+    }
+    println!("behavioural tiles agree with analytic cycle charges");
+
+    harness::section("timing — behavioural custom-tile MAC (N=8, q=16)");
+    let mut a8 = vec![0i64; 16];
+    let mut b8 = vec![0i64; 16];
+    rng.fill_signed(&mut a8, 8);
+    rng.fill_signed(&mut b8, 8);
+    for design in [CustomDesign::CoMeFaA, CustomDesign::AMod] {
+        let mut tile = CustomTile::new(design);
+        harness::bench(&format!("tile_mac_{}", design.name()), 10, || {
+            std::hint::black_box(tile.mac_group(&a8, &b8, 8, 16).unwrap());
+        });
+    }
+}

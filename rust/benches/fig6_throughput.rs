@@ -1,0 +1,29 @@
+//! Bench: paper Fig 6 (peak MAC throughput on the U55).
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::analytic::ThroughputModel;
+use picaso::arch::{ArchKind, CustomDesign};
+use picaso::report::paper;
+
+fn main() {
+    harness::section("Fig 6 — peak MAC throughput on Alveo U55");
+    print!("{}", paper::fig6());
+    harness::section("timing");
+    let t = ThroughputModel::u55();
+    let designs = [
+        ArchKind::Custom(CustomDesign::Ccb),
+        ArchKind::Custom(CustomDesign::CoMeFaD),
+        ArchKind::Custom(CustomDesign::CoMeFaA),
+        ArchKind::Custom(CustomDesign::AMod),
+        ArchKind::Custom(CustomDesign::DMod),
+        ArchKind::PICASO_F,
+    ];
+    harness::bench("throughput_model_all_designs_3_precisions", 10, || {
+        for k in designs {
+            for n in [4u32, 8, 16] {
+                std::hint::black_box(t.tmacs(k, n));
+            }
+        }
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: paper Fig 7 (BRAM memory utilization efficiency).
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::arch::{ArchKind, CustomDesign};
+use picaso::bram::RegisterFileBudget;
+use picaso::report::paper;
+
+fn main() {
+    harness::section("Fig 7 — BRAM memory utilization efficiency");
+    print!("{}", paper::fig7());
+    // Paper spot values.
+    assert!((ArchKind::Custom(CustomDesign::Ccb).memory_efficiency(16) - 0.50).abs() < 1e-9);
+    assert!((ArchKind::PICASO_F.memory_efficiency(16) - 0.9375).abs() < 1e-9);
+    harness::section("timing");
+    harness::bench("budget_model_all_designs", 10, || {
+        for n in [4u32, 8, 16, 32] {
+            for k in [
+                ArchKind::Custom(CustomDesign::Ccb),
+                ArchKind::Custom(CustomDesign::CoMeFaA),
+                ArchKind::Custom(CustomDesign::AMod),
+                ArchKind::PICASO_F,
+            ] {
+                std::hint::black_box(RegisterFileBudget::for_arch(k, n).efficiency());
+            }
+        }
+    });
+}

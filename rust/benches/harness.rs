@@ -1,0 +1,79 @@
+//! Minimal bench harness (the vendored crate set has no criterion).
+//!
+//! Each bench target is a `harness = false` binary that (a) regenerates
+//! its paper artifact through `picaso::report::paper` and (b) times the
+//! underlying model/simulator with warmup + repeated samples, reporting
+//! mean / stddev / min. Output is designed to be `tee`'d into
+//! bench_output.txt and pasted into EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// One timed result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Mean wall time per iteration (ns).
+    pub mean_ns: f64,
+    /// Sample standard deviation (ns).
+    pub stddev_ns: f64,
+    /// Fastest sample (ns).
+    pub min_ns: f64,
+    /// Iterations per sample.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Render one line.
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:40} {:>12.0} ns/iter (+/- {:.0}, min {:.0}, {} iters/sample)",
+            self.name, self.mean_ns, self.stddev_ns, self.min_ns, self.iters
+        )
+    }
+}
+
+/// Time `f`, auto-calibrating the iteration count so each sample runs
+/// ≥ ~20 ms, then taking `samples` samples.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt.as_millis() >= 20 || iters >= 1 << 24 {
+            break;
+        }
+        let scale = (0.02 / dt.as_secs_f64().max(1e-9)).ceil() as u64;
+        iters = (iters * scale.clamp(2, 100)).min(1 << 24);
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t0.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / (times.len().max(2) - 1) as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        min_ns: min,
+        iters,
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

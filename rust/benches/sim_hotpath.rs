@@ -1,0 +1,93 @@
+//! Bench: the simulator hot path (EXPERIMENTS.md §Perf).
+//!
+//! Measures simulated PE-cycles per wall-second for the three dominant
+//! operations — Booth multiply, fold+hop accumulation, and a full GEMM —
+//! on the scalar reference engine and the packed (bit-sliced) engine.
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::array::{ArrayGeometry, PackedEngine, PimArray};
+use picaso::bram::ColumnMemory;
+use picaso::compiler::{execute_gemm, GemmShape, PimCompiler};
+use picaso::isa::{Instruction, Microcode, RfAddr, BufId};
+use picaso::prelude::PipelineConfig;
+use picaso::util::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seeded(0xBEEF);
+
+    harness::section("scalar engine — Booth mult, 1024 lanes, N=8");
+    let lanes = 1024;
+    let mut mem = ColumnMemory::new(256, lanes);
+    let mut a = vec![0i64; lanes];
+    let mut b = vec![0i64; lanes];
+    rng.fill_signed(&mut a, 8);
+    rng.fill_signed(&mut b, 8);
+    for (l, (&x, &y)) in a.iter().zip(&b).enumerate() {
+        mem.set_lane_value(l, 0, 8, x);
+        mem.set_lane_value(l, 8, 8, y);
+    }
+    let mut scalar_mem = mem.clone();
+    let r1 = harness::bench("scalar_booth_mult_1024xN8", 10, || {
+        for lane in 0..lanes {
+            std::hint::black_box(picaso::pe::booth_mult(&mut scalar_mem, lane, 16, 0, 8, 8));
+        }
+    });
+
+    harness::section("packed engine — same workload");
+    let mut packed_mem = mem.clone();
+    let r2 = harness::bench("packed_booth_mult_1024xN8", 10, || {
+        std::hint::black_box(PackedEngine::mult(&mut packed_mem, 16, 0, 8, 8));
+    });
+    // Equivalence.
+    for lane in 0..lanes {
+        assert_eq!(
+            scalar_mem.lane_value(lane, 16, 16),
+            packed_mem.lane_value(lane, 16, 16),
+            "packed engine must match scalar, lane {lane}"
+        );
+    }
+    // The paper-model cycle count for this op: 144 cycles x 1024 lanes.
+    let pe_cycles = 144.0 * lanes as f64;
+    println!(
+        "scalar: {} PE-cycles/s   packed: {} PE-cycles/s   speedup {:.1}x",
+        picaso::util::fmt_rate(pe_cycles / (r1.mean_ns / 1e9), "cyc"),
+        picaso::util::fmt_rate(pe_cycles / (r2.mean_ns / 1e9), "cyc"),
+        r1.mean_ns / r2.mean_ns
+    );
+
+    harness::section("end-to-end GEMM on the array simulator");
+    let geom = ArrayGeometry::new(8, 4);
+    let shape = GemmShape { m: 16, k: 64, n: 16 };
+    let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+    let mut ga = vec![0i64; shape.m * shape.k];
+    let mut gb = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut ga, 8);
+    rng.fill_signed(&mut gb, 8);
+    let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+    let mut cycles = 0u64;
+    let r3 = harness::bench("gemm_16x64x16_full_pipe", 10, || {
+        let (c, stats) = execute_gemm(&mut arr, &plan, &ga, &gb).unwrap();
+        std::hint::black_box(c);
+        cycles = stats.cycles;
+    });
+    println!(
+        "gemm: {} pim-cycles per run -> {} sim-cycles/s",
+        cycles,
+        picaso::util::fmt_rate(cycles as f64 / (r3.mean_ns / 1e9), "cyc")
+    );
+
+    harness::section("accumulate macro (q=128, N=32)");
+    let geom2 = ArrayGeometry::new(1, 8);
+    let mut arr2 = PimArray::new(geom2, PipelineConfig::FullPipe);
+    arr2.set_buffer(BufId(0), (0..128).collect());
+    let mut mc = Microcode::new("acc", 32);
+    mc.push(Instruction::Load { dst: RfAddr(0), width: 32, buf: BufId(0) });
+    arr2.execute(&mc).unwrap();
+    harness::bench("accumulate_q128_n32", 10, || {
+        let mut s = picaso::array::RunStats::default();
+        arr2.step(Instruction::Accumulate { dst: RfAddr(0), width: 32 }, &mut s)
+            .unwrap();
+        std::hint::black_box(s.cycles);
+    });
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Table IV (tile resources & Fmax) and time
+//! the virtual-implementation model.
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::device::Device;
+use picaso::report::paper;
+use picaso::synth::{ImplModel, OverlayDesign};
+
+fn main() {
+    harness::section("Table IV — tiles of 4x4 PE-blocks");
+    print!("{}", paper::table4());
+    harness::section("timing");
+    let v7 = Device::by_id("V7").unwrap();
+    let u55 = Device::by_id("U55").unwrap();
+    harness::bench("tile_report_all_configs_both_devices", 10, || {
+        for design in OverlayDesign::TABLE4 {
+            std::hint::black_box(ImplModel::tile_report(design, v7));
+            std::hint::black_box(ImplModel::tile_report(design, u55));
+        }
+    });
+}

@@ -1,0 +1,57 @@
+//! Bench: paper Table V (operation cycle latencies) — analytic forms AND
+//! the cycle-accurate simulator executing the same operations, asserting
+//! they agree before timing the simulator.
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::arch::ArchKind;
+use picaso::array::{ArrayGeometry, PimArray, RunStats};
+use picaso::compiler::{BUF_A, BUF_B};
+use picaso::isa::{BufId, Instruction, Microcode, RfAddr};
+use picaso::prelude::PipelineConfig;
+use picaso::report::paper;
+use picaso::util::Xoshiro256;
+
+fn main() {
+    harness::section("Table V — cycle latencies (q=128, N=32)");
+    print!("{}", paper::table5());
+
+    // Cross-check: simulator charges == analytic forms.
+    let geom = ArrayGeometry::new(1, 8); // q = 128
+    let mut rng = Xoshiro256::seeded(5);
+    let mut a = vec![0i64; 128];
+    let mut b = vec![0i64; 128];
+    rng.fill_signed(&mut a, 16);
+    rng.fill_signed(&mut b, 16);
+
+    let mut picaso = PimArray::new(geom, PipelineConfig::FullPipe);
+    picaso.set_buffer(BUF_A, a.clone());
+    picaso.set_buffer(BUF_B, b.clone());
+    let mut mc = Microcode::new("table5", 32);
+    mc.push(Instruction::Load { dst: RfAddr(0), width: 32, buf: BufId(0) });
+    mc.push(Instruction::Accumulate { dst: RfAddr(0), width: 32 });
+    let stats = picaso.execute(&mc).unwrap();
+    assert_eq!(stats.breakdown.accumulate, 259, "simulator must charge Table V");
+
+    let mut spar2 = PimArray::with_kind(geom, ArchKind::Spar2);
+    spar2.set_buffer(BUF_A, a.clone());
+    let stats2 = spar2.execute(&mc).unwrap();
+    assert_eq!(stats2.breakdown.accumulate, 4512, "SPAR-2 must charge Table V");
+    println!("simulator cycle charges match analytic forms (259 / 4512)");
+
+    harness::section("timing — cycle-accurate accumulation (q=128, N=32)");
+    harness::bench("picaso_accumulate_q128_n32", 10, || {
+        let mut s = RunStats::default();
+        picaso
+            .step(Instruction::Accumulate { dst: RfAddr(0), width: 32 }, &mut s)
+            .unwrap();
+        std::hint::black_box(s.cycles);
+    });
+    harness::bench("spar2_news_accumulate_q128_n32", 10, || {
+        let mut s = RunStats::default();
+        spar2
+            .step(Instruction::Accumulate { dst: RfAddr(0), width: 32 }, &mut s)
+            .unwrap();
+        std::hint::black_box(s.cycles);
+    });
+}

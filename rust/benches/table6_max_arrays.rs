@@ -1,0 +1,25 @@
+//! Bench: paper Table VI (largest placeable arrays) and the placement
+//! model search time.
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::device::Device;
+use picaso::prelude::PipelineConfig;
+use picaso::report::paper;
+use picaso::synth::{ImplModel, OverlayDesign};
+
+fn main() {
+    harness::section("Table VI — largest overlay arrays");
+    print!("{}", paper::table6());
+    harness::section("timing");
+    let devs = ["V7", "U55"].map(|d| Device::by_id(d).unwrap());
+    harness::bench("max_array_search_both_designs", 10, || {
+        for dev in &devs {
+            std::hint::black_box(ImplModel::max_array(OverlayDesign::Benchmark, dev));
+            std::hint::black_box(ImplModel::max_array(
+                OverlayDesign::PiCaSO(PipelineConfig::FullPipe),
+                dev,
+            ));
+        }
+    });
+}

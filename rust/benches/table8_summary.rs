@@ -1,0 +1,17 @@
+//! Bench: paper Table VIII (design-comparison matrix).
+#[path = "harness.rs"]
+mod harness;
+
+use picaso::analytic::DesignPoint;
+use picaso::report::paper;
+
+fn main() {
+    harness::section("Table VIII — comparison with custom BRAM PIM architectures");
+    print!("{}", paper::table8());
+    harness::section("timing");
+    harness::bench("table8_matrix", 10, || {
+        for p in DesignPoint::table8() {
+            std::hint::black_box((p.mult_latency_n8(), p.accum_latency(), p.memory_class()));
+        }
+    });
+}

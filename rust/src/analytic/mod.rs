@@ -1,0 +1,377 @@
+//! Closed-form performance models for the paper's evaluation figures.
+//!
+//! * [`AccumModel`] — Table V rows (cycle latencies, SPAR-2 vs PiCaSO-F).
+//! * [`MacLatencyModel`] — Fig 5: relative MAC latency of the custom
+//!   designs w.r.t. PiCaSO on the U55.
+//! * [`ThroughputModel`] — Fig 6: peak TeraMAC/s on the U55.
+//! * [`DesignPoint`] — Table VIII: the full comparison matrix.
+//!
+//! Fig 7 (memory utilization efficiency) is a one-liner over
+//! [`ArchKind::memory_efficiency`] and lives in the bench/report layer.
+//!
+//! ## Workload conventions (documented model decisions)
+//!
+//! The paper does not print its figure-generator inputs, so the exact
+//! workloads are reconstructed to match its quoted aggregates:
+//!
+//! * **Fig 5** (`MacLatencyModel`): 16 parallel MULTs followed by a q=16
+//!   accumulation of the products at operand width **N** — the same
+//!   (MULT N, accumulate q=16/N) pairing Table VIII itself uses. PiCaSO
+//!   charges the worst-case Booth latency `2N²+2N` (the Table V/VIII
+//!   figure). Result: CoMeFa-A is 1.79×–2.57× slower than PiCaSO across
+//!   N ∈ {4,8,16} (paper: 1.72×–2.56×) and CoMeFa-D crosses over at
+//!   16-bit (paper: "with the exception of CoMeFa-D at 16-bit").
+//! * **Fig 6** (`ThroughputModel`): each PE performs k=8 MULTs (8 resident
+//!   weights), then one q=16 reduction of the 2N-bit products. PiCaSO
+//!   exploits full Booth support with NOP skipping in steady state
+//!   (`N²+N` per MULT); CCB has no Booth support and CoMeFa only OOOR
+//!   Booth, so the in-bitline path charges the full `N²+3N−2`. Result:
+//!   PiCaSO reaches 72%–87% of CoMeFa-A (paper: 75%–80%) and the Mod
+//!   designs gain 5.3%–16.1% throughput from the fused OpMux reduction
+//!   (paper: 5%–18%).
+
+use crate::arch::{ArchKind, BoothSupport, CustomDesign, PipelineConfig};
+use crate::device::Device;
+
+/// Operating clock (Hz) of a design hosted on `dev`'s BRAM fabric.
+///
+/// PiCaSO-F runs at the BRAM Fmax (§IV-A); the custom tiles divide it by
+/// their Table VIII clock overhead ("the clock speeds of custom designs
+/// are adjusted based on the performance degradations reported in
+/// [1], [2]" — §V).
+pub fn design_clock_hz(kind: ArchKind, dev: &Device) -> f64 {
+    match kind {
+        ArchKind::Overlay(PipelineConfig::FullPipe) => dev.bram_fmax_hz,
+        ArchKind::Overlay(cfg) => crate::synth::achievable_clock_hz(
+            crate::synth::OverlayDesign::PiCaSO(cfg),
+            dev,
+        ),
+        ArchKind::Spar2 => {
+            crate::synth::achievable_clock_hz(crate::synth::OverlayDesign::Benchmark, dev)
+        }
+        ArchKind::Custom(d) => dev.bram_fmax_hz / (1.0 + d.clock_overhead()),
+    }
+}
+
+/// Table V: cycle latencies of the primitive operations.
+#[derive(Debug, Clone, Copy)]
+pub struct AccumModel;
+
+impl AccumModel {
+    /// The Table V row set for (q, N): `(SPAR-2, PiCaSO-F)` cycles.
+    pub fn table5(q: usize, n: u32) -> (u64, u64) {
+        (
+            ArchKind::Spar2.cycles().accumulate(q, n),
+            ArchKind::PICASO_F.cycles().accumulate(q, n),
+        )
+    }
+
+    /// ADD/SUB row (identical for both overlays): `2N`.
+    pub fn add_cycles(n: u32) -> u64 {
+        ArchKind::PICASO_F.cycles().alu(n)
+    }
+
+    /// MULT row (identical for both overlays): `2N² + 2N`.
+    pub fn mult_cycles(n: u32) -> u64 {
+        ArchKind::PICASO_F.cycles().mult(n)
+    }
+}
+
+/// Fig 5: MAC latency per design (16 parallel MULTs + q=16 accumulation).
+#[derive(Debug, Clone)]
+pub struct MacLatencyModel {
+    /// Hosting device (the paper uses the U55 clock basis).
+    pub device: &'static Device,
+    /// Columns reduced per MAC group.
+    pub q: usize,
+}
+
+impl MacLatencyModel {
+    /// Model on the paper's U55 basis.
+    pub fn u55() -> Self {
+        Self { device: Device::by_id("U55").expect("U55 in DB"), q: 16 }
+    }
+
+    /// Cycle count of the MAC group for `kind` at width `n`
+    /// (accumulation at width N — the Table VIII pairing).
+    pub fn cycles(&self, kind: ArchKind, n: u32) -> u64 {
+        let m = kind.cycles();
+        m.mult(n) + m.accumulate(self.q, n)
+    }
+
+    /// Absolute latency in ns.
+    pub fn latency_ns(&self, kind: ArchKind, n: u32) -> f64 {
+        self.cycles(kind, n) as f64 / design_clock_hz(kind, self.device) * 1e9
+    }
+
+    /// Fig 5's y-axis: latency relative to PiCaSO-F (>1 = slower).
+    pub fn relative(&self, kind: ArchKind, n: u32) -> f64 {
+        self.latency_ns(kind, n) / self.latency_ns(ArchKind::PICASO_F, n)
+    }
+}
+
+/// Fig 6: peak MAC throughput of full-device arrays on the U55.
+#[derive(Debug, Clone)]
+pub struct ThroughputModel {
+    /// Hosting device.
+    pub device: &'static Device,
+    /// Resident weights per PE (MULTs issued per reduction).
+    pub k: u64,
+    /// Columns reduced per group.
+    pub q: usize,
+}
+
+impl ThroughputModel {
+    /// Model on the paper's U55 basis.
+    pub fn u55() -> Self {
+        Self { device: Device::by_id("U55").expect("U55 in DB"), k: 8, q: 16 }
+    }
+
+    /// Steady-state multiply cycles: designs with full Booth support skip
+    /// NOP steps (≈half on random data, §V), paying `N²+N`; partial/no
+    /// support pays the full shift-add latency.
+    pub fn mult_cycles(&self, kind: ArchKind, n: u32) -> f64 {
+        let n64 = n as u64;
+        match kind {
+            ArchKind::Overlay(_) | ArchKind::Spar2 => (n64 * n64 + n64) as f64,
+            ArchKind::Custom(_) => kind.cycles().mult(n) as f64,
+        }
+    }
+
+    /// Cycles for the k-MULT + reduce group (products at 2N bits).
+    pub fn group_cycles(&self, kind: ArchKind, n: u32) -> f64 {
+        self.k as f64 * self.mult_cycles(kind, n)
+            + kind.cycles().accumulate(self.q, 2 * n) as f64
+    }
+
+    /// Device-wide peak MAC/s: `parallel MACs per BRAM × BRAMs × f × k /
+    /// group cycles`.
+    pub fn macs_per_sec(&self, kind: ArchKind, n: u32) -> f64 {
+        let pes = kind.parallel_macs_per_bram36() as f64 * self.device.bram36 as f64;
+        pes * design_clock_hz(kind, self.device) * self.k as f64
+            / self.group_cycles(kind, n)
+    }
+
+    /// Fig 6 y-axis in TeraMAC/s.
+    pub fn tmacs(&self, kind: ArchKind, n: u32) -> f64 {
+        self.macs_per_sec(kind, n) / 1e12
+    }
+}
+
+/// One Table VIII column.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    /// The design.
+    pub kind: ArchKind,
+}
+
+impl DesignPoint {
+    /// The Table VIII column set, in paper order.
+    pub fn table8() -> Vec<DesignPoint> {
+        [
+            ArchKind::Custom(CustomDesign::Ccb),
+            ArchKind::Custom(CustomDesign::CoMeFaD),
+            ArchKind::Custom(CustomDesign::CoMeFaA),
+            ArchKind::PICASO_F,
+            ArchKind::Custom(CustomDesign::AMod),
+        ]
+        .into_iter()
+        .map(|kind| DesignPoint { kind })
+        .collect()
+    }
+
+    /// "Architecture" row.
+    pub fn architecture(&self) -> &'static str {
+        match self.kind {
+            ArchKind::Overlay(_) | ArchKind::Spar2 => "Overlay",
+            ArchKind::Custom(_) => "Custom",
+        }
+    }
+
+    /// "Clock Overhead" row (fraction).
+    pub fn clock_overhead(&self) -> f64 {
+        match self.kind {
+            ArchKind::Overlay(PipelineConfig::FullPipe) => 0.0,
+            ArchKind::Custom(d) => d.clock_overhead(),
+            _ => f64::NAN,
+        }
+    }
+
+    /// "Parallel MACs" row.
+    pub fn parallel_macs(&self) -> u32 {
+        self.kind.parallel_macs_per_bram36()
+    }
+
+    /// "Mult Latency" row at N=8.
+    pub fn mult_latency_n8(&self) -> u64 {
+        self.kind.cycles().mult(8)
+    }
+
+    /// "Accum. Latency" row at q=16, N=8.
+    pub fn accum_latency(&self) -> u64 {
+        self.kind.cycles().accumulate(16, 8)
+    }
+
+    /// "Support Booth's" row.
+    pub fn booth(&self) -> BoothSupport {
+        self.kind.booth_support()
+    }
+
+    /// "Mem. Efficiency" qualitative row, derived from the Fig 7 value at
+    /// N=16 (Low < 60% ≤ Medium < 90% ≤ High).
+    pub fn memory_class(&self) -> &'static str {
+        let e = self.kind.memory_efficiency(16);
+        if e < 0.60 {
+            "Low"
+        } else if e < 0.90 {
+            "Medium"
+        } else {
+            "High"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PICASO: ArchKind = ArchKind::PICASO_F;
+    const CCB: ArchKind = ArchKind::Custom(CustomDesign::Ccb);
+    const COMEFA_D: ArchKind = ArchKind::Custom(CustomDesign::CoMeFaD);
+    const COMEFA_A: ArchKind = ArchKind::Custom(CustomDesign::CoMeFaA);
+    const AMOD: ArchKind = ArchKind::Custom(CustomDesign::AMod);
+    const DMOD: ArchKind = ArchKind::Custom(CustomDesign::DMod);
+
+    #[test]
+    fn design_clocks_on_u55() {
+        let u55 = Device::by_id("U55").unwrap();
+        assert_eq!(design_clock_hz(PICASO, u55), 737e6);
+        assert!((design_clock_hz(CCB, u55) - 737e6 / 1.6).abs() < 1e3);
+        assert!((design_clock_hz(COMEFA_D, u55) - 737e6 / 1.25).abs() < 1e3);
+        assert!((design_clock_hz(COMEFA_A, u55) - 737e6 / 2.5).abs() < 1e3);
+    }
+
+    #[test]
+    fn fig5_relative_latency_band() {
+        // §V: "PiCaSO runs 1.72x–2.56x faster than CoMeFa-A".
+        let m = MacLatencyModel::u55();
+        let rels: Vec<f64> = [4u32, 8, 16].iter().map(|&n| m.relative(COMEFA_A, n)).collect();
+        for (i, r) in rels.iter().enumerate() {
+            assert!(*r > 1.7 && *r < 2.6, "N={} rel={r}", [4, 8, 16][i]);
+        }
+        // Decreasing with precision (custom RMW mult catches up).
+        assert!(rels[0] > rels[1] && rels[1] > rels[2]);
+        // Endpoint checks against the quoted band.
+        assert!((rels[0] - 2.56).abs() < 0.03, "rel@4 = {}", rels[0]);
+        assert!((rels[2] - 1.79).abs() < 0.03, "rel@16 = {}", rels[2]);
+    }
+
+    #[test]
+    fn fig5_comefa_d_crossover_at_16bit() {
+        // §V: "With the exception of CoMeFa-D at 16-bit precision, PiCaSO
+        // has the shortest latency."
+        let m = MacLatencyModel::u55();
+        assert!(m.relative(COMEFA_D, 16) < 1.0);
+        assert!(m.relative(COMEFA_D, 4) > 1.0);
+        // CCB never beats PiCaSO.
+        for n in [4, 8, 16] {
+            assert!(m.relative(CCB, n) > 1.0, "N={n}");
+        }
+    }
+
+    #[test]
+    fn fig5_amod_latency_improvement() {
+        // §V-A: OpMux+network adoption improves custom MAC latency —
+        // paper quotes 13.4%–19.5%; our reconstruction yields 16%–32%
+        // (N=16 matches; low-N overshoots — see EXPERIMENTS.md).
+        let m = MacLatencyModel::u55();
+        for n in [4u32, 8, 16] {
+            let base = m.latency_ns(COMEFA_A, n);
+            let moded = m.latency_ns(AMOD, n);
+            let gain = (base - moded) / base;
+            assert!(gain > 0.13 && gain < 0.35, "N={n} gain={gain}");
+        }
+        // D-Mod improves CoMeFa-D identically in cycles.
+        let n = 8;
+        assert_eq!(
+            m.cycles(COMEFA_D, n) - m.cycles(DMOD, n),
+            m.cycles(COMEFA_A, n) - m.cycles(AMOD, n)
+        );
+    }
+
+    #[test]
+    fn fig6_picaso_fraction_of_comefa_a() {
+        // §V: "PiCaSO still achieves 75%–80% of CoMeFa-A's peak
+        // throughput" — our reconstruction spans 72%–87% over N ∈ {4,8,16}
+        // with N=8 at 79%.
+        let t = ThroughputModel::u55();
+        let frac8 = t.tmacs(PICASO, 8) / t.tmacs(COMEFA_A, 8);
+        assert!((frac8 - 0.79).abs() < 0.03, "N=8 frac {frac8}");
+        for n in [4u32, 16] {
+            let f = t.tmacs(PICASO, n) / t.tmacs(COMEFA_A, n);
+            assert!(f > 0.70 && f < 0.88, "N={n} frac {f}");
+        }
+    }
+
+    #[test]
+    fn fig6_mod_designs_gain_5_to_18_percent() {
+        // §V-A: "improves their throughput by 5%–18% over different
+        // precisions".
+        let t = ThroughputModel::u55();
+        for (base, moded) in [(COMEFA_A, AMOD), (COMEFA_D, DMOD)] {
+            for n in [4u32, 8, 16] {
+                let gain = t.tmacs(moded, n) / t.tmacs(base, n) - 1.0;
+                assert!(gain > 0.05 && gain < 0.18, "{base:?} N={n} gain={gain}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_ordering() {
+        // Custom designs out-throughput the overlay (they own 4x the
+        // bitlines); CoMeFa-D is the fastest; among 1-BRAM-class designs
+        // PiCaSO trails CoMeFa-A by only ~20-25%.
+        let t = ThroughputModel::u55();
+        for n in [4u32, 8, 16] {
+            assert!(t.tmacs(COMEFA_D, n) > t.tmacs(CCB, n), "N={n}");
+            assert!(t.tmacs(CCB, n) > t.tmacs(COMEFA_A, n), "N={n}");
+            assert!(t.tmacs(COMEFA_A, n) > t.tmacs(PICASO, n), "N={n}");
+        }
+        // Sanity: TeraMAC/s magnitudes.
+        let v = t.tmacs(COMEFA_D, 8);
+        assert!(v > 0.5 && v < 10.0, "CoMeFa-D N=8: {v} TMAC/s");
+    }
+
+    #[test]
+    fn table8_rows() {
+        let pts = DesignPoint::table8();
+        assert_eq!(pts.len(), 5);
+        let by_name: Vec<(String, &DesignPoint)> =
+            pts.iter().map(|p| (p.kind.name(), p)).collect();
+        let get = |n: &str| {
+            by_name
+                .iter()
+                .find(|(name, _)| name == n)
+                .map(|(_, p)| *p)
+                .unwrap()
+        };
+        assert_eq!(get("CCB").mult_latency_n8(), 86);
+        assert_eq!(get("PiCaSO-F").mult_latency_n8(), 144);
+        assert_eq!(get("CCB").accum_latency(), 80);
+        assert_eq!(get("PiCaSO-F").accum_latency(), 48);
+        assert_eq!(get("A-Mod").accum_latency(), 40);
+        assert_eq!(get("CCB").memory_class(), "Low");
+        assert_eq!(get("CoMeFa-A").memory_class(), "Medium");
+        assert_eq!(get("PiCaSO-F").memory_class(), "High");
+        assert_eq!(get("A-Mod").memory_class(), "Medium");
+        assert_eq!(get("PiCaSO-F").parallel_macs(), 36);
+        assert_eq!(get("A-Mod").parallel_macs(), 144);
+    }
+
+    #[test]
+    fn table5_wrapper() {
+        assert_eq!(AccumModel::table5(128, 32), (4512, 259));
+        assert_eq!(AccumModel::add_cycles(32), 64);
+        assert_eq!(AccumModel::mult_cycles(32), 2 * 32 * 32 + 64);
+    }
+}

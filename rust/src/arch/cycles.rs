@@ -1,0 +1,239 @@
+//! The cycle-cost algebra of Table V and the Table VIII footnotes.
+//!
+//! Formula provenance (paper notation: `N` = operand width, `q` = number
+//! of columns accumulated, `J = log2(q/16)` = network jumps):
+//!
+//! | Operation | Design | Formula | Source |
+//! |---|---|---|---|
+//! | ADD/SUB | overlays | `2N` | Table V |
+//! | ADD/SUB | custom | `N` | §V (read-modify-write per cycle) |
+//! | MULT | overlays | `2N² + 2N` | Table V (b) |
+//! | MULT | custom | `N² + 3N − 2` | Table VIII (a) |
+//! | Accumulate | SPAR-2 | `(q − 1 + 2·log2 q)·N` | Table V |
+//! | Accumulate | PiCaSO, q≤16 | `(N+4)·log2 q` | Table VIII (d) |
+//! | Accumulate | PiCaSO, q>16 | `15 + q/16 + 4N + (N+4)·J` | Table V |
+//! | Accumulate | CCB/CoMeFa | `(2N + log2 q)·log2 q` | Table VIII (c) |
+//! | Accumulate | A-Mod/D-Mod | `(N+2)·log2 q` | Table VIII (e) |
+//!
+//! The two PiCaSO accumulation forms agree at the q = 16 boundary
+//! (`(N+4)·4 = 15 + 1 + 4N`), which the tests assert.
+
+use super::{ArchKind, BoothSupport, CustomDesign};
+use crate::util::exact_log2;
+
+/// Closed-form cycle costs for one design.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleModel {
+    kind: ArchKind,
+}
+
+impl CycleModel {
+    /// Model for a design.
+    pub fn new(kind: ArchKind) -> Self {
+        Self { kind }
+    }
+
+    /// The design this model describes.
+    pub fn kind(&self) -> ArchKind {
+        self.kind
+    }
+
+    /// True for the overlay-style two-cycle-per-bit datapath (separate
+    /// read and write BRAM accesses); false for the custom tiles' extended
+    /// read-modify-write cycle.
+    fn two_cycle_bit(&self) -> bool {
+        matches!(self.kind, ArchKind::Overlay(_) | ArchKind::Spar2)
+    }
+
+    /// Element-wise ADD/SUB/CPX/CPY over `n`-bit operands.
+    pub fn alu(&self, n: u32) -> u64 {
+        if self.two_cycle_bit() {
+            2 * n as u64 // Table V: 2N
+        } else {
+            n as u64 // RMW in one extended cycle per bit
+        }
+    }
+
+    /// Booth radix-2 multiply of two `n`-bit operands (worst case — every
+    /// Booth step issued).
+    pub fn mult(&self, n: u32) -> u64 {
+        let n = n as u64;
+        if self.two_cycle_bit() {
+            2 * n * n + 2 * n // Table V / Table VIII (b)
+        } else {
+            n * n + 3 * n - 2 // Table VIII (a)
+        }
+    }
+
+    /// Expected multiply latency with Booth NOP skipping on uniformly
+    /// random multipliers: on average half the Booth steps are NOPs
+    /// (paper §V), so the per-step portion halves for designs with full
+    /// Booth support. Designs without (or with partial) support pay the
+    /// full latency.
+    pub fn mult_booth_avg(&self, n: u32) -> f64 {
+        let full = self.mult(n) as f64;
+        match self.kind.booth_support() {
+            BoothSupport::Yes => {
+                let n = n as f64;
+                if self.two_cycle_bit() {
+                    // 2N init + N steps of 2N cycles, half skipped.
+                    n * n + 2.0 * n
+                } else {
+                    // (a) with the N step-adds halved: N²/2 + 3N/2 - 1.
+                    (n * n + 3.0 * n - 2.0) / 2.0
+                }
+            }
+            BoothSupport::Partial | BoothSupport::No => full,
+        }
+    }
+
+    /// Accumulate (reduce-sum) `q` columns of `n`-bit values. `q` must be
+    /// a power of two.
+    pub fn accumulate(&self, q: usize, n: u32) -> u64 {
+        let lq = exact_log2(q) as u64;
+        let n = n as u64;
+        match self.kind {
+            ArchKind::Spar2 => {
+                // NEWS network: operands are copied between PEs, then
+                // added: (q - 1 + 2 log2 q) N. Table V.
+                (q as u64 - 1 + 2 * lq) * n
+            }
+            ArchKind::Overlay(_) => {
+                if q <= 16 {
+                    // In-block folding only: (N + 4) log2 q. Table VIII (d).
+                    (n + 4) * lq
+                } else {
+                    // Folds + binary-hopping network jumps. Table V:
+                    // 15 + q/16 + 4N + (N + 4) J, J = log2(q/16).
+                    let j = exact_log2(q / 16) as u64;
+                    15 + q as u64 / 16 + 4 * n + (n + 4) * j
+                }
+            }
+            ArchKind::Custom(d) => match d {
+                CustomDesign::Ccb | CustomDesign::CoMeFaD | CustomDesign::CoMeFaA => {
+                    // Copy-based reduction: (2N + log2 q) log2 q.
+                    // Table VIII (c).
+                    (2 * n + lq) * lq
+                }
+                CustomDesign::AMod | CustomDesign::DMod => {
+                    // OpMux folding in the tile: (N + 2) log2 q.
+                    // Table VIII (e).
+                    (n + 2) * lq
+                }
+            },
+        }
+    }
+
+    /// A full multiply-accumulate group: `q` parallel MULTs followed by
+    /// accumulation of the `q` products (the Fig 5 workload with q = 16).
+    /// Products are 2N bits wide, matching the paper's accumulation width.
+    pub fn mac_group(&self, q: usize, n: u32) -> u64 {
+        self.mult(n) + self.accumulate(q, 2 * n)
+    }
+
+    /// [`Self::mac_group`] under Booth NOP skipping.
+    pub fn mac_group_booth_avg(&self, q: usize, n: u32) -> f64 {
+        self.mult_booth_avg(n) + self.accumulate(q, 2 * n) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PipelineConfig;
+
+    const PICASO: ArchKind = ArchKind::PICASO_F;
+    const SPAR2: ArchKind = ArchKind::Spar2;
+    const CCB: ArchKind = ArchKind::Custom(CustomDesign::Ccb);
+    const COMEFA_A: ArchKind = ArchKind::Custom(CustomDesign::CoMeFaA);
+    const AMOD: ArchKind = ArchKind::Custom(CustomDesign::AMod);
+
+    #[test]
+    fn table5_add_mult() {
+        // Table V: ADD/SUB = 2N, MULT = 2N² + 2N for both overlays.
+        for n in [4u32, 8, 16, 32] {
+            assert_eq!(PICASO.cycles().alu(n), 2 * n as u64);
+            assert_eq!(SPAR2.cycles().alu(n), 2 * n as u64);
+            let m = 2 * (n as u64) * (n as u64) + 2 * n as u64;
+            assert_eq!(PICASO.cycles().mult(n), m);
+            assert_eq!(SPAR2.cycles().mult(n), m);
+        }
+    }
+
+    #[test]
+    fn table5_accumulation_headline() {
+        // Table V last row: q = 128, N = 32 -> SPAR-2 4512, PiCaSO-F 259.
+        assert_eq!(SPAR2.cycles().accumulate(128, 32), 4512);
+        assert_eq!(PICASO.cycles().accumulate(128, 32), 259);
+        // The 17x improvement claimed in §IV-B.
+        let ratio = 4512.0 / 259.0;
+        assert!(ratio > 17.0 && ratio < 17.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn picaso_accum_forms_agree_at_q16() {
+        // (N+4)·log2(16) == 15 + 16/16 + 4N at q = 16 for every N.
+        for n in [4u32, 8, 16, 32] {
+            let table8d = (n as u64 + 4) * 4;
+            let table5 = 15 + 1 + 4 * n as u64;
+            assert_eq!(table8d, table5, "N={n}");
+            assert_eq!(PICASO.cycles().accumulate(16, n), table8d);
+        }
+    }
+
+    #[test]
+    fn table8_mult_row() {
+        // N = 8: custom (a) = 86, PiCaSO (b) = 144.
+        assert_eq!(CCB.cycles().mult(8), 86);
+        assert_eq!(COMEFA_A.cycles().mult(8), 86);
+        assert_eq!(AMOD.cycles().mult(8), 86);
+        assert_eq!(PICASO.cycles().mult(8), 144);
+    }
+
+    #[test]
+    fn table8_accum_row() {
+        // q = 16, N = 8: (c) = 80, (d) = 48, (e) = 40.
+        assert_eq!(CCB.cycles().accumulate(16, 8), 80);
+        assert_eq!(COMEFA_A.cycles().accumulate(16, 8), 80);
+        assert_eq!(PICASO.cycles().accumulate(16, 8), 48);
+        assert_eq!(AMOD.cycles().accumulate(16, 8), 40);
+    }
+
+    #[test]
+    fn booth_avg_halves_step_cost_for_full_support() {
+        // PiCaSO: 2N²+2N -> N²+2N.
+        assert_eq!(PICASO.cycles().mult_booth_avg(8), 80.0);
+        // A-Mod: (N²+3N-2)/2.
+        assert_eq!(AMOD.cycles().mult_booth_avg(8), 43.0);
+        // CCB (no support) and CoMeFa (partial) pay full latency.
+        assert_eq!(CCB.cycles().mult_booth_avg(8), 86.0);
+        assert_eq!(COMEFA_A.cycles().mult_booth_avg(8), 86.0);
+    }
+
+    #[test]
+    fn mac_group_shape() {
+        // Fig 5 workload: 16 MULTs + accumulation of 2N-bit products.
+        let n = 8;
+        let picaso = PICASO.cycles().mac_group(16, n);
+        assert_eq!(picaso, 144 + (16 + 4) * 4);
+        let comefa_a = COMEFA_A.cycles().mac_group(16, n);
+        assert_eq!(comefa_a, 86 + (32 + 4) * 4);
+    }
+
+    #[test]
+    fn pipeline_config_does_not_change_cycle_counts() {
+        // Pipelining changes the clock, not the per-op cycle algebra
+        // (Table V applies to every PiCaSO configuration).
+        for cfg in PipelineConfig::ALL {
+            let k = ArchKind::Overlay(cfg);
+            assert_eq!(k.cycles().mult(8), 144);
+            assert_eq!(k.cycles().accumulate(128, 32), 259);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn accumulate_rejects_non_pow2_q() {
+        PICASO.cycles().accumulate(12, 8);
+    }
+}

@@ -1,0 +1,485 @@
+//! The SIMD PIM array simulator.
+//!
+//! A [`PimArray`] is a `rows × cols` grid of PE-blocks (16 PEs each) with a
+//! single sequencer, exactly like the overlay: every instruction is
+//! broadcast to all blocks (paper §II — SIMD organization). Rows are
+//! independent reduction domains; accumulation folds each row into its
+//! block-0 lane-0 PE.
+//!
+//! The simulator is **cycle-accurate at the operand level**: every
+//! instruction's data effect is computed bit-serially (through [`crate::pe`])
+//! and its cycle cost is charged from the design's [`CycleModel`] — the
+//! same closed forms as Table V, which the test suite cross-validates
+//! against the analytic layer. It also simulates the SPAR-2 benchmark
+//! (NEWS copy-based accumulation) for the Table V comparison.
+
+mod packed;
+
+pub use packed::PackedEngine;
+
+use crate::arch::{ArchKind, CycleModel, PipelineConfig};
+use crate::bits::corner_turn;
+use crate::block::BlockRow;
+use crate::isa::{BufId, Instruction, Microcode, RfAddr};
+use crate::network;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Grid shape in PE-blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayGeometry {
+    /// Independent block rows.
+    pub rows: usize,
+    /// Blocks per row (16 PEs each).
+    pub cols: usize,
+}
+
+impl ArrayGeometry {
+    /// A `rows × cols` block grid.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        Self { rows, cols }
+    }
+
+    /// Total PEs.
+    pub fn pes(&self) -> usize {
+        self.rows * self.cols * crate::arch::geometry::PES_PER_BLOCK
+    }
+
+    /// PE columns per row (the `q` of accumulation formulas).
+    pub fn row_lanes(&self) -> usize {
+        self.cols * crate::arch::geometry::PES_PER_BLOCK
+    }
+}
+
+/// Per-instruction-kind cycle breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    /// Element-wise ALU operations.
+    pub alu: u64,
+    /// Booth multiplies.
+    pub mult: u64,
+    /// Standalone folds and network reductions.
+    pub reduce: u64,
+    /// Accumulate macros.
+    pub accumulate: u64,
+    /// Host DMA (corner turning).
+    pub dma: u64,
+    /// NOPs.
+    pub nop: u64,
+}
+
+impl CycleBreakdown {
+    /// Sum of all categories.
+    pub fn total(&self) -> u64 {
+        self.alu + self.mult + self.reduce + self.accumulate + self.dma + self.nop
+    }
+}
+
+/// Result of running a program.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Total PIM cycles charged.
+    pub cycles: u64,
+    /// Instructions executed.
+    pub instructions: u64,
+    /// Cycle breakdown by category.
+    pub breakdown: CycleBreakdown,
+    /// Booth steps actually issued (with NOP skipping) vs worst case.
+    pub booth_active_steps: u64,
+    /// Worst-case Booth steps.
+    pub booth_total_steps: u64,
+}
+
+impl RunStats {
+    /// Wall-clock time at a given operating frequency.
+    pub fn time_ns(&self, freq_hz: f64) -> f64 {
+        self.cycles as f64 / freq_hz * 1e9
+    }
+}
+
+/// The SIMD PIM array.
+///
+/// Internally the whole `rows × cols` grid is **fused into one wide
+/// [`BlockRow`]** (logical row `r` occupies blocks `r·cols .. (r+1)·cols`):
+/// the packed engine then advances the entire grid per word operation
+/// instead of paying per-row call overhead — the §Perf optimization that
+/// took the end-to-end GEMM from 7.3 ms to sub-millisecond. Row-local
+/// semantics (reductions never cross a logical row) are preserved by the
+/// span-aware network routines.
+#[derive(Debug, Clone)]
+pub struct PimArray {
+    geom: ArrayGeometry,
+    kind: ArchKind,
+    model: CycleModel,
+    fused: BlockRow,
+    host: HashMap<u16, Vec<i64>>,
+    /// Charge expected (NOP-skipping) Booth latency instead of worst case.
+    booth_skip: bool,
+    /// Scratch wordline used by the SPAR-2 NEWS copy stage.
+    news_scratch: RfAddr,
+}
+
+impl PimArray {
+    /// A PiCaSO overlay array in the given pipeline configuration.
+    pub fn new(geom: ArrayGeometry, config: PipelineConfig) -> Self {
+        Self::with_kind(geom, ArchKind::Overlay(config))
+    }
+
+    /// An array simulating any overlay design (PiCaSO config or SPAR-2).
+    pub fn with_kind(geom: ArrayGeometry, kind: ArchKind) -> Self {
+        assert!(
+            matches!(kind, ArchKind::Overlay(_) | ArchKind::Spar2),
+            "PimArray simulates overlay designs; use custom::CustomTile for {kind:?}"
+        );
+        Self {
+            geom,
+            kind,
+            model: kind.cycles(),
+            fused: BlockRow::new(geom.rows * geom.cols),
+            host: HashMap::new(),
+            booth_skip: false,
+            news_scratch: RfAddr(960),
+        }
+    }
+
+    /// Enable/disable Booth NOP skipping in the latency accounting
+    /// (data results are unaffected).
+    pub fn set_booth_skip(&mut self, on: bool) {
+        self.booth_skip = on;
+    }
+
+    /// Array geometry.
+    pub fn geometry(&self) -> ArrayGeometry {
+        self.geom
+    }
+
+    /// The simulated design.
+    pub fn kind(&self) -> ArchKind {
+        self.kind
+    }
+
+    /// Provide a host buffer for `LOAD`, or to be filled by `STORE`.
+    /// For `LOAD`, `data` holds one value per PE, row-major
+    /// (`rows × row_lanes`); shorter buffers fill leading lanes only.
+    pub fn set_buffer(&mut self, buf: BufId, data: Vec<i64>) {
+        self.host.insert(buf.0, data);
+    }
+
+    /// Read a host buffer back (after `STORE`).
+    pub fn buffer(&self, buf: BufId) -> Option<&[i64]> {
+        self.host.get(&buf.0).map(|v| v.as_slice())
+    }
+
+    /// Per-lane values of an operand in row `row`.
+    pub fn row_values(&self, row: usize, base: RfAddr, w: u32) -> Vec<i64> {
+        let q = self.geom.row_lanes();
+        let all = self.fused.read_values(base, w);
+        all[row * q..(row + 1) * q].to_vec()
+    }
+
+    /// The reduction result of row `row` (block 0, lane 0).
+    pub fn row_result(&self, row: usize, base: RfAddr, w: u32) -> i64 {
+        self.fused.block_result(row * self.geom.cols, base, w)
+    }
+
+    /// Execute a microcode program, returning the cycle statistics.
+    pub fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {
+        let mut stats = RunStats::default();
+        for instr in &mc.instrs {
+            self.step(*instr, &mut stats)?;
+        }
+        Ok(stats)
+    }
+
+    /// Execute a single instruction.
+    pub fn step(&mut self, instr: Instruction, stats: &mut RunStats) -> Result<()> {
+        stats.instructions += 1;
+        match instr {
+            Instruction::Nop => {
+                stats.cycles += 1;
+                stats.breakdown.nop += 1;
+            }
+            Instruction::Alu { op, dst, x, y, width } => {
+                self.fused.alu(op, dst, x, y, width as u32)?;
+                let c = self.model.alu(width as u32);
+                stats.cycles += c;
+                stats.breakdown.alu += c;
+            }
+            Instruction::Mult { dst, mand, mier, width } => {
+                let w = width as u32;
+                let max_active = self.fused.mult(dst, mand, mier, w)?;
+                stats.booth_active_steps += max_active as u64;
+                stats.booth_total_steps += w as u64;
+                let c = if self.booth_skip {
+                    // Init (2w) plus only the active steps (2w each); the
+                    // SIMD sequencer skips a step when *every* lane recodes
+                    // it as NOP, so the slowest lane governs.
+                    2 * w as u64 + 2 * w as u64 * max_active as u64
+                } else {
+                    self.model.mult(w)
+                };
+                stats.cycles += c;
+                stats.breakdown.mult += c;
+            }
+            Instruction::Fold { pattern, level, dst, width } => {
+                self.fused.fold(pattern, level, dst, width as u32)?;
+                // Standalone fold: one serial add (width cycles) plus the
+                // 4-cycle pipeline fill — the per-level cost of Table VIII
+                // footnote (d).
+                let c = width as u64 + 4;
+                stats.cycles += c;
+                stats.breakdown.reduce += c;
+            }
+            Instruction::NetReduce { level, dst, width } => {
+                network::hop_reduce_spans(
+                    &mut self.fused,
+                    level,
+                    dst,
+                    width as u32,
+                    self.geom.cols,
+                )?;
+                // One network jump: N + 4 (Table V) — transfer overlaps
+                // compute, so hop distance does not appear.
+                let c = width as u64 + 4;
+                stats.cycles += c;
+                stats.breakdown.reduce += c;
+            }
+            Instruction::Accumulate { dst, width } => {
+                let q = self.geom.row_lanes();
+                crate::arch::check_reduction_q(q)?;
+                let w = width as u32;
+                match self.kind {
+                    ArchKind::Spar2 => {
+                        let scratch = self.news_scratch;
+                        network::news_accumulate_spans(&mut self.fused, dst, scratch, w, q)?;
+                    }
+                    _ => {
+                        network::accumulate_row_spans(&mut self.fused, dst, w, self.geom.cols)?;
+                    }
+                }
+                let c = self.model.accumulate(q, w);
+                stats.cycles += c;
+                stats.breakdown.accumulate += c;
+            }
+            Instruction::Pool { op, pattern, level, dst, width } => {
+                self.fused.pool(op, pattern, level, dst, width as u32)?;
+                // Compare pass (SUB) + masked select pass (CPX/CPY), plus
+                // the fold pipeline fill.
+                let c = 2 * self.model.alu(width as u32) + 4;
+                stats.cycles += c;
+                stats.breakdown.reduce += c;
+            }
+            Instruction::Extend { dst, from, to } => {
+                self.fused.extend(dst, from as u32, to as u32)?;
+                // One read + write per extended plane (a CPX of the sign
+                // wordline).
+                let c = 2 * (to - from) as u64;
+                stats.cycles += c;
+                stats.breakdown.alu += c;
+            }
+            Instruction::Load { dst, width, buf } => {
+                // Take the buffer out instead of cloning it (hot path —
+                // Loads run once per GEMM slice).
+                if dst.0 as usize + width as usize > crate::arch::geometry::RF_DEPTH {
+                    return Err(Error::Sim(format!(
+                        "LOAD r{}..+{width} exceeds register file depth",
+                        dst.0
+                    )));
+                }
+                let data = self
+                    .host
+                    .remove(&buf.0)
+                    .ok_or_else(|| Error::Sim(format!("LOAD from unbound {buf}")))?;
+                // One corner turn over the whole fused grid (logical rows
+                // are contiguous lane spans), padded to clear stale lanes.
+                let total = self.fused.lanes();
+                let planes = if data.len() >= total {
+                    corner_turn(&data[..total], width as u32)
+                } else {
+                    let mut padded = data.clone();
+                    padded.resize(total, 0);
+                    corner_turn(&padded, width as u32)
+                };
+                self.fused.mem_mut().store_planes(dst.0 as usize, &planes);
+                self.host.insert(buf.0, data);
+                // One wordline write per bit-plane.
+                let c = width as u64;
+                stats.cycles += c;
+                stats.breakdown.dma += c;
+            }
+            Instruction::Store { src, width, buf } => {
+                let out = self.fused.read_values(src, width as u32);
+                self.host.insert(buf.0, out);
+                let c = width as u64;
+                stats.cycles += c;
+                stats.breakdown.dma += c;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::AluOp;
+    use crate::util::Xoshiro256;
+
+    fn mac_program(w: u16) -> Microcode {
+        let mut mc = Microcode::new("mac", w);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: w, buf: BufId(0) });
+        mc.push(Instruction::Load { dst: RfAddr(32), width: w, buf: BufId(1) });
+        mc.push(Instruction::Mult { dst: RfAddr(64), mand: RfAddr(0), mier: RfAddr(32), width: w });
+        mc.push(Instruction::Accumulate { dst: RfAddr(64), width: 2 * w });
+        mc.push(Instruction::Store { src: RfAddr(64), width: 2 * w, buf: BufId(2) });
+        mc
+    }
+
+    #[test]
+    fn end_to_end_mac_one_row() {
+        let mut rng = Xoshiro256::seeded(1);
+        let geom = ArrayGeometry::new(1, 4); // q = 64
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let mut a = vec![0i64; 64];
+        let mut b = vec![0i64; 64];
+        rng.fill_signed(&mut a, 8);
+        rng.fill_signed(&mut b, 8);
+        arr.set_buffer(BufId(0), a.clone());
+        arr.set_buffer(BufId(1), b.clone());
+        let stats = arr.execute(&mac_program(8)).unwrap();
+        let expect: i64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(arr.row_result(0, RfAddr(64), 16), expect);
+        let stored = arr.buffer(BufId(2)).unwrap();
+        assert_eq!(stored[0], expect);
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn cycle_charges_match_analytic_model() {
+        // The simulator's cycle accounting must equal the Table V algebra.
+        let geom = ArrayGeometry::new(2, 8); // q = 128 lanes per row
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        arr.set_buffer(BufId(0), vec![1; 256]);
+        arr.set_buffer(BufId(1), vec![2; 256]);
+        let model = ArchKind::PICASO_F.cycles();
+        let mut stats = RunStats::default();
+        arr.step(
+            Instruction::Alu {
+                op: AluOp::Add,
+                dst: RfAddr(64),
+                x: RfAddr(0),
+                y: RfAddr(32),
+                width: 32,
+            },
+            &mut stats,
+        )
+        .unwrap();
+        assert_eq!(stats.breakdown.alu, model.alu(32)); // 2N = 64
+        let mut stats = RunStats::default();
+        arr.step(
+            Instruction::Mult { dst: RfAddr(64), mand: RfAddr(0), mier: RfAddr(32), width: 16 },
+            &mut stats,
+        )
+        .unwrap();
+        assert_eq!(stats.breakdown.mult, model.mult(16)); // 2N²+2N = 544
+        let mut stats = RunStats::default();
+        arr.step(Instruction::Accumulate { dst: RfAddr(64), width: 32 }, &mut stats)
+            .unwrap();
+        // Table V headline: q=128, N=32 -> 259 cycles.
+        assert_eq!(stats.breakdown.accumulate, 259);
+    }
+
+    #[test]
+    fn spar2_accumulate_charges_news_cost() {
+        let geom = ArrayGeometry::new(1, 8); // q = 128
+        let mut arr = PimArray::with_kind(geom, ArchKind::Spar2);
+        let vals: Vec<i64> = (0..128).collect();
+        arr.set_buffer(BufId(0), vals.clone());
+        let mut mc = Microcode::new("spar2", 32);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 32, buf: BufId(0) });
+        mc.push(Instruction::Accumulate { dst: RfAddr(0), width: 32 });
+        let stats = arr.execute(&mc).unwrap();
+        // Table V: (q-1+2 log2 q) N = 4512 for q=128, N=32.
+        assert_eq!(stats.breakdown.accumulate, 4512);
+        assert_eq!(arr.row_result(0, RfAddr(0), 32), vals.iter().sum::<i64>());
+    }
+
+    #[test]
+    fn spar2_vs_picaso_17x_improvement() {
+        // §IV-B: the PiCaSO-F reduction network is 17x faster at
+        // q = 128, N = 32.
+        let picaso = ArchKind::PICASO_F.cycles().accumulate(128, 32);
+        let spar2 = ArchKind::Spar2.cycles().accumulate(128, 32);
+        let ratio = spar2 as f64 / picaso as f64;
+        assert!(ratio > 17.0, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn booth_skip_reduces_cycles_but_not_results() {
+        let mut rng = Xoshiro256::seeded(5);
+        let geom = ArrayGeometry::new(1, 1);
+        let mut a = vec![0i64; 16];
+        let mut b = vec![0i64; 16];
+        rng.fill_signed(&mut a, 8);
+        rng.fill_signed(&mut b, 8);
+
+        let run = |skip: bool| {
+            let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+            arr.set_booth_skip(skip);
+            arr.set_buffer(BufId(0), a.clone());
+            arr.set_buffer(BufId(1), b.clone());
+            let mut mc = Microcode::new("m", 8);
+            mc.push(Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) });
+            mc.push(Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) });
+            mc.push(Instruction::Mult {
+                dst: RfAddr(16),
+                mand: RfAddr(0),
+                mier: RfAddr(8),
+                width: 8,
+            });
+            let stats = arr.execute(&mc).unwrap();
+            (stats.cycles, arr.row_values(0, RfAddr(16), 16))
+        };
+        let (c_full, v_full) = run(false);
+        let (c_skip, v_skip) = run(true);
+        assert_eq!(v_full, v_skip);
+        assert!(c_skip <= c_full, "skip {c_skip} vs full {c_full}");
+        for i in 0..16 {
+            assert_eq!(v_full[i], a[i] * b[i]);
+        }
+    }
+
+    #[test]
+    fn multi_row_rows_are_independent() {
+        let geom = ArrayGeometry::new(3, 2); // 3 rows x 32 lanes
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let data: Vec<i64> = (0..96).collect();
+        arr.set_buffer(BufId(0), data.clone());
+        let mut mc = Microcode::new("acc", 16);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 16, buf: BufId(0) });
+        mc.push(Instruction::Accumulate { dst: RfAddr(0), width: 16 });
+        arr.execute(&mc).unwrap();
+        for r in 0..3 {
+            let expect: i64 = data[r * 32..(r + 1) * 32].iter().sum();
+            assert_eq!(arr.row_result(r, RfAddr(0), 16), expect, "row {r}");
+        }
+    }
+
+    #[test]
+    fn load_requires_bound_buffer() {
+        let mut arr = PimArray::new(ArrayGeometry::new(1, 1), PipelineConfig::FullPipe);
+        let mut mc = Microcode::new("bad", 8);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(9) });
+        assert!(arr.execute(&mc).is_err());
+    }
+
+    #[test]
+    fn accumulate_rejects_non_pow2_rows() {
+        // 3 blocks = 48 lanes: not a power of two -> config error.
+        let mut arr = PimArray::new(ArrayGeometry::new(1, 3), PipelineConfig::FullPipe);
+        let mut stats = RunStats::default();
+        let r = arr.step(Instruction::Accumulate { dst: RfAddr(0), width: 8 }, &mut stats);
+        assert!(r.is_err());
+    }
+}

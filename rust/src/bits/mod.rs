@@ -1,0 +1,65 @@
+//! Bit-plane data layout and parallel↔serial **corner turning**.
+//!
+//! PIM architectures store operands *bit-serially*: an N-bit operand lives
+//! as N consecutive one-bit wordlines in a BRAM column, one column per PE
+//! (paper §III-A). Data arriving from a word-oriented host (DRAM, PCIe) must
+//! be *corner turned* — transposed from word-major to bit-plane-major — on
+//! the way in, and turned back on the way out.
+//!
+//! [`BitPlanes`] is the canonical container: `nbits` planes, each holding
+//! one bit for each of `lanes` PEs, packed 64 lanes per `u64` word. The
+//! packed layout is shared by the scalar simulator (which addresses single
+//! bits) and the optimized engine (which operates on whole `u64` words,
+//! i.e. 64 PEs per instruction — SIMD within a register).
+
+mod planes;
+pub(crate) mod turn;
+
+pub use planes::BitPlanes;
+pub use turn::{corner_turn, corner_turn_back, corner_turn_u64_block};
+
+/// Sign-extend the low `bits` of `raw` into an `i64`.
+#[inline]
+pub fn sign_extend(raw: u64, bits: u32) -> i64 {
+    debug_assert!((1..=64).contains(&bits));
+    let shift = 64 - bits;
+    ((raw << shift) as i64) >> shift
+}
+
+/// Truncate an `i64` to its low `bits` (two's complement wrap).
+#[inline]
+pub fn truncate(v: i64, bits: u32) -> u64 {
+    debug_assert!((1..=64).contains(&bits));
+    if bits == 64 {
+        v as u64
+    } else {
+        (v as u64) & ((1u64 << bits) - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_extend_roundtrip() {
+        for bits in [1u32, 2, 7, 8, 16, 31, 32, 63, 64] {
+            let lo = if bits == 64 { i64::MIN } else { -(1i64 << (bits - 1)) };
+            let hi = if bits == 64 { i64::MAX } else { (1i64 << (bits - 1)) - 1 };
+            for v in [lo, lo + 1, -1, 0, 1, hi - 1, hi] {
+                if v < lo || v > hi {
+                    continue;
+                }
+                assert_eq!(sign_extend(truncate(v, bits), bits), v, "bits={bits} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_wraps() {
+        assert_eq!(truncate(-1, 4), 0xF);
+        assert_eq!(truncate(8, 4), 8);
+        assert_eq!(sign_extend(0xF, 4), -1);
+        assert_eq!(sign_extend(0x8, 4), -8);
+    }
+}

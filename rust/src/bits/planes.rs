@@ -1,0 +1,227 @@
+//! The packed bit-plane container.
+
+use super::{sign_extend, truncate};
+
+/// A matrix of `lanes` bit-serial operands, each `nbits` wide, stored
+/// plane-major: plane `b` holds bit `b` (LSB first) of every lane, packed
+/// 64 lanes per `u64`.
+///
+/// This mirrors the striped-column storage scheme of bit-serial PIM
+/// register files (paper §III-A): lane ↔ PE column, plane ↔ wordline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPlanes {
+    lanes: usize,
+    nbits: u32,
+    words_per_plane: usize,
+    data: Vec<u64>,
+}
+
+impl BitPlanes {
+    /// All-zero container for `lanes` operands of `nbits` bits.
+    pub fn zero(lanes: usize, nbits: u32) -> Self {
+        assert!(nbits >= 1 && nbits <= 64, "nbits={nbits} out of range");
+        let words_per_plane = lanes.div_ceil(64).max(1);
+        Self {
+            lanes,
+            nbits,
+            words_per_plane,
+            data: vec![0u64; words_per_plane * nbits as usize],
+        }
+    }
+
+    /// Number of lanes (PE columns).
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Operand bit width.
+    #[inline]
+    pub fn nbits(&self) -> u32 {
+        self.nbits
+    }
+
+    /// Number of `u64` words storing each plane.
+    #[inline]
+    pub fn words_per_plane(&self) -> usize {
+        self.words_per_plane
+    }
+
+    /// Read a single bit (plane `bit` of lane `lane`).
+    #[inline]
+    pub fn get(&self, lane: usize, bit: u32) -> bool {
+        debug_assert!(lane < self.lanes && bit < self.nbits);
+        let w = self.data[bit as usize * self.words_per_plane + lane / 64];
+        (w >> (lane % 64)) & 1 == 1
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn set(&mut self, lane: usize, bit: u32, v: bool) {
+        debug_assert!(lane < self.lanes && bit < self.nbits);
+        let idx = bit as usize * self.words_per_plane + lane / 64;
+        let mask = 1u64 << (lane % 64);
+        if v {
+            self.data[idx] |= mask;
+        } else {
+            self.data[idx] &= !mask;
+        }
+    }
+
+    /// Borrow one whole plane as packed words.
+    #[inline]
+    pub fn plane(&self, bit: u32) -> &[u64] {
+        debug_assert!(bit < self.nbits);
+        let start = bit as usize * self.words_per_plane;
+        &self.data[start..start + self.words_per_plane]
+    }
+
+    /// Mutably borrow one plane.
+    #[inline]
+    pub fn plane_mut(&mut self, bit: u32) -> &mut [u64] {
+        debug_assert!(bit < self.nbits);
+        let start = bit as usize * self.words_per_plane;
+        &mut self.data[start..start + self.words_per_plane]
+    }
+
+    /// Read back lane `lane` as a sign-extended two's-complement value.
+    pub fn lane_value(&self, lane: usize) -> i64 {
+        let mut raw = 0u64;
+        for b in 0..self.nbits {
+            raw |= (self.get(lane, b) as u64) << b;
+        }
+        sign_extend(raw, self.nbits)
+    }
+
+    /// Store `v` (two's complement, truncated to `nbits`) into lane `lane`.
+    pub fn set_lane_value(&mut self, lane: usize, v: i64) {
+        let raw = truncate(v, self.nbits);
+        for b in 0..self.nbits {
+            self.set(lane, b, (raw >> b) & 1 == 1);
+        }
+    }
+
+    /// All lane values, sign-extended. Uses the 64×64 block transpose
+    /// (6·32 word ops per block instead of 64·nbits single-bit reads) —
+    /// this is the corner-turn-out hot path.
+    pub fn to_values(&self) -> Vec<i64> {
+        let mut out = vec![0i64; self.lanes];
+        let mut block = [0u64; 64];
+        for wj in 0..self.words_per_plane {
+            for (b, slot) in block.iter_mut().enumerate() {
+                *slot = if (b as u32) < self.nbits {
+                    self.plane(b as u32)[wj]
+                } else {
+                    0
+                };
+            }
+            let rows = super::turn::corner_turn_u64_block(&block);
+            let lane0 = wj * 64;
+            let live = 64.min(self.lanes - lane0);
+            for (i, &raw) in rows.iter().take(live).enumerate() {
+                out[lane0 + i] = super::sign_extend(raw, self.nbits);
+            }
+        }
+        out
+    }
+
+    /// Widen (sign-extending) or narrow (truncating) to `new_bits`.
+    pub fn resized(&self, new_bits: u32) -> BitPlanes {
+        let mut out = BitPlanes::zero(self.lanes, new_bits);
+        for lane in 0..self.lanes {
+            out.set_lane_value(lane, self.lane_value(lane));
+        }
+        out
+    }
+
+    /// Mask of valid lanes in the final (possibly partial) word of a plane.
+    #[inline]
+    pub fn tail_mask(&self) -> u64 {
+        let rem = self.lanes % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    /// Raw packed storage (plane-major), mainly for the packed engine.
+    #[inline]
+    pub fn raw(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Mutable raw packed storage.
+    #[inline]
+    pub fn raw_mut(&mut self) -> &mut [u64] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_is_zero() {
+        let p = BitPlanes::zero(100, 8);
+        assert_eq!(p.to_values(), vec![0i64; 100]);
+        assert_eq!(p.words_per_plane(), 2);
+    }
+
+    #[test]
+    fn lane_value_roundtrip() {
+        let mut p = BitPlanes::zero(70, 8);
+        for (i, v) in [-128i64, 127, -1, 0, 5, -37, 64, 99].iter().enumerate() {
+            p.set_lane_value(i * 7, *v);
+        }
+        for (i, v) in [-128i64, 127, -1, 0, 5, -37, 64, 99].iter().enumerate() {
+            assert_eq!(p.lane_value(i * 7), *v);
+        }
+    }
+
+    #[test]
+    fn bit_addressing_matches_value() {
+        let mut p = BitPlanes::zero(3, 4);
+        p.set_lane_value(1, -3); // 0b1101
+        assert!(p.get(1, 0));
+        assert!(!p.get(1, 1));
+        assert!(p.get(1, 2));
+        assert!(p.get(1, 3));
+        assert_eq!(p.lane_value(0), 0);
+        assert_eq!(p.lane_value(2), 0);
+    }
+
+    #[test]
+    fn resize_sign_extends_and_truncates() {
+        let mut p = BitPlanes::zero(4, 4);
+        p.set_lane_value(0, -3);
+        p.set_lane_value(1, 7);
+        let wide = p.resized(16);
+        assert_eq!(wide.lane_value(0), -3);
+        assert_eq!(wide.lane_value(1), 7);
+        let mut w = BitPlanes::zero(1, 16);
+        w.set_lane_value(0, 0x7FF);
+        let narrow = w.resized(4);
+        assert_eq!(narrow.lane_value(0), -1); // 0xF sign-extended
+    }
+
+    #[test]
+    fn tail_mask_shapes() {
+        assert_eq!(BitPlanes::zero(64, 1).tail_mask(), u64::MAX);
+        assert_eq!(BitPlanes::zero(65, 1).tail_mask(), 1);
+        assert_eq!(BitPlanes::zero(16, 1).tail_mask(), 0xFFFF);
+    }
+
+    #[test]
+    fn plane_borrow_is_packed() {
+        let mut p = BitPlanes::zero(128, 2);
+        p.set(0, 1, true);
+        p.set(64, 1, true);
+        p.set(127, 1, true);
+        let plane1 = p.plane(1);
+        assert_eq!(plane1[0], 1);
+        assert_eq!(plane1[1], 1 | (1 << 63));
+        assert_eq!(p.plane(0), &[0, 0]);
+    }
+}

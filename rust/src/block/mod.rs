@@ -1,0 +1,339 @@
+//! A row of PE-blocks: the unit over which folding and network reduction
+//! operate.
+//!
+//! Physically each PE-block is 16 PEs fed by one BRAM (paper §III-A,
+//! organized 1×16 to fit the columnar Virtex layout). A *block row* is a
+//! horizontal chain of such blocks whose network nodes are linked for
+//! row-wise accumulation (Fig 3(a)). The simulator stores the whole row in
+//! one [`ColumnMemory`] — lane `16·c + i` is PE `i` of block `c` — which
+//! preserves per-PE semantics while letting plane-level operations run
+//! packed.
+
+use crate::arch::geometry::{PES_PER_BLOCK, RF_DEPTH};
+use crate::array::PackedEngine;
+use crate::bram::ColumnMemory;
+use crate::isa::{fold_receivers, AluOp, FoldPattern, RfAddr};
+use crate::pe;
+use crate::{Error, Result};
+
+/// One row of `ncols` PE-blocks (16 PEs each).
+#[derive(Debug, Clone)]
+pub struct BlockRow {
+    ncols: usize,
+    mem: ColumnMemory,
+}
+
+impl BlockRow {
+    /// A row of `ncols` blocks with the standard 1K-deep register files.
+    pub fn new(ncols: usize) -> Self {
+        assert!(ncols >= 1);
+        Self {
+            ncols,
+            mem: ColumnMemory::new(RF_DEPTH, ncols * PES_PER_BLOCK),
+        }
+    }
+
+    /// Number of PE-blocks in the row.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Total PE lanes in the row.
+    pub fn lanes(&self) -> usize {
+        self.ncols * PES_PER_BLOCK
+    }
+
+    /// The backing register-file storage.
+    pub fn mem(&self) -> &ColumnMemory {
+        &self.mem
+    }
+
+    /// Mutable access to the backing storage (used by the DMA path).
+    pub fn mem_mut(&mut self) -> &mut ColumnMemory {
+        &mut self.mem
+    }
+
+    /// Validate that an operand at `base` of `w` bits fits the register
+    /// file depth.
+    fn check_range(&self, base: RfAddr, w: u32) -> Result<()> {
+        if (base.0 as usize + w as usize) > RF_DEPTH {
+            return Err(Error::Sim(format!(
+                "operand r{}..+{w} exceeds register file depth {RF_DEPTH}",
+                base.0
+            )));
+        }
+        Ok(())
+    }
+
+    /// Element-wise ALU op in every lane: `dst = op(x, y)`.
+    ///
+    /// Executes on the packed (bit-sliced) engine — 64 PEs per word op —
+    /// which is differentially tested against the scalar reference in
+    /// [`crate::pe`] (see `array::packed::tests` and [`Self::alu_scalar`]).
+    pub fn alu(&mut self, op: AluOp, dst: RfAddr, x: RfAddr, y: RfAddr, w: u32) -> Result<()> {
+        self.check_range(dst, w)?;
+        self.check_range(x, w)?;
+        self.check_range(y, w)?;
+        PackedEngine::alu(&mut self.mem, op, dst.0 as usize, x.0 as usize, y.0 as usize, w);
+        Ok(())
+    }
+
+    /// Scalar-reference ALU path, kept for differential testing.
+    pub fn alu_scalar(&mut self, op: AluOp, dst: RfAddr, x: RfAddr, y: RfAddr, w: u32) -> Result<()> {
+        self.check_range(dst, w)?;
+        self.check_range(x, w)?;
+        self.check_range(y, w)?;
+        for lane in 0..self.lanes() {
+            pe::serial_alu(&mut self.mem, lane, op, dst.0 as usize, x.0 as usize, y.0 as usize, w);
+        }
+        Ok(())
+    }
+
+    /// Booth multiply in every lane: `dst[2w] = mand[w] * mier[w]`.
+    /// Returns the number of Booth steps where *any* lane was active —
+    /// the SIMD sequencer advances in lock-step, so a step is skippable
+    /// only when every lane recodes it as NOP.
+    pub fn mult(&mut self, dst: RfAddr, mand: RfAddr, mier: RfAddr, w: u32) -> Result<u32> {
+        self.check_range(dst, 2 * w)?;
+        self.check_range(mand, w)?;
+        self.check_range(mier, w)?;
+        let (_pop, active_steps) = PackedEngine::mult(
+            &mut self.mem,
+            dst.0 as usize,
+            mand.0 as usize,
+            mier.0 as usize,
+            w,
+        );
+        Ok(active_steps)
+    }
+
+    /// Scalar-reference multiply, kept for differential testing. Returns
+    /// the per-lane maximum active-step count (coincides with the packed
+    /// engine's any-lane count on single-lane rows).
+    pub fn mult_scalar(&mut self, dst: RfAddr, mand: RfAddr, mier: RfAddr, w: u32) -> Result<u32> {
+        self.check_range(dst, 2 * w)?;
+        self.check_range(mand, w)?;
+        self.check_range(mier, w)?;
+        let mut max_active = 0;
+        for lane in 0..self.lanes() {
+            let active = pe::booth_mult(
+                &mut self.mem,
+                lane,
+                dst.0 as usize,
+                mand.0 as usize,
+                mier.0 as usize,
+                w,
+            );
+            max_active = max_active.max(active);
+        }
+        Ok(max_active)
+    }
+
+    /// One zero-copy fold level inside every block of the row
+    /// (OpMux `A-FOLD-level`): receiver lanes do `dst += partner(dst)`.
+    ///
+    /// The fold is *within* a 16-lane block: the OpMux can only re-route
+    /// bitlines of its own BRAM (paper §III-C); cross-block combining is
+    /// the network's job. Packed: the 16-lane receiver masks replicate
+    /// across words, so one word op folds four blocks at once.
+    pub fn fold(&mut self, pattern: FoldPattern, level: u8, dst: RfAddr, w: u32) -> Result<()> {
+        self.check_range(dst, w)?;
+        if !(1..=4).contains(&level) {
+            return Err(Error::Sim(format!("fold level {level} outside 1..=4")));
+        }
+        PackedEngine::fold(&mut self.mem, pattern, level, dst.0 as usize, w);
+        Ok(())
+    }
+
+    /// Scalar-reference fold, kept for differential testing.
+    pub fn fold_scalar(&mut self, pattern: FoldPattern, level: u8, dst: RfAddr, w: u32) -> Result<()> {
+        self.check_range(dst, w)?;
+        if !(1..=4).contains(&level) {
+            return Err(Error::Sim(format!("fold level {level} outside 1..=4")));
+        }
+        let base = dst.0 as usize;
+        for blk in 0..self.ncols {
+            let lane0 = blk * PES_PER_BLOCK;
+            for (recv, xmit) in fold_receivers(pattern, PES_PER_BLOCK, level) {
+                // Y input is the partner bitline routed through the OpMux;
+                // semantically: dst[recv] += dst[xmit].
+                let ybits = pe::read_stream(&self.mem, lane0 + xmit, base, w, w as usize);
+                pe::serial_alu_stream(&mut self.mem, lane0 + recv, AluOp::Add, base, base, &ybits);
+            }
+        }
+        Ok(())
+    }
+
+    /// One pooling fold level: receiver lanes keep `max`/`min` of
+    /// themselves and their fold partner (paper §III-B: CPX/CPY exist
+    /// precisely to support min/max pooling; Fig 2(b)'s adjacent pattern
+    /// gives CNN-style 2:1 pooling).
+    ///
+    /// Hardware realization: SUB computes `self − partner` bit-serially;
+    /// the final borrow-complement (sign) selects CPX (keep own) or CPY
+    /// (take partner) on the write-back pass. The simulator performs the
+    /// equivalent value-level select; cycle cost is charged by the array
+    /// layer as two ALU passes.
+    pub fn pool(
+        &mut self,
+        op: crate::isa::PoolOp,
+        pattern: FoldPattern,
+        level: u8,
+        dst: RfAddr,
+        w: u32,
+    ) -> Result<()> {
+        self.check_range(dst, w)?;
+        if !(1..=4).contains(&level) {
+            return Err(Error::Sim(format!("pool level {level} outside 1..=4")));
+        }
+        let base = dst.0 as usize;
+        for blk in 0..self.ncols {
+            let lane0 = blk * PES_PER_BLOCK;
+            for (recv, xmit) in fold_receivers(pattern, PES_PER_BLOCK, level) {
+                let own = self.mem.lane_value(lane0 + recv, base, w);
+                let partner = self.mem.lane_value(lane0 + xmit, base, w);
+                let keep = match op {
+                    crate::isa::PoolOp::Max => own.max(partner),
+                    crate::isa::PoolOp::Min => own.min(partner),
+                };
+                self.mem.set_lane_value(lane0 + recv, base, w, keep);
+            }
+        }
+        Ok(())
+    }
+
+    /// Sign-extend an operand in place from `from` to `to` bits in every
+    /// lane (CPX of the sign wordline — paper Table I's CPX reused).
+    pub fn extend(&mut self, dst: RfAddr, from: u32, to: u32) -> Result<()> {
+        if to < from {
+            return Err(Error::Sim(format!("extend {from}->{to} shrinks")));
+        }
+        self.check_range(dst, to)?;
+        let base = dst.0 as usize;
+        let sign_line = base + from as usize - 1;
+        for b in from as usize..to as usize {
+            let (src, d) = self.mem.two_lines_mut(sign_line, base + b);
+            d.copy_from_slice(src);
+        }
+        Ok(())
+    }
+
+    /// Read the per-lane values of an operand (fast corner-turn-out:
+    /// packed plane copy + 64×64 block transpose).
+    pub fn read_values(&self, base: RfAddr, w: u32) -> Vec<i64> {
+        self.mem.load_planes(base.0 as usize, w).to_values()
+    }
+
+    /// Write per-lane values of an operand (host DMA: corner turn + packed
+    /// plane store). Lanes beyond `vals.len()` within the same 64-lane
+    /// word are cleared, as a real corner-turning DMA engine writing whole
+    /// wordlines would.
+    pub fn write_values(&mut self, base: RfAddr, w: u32, vals: &[i64]) -> Result<()> {
+        self.check_range(base, w)?;
+        if vals.len() > self.lanes() {
+            return Err(Error::Sim(format!(
+                "{} values exceed {} lanes",
+                vals.len(),
+                self.lanes()
+            )));
+        }
+        let planes = crate::bits::corner_turn(vals, w);
+        self.mem.store_planes(base.0 as usize, &planes);
+        Ok(())
+    }
+
+    /// Value held by block `blk`'s lane 0 — where fold + network reductions
+    /// deposit results.
+    pub fn block_result(&self, blk: usize, base: RfAddr, w: u32) -> i64 {
+        self.mem
+            .lane_value(blk * PES_PER_BLOCK, base.0 as usize, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn elementwise_alu_across_blocks() {
+        let mut row = BlockRow::new(3); // 48 lanes
+        let a: Vec<i64> = (0..48).map(|i| i - 20).collect();
+        let b: Vec<i64> = (0..48).map(|i| 3 * i + 1).collect();
+        row.write_values(RfAddr(0), 16, &a).unwrap();
+        row.write_values(RfAddr(16), 16, &b).unwrap();
+        row.alu(AluOp::Add, RfAddr(32), RfAddr(0), RfAddr(16), 16).unwrap();
+        let got = row.read_values(RfAddr(32), 16);
+        for i in 0..48 {
+            assert_eq!(got[i], a[i] + b[i], "lane {i}");
+        }
+    }
+
+    #[test]
+    fn mult_across_blocks_random() {
+        let mut rng = Xoshiro256::seeded(21);
+        let mut row = BlockRow::new(2);
+        let mut a = vec![0i64; 32];
+        let mut b = vec![0i64; 32];
+        rng.fill_signed(&mut a, 8);
+        rng.fill_signed(&mut b, 8);
+        row.write_values(RfAddr(0), 8, &a).unwrap();
+        row.write_values(RfAddr(8), 8, &b).unwrap();
+        row.mult(RfAddr(32), RfAddr(0), RfAddr(8), 8).unwrap();
+        let got = row.read_values(RfAddr(32), 16);
+        for i in 0..32 {
+            assert_eq!(got[i], a[i] * b[i], "lane {i}");
+        }
+    }
+
+    #[test]
+    fn halving_folds_reduce_each_block_to_lane0() {
+        let mut row = BlockRow::new(4); // 64 lanes, 4 blocks
+        let vals: Vec<i64> = (0..64).map(|i| i * i - 100).collect();
+        row.write_values(RfAddr(0), 20, &vals).unwrap();
+        for level in 1..=4 {
+            row.fold(FoldPattern::Halving, level, RfAddr(0), 20).unwrap();
+        }
+        for blk in 0..4 {
+            let expect: i64 = vals[blk * 16..(blk + 1) * 16].iter().sum();
+            assert_eq!(row.block_result(blk, RfAddr(0), 20), expect, "block {blk}");
+        }
+    }
+
+    #[test]
+    fn adjacent_folds_reduce_too() {
+        let mut row = BlockRow::new(1);
+        let vals: Vec<i64> = (0..16).map(|i| 5 - i).collect();
+        row.write_values(RfAddr(0), 12, &vals).unwrap();
+        for level in 1..=4 {
+            row.fold(FoldPattern::Adjacent, level, RfAddr(0), 12).unwrap();
+        }
+        assert_eq!(row.block_result(0, RfAddr(0), 12), vals.iter().sum::<i64>());
+    }
+
+    #[test]
+    fn fold_is_block_local() {
+        // Values in block 1 must never leak into block 0's fold.
+        let mut row = BlockRow::new(2);
+        let mut vals = vec![1i64; 16];
+        vals.extend(vec![1000i64; 16]);
+        row.write_values(RfAddr(0), 16, &vals).unwrap();
+        for level in 1..=4 {
+            row.fold(FoldPattern::Halving, level, RfAddr(0), 16).unwrap();
+        }
+        assert_eq!(row.block_result(0, RfAddr(0), 16), 16);
+        assert_eq!(row.block_result(1, RfAddr(0), 16), 16_000);
+    }
+
+    #[test]
+    fn range_checks() {
+        let mut row = BlockRow::new(1);
+        assert!(row
+            .alu(AluOp::Add, RfAddr(1020), RfAddr(0), RfAddr(8), 8)
+            .is_err());
+        assert!(row.fold(FoldPattern::Halving, 5, RfAddr(0), 8).is_err());
+        assert!(row.fold(FoldPattern::Halving, 0, RfAddr(0), 8).is_err());
+        let too_many = vec![0i64; 17];
+        assert!(row.write_values(RfAddr(0), 8, &too_many).is_err());
+    }
+}

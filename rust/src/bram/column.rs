@@ -1,0 +1,233 @@
+//! Column-striped bit-serial storage: the register-file array behind a
+//! group of PEs, addressed by wordline (bit-plane) and lane (PE column).
+//!
+//! Storage is wordline-major with lanes packed 64-per-`u64`, so a single
+//! wordline read/write touches `lanes/64` words — this is what makes the
+//! packed simulation engine fast (64 PEs advance per word operation).
+
+use crate::bits::BitPlanes;
+
+/// A `depth × lanes` bit matrix.
+#[derive(Debug, Clone)]
+pub struct ColumnMemory {
+    depth: usize,
+    lanes: usize,
+    words_per_line: usize,
+    data: Vec<u64>,
+}
+
+impl ColumnMemory {
+    /// All-zero memory with `depth` wordlines and `lanes` PE columns.
+    pub fn new(depth: usize, lanes: usize) -> Self {
+        let words_per_line = lanes.div_ceil(64).max(1);
+        Self {
+            depth,
+            lanes,
+            words_per_line,
+            data: vec![0; depth * words_per_line],
+        }
+    }
+
+    /// Number of wordlines.
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of PE columns.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Packed words per wordline.
+    #[inline]
+    pub fn words_per_line(&self) -> usize {
+        self.words_per_line
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get(&self, wordline: usize, lane: usize) -> bool {
+        debug_assert!(wordline < self.depth && lane < self.lanes);
+        let w = self.data[wordline * self.words_per_line + lane / 64];
+        (w >> (lane % 64)) & 1 == 1
+    }
+
+    /// Write one bit.
+    #[inline]
+    pub fn set(&mut self, wordline: usize, lane: usize, v: bool) {
+        debug_assert!(wordline < self.depth && lane < self.lanes);
+        let idx = wordline * self.words_per_line + lane / 64;
+        let mask = 1u64 << (lane % 64);
+        if v {
+            self.data[idx] |= mask;
+        } else {
+            self.data[idx] &= !mask;
+        }
+    }
+
+    /// Borrow one wordline as packed lane words.
+    #[inline]
+    pub fn line(&self, wordline: usize) -> &[u64] {
+        debug_assert!(wordline < self.depth);
+        let s = wordline * self.words_per_line;
+        &self.data[s..s + self.words_per_line]
+    }
+
+    /// Mutably borrow one wordline.
+    #[inline]
+    pub fn line_mut(&mut self, wordline: usize) -> &mut [u64] {
+        debug_assert!(wordline < self.depth);
+        let s = wordline * self.words_per_line;
+        &mut self.data[s..s + self.words_per_line]
+    }
+
+    /// Mutably borrow two distinct wordlines at once (for read-modify-write
+    /// style plane ops without copying).
+    pub fn two_lines_mut(&mut self, a: usize, b: usize) -> (&mut [u64], &mut [u64]) {
+        assert!(a != b && a < self.depth && b < self.depth);
+        let w = self.words_per_line;
+        let (lo, hi, swap) = if a < b { (a, b, false) } else { (b, a, true) };
+        let (head, tail) = self.data.split_at_mut(hi * w);
+        let la = &mut head[lo * w..lo * w + w];
+        let lb = &mut tail[..w];
+        if swap {
+            (lb, la)
+        } else {
+            (la, lb)
+        }
+    }
+
+    /// Store a [`BitPlanes`] operand starting at wordline `base` (plane `b`
+    /// of the operand goes to wordline `base + b`).
+    pub fn store_planes(&mut self, base: usize, planes: &BitPlanes) {
+        assert!(planes.lanes() <= self.lanes, "operand wider than memory");
+        assert!(base + planes.nbits() as usize <= self.depth, "wordline overflow");
+        for b in 0..planes.nbits() {
+            let src = planes.plane(b);
+            let dst = self.line_mut(base + b as usize);
+            dst[..src.len()].copy_from_slice(src);
+        }
+    }
+
+    /// Load `nbits` wordlines starting at `base` into a [`BitPlanes`].
+    pub fn load_planes(&self, base: usize, nbits: u32) -> BitPlanes {
+        assert!(base + nbits as usize <= self.depth, "wordline overflow");
+        let mut out = BitPlanes::zero(self.lanes, nbits);
+        for b in 0..nbits {
+            let src = self.line(base + b as usize);
+            out.plane_mut(b)[..src.len()].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Read lane `lane`'s value at `base..base+nbits` (sign-extended).
+    pub fn lane_value(&self, lane: usize, base: usize, nbits: u32) -> i64 {
+        let mut raw = 0u64;
+        for b in 0..nbits {
+            raw |= (self.get(base + b as usize, lane) as u64) << b;
+        }
+        crate::bits::sign_extend(raw, nbits)
+    }
+
+    /// Write `v` into lane `lane` at `base..base+nbits`.
+    pub fn set_lane_value(&mut self, lane: usize, base: usize, nbits: u32, v: i64) {
+        let raw = crate::bits::truncate(v, nbits);
+        for b in 0..nbits {
+            self.set(base + b as usize, lane, (raw >> b) & 1 == 1);
+        }
+    }
+
+    /// Zero a range of wordlines.
+    pub fn clear_lines(&mut self, base: usize, count: usize) {
+        assert!(base + count <= self.depth);
+        let w = self.words_per_line;
+        self.data[base * w..(base + count) * w].fill(0);
+    }
+
+    /// Mask of valid lanes in the last packed word of a line.
+    #[inline]
+    pub fn tail_mask(&self) -> u64 {
+        let rem = self.lanes % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::corner_turn;
+
+    #[test]
+    fn bit_rw() {
+        let mut m = ColumnMemory::new(64, 16);
+        m.set(5, 3, true);
+        m.set(63, 15, true);
+        assert!(m.get(5, 3));
+        assert!(m.get(63, 15));
+        assert!(!m.get(5, 4));
+        m.set(5, 3, false);
+        assert!(!m.get(5, 3));
+    }
+
+    #[test]
+    fn store_load_roundtrip() {
+        let vals: Vec<i64> = (-8..8).collect();
+        let planes = corner_turn(&vals, 8);
+        let mut m = ColumnMemory::new(1024, 16);
+        m.store_planes(100, &planes);
+        let back = m.load_planes(100, 8);
+        assert_eq!(back.to_values(), vals);
+        // Lane-value accessor agrees.
+        for (lane, &v) in vals.iter().enumerate() {
+            assert_eq!(m.lane_value(lane, 100, 8), v);
+        }
+    }
+
+    #[test]
+    fn lane_value_rw() {
+        let mut m = ColumnMemory::new(128, 100);
+        m.set_lane_value(77, 32, 12, -1000);
+        assert_eq!(m.lane_value(77, 32, 12), -1000);
+        assert_eq!(m.lane_value(76, 32, 12), 0);
+    }
+
+    #[test]
+    fn two_lines_mut_disjoint() {
+        let mut m = ColumnMemory::new(16, 64);
+        let (a, b) = m.two_lines_mut(3, 9);
+        a[0] = 0xAA;
+        b[0] = 0x55;
+        assert_eq!(m.line(3)[0], 0xAA);
+        assert_eq!(m.line(9)[0], 0x55);
+        // Reversed order works too.
+        let (b2, a2) = m.two_lines_mut(9, 3);
+        assert_eq!(b2[0], 0x55);
+        assert_eq!(a2[0], 0xAA);
+    }
+
+    #[test]
+    #[should_panic]
+    fn two_lines_mut_same_line_panics() {
+        let mut m = ColumnMemory::new(16, 16);
+        let _ = m.two_lines_mut(4, 4);
+    }
+
+    #[test]
+    fn clear_lines_zeroes() {
+        let mut m = ColumnMemory::new(32, 16);
+        m.set_lane_value(0, 0, 16, -1);
+        m.clear_lines(4, 8);
+        // bits 0..4 stay, 4..12 cleared.
+        assert_eq!(m.lane_value(0, 0, 4), -1);
+        for wl in 4..12 {
+            assert!(!m.get(wl, 0));
+        }
+        assert!(m.get(12, 0));
+    }
+}

@@ -1,0 +1,85 @@
+//! Block-RAM models: the stock 36Kb/18Kb BRAM the overlay builds on, the
+//! custom tiles' 256×144 redesign, and the column-striped register-file
+//! storage used by the cycle-accurate simulator.
+
+mod column;
+mod mode;
+
+pub use column::ColumnMemory;
+pub use mode::{BramMode, CUSTOM_PIM_GEOMETRY};
+
+use crate::arch::ArchKind;
+
+/// Capacity bookkeeping for one PE's bit-serial register file, including
+/// the scratchpad wordlines each architecture must reserve for N-bit
+/// arithmetic (paper §V / Fig 7).
+#[derive(Debug, Clone, Copy)]
+pub struct RegisterFileBudget {
+    /// Total bits in the PE's column.
+    pub depth: u32,
+    /// Wordlines reserved as arithmetic scratchpad.
+    pub reserved: u32,
+}
+
+impl RegisterFileBudget {
+    /// Budget for `arch` at operand width `n`.
+    pub fn for_arch(arch: ArchKind, n: u32) -> Self {
+        Self {
+            depth: arch.bits_per_pe(),
+            reserved: arch.reserved_wordlines(n),
+        }
+    }
+
+    /// Bits left for model weights.
+    pub fn weight_bits(&self) -> u32 {
+        self.depth.saturating_sub(self.reserved)
+    }
+
+    /// Number of N-bit weights that fit.
+    pub fn weights(&self, n: u32) -> u32 {
+        self.weight_bits() / n
+    }
+
+    /// Fraction of the register file usable for weights (Fig 7 metric).
+    pub fn efficiency(&self) -> f64 {
+        self.weight_bits() as f64 / self.depth as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CustomDesign;
+
+    #[test]
+    fn fig7_budgets() {
+        // N = 16: CCB reserves 8N = 128 of 256 -> 50%; PiCaSO 4N = 64 of
+        // 1024 -> 93.75%.
+        let ccb = RegisterFileBudget::for_arch(ArchKind::Custom(CustomDesign::Ccb), 16);
+        assert_eq!(ccb.depth, 256);
+        assert_eq!(ccb.reserved, 128);
+        assert!((ccb.efficiency() - 0.5).abs() < 1e-12);
+        let picaso = RegisterFileBudget::for_arch(ArchKind::PICASO_F, 16);
+        assert_eq!(picaso.depth, 1024);
+        assert!((picaso.efficiency() - 0.9375).abs() < 1e-12);
+        // 60 sixteen-bit weights per PiCaSO PE.
+        assert_eq!(picaso.weights(16), 60);
+    }
+
+    #[test]
+    fn weight_capacity_headline() {
+        // §V-A: "improves their memory utilization efficiency by 6.2%.
+        // This means at 4-bit precision, 1.6 million more weights can be
+        // stored in a device with 100 Mb of BRAM." The 6.25 pp delta is the
+        // 16-bit-operand efficiency gap (one reserved wordline per bit of
+        // N = 16: 16/256); the paper then applies it to a 4-bit weight
+        // count — we reproduce that arithmetic.
+        let comefa =
+            RegisterFileBudget::for_arch(ArchKind::Custom(CustomDesign::CoMeFaA), 16);
+        let amod = RegisterFileBudget::for_arch(ArchKind::Custom(CustomDesign::AMod), 16);
+        let gain = amod.efficiency() - comefa.efficiency();
+        assert!((gain - 0.0625).abs() < 1e-12);
+        let extra_weights = 100e6 * gain / 4.0;
+        assert!((extra_weights - 1.5625e6).abs() < 1e4, "{extra_weights}");
+    }
+}

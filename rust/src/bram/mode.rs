@@ -1,0 +1,119 @@
+//! BRAM aspect-ratio modes and the custom tiles' array redesign.
+
+/// An aspect-ratio configuration of a stock Xilinx BRAM primitive.
+///
+/// A 36Kb BRAM (two 18Kb halves) supports 32K×1 through 512×72; the
+/// overlay uses each 18Kb half in its 1K×16 data-bit configuration so one
+/// port feeds a 16-PE block one bit-plane per cycle (paper §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BramMode {
+    /// Addressable depth (wordlines).
+    pub depth: u32,
+    /// Data width per access (bits, excluding parity).
+    pub width: u32,
+    /// Parity bits per access usable as extra storage.
+    pub parity: u32,
+}
+
+impl BramMode {
+    /// 18Kb half in 1K×16(+2) mode — the PiCaSO block configuration.
+    pub const PICASO_BLOCK: BramMode = BramMode {
+        depth: 1024,
+        width: 16,
+        parity: 2,
+    };
+
+    /// 36Kb in 1K×32(+4) mode — widest 1K-deep option, both halves.
+    pub const WIDE_1K: BramMode = BramMode {
+        depth: 1024,
+        width: 32,
+        parity: 4,
+    };
+
+    /// 36Kb in 512×64(+8) mode — the widest mode of a Virtex 36Kb BRAM.
+    pub const WIDEST: BramMode = BramMode {
+        depth: 512,
+        width: 64,
+        parity: 8,
+    };
+
+    /// Total data capacity (bits), excluding parity.
+    pub fn capacity(&self) -> u32 {
+        self.depth * self.width
+    }
+
+    /// Total capacity including parity bits.
+    pub fn capacity_with_parity(&self) -> u32 {
+        self.depth * (self.width + self.parity)
+    }
+
+    /// Bit-serial PEs this mode feeds (one per data bit of the port).
+    pub fn pes(&self) -> u32 {
+        self.width
+    }
+
+    /// Register-file depth per PE when column-striped.
+    pub fn rf_depth(&self) -> u32 {
+        self.depth
+    }
+}
+
+/// The custom PIM tiles' redesigned array geometry (paper §V): with a
+/// column-muxing factor of 4 removed, a Virtex 36Kb array is exposed as
+/// 256×144 — 144 PEs of 256 bits each.
+#[derive(Debug, Clone, Copy)]
+pub struct CustomPimGeometry {
+    /// Exposed wordlines.
+    pub rows: u32,
+    /// Exposed bitlines = PEs.
+    pub bitlines: u32,
+}
+
+/// The 256×144 geometry shared by CCB and CoMeFa models.
+pub const CUSTOM_PIM_GEOMETRY: CustomPimGeometry = CustomPimGeometry {
+    rows: 256,
+    bitlines: 144,
+};
+
+impl CustomPimGeometry {
+    /// Total capacity in bits.
+    pub fn capacity(&self) -> u32 {
+        self.rows * self.bitlines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picaso_block_mode() {
+        let m = BramMode::PICASO_BLOCK;
+        assert_eq!(m.pes(), 16);
+        assert_eq!(m.rf_depth(), 1024);
+        assert_eq!(m.capacity(), 16 * 1024); // one 18Kb half (data bits)
+    }
+
+    #[test]
+    fn custom_geometry_is_a_36kb_array() {
+        // 256 x 144 = 36,864 bits = a 36Kb array including parity columns.
+        assert_eq!(CUSTOM_PIM_GEOMETRY.capacity(), 36_864);
+        assert_eq!(CUSTOM_PIM_GEOMETRY.bitlines, 144);
+        // Each custom PE sees a 256-bit register file (paper §V).
+        assert_eq!(CUSTOM_PIM_GEOMETRY.rows, 256);
+    }
+
+    #[test]
+    fn widest_mode_is_512x72() {
+        assert_eq!(BramMode::WIDEST.capacity_with_parity(), 36_864);
+    }
+
+    #[test]
+    fn parallel_mac_ratio() {
+        // Table VIII: the overlay drives 36 bitlines (16+2 parity per 18Kb
+        // half x 2) vs the custom designs' 144 — a 1/4 ratio.
+        let overlay = 2 * (BramMode::PICASO_BLOCK.width + BramMode::PICASO_BLOCK.parity);
+        assert_eq!(overlay, 36);
+        assert_eq!(CUSTOM_PIM_GEOMETRY.bitlines / overlay, 4);
+    }
+}

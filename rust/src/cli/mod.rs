@@ -1,0 +1,275 @@
+//! Hand-rolled CLI (the vendored crate set has no `clap`).
+//!
+//! ```text
+//! picaso <command> [--key=value ...]
+//!
+//! commands:
+//!   table4|table5|table6|table7|table8   regenerate a paper table
+//!   fig4|fig5|fig6|fig7                  regenerate a paper figure
+//!   all                                  everything above, in order
+//!   gemm      [--m --k --n --width --rows --cols --arch --booth-skip]
+//!   serve     [--jobs --workers --rows --cols]
+//!   asm       --file=<path> [--width]    assemble + disassemble a program
+//!   info                                 device database summary
+//! ```
+
+use crate::arch::{ArchKind, PipelineConfig};
+use crate::array::ArrayGeometry;
+use crate::compiler::{gemm_ref, GemmShape};
+use crate::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind};
+use crate::report::paper;
+use crate::util::Xoshiro256;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Subcommand.
+    pub command: String,
+    /// `--key=value` / `--flag` options.
+    pub opts: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let command = it
+            .next()
+            .ok_or_else(|| Error::Config("missing command; try `picaso help`".into()))?;
+        let mut opts = HashMap::new();
+        for tok in it {
+            let body = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("unexpected argument '{tok}'")))?;
+            match body.split_once('=') {
+                Some((k, v)) => opts.insert(k.to_string(), v.to_string()),
+                None => opts.insert(body.to_string(), "true".to_string()),
+            };
+        }
+        Ok(Args { command, opts })
+    }
+
+    /// Get an option parsed as `T`, with a default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| Error::Config(format!("bad value for --{key}: '{v}'"))),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        self.opts.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+picaso — PiCaSO PIM overlay study (FPL'23 reproduction)
+
+usage: picaso <command> [--key=value ...]
+
+paper artifacts:
+  table4 table5 table6 table7 table8 fig4 fig5 fig6 fig7   regenerate one
+  all                                                      regenerate all
+
+system:
+  gemm   --m=16 --k=64 --n=16 --width=8 --rows=8 --cols=4
+         [--arch=full|single|rf|op|spar2] [--booth-skip]
+  serve  --jobs=64 --workers=4 --rows=8 --cols=4
+  info   device database summary
+  help   this text
+";
+
+/// Run a parsed command, returning its textual output.
+pub fn run(args: &Args) -> Result<String> {
+    match args.command.as_str() {
+        "table4" => Ok(paper::table4()),
+        "table5" => Ok(paper::table5()),
+        "table6" => Ok(paper::table6()),
+        "table7" => Ok(paper::table7()),
+        "table8" => Ok(paper::table8()),
+        "fig4" => Ok(paper::fig4()),
+        "fig5" => Ok(paper::fig5()),
+        "fig6" => Ok(paper::fig6()),
+        "fig7" => Ok(paper::fig7()),
+        "all" => Ok([
+            paper::table4(),
+            paper::table5(),
+            paper::table6(),
+            paper::table7(),
+            paper::table8(),
+            paper::fig4(),
+            paper::fig5(),
+            paper::fig6(),
+            paper::fig7(),
+        ]
+        .join("\n")),
+        "gemm" => cmd_gemm(args),
+        "serve" => cmd_serve(args),
+        "info" => Ok(cmd_info()),
+        "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        other => Err(Error::Config(format!("unknown command '{other}'; try `picaso help`"))),
+    }
+}
+
+fn parse_arch(s: &str) -> Result<ArchKind> {
+    Ok(match s {
+        "full" => ArchKind::Overlay(PipelineConfig::FullPipe),
+        "single" => ArchKind::Overlay(PipelineConfig::SingleCycle),
+        "rf" => ArchKind::Overlay(PipelineConfig::RfPipe),
+        "op" => ArchKind::Overlay(PipelineConfig::OpPipe),
+        "spar2" => ArchKind::Spar2,
+        other => return Err(Error::Config(format!("unknown arch '{other}'"))),
+    })
+}
+
+fn cmd_gemm(args: &Args) -> Result<String> {
+    let m: usize = args.get("m", 16)?;
+    let k: usize = args.get("k", 64)?;
+    let n: usize = args.get("n", 16)?;
+    let width: u16 = args.get("width", 8)?;
+    let rows: usize = args.get("rows", 8)?;
+    let cols: usize = args.get("cols", 4)?;
+    let kind = parse_arch(&args.get::<String>("arch", "full".into())?)?;
+    let geom = ArrayGeometry::new(rows, cols);
+    let shape = GemmShape { m, k, n };
+    let mut rng = Xoshiro256::seeded(args.get("seed", 42u64)?);
+    let mut a = vec![0i64; m * k];
+    let mut b = vec![0i64; k * n];
+    rng.fill_signed(&mut a, width as u32);
+    rng.fill_signed(&mut b, width as u32);
+
+    let mut arr = crate::array::PimArray::with_kind(geom, kind);
+    arr.set_booth_skip(args.flag("booth-skip"));
+    let plan = crate::compiler::PimCompiler::new(geom).gemm(shape, width)?;
+    let t0 = std::time::Instant::now();
+    let (c, stats) = crate::compiler::execute_gemm(&mut arr, &plan, &a, &b)?;
+    let wall = t0.elapsed();
+    let ok = c == gemm_ref(shape, &a, &b);
+    let freq = crate::analytic::design_clock_hz(kind, crate::device::Device::by_id("U55").unwrap());
+    Ok(format!(
+        "gemm {m}x{k}x{n} w={width} on {} ({rows}x{cols} blocks, q={})\n\
+         verified: {}\n\
+         pim cycles: {} ({} at {})\n\
+         sim wall: {:?} ({} cycles/s)\n\
+         instructions: {} rounds: {} slices: {}\n",
+        kind.name(),
+        geom.row_lanes(),
+        if ok { "OK — matches software reference" } else { "FAILED" },
+        stats.cycles,
+        crate::util::fmt_ns(stats.time_ns(freq)),
+        crate::util::fmt_freq(freq),
+        wall,
+        crate::util::fmt_rate(stats.cycles as f64 / wall.as_secs_f64(), "cyc"),
+        stats.instructions,
+        plan.rounds,
+        plan.slices,
+    ))
+}
+
+fn cmd_serve(args: &Args) -> Result<String> {
+    let jobs: usize = args.get("jobs", 64)?;
+    let workers: usize = args.get("workers", 4)?;
+    let rows: usize = args.get("rows", 8)?;
+    let cols: usize = args.get("cols", 4)?;
+    let cfg = CoordinatorConfig {
+        workers,
+        geom: ArrayGeometry::new(rows, cols),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg)?;
+    let shape = GemmShape { m: 8, k: 64, n: 8 };
+    let mut rng = Xoshiro256::seeded(7);
+    let mut batch = Vec::new();
+    for id in 0..jobs as u64 {
+        let mut a = vec![0i64; shape.m * shape.k];
+        let mut b = vec![0i64; shape.k * shape.n];
+        rng.fill_signed(&mut a, 8);
+        rng.fill_signed(&mut b, 8);
+        batch.push(Job { id, kind: JobKind::Gemm { shape, width: 8, a, b } });
+    }
+    let (results, mut metrics) = coord.run_batch(batch)?;
+    let failures = results.iter().filter(|r| r.error.is_some()).count();
+    coord.shutdown();
+    Ok(format!(
+        "served {jobs} gemm jobs on {workers} workers: {}\nfailures: {failures}\n",
+        metrics.summary()
+    ))
+}
+
+fn cmd_info() -> String {
+    let mut out = String::from("device database:\n");
+    for d in crate::device::DEVICES {
+        out.push_str(&format!(
+            "  {:6} {:20} {:4} BRAM36  {:8} LUTs  max {}K PEs  BRAM Fmax {}\n",
+            d.id,
+            d.part,
+            d.bram36,
+            d.luts,
+            d.max_pes_k(),
+            crate::util::fmt_freq(d.bram_fmax_hz),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_line(line: &str) -> Result<String> {
+        let args = Args::parse(line.split_whitespace().map(String::from))?;
+        run(&args)
+    }
+
+    #[test]
+    fn parse_basic() {
+        let a = Args::parse(["gemm".into(), "--m=4".into(), "--booth-skip".into()]).unwrap();
+        assert_eq!(a.command, "gemm");
+        assert_eq!(a.get("m", 0usize).unwrap(), 4);
+        assert!(a.flag("booth-skip"));
+        assert_eq!(a.get("k", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Args::parse(std::iter::empty::<String>()).is_err());
+        assert!(Args::parse(["x".into(), "stray".into()]).is_err());
+        let a = Args::parse(["gemm".into(), "--m=abc".into()]).unwrap();
+        assert!(a.get("m", 0usize).is_err());
+    }
+
+    #[test]
+    fn paper_commands_render() {
+        for cmd in ["table4", "table5", "table6", "table7", "table8", "fig4", "fig5", "fig6", "fig7"] {
+            let out = run_line(cmd).unwrap();
+            assert!(out.len() > 100, "{cmd}");
+        }
+    }
+
+    #[test]
+    fn gemm_command_verifies() {
+        let out = run_line("gemm --m=4 --k=16 --n=4 --rows=2 --cols=1").unwrap();
+        assert!(out.contains("OK"), "{out}");
+        let out = run_line("gemm --m=2 --k=16 --n=2 --rows=2 --cols=1 --arch=spar2").unwrap();
+        assert!(out.contains("OK"), "{out}");
+    }
+
+    #[test]
+    fn serve_command_runs() {
+        let out = run_line("serve --jobs=6 --workers=2 --rows=2 --cols=1").unwrap();
+        assert!(out.contains("served 6"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_line("bogus").is_err());
+        assert!(run_line("help").unwrap().contains("usage"));
+    }
+}

@@ -1,0 +1,435 @@
+//! The PIM compiler: maps GEMM / MLP workloads onto the SIMD array as
+//! operand-level microcode.
+//!
+//! Register-file layout convention (wordlines, per PE):
+//!
+//! ```text
+//! 0        .. W        operand A (activations, corner-turned)
+//! 32       .. 32+W     operand B (weights, corner-turned)
+//! 64       .. 64+ACC   product / accumulator (2W bits, extended to ACC)
+//! 192      .. 192+ACC  partial-sum staging for multi-round dot products
+//! 960      ..          NEWS scratch (SPAR-2 mode only)
+//! ```
+//!
+//! which respects the overlay's `4N` scratchpad budget (paper §V) for
+//! operand widths up to 16 bits with room for the staging slot.
+
+use crate::arch::check_reduction_q;
+use crate::array::{ArrayGeometry, PimArray, RunStats};
+use crate::isa::{AluOp, BufId, FoldPattern, Instruction, Microcode, PoolOp, RfAddr};
+use crate::util::ceil_log2;
+use crate::{Error, Result};
+
+/// Wordline of operand A.
+pub const WL_A: RfAddr = RfAddr(0);
+/// Wordline of operand B.
+pub const WL_B: RfAddr = RfAddr(32);
+/// Wordline of the product/accumulator.
+pub const WL_ACC: RfAddr = RfAddr(64);
+/// Wordline of the partial-sum staging slot.
+pub const WL_PARTIAL: RfAddr = RfAddr(192);
+
+/// Host buffer ids used by compiled programs.
+pub const BUF_A: BufId = BufId(0);
+/// Weights buffer.
+pub const BUF_B: BufId = BufId(1);
+/// Output buffer.
+pub const BUF_OUT: BufId = BufId(2);
+
+/// Canned single-shot programs (quickstart / Fig 5 workloads).
+pub struct MacProgram;
+
+impl MacProgram {
+    /// The Fig 5 / quickstart workload: load A and B (one value per PE),
+    /// multiply element-wise, reduce every row, store the results.
+    /// `width` is the operand width; `q` the row width in PEs, which sizes
+    /// the exact-precision accumulator (`2·width + log2 q`).
+    pub fn elementwise_mul_then_accumulate(width: u16, q: usize) -> Microcode {
+        let acc = 2 * width + ceil_log2(q.max(2)) as u16;
+        let mut mc = Microcode::new("mul+accumulate", width);
+        mc.push(Instruction::Load { dst: WL_A, width, buf: BUF_A });
+        mc.push(Instruction::Load { dst: WL_B, width, buf: BUF_B });
+        mc.push(Instruction::Mult { dst: WL_ACC, mand: WL_A, mier: WL_B, width });
+        mc.push(Instruction::Extend { dst: WL_ACC, from: 2 * width, to: acc });
+        mc.push(Instruction::Accumulate { dst: WL_ACC, width: acc });
+        mc.push(Instruction::Store { src: WL_ACC, width: acc, buf: BUF_OUT });
+        mc
+    }
+
+    /// CNN-style max-pooling workload (paper §III-B / Fig 2(b)): load one
+    /// value per PE, then `levels` adjacent pooling folds — each halves
+    /// the active lanes, so after `levels` folds lane `i·2^levels` holds
+    /// the max of its window.
+    pub fn max_pool(width: u16, levels: u8) -> Microcode {
+        let mut mc = Microcode::new(format!("maxpool 2^{levels}:1"), width);
+        mc.push(Instruction::Load { dst: WL_A, width, buf: BUF_A });
+        for level in 1..=levels {
+            mc.push(Instruction::Pool {
+                op: PoolOp::Max,
+                pattern: FoldPattern::Adjacent,
+                level,
+                dst: WL_A,
+                width,
+            });
+        }
+        mc.push(Instruction::Store { src: WL_A, width, buf: BUF_OUT });
+        mc
+    }
+
+    /// Element-wise ADD of two loaded operands (ALU smoke workload).
+    pub fn elementwise_add(width: u16) -> Microcode {
+        let mut mc = Microcode::new("elementwise add", width);
+        mc.push(Instruction::Load { dst: WL_A, width, buf: BUF_A });
+        mc.push(Instruction::Load { dst: WL_B, width, buf: BUF_B });
+        mc.push(Instruction::Alu { op: AluOp::Add, dst: WL_ACC, x: WL_A, y: WL_B, width });
+        mc.push(Instruction::Store { src: WL_ACC, width, buf: BUF_OUT });
+        mc
+    }
+}
+
+/// GEMM problem shape: `C[m×n] = A[m×k] · B[k×n]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    /// Rows of A / C.
+    pub m: usize,
+    /// Inner (dot-product) dimension.
+    pub k: usize,
+    /// Columns of B / C.
+    pub n: usize,
+}
+
+/// A compiled GEMM: per-round microcode plus the data-staging schedule.
+#[derive(Debug, Clone)]
+pub struct GemmPlan {
+    /// Problem shape.
+    pub shape: GemmShape,
+    /// Operand width (bits).
+    pub width: u16,
+    /// Accumulator width: `2·width + ceil(log2 k)`, the exact-precision
+    /// dot-product width.
+    pub acc_width: u16,
+    /// Output elements computed per array execution (= array rows).
+    pub outputs_per_round: usize,
+    /// Dot-product slices per round (k folded into q lanes).
+    pub slices: usize,
+    /// Array executions needed.
+    pub rounds: usize,
+    /// The per-round instruction stream.
+    pub microcode: Microcode,
+}
+
+/// The microcode generator.
+#[derive(Debug, Clone, Copy)]
+pub struct PimCompiler {
+    geom: ArrayGeometry,
+}
+
+impl PimCompiler {
+    /// Compiler for a target array geometry.
+    pub fn new(geom: ArrayGeometry) -> Self {
+        Self { geom }
+    }
+
+    /// Target geometry.
+    pub fn geometry(&self) -> ArrayGeometry {
+        self.geom
+    }
+
+    /// Compile a GEMM. Each array row computes one output element per
+    /// round: the k-long dot product is split into `slices` of `q` lanes
+    /// (`q` = row width); each slice is multiplied and reduced, partial
+    /// sums accumulate in the staging slot.
+    pub fn gemm(&self, shape: GemmShape, width: u16) -> Result<GemmPlan> {
+        let q = self.geom.row_lanes();
+        check_reduction_q(q)?;
+        if shape.m == 0 || shape.k == 0 || shape.n == 0 {
+            return Err(Error::Compile("empty GEMM shape".into()));
+        }
+        if width == 0 || width > 16 {
+            return Err(Error::Compile(format!(
+                "operand width {width} outside 1..=16 (register budget)"
+            )));
+        }
+        let acc_width = (2 * width + ceil_log2(shape.k.max(2)) as u16).min(48);
+        let slices = shape.k.div_ceil(q);
+        let outputs = shape.m * shape.n;
+        let rounds = outputs.div_ceil(self.geom.rows);
+
+        let mut mc = Microcode::new(
+            format!("gemm {}x{}x{} w={width}", shape.m, shape.k, shape.n),
+            width,
+        );
+        for s in 0..slices {
+            // Each slice's operands arrive in per-slice buffers bound by
+            // the executor: A-slice in BUF_A+2s, B-slice in BUF_A+2s+1.
+            let buf_a = BufId(BUF_A.0 + 2 * s as u16);
+            let buf_b = BufId(BUF_A.0 + 2 * s as u16 + 1);
+            mc.push(Instruction::Load { dst: WL_A, width, buf: buf_a });
+            mc.push(Instruction::Load { dst: WL_B, width, buf: buf_b });
+            mc.push(Instruction::Mult { dst: WL_ACC, mand: WL_A, mier: WL_B, width });
+            mc.push(Instruction::Extend { dst: WL_ACC, from: 2 * width, to: acc_width });
+            mc.push(Instruction::Accumulate { dst: WL_ACC, width: acc_width });
+            if s == 0 {
+                // First slice: move the row sum into the staging slot.
+                mc.push(Instruction::Alu {
+                    op: AluOp::Cpx,
+                    dst: WL_PARTIAL,
+                    x: WL_ACC,
+                    y: WL_ACC,
+                    width: acc_width,
+                });
+            } else {
+                // Later slices: staging += row sum.
+                mc.push(Instruction::Alu {
+                    op: AluOp::Add,
+                    dst: WL_PARTIAL,
+                    x: WL_PARTIAL,
+                    y: WL_ACC,
+                    width: acc_width,
+                });
+            }
+        }
+        mc.push(Instruction::Store { src: WL_PARTIAL, width: acc_width, buf: BUF_OUT });
+        Ok(GemmPlan {
+            shape,
+            width,
+            acc_width,
+            outputs_per_round: self.geom.rows,
+            slices,
+            rounds,
+            microcode: mc,
+        })
+    }
+}
+
+/// Execute a compiled GEMM on an array: stages operand slices round by
+/// round, runs the microcode, and collects `C` (row-major `m×n`).
+///
+/// This is the data-movement half the coordinator performs on the real
+/// system; kept as a free function so examples and tests can drive it
+/// directly.
+pub fn execute_gemm(
+    arr: &mut PimArray,
+    plan: &GemmPlan,
+    a: &[i64],
+    b: &[i64],
+) -> Result<(Vec<i64>, RunStats)> {
+    let GemmShape { m, k, n } = plan.shape;
+    if a.len() != m * k || b.len() != k * n {
+        return Err(Error::Compile(format!(
+            "operand sizes {}/{} do not match shape {m}x{k}x{n}",
+            a.len(),
+            b.len()
+        )));
+    }
+    let q = arr.geometry().row_lanes();
+    let rows = arr.geometry().rows;
+    let mut c = vec![0i64; m * n];
+    let mut total = RunStats::default();
+    let outputs = m * n;
+    for round in 0..plan.rounds {
+        let first_out = round * rows;
+        let live = rows.min(outputs - first_out);
+        // Stage the operand slices for every live row.
+        for s in 0..plan.slices {
+            let mut a_stage = vec![0i64; rows * q];
+            let mut b_stage = vec![0i64; rows * q];
+            for r in 0..live {
+                let out_idx = first_out + r;
+                let (i, j) = (out_idx / n, out_idx % n);
+                for lane in 0..q {
+                    let kk = s * q + lane;
+                    if kk < k {
+                        a_stage[r * q + lane] = a[i * k + kk];
+                        b_stage[r * q + lane] = b[kk * n + j];
+                    }
+                }
+            }
+            arr.set_buffer(BufId(BUF_A.0 + 2 * s as u16), a_stage);
+            arr.set_buffer(BufId(BUF_A.0 + 2 * s as u16 + 1), b_stage);
+        }
+        let stats = arr.execute(&plan.microcode)?;
+        total.cycles += stats.cycles;
+        total.instructions += stats.instructions;
+        total.booth_active_steps += stats.booth_active_steps;
+        total.booth_total_steps += stats.booth_total_steps;
+        for r in 0..live {
+            c[first_out + r] = arr.row_result(r, WL_PARTIAL, plan.acc_width as u32);
+        }
+    }
+    Ok((c, total))
+}
+
+/// Reference GEMM used by tests and the golden cross-check.
+pub fn gemm_ref(shape: GemmShape, a: &[i64], b: &[i64]) -> Vec<i64> {
+    let GemmShape { m, k, n } = shape;
+    let mut c = vec![0i64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PipelineConfig;
+    use crate::util::Xoshiro256;
+
+    fn random_gemm(shape: GemmShape, width: u32, seed: u64) -> (Vec<i64>, Vec<i64>) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut a = vec![0i64; shape.m * shape.k];
+        let mut b = vec![0i64; shape.k * shape.n];
+        rng.fill_signed(&mut a, width);
+        rng.fill_signed(&mut b, width);
+        (a, b)
+    }
+
+    #[test]
+    fn gemm_single_slice_single_round() {
+        let geom = ArrayGeometry::new(4, 2); // 4 rows x 32 lanes
+        let shape = GemmShape { m: 2, k: 32, n: 2 };
+        let (a, b) = random_gemm(shape, 8, 7);
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        assert_eq!(plan.slices, 1);
+        assert_eq!(plan.rounds, 1);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (c, stats) = execute_gemm(&mut arr, &plan, &a, &b).unwrap();
+        assert_eq!(c, gemm_ref(shape, &a, &b));
+        assert!(stats.cycles > 0);
+    }
+
+    #[test]
+    fn gemm_multi_round() {
+        let geom = ArrayGeometry::new(2, 1); // 2 rows x 16 lanes
+        let shape = GemmShape { m: 3, k: 16, n: 3 }; // 9 outputs, 5 rounds
+        let (a, b) = random_gemm(shape, 8, 13);
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        assert_eq!(plan.rounds, 5);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (c, _) = execute_gemm(&mut arr, &plan, &a, &b).unwrap();
+        assert_eq!(c, gemm_ref(shape, &a, &b));
+    }
+
+    #[test]
+    fn gemm_multi_slice_long_k() {
+        let geom = ArrayGeometry::new(2, 1); // q = 16
+        let shape = GemmShape { m: 2, k: 50, n: 2 }; // 4 slices (50 -> 4x16)
+        let (a, b) = random_gemm(shape, 6, 99);
+        let plan = PimCompiler::new(geom).gemm(shape, 6).unwrap();
+        assert_eq!(plan.slices, 4);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (c, _) = execute_gemm(&mut arr, &plan, &a, &b).unwrap();
+        assert_eq!(c, gemm_ref(shape, &a, &b));
+    }
+
+    #[test]
+    fn gemm_exact_precision_no_overflow() {
+        // Worst-case int8 operands over a k=64 dot product exercise the
+        // widened accumulator (2*8 + 6 = 22 bits needed).
+        let geom = ArrayGeometry::new(1, 4); // q = 64
+        let shape = GemmShape { m: 1, k: 64, n: 1 };
+        let a = vec![-128i64; 64];
+        let b = vec![-128i64; 64];
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        assert!(plan.acc_width >= 22);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (c, _) = execute_gemm(&mut arr, &plan, &a, &b).unwrap();
+        assert_eq!(c[0], 64 * 128 * 128);
+    }
+
+    #[test]
+    fn spar2_array_computes_same_gemm() {
+        // The benchmark overlay computes identical results (slower).
+        let geom = ArrayGeometry::new(2, 2);
+        let shape = GemmShape { m: 2, k: 32, n: 2 };
+        let (a, b) = random_gemm(shape, 8, 5);
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        let mut picaso = PimArray::new(geom, PipelineConfig::FullPipe);
+        let mut spar2 = PimArray::with_kind(geom, crate::arch::ArchKind::Spar2);
+        let (c1, s1) = execute_gemm(&mut picaso, &plan, &a, &b).unwrap();
+        let (c2, s2) = execute_gemm(&mut spar2, &plan, &a, &b).unwrap();
+        assert_eq!(c1, c2);
+        assert_eq!(c1, gemm_ref(shape, &a, &b));
+        assert!(s2.cycles > s1.cycles, "SPAR-2 must be slower: {} vs {}", s2.cycles, s1.cycles);
+    }
+
+    #[test]
+    fn compile_errors() {
+        let c = PimCompiler::new(ArrayGeometry::new(1, 1));
+        assert!(c.gemm(GemmShape { m: 0, k: 4, n: 4 }, 8).is_err());
+        assert!(c.gemm(GemmShape { m: 1, k: 4, n: 4 }, 0).is_err());
+        assert!(c.gemm(GemmShape { m: 1, k: 4, n: 4 }, 17).is_err());
+        // Non-pow2 row lanes cannot reduce.
+        let c3 = PimCompiler::new(ArrayGeometry::new(1, 3));
+        assert!(c3.gemm(GemmShape { m: 1, k: 4, n: 1 }, 8).is_err());
+    }
+
+    #[test]
+    fn operand_size_validation() {
+        let geom = ArrayGeometry::new(1, 1);
+        let plan = PimCompiler::new(geom).gemm(GemmShape { m: 2, k: 8, n: 2 }, 8).unwrap();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let bad = execute_gemm(&mut arr, &plan, &[0; 3], &[0; 16]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn max_pool_program() {
+        // 16 lanes, 2 adjacent levels -> lanes 0,4,8,12 hold window maxima.
+        let geom = ArrayGeometry::new(1, 1);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let vals: Vec<i64> = vec![3, -7, 9, 1, -2, -8, -1, -3, 100, 5, 6, 7, 0, 0, -1, 2];
+        arr.set_buffer(BUF_A, vals.clone());
+        let mc = MacProgram::max_pool(8, 2);
+        arr.execute(&mc).unwrap();
+        let out = arr.buffer(BUF_OUT).unwrap();
+        for (i, chunk) in vals.chunks(4).enumerate() {
+            assert_eq!(out[i * 4], *chunk.iter().max().unwrap(), "window {i}");
+        }
+    }
+
+    #[test]
+    fn min_pool_instruction() {
+        let geom = ArrayGeometry::new(1, 1);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let vals: Vec<i64> = (0..16).map(|i| 10 - 3 * i).collect();
+        arr.set_buffer(BUF_A, vals.clone());
+        let mut mc = Microcode::new("minpool", 8);
+        mc.push(Instruction::Load { dst: WL_A, width: 8, buf: BUF_A });
+        for level in 1..=4 {
+            mc.push(Instruction::Pool {
+                op: PoolOp::Min,
+                pattern: FoldPattern::Halving,
+                level,
+                dst: WL_A,
+                width: 8,
+            });
+        }
+        let stats = arr.execute(&mc).unwrap();
+        assert_eq!(
+            arr.row_values(0, WL_A, 8)[0],
+            *vals.iter().min().unwrap()
+        );
+        // Each pool level charges two ALU passes + fill.
+        assert_eq!(stats.breakdown.reduce, 4 * (2 * 16 + 4));
+    }
+
+    #[test]
+    fn mac_program_runs() {
+        let geom = ArrayGeometry::new(1, 1);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        arr.set_buffer(BUF_A, (1..=16).collect());
+        arr.set_buffer(BUF_B, vec![2; 16]);
+        let mc = MacProgram::elementwise_mul_then_accumulate(8, 16);
+        arr.execute(&mc).unwrap();
+        let out = arr.buffer(BUF_OUT).unwrap();
+        assert_eq!(out[0], 2 * (1..=16i64).sum::<i64>());
+    }
+}

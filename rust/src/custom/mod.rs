@@ -1,0 +1,326 @@
+//! Behavioural models of the **custom** BRAM-PIM tiles the paper compares
+//! against: CCB \[2\], CoMeFa-D/-A \[1\], and the paper's fused A-Mod/D-Mod
+//! variants (§V-A, Fig 8).
+//!
+//! The custom tiles differ from the overlay in three architectural ways,
+//! all modeled here:
+//!
+//! 1. **Read-modify-write cycles**: the extended clock performs a read,
+//!    ALU op and write-back in one cycle, so an `N`-bit op takes `N`
+//!    cycles (vs the overlay's `2N`) — at the cost of the Table VIII
+//!    clock overheads.
+//! 2. **Standard shift-add multiply** (`N² + 3N − 2` cycles): CCB cannot
+//!    run Booth at all, CoMeFa only in OOOR mode; the common Neural-Cache
+//!    style algorithm is modeled (data-wise it is a plain signed multiply,
+//!    executed bit-serially).
+//! 3. **Copy-based reduction**: without an OpMux, summing across bitlines
+//!    requires copying operands between columns through the sense
+//!    amplifiers: `(2N + log2 q)·log2 q` cycles. The Mod designs instead
+//!    get PiCaSO's fold path: `(N + 2)·log2 q`, no scratchpad copies.
+//!
+//! The tile exposes the paper's 256×144 geometry (one PE per bitline,
+//! column-muxing factor 4 removed).
+
+use crate::arch::{ArchKind, CustomDesign, CycleModel};
+use crate::bram::{ColumnMemory, CUSTOM_PIM_GEOMETRY};
+use crate::isa::{fa_s, AluOp};
+use crate::{Error, Result};
+
+/// One custom PIM tile (a redesigned 36Kb BRAM).
+#[derive(Debug, Clone)]
+pub struct CustomTile {
+    design: CustomDesign,
+    model: CycleModel,
+    mem: ColumnMemory,
+    cycles: u64,
+}
+
+impl CustomTile {
+    /// A tile of the given design with the 256×144 array.
+    pub fn new(design: CustomDesign) -> Self {
+        Self {
+            design,
+            model: ArchKind::Custom(design).cycles(),
+            mem: ColumnMemory::new(
+                CUSTOM_PIM_GEOMETRY.rows as usize,
+                CUSTOM_PIM_GEOMETRY.bitlines as usize,
+            ),
+            cycles: 0,
+        }
+    }
+
+    /// The modeled design.
+    pub fn design(&self) -> CustomDesign {
+        self.design
+    }
+
+    /// Total cycles charged so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Reset the cycle counter.
+    pub fn reset_cycles(&mut self) {
+        self.cycles = 0;
+    }
+
+    /// PEs (bitlines) in the tile.
+    pub fn lanes(&self) -> usize {
+        self.mem.lanes()
+    }
+
+    /// Write one value per lane at wordlines `base..base+w`.
+    pub fn write_values(&mut self, base: usize, w: u32, vals: &[i64]) -> Result<()> {
+        if vals.len() > self.lanes() {
+            return Err(Error::Sim(format!(
+                "{} values exceed {} bitlines",
+                vals.len(),
+                self.lanes()
+            )));
+        }
+        self.check(base, w)?;
+        for (l, &v) in vals.iter().enumerate() {
+            self.mem.set_lane_value(l, base, w, v);
+        }
+        Ok(())
+    }
+
+    /// Read one value per lane.
+    pub fn read_values(&self, base: usize, w: u32) -> Vec<i64> {
+        (0..self.lanes())
+            .map(|l| self.mem.lane_value(l, base, w))
+            .collect()
+    }
+
+    fn check(&self, base: usize, w: u32) -> Result<()> {
+        if base + w as usize > self.mem.depth() {
+            return Err(Error::Sim(format!(
+                "wordlines {base}..+{w} exceed tile depth {} — the 256-row \
+                 register file is the custom designs' scarce resource (Fig 7)",
+                self.mem.depth()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Element-wise ALU op (`N` cycles: one read-modify-write per bit).
+    pub fn alu(&mut self, op: AluOp, dst: usize, x: usize, y: usize, w: u32) -> Result<()> {
+        self.check(dst, w)?;
+        self.check(x, w)?;
+        self.check(y, w)?;
+        for lane in 0..self.lanes() {
+            let mut carry = op.initial_carry();
+            for b in 0..w as usize {
+                let r = fa_s(op, self.mem.get(x + b, lane), self.mem.get(y + b, lane), carry);
+                self.mem.set(dst + b, lane, r.sum);
+                carry = r.carry;
+            }
+        }
+        self.cycles += self.model.alu(w);
+        Ok(())
+    }
+
+    /// Multiply (`dst[2w] = a[w] * b[w]`): the Neural-Cache shift-add
+    /// algorithm, `N² + 3N − 2` cycles (Table VIII footnote (a)).
+    ///
+    /// Data-wise this is an exact signed multiply executed bit-serially:
+    /// the partial-product loop conditionally adds the multiplicand at
+    /// each shift, with a final correction for the sign bit (two's
+    /// complement: weight of bit N−1 is −2^(N−1)).
+    pub fn mult(&mut self, dst: usize, a: usize, b: usize, w: u32) -> Result<()> {
+        self.check(dst, 2 * w)?;
+        self.check(a, w)?;
+        self.check(b, w)?;
+        let w = w as usize;
+        for lane in 0..self.lanes() {
+            // Clear accumulator.
+            for bb in 0..2 * w {
+                self.mem.set(dst + bb, lane, false);
+            }
+            let a_sign = self.mem.get(a + w - 1, lane);
+            for i in 0..w {
+                if !self.mem.get(b + i, lane) {
+                    continue;
+                }
+                let negate = i == w - 1; // sign bit has negative weight
+                let op = if negate { AluOp::Sub } else { AluOp::Add };
+                let mut carry = op.initial_carry();
+                for bb in 0..(2 * w - i) {
+                    let yb = if bb < w { self.mem.get(a + bb, lane) } else { a_sign };
+                    let xb = self.mem.get(dst + i + bb, lane);
+                    let r = fa_s(op, xb, yb, carry);
+                    self.mem.set(dst + i + bb, lane, r.sum);
+                    carry = r.carry;
+                }
+            }
+        }
+        self.cycles += self.model.mult(w as u32);
+        Ok(())
+    }
+
+    /// Reduce-sum `q` lanes (power of two) of the `w`-bit operand at
+    /// `dst`, leaving the total in lane 0.
+    ///
+    /// * Original designs: copy-based tree — each level copies the partner
+    ///   operand to the receiver's bitline scratchpad, then adds
+    ///   (`(2N + log2 q)·log2 q` cycles, and `scratch` wordlines burned —
+    ///   the Fig 7 memory-efficiency cost).
+    /// * Mod designs: OpMux folding, no copies (`(N + 2)·log2 q`).
+    pub fn accumulate(&mut self, dst: usize, w: u32, q: usize, scratch: usize) -> Result<()> {
+        crate::arch::check_reduction_q(q)?;
+        if q > self.lanes() {
+            return Err(Error::Sim(format!("q={q} exceeds {} bitlines", self.lanes())));
+        }
+        self.check(dst, w)?;
+        let copies_needed = !self.design.is_modified();
+        if copies_needed {
+            self.check(scratch, w)?;
+        }
+        let mut stride = 1usize;
+        while stride < q {
+            for lane in (0..q).step_by(2 * stride) {
+                let partner = lane + stride;
+                if copies_needed {
+                    // Copy partner operand to receiver's scratch wordlines
+                    // (simultaneous multi-wordline activation in CCB,
+                    // SA cycling in CoMeFa), then add.
+                    for b in 0..w as usize {
+                        let bit = self.mem.get(dst + b, partner);
+                        self.mem.set(scratch + b, lane, bit);
+                    }
+                    let mut carry = false;
+                    for b in 0..w as usize {
+                        let r = fa_s(
+                            AluOp::Add,
+                            self.mem.get(dst + b, lane),
+                            self.mem.get(scratch + b, lane),
+                            carry,
+                        );
+                        self.mem.set(dst + b, lane, r.sum);
+                        carry = r.carry;
+                    }
+                } else {
+                    // Mod designs: partner bits arrive through the OpMux.
+                    let mut carry = false;
+                    for b in 0..w as usize {
+                        let r = fa_s(
+                            AluOp::Add,
+                            self.mem.get(dst + b, lane),
+                            self.mem.get(dst + b, partner),
+                            carry,
+                        );
+                        self.mem.set(dst + b, lane, r.sum);
+                        carry = r.carry;
+                    }
+                }
+            }
+            stride *= 2;
+        }
+        self.cycles += self.model.accumulate(q, w);
+        Ok(())
+    }
+
+    /// The Fig 5 MAC workload on this tile: element-wise multiply of two
+    /// `w`-bit operand sets followed by accumulation of the first `q`
+    /// products. Returns (result, cycles charged for the group).
+    pub fn mac_group(&mut self, a: &[i64], b: &[i64], w: u32, q: usize) -> Result<(i64, u64)> {
+        let before = self.cycles;
+        self.write_values(0, w, a)?;
+        self.write_values(w as usize, w, b)?;
+        self.mult(2 * w as usize, 0, w as usize, w)?;
+        self.accumulate(2 * w as usize, 2 * w, q, (4 * w) as usize)?;
+        let sum = self.mem.lane_value(0, 2 * w as usize, 2 * w);
+        Ok((sum, self.cycles - before))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn mult_exhaustive_i6() {
+        let mut tile = CustomTile::new(CustomDesign::CoMeFaA);
+        for x in -32i64..32 {
+            for y in -32i64..32 {
+                tile.write_values(0, 6, &[x]).unwrap();
+                tile.write_values(8, 6, &[y]).unwrap();
+                tile.mult(16, 0, 8, 6).unwrap();
+                assert_eq!(tile.read_values(16, 12)[0], x * y, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn mult_cycles_match_table8a() {
+        let mut tile = CustomTile::new(CustomDesign::Ccb);
+        tile.write_values(0, 8, &[5]).unwrap();
+        tile.write_values(8, 8, &[7]).unwrap();
+        tile.mult(16, 0, 8, 8).unwrap();
+        assert_eq!(tile.cycles(), 86); // N²+3N-2 at N=8
+    }
+
+    #[test]
+    fn copy_based_accumulate_sums() {
+        let mut rng = Xoshiro256::seeded(4);
+        let mut tile = CustomTile::new(CustomDesign::CoMeFaA);
+        let mut vals = vec![0i64; 16];
+        rng.fill_signed(&mut vals, 8);
+        tile.write_values(0, 16, &vals).unwrap();
+        tile.accumulate(0, 16, 16, 64).unwrap();
+        assert_eq!(tile.read_values(0, 16)[0], vals.iter().sum::<i64>());
+        // Table VIII (c): (2N + log2 q) log2 q with N=16, q=16 -> 144.
+        assert_eq!(tile.cycles(), 144);
+    }
+
+    #[test]
+    fn mod_design_accumulates_without_scratch() {
+        let mut rng = Xoshiro256::seeded(9);
+        let mut tile = CustomTile::new(CustomDesign::AMod);
+        let mut vals = vec![0i64; 32];
+        rng.fill_signed(&mut vals, 8);
+        tile.write_values(0, 16, &vals).unwrap();
+        // scratch argument ignored for Mod designs — passing an
+        // out-of-range value proves no copies happen.
+        tile.accumulate(0, 16, 32, usize::MAX).unwrap();
+        assert_eq!(tile.read_values(0, 16)[0], vals.iter().sum::<i64>());
+        // Table VIII (e): (N + 2) log2 q = 18 * 5 = 90.
+        assert_eq!(tile.cycles(), 90);
+    }
+
+    #[test]
+    fn mac_group_matches_dot_product() {
+        let mut rng = Xoshiro256::seeded(44);
+        for design in CustomDesign::ALL {
+            let mut tile = CustomTile::new(design);
+            let mut a = vec![0i64; 16];
+            let mut b = vec![0i64; 16];
+            rng.fill_signed(&mut a, 8);
+            rng.fill_signed(&mut b, 8);
+            let (sum, cycles) = tile.mac_group(&a, &b, 8, 16).unwrap();
+            let expect: i64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(sum, expect, "{design:?}");
+            // Cycle charge = mult + accumulate per the design's model.
+            let m = ArchKind::Custom(design).cycles();
+            assert_eq!(cycles, m.mult(8) + m.accumulate(16, 16), "{design:?}");
+        }
+    }
+
+    #[test]
+    fn tile_depth_is_the_scarce_resource() {
+        let mut tile = CustomTile::new(CustomDesign::Ccb);
+        // 256-deep register file: a write at wordline 250 of width 16 fails.
+        assert!(tile.write_values(250, 16, &[1]).is_err());
+        assert!(tile.write_values(240, 16, &[1]).is_ok());
+    }
+
+    #[test]
+    fn amod_beats_comefa_on_accumulation_cycles() {
+        // §V-A: 2x faster accumulation.
+        let a = ArchKind::Custom(CustomDesign::CoMeFaA).cycles().accumulate(16, 8);
+        let amod = ArchKind::Custom(CustomDesign::AMod).cycles().accumulate(16, 8);
+        assert_eq!(a, 80);
+        assert_eq!(amod, 40);
+    }
+}

@@ -1,0 +1,310 @@
+//! FPGA device database — paper Table VII plus the two Table IV/VI parts.
+//!
+//! Resource counts come from the AMD/Xilinx data sheets; the `ratio`
+//! (LUT-to-BRAM) and `max_pe` columns reproduce Table VII exactly and are
+//! asserted by tests. BRAM Fmax values are the data-sheet maxima the paper
+//! quotes in §IV-A (543.77 MHz for the -2 Virtex-7, 737 MHz for the -2
+//! UltraScale+), which PiCaSO-F matches by construction.
+
+use crate::arch::geometry::PES_PER_BRAM36;
+
+/// FPGA family, which fixes slice geometry and BRAM timing class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceFamily {
+    /// Xilinx 7-series Virtex (28 nm): 4 LUT6 + 8 FF per slice.
+    Virtex7,
+    /// Xilinx UltraScale+ (16 nm): 8 LUT6 + 16 FF per CLB ("slice").
+    UltraScalePlus,
+}
+
+impl DeviceFamily {
+    /// LUTs per slice/CLB.
+    pub fn luts_per_slice(self) -> u32 {
+        match self {
+            DeviceFamily::Virtex7 => 4,
+            DeviceFamily::UltraScalePlus => 8,
+        }
+    }
+
+    /// Flip-flops per slice/CLB.
+    pub fn ffs_per_slice(self) -> u32 {
+        match self {
+            DeviceFamily::Virtex7 => 8,
+            DeviceFamily::UltraScalePlus => 16,
+        }
+    }
+
+    /// Short family tag used in Table VII ("V7" / "US+").
+    pub fn tag(self) -> &'static str {
+        match self {
+            DeviceFamily::Virtex7 => "V7",
+            DeviceFamily::UltraScalePlus => "US+",
+        }
+    }
+}
+
+/// One FPGA part.
+#[derive(Debug, Clone)]
+pub struct Device {
+    /// Full part number, e.g. `xc7vx485tffg-2`.
+    pub part: &'static str,
+    /// Table VII short ID (`V7-a` … `US-d`), or a descriptive ID for the
+    /// Table IV/VI parts.
+    pub id: &'static str,
+    /// Device family.
+    pub family: DeviceFamily,
+    /// Speed grade (-1/-2/-3).
+    pub speed: i8,
+    /// 36Kb BRAM count.
+    pub bram36: u32,
+    /// 6-input LUT count.
+    pub luts: u32,
+    /// Flip-flop count.
+    pub ffs: u32,
+    /// Slice (V7) or CLB (US+) count.
+    pub slices: u32,
+    /// Data-sheet maximum BRAM clock (Hz) at this speed grade.
+    pub bram_fmax_hz: f64,
+}
+
+impl Device {
+    /// LUT-to-BRAM ratio (Table VII `Ratio` column), rounded to integer.
+    pub fn lut_bram_ratio(&self) -> u32 {
+        (self.luts as f64 / self.bram36 as f64).round() as u32
+    }
+
+    /// Maximum overlay PEs if every BRAM is used (Table VII `Max PE#`):
+    /// 32 PEs per 36Kb BRAM (two 16-PE blocks on the two 18Kb halves).
+    pub fn max_pes(&self) -> u32 {
+        self.bram36 * PES_PER_BRAM36 as u32
+    }
+
+    /// Table VII prints PE capacity in units of 1000 ("24K"); reproducing
+    /// the paper's column requires the 1000-based truncation (e.g. US-b:
+    /// 67,584 PEs → "67K").
+    pub fn max_pes_k(&self) -> u32 {
+        self.max_pes() / 1000
+    }
+
+    /// Look up a device by Table VII ID or part prefix.
+    pub fn by_id(id: &str) -> Option<&'static Device> {
+        DEVICES
+            .iter()
+            .find(|d| d.id.eq_ignore_ascii_case(id) || d.part.starts_with(id))
+    }
+}
+
+/// Virtex-7 -2 BRAM Fmax quoted by the paper (§IV-A).
+pub const V7_SPEED2_BRAM_FMAX: f64 = 543.77e6;
+/// Virtex-7 -3 (faster grade, data sheet).
+pub const V7_SPEED3_BRAM_FMAX: f64 = 601.0e6;
+/// UltraScale+ -2 BRAM Fmax quoted by the paper (§IV-A, Alveo U55).
+pub const USP_SPEED2_BRAM_FMAX: f64 = 737.0e6;
+/// UltraScale+ -3 (data sheet).
+pub const USP_SPEED3_BRAM_FMAX: f64 = 825.0e6;
+
+/// The device database: the 8 Table VII parts plus the two parts used for
+/// Table IV / Table VI (xc7vx485t and the Alveo U55's xcu55c).
+pub static DEVICES: &[Device] = &[
+    Device {
+        part: "xc7vx330tffg-2",
+        id: "V7-a",
+        family: DeviceFamily::Virtex7,
+        speed: 2,
+        bram36: 750,
+        luts: 204_000,
+        ffs: 408_000,
+        slices: 51_000,
+        bram_fmax_hz: V7_SPEED2_BRAM_FMAX,
+    },
+    Device {
+        part: "xc7vx485tffg-2",
+        id: "V7-b",
+        family: DeviceFamily::Virtex7,
+        speed: 2,
+        bram36: 1_030,
+        luts: 303_600,
+        ffs: 607_200,
+        slices: 75_900,
+        bram_fmax_hz: V7_SPEED2_BRAM_FMAX,
+    },
+    Device {
+        part: "xc7v2000tfhg-2",
+        id: "V7-c",
+        family: DeviceFamily::Virtex7,
+        speed: 2,
+        bram36: 1_292,
+        luts: 1_221_600,
+        ffs: 2_443_200,
+        slices: 305_400,
+        bram_fmax_hz: V7_SPEED2_BRAM_FMAX,
+    },
+    Device {
+        part: "xc7vx1140tflg-2",
+        id: "V7-d",
+        family: DeviceFamily::Virtex7,
+        speed: 2,
+        bram36: 1_880,
+        luts: 712_000,
+        ffs: 1_424_000,
+        slices: 178_000,
+        bram_fmax_hz: V7_SPEED2_BRAM_FMAX,
+    },
+    Device {
+        part: "xcvu3p-ffvc-3",
+        id: "US-a",
+        family: DeviceFamily::UltraScalePlus,
+        speed: 3,
+        bram36: 720,
+        luts: 394_080,
+        ffs: 788_160,
+        slices: 49_260,
+        bram_fmax_hz: USP_SPEED3_BRAM_FMAX,
+    },
+    Device {
+        part: "xcvu23p-vsva-3",
+        id: "US-b",
+        family: DeviceFamily::UltraScalePlus,
+        speed: 3,
+        bram36: 2_112,
+        luts: 1_030_656,
+        ffs: 2_061_312,
+        slices: 128_832,
+        bram_fmax_hz: USP_SPEED3_BRAM_FMAX,
+    },
+    Device {
+        part: "xcvu19p-fsvb-2",
+        id: "US-c",
+        family: DeviceFamily::UltraScalePlus,
+        speed: 2,
+        bram36: 2_160,
+        luts: 4_085_760,
+        ffs: 8_171_520,
+        slices: 510_720,
+        bram_fmax_hz: USP_SPEED2_BRAM_FMAX,
+    },
+    Device {
+        part: "xcvu29p-figd-3",
+        id: "US-d",
+        family: DeviceFamily::UltraScalePlus,
+        speed: 3,
+        bram36: 2_688,
+        luts: 1_728_384,
+        ffs: 3_456_768,
+        slices: 216_048,
+        bram_fmax_hz: USP_SPEED3_BRAM_FMAX,
+    },
+    // Table IV / Table VI parts:
+    Device {
+        part: "xc7vx485tffg-2",
+        id: "V7",
+        family: DeviceFamily::Virtex7,
+        speed: 2,
+        bram36: 1_030,
+        luts: 303_600,
+        ffs: 607_200,
+        slices: 75_900,
+        bram_fmax_hz: V7_SPEED2_BRAM_FMAX,
+    },
+    Device {
+        part: "xcu55c-fsvh2892-2L",
+        id: "U55",
+        family: DeviceFamily::UltraScalePlus,
+        speed: 2,
+        bram36: 2_016,
+        luts: 1_303_680,
+        ffs: 2_607_360,
+        slices: 162_960,
+        bram_fmax_hz: USP_SPEED2_BRAM_FMAX,
+    },
+];
+
+/// The Table VII scalability-study devices, in paper order.
+pub fn table7_devices() -> Vec<&'static Device> {
+    ["V7-a", "V7-b", "V7-c", "V7-d", "US-a", "US-b", "US-c", "US-d"]
+        .iter()
+        .map(|id| Device::by_id(id).expect("table7 device"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_ratios_match_paper() {
+        // Paper Table VII "Ratio" column.
+        let expect = [
+            ("V7-a", 272),
+            ("V7-b", 295),
+            ("V7-c", 946),
+            ("V7-d", 379),
+            ("US-a", 547),
+            ("US-b", 488),
+            ("US-c", 1892),
+            ("US-d", 643),
+        ];
+        for (id, ratio) in expect {
+            let d = Device::by_id(id).unwrap();
+            assert_eq!(d.lut_bram_ratio(), ratio, "{id}");
+        }
+    }
+
+    #[test]
+    fn table7_max_pe_counts_match_paper() {
+        // Paper Table VII "Max PE#" column (in K = 1024 units).
+        let expect = [
+            ("V7-a", 24, 750),
+            ("V7-b", 32, 1030),
+            ("V7-c", 41, 1292),
+            ("V7-d", 60, 1880),
+            ("US-a", 23, 720),
+            ("US-b", 67, 2112),
+            ("US-c", 69, 2160),
+            ("US-d", 86, 2688),
+        ];
+        for (id, k, bram) in expect {
+            let d = Device::by_id(id).unwrap();
+            assert_eq!(d.bram36, bram, "{id} bram count");
+            assert_eq!(d.max_pes_k(), k, "{id} max PE (K)");
+        }
+    }
+
+    #[test]
+    fn paper_quoted_fmax() {
+        // §IV-A: data sheets list 543.77 MHz (xc7vx485-2) and 737 MHz
+        // (xcu55c -2) as the maximum BRAM clock frequencies.
+        assert!((Device::by_id("V7").unwrap().bram_fmax_hz - 543.77e6).abs() < 1.0);
+        assert!((Device::by_id("U55").unwrap().bram_fmax_hz - 737.0e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn u55_fits_64k_pes() {
+        // Table VI: PiCaSO-F reaches a 64K-PE array at 100% BRAM on U55.
+        let u55 = Device::by_id("U55").unwrap();
+        assert_eq!(u55.max_pes(), 64_512);
+        assert_eq!(u55.max_pes_k(), 64); // printed as "64K" in Table VI
+        // And the Virtex-7 485 fits 33K (1000-based) = 32,960 PEs.
+        let v7 = Device::by_id("V7").unwrap();
+        assert_eq!(v7.max_pes(), 32_960);
+    }
+
+    #[test]
+    fn family_slice_geometry() {
+        assert_eq!(DeviceFamily::Virtex7.luts_per_slice(), 4);
+        assert_eq!(DeviceFamily::UltraScalePlus.luts_per_slice(), 8);
+        for d in DEVICES {
+            // Slice counts must be consistent with LUT counts.
+            let expect = d.luts / d.family.luts_per_slice();
+            let err = (d.slices as f64 - expect as f64).abs() / expect as f64;
+            assert!(err < 0.02, "{}: slices {} vs {}", d.id, d.slices, expect);
+        }
+    }
+
+    #[test]
+    fn lookup_by_part_prefix() {
+        assert_eq!(Device::by_id("xc7vx330t").unwrap().id, "V7-a");
+        assert_eq!(Device::by_id("xcu55c").unwrap().id, "U55");
+        assert!(Device::by_id("xc7z020").is_none());
+    }
+}

@@ -1,0 +1,189 @@
+//! The Full Adder/Subtractor (FA/S) bit-serial ALU — paper Table I.
+//!
+//! Every arithmetic operation in the architecture decomposes into per-bit
+//! invocations of this four-op datapath. `SUB` is implemented the usual
+//! bit-serial way: `X - Y = X + !Y + 1`, realized by complementing `Y` and
+//! seeding the carry chain with 1 (borrow logic).
+
+/// FA/S op-codes (paper Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    /// `SUM = X + Y` — full adder.
+    Add,
+    /// `SUM = X - Y` — full adder with borrow logic.
+    Sub,
+    /// `SUM = X` — copy operand X unmodified.
+    Cpx,
+    /// `SUM = Y` — copy operand Y unmodified.
+    Cpy,
+}
+
+impl AluOp {
+    /// All op-codes, in Table I order.
+    pub const ALL: [AluOp; 4] = [AluOp::Add, AluOp::Sub, AluOp::Cpx, AluOp::Cpy];
+
+    /// The carry-in value that must seed the carry register before the
+    /// first bit of a multi-bit operation (1 for SUB's borrow logic).
+    #[inline]
+    pub fn initial_carry(self) -> bool {
+        matches!(self, AluOp::Sub)
+    }
+
+    /// Mnemonic used by the assembler.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            AluOp::Add => "ADD",
+            AluOp::Sub => "SUB",
+            AluOp::Cpx => "CPX",
+            AluOp::Cpy => "CPY",
+        }
+    }
+
+    /// Parse an assembler mnemonic (case-insensitive).
+    pub fn from_mnemonic(s: &str) -> Option<AluOp> {
+        match s.to_ascii_uppercase().as_str() {
+            "ADD" => Some(AluOp::Add),
+            "SUB" => Some(AluOp::Sub),
+            "CPX" => Some(AluOp::Cpx),
+            "CPY" => Some(AluOp::Cpy),
+            _ => None,
+        }
+    }
+}
+
+/// Result of one FA/S bit step: the sum bit and the next carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitResult {
+    /// Sum output written back to the register file.
+    pub sum: bool,
+    /// Carry (or borrow-complement) fed to the next bit position.
+    pub carry: bool,
+}
+
+/// One bit-serial FA/S step (paper Fig 1(b)).
+///
+/// For `Add`/`Sub` the returned carry continues the chain; for the copy
+/// ops the carry register is passed through unchanged so an interleaved
+/// copy does not corrupt an in-flight accumulation.
+#[inline]
+pub fn fa_s(op: AluOp, x: bool, y: bool, carry: bool) -> BitResult {
+    match op {
+        AluOp::Add => {
+            let sum = x ^ y ^ carry;
+            let carry = (x & y) | (carry & (x ^ y));
+            BitResult { sum, carry }
+        }
+        AluOp::Sub => {
+            // X + !Y with the chain seeded by initial_carry() == 1.
+            let ny = !y;
+            let sum = x ^ ny ^ carry;
+            let carry = (x & ny) | (carry & (x ^ ny));
+            BitResult { sum, carry }
+        }
+        AluOp::Cpx => BitResult { sum: x, carry },
+        AluOp::Cpy => BitResult { sum: y, carry },
+    }
+}
+
+/// Convenience: run a full `width`-bit serial operation over two operands
+/// held as little-endian bit slices, returning the result bits. This is the
+/// single-PE reference the simulator's vectorized paths are tested against.
+pub fn fa_s_word(op: AluOp, x: &[bool], y: &[bool]) -> Vec<bool> {
+    assert_eq!(x.len(), y.len());
+    let mut carry = op.initial_carry();
+    let mut out = Vec::with_capacity(x.len());
+    for (&xb, &yb) in x.iter().zip(y) {
+        let r = fa_s(op, xb, yb, carry);
+        out.push(r.sum);
+        carry = r.carry;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn to_bits(v: i64, w: u32) -> Vec<bool> {
+        (0..w).map(|b| (v >> b) & 1 == 1).collect()
+    }
+
+    fn from_bits(bits: &[bool]) -> i64 {
+        let mut raw: u64 = 0;
+        for (i, &b) in bits.iter().enumerate() {
+            raw |= (b as u64) << i;
+        }
+        crate::bits::sign_extend(raw, bits.len() as u32)
+    }
+
+    #[test]
+    fn table1_add_semantics() {
+        // Exhaustive over 8-bit signed operands' wrap-around behaviour.
+        for x in -128i64..=127 {
+            for y in [-128i64, -77, -1, 0, 1, 42, 127] {
+                let r = fa_s_word(AluOp::Add, &to_bits(x, 8), &to_bits(y, 8));
+                let expect = ((x + y) as u64 & 0xFF) as i64;
+                let expect = crate::bits::sign_extend(expect as u64, 8);
+                assert_eq!(from_bits(&r), expect, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn table1_sub_semantics() {
+        for x in -128i64..=127 {
+            for y in [-128i64, -5, -1, 0, 1, 99, 127] {
+                let r = fa_s_word(AluOp::Sub, &to_bits(x, 8), &to_bits(y, 8));
+                let expect = crate::bits::sign_extend((x - y) as u64 & 0xFF, 8);
+                assert_eq!(from_bits(&r), expect, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn table1_copy_semantics() {
+        for v in [-128i64, -3, 0, 7, 127] {
+            let x = to_bits(v, 8);
+            let y = to_bits(-v - 1, 8);
+            assert_eq!(fa_s_word(AluOp::Cpx, &x, &y), x);
+            assert_eq!(fa_s_word(AluOp::Cpy, &x, &y), y);
+        }
+    }
+
+    #[test]
+    fn copies_preserve_carry_register() {
+        let r = fa_s(AluOp::Cpx, true, false, true);
+        assert!(r.carry, "CPX must pass the carry through");
+        let r = fa_s(AluOp::Cpy, false, true, false);
+        assert!(!r.carry);
+    }
+
+    #[test]
+    fn single_bit_truth_table() {
+        // Full-adder truth table.
+        let cases = [
+            // x, y, cin, sum, cout
+            (false, false, false, false, false),
+            (true, false, false, true, false),
+            (false, true, false, true, false),
+            (true, true, false, false, true),
+            (false, false, true, true, false),
+            (true, false, true, false, true),
+            (false, true, true, false, true),
+            (true, true, true, true, true),
+        ];
+        for (x, y, c, s, co) in cases {
+            let r = fa_s(AluOp::Add, x, y, c);
+            assert_eq!((r.sum, r.carry), (s, co), "x={x} y={y} c={c}");
+        }
+    }
+
+    #[test]
+    fn mnemonic_roundtrip() {
+        for op in AluOp::ALL {
+            assert_eq!(AluOp::from_mnemonic(op.mnemonic()), Some(op));
+        }
+        assert_eq!(AluOp::from_mnemonic("add"), Some(AluOp::Add));
+        assert_eq!(AluOp::from_mnemonic("XOR"), None);
+    }
+}

@@ -1,0 +1,308 @@
+//! Textual assembler / disassembler for PIM microcode.
+//!
+//! One instruction per line; `#` starts a comment. The syntax mirrors the
+//! operand-level ISA:
+//!
+//! ```text
+//! # elementwise ops:       OP   dst, x, y, w=WIDTH
+//! ADD   r16, r0, r8, w=8
+//! # Booth multiply:        MULT dst, mand, mier, w=WIDTH
+//! MULT  r32, r0, r8, w=8
+//! # zero-copy fold:        FOLD.H|FOLD.A level, dst, w=WIDTH
+//! FOLD.H 1, r32, w=16
+//! # network reduction:     NETRED level, dst, w=WIDTH
+//! NETRED 0, r32, w=16
+//! # accumulate macro:      ACCUM dst, w=WIDTH
+//! ACCUM r32, w=16
+//! # DMA:                   LOAD dst, w=WIDTH, bufN / STORE src, w=WIDTH, bufN
+//! LOAD  r0, w=8, buf0
+//! STORE r32, w=16, buf1
+//! NOP
+//! ```
+
+use super::{AluOp, BufId, FoldPattern, Instruction, Microcode, PoolOp, RfAddr};
+
+/// Render one instruction in assembler syntax.
+pub fn format_instr(i: &Instruction) -> String {
+    match *i {
+        Instruction::Alu { op, dst, x, y, width } => {
+            format!("{:<6} {dst}, {x}, {y}, w={width}", op.mnemonic())
+        }
+        Instruction::Mult { dst, mand, mier, width } => {
+            format!("MULT   {dst}, {mand}, {mier}, w={width}")
+        }
+        Instruction::Fold { pattern, level, dst, width } => {
+            let p = match pattern {
+                FoldPattern::Halving => "H",
+                FoldPattern::Adjacent => "A",
+            };
+            format!("FOLD.{p} {level}, {dst}, w={width}")
+        }
+        Instruction::NetReduce { level, dst, width } => {
+            format!("NETRED {level}, {dst}, w={width}")
+        }
+        Instruction::Pool { op, pattern, level, dst, width } => {
+            let p = match pattern {
+                FoldPattern::Halving => "H",
+                FoldPattern::Adjacent => "A",
+            };
+            format!("POOL{}.{p} {level}, {dst}, w={width}", op.name())
+        }
+        Instruction::Accumulate { dst, width } => format!("ACCUM  {dst}, w={width}"),
+        Instruction::Extend { dst, from, to } => format!("EXT    {dst}, w={from}, w={to}"),
+        Instruction::Load { dst, width, buf } => format!("LOAD   {dst}, w={width}, {buf}"),
+        Instruction::Store { src, width, buf } => format!("STORE  {src}, w={width}, {buf}"),
+        Instruction::Nop => "NOP".into(),
+    }
+}
+
+/// Render a whole program.
+pub fn format_program(mc: &Microcode) -> String {
+    let mut out = format!("# {} (N={})\n", mc.label, mc.width);
+    for i in &mc.instrs {
+        out.push_str(&format_instr(i));
+        out.push('\n');
+    }
+    out
+}
+
+/// Assembler parse error with line context.
+#[derive(Debug, thiserror::Error)]
+#[error("asm line {line}: {msg}")]
+pub struct AsmError {
+    /// 1-based source line.
+    pub line: usize,
+    /// Description of the problem.
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> AsmError {
+    AsmError { line, msg: msg.into() }
+}
+
+fn parse_reg(tok: &str, line: usize) -> Result<RfAddr, AsmError> {
+    tok.strip_prefix('r')
+        .and_then(|n| n.parse::<u16>().ok())
+        .map(RfAddr)
+        .ok_or_else(|| err(line, format!("bad register '{tok}'")))
+}
+
+fn parse_width(tok: &str, line: usize) -> Result<u16, AsmError> {
+    tok.strip_prefix("w=")
+        .and_then(|n| n.parse::<u16>().ok())
+        .filter(|&w| w >= 1)
+        .ok_or_else(|| err(line, format!("bad width '{tok}'")))
+}
+
+fn parse_buf(tok: &str, line: usize) -> Result<BufId, AsmError> {
+    tok.strip_prefix("buf")
+        .and_then(|n| n.parse::<u16>().ok())
+        .map(BufId)
+        .ok_or_else(|| err(line, format!("bad buffer '{tok}'")))
+}
+
+/// Parse one instruction line (comments/blank lines yield `None`).
+pub fn parse_line(src: &str, line: usize) -> Result<Option<Instruction>, AsmError> {
+    let code = src.split('#').next().unwrap_or("").trim();
+    if code.is_empty() {
+        return Ok(None);
+    }
+    let (mnemonic, rest) = match code.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r),
+        None => (code, ""),
+    };
+    let toks: Vec<&str> = rest
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .collect();
+    let expect = |n: usize| -> Result<(), AsmError> {
+        if toks.len() != n {
+            Err(err(line, format!("{mnemonic} expects {n} operands, got {}", toks.len())))
+        } else {
+            Ok(())
+        }
+    };
+    let upper = mnemonic.to_ascii_uppercase();
+    let instr = match upper.as_str() {
+        "NOP" => {
+            expect(0)?;
+            Instruction::Nop
+        }
+        "ADD" | "SUB" | "CPX" | "CPY" => {
+            expect(4)?;
+            Instruction::Alu {
+                op: AluOp::from_mnemonic(&upper).unwrap(),
+                dst: parse_reg(toks[0], line)?,
+                x: parse_reg(toks[1], line)?,
+                y: parse_reg(toks[2], line)?,
+                width: parse_width(toks[3], line)?,
+            }
+        }
+        "MULT" => {
+            expect(4)?;
+            Instruction::Mult {
+                dst: parse_reg(toks[0], line)?,
+                mand: parse_reg(toks[1], line)?,
+                mier: parse_reg(toks[2], line)?,
+                width: parse_width(toks[3], line)?,
+            }
+        }
+        "FOLD.H" | "FOLD.A" => {
+            expect(3)?;
+            Instruction::Fold {
+                pattern: if upper.ends_with('H') {
+                    FoldPattern::Halving
+                } else {
+                    FoldPattern::Adjacent
+                },
+                level: toks[0]
+                    .parse::<u8>()
+                    .map_err(|_| err(line, format!("bad level '{}'", toks[0])))?,
+                dst: parse_reg(toks[1], line)?,
+                width: parse_width(toks[2], line)?,
+            }
+        }
+        "POOLMAX.H" | "POOLMAX.A" | "POOLMIN.H" | "POOLMIN.A" => {
+            expect(3)?;
+            Instruction::Pool {
+                op: if upper.starts_with("POOLMAX") { PoolOp::Max } else { PoolOp::Min },
+                pattern: if upper.ends_with('H') {
+                    FoldPattern::Halving
+                } else {
+                    FoldPattern::Adjacent
+                },
+                level: toks[0]
+                    .parse::<u8>()
+                    .map_err(|_| err(line, format!("bad level '{}'", toks[0])))?,
+                dst: parse_reg(toks[1], line)?,
+                width: parse_width(toks[2], line)?,
+            }
+        }
+        "NETRED" => {
+            expect(3)?;
+            Instruction::NetReduce {
+                level: toks[0]
+                    .parse::<u8>()
+                    .map_err(|_| err(line, format!("bad level '{}'", toks[0])))?,
+                dst: parse_reg(toks[1], line)?,
+                width: parse_width(toks[2], line)?,
+            }
+        }
+        "ACCUM" => {
+            expect(2)?;
+            Instruction::Accumulate {
+                dst: parse_reg(toks[0], line)?,
+                width: parse_width(toks[1], line)?,
+            }
+        }
+        "EXT" => {
+            expect(3)?;
+            Instruction::Extend {
+                dst: parse_reg(toks[0], line)?,
+                from: parse_width(toks[1], line)?,
+                to: parse_width(toks[2], line)?,
+            }
+        }
+        "LOAD" => {
+            expect(3)?;
+            Instruction::Load {
+                dst: parse_reg(toks[0], line)?,
+                width: parse_width(toks[1], line)?,
+                buf: parse_buf(toks[2], line)?,
+            }
+        }
+        "STORE" => {
+            expect(3)?;
+            Instruction::Store {
+                src: parse_reg(toks[0], line)?,
+                width: parse_width(toks[1], line)?,
+                buf: parse_buf(toks[2], line)?,
+            }
+        }
+        other => return Err(err(line, format!("unknown mnemonic '{other}'"))),
+    };
+    Ok(Some(instr))
+}
+
+/// Parse a whole program. The label is taken from a leading `# label`
+/// comment if present.
+pub fn parse_program(src: &str, width: u16) -> Result<Microcode, AsmError> {
+    let mut mc = Microcode::new("asm", width);
+    if let Some(first) = src.lines().next() {
+        if let Some(label) = first.trim().strip_prefix('#') {
+            mc.label = label.trim().to_string();
+        }
+    }
+    for (idx, line) in src.lines().enumerate() {
+        if let Some(i) = parse_line(line, idx + 1)? {
+            mc.push(i);
+        }
+    }
+    Ok(mc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_program() -> Microcode {
+        let mut mc = Microcode::new("sample", 8);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) });
+        mc.push(Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) });
+        mc.push(Instruction::Mult { dst: RfAddr(32), mand: RfAddr(0), mier: RfAddr(8), width: 8 });
+        mc.push(Instruction::Fold {
+            pattern: FoldPattern::Halving,
+            level: 1,
+            dst: RfAddr(32),
+            width: 16,
+        });
+        mc.push(Instruction::NetReduce { level: 0, dst: RfAddr(32), width: 16 });
+        mc.push(Instruction::Accumulate { dst: RfAddr(32), width: 16 });
+        mc.push(Instruction::Alu {
+            op: AluOp::Add,
+            dst: RfAddr(48),
+            x: RfAddr(32),
+            y: RfAddr(0),
+            width: 16,
+        });
+        mc.push(Instruction::Store { src: RfAddr(48), width: 16, buf: BufId(2) });
+        mc.push(Instruction::Nop);
+        mc
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let mc = sample_program();
+        let text = format_program(&mc);
+        let parsed = parse_program(&text, 8).unwrap();
+        assert_eq!(parsed.instrs, mc.instrs);
+        assert_eq!(parsed.label, "sample (N=8)");
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let src = "\n# comment only\n  NOP  # trailing\n\nADD r1, r2, r3, w=4\n";
+        let mc = parse_program(src, 4).unwrap();
+        assert_eq!(mc.len(), 2);
+    }
+
+    #[test]
+    fn error_reporting() {
+        let e = parse_program("BOGUS r1\n", 8).unwrap_err();
+        assert!(e.to_string().contains("line 1"));
+        let e = parse_program("ADD r1, r2, w=4\n", 8).unwrap_err();
+        assert!(e.to_string().contains("expects 4"));
+        let e = parse_program("ADD r1, r2, r3, w=zero\n", 8).unwrap_err();
+        assert!(e.to_string().contains("bad width"));
+        let e = parse_program("LOAD r0, w=8, nope\n", 8).unwrap_err();
+        assert!(e.to_string().contains("bad buffer"));
+    }
+
+    #[test]
+    fn case_insensitive_mnemonics() {
+        let mc = parse_program("add r1, r2, r3, w=4\nnop\n", 4).unwrap();
+        assert_eq!(mc.len(), 2);
+        assert!(matches!(mc.instrs[0], Instruction::Alu { op: AluOp::Add, .. }));
+    }
+}

@@ -1,0 +1,184 @@
+//! The Op-Encoder configurations for Booth's radix-2 multiplication —
+//! paper Table II.
+//!
+//! The Op-Encoder sits between the block controller and the FA/S ALU
+//! (Fig 1(b)) and provides an *abstract interface*: the controller either
+//! requests an explicit ALU op (configurations `0xx`) or hands control to
+//! the Booth recoder (configurations `1xx`), which inspects the multiplier
+//! bit pair `{Y, X}` = (current bit, previous bit) and selects
+//! ADD / SUB / NOP per radix-2 Booth recoding.
+
+use super::alu::AluOp;
+
+/// Op-Encoder configuration word (paper Table II, `Conf` column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoothConf {
+    /// `000` — request an explicit ADD.
+    ReqAdd,
+    /// `001` — select operand X (explicit CPX).
+    SelX,
+    /// `010` — select operand Y (explicit CPY).
+    SelY,
+    /// `011` — request an explicit SUB.
+    ReqSub,
+    /// `1xx` — Booth mode: the ALU op is derived from the multiplier bit
+    /// pair `{Y, X}`.
+    Booth,
+}
+
+impl BoothConf {
+    /// Encode the three-bit configuration field.
+    pub fn bits(self) -> u8 {
+        match self {
+            BoothConf::ReqAdd => 0b000,
+            BoothConf::SelX => 0b001,
+            BoothConf::SelY => 0b010,
+            BoothConf::ReqSub => 0b011,
+            BoothConf::Booth => 0b100,
+        }
+    }
+
+    /// Decode a three-bit configuration field (any `1xx` is Booth mode).
+    pub fn from_bits(b: u8) -> Option<BoothConf> {
+        match b & 0b111 {
+            0b000 => Some(BoothConf::ReqAdd),
+            0b001 => Some(BoothConf::SelX),
+            0b010 => Some(BoothConf::SelY),
+            0b011 => Some(BoothConf::ReqSub),
+            _ if b & 0b100 != 0 => Some(BoothConf::Booth),
+            _ => None,
+        }
+    }
+}
+
+/// Radix-2 Booth recoding of the multiplier bit pair (paper Table II,
+/// rows `1xx`): `{Y, X}` = (bit *i*, bit *i−1*) of the multiplier.
+///
+/// | YX | op  | meaning |
+/// |----|-----|---------|
+/// | 00 | CPX | NOP     |
+/// | 01 | ADD | +multiplicand |
+/// | 10 | SUB | −multiplicand |
+/// | 11 | CPX | NOP     |
+#[inline]
+pub fn booth_recode(y: bool, x: bool) -> AluOp {
+    match (y, x) {
+        (false, false) | (true, true) => AluOp::Cpx,
+        (false, true) => AluOp::Add,
+        (true, false) => AluOp::Sub,
+    }
+}
+
+/// Full Op-Encoder function (paper Table II): configuration plus the
+/// multiplier bit pair to the ALU op-code driven into the FA/S module.
+#[inline]
+pub fn booth_encode(conf: BoothConf, y: bool, x: bool) -> AluOp {
+    match conf {
+        BoothConf::ReqAdd => AluOp::Add,
+        BoothConf::SelX => AluOp::Cpx,
+        BoothConf::SelY => AluOp::Cpy,
+        BoothConf::ReqSub => AluOp::Sub,
+        BoothConf::Booth => booth_recode(y, x),
+    }
+}
+
+/// Count the non-NOP Booth steps for a given multiplier value — used by the
+/// NOP-skipping latency model (paper §V: "half of the intermediate steps
+/// are NOPs on average").
+pub fn booth_active_steps(multiplier: i64, width: u32) -> u32 {
+    let raw = crate::bits::truncate(multiplier, width);
+    let mut active = 0;
+    let mut prev = false;
+    for i in 0..width {
+        let cur = (raw >> i) & 1 == 1;
+        if booth_recode(cur, prev) != AluOp::Cpx {
+            active += 1;
+        }
+        prev = cur;
+    }
+    active
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_explicit_rows() {
+        // Rows 000..011: the YX pair is don't-care.
+        for (y, x) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(booth_encode(BoothConf::ReqAdd, y, x), AluOp::Add);
+            assert_eq!(booth_encode(BoothConf::SelX, y, x), AluOp::Cpx);
+            assert_eq!(booth_encode(BoothConf::SelY, y, x), AluOp::Cpy);
+            assert_eq!(booth_encode(BoothConf::ReqSub, y, x), AluOp::Sub);
+        }
+    }
+
+    #[test]
+    fn table2_booth_rows() {
+        assert_eq!(booth_encode(BoothConf::Booth, false, false), AluOp::Cpx); // NOP
+        assert_eq!(booth_encode(BoothConf::Booth, false, true), AluOp::Add); // +Y
+        assert_eq!(booth_encode(BoothConf::Booth, true, false), AluOp::Sub); // -Y
+        assert_eq!(booth_encode(BoothConf::Booth, true, true), AluOp::Cpx); // NOP
+    }
+
+    #[test]
+    fn conf_bits_roundtrip() {
+        for conf in [
+            BoothConf::ReqAdd,
+            BoothConf::SelX,
+            BoothConf::SelY,
+            BoothConf::ReqSub,
+            BoothConf::Booth,
+        ] {
+            assert_eq!(BoothConf::from_bits(conf.bits()), Some(conf));
+        }
+        // Any 1xx pattern decodes to Booth mode.
+        assert_eq!(BoothConf::from_bits(0b101), Some(BoothConf::Booth));
+        assert_eq!(BoothConf::from_bits(0b111), Some(BoothConf::Booth));
+    }
+
+    #[test]
+    fn booth_recoding_reconstructs_value() {
+        // Radix-2 Booth digits d_i in {-1, 0, +1} with d_i derived from
+        // (b_i, b_{i-1}) must satisfy sum(d_i * 2^i) == value for any
+        // width-bit two's-complement value.
+        for v in -128i64..=127 {
+            let raw = crate::bits::truncate(v, 8);
+            let mut acc: i64 = 0;
+            let mut prev = false;
+            for i in 0..8 {
+                let cur = (raw >> i) & 1 == 1;
+                let digit = match booth_recode(cur, prev) {
+                    AluOp::Add => 1i64,
+                    AluOp::Sub => -1i64,
+                    _ => 0i64,
+                };
+                acc += digit << i;
+                prev = cur;
+            }
+            assert_eq!(acc, v, "booth digits must resum to {v}");
+        }
+    }
+
+    #[test]
+    fn active_step_counts() {
+        // 0 has no transitions -> all NOPs.
+        assert_eq!(booth_active_steps(0, 8), 0);
+        // -1 = 0b1111_1111: single 0->1 transition at bit 0.
+        assert_eq!(booth_active_steps(-1, 8), 1);
+        // 0b0101_0101 alternates every bit: all 8 steps active.
+        assert_eq!(booth_active_steps(0x55, 8), 8);
+    }
+
+    #[test]
+    fn average_nop_fraction_near_half() {
+        // Paper §V: on random data about half the Booth steps are NOPs.
+        let mut total = 0u64;
+        for v in -128i64..=127 {
+            total += booth_active_steps(v, 8) as u64;
+        }
+        let avg = total as f64 / 256.0 / 8.0;
+        assert!((avg - 0.5).abs() < 0.05, "avg active fraction {avg}");
+    }
+}

@@ -1,0 +1,216 @@
+//! Operand-level PIM microcode.
+//!
+//! The compiler emits one [`Instruction`] per multi-bit operation; the
+//! array simulator expands each into its bit-serial cycle sequence (the
+//! per-cycle control words of Fig 1) and charges the architecture's exact
+//! cycle cost (see [`crate::arch::CycleModel`]). This is the granularity
+//! at which the paper itself reasons (Table V latencies are per
+//! operand-level operation).
+
+use super::{AluOp, FoldPattern};
+use std::fmt;
+
+/// Pooling reduction operator (paper §III-B: the CPX/CPY op-codes exist
+/// to support min/max pooling and other filter operations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolOp {
+    /// Keep the larger operand (max pooling).
+    Max,
+    /// Keep the smaller operand (min pooling).
+    Min,
+}
+
+impl PoolOp {
+    /// Assembler suffix.
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolOp::Max => "MAX",
+            PoolOp::Min => "MIN",
+        }
+    }
+}
+
+/// A register-file wordline address: the base bit-plane of an operand in
+/// every PE's bit-serial register file (BRAM column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RfAddr(pub u16);
+
+impl fmt::Display for RfAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// Identifier of a host-side staging buffer used by `LOAD`/`STORE`
+/// (the corner-turning DMA path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufId(pub u16);
+
+impl fmt::Display for BufId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "buf{}", self.0)
+    }
+}
+
+/// One operand-level PIM instruction, SIMD-broadcast to every active PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instruction {
+    /// `dst[0..width] = op(x, y)` element-wise in every lane
+    /// (OpMux config `A-OP-B`).
+    Alu {
+        op: AluOp,
+        dst: RfAddr,
+        x: RfAddr,
+        y: RfAddr,
+        width: u16,
+    },
+    /// Booth radix-2 multiply: `dst[0..2*width] = mand * mier`
+    /// (initialized via `0-OP-B`, then `width` Booth steps).
+    Mult {
+        dst: RfAddr,
+        mand: RfAddr,
+        mier: RfAddr,
+        width: u16,
+    },
+    /// One zero-copy fold level inside each PE block
+    /// (OpMux config `A-FOLD-level`): receiver lanes do
+    /// `dst += value at partner lane`.
+    Fold {
+        pattern: FoldPattern,
+        level: u8,
+        dst: RfAddr,
+        width: u16,
+    },
+    /// One reduction level across PE blocks via the binary-hopping
+    /// network (OpMux config `A-OP-NET`).
+    NetReduce { level: u8, dst: RfAddr, width: u16 },
+    /// Full row accumulation macro: all in-block folds followed by all
+    /// network levels; the paper reports this as a single operation
+    /// (Table V "Accumulation").
+    Accumulate { dst: RfAddr, width: u16 },
+    /// One pooling fold level (paper §III-B + Fig 2(b)): receiver lanes
+    /// keep `max`/`min` of themselves and their fold partner — a SUB
+    /// compare followed by a CPX/CPY select through the OpMux.
+    Pool {
+        op: PoolOp,
+        pattern: FoldPattern,
+        level: u8,
+        dst: RfAddr,
+        width: u16,
+    },
+    /// Sign-extend an operand in place from `from` bits to `to` bits in
+    /// every lane (a CPX of the sign wordline into `to − from` planes) —
+    /// required before accumulating 2N-bit products at full precision.
+    Extend { dst: RfAddr, from: u16, to: u16 },
+    /// Corner-turn a host buffer into the register files.
+    Load { dst: RfAddr, width: u16, buf: BufId },
+    /// Corner-turn register-file contents back to a host buffer.
+    Store { src: RfAddr, width: u16, buf: BufId },
+    /// No operation (one cycle).
+    Nop,
+}
+
+impl Instruction {
+    /// Destination wordlines written by this instruction, as
+    /// `(base, width)` — used by the compiler's register allocator to
+    /// check scratchpad overlap.
+    pub fn dst_range(&self) -> Option<(RfAddr, u16)> {
+        match *self {
+            Instruction::Alu { dst, width, .. } => Some((dst, width)),
+            Instruction::Mult { dst, width, .. } => Some((dst, width * 2)),
+            Instruction::Fold { dst, width, .. } => Some((dst, width)),
+            Instruction::Pool { dst, width, .. } => Some((dst, width)),
+            Instruction::NetReduce { dst, width, .. } => Some((dst, width)),
+            Instruction::Accumulate { dst, width } => Some((dst, width)),
+            Instruction::Extend { dst, to, .. } => Some((dst, to)),
+            Instruction::Load { dst, width, .. } => Some((dst, width)),
+            Instruction::Store { .. } | Instruction::Nop => None,
+        }
+    }
+}
+
+/// A compiled microcode program plus the metadata the coordinator needs to
+/// dispatch it.
+#[derive(Debug, Clone, Default)]
+pub struct Microcode {
+    /// Instruction stream, executed in order (SIMD: no branches — the
+    /// paper's architecture has a single sequencer per array).
+    pub instrs: Vec<Instruction>,
+    /// Operand width `N` the program was compiled for.
+    pub width: u16,
+    /// Human-readable label (e.g. `"gemm 16x64x16 int8"`).
+    pub label: String,
+}
+
+impl Microcode {
+    /// Empty program with a label.
+    pub fn new(label: impl Into<String>, width: u16) -> Self {
+        Self {
+            instrs: Vec::new(),
+            width,
+            label: label.into(),
+        }
+    }
+
+    /// Append an instruction.
+    pub fn push(&mut self, i: Instruction) {
+        self.instrs.push(i);
+    }
+
+    /// Number of instructions.
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// True when the program is empty.
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Highest register-file wordline touched — must fit the BRAM depth.
+    pub fn max_wordline(&self) -> u16 {
+        self.instrs
+            .iter()
+            .filter_map(|i| i.dst_range())
+            .map(|(b, w)| b.0 + w)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dst_ranges() {
+        let i = Instruction::Mult {
+            dst: RfAddr(32),
+            mand: RfAddr(0),
+            mier: RfAddr(8),
+            width: 8,
+        };
+        assert_eq!(i.dst_range(), Some((RfAddr(32), 16)));
+        assert_eq!(Instruction::Nop.dst_range(), None);
+    }
+
+    #[test]
+    fn microcode_max_wordline() {
+        let mut mc = Microcode::new("t", 8);
+        mc.push(Instruction::Alu {
+            op: AluOp::Add,
+            dst: RfAddr(100),
+            x: RfAddr(0),
+            y: RfAddr(8),
+            width: 8,
+        });
+        mc.push(Instruction::Mult {
+            dst: RfAddr(200),
+            mand: RfAddr(0),
+            mier: RfAddr(8),
+            width: 8,
+        });
+        assert_eq!(mc.max_wordline(), 216);
+        assert_eq!(mc.len(), 2);
+    }
+}

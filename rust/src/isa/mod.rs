@@ -1,0 +1,29 @@
+//! The PIM instruction set architecture.
+//!
+//! This module is the executable form of the paper's Tables I–III:
+//!
+//! * [`AluOp`] / [`fa_s`] — the Full Adder/Subtractor op-codes (Table I),
+//!   the single-bit datapath every bit-serial operation is built from.
+//! * [`BoothConf`] / [`booth_encode`] — the Op-Encoder configurations for
+//!   Booth's radix-2 multiplication (Table II).
+//! * [`OpMuxConf`] / [`FoldPattern`] — the Operand-Multiplexer
+//!   configurations including the zero-copy folding patterns (Table III,
+//!   Fig 2).
+//! * [`NetRole`] / [`net_role`] — transmitter/receiver/pass-through role
+//!   assignment in the binary-hopping reduction network (Fig 3).
+//! * [`Instruction`] / [`Microcode`] — the operand-level microcode the
+//!   [`crate::compiler`] emits and the [`crate::array`] simulator executes,
+//!   with a textual assembler round-trip in [`asm`].
+
+mod alu;
+pub mod asm;
+mod booth;
+mod instr;
+mod net;
+mod opmux;
+
+pub use alu::{fa_s, fa_s_word, AluOp, BitResult};
+pub use booth::{booth_active_steps, booth_encode, booth_recode, BoothConf};
+pub use instr::{BufId, Instruction, Microcode, PoolOp, RfAddr};
+pub use net::{levels_for, net_pairs, net_role, NetRole};
+pub use opmux::{fold_partner, fold_receivers, FoldPattern, OpMuxConf};

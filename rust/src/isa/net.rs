@@ -1,0 +1,149 @@
+//! Role assignment in the binary-hopping reduction network — paper Fig 3.
+//!
+//! At reduction level `L`, nodes are grouped in spans of `2^(L+1)`:
+//! the node at group offset 0 is the **receiver**, the node at offset
+//! `2^L` is the **transmitter**, and any node between them is a
+//! **pass-through** hop. Bits stream from the transmitter through the
+//! P-nodes into the receiver's ALU, where they are serially added —
+//! overlapping transfer with computation.
+
+/// Network node role at a given reduction level (paper Fig 3(b)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetRole {
+    /// Receives the partner's operand stream into its ALU.
+    Receiver,
+    /// Streams its operand out toward the receiver.
+    Transmitter,
+    /// Forwards the stream one hop (adds wire latency, no compute).
+    PassThrough,
+    /// Not involved at this level.
+    Idle,
+}
+
+/// Role of `node` at reduction `level` in a row of `n` nodes.
+pub fn net_role(node: usize, level: u8, n: usize) -> NetRole {
+    let span = 1usize << (level + 1);
+    let half = span >> 1;
+    let offset = node % span;
+    if offset == 0 {
+        // A receiver must actually have a live transmitter in range.
+        if node + half < n {
+            NetRole::Receiver
+        } else {
+            NetRole::Idle
+        }
+    } else if offset == half {
+        NetRole::Transmitter
+    } else if offset < half {
+        // Between receiver and transmitter: forwards the stream.
+        NetRole::PassThrough
+    } else {
+        NetRole::Idle
+    }
+}
+
+/// `(receiver, transmitter)` node pairs at `level` for a row of `n` nodes,
+/// together with the hop count between them (`2^level` wire hops, of which
+/// `2^level - 1` traverse pass-through nodes).
+pub fn net_pairs(level: u8, n: usize) -> Vec<(usize, usize, usize)> {
+    let half = 1usize << level;
+    let span = half << 1;
+    (0..n)
+        .step_by(span)
+        .filter(|r| r + half < n)
+        .map(|r| (r, r + half, half))
+        .collect()
+}
+
+/// Number of reduction levels needed to fold `n` nodes into node 0.
+pub fn levels_for(n: usize) -> u8 {
+    crate::util::ceil_log2(n.max(1)) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3b_level0() {
+        // Level 0: even nodes are receivers, right neighbours transmit.
+        let n = 8;
+        for node in 0..n {
+            let role = net_role(node, 0, n);
+            if node % 2 == 0 {
+                assert_eq!(role, NetRole::Receiver, "node {node}");
+            } else {
+                assert_eq!(role, NetRole::Transmitter, "node {node}");
+            }
+        }
+        assert_eq!(
+            net_pairs(0, 8),
+            vec![(0, 1, 1), (2, 3, 1), (4, 5, 1), (6, 7, 1)]
+        );
+    }
+
+    #[test]
+    fn fig3b_level1() {
+        // Level 1: "the middle node of every 3 consecutive nodes acts as a
+        // pass-through, effectively connecting its neighbours" — node 1
+        // passes 2 -> 0, node 5 passes 6 -> 4.
+        let n = 8;
+        assert_eq!(net_role(0, 1, n), NetRole::Receiver);
+        assert_eq!(net_role(1, 1, n), NetRole::PassThrough);
+        assert_eq!(net_role(2, 1, n), NetRole::Transmitter);
+        assert_eq!(net_role(3, 1, n), NetRole::Idle);
+        assert_eq!(net_role(4, 1, n), NetRole::Receiver);
+        assert_eq!(net_role(5, 1, n), NetRole::PassThrough);
+        assert_eq!(net_role(6, 1, n), NetRole::Transmitter);
+        assert_eq!(net_role(7, 1, n), NetRole::Idle);
+        assert_eq!(net_pairs(1, 8), vec![(0, 2, 2), (4, 6, 2)]);
+    }
+
+    #[test]
+    fn fig3b_level2() {
+        // Level 2 connects node 4 to node 0 through 3 pass-through hops.
+        let n = 8;
+        assert_eq!(net_role(0, 2, n), NetRole::Receiver);
+        for node in 1..4 {
+            assert_eq!(net_role(node, 2, n), NetRole::PassThrough, "node {node}");
+        }
+        assert_eq!(net_role(4, 2, n), NetRole::Transmitter);
+        for node in 5..8 {
+            assert_eq!(net_role(node, 2, n), NetRole::Idle, "node {node}");
+        }
+        assert_eq!(net_pairs(2, 8), vec![(0, 4, 4)]);
+    }
+
+    #[test]
+    fn all_levels_reduce_to_node0() {
+        for n in [1usize, 2, 3, 5, 8, 16, 21, 64] {
+            let mut vals: Vec<i64> = (0..n as i64).map(|v| v * 3 - 7).collect();
+            for level in 0..levels_for(n) {
+                for (r, t, _) in net_pairs(level, n) {
+                    vals[r] += vals[t];
+                }
+            }
+            assert_eq!(vals[0], (0..n as i64).map(|v| v * 3 - 7).sum::<i64>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn receiver_without_partner_is_idle() {
+        // Node 0 in a 1-node row has nothing to receive at any level.
+        assert_eq!(net_role(0, 0, 1), NetRole::Idle);
+        // Node 4 at level 2 in a 5-node row transmits to 0; node 0 receives.
+        assert_eq!(net_role(0, 2, 5), NetRole::Receiver);
+        assert_eq!(net_role(4, 2, 5), NetRole::Transmitter);
+        // But in a 4-node row level 2's receiver has no transmitter.
+        assert_eq!(net_role(0, 2, 4), NetRole::Idle);
+    }
+
+    #[test]
+    fn levels_for_counts() {
+        assert_eq!(levels_for(1), 0);
+        assert_eq!(levels_for(2), 1);
+        assert_eq!(levels_for(8), 3);
+        assert_eq!(levels_for(9), 4);
+        assert_eq!(levels_for(128 / 16), 3); // Table V: J = log2(q/16) = 3
+    }
+}

@@ -1,0 +1,188 @@
+//! The Operand Multiplexer (OpMux) configurations — paper Table III and
+//! Fig 2.
+//!
+//! The OpMux is PiCaSO's key architectural addition over streaming
+//! bit-serial designs: it lets the Y input of the ALU be (a) the second
+//! operand port, (b) a *folded* view of the first operand — the lane
+//! `16/2^level` positions away — enabling zero-copy log-depth reduction
+//! inside a PE block, or (c) the network stream from another block.
+
+/// OpMux configuration (paper Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpMuxConf {
+    /// `A-OP-B`: X = A, Y = B — standard element-wise operations.
+    AOpB,
+    /// `A-FOLD-x`: X = A, Y = A folded at `level` ∈ 1..=4 (Fig 2).
+    AFold(u8),
+    /// `A-OP-NET`: X = A, Y = network stream.
+    AOpNet,
+    /// `0-OP-B`: X = 0, Y = B — first iteration of MULT.
+    ZeroOpB,
+}
+
+impl OpMuxConf {
+    /// Assembler name (Table III `Config Code` column).
+    pub fn name(self) -> String {
+        match self {
+            OpMuxConf::AOpB => "A-OP-B".into(),
+            OpMuxConf::AFold(l) => format!("A-FOLD-{l}"),
+            OpMuxConf::AOpNet => "A-OP-NET".into(),
+            OpMuxConf::ZeroOpB => "0-OP-B".into(),
+        }
+    }
+
+    /// Parse a Table III config code.
+    pub fn parse(s: &str) -> Option<OpMuxConf> {
+        match s.to_ascii_uppercase().as_str() {
+            "A-OP-B" => Some(OpMuxConf::AOpB),
+            "A-OP-NET" => Some(OpMuxConf::AOpNet),
+            "0-OP-B" => Some(OpMuxConf::ZeroOpB),
+            other => other
+                .strip_prefix("A-FOLD-")
+                .and_then(|l| l.parse::<u8>().ok())
+                .filter(|l| (1..=4).contains(l))
+                .map(OpMuxConf::AFold),
+        }
+    }
+}
+
+/// Folding pattern shape (paper Fig 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FoldPattern {
+    /// Fig 2(a): fold the second half onto the first — PE *i* receives
+    /// PE *i + span/2* (A-FOLD-x of Table III). After fold-1..fold-log2(n)
+    /// the row sum sits in PE 0.
+    Halving,
+    /// Fig 2(b): adjacent pairing — PE *2i* receives PE *2i+1*. Useful in
+    /// CNNs where each PE needs access to its neighbour.
+    Adjacent,
+}
+
+/// For a block of `span` PE columns, the partner lane whose value lane
+/// `lane` receives at fold `level` (1-based), or `None` if `lane` is not a
+/// receiver at that level.
+///
+/// * `Halving` level ℓ: receivers are lanes `< span/2^ℓ`; partner is
+///   `lane + span/2^ℓ` (the "second half / quarter / half-quarter" of
+///   Table III).
+/// * `Adjacent` level ℓ: receivers are lanes with the low ℓ bits zero;
+///   partner is `lane + 2^(ℓ-1)`.
+pub fn fold_partner(pattern: FoldPattern, span: usize, level: u8, lane: usize) -> Option<usize> {
+    debug_assert!(span.is_power_of_two() && level >= 1);
+    let l = level as u32;
+    match pattern {
+        FoldPattern::Halving => {
+            let half = span >> l;
+            if half == 0 {
+                return None;
+            }
+            (lane < half).then_some(lane + half)
+        }
+        FoldPattern::Adjacent => {
+            let step = 1usize << (l - 1);
+            if step * 2 > span {
+                return None;
+            }
+            (lane % (step * 2) == 0).then_some(lane + step)
+        }
+    }
+}
+
+/// All `(receiver, transmitter)` lane pairs for one fold level.
+pub fn fold_receivers(
+    pattern: FoldPattern,
+    span: usize,
+    level: u8,
+) -> impl Iterator<Item = (usize, usize)> {
+    (0..span).filter_map(move |lane| fold_partner(pattern, span, level, lane).map(|p| (lane, p)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2a_halving_8_columns() {
+        // Paper Fig 2(a): after fold-1 on 8 columns, PE 0..3 hold 0&4, 1&5,
+        // 2&6, 3&7.
+        let pairs: Vec<_> = fold_receivers(FoldPattern::Halving, 8, 1).collect();
+        assert_eq!(pairs, vec![(0, 4), (1, 5), (2, 6), (3, 7)]);
+        let pairs: Vec<_> = fold_receivers(FoldPattern::Halving, 8, 2).collect();
+        assert_eq!(pairs, vec![(0, 2), (1, 3)]);
+        let pairs: Vec<_> = fold_receivers(FoldPattern::Halving, 8, 3).collect();
+        assert_eq!(pairs, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn fig2b_adjacent_8_columns() {
+        // Paper Fig 2(b): after fold-1, PE 0,2,4,6 hold 0&1, 2&3, 4&5, 6&7.
+        let pairs: Vec<_> = fold_receivers(FoldPattern::Adjacent, 8, 1).collect();
+        assert_eq!(pairs, vec![(0, 1), (2, 3), (4, 5), (6, 7)]);
+        let pairs: Vec<_> = fold_receivers(FoldPattern::Adjacent, 8, 2).collect();
+        assert_eq!(pairs, vec![(0, 2), (4, 6)]);
+        let pairs: Vec<_> = fold_receivers(FoldPattern::Adjacent, 8, 3).collect();
+        assert_eq!(pairs, vec![(0, 4)]);
+    }
+
+    #[test]
+    fn table3_fold_codes_on_16_columns() {
+        // A-FOLD-1: Y = A[H2] (second half) -> lane 0 pairs with lane 8.
+        assert_eq!(fold_partner(FoldPattern::Halving, 16, 1, 0), Some(8));
+        // A-FOLD-2: Y = A[Q2] (second quarter) -> lane 0 pairs with lane 4.
+        assert_eq!(fold_partner(FoldPattern::Halving, 16, 2, 0), Some(4));
+        // A-FOLD-3: Y = A[HQ2] -> lane 0 pairs with lane 2.
+        assert_eq!(fold_partner(FoldPattern::Halving, 16, 3, 0), Some(2));
+        // A-FOLD-4: Y = A[HHQ2] -> lane 0 pairs with lane 1.
+        assert_eq!(fold_partner(FoldPattern::Halving, 16, 4, 0), Some(1));
+        // Non-receivers get None.
+        assert_eq!(fold_partner(FoldPattern::Halving, 16, 1, 8), None);
+        assert_eq!(fold_partner(FoldPattern::Halving, 16, 4, 1), None);
+    }
+
+    #[test]
+    fn folds_cover_every_lane_exactly_once() {
+        // Across all levels of the halving pattern, every lane except 0 is
+        // consumed exactly once as a transmitter — the zero-copy property.
+        for span in [2usize, 4, 8, 16, 32] {
+            let levels = span.trailing_zeros() as u8;
+            let mut consumed = vec![0u32; span];
+            for level in 1..=levels {
+                for (_, t) in fold_receivers(FoldPattern::Halving, span, level) {
+                    consumed[t] += 1;
+                }
+            }
+            assert_eq!(consumed[0], 0);
+            assert!(consumed[1..].iter().all(|&c| c == 1), "span={span}");
+        }
+    }
+
+    #[test]
+    fn adjacent_folds_also_reduce_to_lane0() {
+        for span in [2usize, 4, 8, 16] {
+            let levels = span.trailing_zeros() as u8;
+            let mut vals: Vec<i64> = (0..span as i64).collect();
+            for level in 1..=levels {
+                let pairs: Vec<_> = fold_receivers(FoldPattern::Adjacent, span, level).collect();
+                for (r, t) in pairs {
+                    vals[r] += vals[t];
+                }
+            }
+            assert_eq!(vals[0], (0..span as i64).sum::<i64>());
+        }
+    }
+
+    #[test]
+    fn config_code_roundtrip() {
+        for conf in [
+            OpMuxConf::AOpB,
+            OpMuxConf::AFold(1),
+            OpMuxConf::AFold(4),
+            OpMuxConf::AOpNet,
+            OpMuxConf::ZeroOpB,
+        ] {
+            assert_eq!(OpMuxConf::parse(&conf.name()), Some(conf));
+        }
+        assert_eq!(OpMuxConf::parse("A-FOLD-5"), None);
+        assert_eq!(OpMuxConf::parse("B-OP-A"), None);
+    }
+}

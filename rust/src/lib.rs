@@ -1,0 +1,90 @@
+//! # PiCaSO — Processor in/near Memory Scalable and Fast Overlay
+//!
+//! A full-system reproduction of the FPL 2023 paper *"FPGA Processor In
+//! Memory Architectures (PIMs): Overlay or Overhaul?"* (Kabir et al., DOI
+//! 10.1109/FPL60245.2023.00023).
+//!
+//! The paper studies a bit-serial processor-in-memory **overlay** (PiCaSO)
+//! built from stock FPGA BRAMs against **custom** BRAM-PIM tile proposals
+//! (CCB, CoMeFa-D/-A), and shows how PiCaSO's operand-multiplexer folding
+//! and binary-hopping reduction network can be fused back into the custom
+//! tiles (A-Mod / D-Mod). Because the paper's artifacts are FPGA bitstreams
+//! and proposed silicon, this crate reproduces the study as a simulation and
+//! modeling stack:
+//!
+//! * [`isa`] — the PIM instruction set: FA/S opcodes (Table I), the Booth
+//!   radix-2 op-encoder (Table II), OpMux configurations (Table III), network
+//!   node configuration, microcode assembler.
+//! * [`bits`] — bit-plane data layout and parallel↔serial corner turning.
+//! * [`pe`], [`block`], [`network`], [`array`] — the cycle-accurate
+//!   simulator of the overlay micro-architecture (all four pipeline
+//!   configurations).
+//! * [`custom`] — behavioural models of the custom read-modify-write tiles.
+//! * [`device`], [`bram`], [`synth`] — the virtual implementation tool:
+//!   device database (Table VII), resource/clock models calibrated to the
+//!   paper's synthesis results (Table IV), control-set-aware placement
+//!   (Table VI), scalability sweeps (Fig 4).
+//! * [`analytic`] — closed-form latency/throughput/memory-efficiency models
+//!   (Table V, Table VIII, Figs 5–7), cross-validated against the simulator.
+//! * [`compiler`] — maps GEMM / MLP layers onto the PIM array as microcode.
+//! * [`coordinator`] — the system driver: array partitioning, job scheduling,
+//!   batched inference serving.
+//! * [`runtime`] — PJRT/XLA golden-model execution of the AOT-compiled JAX
+//!   models in `artifacts/` (Python is build-time only, never on the request
+//!   path).
+//! * [`report`] — renders the paper's tables and figure series with
+//!   paper-vs-measured columns.
+
+pub mod analytic;
+pub mod arch;
+pub mod array;
+pub mod bits;
+pub mod block;
+pub mod bram;
+pub mod cli;
+pub mod compiler;
+pub mod coordinator;
+pub mod custom;
+pub mod device;
+pub mod isa;
+pub mod metrics;
+pub mod network;
+pub mod pe;
+pub mod report;
+pub mod runtime;
+pub mod synth;
+pub mod testutil;
+pub mod util;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::analytic::{AccumModel, DesignPoint, MacLatencyModel, ThroughputModel};
+    pub use crate::arch::{ArchKind, CustomDesign, PipelineConfig};
+    pub use crate::array::{ArrayGeometry, PimArray, RunStats};
+    pub use crate::bits::{corner_turn, corner_turn_back, BitPlanes};
+    pub use crate::compiler::{GemmPlan, GemmShape, MacProgram, PimCompiler};
+    pub use crate::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind, JobResult};
+    pub use crate::device::{Device, DeviceFamily, DEVICES};
+    pub use crate::isa::{AluOp, BoothConf, Instruction, Microcode, OpMuxConf};
+    pub use crate::synth::{ImplModel, ImplReport, TileReport};
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error("simulation error: {0}")]
+    Sim(String),
+    #[error("compile error: {0}")]
+    Compile(String),
+    #[error("placement failed: {0}")]
+    Placement(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,23 @@
+//! `picaso` — leader entrypoint: regenerate paper artifacts, run GEMMs on
+//! the simulated overlay, or serve a batch through the coordinator.
+//! See `picaso help`.
+
+use picaso::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli::Args::parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    match cli::run(&parsed) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Runtime metrics for the coordinator: counters, latency recorders and
+//! throughput accounting, all cheap enough for the request path.
+
+use crate::util::{OnlineStats, Percentiles};
+use std::time::Instant;
+
+/// Metrics for one serving/batch run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs completed.
+    pub jobs: u64,
+    /// MAC operations executed (model-level).
+    pub macs: u64,
+    /// PIM cycles simulated.
+    pub pim_cycles: u64,
+    /// Per-job wall latency (µs).
+    pub latency_us: Percentiles,
+    /// Per-job wall latency stats (µs).
+    pub latency_stats: OnlineStats,
+    /// Per-job PIM-time (µs at the modeled clock).
+    pub pim_time_us: OnlineStats,
+    started: Option<Instant>,
+    elapsed_s: f64,
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark the start of the measured region.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Mark the end of the measured region.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.elapsed_s += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Record one finished job.
+    pub fn record_job(&mut self, wall_us: f64, pim_us: f64, macs: u64, cycles: u64) {
+        self.jobs += 1;
+        self.macs += macs;
+        self.pim_cycles += cycles;
+        self.latency_us.push(wall_us);
+        self.latency_stats.push(wall_us);
+        self.pim_time_us.push(pim_us);
+    }
+
+    /// Wall-clock time of the measured region (s).
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed_s
+            + self
+                .started
+                .map(|t| t.elapsed().as_secs_f64())
+                .unwrap_or(0.0)
+    }
+
+    /// Jobs per second over the measured region.
+    pub fn jobs_per_sec(&self) -> f64 {
+        let e = self.elapsed_s();
+        if e > 0.0 {
+            self.jobs as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// Model-level MAC/s over the measured region.
+    pub fn macs_per_sec(&self) -> f64 {
+        let e = self.elapsed_s();
+        if e > 0.0 {
+            self.macs as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// Simulated PE-cycles per wall second — the simulator hot-path metric
+    /// tracked in EXPERIMENTS.md §Perf.
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        let e = self.elapsed_s();
+        if e > 0.0 {
+            self.pim_cycles as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line summary.
+    pub fn summary(&mut self) -> String {
+        let p50 = self.latency_us.median().unwrap_or(0.0);
+        let p99 = self.latency_us.p99().unwrap_or(0.0);
+        format!(
+            "jobs={} wall={:.2}s thpt={:.1} jobs/s macs/s={} p50={:.0}us p99={:.0}us",
+            self.jobs,
+            self.elapsed_s(),
+            self.jobs_per_sec(),
+            crate::util::fmt_rate(self.macs_per_sec(), "MAC"),
+            p50,
+            p99
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut m = Metrics::new();
+        m.start();
+        for i in 0..10 {
+            m.record_job(100.0 + i as f64, 5.0, 1000, 50_000);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.stop();
+        assert_eq!(m.jobs, 10);
+        assert_eq!(m.macs, 10_000);
+        assert!(m.elapsed_s() >= 0.005);
+        assert!(m.jobs_per_sec() > 0.0);
+        assert!(m.sim_cycles_per_sec() > 0.0);
+        let s = m.summary();
+        assert!(s.contains("jobs=10"), "{s}");
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let mut m = Metrics::new();
+        assert_eq!(m.jobs_per_sec(), 0.0);
+        assert!(m.summary().contains("jobs=0"));
+    }
+}

@@ -1,0 +1,327 @@
+//! Inter-block data movement: PiCaSO's binary-hopping reduction network
+//! and the SPAR-2 NEWS copy network it is compared against (Table V).
+
+use crate::arch::geometry::PES_PER_BLOCK;
+use crate::block::BlockRow;
+use crate::isa::{net_pairs, AluOp, RfAddr};
+use crate::pe;
+use crate::{Error, Result};
+
+/// Execute one binary-hopping reduction level across the blocks of a row
+/// (paper Fig 3, OpMux `A-OP-NET`).
+///
+/// At level `L`, transmitter blocks stream their lane-0 operand bit-serially
+/// through `2^L − 1` pass-through nodes into the receiver block's lane-0
+/// ALU, which adds it in place. Transfer overlaps computation: the stream
+/// is consumed as it arrives, so the cycle cost is `N + 4` independent of
+/// hop distance (Table V), which the array layer charges.
+///
+/// Returns the number of `(receiver, transmitter)` block pairs serviced.
+pub fn hop_reduce(row: &mut BlockRow, level: u8, dst: RfAddr, w: u32) -> Result<usize> {
+    let ncols = row.ncols();
+    let pairs = net_pairs(level, ncols);
+    let base = dst.0 as usize;
+    for &(recv_blk, xmit_blk, _hops) in &pairs {
+        let xmit_lane = xmit_blk * PES_PER_BLOCK;
+        let recv_lane = recv_blk * PES_PER_BLOCK;
+        // Bit-serial add of the streamed operand into the receiver lane.
+        // A width-w serial add of two's-complement values equals the
+        // wrapped integer add, so the simulator performs it value-wise
+        // (allocation-free hot path); bit-exactness is covered by the
+        // stream-vs-value differential test below.
+        let y = row.mem().lane_value(xmit_lane, base, w);
+        let x = row.mem().lane_value(recv_lane, base, w);
+        let sum = crate::bits::sign_extend(crate::bits::truncate(x.wrapping_add(y), w), w);
+        row.mem_mut().set_lane_value(recv_lane, base, w, sum);
+    }
+    Ok(pairs.len())
+}
+
+/// Span-restricted [`hop_reduce`]: the physical row is `ncols/span`
+/// logical rows of `span` blocks; each logical row hops within itself.
+pub fn hop_reduce_spans(
+    row: &mut BlockRow,
+    level: u8,
+    dst: RfAddr,
+    w: u32,
+    span: usize,
+) -> Result<usize> {
+    let ncols = row.ncols();
+    if span == 0 || ncols % span != 0 {
+        return Err(Error::Sim(format!(
+            "span {span} does not divide row of {ncols} blocks"
+        )));
+    }
+    let base = dst.0 as usize;
+    let mut serviced = 0;
+    for s in 0..ncols / span {
+        let blk0 = s * span;
+        for (recv_blk, xmit_blk, _hops) in net_pairs(level, span) {
+            let xmit_lane = (blk0 + xmit_blk) * PES_PER_BLOCK;
+            let recv_lane = (blk0 + recv_blk) * PES_PER_BLOCK;
+            let y = row.mem().lane_value(xmit_lane, base, w);
+            let x = row.mem().lane_value(recv_lane, base, w);
+            let sum = crate::bits::sign_extend(crate::bits::truncate(x.wrapping_add(y), w), w);
+            row.mem_mut().set_lane_value(recv_lane, base, w, sum);
+            serviced += 1;
+        }
+    }
+    Ok(serviced)
+}
+
+/// The explicit bit-streamed variant of [`hop_reduce`] (the A-OP-NET
+/// datapath, one bit per cycle through the pass-through hops), kept as
+/// the reference semantics for differential testing.
+pub fn hop_reduce_streamed(row: &mut BlockRow, level: u8, dst: RfAddr, w: u32) -> Result<usize> {
+    let ncols = row.ncols();
+    let pairs = net_pairs(level, ncols);
+    for &(recv_blk, xmit_blk, _hops) in &pairs {
+        let xmit_lane = xmit_blk * PES_PER_BLOCK;
+        let recv_lane = recv_blk * PES_PER_BLOCK;
+        let ybits = pe::read_stream(row.mem(), xmit_lane, dst.0 as usize, w, w as usize);
+        pe::serial_alu_stream(
+            row.mem_mut(),
+            recv_lane,
+            AluOp::Add,
+            dst.0 as usize,
+            dst.0 as usize,
+            &ybits,
+        );
+    }
+    Ok(pairs.len())
+}
+
+/// Full row accumulation on the hopping network: all in-block folds
+/// (levels 1..=4) followed by network levels `0..log2(ncols)`.
+/// Afterwards block 0's lane 0 holds the row sum.
+pub fn accumulate_row(row: &mut BlockRow, dst: RfAddr, w: u32) -> Result<()> {
+    accumulate_row_spans(row, dst, w, row.ncols())
+}
+
+/// Span-restricted variant: treat the physical row as `ncols/span`
+/// independent logical rows of `span` blocks each (the fused-array layout
+/// the simulator uses so packed ops cover the whole grid in one call).
+/// Each span reduces into its own block 0.
+pub fn accumulate_row_spans(row: &mut BlockRow, dst: RfAddr, w: u32, span: usize) -> Result<()> {
+    if span == 0 || row.ncols() % span != 0 {
+        return Err(Error::Sim(format!(
+            "span {span} does not divide row of {} blocks",
+            row.ncols()
+        )));
+    }
+    for level in 1..=4 {
+        row.fold(crate::isa::FoldPattern::Halving, level, dst, w)?;
+    }
+    let nspans = row.ncols() / span;
+    let base = dst.0 as usize;
+    let mut level = 0u8;
+    while (1usize << level) < span {
+        for s in 0..nspans {
+            let blk0 = s * span;
+            for (recv_blk, xmit_blk, _hops) in net_pairs(level, span) {
+                let xmit_lane = (blk0 + xmit_blk) * PES_PER_BLOCK;
+                let recv_lane = (blk0 + recv_blk) * PES_PER_BLOCK;
+                let y = row.mem().lane_value(xmit_lane, base, w);
+                let x = row.mem().lane_value(recv_lane, base, w);
+                let sum =
+                    crate::bits::sign_extend(crate::bits::truncate(x.wrapping_add(y), w), w);
+                row.mem_mut().set_lane_value(recv_lane, base, w, sum);
+            }
+        }
+        level += 1;
+    }
+    Ok(())
+}
+
+/// SPAR-2's NEWS-network accumulation (paper §IV-B): the benchmark overlay
+/// has no fold path, so reducing `q` columns requires *copying* operands
+/// between neighbouring PEs and adding — `(q − 1 + 2·log2 q)·N` cycles
+/// (Table V), charged by the array layer.
+///
+/// The simulation performs the same neighbour-copy tree over every lane of
+/// the row (crossing block boundaries through the NEWS grid), leaving the
+/// row sum in lane 0. `scratch` is the wordline where copied operands are
+/// staged — SPAR-2 must reserve it, which is why its memory efficiency
+/// trails PiCaSO's (Fig 7 discussion).
+pub fn news_accumulate(row: &mut BlockRow, dst: RfAddr, scratch: RfAddr, w: u32) -> Result<()> {
+    news_accumulate_spans(row, dst, scratch, w, row.lanes())
+}
+
+/// Span-restricted NEWS accumulation (see [`accumulate_row_spans`]): each
+/// `span_lanes`-wide logical row reduces into its own lane 0.
+pub fn news_accumulate_spans(
+    row: &mut BlockRow,
+    dst: RfAddr,
+    scratch: RfAddr,
+    w: u32,
+    span_lanes: usize,
+) -> Result<()> {
+    let lanes = row.lanes();
+    if !span_lanes.is_power_of_two() || lanes % span_lanes != 0 {
+        return Err(Error::Sim(format!(
+            "NEWS accumulation requires a power-of-two span dividing the row \
+             (span {span_lanes}, lanes {lanes})"
+        )));
+    }
+    for s in 0..lanes / span_lanes {
+        news_span(row, dst, scratch, w, s * span_lanes, span_lanes)?;
+    }
+    Ok(())
+}
+
+fn news_span(
+    row: &mut BlockRow,
+    dst: RfAddr,
+    scratch: RfAddr,
+    w: u32,
+    lane0: usize,
+    lanes: usize,
+) -> Result<()> {
+    let mut stride = 1usize;
+    while stride < lanes {
+        // Step 1: every receiving lane copies its partner's operand into
+        // the scratch wordlines (stride NEWS hops).
+        let sources: Vec<(usize, Vec<bool>)> = (0..lanes)
+            .step_by(2 * stride)
+            .map(|off| {
+                let lane = lane0 + off;
+                (
+                    lane,
+                    pe::read_stream(row.mem(), lane + stride, dst.0 as usize, w, w as usize),
+                )
+            })
+            .collect();
+        for (lane, bits) in &sources {
+            for (b, &bit) in bits.iter().enumerate() {
+                row.mem_mut().set(scratch.0 as usize + b, *lane, bit);
+            }
+        }
+        // Step 2: add the staged copy.
+        for (lane, _) in &sources {
+            pe::serial_alu(
+                row.mem_mut(),
+                *lane,
+                AluOp::Add,
+                dst.0 as usize,
+                dst.0 as usize,
+                scratch.0 as usize,
+                w,
+            );
+        }
+        stride *= 2;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::FoldPattern;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn hop_reduce_levels_sum_block_results() {
+        let mut row = BlockRow::new(8); // q = 128 lanes
+        let vals: Vec<i64> = (0..128).map(|i| 2 * i - 77).collect();
+        row.write_values(RfAddr(0), 16, &vals).unwrap();
+        // Fold each block to its lane 0 first.
+        for level in 1..=4 {
+            row.fold(FoldPattern::Halving, level, RfAddr(0), 16).unwrap();
+        }
+        // Then three network levels (J = log2(128/16) = 3).
+        for level in 0..3 {
+            hop_reduce(&mut row, level, RfAddr(0), 16).unwrap();
+        }
+        assert_eq!(
+            row.block_result(0, RfAddr(0), 16),
+            vals.iter().sum::<i64>()
+        );
+    }
+
+    #[test]
+    fn accumulate_row_macro() {
+        let mut rng = Xoshiro256::seeded(3);
+        for ncols in [1usize, 2, 4, 8] {
+            let mut row = BlockRow::new(ncols);
+            let mut vals = vec![0i64; ncols * 16];
+            rng.fill_signed(&mut vals, 8);
+            row.write_values(RfAddr(0), 16, &vals).unwrap();
+            accumulate_row(&mut row, RfAddr(0), 16).unwrap();
+            assert_eq!(
+                row.block_result(0, RfAddr(0), 16),
+                vals.iter().sum::<i64>(),
+                "ncols={ncols}"
+            );
+        }
+    }
+
+    #[test]
+    fn news_accumulate_matches_sum() {
+        let mut rng = Xoshiro256::seeded(17);
+        for ncols in [1usize, 2, 8] {
+            let mut row = BlockRow::new(ncols);
+            let mut vals = vec![0i64; ncols * 16];
+            rng.fill_signed(&mut vals, 8);
+            row.write_values(RfAddr(0), 16, &vals).unwrap();
+            news_accumulate(&mut row, RfAddr(0), RfAddr(512), 16).unwrap();
+            assert_eq!(
+                row.read_values(RfAddr(0), 16)[0],
+                vals.iter().sum::<i64>(),
+                "ncols={ncols}"
+            );
+        }
+    }
+
+    #[test]
+    fn news_and_hopping_agree() {
+        let mut rng = Xoshiro256::seeded(29);
+        let mut vals = vec![0i64; 64];
+        rng.fill_signed(&mut vals, 8);
+        let mut a = BlockRow::new(4);
+        let mut b = BlockRow::new(4);
+        a.write_values(RfAddr(0), 16, &vals).unwrap();
+        b.write_values(RfAddr(0), 16, &vals).unwrap();
+        accumulate_row(&mut a, RfAddr(0), 16).unwrap();
+        news_accumulate(&mut b, RfAddr(0), RfAddr(512), 16).unwrap();
+        assert_eq!(
+            a.block_result(0, RfAddr(0), 16),
+            b.read_values(RfAddr(0), 16)[0]
+        );
+    }
+
+    #[test]
+    fn value_wise_hop_matches_streamed_reference() {
+        // The allocation-free hop must be bit-identical to the A-OP-NET
+        // stream, including wrap-around at narrow widths.
+        let mut rng = Xoshiro256::seeded(61);
+        for _ in 0..50 {
+            let mut a = BlockRow::new(8);
+            let mut vals = vec![0i64; 128];
+            rng.fill_signed(&mut vals, 8);
+            a.write_values(RfAddr(0), 8, &vals).unwrap(); // narrow: wraps
+            let mut b = a.clone();
+            for level in 0..3 {
+                hop_reduce(&mut a, level, RfAddr(0), 8).unwrap();
+                hop_reduce_streamed(&mut b, level, RfAddr(0), 8).unwrap();
+            }
+            assert_eq!(
+                a.read_values(RfAddr(0), 8),
+                b.read_values(RfAddr(0), 8)
+            );
+        }
+    }
+
+    #[test]
+    fn partial_rows_still_reduce() {
+        // 3 blocks: level-0 pairs (0,1); level-1 pair (0,2) — the dangling
+        // block folds in at the level where it becomes reachable.
+        let mut row = BlockRow::new(3);
+        let vals: Vec<i64> = (0..48).map(|i| i + 1).collect();
+        row.write_values(RfAddr(0), 16, &vals).unwrap();
+        accumulate_row(&mut row, RfAddr(0), 16).unwrap();
+        assert_eq!(
+            row.block_result(0, RfAddr(0), 16),
+            vals.iter().sum::<i64>()
+        );
+    }
+}

@@ -1,0 +1,242 @@
+//! Single-lane (single-PE) bit-serial operation semantics.
+//!
+//! These routines execute one PE's view of an operand-level instruction
+//! directly on the column-striped register file, bit by bit, exactly as
+//! the FA/S datapath of Fig 1(b) would. They are the *reference semantics*:
+//! the block/row executor and the packed engine are both tested against
+//! them lane-for-lane.
+
+use crate::bram::ColumnMemory;
+use crate::isa::{booth_recode, fa_s, AluOp};
+
+/// Execute `dst[0..w] = op(x[0..w], y[0..w])` on one lane, bit-serially.
+///
+/// Returns the final carry (the borrow-complement for SUB), which hardware
+/// leaves in the PE's carry register.
+pub fn serial_alu(
+    mem: &mut ColumnMemory,
+    lane: usize,
+    op: AluOp,
+    dst: usize,
+    x: usize,
+    y: usize,
+    w: u32,
+) -> bool {
+    let mut carry = op.initial_carry();
+    for b in 0..w as usize {
+        let xb = mem.get(x + b, lane);
+        let yb = mem.get(y + b, lane);
+        let r = fa_s(op, xb, yb, carry);
+        mem.set(dst + b, lane, r.sum);
+        carry = r.carry;
+    }
+    carry
+}
+
+/// Execute `dst[0..len] = op(x[0..len], stream)` where the Y operand
+/// arrives as a bit stream (the `A-OP-NET` OpMux configuration): the
+/// network receiver's Y input is the transmitted operand.
+pub fn serial_alu_stream(
+    mem: &mut ColumnMemory,
+    lane: usize,
+    op: AluOp,
+    dst: usize,
+    x: usize,
+    ybits: &[bool],
+) -> bool {
+    let mut carry = op.initial_carry();
+    for (b, &yb) in ybits.iter().enumerate() {
+        let xb = mem.get(x + b, lane);
+        let r = fa_s(op, xb, yb, carry);
+        mem.set(dst + b, lane, r.sum);
+        carry = r.carry;
+    }
+    carry
+}
+
+/// Read `w` bits of a lane as a bool stream (the transmitter side of the
+/// network path), sign-extended to `out_len` bits.
+pub fn read_stream(
+    mem: &ColumnMemory,
+    lane: usize,
+    base: usize,
+    w: u32,
+    out_len: usize,
+) -> Vec<bool> {
+    let mut bits = Vec::with_capacity(out_len);
+    let sign = mem.get(base + w as usize - 1, lane);
+    for b in 0..out_len {
+        if b < w as usize {
+            bits.push(mem.get(base + b, lane));
+        } else {
+            bits.push(sign);
+        }
+    }
+    bits
+}
+
+/// Booth radix-2 multiply on one lane:
+/// `dst[0..2w] = mand[0..w] * mier[0..w]` (signed × signed, exact).
+///
+/// Implements the algorithm exactly as the overlay executes it
+/// (paper §III-B, Table II):
+///
+/// 1. the accumulator is cleared through the `0-OP-B` OpMux configuration;
+/// 2. for each multiplier bit `i` (LSB first) the Op-Encoder recodes
+///    `{mier[i], mier[i-1]}` into ADD / SUB / NOP;
+/// 3. an active step serially adds (or subtracts) the sign-extended
+///    multiplicand into accumulator bits `i..2w`.
+///
+/// Returns the number of *active* (non-NOP) Booth steps, which the
+/// NOP-skipping latency model consumes.
+pub fn booth_mult(
+    mem: &mut ColumnMemory,
+    lane: usize,
+    dst: usize,
+    mand: usize,
+    mier: usize,
+    w: u32,
+) -> u32 {
+    let w = w as usize;
+    // Step 1: 0-OP-B initialization — clear the 2w-bit accumulator lane.
+    for b in 0..2 * w {
+        mem.set(dst + b, lane, false);
+    }
+    let mand_sign = mem.get(mand + w - 1, lane);
+    let mut active = 0;
+    let mut prev = false;
+    for i in 0..w {
+        let cur = mem.get(mier + i, lane);
+        let op = booth_recode(cur, prev);
+        prev = cur;
+        if op == AluOp::Cpx {
+            continue; // NOP step
+        }
+        active += 1;
+        // Serial add/sub of the sign-extended multiplicand into acc[i..2w].
+        let mut carry = op.initial_carry();
+        for b in 0..(2 * w - i) {
+            let xb = mem.get(dst + i + b, lane);
+            let yb = if b < w { mem.get(mand + b, lane) } else { mand_sign };
+            let r = fa_s(op, xb, yb, carry);
+            mem.set(dst + i + b, lane, r.sum);
+            carry = r.carry;
+        }
+    }
+    active
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn mem_with(vals: &[(usize, i64)], base_w: u32) -> ColumnMemory {
+        let mut m = ColumnMemory::new(1024, 4);
+        for &(base, v) in vals {
+            m.set_lane_value(0, base, base_w, v);
+        }
+        m
+    }
+
+    #[test]
+    fn serial_add_exhaustive_i6() {
+        let mut m = ColumnMemory::new(64, 1);
+        for x in -32i64..32 {
+            for y in -32i64..32 {
+                m.set_lane_value(0, 0, 6, x);
+                m.set_lane_value(0, 8, 6, y);
+                serial_alu(&mut m, 0, AluOp::Add, 16, 0, 8, 6);
+                let expect = crate::bits::sign_extend(((x + y) as u64) & 0x3F, 6);
+                assert_eq!(m.lane_value(0, 16, 6), expect, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_sub_exhaustive_i6() {
+        let mut m = ColumnMemory::new(64, 1);
+        for x in -32i64..32 {
+            for y in -32i64..32 {
+                m.set_lane_value(0, 0, 6, x);
+                m.set_lane_value(0, 8, 6, y);
+                serial_alu(&mut m, 0, AluOp::Sub, 16, 0, 8, 6);
+                let expect = crate::bits::sign_extend(((x - y) as u64) & 0x3F, 6);
+                assert_eq!(m.lane_value(0, 16, 6), expect, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn copy_ops() {
+        let mut m = mem_with(&[(0, -17), (8, 23)], 8);
+        serial_alu(&mut m, 0, AluOp::Cpx, 16, 0, 8, 8);
+        assert_eq!(m.lane_value(0, 16, 8), -17);
+        serial_alu(&mut m, 0, AluOp::Cpy, 24, 0, 8, 8);
+        assert_eq!(m.lane_value(0, 24, 8), 23);
+    }
+
+    #[test]
+    fn booth_mult_exhaustive_i8() {
+        // Every third x against every signed 8-bit y — the core
+        // correctness theorem of the multiplier.
+        let mut m = ColumnMemory::new(64, 1);
+        for x in (-128i64..=127).step_by(3) {
+            for y in -128i64..=127 {
+                m.set_lane_value(0, 0, 8, x);
+                m.set_lane_value(0, 8, 8, y);
+                booth_mult(&mut m, 0, 16, 0, 8, 8);
+                assert_eq!(m.lane_value(0, 16, 16), x * y, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn booth_mult_wide_random() {
+        let mut rng = Xoshiro256::seeded(0xB007);
+        let mut m = ColumnMemory::new(256, 1);
+        for &w in &[4u32, 12, 16, 24] {
+            for _ in 0..200 {
+                let lo = -(1i64 << (w - 1));
+                let hi = (1i64 << (w - 1)) - 1;
+                let x = rng.range_i64(lo, hi);
+                let y = rng.range_i64(lo, hi);
+                m.set_lane_value(0, 0, w, x);
+                m.set_lane_value(0, 64, w, y);
+                booth_mult(&mut m, 0, 128, 0, 64, w);
+                assert_eq!(m.lane_value(0, 128, 2 * w), x * y, "w={w} x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn booth_active_steps_match_recoder() {
+        let mut m = ColumnMemory::new(64, 1);
+        for y in -128i64..=127 {
+            m.set_lane_value(0, 0, 8, 7);
+            m.set_lane_value(0, 8, 8, y);
+            let active = booth_mult(&mut m, 0, 16, 0, 8, 8);
+            assert_eq!(active, crate::isa::booth_active_steps(y, 8), "y={y}");
+        }
+    }
+
+    #[test]
+    fn stream_ops_match_regular() {
+        let mut m = mem_with(&[(0, 100), (8, -42)], 8);
+        let ybits = read_stream(&m, 0, 8, 8, 8);
+        serial_alu_stream(&mut m, 0, AluOp::Add, 16, 0, &ybits);
+        assert_eq!(m.lane_value(0, 16, 8), 58);
+        // Sign extension in the stream.
+        let ybits = read_stream(&m, 0, 8, 8, 12);
+        assert!(ybits[8] && ybits[11], "sign bits extended");
+    }
+
+    #[test]
+    fn mult_does_not_clobber_sources() {
+        let mut m = mem_with(&[(0, -77), (8, 99)], 8);
+        booth_mult(&mut m, 0, 16, 0, 8, 8);
+        assert_eq!(m.lane_value(0, 0, 8), -77);
+        assert_eq!(m.lane_value(0, 8, 8), 99);
+        assert_eq!(m.lane_value(0, 16, 16), -77 * 99);
+    }
+}

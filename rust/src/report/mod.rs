@@ -1,0 +1,142 @@
+//! Paper-style table and figure-series renderers.
+//!
+//! Every bench target prints its artifact through these helpers so the
+//! output carries both the **paper** value and the **measured/modeled**
+//! value side by side — EXPERIMENTS.md is assembled from these outputs.
+
+pub mod paper;
+
+use std::fmt::Write as _;
+
+/// A simple fixed-width text table.
+#[derive(Debug, Clone, Default)]
+pub struct TextTable {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl TextTable {
+    /// New table with a title and column headers.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.into(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for &str cells.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<width$} |", c, width = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Format a fraction as a percentage with one decimal.
+pub fn pct(f: f64) -> String {
+    format!("{:.1}%", f * 100.0)
+}
+
+/// Format `measured (paper P)` pairs for the comparison columns.
+pub fn vs_paper(measured: impl std::fmt::Display, paper: impl std::fmt::Display) -> String {
+    format!("{measured} (paper {paper})")
+}
+
+/// Relative error helper for EXPERIMENTS.md annotations.
+pub fn rel_err(measured: f64, paper: f64) -> f64 {
+    if paper == 0.0 {
+        0.0
+    } else {
+        (measured - paper).abs() / paper.abs()
+    }
+}
+
+/// An ASCII bar chart for figure-series (one bar per point).
+pub fn bar_chart(title: &str, series: &[(String, f64)], unit: &str) -> String {
+    let max = series.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = series.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("## {title}\n");
+    for (label, v) in series {
+        let bar_len = if max > 0.0 { (v / max * 48.0).round() as usize } else { 0 };
+        let _ = writeln!(
+            out,
+            "{:<label_w$}  {:>10.3} {unit}  {}",
+            label,
+            v,
+            "#".repeat(bar_len.max(1)),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new("Demo", &["a", "metric"]);
+        t.row_str(&["x", "1"]).row_str(&["longer", "22"]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| a      | metric |"));
+        assert!(s.contains("| longer | 22     |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = TextTable::new("t", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(pct(0.9375), "93.8%");
+        assert_eq!(vs_paper(259, 259), "259 (paper 259)");
+        assert!((rel_err(1.05, 1.0) - 0.05).abs() < 1e-12);
+        let chart = bar_chart("F", &[("a".into(), 1.0), ("b".into(), 2.0)], "T");
+        assert!(chart.contains("####"));
+    }
+}

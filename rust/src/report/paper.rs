@@ -1,0 +1,312 @@
+//! Generators for every table and figure in the paper's evaluation,
+//! with paper-reported values alongside the model/simulator outputs.
+//! Shared by the CLI (`picaso table4` …) and the bench targets.
+
+use super::{bar_chart, pct, TextTable};
+use crate::analytic::{AccumModel, DesignPoint, MacLatencyModel, ThroughputModel};
+use crate::arch::{ArchKind, CustomDesign, PipelineConfig};
+use crate::device::{table7_devices, Device};
+use crate::synth::{ImplModel, OverlayDesign};
+
+/// The designs plotted in Figs 5–7.
+fn fig_designs() -> Vec<ArchKind> {
+    vec![
+        ArchKind::Custom(CustomDesign::Ccb),
+        ArchKind::Custom(CustomDesign::CoMeFaD),
+        ArchKind::Custom(CustomDesign::CoMeFaA),
+        ArchKind::Custom(CustomDesign::DMod),
+        ArchKind::Custom(CustomDesign::AMod),
+        ArchKind::PICASO_F,
+    ]
+}
+
+/// Table IV: tile resources and Fmax for all five overlay configurations
+/// on both study devices.
+pub fn table4() -> String {
+    let mut out = String::new();
+    for dev_id in ["V7", "U55"] {
+        let dev = Device::by_id(dev_id).unwrap();
+        let mut t = TextTable::new(
+            format!("Table IV — 4x4 PE-block tiles on {dev_id} ({})", dev.part),
+            &["design", "LUT (tile/block)", "FF (tile/block)", "Slice (tile/block)", "Max-Freq"],
+        );
+        for design in OverlayDesign::TABLE4 {
+            let r = ImplModel::tile_report(design, dev);
+            t.row(&[
+                design.name(),
+                format!("{}/{}", r.tile_lut, r.block.lut),
+                format!("{}/{}", r.tile_ff, r.block.ff),
+                format!("{}/{}", r.tile_slice, r.block.slice),
+                crate::util::fmt_freq(r.fmax_hz),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out.push_str(
+        "paper: Full-Pipe 540/737 MHz = BRAM Fmax; 2.25x/1.67x over benchmark; \
+         >=2x utilization improvement in all configs\n",
+    );
+    out
+}
+
+/// Table V: cycle latencies, analytic + cycle-accurate cross-check.
+pub fn table5() -> String {
+    let mut t = TextTable::new(
+        "Table V — cycle latency of operations (q=128, N=32)",
+        &["operation", "SPAR-2 [26]", "PiCaSO-F", "paper"],
+    );
+    let n = 32;
+    t.row(&[
+        "ADD/SUB".into(),
+        format!("{}", AccumModel::add_cycles(n)),
+        format!("{}", AccumModel::add_cycles(n)),
+        "2N = 64".into(),
+    ]);
+    t.row(&[
+        "MULT".into(),
+        format!("{}", AccumModel::mult_cycles(n)),
+        format!("{}", AccumModel::mult_cycles(n)),
+        "2N^2+2N = 2112".into(),
+    ]);
+    let (spar2, picaso) = AccumModel::table5(128, n);
+    t.row(&[
+        "Accumulation".into(),
+        format!("{spar2}"),
+        format!("{picaso}"),
+        "4512 / 259 (17.4x)".into(),
+    ]);
+    let mut out = t.render();
+    out.push_str(&format!(
+        "measured improvement: {:.1}x (paper: 17x)\n",
+        spar2 as f64 / picaso as f64
+    ));
+    out
+}
+
+/// Table VI: largest overlay arrays on the study devices.
+pub fn table6() -> String {
+    let mut out = String::new();
+    let paper: &[(&str, &str, &str, f64, f64, f64, f64, f64)] = &[
+        ("V7", "Benchmark [26]", "24K", 0.746, 0.160, 0.738, 0.321, 0.860),
+        ("V7", "PiCaSO-F", "33K", 0.325, 0.380, 0.999, 0.021, 0.764),
+        ("U55", "Benchmark [26]", "63K", 0.416, 0.097, 0.984, 0.195, 0.634),
+        ("U55", "PiCaSO-F", "64K", 0.148, 0.173, 1.000, 0.008, 0.320),
+    ];
+    let mut t = TextTable::new(
+        "Table VI — largest overlay arrays (model vs paper)",
+        &["device", "design", "Max-Size", "LUT", "FF", "BRAM", "Uniq.Ctrl", "Slice", "limiter"],
+    );
+    for (dev_id, name, psize, plut, pff, pbram, pctrl, pslice) in paper {
+        let dev = Device::by_id(dev_id).unwrap();
+        let design = if name.starts_with("Bench") {
+            OverlayDesign::Benchmark
+        } else {
+            OverlayDesign::PiCaSO(PipelineConfig::FullPipe)
+        };
+        let r = ImplModel::max_array(design, dev);
+        t.row(&[
+            dev_id.to_string(),
+            name.to_string(),
+            format!("{}K (paper {psize})", r.pes_k()),
+            format!("{} ({})", pct(r.lut_frac), pct(*plut)),
+            format!("{} ({})", pct(r.ff_frac), pct(*pff)),
+            format!("{} ({})", pct(r.bram_frac), pct(*pbram)),
+            format!("{} ({})", pct(r.ctrl_frac), pct(*pctrl)),
+            format!("{} ({})", pct(r.slice_frac), pct(*pslice)),
+            r.limiter.as_str().into(),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str("cells: model (paper). Benchmark on V7 is control-set limited; PiCaSO is BRAM limited everywhere.\n");
+    out.push_str(&s);
+    out
+}
+
+/// Table VII: the device list with derived columns.
+pub fn table7() -> String {
+    let mut t = TextTable::new(
+        "Table VII — representative Virtex-7 and UltraScale+ devices",
+        &["device", "tech", "BRAM#", "LUT:BRAM ratio", "Max PE#", "ID"],
+    );
+    for d in table7_devices() {
+        t.row(&[
+            d.part.into(),
+            d.family.tag().into(),
+            format!("{}", d.bram36),
+            format!("{}", d.lut_bram_ratio()),
+            format!("{}K", d.max_pes_k()),
+            d.id.into(),
+        ]);
+    }
+    t.render()
+}
+
+/// Table VIII: the design-comparison matrix.
+pub fn table8() -> String {
+    let pts = DesignPoint::table8();
+    let mut t = TextTable::new(
+        "Table VIII — comparison with customized BRAM PIM architectures",
+        &["row", "CCB", "CoMeFa-D", "CoMeFa-A", "PiCaSO-F", "A-Mod"],
+    );
+    let cells = |f: &dyn Fn(&DesignPoint) -> String| -> Vec<String> {
+        pts.iter().map(|p| f(p)).collect()
+    };
+    let mut row = |label: &str, f: &dyn Fn(&DesignPoint) -> String| {
+        let mut v = vec![label.to_string()];
+        v.extend(cells(f));
+        t.row(&v);
+    };
+    row("Architecture", &|p| p.architecture().into());
+    row("Clock Overhead", &|p| pct(p.clock_overhead()));
+    row("Parallel MACs", &|p| p.parallel_macs().to_string());
+    row("Mult Latency (N=8)", &|p| p.mult_latency_n8().to_string());
+    row("Accum Latency (q=16,N=8)", &|p| p.accum_latency().to_string());
+    row("Support Booth's", &|p| p.booth().as_str().into());
+    row("Mem. Efficiency", &|p| p.memory_class().into());
+    let mut s = t.render();
+    s.push_str(
+        "paper row values: Mult 86/86/86/144/86; Accum 80/80/80/48/40; MACs 144/144/144/36/144\n",
+    );
+    s
+}
+
+/// Fig 4: the scalability sweep across Table VII devices.
+pub fn fig4() -> String {
+    let points = ImplModel::scalability(&table7_devices());
+    let mut t = TextTable::new(
+        "Fig 4 — PiCaSO-F scalability across Virtex-7 / UltraScale+ devices",
+        &["device", "PEs", "BRAM", "LUT", "FF", "Slice", "clock"],
+    );
+    for p in &points {
+        t.row(&[
+            p.device.id.into(),
+            crate::util::group_thousands(p.report.pes as u64),
+            pct(p.report.bram_frac),
+            pct(p.report.lut_frac),
+            pct(p.report.ff_frac),
+            pct(p.report.slice_frac),
+            crate::util::fmt_freq(p.clock_hz),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(
+        "paper: 100% BRAM on every device; ~40% LUT/FF on V7-a, ~5% on US-c — \
+         linear scaling with BRAM capacity\n",
+    );
+    s
+}
+
+/// Fig 5: relative MAC latency w.r.t. PiCaSO.
+pub fn fig5() -> String {
+    let m = MacLatencyModel::u55();
+    let mut out = String::new();
+    for n in [4u32, 8, 16] {
+        let series: Vec<(String, f64)> = fig_designs()
+            .into_iter()
+            .map(|k| (k.name(), m.relative(k, n)))
+            .collect();
+        out.push_str(&bar_chart(
+            &format!("Fig 5 — relative MAC latency w.r.t. PiCaSO, {n}-bit"),
+            &series,
+            "x",
+        ));
+        out.push('\n');
+    }
+    out.push_str(
+        "paper: PiCaSO 1.72x-2.56x faster than CoMeFa-A; CoMeFa-D wins only at 16-bit\n",
+    );
+    out
+}
+
+/// Fig 6: peak MAC throughput on the U55.
+pub fn fig6() -> String {
+    let t = ThroughputModel::u55();
+    let mut out = String::new();
+    for n in [4u32, 8, 16] {
+        let series: Vec<(String, f64)> = fig_designs()
+            .into_iter()
+            .map(|k| (k.name(), t.tmacs(k, n)))
+            .collect();
+        out.push_str(&bar_chart(
+            &format!("Fig 6 — peak MAC throughput on Alveo U55, {n}-bit"),
+            &series,
+            "TMAC/s",
+        ));
+        let frac = t.tmacs(ArchKind::PICASO_F, n)
+            / t.tmacs(ArchKind::Custom(CustomDesign::CoMeFaA), n);
+        out.push_str(&format!("PiCaSO/CoMeFa-A = {:.1}%\n\n", frac * 100.0));
+    }
+    out.push_str("paper: PiCaSO achieves 75%-80% of CoMeFa-A; Mods gain 5%-18%\n");
+    out
+}
+
+/// Fig 7: BRAM memory utilization efficiency.
+pub fn fig7() -> String {
+    let designs = [
+        ("CCB", ArchKind::Custom(CustomDesign::Ccb)),
+        ("CoMeFa", ArchKind::Custom(CustomDesign::CoMeFaA)),
+        ("CoMeFa-Mod", ArchKind::Custom(CustomDesign::AMod)),
+        ("PiCaSO", ArchKind::PICASO_F),
+    ];
+    let mut t = TextTable::new(
+        "Fig 7 — BRAM memory utilization efficiency",
+        &["precision", "CCB", "CoMeFa", "CoMeFa-Mod", "PiCaSO"],
+    );
+    for n in [4u32, 8, 16, 32] {
+        let mut row = vec![format!("{n}-bit")];
+        for (_, k) in designs {
+            row.push(pct(k.memory_efficiency(n)));
+        }
+        t.row(&row);
+    }
+    let mut s = t.render();
+    s.push_str("paper @16-bit: CCB 50%, CoMeFa 68.8%, PiCaSO 93.8%; Mod +6.2pp over CoMeFa\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_artifacts_render() {
+        for (name, s) in [
+            ("table4", table4()),
+            ("table5", table5()),
+            ("table6", table6()),
+            ("table7", table7()),
+            ("table8", table8()),
+            ("fig4", fig4()),
+            ("fig5", fig5()),
+            ("fig6", fig6()),
+            ("fig7", fig7()),
+        ] {
+            assert!(s.len() > 100, "{name} too short:\n{s}");
+        }
+    }
+
+    #[test]
+    fn table5_headline_in_output() {
+        let s = table5();
+        assert!(s.contains("4512"));
+        assert!(s.contains("259"));
+        assert!(s.contains("17.4x"));
+    }
+
+    #[test]
+    fn fig7_paper_points_in_output() {
+        let s = fig7();
+        assert!(s.contains("50.0%"), "{s}");
+        assert!(s.contains("93.8%"), "{s}");
+        assert!(s.contains("68.8%"), "{s}");
+        assert!(s.contains("75.0%"), "{s}");
+    }
+
+    #[test]
+    fn table6_reports_limits() {
+        let s = table6();
+        assert!(s.contains("control sets"));
+        assert!(s.contains("BRAM"));
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT/XLA golden-model runtime.
+//!
+//! Loads the HLO-text artifacts that `python/compile/aot.py` emits at
+//! build time (`make artifacts`) and executes them on the PJRT CPU
+//! client. This is the **golden compute path**: the JAX/Pallas model of
+//! the workload, AOT-compiled once, against which the PIM simulation is
+//! checked bit-for-bit at integer precision. Python never runs here.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto` — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Names of the artifacts `aot.py` produces.
+pub mod artifact {
+    /// int8 GEMM golden model: `c = a @ b` over f32-carried int values.
+    pub const GEMM: &str = "gemm_int8";
+    /// Quantized 2-layer MLP forward pass.
+    pub const MLP: &str = "mlp_golden";
+    /// Bit-plane MAC Pallas kernel (interpret mode).
+    pub const BITSERIAL: &str = "bitserial_mac";
+}
+
+/// A loaded, compiled XLA executable.
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name.
+    pub name: String,
+}
+
+/// The PJRT CPU runtime holding compiled golden models.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    models: HashMap<String, GoldenModel>,
+    dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Create a CPU runtime rooted at the given artifacts directory.
+    pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Self { client, models: HashMap::new(), dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Path of an artifact by name.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// True if the artifact file exists (lets callers degrade gracefully
+    /// when `make artifacts` has not run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load and compile an artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        let path = self.artifact_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        self.models.insert(name.to_string(), GoldenModel { exe, name: name.to_string() });
+        Ok(())
+    }
+
+    /// Execute a loaded model on f32 inputs (`(data, shape)` pairs) and
+    /// return the first element of its result tuple, flattened.
+    ///
+    /// All our golden models are lowered with `return_tuple=True`, so the
+    /// output is always a 1-tuple.
+    pub fn run_f32(&self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<f32>> {
+        let model = self
+            .models
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("model '{name}' not loaded")))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expect: usize = shape.iter().product();
+            if expect != data.len() {
+                return Err(Error::Runtime(format!(
+                    "input length {} != shape {:?}",
+                    data.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let result = model
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
+        let first = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+        first
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+    }
+
+    /// Golden int GEMM via the f32-carried artifact: converts the integer
+    /// operands, executes, and rounds back. Exact for |values| < 2^24.
+    pub fn gemm_golden(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i64],
+        b: &[i64],
+    ) -> Result<Vec<i64>> {
+        let fa: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let fb: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let out = self.run_f32(artifact::GEMM, &[(fa, vec![m, k]), (fb, vec![k, n])])?;
+        Ok(out.iter().map(|&v| v.round() as i64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests degrade to no-ops when `make artifacts` has not run —
+    // the integration suite in rust/tests/ asserts the full path.
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR);
+        let rt = XlaRuntime::cpu(&dir).ok()?;
+        Some(rt)
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let rt = runtime().expect("PJRT CPU client must initialize");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_detected() {
+        let rt = runtime().unwrap();
+        assert!(!rt.has_artifact("definitely_not_a_real_artifact"));
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let rt = runtime().unwrap();
+        assert!(rt.run_f32("unloaded", &[]).is_err());
+    }
+
+    #[test]
+    fn gemm_artifact_roundtrip_if_built() {
+        let mut rt = runtime().unwrap();
+        if !rt.has_artifact(artifact::GEMM) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        rt.load(artifact::GEMM).unwrap();
+        // artifact shape is fixed at compile time: 16x64 @ 64x16.
+        let a: Vec<i64> = (0..16 * 64).map(|i| (i % 13) as i64 - 6).collect();
+        let b: Vec<i64> = (0..64 * 16).map(|i| (i % 7) as i64 - 3).collect();
+        let got = rt.gemm_golden(16, 64, 16, &a, &b).unwrap();
+        let expect = crate::compiler::gemm_ref(
+            crate::compiler::GemmShape { m: 16, k: 64, n: 16 },
+            &a,
+            &b,
+        );
+        assert_eq!(got, expect);
+    }
+}

@@ -1,0 +1,183 @@
+//! Clock model: achievable frequency per design per device.
+//!
+//! The model stores the **measured Table IV critical-path periods** per
+//! (design, family) on the reference parts (xc7vx485-2 and the U55's
+//! xcu55c-2) and scales them by the target device's BRAM Fmax relative to
+//! the family reference — BRAM timing tracks speed grade and the overlay's
+//! other stages (LUT logic + routing) scale with the same fabric grade.
+//! The result is finally capped at the device's BRAM Fmax: no overlay
+//! configuration can clock faster than the BRAM feeding it.
+//!
+//! A clean four-delay stage decomposition (BRAM / OpMux / ALU / wire)
+//! *almost* fits the Table IV data but misses RF-Pipe by ~5%: the measured
+//! RF-Pipe period exceeds Single-Cycle's logic portion, i.e. the paper's
+//! placed-and-routed RF-Pipe pays extra routing congestion that a pure
+//! stage model cannot express. We therefore calibrate per configuration
+//! and keep the structural reading in the table below.
+//!
+//! Full-Pipe's critical path is the BRAM alone — the paper's headline
+//! observation ("PiCaSO runs as fast as the maximum frequency of the
+//! BRAM", §IV-A) and why the overlay out-clocks the custom tiles despite
+//! using stock silicon.
+
+use super::resource::OverlayDesign;
+use crate::arch::PipelineConfig;
+use crate::device::{Device, DeviceFamily};
+
+/// Measured Table IV frequencies (MHz) on the family reference device.
+///
+/// | design | critical path | V7 | U55 |
+/// |---|---|---|---|
+/// | Benchmark | BRAM+mux+ALU+NEWS control | 240 | 445 |
+/// | Single-Cycle | BRAM+OpMux+ALU+wire | 245 | 487 |
+/// | RF-Pipe | OpMux+ALU+wire (+route) | 360 | 600 |
+/// | Op-Pipe | BRAM+OpMux vs ALU | 370 | 620 |
+/// | Full-Pipe | BRAM | 540 | 737 |
+fn table4_fmax_mhz(design: OverlayDesign, family: DeviceFamily) -> f64 {
+    use DeviceFamily::*;
+    use OverlayDesign::*;
+    use PipelineConfig::*;
+    match (design, family) {
+        (Benchmark, Virtex7) => 240.0,
+        (Benchmark, UltraScalePlus) => 445.0,
+        (PiCaSO(SingleCycle), Virtex7) => 245.0,
+        (PiCaSO(SingleCycle), UltraScalePlus) => 487.0,
+        (PiCaSO(RfPipe), Virtex7) => 360.0,
+        (PiCaSO(RfPipe), UltraScalePlus) => 600.0,
+        (PiCaSO(OpPipe), Virtex7) => 370.0,
+        (PiCaSO(OpPipe), UltraScalePlus) => 620.0,
+        (PiCaSO(FullPipe), Virtex7) => 540.0,
+        (PiCaSO(FullPipe), UltraScalePlus) => 737.0,
+    }
+}
+
+/// Clock model handle for a family.
+#[derive(Debug, Clone, Copy)]
+pub struct ClockModel {
+    family: DeviceFamily,
+}
+
+impl ClockModel {
+    /// Model for a device family.
+    pub fn for_family(family: DeviceFamily) -> ClockModel {
+        ClockModel { family }
+    }
+
+    /// Calibrated critical-path period (ns) on the family reference part.
+    pub fn period_ns(&self, design: OverlayDesign) -> f64 {
+        1e3 / table4_fmax_mhz(design, self.family)
+    }
+}
+
+/// Achievable clock (Hz) for `design` on `dev`.
+pub fn achievable_clock_hz(design: OverlayDesign, dev: &Device) -> f64 {
+    let ref_fmax = match dev.family {
+        DeviceFamily::Virtex7 => crate::device::V7_SPEED2_BRAM_FMAX,
+        DeviceFamily::UltraScalePlus => crate::device::USP_SPEED2_BRAM_FMAX,
+    };
+    let f_ref = table4_fmax_mhz(design, dev.family) * 1e6;
+    // Scale with the device's BRAM grade; Full-Pipe saturates at BRAM Fmax.
+    let f = f_ref * dev.bram_fmax_hz / ref_fmax;
+    if matches!(design, OverlayDesign::PiCaSO(PipelineConfig::FullPipe)) {
+        dev.bram_fmax_hz
+    } else {
+        f.min(dev.bram_fmax_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+
+    fn f_mhz(design: OverlayDesign, dev: &str) -> f64 {
+        achievable_clock_hz(design, Device::by_id(dev).unwrap()) / 1e6
+    }
+
+    #[test]
+    fn table4_frequencies_reproduced() {
+        use OverlayDesign::*;
+        use PipelineConfig::*;
+        let cases = [
+            (Benchmark, "V7", 240.0),
+            (Benchmark, "U55", 445.0),
+            (PiCaSO(FullPipe), "V7", 540.0),
+            (PiCaSO(FullPipe), "U55", 737.0),
+            (PiCaSO(SingleCycle), "V7", 245.0),
+            (PiCaSO(SingleCycle), "U55", 487.0),
+            (PiCaSO(RfPipe), "V7", 360.0),
+            (PiCaSO(RfPipe), "U55", 600.0),
+            (PiCaSO(OpPipe), "V7", 370.0),
+            (PiCaSO(OpPipe), "U55", 620.0),
+        ];
+        for (design, dev, paper) in cases {
+            let got = f_mhz(design, dev);
+            let err = (got - paper).abs() / paper;
+            assert!(err < 0.02, "{design:?} on {dev}: model {got:.0} vs paper {paper}");
+        }
+    }
+
+    #[test]
+    fn full_pipe_speedup_over_benchmark() {
+        // §IV-A: 2.25x on Virtex-7, 1.67x on U55.
+        let v7 = f_mhz(OverlayDesign::PiCaSO(PipelineConfig::FullPipe), "V7")
+            / f_mhz(OverlayDesign::Benchmark, "V7");
+        let u55 = f_mhz(OverlayDesign::PiCaSO(PipelineConfig::FullPipe), "U55")
+            / f_mhz(OverlayDesign::Benchmark, "U55");
+        assert!((v7 - 2.25).abs() < 0.05, "v7 ratio {v7}");
+        assert!((u55 - 1.67).abs() < 0.05, "u55 ratio {u55}");
+    }
+
+    #[test]
+    fn full_pipe_hits_bram_fmax_everywhere() {
+        // Fig 4 claim: PiCaSO-F runs at the BRAM limit on every device,
+        // including the 543.77 MHz datasheet figure on V7 parts.
+        for dev in crate::device::table7_devices() {
+            let f = achievable_clock_hz(
+                OverlayDesign::PiCaSO(PipelineConfig::FullPipe),
+                dev,
+            );
+            assert!(
+                (f - dev.bram_fmax_hz).abs() / dev.bram_fmax_hz < 1e-9,
+                "{}: {f}",
+                dev.id
+            );
+        }
+    }
+
+    #[test]
+    fn overlay_beats_custom_clocks() {
+        // §IV-A: PiCaSO-F (737 MHz on 16nm U55) runs 1.62x faster than the
+        // fastest CCB configuration (455 MHz) and 1.25x faster than
+        // CoMeFa-D (588 MHz).
+        let picaso = f_mhz(OverlayDesign::PiCaSO(PipelineConfig::FullPipe), "U55");
+        let ccb_best = 455.0;
+        let comefa_d = 588.0;
+        assert!((picaso / ccb_best - 1.62).abs() < 0.01);
+        assert!((picaso / comefa_d - 1.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn op_pipe_beats_rf_pipe() {
+        // §IV-A: Op-Pipe outperforms RF-Pipe by hiding the network wire.
+        for dev in ["V7", "U55"] {
+            assert!(
+                f_mhz(OverlayDesign::PiCaSO(PipelineConfig::OpPipe), dev)
+                    > f_mhz(OverlayDesign::PiCaSO(PipelineConfig::RfPipe), dev)
+            );
+        }
+    }
+
+    #[test]
+    fn higher_speed_grade_scales_up() {
+        // A -3 UltraScale+ part clocks the non-Full-Pipe configs faster
+        // than the -2 U55 reference.
+        let us3 = Device::by_id("US-a").unwrap(); // speed -3, 825 MHz BRAM
+        let f = achievable_clock_hz(
+            OverlayDesign::PiCaSO(PipelineConfig::SingleCycle),
+            us3,
+        );
+        assert!(f > 487e6, "{f}");
+        assert!(f <= us3.bram_fmax_hz);
+    }
+}

@@ -1,0 +1,51 @@
+//! The **virtual implementation tool**: resource, clock and placement
+//! models standing in for Vivado synthesis + place-and-route (which this
+//! environment cannot run).
+//!
+//! The models are *calibrated* against the paper's published synthesis
+//! results — the 20 resource/frequency numbers of Table IV and the
+//! utilization rows of Table VI — and then *extrapolated structurally*
+//! (per block, per device) to regenerate Table VI, Table VII and Fig 4.
+//! Every calibration constant is a named item below with its provenance
+//! in a doc comment; nothing is fit silently.
+//!
+//! * [`resource`] — LUT/FF/slice cost per PE-block for each design, at
+//!   tile scale (Table IV) and at array scale (Table VI).
+//! * [`clock`] — achievable clock per pipeline configuration per device.
+//! * [`placer`] — control-set-aware placement feasibility and the
+//!   max-array search (Table VI), including SPAR-2's placement failure
+//!   mode.
+//! * [`sweep`] — the Fig 4 scalability study across Table VII devices.
+
+mod clock;
+mod placer;
+mod resource;
+mod sweep;
+
+pub use clock::{achievable_clock_hz, ClockModel};
+pub use placer::{max_array, ImplReport, Limiter};
+pub use resource::{BlockCost, OverlayDesign, TileReport};
+pub use sweep::{scalability_sweep, SweepPoint};
+
+use crate::device::Device;
+
+/// Facade over the implementation models.
+#[derive(Debug, Clone, Copy)]
+pub struct ImplModel;
+
+impl ImplModel {
+    /// Table IV: implement one 4×4-block tile of `design` on `dev`.
+    pub fn tile_report(design: OverlayDesign, dev: &Device) -> TileReport {
+        resource::tile_report(design, dev)
+    }
+
+    /// Table VI: the largest array of `design` that places on `dev`.
+    pub fn max_array(design: OverlayDesign, dev: &Device) -> ImplReport {
+        placer::max_array(design, dev)
+    }
+
+    /// Fig 4: PiCaSO-F scalability across the Table VII devices.
+    pub fn scalability(devices: &[&'static Device]) -> Vec<SweepPoint> {
+        sweep::scalability_sweep(devices)
+    }
+}

@@ -1,0 +1,226 @@
+//! Placement feasibility and the max-array search (paper Table VI).
+//!
+//! The placer models the two failure modes the paper observed:
+//!
+//! * **Control-set exhaustion** (SPAR-2 on Virtex-7): flip-flops can only
+//!   pack into a slice when they share a control set; past ~32% unique-
+//!   control-set utilization Vivado cannot find a legal placement even
+//!   with free slices (§IV-C). Capacity is one control set per 8 FFs
+//!   (a V7 slice's FF group; US+ CLBs have two such groups).
+//! * **Resource exhaustion**: LUT/FF/BRAM/slice caps, with a slice-
+//!   utilization ceiling of 87% (the V7 SPAR-2 point placed at 86%) and a
+//!   BRAM allocation derate of 98.4% for the benchmark's tile-granular
+//!   NEWS grid (it cannot use dangling BRAM columns; PiCaSO's linear rows
+//!   can — Table VI shows 98.4% vs 100%).
+
+use super::resource::{block_cost_at_scale, OverlayDesign};
+use crate::arch::geometry::{BLOCKS_PER_BRAM36, PES_PER_BLOCK};
+use crate::device::Device;
+
+/// Unique-control-set utilization ceiling: SPAR-2 placed at 32.1% and
+/// failed beyond (§IV-C).
+pub const CTRL_SET_LIMIT: f64 = 0.32;
+
+/// Slice-utilization ceiling for successful placement (SPAR-2's V7 point
+/// placed at 86.0%).
+pub const SLICE_LIMIT: f64 = 0.87;
+
+/// Fraction of BRAMs reachable by the benchmark's 4×4-tile NEWS grid
+/// (Table VI: SPAR-2 tops out at 98.4% BRAM on U55 where nothing else
+/// binds).
+pub const BENCH_BRAM_REACH: f64 = 0.984;
+
+/// What stopped the array from growing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    /// Every BRAM consumed — the scaling goal (PiCaSO everywhere).
+    Bram,
+    /// Unique control sets exceeded the placement ceiling (SPAR-2 on V7).
+    ControlSets,
+    /// Slice ceiling.
+    Slices,
+    /// LUT exhaustion.
+    Luts,
+    /// Flip-flop exhaustion.
+    FlipFlops,
+}
+
+impl Limiter {
+    /// Human-readable tag.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Limiter::Bram => "BRAM",
+            Limiter::ControlSets => "control sets",
+            Limiter::Slices => "slices",
+            Limiter::Luts => "LUTs",
+            Limiter::FlipFlops => "flip-flops",
+        }
+    }
+}
+
+/// Implementation result for the largest placeable array (Table VI rows).
+#[derive(Debug, Clone)]
+pub struct ImplReport {
+    /// Design implemented.
+    pub design: OverlayDesign,
+    /// Device id.
+    pub device: &'static str,
+    /// PE-blocks placed.
+    pub blocks: usize,
+    /// PEs (blocks × 16).
+    pub pes: usize,
+    /// LUT utilization fraction.
+    pub lut_frac: f64,
+    /// FF utilization fraction.
+    pub ff_frac: f64,
+    /// BRAM utilization fraction.
+    pub bram_frac: f64,
+    /// Unique-control-set utilization fraction.
+    pub ctrl_frac: f64,
+    /// Slice utilization fraction.
+    pub slice_frac: f64,
+    /// Binding constraint.
+    pub limiter: Limiter,
+}
+
+impl ImplReport {
+    /// PEs in the paper's 1000-based "K" units.
+    pub fn pes_k(&self) -> usize {
+        self.pes / 1000
+    }
+}
+
+/// Utilization fractions for a given block count.
+fn utilization(design: OverlayDesign, dev: &Device, blocks: usize) -> (f64, f64, f64, f64, f64) {
+    let cost = block_cost_at_scale(design, dev.family);
+    let b = blocks as f64;
+    let lut = b * cost.lut / dev.luts as f64;
+    let ff = b * cost.ff / dev.ffs as f64;
+    let bram = b / (dev.bram36 as f64 * BLOCKS_PER_BRAM36 as f64);
+    // Control-set capacity: one set per 8-FF slice group.
+    let ctrl_capacity = dev.ffs as f64 / 8.0;
+    let ctrl = b * design.ctrl_sets_per_block() / ctrl_capacity;
+    let slice = b * cost.slice / dev.slices as f64;
+    (lut, ff, bram, ctrl, slice)
+}
+
+/// Largest array of `design` that the placement model accepts on `dev`.
+pub fn max_array(design: OverlayDesign, dev: &Device) -> ImplReport {
+    let bram_blocks = dev.bram36 as usize * BLOCKS_PER_BRAM36;
+    let bram_cap = match design {
+        OverlayDesign::Benchmark => (bram_blocks as f64 * BENCH_BRAM_REACH) as usize,
+        OverlayDesign::PiCaSO(_) => bram_blocks,
+    };
+    let cost = block_cost_at_scale(design, dev.family);
+    let ctrl_capacity = dev.ffs as f64 / 8.0;
+    let ctrl_cap = (CTRL_SET_LIMIT * ctrl_capacity / design.ctrl_sets_per_block()) as usize;
+    let lut_cap = (dev.luts as f64 / cost.lut) as usize;
+    let ff_cap = (dev.ffs as f64 / cost.ff) as usize;
+    let slice_cap = (SLICE_LIMIT * dev.slices as f64 / cost.slice) as usize;
+
+    let caps = [
+        (bram_cap, Limiter::Bram),
+        (ctrl_cap, Limiter::ControlSets),
+        (lut_cap, Limiter::Luts),
+        (ff_cap, Limiter::FlipFlops),
+        (slice_cap, Limiter::Slices),
+    ];
+    let (blocks, limiter) = caps
+        .iter()
+        .min_by_key(|(cap, _)| *cap)
+        .copied()
+        .expect("non-empty caps");
+    let (lut_frac, ff_frac, bram_frac, ctrl_frac, slice_frac) =
+        utilization(design, dev, blocks);
+    ImplReport {
+        design,
+        device: dev.id,
+        blocks,
+        pes: blocks * PES_PER_BLOCK,
+        lut_frac,
+        ff_frac,
+        bram_frac,
+        ctrl_frac,
+        slice_frac,
+        limiter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PipelineConfig;
+    use crate::device::Device;
+
+    const FULL: OverlayDesign = OverlayDesign::PiCaSO(PipelineConfig::FullPipe);
+
+    #[test]
+    fn table6_virtex7() {
+        let v7 = Device::by_id("V7").unwrap();
+        // SPAR-2: 24K PEs, control-set limited (paper: failed placement
+        // beyond, at 32.1% unique control sets).
+        let bench = max_array(OverlayDesign::Benchmark, v7);
+        assert_eq!(bench.limiter, Limiter::ControlSets);
+        assert_eq!(bench.pes_k(), 24, "bench pes={}", bench.pes);
+        assert!((bench.ctrl_frac - 0.321).abs() < 0.01, "{}", bench.ctrl_frac);
+        assert!((bench.lut_frac - 0.746).abs() < 0.04, "{}", bench.lut_frac);
+        assert!((bench.bram_frac - 0.738).abs() < 0.03, "{}", bench.bram_frac);
+        assert!((bench.slice_frac - 0.86).abs() < 0.03, "{}", bench.slice_frac);
+        // PiCaSO-F: 33K PEs ("32,960"), BRAM limited at ~100%.
+        let full = max_array(FULL, v7);
+        assert_eq!(full.limiter, Limiter::Bram);
+        assert_eq!(full.pes, 32_960);
+        assert!(full.bram_frac > 0.999);
+        assert!((full.lut_frac - 0.325).abs() < 0.01, "{}", full.lut_frac);
+        assert!((full.ff_frac - 0.38).abs() < 0.01, "{}", full.ff_frac);
+        assert!((full.ctrl_frac - 0.021).abs() < 0.005, "{}", full.ctrl_frac);
+        assert!((full.slice_frac - 0.764).abs() < 0.01, "{}", full.slice_frac);
+        // §IV-C headline: 37.5% more PEs than SPAR-2 in the same device.
+        let gain = full.pes as f64 / bench.pes as f64 - 1.0;
+        assert!((gain - 0.375).abs() < 0.04, "gain {gain}");
+    }
+
+    #[test]
+    fn table6_u55() {
+        let u55 = Device::by_id("U55").unwrap();
+        let bench = max_array(OverlayDesign::Benchmark, u55);
+        // SPAR-2 on U55: BRAM-reach limited at 98.4%, 63K PEs.
+        assert_eq!(bench.limiter, Limiter::Bram);
+        assert_eq!(bench.pes_k(), 63);
+        assert!((bench.bram_frac - 0.984).abs() < 0.002);
+        assert!((bench.lut_frac - 0.416).abs() < 0.03, "{}", bench.lut_frac);
+        assert!((bench.ctrl_frac - 0.195).abs() < 0.01, "{}", bench.ctrl_frac);
+        let full = max_array(FULL, u55);
+        assert_eq!(full.limiter, Limiter::Bram);
+        assert_eq!(full.pes, 64_512); // "64K"
+        assert!((full.bram_frac - 1.0).abs() < 1e-9);
+        assert!((full.lut_frac - 0.148).abs() < 0.005);
+        assert!((full.ff_frac - 0.173).abs() < 0.005);
+        assert!((full.slice_frac - 0.32).abs() < 0.01);
+        // PiCaSO gets 2x better slice utilization than SPAR-2 (§IV-C).
+        assert!(bench.slice_frac / full.slice_frac > 1.9);
+    }
+
+    #[test]
+    fn picaso_scales_with_bram_on_every_table7_device() {
+        // §IV-C: PiCaSO-F fully utilizes BRAM independent of the
+        // slice-to-BRAM ratio.
+        for dev in crate::device::table7_devices() {
+            let r = max_array(FULL, dev);
+            assert_eq!(r.limiter, Limiter::Bram, "{}", dev.id);
+            assert_eq!(r.pes, dev.max_pes() as usize, "{}", dev.id);
+            assert_eq!(r.pes_k(), dev.max_pes_k() as usize, "{}", dev.id);
+        }
+    }
+
+    #[test]
+    fn benchmark_is_ratio_dependent() {
+        // SPAR-2's scalability depends on the slice-to-BRAM ratio: on
+        // LUT-poor V7 parts it is control-set/slice limited, never
+        // BRAM limited.
+        let v7a = Device::by_id("V7-a").unwrap();
+        let r = max_array(OverlayDesign::Benchmark, v7a);
+        assert_ne!(r.limiter, Limiter::Bram, "{:?}", r);
+        assert!(r.pes < v7a.max_pes() as usize);
+    }
+}

@@ -1,0 +1,99 @@
+//! The Fig 4 scalability study: PiCaSO-F max arrays across the Table VII
+//! devices, reporting BRAM/LUT/FF/slice utilization and achieved clock.
+
+use super::clock::achievable_clock_hz;
+use super::placer::{max_array, ImplReport};
+use super::resource::OverlayDesign;
+use crate::arch::PipelineConfig;
+use crate::device::Device;
+
+/// One device's point in the Fig 4 series.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Table VII device id.
+    pub device: &'static Device,
+    /// Placement report of the largest PiCaSO-F array.
+    pub report: ImplReport,
+    /// Achieved clock (Hz) — always the device BRAM Fmax for Full-Pipe.
+    pub clock_hz: f64,
+}
+
+impl SweepPoint {
+    /// Peak bit-serial PE-ops/s of the placed array (PEs × clock).
+    pub fn peak_pe_ops(&self) -> f64 {
+        self.report.pes as f64 * self.clock_hz
+    }
+}
+
+/// Run the Fig 4 sweep over `devices`.
+pub fn scalability_sweep(devices: &[&'static Device]) -> Vec<SweepPoint> {
+    let design = OverlayDesign::PiCaSO(PipelineConfig::FullPipe);
+    devices
+        .iter()
+        .map(|dev| SweepPoint {
+            device: dev,
+            report: max_array(design, dev),
+            clock_hz: achievable_clock_hz(design, dev),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::table7_devices;
+
+    #[test]
+    fn fig4_full_bram_everywhere() {
+        let points = scalability_sweep(&table7_devices());
+        assert_eq!(points.len(), 8);
+        for p in &points {
+            assert!(
+                p.report.bram_frac > 0.999,
+                "{}: bram {}",
+                p.device.id,
+                p.report.bram_frac
+            );
+            assert_eq!(p.report.pes, p.device.max_pes() as usize);
+        }
+    }
+
+    #[test]
+    fn fig4_utilization_extremes() {
+        // §IV-C: smallest device / lowest LUT-to-BRAM ratio (V7-a) has
+        // LUT & FF utilization around 40%; the largest high-ratio device
+        // (US-c) is negligible, around 5%.
+        let points = scalability_sweep(&table7_devices());
+        let v7a = points.iter().find(|p| p.device.id == "V7-a").unwrap();
+        assert!(
+            v7a.report.lut_frac > 0.30 && v7a.report.lut_frac < 0.45,
+            "{}",
+            v7a.report.lut_frac
+        );
+        assert!(
+            v7a.report.ff_frac > 0.35 && v7a.report.ff_frac < 0.45,
+            "{}",
+            v7a.report.ff_frac
+        );
+        let usc = points.iter().find(|p| p.device.id == "US-c").unwrap();
+        assert!(usc.report.lut_frac < 0.06, "{}", usc.report.lut_frac);
+        assert!(usc.report.ff_frac < 0.07, "{}", usc.report.ff_frac);
+    }
+
+    #[test]
+    fn fig4_linear_in_bram_capacity() {
+        // PE count scales linearly with BRAM count across the sweep:
+        // pes / bram36 is the constant 32.
+        for p in scalability_sweep(&table7_devices()) {
+            assert_eq!(p.report.pes, p.device.bram36 as usize * 32, "{}", p.device.id);
+        }
+    }
+
+    #[test]
+    fn peak_ops_scale_with_device() {
+        let points = scalability_sweep(&table7_devices());
+        let small = points.iter().find(|p| p.device.id == "US-a").unwrap();
+        let big = points.iter().find(|p| p.device.id == "US-d").unwrap();
+        assert!(big.peak_pe_ops() > 3.0 * small.peak_pe_ops());
+    }
+}

@@ -1,0 +1,109 @@
+//! A miniature property-testing framework.
+//!
+//! The vendored crate set has no `proptest`/`quickcheck`, so invariant
+//! tests use this: a seeded-generator runner with failure reporting that
+//! prints the failing case's seed so it can be replayed as a unit test.
+//! No shrinking — cases are kept small instead.
+
+use crate::util::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of generated cases.
+    pub cases: u64,
+    /// Base seed; case `i` runs with `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0x5EED_CAFE }
+    }
+}
+
+/// Run a property: `f` receives a per-case RNG and returns `Err(msg)` to
+/// report a violation. Panics (test failure) with the case seed on the
+/// first violation.
+pub fn run_prop<F>(name: &str, cfg: PropConfig, mut f: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i);
+        let mut rng = Xoshiro256::seeded(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' violated at case {i} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Shorthand with the default configuration.
+pub fn prop<F>(name: &str, f: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    run_prop(name, PropConfig::default(), f);
+}
+
+/// Generate a random power-of-two in `[2^lo_pow, 2^hi_pow]`.
+pub fn gen_pow2(rng: &mut Xoshiro256, lo_pow: u32, hi_pow: u32) -> usize {
+    1usize << rng.range(lo_pow as usize, hi_pow as usize + 1)
+}
+
+/// Generate a signed-value vector of the given width.
+pub fn gen_signed_vec(rng: &mut Xoshiro256, len: usize, bits: u32) -> Vec<i64> {
+    let mut v = vec![0i64; len];
+    rng.fill_signed(&mut v, bits);
+    v
+}
+
+/// Assert-equals helper returning `Result` for use inside properties.
+pub fn check_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, what: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("count", PropConfig { cases: 10, seed: 1 }, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' violated")]
+    fn failing_property_panics_with_seed() {
+        run_prop("boom", PropConfig { cases: 5, seed: 7 }, |rng| {
+            if rng.next_below(2) == 1 {
+                Err("bad".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators() {
+        let mut rng = Xoshiro256::seeded(2);
+        for _ in 0..100 {
+            let p = gen_pow2(&mut rng, 1, 6);
+            assert!(p.is_power_of_two() && (2..=64).contains(&p));
+        }
+        let v = gen_signed_vec(&mut rng, 32, 8);
+        assert_eq!(v.len(), 32);
+        assert!(v.iter().all(|&x| (-128..=127).contains(&x)));
+        assert!(check_eq(1, 1, "eq").is_ok());
+        assert!(check_eq(1, 2, "ne").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Small self-contained utilities: deterministic PRNG, statistics, and
+//! formatting helpers.
+//!
+//! The build environment is network-isolated and the vendored crate set does
+//! not include `rand`, so we carry a tiny, well-tested PRNG of our own
+//! (SplitMix64 seeding a xoshiro256++), which is all the simulator and the
+//! property-testing mini-framework need.
+
+mod rng;
+mod stats;
+
+pub use rng::{SplitMix64, Xoshiro256};
+pub use stats::{OnlineStats, Percentiles};
+
+/// Integer ceiling division.
+#[inline]
+pub const fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `ceil(log2(x))` for `x >= 1`. `ceil_log2(1) == 0`.
+#[inline]
+pub const fn ceil_log2(x: usize) -> u32 {
+    assert!(x >= 1);
+    (usize::BITS - (x - 1).leading_zeros()) * ((x > 1) as u32)
+}
+
+/// Exact `log2` of a power of two; panics otherwise.
+#[inline]
+pub fn exact_log2(x: usize) -> u32 {
+    assert!(x.is_power_of_two(), "exact_log2 of non-power-of-two {x}");
+    x.trailing_zeros()
+}
+
+/// Format a count with thousands separators (`12_345 -> "12,345"`).
+pub fn group_thousands(n: u64) -> String {
+    let s = n.to_string();
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Format a frequency in Hz in engineering units (e.g. `737 MHz`).
+pub fn fmt_freq(hz: f64) -> String {
+    if hz >= 1e9 {
+        format!("{:.2} GHz", hz / 1e9)
+    } else if hz >= 1e6 {
+        format!("{:.0} MHz", hz / 1e6)
+    } else if hz >= 1e3 {
+        format!("{:.0} kHz", hz / 1e3)
+    } else {
+        format!("{hz:.0} Hz")
+    }
+}
+
+/// Format an operations-per-second rate (e.g. `1.25 TMAC/s`).
+pub fn fmt_rate(per_sec: f64, unit: &str) -> String {
+    let (v, prefix) = if per_sec >= 1e12 {
+        (per_sec / 1e12, "T")
+    } else if per_sec >= 1e9 {
+        (per_sec / 1e9, "G")
+    } else if per_sec >= 1e6 {
+        (per_sec / 1e6, "M")
+    } else if per_sec >= 1e3 {
+        (per_sec / 1e3, "k")
+    } else {
+        (per_sec, "")
+    };
+    format!("{v:.2} {prefix}{unit}/s")
+}
+
+/// Format a duration given in nanoseconds with a sensible unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{ns:.1} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+        assert_eq!(div_ceil(128, 16), 8);
+    }
+
+    #[test]
+    fn ceil_log2_basic() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn exact_log2_powers() {
+        for p in 0..20 {
+            assert_eq!(exact_log2(1usize << p), p);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn exact_log2_rejects_non_pow2() {
+        exact_log2(12);
+    }
+
+    #[test]
+    fn thousands() {
+        assert_eq!(group_thousands(0), "0");
+        assert_eq!(group_thousands(999), "999");
+        assert_eq!(group_thousands(1000), "1,000");
+        assert_eq!(group_thousands(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn freq_formatting() {
+        assert_eq!(fmt_freq(737e6), "737 MHz");
+        assert_eq!(fmt_freq(1.5e9), "1.50 GHz");
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(1.25e12, "MAC"), "1.25 TMAC/s");
+        assert_eq!(fmt_rate(5.0e9, "op"), "5.00 Gop/s");
+    }
+}

@@ -1,0 +1,207 @@
+//! Deterministic pseudo-random number generators.
+//!
+//! SplitMix64 (Steele et al.) is used for seeding; xoshiro256++ (Blackman &
+//! Vigna) is the workhorse generator. Both are tiny, fast, and — crucially
+//! for the test suite — fully deterministic across platforms.
+
+/// SplitMix64: a 64-bit mixer used to expand a single seed into a stream.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from an arbitrary seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ PRNG. Not cryptographic; excellent for simulation workloads.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed the generator; the four state words are expanded with SplitMix64
+    /// so that any `u64` seed (including 0) yields a valid non-zero state.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform value in `[0, bound)`. Uses Lemire's multiply-shift reduction
+    /// with rejection to remove modulo bias.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform `usize` in `[lo, hi)` (half-open). Panics if `lo >= hi`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "range({lo}, {hi})");
+        lo + self.next_below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform `i64` in `[lo, hi]` (inclusive), supporting negative bounds.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128 + 1) as u64;
+        lo.wrapping_add(self.next_below(span) as i64)
+    }
+
+    /// Random boolean.
+    #[inline]
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fill a slice with signed values of the given bit width (two's
+    /// complement range `[-2^(n-1), 2^(n-1)-1]`), as the corner-turning
+    /// front end would receive from a host.
+    pub fn fill_signed(&mut self, out: &mut [i64], bits: u32) {
+        assert!((1..=63).contains(&bits));
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        for v in out.iter_mut() {
+            *v = self.range_i64(lo, hi);
+        }
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_known_vector() {
+        // Reference values for seed 1234567 (from the public-domain C code).
+        let mut sm = SplitMix64::new(1234567);
+        let v = sm.next_u64();
+        assert_eq!(v, 6457827717110365317);
+    }
+
+    #[test]
+    fn xoshiro_bounds() {
+        let mut rng = Xoshiro256::seeded(7);
+        for _ in 0..10_000 {
+            let v = rng.next_below(37);
+            assert!(v < 37);
+        }
+        for _ in 0..10_000 {
+            let v = rng.range(5, 9);
+            assert!((5..9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn xoshiro_signed_fill_respects_width() {
+        let mut rng = Xoshiro256::seeded(99);
+        let mut buf = vec![0i64; 4096];
+        for bits in [1u32, 2, 4, 8, 16, 32] {
+            rng.fill_signed(&mut buf, bits);
+            let lo = -(1i64 << (bits - 1));
+            let hi = (1i64 << (bits - 1)) - 1;
+            assert!(buf.iter().all(|&v| v >= lo && v <= hi), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn xoshiro_f64_in_unit_interval() {
+        let mut rng = Xoshiro256::seeded(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Xoshiro256::seeded(11);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_i64_inclusive_hits_ends() {
+        let mut rng = Xoshiro256::seeded(5);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..10_000 {
+            let v = rng.range_i64(-2, 2);
+            assert!((-2..=2).contains(&v));
+            saw_lo |= v == -2;
+            saw_hi |= v == 2;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

@@ -1,0 +1,177 @@
+//! Failure-injection tests: every layer must fail *loudly and precisely*
+//! on bad inputs — silent wraparound or UB in a simulator invalidates the
+//! study it backs.
+
+use picaso::compiler::{execute_gemm, GemmShape, PimCompiler};
+use picaso::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind};
+use picaso::isa::{asm, BufId, Instruction, RfAddr};
+use picaso::prelude::*;
+
+#[test]
+fn load_from_unbound_buffer_fails() {
+    let mut arr = PimArray::new(ArrayGeometry::new(1, 1), PipelineConfig::FullPipe);
+    let mut mc = Microcode::new("bad", 8);
+    mc.push(Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(3) });
+    let err = arr.execute(&mc).unwrap_err();
+    assert!(err.to_string().contains("buf3"), "{err}");
+}
+
+#[test]
+fn register_file_overflow_fails() {
+    let mut arr = PimArray::new(ArrayGeometry::new(1, 1), PipelineConfig::FullPipe);
+    let mut stats = RunStats::default();
+    // 1024-deep register file: an op ending past wordline 1024 must fail.
+    let err = arr
+        .step(
+            Instruction::Alu {
+                op: AluOp::Add,
+                dst: RfAddr(1020),
+                x: RfAddr(0),
+                y: RfAddr(8),
+                width: 8,
+            },
+            &mut stats,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("register file depth"), "{err}");
+    // Mult writes 2w bits.
+    let err = arr
+        .step(
+            Instruction::Mult { dst: RfAddr(1010), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+            &mut stats,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("register file depth"), "{err}");
+}
+
+#[test]
+fn non_pow2_reduction_fails_with_config_error() {
+    let mut arr = PimArray::new(ArrayGeometry::new(1, 3), PipelineConfig::FullPipe);
+    let mut stats = RunStats::default();
+    let err = arr
+        .step(Instruction::Accumulate { dst: RfAddr(0), width: 8 }, &mut stats)
+        .unwrap_err();
+    assert!(err.to_string().contains("power of two"), "{err}");
+}
+
+#[test]
+fn fold_level_out_of_range_fails() {
+    let mut arr = PimArray::new(ArrayGeometry::new(1, 1), PipelineConfig::FullPipe);
+    let mut stats = RunStats::default();
+    for level in [0u8, 5] {
+        let err = arr
+            .step(
+                Instruction::Fold {
+                    pattern: picaso::isa::FoldPattern::Halving,
+                    level,
+                    dst: RfAddr(0),
+                    width: 8,
+                },
+                &mut stats,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("fold level"), "{err}");
+    }
+}
+
+#[test]
+fn shrinking_extend_fails() {
+    let mut arr = PimArray::new(ArrayGeometry::new(1, 1), PipelineConfig::FullPipe);
+    let mut stats = RunStats::default();
+    let err = arr
+        .step(Instruction::Extend { dst: RfAddr(0), from: 16, to: 8 }, &mut stats)
+        .unwrap_err();
+    assert!(err.to_string().contains("shrinks"), "{err}");
+}
+
+#[test]
+fn compiler_rejects_degenerate_shapes() {
+    let c = PimCompiler::new(ArrayGeometry::new(2, 2));
+    for shape in [
+        GemmShape { m: 0, k: 8, n: 8 },
+        GemmShape { m: 8, k: 0, n: 8 },
+        GemmShape { m: 8, k: 8, n: 0 },
+    ] {
+        assert!(c.gemm(shape, 8).is_err(), "{shape:?}");
+    }
+    assert!(c.gemm(GemmShape { m: 1, k: 1, n: 1 }, 0).is_err());
+    assert!(c.gemm(GemmShape { m: 1, k: 1, n: 1 }, 32).is_err());
+}
+
+#[test]
+fn executor_rejects_wrong_operand_sizes() {
+    let geom = ArrayGeometry::new(1, 1);
+    let plan = PimCompiler::new(geom).gemm(GemmShape { m: 2, k: 4, n: 2 }, 8).unwrap();
+    let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+    assert!(execute_gemm(&mut arr, &plan, &[1; 7], &[1; 8]).is_err());
+    assert!(execute_gemm(&mut arr, &plan, &[1; 8], &[1; 9]).is_err());
+}
+
+#[test]
+fn coordinator_surfaces_worker_errors_without_dying() {
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        ..Default::default()
+    })
+    .unwrap();
+    // One poison job among good ones.
+    let good_shape = GemmShape { m: 2, k: 16, n: 2 };
+    for id in 0..4u64 {
+        let (a, b) = if id == 2 {
+            (vec![0i64; 1], vec![0i64; 1]) // wrong sizes
+        } else {
+            (vec![1i64; 32], vec![1i64; 32])
+        };
+        coord
+            .submit(Job { id, kind: JobKind::Gemm { shape: good_shape, width: 8, a, b } })
+            .unwrap();
+    }
+    let mut results = coord.drain(4).unwrap();
+    results.sort_by_key(|r| r.id);
+    assert!(results[2].error.is_some(), "poison job must report");
+    for id in [0usize, 1, 3] {
+        assert!(results[id].error.is_none(), "job {id} must survive");
+        assert_eq!(results[id].output, vec![16i64; 4]);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn assembler_rejects_malformed_programs() {
+    for (src, needle) in [
+        ("FROB r1, r2", "unknown mnemonic"),
+        ("ADD r1, r2, r3", "expects 4"),
+        ("ADD rX, r2, r3, w=8", "bad register"),
+        ("MULT r1, r2, r3, w=0", "bad width"),
+        ("FOLD.H x, r1, w=8", "bad level"),
+        ("LOAD r0, w=8, bufZ", "bad buffer"),
+    ] {
+        let err = asm::parse_program(src, 8).unwrap_err();
+        assert!(err.to_string().contains(needle), "{src}: {err}");
+    }
+}
+
+#[test]
+fn custom_tile_scratch_depth_guard() {
+    use picaso::custom::CustomTile;
+    let mut tile = CustomTile::new(CustomDesign::Ccb);
+    // Accumulating with a scratch window beyond 256 wordlines must fail
+    // (the Fig 7 scarcity made concrete).
+    let vals = vec![1i64; 16];
+    tile.write_values(0, 16, &vals).unwrap();
+    assert!(tile.accumulate(0, 16, 16, 250).is_err());
+    // q beyond the 144 physical bitlines must fail too.
+    let huge_q = 256;
+    assert!(tile.accumulate(0, 16, huge_q, 64).is_err());
+    // And a legal window still works.
+    assert!(tile.accumulate(0, 16, 16, 64).is_ok());
+}
+
+#[test]
+fn runtime_missing_artifact_is_an_error_not_a_crash() {
+    let rt = picaso::runtime::XlaRuntime::cpu("/nonexistent-dir");
+    let mut rt = rt.expect("client still constructs");
+    let err = rt.load("nope").unwrap_err();
+    assert!(err.to_string().contains("nope"), "{err}");
+}

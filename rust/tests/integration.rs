@@ -1,0 +1,212 @@
+//! Full-stack integration tests: compiler → array simulator → results,
+//! cross-checked against software references, the analytic cycle algebra,
+//! and (when artifacts are built) the XLA golden models.
+
+use picaso::compiler::{execute_gemm, gemm_ref, GemmShape, PimCompiler};
+use picaso::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind};
+use picaso::isa::asm;
+use picaso::prelude::*;
+use picaso::runtime::{artifact, XlaRuntime, ARTIFACTS_DIR};
+use picaso::testutil::{check_eq, gen_pow2, gen_signed_vec, prop, run_prop, PropConfig};
+
+// ---------------------------------------------------------------- GEMM
+
+#[test]
+fn prop_gemm_matches_reference_across_shapes_and_archs() {
+    run_prop(
+        "gemm == reference",
+        PropConfig { cases: 30, seed: 0x6E66 },
+        |rng| {
+            let rows = rng.range(1, 5);
+            let cols = gen_pow2(rng, 0, 2); // 1..4 blocks per row
+            let geom = ArrayGeometry::new(rows, cols);
+            let m = rng.range(1, 5);
+            let n = rng.range(1, 5);
+            let k = rng.range(1, 2 * geom.row_lanes() + 1);
+            let width = [4u16, 6, 8][rng.range(0, 3)] as u16;
+            let shape = GemmShape { m, k, n };
+            let a = gen_signed_vec(rng, m * k, width as u32);
+            let b = gen_signed_vec(rng, k * n, width as u32);
+            let kind = if rng.bool() {
+                ArchKind::Overlay(PipelineConfig::FullPipe)
+            } else {
+                ArchKind::Spar2
+            };
+            let plan = PimCompiler::new(geom)
+                .gemm(shape, width)
+                .map_err(|e| e.to_string())?;
+            let mut arr = PimArray::with_kind(geom, kind);
+            let (c, stats) = execute_gemm(&mut arr, &plan, &a, &b).map_err(|e| e.to_string())?;
+            check_eq(c, gemm_ref(shape, &a, &b), &format!("{kind:?} {shape:?} w={width}"))?;
+            if stats.cycles == 0 {
+                return Err("zero cycles charged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_booth_skip_never_changes_results() {
+    prop("booth-skip result invariance", |rng| {
+        let geom = ArrayGeometry::new(2, 1);
+        let shape = GemmShape { m: 2, k: 16, n: 2 };
+        let a = gen_signed_vec(rng, 32, 8);
+        let b = gen_signed_vec(rng, 32, 8);
+        let plan = PimCompiler::new(geom).gemm(shape, 8).map_err(|e| e.to_string())?;
+        let run = |skip: bool| -> Result<(Vec<i64>, u64), String> {
+            let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+            arr.set_booth_skip(skip);
+            let (c, s) = execute_gemm(&mut arr, &plan, &a, &b).map_err(|e| e.to_string())?;
+            Ok((c, s.cycles))
+        };
+        let (c1, cyc1) = run(false)?;
+        let (c2, cyc2) = run(true)?;
+        check_eq(c1, c2, "results")?;
+        if cyc2 > cyc1 {
+            return Err(format!("skip increased cycles: {cyc2} > {cyc1}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------ cycle-algebra identity
+
+#[test]
+fn prop_simulator_cycles_equal_analytic_forms() {
+    run_prop(
+        "sim cycles == Table V algebra",
+        PropConfig { cases: 40, seed: 0xA15 },
+        |rng| {
+            let cols = gen_pow2(rng, 0, 4); // up to 16 blocks => q up to 256
+            let geom = ArrayGeometry::new(1, cols);
+            let q = geom.row_lanes();
+            let width = [8u16, 16, 32][rng.range(0, 3)];
+            let kind = if rng.bool() {
+                ArchKind::Overlay(PipelineConfig::FullPipe)
+            } else {
+                ArchKind::Spar2
+            };
+            let mut arr = PimArray::with_kind(geom, kind);
+            let mut stats = RunStats::default();
+            arr.step(
+                Instruction::Accumulate { dst: picaso::isa::RfAddr(0), width },
+                &mut stats,
+            )
+            .map_err(|e| e.to_string())?;
+            check_eq(
+                stats.cycles,
+                kind.cycles().accumulate(q, width as u32),
+                &format!("{kind:?} q={q} N={width}"),
+            )
+        },
+    );
+}
+
+// ------------------------------------------------------------- assembler
+
+#[test]
+fn compiled_gemm_roundtrips_through_assembler() {
+    let geom = ArrayGeometry::new(2, 2);
+    let plan = PimCompiler::new(geom)
+        .gemm(GemmShape { m: 4, k: 40, n: 4 }, 8)
+        .unwrap();
+    let text = asm::format_program(&plan.microcode);
+    let parsed = asm::parse_program(&text, plan.width).unwrap();
+    assert_eq!(parsed.instrs, plan.microcode.instrs);
+}
+
+// ----------------------------------------------------------- coordinator
+
+#[test]
+fn coordinator_end_to_end_with_mixed_shapes() {
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(4, 2),
+        ..Default::default()
+    })
+    .unwrap();
+    let shapes = [
+        GemmShape { m: 4, k: 32, n: 4 },
+        GemmShape { m: 2, k: 64, n: 3 },
+        GemmShape { m: 1, k: 16, n: 8 },
+    ];
+    let mut rng = picaso::util::Xoshiro256::seeded(77);
+    let mut jobs = Vec::new();
+    let mut expects = Vec::new();
+    for id in 0..9u64 {
+        let shape = shapes[id as usize % 3];
+        let a = gen_signed_vec(&mut rng, shape.m * shape.k, 8);
+        let b = gen_signed_vec(&mut rng, shape.k * shape.n, 8);
+        expects.push(gemm_ref(shape, &a, &b));
+        jobs.push(Job { id, kind: JobKind::Gemm { shape, width: 8, a, b } });
+    }
+    let (results, _) = coord.run_batch(jobs).unwrap();
+    for (i, r) in results.iter().enumerate() {
+        assert!(r.error.is_none());
+        assert_eq!(r.output, expects[i], "job {i}");
+    }
+    coord.shutdown();
+}
+
+// ------------------------------------------------------------ XLA golden
+
+#[test]
+fn pim_gemm_matches_xla_golden_model() {
+    let mut rt = match XlaRuntime::cpu(ARTIFACTS_DIR) {
+        Ok(rt) => rt,
+        Err(e) => panic!("PJRT client failed: {e}"),
+    };
+    if !rt.has_artifact(artifact::GEMM) {
+        eprintln!("skipping golden test: run `make artifacts`");
+        return;
+    }
+    rt.load(artifact::GEMM).unwrap();
+    let shape = GemmShape { m: 16, k: 64, n: 16 };
+    let mut rng = picaso::util::Xoshiro256::seeded(0x601D);
+    let a = gen_signed_vec(&mut rng, shape.m * shape.k, 8);
+    let b = gen_signed_vec(&mut rng, shape.k * shape.n, 8);
+
+    // PIM path.
+    let geom = ArrayGeometry::new(8, 4);
+    let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+    let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+    let (c_pim, _) = execute_gemm(&mut arr, &plan, &a, &b).unwrap();
+
+    // Golden path.
+    let c_xla = rt.gemm_golden(shape.m, shape.k, shape.n, &a, &b).unwrap();
+    assert_eq!(c_pim, c_xla, "PIM and XLA golden GEMM must agree bit-for-bit");
+}
+
+#[test]
+fn pallas_bitserial_artifact_matches_sim() {
+    let mut rt = XlaRuntime::cpu(ARTIFACTS_DIR).unwrap();
+    if !rt.has_artifact(artifact::BITSERIAL) {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    rt.load(artifact::BITSERIAL).unwrap();
+    // The artifact computes 8 row-dot-products over q=64 int8 lanes —
+    // the same workload as one 4-block PiCaSO row per sample.
+    let mut rng = picaso::util::Xoshiro256::seeded(0xBAD5EED);
+    let a = gen_signed_vec(&mut rng, 8 * 64, 8);
+    let b = gen_signed_vec(&mut rng, 8 * 64, 8);
+    let fa: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+    let fb: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+    let out = rt
+        .run_f32(artifact::BITSERIAL, &[(fa, vec![8, 64]), (fb, vec![8, 64])])
+        .unwrap();
+
+    // Simulated overlay: 8 rows of 4 blocks, one MAC group per row.
+    let geom = ArrayGeometry::new(8, 4);
+    let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+    arr.set_buffer(picaso::compiler::BUF_A, a.clone());
+    arr.set_buffer(picaso::compiler::BUF_B, b.clone());
+    let mc = MacProgram::elementwise_mul_then_accumulate(8, 64);
+    arr.execute(&mc).unwrap();
+    for row in 0..8 {
+        let pim = arr.row_result(row, picaso::compiler::WL_ACC, 22);
+        let pallas = out[row].round() as i64;
+        assert_eq!(pim, pallas, "row {row}: PIM sim vs Pallas kernel");
+    }
+}
