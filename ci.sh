@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI gate for the PiCaSO reproduction. Mirrors the tier-1 verify from
+# ROADMAP.md and adds the documentation and formatting gates.
+#
+#   ./ci.sh            run everything
+#   ./ci.sh fast       build + tests only (tier-1)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+step() { printf '\n=== %s ===\n' "$*"; }
+
+step "tier-1: cargo build --release"
+cargo build --release
+
+step "tier-1: cargo test -q"
+cargo test -q
+
+if [ "${1:-}" = "fast" ]; then
+    echo "fast mode: skipping doc/fmt/bench-compile gates"
+    exit 0
+fi
+
+step "compile benches + examples"
+cargo build --release --benches --examples
+
+step "doc gate: cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+step "format gate: cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt not installed — skipping (install with: rustup component add rustfmt)"
+fi
+
+echo
+echo "ci.sh: all gates passed"

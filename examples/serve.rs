@@ -1,82 +1,193 @@
-//! Batched inference serving through the coordinator: a stream of GEMM
-//! jobs (MLP layers) dispatched across worker regions, with latency
-//! percentiles and throughput — the deployment shape a PIM overlay would
-//! actually run behind.
+//! Batched inference serving through the coordinator, measured closed
+//! loop — the deployment shape a PIM overlay would actually run behind.
+//!
+//! Two phases over the same workload (single-sample MLP-layer GEMMs with
+//! one pinned weight matrix, the repeat-inference regime):
+//!
+//! 1. **seed path** — micro-batching disabled, weights re-shipped with
+//!    every job: exactly the one-job-per-invocation behaviour of the
+//!    original coordinator.
+//! 2. **serving path** — micro-batching + a persistent session: same-key
+//!    jobs coalesce into packed array rounds and the weight staging is
+//!    precomputed once; swept across client counts for a
+//!    latency/throughput curve.
+//!
+//! Every result is verified against the software reference
+//! (`gemm_ref`) in both phases — the speedup is at equal correctness.
 //!
 //! ```bash
-//! cargo run --release --example serve -- [jobs] [workers]
+//! cargo run --release --example serve -- [jobs-per-phase] [workers]
 //! ```
 
 use picaso::compiler::{gemm_ref, GemmShape};
-use picaso::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind};
+use picaso::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, SessionId,
+};
+use picaso::metrics::MetricsSnapshot;
 use picaso::prelude::*;
 use picaso::util::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Closed-loop load: `clients` threads, each submitting one job and
+/// waiting on its handle before the next. Returns the phase snapshot and
+/// the number of incorrect/failed jobs.
+fn run_phase(
+    coord: &Arc<Coordinator>,
+    clients: usize,
+    jobs: usize,
+    shape: GemmShape,
+    weights: &Arc<Vec<i64>>,
+    session: Option<SessionId>,
+    id_base: u64,
+) -> picaso::Result<(MetricsSnapshot, usize)> {
+    coord.serving_metrics().reset_window();
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let quota = jobs / clients + usize::from(c < jobs % clients);
+        let coord = Arc::clone(coord);
+        let weights = Arc::clone(weights);
+        threads.push(std::thread::spawn(move || -> picaso::Result<usize> {
+            let mut rng = Xoshiro256::seeded(id_base ^ (0xC11E47 + c as u64));
+            let mut bad = 0;
+            for j in 0..quota {
+                let id = id_base + (c * 1_000_000 + j) as u64;
+                let mut a = vec![0i64; shape.m * shape.k];
+                rng.fill_signed(&mut a, 8);
+                let expect = gemm_ref(shape, &a, &weights);
+                let handle = match session {
+                    Some(sid) => coord.submit_session(id, sid, a)?,
+                    None => coord.submit_job(Job {
+                        id,
+                        kind: JobKind::Gemm {
+                            shape,
+                            width: 8,
+                            a,
+                            b: weights.as_ref().clone(),
+                        },
+                    })?,
+                };
+                let r = handle.wait();
+                if r.error.is_some() || r.output != expect {
+                    bad += 1;
+                }
+            }
+            Ok(bad)
+        }));
+    }
+    let mut bad = 0;
+    for t in threads {
+        bad += t
+            .join()
+            .map_err(|_| picaso::Error::Runtime("client thread panicked".into()))??;
+    }
+    Ok((coord.metrics_snapshot(), bad))
+}
 
 fn main() -> picaso::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let jobs: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let jobs: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(96);
     let workers: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
 
     let geom = ArrayGeometry::new(8, 4);
+    // Single-sample inference against one pinned layer: 10 outputs per
+    // job on an 8-row region — the ragged-round case micro-batching
+    // packs away.
+    let shape = GemmShape { m: 1, k: 64, n: 10 };
     println!(
-        "serving {jobs} jobs on {workers} workers, each a {}x{}-block PiCaSO-F region ({} PEs)",
+        "serving {jobs} jobs/phase on {workers} workers, each an {}x{}-block PiCaSO-F region \
+         ({} PEs); workload: {}x{}x{} int8 GEMM, pinned weights",
         geom.rows,
         geom.cols,
-        geom.pes()
+        geom.pes(),
+        shape.m,
+        shape.k,
+        shape.n,
     );
-    let mut coord = Coordinator::new(CoordinatorConfig {
+
+    let mut rng = Xoshiro256::seeded(0x5E12);
+    let mut weights = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut weights, 8);
+    let weights = Arc::new(weights);
+
+    // ---------------------------------------------------- phase 1: seed
+    // Saturating load (2 clients per worker) so both phases are compared
+    // at the same offered concurrency.
+    let load = 2 * workers.max(1);
+    let seed_coord = Arc::new(Coordinator::new(CoordinatorConfig {
         workers,
         geom,
+        batch: BatchPolicy::disabled(),
         ..Default::default()
-    })?;
-
-    // A mixed stream of MLP-layer shapes (the paper's target workloads).
-    let shapes = [
-        GemmShape { m: 16, k: 64, n: 32 },
-        GemmShape { m: 16, k: 32, n: 10 },
-        GemmShape { m: 8, k: 128, n: 16 },
-    ];
-    let mut rng = Xoshiro256::seeded(0x5E12);
-    let mut batch = Vec::new();
-    let mut expected = Vec::new();
-    for id in 0..jobs as u64 {
-        let shape = shapes[id as usize % shapes.len()];
-        let mut a = vec![0i64; shape.m * shape.k];
-        let mut b = vec![0i64; shape.k * shape.n];
-        rng.fill_signed(&mut a, 8);
-        rng.fill_signed(&mut b, 8);
-        expected.push(gemm_ref(shape, &a, &b));
-        batch.push(Job { id, kind: JobKind::Gemm { shape, width: 8, a, b } });
+    })?);
+    let (seed_snap, seed_bad) = run_phase(&seed_coord, load, jobs, shape, &weights, None, 0)?;
+    assert_eq!(seed_bad, 0, "seed path must verify against gemm_ref");
+    if let Ok(c) = Arc::try_unwrap(seed_coord) {
+        c.shutdown();
     }
+    println!("\n--- seed path (no batching, per-job weights, {load} clients) ---");
+    println!("{}", seed_snap.render());
 
-    let (results, mut metrics) = coord.run_batch(batch)?;
+    // ------------------------------------- phase 2: batched + session
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        workers,
+        geom,
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        ..Default::default()
+    })?);
+    let sid = coord.open_session(shape, 8, weights.as_ref().clone())?;
 
-    // Verify every result against software.
-    let mut verified = 0;
-    for r in &results {
-        assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
-        assert_eq!(r.output, expected[r.id as usize], "job {}", r.id);
-        verified += 1;
-    }
-    // Worker balance.
-    let mut per_worker = std::collections::HashMap::new();
-    for r in &results {
-        *per_worker.entry(r.worker).or_insert(0usize) += 1;
-    }
-    coord.shutdown();
-
-    println!("\nall {verified} results verified against software GEMM");
-    println!("worker balance: {per_worker:?}");
-    println!("{}", metrics.summary());
+    println!("\n--- serving path (micro-batch ≤8 / 200us, session weights) ---");
     println!(
-        "latency p50/p90/p99: {:.0} / {:.0} / {:.0} us",
-        metrics.latency_us.quantile(0.50).unwrap_or(0.0),
-        metrics.latency_us.quantile(0.90).unwrap_or(0.0),
-        metrics.latency_us.quantile(0.99).unwrap_or(0.0),
+        "{:>8} {:>12} {:>10} {:>10} {:>10} {:>11}",
+        "clients", "jobs/s", "p50 us", "p95 us", "p99 us", "mean batch"
+    );
+    let mut saturated: Option<MetricsSnapshot> = None;
+    for (phase, clients) in [1usize, 2, workers.max(1), load].into_iter().enumerate() {
+        let (snap, bad) = run_phase(
+            &coord,
+            clients,
+            jobs,
+            shape,
+            &weights,
+            Some(sid),
+            (phase as u64 + 1) * 100_000_000,
+        )?;
+        assert_eq!(bad, 0, "serving path must verify against gemm_ref");
+        println!(
+            "{:>8} {:>12.1} {:>10.0} {:>10.0} {:>10.0} {:>11.2}",
+            clients,
+            snap.jobs_per_sec(),
+            snap.total.p50,
+            snap.total.p95,
+            snap.total.p99,
+            snap.mean_batch,
+        );
+        if clients == load {
+            saturated = Some(snap);
+        }
+    }
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+
+    // ------------------------------------------------------- comparison
+    let batched = saturated.expect("saturated point measured");
+    let speedup = if seed_snap.jobs_per_sec() > 0.0 {
+        batched.jobs_per_sec() / seed_snap.jobs_per_sec()
+    } else {
+        0.0
+    };
+    println!(
+        "\nat {load} clients: {:.1} jobs/s batched+session vs {:.1} jobs/s seed path \
+         => {speedup:.2}x throughput (all outputs == gemm_ref in both phases)",
+        batched.jobs_per_sec(),
+        seed_snap.jobs_per_sec(),
     );
     println!(
-        "simulated PE-cycles/s: {}",
-        picaso::util::fmt_rate(metrics.sim_cycles_per_sec(), "cyc")
+        "simulated PE-cycles/job: seed {} vs batched {} (round packing)",
+        if seed_snap.jobs > 0 { seed_snap.pim_cycles / seed_snap.jobs } else { 0 },
+        if batched.jobs > 0 { batched.pim_cycles / batched.jobs } else { 0 },
     );
     println!("\nserve OK");
     Ok(())

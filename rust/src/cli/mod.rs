@@ -8,7 +8,9 @@
 //!   fig4|fig5|fig6|fig7                  regenerate a paper figure
 //!   all                                  everything above, in order
 //!   gemm      [--m --k --n --width --rows --cols --arch --booth-skip]
-//!   serve     [--jobs --workers --rows --cols]
+//!   serve     [--jobs --workers --clients --rows --cols --m --k --n
+//!              --batch --max-wait-us --capacity --policy --backpressure
+//!              --no-session]
 //!   asm       --file=<path> [--width]    assemble + disassemble a program
 //!   info                                 device database summary
 //! ```
@@ -16,11 +18,16 @@
 use crate::arch::{ArchKind, PipelineConfig};
 use crate::array::ArrayGeometry;
 use crate::compiler::{gemm_ref, GemmShape};
-use crate::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind};
+use crate::coordinator::{
+    Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, QueuePolicy,
+    SchedulerConfig,
+};
 use crate::report::paper;
 use crate::util::Xoshiro256;
 use crate::{Error, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -80,7 +87,12 @@ paper artifacts:
 system:
   gemm   --m=16 --k=64 --n=16 --width=8 --rows=8 --cols=4
          [--arch=full|single|rf|op|spar2] [--booth-skip]
-  serve  --jobs=64 --workers=4 --rows=8 --cols=4
+  serve  --jobs=64 --workers=4 --clients=4 --rows=8 --cols=4
+         [--m=4 --k=64 --n=8]            served GEMM shape
+         [--batch=8 --max-wait-us=200]   micro-batch flush policy
+         [--capacity=256]                submission queue bound
+         [--policy=fifo|priority] [--backpressure=block|reject]
+         [--no-session]                  per-job weights (seed behaviour)
   info   device database summary
   help   this text
 ";
@@ -175,30 +187,132 @@ fn cmd_gemm(args: &Args) -> Result<String> {
 fn cmd_serve(args: &Args) -> Result<String> {
     let jobs: usize = args.get("jobs", 64)?;
     let workers: usize = args.get("workers", 4)?;
+    let clients: usize = args.get("clients", 4)?.max(1);
     let rows: usize = args.get("rows", 8)?;
     let cols: usize = args.get("cols", 4)?;
+    let shape = GemmShape {
+        m: args.get("m", 4)?,
+        k: args.get("k", 64)?,
+        n: args.get("n", 8)?,
+    };
+    let batch: usize = args.get("batch", 8)?;
+    let max_wait_us: u64 = args.get("max-wait-us", 200)?;
+    let capacity: usize = args.get("capacity", 256)?;
+    let policy = match args.get::<String>("policy", "fifo".into())?.as_str() {
+        "fifo" => QueuePolicy::Fifo,
+        "priority" => QueuePolicy::Priority,
+        other => return Err(Error::Config(format!("unknown policy '{other}'"))),
+    };
+    let backpressure = match args.get::<String>("backpressure", "block".into())?.as_str() {
+        "block" => Backpressure::Block,
+        "reject" => Backpressure::Reject,
+        other => return Err(Error::Config(format!("unknown backpressure '{other}'"))),
+    };
+    let use_session = !args.flag("no-session");
+
     let cfg = CoordinatorConfig {
         workers,
         geom: ArrayGeometry::new(rows, cols),
+        scheduler: SchedulerConfig { capacity, policy, backpressure },
+        batch: BatchPolicy {
+            max_batch: batch.max(1),
+            max_wait: Duration::from_micros(max_wait_us),
+        },
         ..Default::default()
     };
-    let mut coord = Coordinator::new(cfg)?;
-    let shape = GemmShape { m: 8, k: 64, n: 8 };
+    let coord = Arc::new(Coordinator::new(cfg)?);
+
+    // One weight matrix for the whole run: the session pins it; the
+    // per-job path re-ships it with every request (seed behaviour).
     let mut rng = Xoshiro256::seeded(7);
-    let mut batch = Vec::new();
-    for id in 0..jobs as u64 {
-        let mut a = vec![0i64; shape.m * shape.k];
-        let mut b = vec![0i64; shape.k * shape.n];
-        rng.fill_signed(&mut a, 8);
-        rng.fill_signed(&mut b, 8);
-        batch.push(Job { id, kind: JobKind::Gemm { shape, width: 8, a, b } });
+    let mut weights = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut weights, 8);
+    let weights = Arc::new(weights);
+    let session = if use_session {
+        Some(coord.open_session(shape, 8, weights.as_ref().clone())?)
+    } else {
+        None
+    };
+
+    // Closed-loop load: each client thread submits one job and waits for
+    // its handle before issuing the next — offered load ≡ `clients`.
+    coord.serving_metrics().reset_window();
+    let mut client_threads = Vec::new();
+    for c in 0..clients {
+        let quota = jobs / clients + usize::from(c < jobs % clients);
+        let coord = Arc::clone(&coord);
+        let weights = Arc::clone(&weights);
+        client_threads.push(std::thread::spawn(move || -> Result<(usize, usize, usize)> {
+            let mut rng = Xoshiro256::seeded(0x5EED + c as u64);
+            let mut served = 0;
+            let mut failures = 0;
+            let mut shed = 0;
+            for j in 0..quota {
+                let id = (c * 1_000_000 + j) as u64;
+                let mut a = vec![0i64; shape.m * shape.k];
+                rng.fill_signed(&mut a, 8);
+                let expect = gemm_ref(shape, &a, &weights);
+                // Under --policy=priority, spread jobs across priority
+                // levels so the flag is observable (otherwise everything
+                // dispatches at 0 and priority degenerates to FIFO).
+                let priority = match policy {
+                    QueuePolicy::Priority => (j % 4) as u8,
+                    QueuePolicy::Fifo => 0,
+                };
+                // Under --backpressure=reject a full queue sheds the
+                // request; count it and retry after a short backoff so
+                // the closed loop still completes its quota.
+                let handle = loop {
+                    let kind = match session {
+                        Some(sid) => JobKind::SessionGemm { session: sid, a: a.clone() },
+                        None => JobKind::Gemm {
+                            shape,
+                            width: 8,
+                            a: a.clone(),
+                            b: weights.as_ref().clone(),
+                        },
+                    };
+                    match coord.submit_with_priority(Job { id, kind }, priority) {
+                        Ok(h) => break h,
+                        Err(Error::Busy(_)) => {
+                            shed += 1;
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(e) => return Err(e),
+                    }
+                };
+                let r = handle.wait();
+                served += 1;
+                if r.error.is_some() || r.output != expect {
+                    failures += 1;
+                }
+            }
+            Ok((served, failures, shed))
+        }));
     }
-    let (results, mut metrics) = coord.run_batch(batch)?;
-    let failures = results.iter().filter(|r| r.error.is_some()).count();
-    coord.shutdown();
+    let mut served = 0;
+    let mut failures = 0;
+    let mut shed = 0;
+    for t in client_threads {
+        let (s, f, sh) =
+            t.join().map_err(|_| Error::Runtime("client thread panicked".into()))??;
+        served += s;
+        failures += f;
+        shed += sh;
+    }
+    let snap = coord.metrics_snapshot();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+
     Ok(format!(
-        "served {jobs} gemm jobs on {workers} workers: {}\nfailures: {failures}\n",
-        metrics.summary()
+        "served {served} gemm jobs on {workers} workers ({clients} closed-loop clients, \
+         {m}x{k}x{n}, {mode})\nfailures: {failures}\nrejected then retried: {shed}\n{report}\n",
+        m = shape.m,
+        k = shape.k,
+        n = shape.n,
+        mode = if use_session { "session weights" } else { "per-job weights" },
+        report = snap.render(),
     ))
 }
 
@@ -265,6 +379,22 @@ mod tests {
         let out = run_line("serve --jobs=6 --workers=2 --rows=2 --cols=1").unwrap();
         assert!(out.contains("served 6"), "{out}");
         assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("session weights"), "{out}");
+        assert!(out.contains("queue_wait"), "{out}");
+    }
+
+    #[test]
+    fn serve_command_seed_mode_and_policies() {
+        let out = run_line(
+            "serve --jobs=5 --workers=1 --clients=2 --rows=2 --cols=1 \
+             --no-session --batch=1 --policy=priority --backpressure=reject --capacity=64",
+        )
+        .unwrap();
+        assert!(out.contains("served 5"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("per-job weights"), "{out}");
+        assert!(run_line("serve --policy=bogus").is_err());
+        assert!(run_line("serve --backpressure=bogus").is_err());
     }
 
     #[test]

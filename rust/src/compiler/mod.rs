@@ -207,43 +207,118 @@ impl PimCompiler {
 ///
 /// This is the data-movement half the coordinator performs on the real
 /// system; kept as a free function so examples and tests can drive it
-/// directly.
+/// directly. Single-job convenience wrapper over [`execute_gemm_batch`].
 pub fn execute_gemm(
     arr: &mut PimArray,
     plan: &GemmPlan,
     a: &[i64],
     b: &[i64],
 ) -> Result<(Vec<i64>, RunStats)> {
+    let (mut outs, stats) = execute_gemm_batch(arr, plan, &[(a, b)])?;
+    Ok((outs.pop().expect("batch of one yields one output"), stats))
+}
+
+/// Execute one compiled GEMM plan over a **micro-batch** of same-shape
+/// jobs in a single packed sequence of array invocations.
+///
+/// All jobs share `plan.shape` / `plan.width`; item `t` is `(a_t, b_t)`.
+/// Output elements of all jobs are packed contiguously across the array's
+/// rows, so partially-filled rounds are shared between neighbouring jobs
+/// instead of each job paying its own ragged final round — the
+/// corner-turn and microcode dispatch of every round is amortized over
+/// the whole batch. A batch of `B` jobs runs `ceil(B·m·n / rows)` rounds
+/// instead of `B · ceil(m·n / rows)`.
+///
+/// Returns one output matrix (row-major `m×n`) per job plus the combined
+/// run statistics of the packed execution.
+pub fn execute_gemm_batch(
+    arr: &mut PimArray,
+    plan: &GemmPlan,
+    items: &[(&[i64], &[i64])],
+) -> Result<(Vec<Vec<i64>>, RunStats)> {
     let GemmShape { m, k, n } = plan.shape;
-    if a.len() != m * k || b.len() != k * n {
-        return Err(Error::Compile(format!(
-            "operand sizes {}/{} do not match shape {m}x{k}x{n}",
-            a.len(),
-            b.len()
-        )));
+    for (idx, (a, b)) in items.iter().enumerate() {
+        if a.len() != m * k || b.len() != k * n {
+            return Err(Error::Compile(format!(
+                "batch item {idx}: operand sizes {}/{} do not match shape {m}x{k}x{n}",
+                a.len(),
+                b.len()
+            )));
+        }
     }
     let q = arr.geometry().row_lanes();
+    run_packed_rounds(
+        arr,
+        plan,
+        items.len(),
+        |t, local, s, lanes| {
+            let (a, _) = items[t];
+            let i = local / n;
+            for (lane, slot) in lanes.iter_mut().enumerate() {
+                let kk = s * q + lane;
+                if kk < k {
+                    *slot = a[i * k + kk];
+                }
+            }
+        },
+        |t, local, s, lanes| {
+            let (_, b) = items[t];
+            let j = local % n;
+            for (lane, slot) in lanes.iter_mut().enumerate() {
+                let kk = s * q + lane;
+                if kk < k {
+                    *slot = b[kk * n + j];
+                }
+            }
+        },
+    )
+}
+
+/// The packed-round engine shared by [`execute_gemm_batch`] and
+/// [`ModelSession`](crate::coordinator::ModelSession): packs the
+/// `jobs · m·n` output elements of a same-plan micro-batch contiguously
+/// across the array's rows and runs `ceil(jobs·m·n / rows)` rounds.
+///
+/// Operand staging is delegated: for each live row computing element
+/// `local` of job `t` in slice `s`, `fill_a`/`fill_b` write that row's
+/// `q` lanes (pre-zeroed; leave tail lanes past `k` untouched). Keeping
+/// one engine guarantees the plain and session paths can never diverge
+/// in packing, buffer layout, or cycle accounting.
+pub(crate) fn run_packed_rounds<FA, FB>(
+    arr: &mut PimArray,
+    plan: &GemmPlan,
+    jobs: usize,
+    mut fill_a: FA,
+    mut fill_b: FB,
+) -> Result<(Vec<Vec<i64>>, RunStats)>
+where
+    FA: FnMut(usize, usize, usize, &mut [i64]),
+    FB: FnMut(usize, usize, usize, &mut [i64]),
+{
+    if jobs == 0 {
+        return Ok((Vec::new(), RunStats::default()));
+    }
+    let GemmShape { m, n, .. } = plan.shape;
+    let q = arr.geometry().row_lanes();
     let rows = arr.geometry().rows;
-    let mut c = vec![0i64; m * n];
+    let per_job = m * n;
+    let outputs = per_job * jobs;
+    let rounds = outputs.div_ceil(rows);
+    let mut c = vec![vec![0i64; per_job]; jobs];
     let mut total = RunStats::default();
-    let outputs = m * n;
-    for round in 0..plan.rounds {
+    for round in 0..rounds {
         let first_out = round * rows;
         let live = rows.min(outputs - first_out);
-        // Stage the operand slices for every live row.
+        // Stage the operand slices for every live row. Row `r` computes
+        // global output `first_out + r`, i.e. element `local` of job `t`.
         for s in 0..plan.slices {
             let mut a_stage = vec![0i64; rows * q];
             let mut b_stage = vec![0i64; rows * q];
             for r in 0..live {
-                let out_idx = first_out + r;
-                let (i, j) = (out_idx / n, out_idx % n);
-                for lane in 0..q {
-                    let kk = s * q + lane;
-                    if kk < k {
-                        a_stage[r * q + lane] = a[i * k + kk];
-                        b_stage[r * q + lane] = b[kk * n + j];
-                    }
-                }
+                let g = first_out + r;
+                let (t, local) = (g / per_job, g % per_job);
+                fill_a(t, local, s, &mut a_stage[r * q..(r + 1) * q]);
+                fill_b(t, local, s, &mut b_stage[r * q..(r + 1) * q]);
             }
             arr.set_buffer(BufId(BUF_A.0 + 2 * s as u16), a_stage);
             arr.set_buffer(BufId(BUF_A.0 + 2 * s as u16 + 1), b_stage);
@@ -254,7 +329,8 @@ pub fn execute_gemm(
         total.booth_active_steps += stats.booth_active_steps;
         total.booth_total_steps += stats.booth_total_steps;
         for r in 0..live {
-            c[first_out + r] = arr.row_result(r, WL_PARTIAL, plan.acc_width as u32);
+            let g = first_out + r;
+            c[g / per_job][g % per_job] = arr.row_result(r, WL_PARTIAL, plan.acc_width as u32);
         }
     }
     Ok((c, total))
@@ -419,6 +495,63 @@ mod tests {
         );
         // Each pool level charges two ALU passes + fill.
         assert_eq!(stats.breakdown.reduce, 4 * (2 * 16 + 4));
+    }
+
+    #[test]
+    fn batched_gemm_matches_per_job_path() {
+        let geom = ArrayGeometry::new(4, 1); // 4 rows x 16 lanes
+        let shape = GemmShape { m: 1, k: 16, n: 3 }; // 3 outputs < 4 rows
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        let mut operands = Vec::new();
+        for t in 0..5u64 {
+            operands.push(random_gemm(shape, 8, 1000 + t));
+        }
+        let items: Vec<(&[i64], &[i64])> =
+            operands.iter().map(|(a, b)| (a.as_slice(), b.as_slice())).collect();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (outs, batch_stats) = execute_gemm_batch(&mut arr, &plan, &items).unwrap();
+        assert_eq!(outs.len(), 5);
+        let mut solo_cycles = 0u64;
+        for (t, (a, b)) in operands.iter().enumerate() {
+            assert_eq!(outs[t], gemm_ref(shape, a, b), "job {t}");
+            let mut solo = PimArray::new(geom, PipelineConfig::FullPipe);
+            let (c, s) = execute_gemm(&mut solo, &plan, a, b).unwrap();
+            assert_eq!(c, outs[t], "batched == per-job, job {t}");
+            solo_cycles += s.cycles;
+        }
+        // 5 jobs x 3 outputs pack into ceil(15/4)=4 rounds instead of 5
+        // ragged single-job rounds: the batch must charge fewer cycles.
+        assert!(
+            batch_stats.cycles < solo_cycles,
+            "batch {} !< solo {}",
+            batch_stats.cycles,
+            solo_cycles
+        );
+    }
+
+    #[test]
+    fn batched_gemm_validates_every_item() {
+        let geom = ArrayGeometry::new(2, 1);
+        let shape = GemmShape { m: 2, k: 8, n: 2 };
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        let good_a = vec![1i64; 16];
+        let good_b = vec![1i64; 16];
+        let bad = vec![0i64; 3];
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let items: Vec<(&[i64], &[i64])> =
+            vec![(&good_a, &good_b), (&bad, &good_b)];
+        let err = execute_gemm_batch(&mut arr, &plan, &items).unwrap_err();
+        assert!(err.to_string().contains("batch item 1"), "{err}");
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let geom = ArrayGeometry::new(1, 1);
+        let plan = PimCompiler::new(geom).gemm(GemmShape { m: 1, k: 4, n: 1 }, 8).unwrap();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (outs, stats) = execute_gemm_batch(&mut arr, &plan, &[]).unwrap();
+        assert!(outs.is_empty());
+        assert_eq!(stats.cycles, 0);
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Micro-batching: coalesce same-shape jobs into one array invocation.
+//!
+//! A PIM array invocation has per-round overhead — operand staging,
+//! corner-turn DMA, microcode dispatch — and a job whose output count is
+//! not a multiple of the array's rows wastes lanes in its final ragged
+//! round. The [`Batcher`] amortizes both: it pulls a head-of-line
+//! [`Ticket`] from the [`Scheduler`], then coalesces further tickets with
+//! the same [`BatchKey`] (same `(GemmShape, width)`, or same session)
+//! until the batch is full or the wait budget expires, and the worker
+//! executes the whole batch through
+//! [`execute_gemm_batch`](crate::compiler::execute_gemm_batch) — packing
+//! `B` jobs into `ceil(B·m·n / rows)` rounds instead of
+//! `B · ceil(m·n / rows)`.
+//!
+//! Flush triggers (whichever comes first):
+//!
+//! * **size** — the batch reached [`BatchPolicy::max_batch`];
+//! * **wait** — [`BatchPolicy::max_wait`] elapsed since the head job was
+//!   taken (new *non-matching* arrivals never reset the clock);
+//! * **close** — the scheduler shut down.
+//!
+//! ```
+//! use picaso::compiler::GemmShape;
+//! use picaso::coordinator::{BatchPolicy, Batcher, Job, JobKind, Scheduler, SchedulerConfig};
+//! use picaso::metrics::ServingMetrics;
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//!
+//! let sched = Scheduler::new(SchedulerConfig::default(), Arc::new(ServingMetrics::new()))?;
+//! let shape = GemmShape { m: 1, k: 2, n: 1 };
+//! for id in 0..3 {
+//!     let job = Job { id, kind: JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] } };
+//!     sched.submit(job)?;
+//! }
+//! let batcher = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+//! let batch = batcher.collect(&sched).expect("three jobs queued");
+//! assert_eq!(batch.len(), 2); // size-triggered flush
+//! let rest = batcher.collect(&sched).expect("one job left");
+//! assert_eq!(rest.len(), 1); // wait-triggered flush (zero budget)
+//! # for t in batch.into_iter().chain(rest) { drop(t); }
+//! # Ok::<(), picaso::Error>(())
+//! ```
+
+use super::scheduler::{Scheduler, Ticket};
+use super::{JobKind, SessionId};
+use crate::compiler::GemmShape;
+use std::time::{Duration, Instant};
+
+/// Coalescing key: tickets with equal keys may share one packed array
+/// execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BatchKey {
+    /// Plain GEMM jobs coalesce per problem shape and operand width
+    /// (they share one compiled [`GemmPlan`](crate::compiler::GemmPlan)).
+    Gemm {
+        /// Problem shape.
+        shape: GemmShape,
+        /// Operand width (bits).
+        width: u16,
+    },
+    /// Session jobs coalesce per session — shape, width and weights are
+    /// pinned by the session itself.
+    Session(SessionId),
+}
+
+impl BatchKey {
+    /// Derive the coalescing key of a job payload.
+    pub fn of(kind: &JobKind) -> BatchKey {
+        match kind {
+            JobKind::Gemm { shape, width, .. } => BatchKey::Gemm { shape: *shape, width: *width },
+            JobKind::SessionGemm { session, .. } => BatchKey::Session(*session),
+        }
+    }
+}
+
+/// Micro-batch flush policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch dispatched in one array invocation (≥ 1; 1 disables
+    /// coalescing).
+    pub max_batch: usize,
+    /// Longest a head-of-line job waits for companions before the batch
+    /// is flushed anyway.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_micros(200) }
+    }
+}
+
+impl BatchPolicy {
+    /// One job per invocation — the seed coordinator's behaviour.
+    pub fn disabled() -> Self {
+        Self { max_batch: 1, max_wait: Duration::ZERO }
+    }
+}
+
+/// Collects micro-batches of compatible tickets from a [`Scheduler`].
+#[derive(Debug, Clone, Copy)]
+pub struct Batcher {
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    /// A batcher with the given flush policy.
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Policy in effect.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Pull the next micro-batch: blocks for a head-of-line ticket, then
+    /// coalesces same-key tickets until a flush trigger fires. Returns
+    /// `None` once the scheduler is closed and drained. Every returned
+    /// batch is non-empty and single-key.
+    pub fn collect(&self, sched: &Scheduler) -> Option<Vec<Ticket>> {
+        let first = sched.pop_blocking()?;
+        let max = self.policy.max_batch.max(1);
+        if max == 1 {
+            return Some(vec![first]);
+        }
+        let key = first.key;
+        let deadline = Instant::now() + self.policy.max_wait;
+        let mut batch = vec![first];
+        let mut seen = sched.arrivals();
+        while batch.len() < max {
+            if let Some(t) = sched.try_pop_matching(&key) {
+                batch.push(t);
+                continue;
+            }
+            // Nothing compatible queued: sleep until a *new* submission
+            // lands (the arrival clock moves), the budget expires, or the
+            // scheduler closes.
+            let (now_seen, ended) = sched.wait_new_arrival(seen, deadline);
+            seen = now_seen;
+            if ended {
+                break;
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scheduler::SchedulerConfig;
+    use super::super::{Job, JobKind};
+    use super::*;
+    use crate::metrics::ServingMetrics;
+    use std::sync::Arc;
+
+    fn gemm_job(id: u64, n: usize) -> Job {
+        Job {
+            id,
+            kind: JobKind::Gemm {
+                shape: GemmShape { m: 1, k: 2, n },
+                width: 8,
+                a: vec![1, 2],
+                b: vec![0; 2 * n],
+            },
+        }
+    }
+
+    fn sched() -> Scheduler {
+        Scheduler::new(SchedulerConfig::default(), Arc::new(ServingMetrics::new())).unwrap()
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let s = sched();
+        for id in 0..5 {
+            s.submit(gemm_job(id, 1)).unwrap();
+        }
+        let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(5) });
+        let batch = b.collect(&s).unwrap();
+        assert_eq!(batch.len(), 3, "size trigger");
+        assert_eq!(s.depth(), 2);
+    }
+
+    #[test]
+    fn flushes_on_wait_budget() {
+        let s = sched();
+        s.submit(gemm_job(0, 1)).unwrap();
+        s.submit(gemm_job(1, 1)).unwrap();
+        let b = Batcher::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(30) });
+        let t0 = Instant::now();
+        let batch = b.collect(&s).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 2, "coalesced everything that was queued");
+        assert!(waited >= Duration::from_millis(25), "waited out the budget: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "did not hang: {waited:?}");
+    }
+
+    #[test]
+    fn different_keys_do_not_coalesce() {
+        let s = sched();
+        s.submit(gemm_job(0, 1)).unwrap();
+        s.submit(gemm_job(1, 2)).unwrap(); // different n => different shape key
+        s.submit(gemm_job(2, 1)).unwrap();
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        let batch = b.collect(&s).unwrap();
+        let ids: Vec<u64> = batch.iter().map(|t| t.job.id).collect();
+        assert_eq!(ids, vec![0, 2], "only same-shape jobs coalesce");
+        let next = b.collect(&s).unwrap();
+        assert_eq!(next.len(), 1);
+        assert_eq!(next[0].job.id, 1);
+    }
+
+    #[test]
+    fn disabled_policy_returns_singletons() {
+        let s = sched();
+        for id in 0..3 {
+            s.submit(gemm_job(id, 1)).unwrap();
+        }
+        let b = Batcher::new(BatchPolicy::disabled());
+        for expect in 0..3u64 {
+            let batch = b.collect(&s).unwrap();
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].job.id, expect);
+        }
+    }
+
+    #[test]
+    fn closed_and_drained_returns_none() {
+        let s = sched();
+        s.close();
+        let b = Batcher::new(BatchPolicy::default());
+        assert!(b.collect(&s).is_none());
+    }
+}

@@ -1,5 +1,4 @@
-//! The system coordinator: array partitioning, job scheduling and the
-//! batched inference serving loop.
+//! The serving subsystem: scheduling, micro-batching, sessions, workers.
 //!
 //! The paper's overlay is a SIMD fabric; a real deployment fronts it with
 //! a host-side coordinator that (a) partitions the device's PE array into
@@ -8,20 +7,49 @@
 //! metrics. Rust owns this entire request path — Python exists only at
 //! build time (see `python/compile/aot.py`).
 //!
-//! Implementation notes: the vendored crate set has no tokio, so the
-//! coordinator is a classic thread pool over `std::sync::mpsc` channels —
-//! one worker thread per array region, a submission queue, and a result
-//! channel. This matches the SIMD hardware model: each region has one
-//! sequencer; parallelism comes from regions, not from overlapping
-//! instructions within one region.
+//! The subsystem is split into three layers plus this façade:
+//!
+//! * [`scheduler`] — bounded submission queue with [`Backpressure`]
+//!   (block or reject at capacity), FIFO/[priority](QueuePolicy) ordering,
+//!   and a per-job [`JobHandle`] replacing the order-fragile `drain(n)`.
+//! * [`batcher`] — micro-batching: same-`(GemmShape, width)` (or
+//!   same-session) jobs coalesce into **one** packed array invocation,
+//!   amortizing corner-turn, staging and ragged final rounds, with
+//!   size/wait flush triggers ([`BatchPolicy`]).
+//! * [`session`] — persistent [`ModelSession`]s that pin a compiled
+//!   [`GemmPlan`](crate::compiler::GemmPlan) and a pre-staged weight
+//!   table, so repeat inference skips both compilation and weight
+//!   gathering.
+//!
+//! The [`Coordinator`] spawns one worker thread per array region; each
+//! worker pulls micro-batches, executes them on its own simulated
+//! [`PimArray`], and resolves the jobs' handles. Queue depth, batch sizes
+//! and per-stage latencies stream into a shared
+//! [`ServingMetrics`](crate::metrics::ServingMetrics).
+//!
+//! Implementation notes: the vendored crate set has no tokio, so
+//! everything is std threads + `Mutex`/`Condvar`. This matches the SIMD
+//! hardware model: each region has one sequencer; parallelism comes from
+//! regions, not from overlapping instructions within one region.
+
+pub mod batcher;
+pub mod scheduler;
+pub mod session;
+
+pub use batcher::{BatchKey, BatchPolicy, Batcher};
+pub use scheduler::{
+    Backpressure, Completion, JobHandle, QueuePolicy, Scheduler, SchedulerConfig, Ticket,
+};
+pub use session::{ModelSession, SessionId, SessionSpec};
 
 use crate::arch::{ArchKind, PipelineConfig};
 use crate::array::{ArrayGeometry, PimArray, RunStats};
-use crate::compiler::{execute_gemm, GemmShape, PimCompiler};
-use crate::metrics::Metrics;
+use crate::compiler::{execute_gemm, execute_gemm_batch, GemmPlan, GemmShape, PimCompiler};
+use crate::metrics::{Metrics, MetricsSnapshot, ServingMetrics};
 use crate::{Error, Result};
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -36,6 +64,11 @@ pub struct CoordinatorConfig {
     pub kind: ArchKind,
     /// Charge Booth NOP-skipping latency.
     pub booth_skip: bool,
+    /// Submission-queue bounds, ordering and backpressure.
+    pub scheduler: SchedulerConfig,
+    /// Micro-batch flush policy ([`BatchPolicy::disabled`] restores the
+    /// seed one-job-per-invocation behaviour).
+    pub batch: BatchPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -47,6 +80,8 @@ impl Default for CoordinatorConfig {
             geom: ArrayGeometry::new(8, 4),
             kind: ArchKind::Overlay(PipelineConfig::FullPipe),
             booth_skip: false,
+            scheduler: SchedulerConfig::default(),
+            batch: BatchPolicy::default(),
         }
     }
 }
@@ -74,6 +109,14 @@ pub enum JobKind {
         /// B, row-major `k×n`.
         b: Vec<i64>,
     },
+    /// Inference against an open session's pinned plan and weights
+    /// (see [`Coordinator::open_session`]).
+    SessionGemm {
+        /// The session to run against.
+        session: SessionId,
+        /// Activations, row-major `m×k`.
+        a: Vec<i64>,
+    },
 }
 
 /// Result of a completed job.
@@ -83,28 +126,50 @@ pub struct JobResult {
     pub id: u64,
     /// Output matrix (row-major).
     pub output: Vec<i64>,
-    /// Simulator statistics.
+    /// Simulator statistics. For micro-batched jobs this is the job's
+    /// share of the batch's counters (floor share, first job absorbs the
+    /// remainder, so shares sum exactly to the batch totals); the
+    /// per-instruction-kind breakdown is not attributed per job and
+    /// stays zeroed for batched executions.
     pub stats: RunStats,
-    /// Wall-clock execution time (µs) in the worker.
+    /// This job's share of the wall-clock execution time (µs) of the
+    /// array invocation that served it (the batch's wall time divided by
+    /// [`batch_size`](Self::batch_size)), so per-job latency accounting
+    /// stays comparable whether or not micro-batching coalesced the job.
+    /// The whole batch's execution wall time is available as the
+    /// `exec` stage in [`MetricsSnapshot`](crate::metrics::MetricsSnapshot).
     pub wall_us: f64,
     /// Worker index that ran the job.
     pub worker: usize,
+    /// Number of jobs in the micro-batch this job was served in.
+    pub batch_size: usize,
     /// Error text if the job failed.
     pub error: Option<String>,
 }
 
-enum Cmd {
-    Run(Job),
-    Stop,
+/// Shared session registry plus a close-generation counter: workers
+/// compare `closed_epoch` against the value they last saw and sweep
+/// their local [`ModelSession`] caches when it moves, so closing a
+/// session releases its pinned staging tables on every worker without
+/// waiting for another job against that id.
+struct SessionRegistryInner {
+    map: RwLock<HashMap<SessionId, Arc<SessionSpec>>>,
+    closed_epoch: AtomicU64,
 }
 
-/// The thread-pool coordinator.
+type SessionRegistry = Arc<SessionRegistryInner>;
+
+/// The serving coordinator: a scheduler-fed, micro-batching worker pool.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
-    tx: Sender<Cmd>,
-    results: Receiver<JobResult>,
+    sched: Scheduler,
     handles: Vec<JoinHandle<()>>,
-    submitted: u64,
+    /// Handles of jobs submitted through the legacy [`submit`](Self::submit)
+    /// path, consumed in submission order by [`drain`](Self::drain).
+    pending: Mutex<VecDeque<JobHandle>>,
+    sessions: SessionRegistry,
+    next_session: AtomicU64,
+    metrics: Arc<ServingMetrics>,
 }
 
 impl Coordinator {
@@ -114,21 +179,32 @@ impl Coordinator {
             return Err(Error::Config("workers must be >= 1".into()));
         }
         crate::arch::check_reduction_q(cfg.geom.row_lanes())?;
-        let (tx, rx) = channel::<Cmd>();
-        let (res_tx, results) = channel::<JobResult>();
-        // A single shared queue: workers steal from it through a mutexed
-        // receiver (simple and fair for coarse-grained jobs).
-        let shared_rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let metrics = Arc::new(ServingMetrics::new());
+        let sched = Scheduler::new(cfg.scheduler.clone(), Arc::clone(&metrics))?;
+        let sessions: SessionRegistry = Arc::new(SessionRegistryInner {
+            map: RwLock::new(HashMap::new()),
+            closed_epoch: AtomicU64::new(0),
+        });
+        let batcher = Batcher::new(cfg.batch);
         let mut handles = Vec::new();
         for widx in 0..cfg.workers {
-            let rx = shared_rx.clone();
-            let res_tx = res_tx.clone();
+            let sched = sched.clone();
             let cfg = cfg.clone();
+            let registry = Arc::clone(&sessions);
+            let metrics = Arc::clone(&metrics);
             handles.push(std::thread::spawn(move || {
-                worker_loop(widx, cfg, rx, res_tx);
+                worker_loop(widx, cfg, sched, batcher, registry, metrics);
             }));
         }
-        Ok(Self { cfg, tx, results, handles, submitted: 0 })
+        Ok(Self {
+            cfg,
+            sched,
+            handles,
+            pending: Mutex::new(VecDeque::new()),
+            sessions,
+            next_session: AtomicU64::new(1),
+            metrics,
+        })
     }
 
     /// Configuration in effect.
@@ -136,115 +212,413 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Enqueue a job.
-    pub fn submit(&mut self, job: Job) -> Result<()> {
-        self.submitted += 1;
-        self.tx
-            .send(Cmd::Run(job))
-            .map_err(|_| Error::Runtime("worker pool is down".into()))
+    /// The underlying scheduler (for depth inspection or direct use).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
     }
 
-    /// Block for the next `n` results (in completion order).
-    pub fn drain(&self, n: usize) -> Result<Vec<JobResult>> {
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            out.push(
-                self.results
-                    .recv()
-                    .map_err(|_| Error::Runtime("result channel closed".into()))?,
-            );
+    /// The shared serving metrics recorder.
+    pub fn serving_metrics(&self) -> Arc<ServingMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Snapshot of the serving metrics (queue depth, batch sizes,
+    /// per-stage latency percentiles).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Submit a job and get its completion handle — the primary serving
+    /// API. Applies the configured backpressure at capacity.
+    pub fn submit_job(&self, job: Job) -> Result<JobHandle> {
+        self.sched.submit(job)
+    }
+
+    /// [`submit_job`](Self::submit_job) at an explicit priority (higher
+    /// runs first under [`QueuePolicy::Priority`]).
+    pub fn submit_with_priority(&self, job: Job, priority: u8) -> Result<JobHandle> {
+        self.sched.submit_with_priority(job, priority)
+    }
+
+    /// Open a persistent session: pins `weights` (row-major `k×n`) and
+    /// the compiled plan for `shape`/`width` so repeat inference skips
+    /// compilation and weight staging. Returns the id to use with
+    /// [`JobKind::SessionGemm`] / [`submit_session`](Self::submit_session).
+    pub fn open_session(
+        &self,
+        shape: GemmShape,
+        width: u16,
+        weights: Vec<i64>,
+    ) -> Result<SessionId> {
+        let spec = SessionSpec { shape, width, weights };
+        // Validate eagerly (spec consistency + compilability) so errors
+        // surface at open time, not per-job on a worker.
+        spec.validate()?;
+        PimCompiler::new(self.cfg.geom).gemm(shape, width)?;
+        let id = SessionId(self.next_session.fetch_add(1, Ordering::Relaxed));
+        self.sessions
+            .map
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, Arc::new(spec));
+        Ok(id)
+    }
+
+    /// Close a session. Batches already dispatched to a worker finish
+    /// normally; jobs still queued (and any submitted later) complete
+    /// with an unknown-session error. Workers drop their pinned staging
+    /// tables for it on their next batch. Returns `true` if the session
+    /// existed.
+    pub fn close_session(&self, id: SessionId) -> bool {
+        let existed = self
+            .sessions
+            .map
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&id)
+            .is_some();
+        if existed {
+            self.sessions.closed_epoch.fetch_add(1, Ordering::Release);
         }
-        Ok(out)
+        existed
     }
 
-    /// Run a batch synchronously and aggregate metrics.
+    /// Convenience: submit one inference against an open session.
+    pub fn submit_session(
+        &self,
+        job_id: u64,
+        session: SessionId,
+        a: Vec<i64>,
+    ) -> Result<JobHandle> {
+        self.submit_job(Job { id: job_id, kind: JobKind::SessionGemm { session, a } })
+    }
+
+    /// Enqueue a job (legacy path). Prefer [`submit_job`](Self::submit_job),
+    /// which returns the completion handle instead of parking it for
+    /// [`drain`](Self::drain).
+    pub fn submit(&mut self, job: Job) -> Result<()> {
+        let h = self.sched.submit(job)?;
+        self.pending
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push_back(h);
+        Ok(())
+    }
+
+    /// Block for the results of the next `n` jobs submitted through
+    /// [`submit`](Self::submit), in submission order. (The seed returned
+    /// completion order; per-job [`JobHandle`]s make ordering explicit.)
+    pub fn drain(&self, n: usize) -> Result<Vec<JobResult>> {
+        let mut taken = Vec::with_capacity(n);
+        {
+            let mut pending = self.pending.lock().unwrap_or_else(|e| e.into_inner());
+            if pending.len() < n {
+                return Err(Error::Runtime(format!(
+                    "drain({n}) exceeds {} outstanding submissions",
+                    pending.len()
+                )));
+            }
+            for _ in 0..n {
+                taken.push(pending.pop_front().expect("len checked"));
+            }
+        }
+        Ok(taken.into_iter().map(JobHandle::wait).collect())
+    }
+
+    /// Run a batch synchronously and aggregate metrics (kept for the
+    /// bench harness and quick experiments; serving traffic should use
+    /// [`submit_job`](Self::submit_job) handles).
     pub fn run_batch(&mut self, jobs: Vec<Job>) -> Result<(Vec<JobResult>, Metrics)> {
         let mut metrics = Metrics::new();
         metrics.start();
-        let n = jobs.len();
+        let mut handles = Vec::with_capacity(jobs.len());
         for j in jobs {
-            self.submit(j)?;
+            handles.push(self.sched.submit(j)?);
         }
-        let mut results = self.drain(n)?;
+        let mut results: Vec<JobResult> = handles.into_iter().map(JobHandle::wait).collect();
         metrics.stop();
         results.sort_by_key(|r| r.id);
         for r in &results {
-            let macs = match r.output.len() {
-                0 => 0,
-                len => len as u64, // one dot product per output element
-            };
+            let macs = r.output.len() as u64; // one dot product per element
             metrics.record_job(r.wall_us, 0.0, macs, r.stats.cycles);
         }
         Ok((results, metrics))
     }
 
-    /// Stop the pool and join the workers.
-    pub fn shutdown(self) {
-        for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Cmd::Stop);
-        }
-        for h in self.handles {
+    /// Stop the pool: close the queue, let workers drain the backlog,
+    /// and join them.
+    pub fn shutdown(mut self) {
+        self.sched.close();
+        for h in std::mem::take(&mut self.handles) {
             let _ = h.join();
         }
     }
 }
 
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Unblock workers if shutdown() was never called; threads are
+        // detached (not joined) in that case.
+        self.sched.close();
+    }
+}
+
+/// Attribute a batch's run statistics across its `n` jobs: every job
+/// gets the floor share and the first absorbs the remainder, so the
+/// shares sum exactly to the batch totals (`ServingMetrics.pim_cycles`
+/// stays equal to the simulator's count). The per-instruction-kind
+/// breakdown is not attributed — it is not meaningful per job within a
+/// packed execution.
+fn stats_shares(total: &RunStats, n: usize) -> Vec<RunStats> {
+    let n64 = n.max(1) as u64;
+    (0..n)
+        .map(|idx| {
+            let share = |v: u64| v / n64 + if idx == 0 { v % n64 } else { 0 };
+            RunStats {
+                cycles: share(total.cycles),
+                instructions: share(total.instructions),
+                breakdown: Default::default(),
+                booth_active_steps: share(total.booth_active_steps),
+                booth_total_steps: share(total.booth_total_steps),
+            }
+        })
+        .collect()
+}
+
+struct BatchOutcome {
+    /// Per-ticket `(output, stats, error)` in ticket order.
+    per_job: Vec<(Vec<i64>, RunStats, Option<String>)>,
+}
+
 fn worker_loop(
     widx: usize,
     cfg: CoordinatorConfig,
-    rx: std::sync::Arc<std::sync::Mutex<Receiver<Cmd>>>,
-    res_tx: Sender<JobResult>,
+    sched: Scheduler,
+    batcher: Batcher,
+    registry: SessionRegistry,
+    metrics: Arc<ServingMetrics>,
 ) {
     let mut array = PimArray::with_kind(cfg.geom, cfg.kind);
     array.set_booth_skip(cfg.booth_skip);
     let compiler = PimCompiler::new(cfg.geom);
     // Plan cache: compiling a shape once per worker (microcode reuse is
     // what makes the "python never on the request path" contract cheap).
-    let mut plans: HashMap<(GemmShape, u16), crate::compiler::GemmPlan> = HashMap::new();
-    loop {
-        let cmd = {
-            let guard = rx.lock().expect("queue poisoned");
-            guard.recv()
-        };
-        let job = match cmd {
-            Ok(Cmd::Run(j)) => j,
-            Ok(Cmd::Stop) | Err(_) => break,
-        };
+    let mut plans: HashMap<(GemmShape, u16), GemmPlan> = HashMap::new();
+    // Per-worker session cache: sessions pin their staging tables here on
+    // first use; swept against the registry whenever a close happens.
+    let mut sessions: HashMap<SessionId, ModelSession> = HashMap::new();
+    let mut seen_epoch = 0u64;
+    while let Some(batch) = batcher.collect(&sched) {
+        let epoch = registry.closed_epoch.load(Ordering::Acquire);
+        if epoch != seen_epoch {
+            seen_epoch = epoch;
+            let live = registry.map.read().unwrap_or_else(|e| e.into_inner());
+            sessions.retain(|sid, _| live.contains_key(sid));
+        }
+        let queue_waits: Vec<f64> = batch.iter().map(Ticket::queue_wait_us).collect();
         let t0 = Instant::now();
-        let result = match job.kind {
-            JobKind::Gemm { shape, width, a, b } => {
-                let plan = match plans.entry((shape, width)) {
-                    std::collections::hash_map::Entry::Occupied(e) => Ok(e.into_mut()),
-                    std::collections::hash_map::Entry::Vacant(v) => {
-                        compiler.gemm(shape, width).map(|p| v.insert(p))
-                    }
-                };
-                plan.and_then(|p| execute_gemm(&mut array, p, &a, &b))
+        let outcome = match batch[0].key {
+            BatchKey::Gemm { shape, width } => {
+                run_gemm_batch(&mut array, &compiler, &mut plans, shape, width, &batch)
             }
+            BatchKey::Session(sid) => run_session_batch(
+                &mut array,
+                &compiler,
+                &registry,
+                &mut sessions,
+                sid,
+                &batch,
+            ),
         };
-        let wall_us = t0.elapsed().as_secs_f64() * 1e6;
-        let msg = match result {
-            Ok((output, stats)) => JobResult {
-                id: job.id,
+        let batch_wall_us = t0.elapsed().as_secs_f64() * 1e6;
+        let batch_size = batch.len();
+        metrics.record_batch(batch_size, batch_wall_us);
+        // Per-job execution cost is the batch's wall time split across
+        // its jobs — keeps JobResult.wall_us (and the legacy Metrics fed
+        // from it) comparable with the seed one-job-per-invocation path.
+        let wall_us = batch_wall_us / batch_size.max(1) as f64;
+        for ((ticket, (output, stats, error)), queue_us) in
+            batch.into_iter().zip(outcome.per_job).zip(queue_waits)
+        {
+            let id = ticket.job.id;
+            let total_us = ticket.enqueued_at.elapsed().as_secs_f64() * 1e6;
+            let macs = output.len() as u64;
+            metrics.record_job(queue_us, wall_us, total_us, macs, stats.cycles, error.is_some());
+            ticket.complete(JobResult {
+                id,
                 output,
                 stats,
                 wall_us,
                 worker: widx,
-                error: None,
-            },
-            Err(e) => JobResult {
-                id: job.id,
-                output: Vec::new(),
-                stats: RunStats::default(),
-                wall_us,
-                worker: widx,
-                error: Some(e.to_string()),
-            },
-        };
-        if res_tx.send(msg).is_err() {
-            break;
+                batch_size,
+                error,
+            });
         }
     }
+}
+
+/// Execute a micro-batch of plain GEMM jobs. Per-ticket validation keeps
+/// one poison job from failing its batch-mates; a batch-level simulator
+/// error falls back to per-job execution for the same reason.
+fn run_gemm_batch(
+    array: &mut PimArray,
+    compiler: &PimCompiler,
+    plans: &mut HashMap<(GemmShape, u16), GemmPlan>,
+    shape: GemmShape,
+    width: u16,
+    batch: &[Ticket],
+) -> BatchOutcome {
+    let mut per_job: Vec<(Vec<i64>, RunStats, Option<String>)> = batch
+        .iter()
+        .map(|_| (Vec::new(), RunStats::default(), None))
+        .collect();
+    let plan = match plans.entry((shape, width)) {
+        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+        std::collections::hash_map::Entry::Vacant(v) => match compiler.gemm(shape, width) {
+            Ok(p) => v.insert(p),
+            Err(e) => {
+                for slot in &mut per_job {
+                    slot.2 = Some(e.to_string());
+                }
+                return BatchOutcome { per_job };
+            }
+        },
+    };
+    let GemmShape { m, k, n } = shape;
+    // Validate each ticket; only valid ones enter the packed execution.
+    let mut valid_idx = Vec::with_capacity(batch.len());
+    let mut items: Vec<(&[i64], &[i64])> = Vec::with_capacity(batch.len());
+    for (idx, t) in batch.iter().enumerate() {
+        match &t.job.kind {
+            JobKind::Gemm { a, b, .. } if a.len() == m * k && b.len() == k * n => {
+                valid_idx.push(idx);
+                items.push((a.as_slice(), b.as_slice()));
+            }
+            JobKind::Gemm { a, b, .. } => {
+                per_job[idx].2 = Some(format!(
+                    "operand sizes {}/{} do not match shape {m}x{k}x{n}",
+                    a.len(),
+                    b.len()
+                ));
+            }
+            other => {
+                per_job[idx].2 = Some(format!(
+                    "internal: {other:?} routed into a GEMM batch"
+                ));
+            }
+        }
+    }
+    if items.is_empty() {
+        return BatchOutcome { per_job };
+    }
+    match execute_gemm_batch(array, plan, &items) {
+        Ok((outs, stats)) => {
+            let shares = stats_shares(&stats, items.len());
+            for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {
+                per_job[*slot] = (out, share, None);
+            }
+        }
+        Err(_) if items.len() > 1 => {
+            // Isolate the failure: run the batch members one by one.
+            for (slot, (a, b)) in valid_idx.iter().zip(&items) {
+                match execute_gemm(array, plan, a, b) {
+                    Ok((out, stats)) => per_job[*slot] = (out, stats, None),
+                    Err(e) => per_job[*slot].2 = Some(e.to_string()),
+                }
+            }
+        }
+        Err(e) => per_job[valid_idx[0]].2 = Some(e.to_string()),
+    }
+    BatchOutcome { per_job }
+}
+
+/// Execute a micro-batch of session jobs against the worker's cached
+/// (or freshly prepared) [`ModelSession`].
+fn run_session_batch(
+    array: &mut PimArray,
+    compiler: &PimCompiler,
+    registry: &SessionRegistry,
+    sessions: &mut HashMap<SessionId, ModelSession>,
+    sid: SessionId,
+    batch: &[Ticket],
+) -> BatchOutcome {
+    let mut per_job: Vec<(Vec<i64>, RunStats, Option<String>)> = batch
+        .iter()
+        .map(|_| (Vec::new(), RunStats::default(), None))
+        .collect();
+    let spec = registry
+        .map
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(&sid)
+        .cloned();
+    let spec = match spec {
+        Some(s) => s,
+        None => {
+            sessions.remove(&sid); // closed: drop the pinned staging table
+            for slot in &mut per_job {
+                slot.2 = Some(format!("{sid} is not open"));
+            }
+            return BatchOutcome { per_job };
+        }
+    };
+    if !sessions.contains_key(&sid) {
+        match ModelSession::prepare(compiler, &spec) {
+            Ok(s) => {
+                sessions.insert(sid, s);
+            }
+            Err(e) => {
+                for slot in &mut per_job {
+                    slot.2 = Some(e.to_string());
+                }
+                return BatchOutcome { per_job };
+            }
+        }
+    }
+    let session = sessions.get(&sid).expect("inserted above");
+    let GemmShape { m, k, .. } = spec.shape;
+    let mut valid_idx = Vec::with_capacity(batch.len());
+    let mut acts: Vec<&[i64]> = Vec::with_capacity(batch.len());
+    for (idx, t) in batch.iter().enumerate() {
+        match &t.job.kind {
+            JobKind::SessionGemm { a, .. } if a.len() == m * k => {
+                valid_idx.push(idx);
+                acts.push(a.as_slice());
+            }
+            JobKind::SessionGemm { a, .. } => {
+                per_job[idx].2 = Some(format!(
+                    "activation size {} does not match {sid} shape {m}x{k}",
+                    a.len()
+                ));
+            }
+            other => {
+                per_job[idx].2 = Some(format!(
+                    "internal: {other:?} routed into a session batch"
+                ));
+            }
+        }
+    }
+    if acts.is_empty() {
+        return BatchOutcome { per_job };
+    }
+    match session.infer_batch(array, &acts) {
+        Ok((outs, stats)) => {
+            let shares = stats_shares(&stats, acts.len());
+            for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {
+                per_job[*slot] = (out, share, None);
+            }
+        }
+        Err(_) if acts.len() > 1 => {
+            for (slot, a) in valid_idx.iter().zip(&acts) {
+                match session.infer(array, a) {
+                    Ok((out, stats)) => per_job[*slot] = (out, stats, None),
+                    Err(e) => per_job[*slot].2 = Some(e.to_string()),
+                }
+            }
+        }
+        Err(e) => per_job[valid_idx[0]].2 = Some(e.to_string()),
+    }
+    BatchOutcome { per_job }
 }
 
 #[cfg(test)]
@@ -284,6 +658,7 @@ mod tests {
         for (i, r) in results.iter().enumerate() {
             assert!(r.error.is_none(), "job {i}: {:?}", r.error);
             assert_eq!(r.output, expects[i], "job {i}");
+            assert!(r.batch_size >= 1);
         }
         // Workers participated (with the packed engine jobs are fast
         // enough that a single worker may legitimately drain the queue,
@@ -291,6 +666,11 @@ mod tests {
         let workers: std::collections::HashSet<_> = results.iter().map(|r| r.worker).collect();
         assert!(!workers.is_empty());
         assert!(metrics.jobs_per_sec() > 0.0);
+        // The serving metrics saw every job too.
+        let snap = coord.metrics_snapshot();
+        assert_eq!(snap.jobs, 12);
+        assert_eq!(snap.errors, 0);
+        assert!(snap.batches >= 1);
         coord.shutdown();
     }
 
@@ -346,6 +726,91 @@ mod tests {
         }
         let rs = coord.drain(4).unwrap();
         assert!(rs.iter().all(|r| r.error.is_none()));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn handles_resolve_in_any_order() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            geom: ArrayGeometry::new(2, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 2, k: 16, n: 2 };
+        let mut handles = Vec::new();
+        let mut expects = Vec::new();
+        for i in 0..6u64 {
+            let (job, expect) = gemm_job(i, shape, 50 + i);
+            handles.push(coord.submit_job(job).unwrap());
+            expects.push(expect);
+        }
+        // Wait newest-first: completion order must not matter.
+        for (i, h) in handles.into_iter().enumerate().rev() {
+            let r = h.wait();
+            assert_eq!(r.id, i as u64);
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.output, expects[i]);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn drain_more_than_submitted_errors() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            geom: ArrayGeometry::new(1, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(coord.drain(1).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_jobs_reuse_pinned_weights() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            geom: ArrayGeometry::new(2, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 1, k: 16, n: 2 };
+        let mut rng = Xoshiro256::seeded(0xFEED);
+        let mut weights = vec![0i64; shape.k * shape.n];
+        rng.fill_signed(&mut weights, 8);
+        let sid = coord.open_session(shape, 8, weights.clone()).unwrap();
+        let mut handles = Vec::new();
+        let mut expects = Vec::new();
+        for i in 0..8u64 {
+            let mut a = vec![0i64; shape.m * shape.k];
+            rng.fill_signed(&mut a, 8);
+            expects.push(gemm_ref(shape, &a, &weights));
+            handles.push(coord.submit_session(i, sid, a).unwrap());
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait();
+            assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+            assert_eq!(r.output, expects[i], "job {i}");
+        }
+        assert!(coord.close_session(sid));
+        // Post-close submissions fail at execution with a clear error.
+        let r = coord.submit_session(99, sid, vec![0; 16]).unwrap().wait();
+        assert!(r.error.as_deref().unwrap_or("").contains("not open"), "{:?}", r.error);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn open_session_validates_eagerly() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            geom: ArrayGeometry::new(1, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 1, k: 8, n: 2 };
+        assert!(coord.open_session(shape, 8, vec![0; 3]).is_err(), "wrong weight count");
+        assert!(coord.open_session(shape, 0, vec![0; 16]).is_err(), "width 0 uncompilable");
         coord.shutdown();
     }
 }

@@ -1,0 +1,531 @@
+//! Bounded submission queue with backpressure and per-job completion
+//! handles.
+//!
+//! The seed coordinator had a single unbounded mpsc queue and a blocking
+//! `drain(n)` whose results arrived in completion order — order-fragile
+//! and impossible to apply admission control to. The [`Scheduler`]
+//! replaces it:
+//!
+//! * **bounded**: at most [`SchedulerConfig::capacity`] jobs queue; above
+//!   that, submission either blocks or rejects with
+//!   [`Error::Busy`](crate::Error::Busy) ([`Backpressure`]).
+//! * **per-job handles**: every submission returns a [`JobHandle`] the
+//!   caller can wait on independently, in any order.
+//! * **policy**: FIFO, or priority order with FIFO tie-breaking
+//!   ([`QueuePolicy`]).
+//!
+//! Workers consume [`Ticket`]s — a job plus its completion channel and
+//! queueing timestamps — either one at a time ([`Scheduler::pop_blocking`])
+//! or coalesced by the [`Batcher`](super::Batcher).
+//!
+//! ```
+//! use picaso::compiler::GemmShape;
+//! use picaso::coordinator::{Job, JobKind, JobResult, Scheduler, SchedulerConfig};
+//! use picaso::metrics::ServingMetrics;
+//! use std::sync::Arc;
+//!
+//! let sched = Scheduler::new(SchedulerConfig::default(), Arc::new(ServingMetrics::new()))?;
+//! let shape = GemmShape { m: 1, k: 2, n: 1 };
+//! let job = Job { id: 7, kind: JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] } };
+//! let handle = sched.submit(job)?;
+//!
+//! // ... a worker thread pops the ticket and completes it:
+//! let ticket = sched.pop_blocking().expect("queue is non-empty");
+//! let id = ticket.job.id;
+//! ticket.complete(JobResult {
+//!     id,
+//!     output: vec![11],
+//!     stats: Default::default(),
+//!     wall_us: 0.0,
+//!     worker: 0,
+//!     batch_size: 1,
+//!     error: None,
+//! });
+//!
+//! assert_eq!(handle.wait().output, vec![11]);
+//! # Ok::<(), picaso::Error>(())
+//! ```
+
+use super::batcher::BatchKey;
+use super::{Job, JobResult};
+use crate::metrics::ServingMetrics;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Queue ordering policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Strict submission order.
+    Fifo,
+    /// Higher [`Ticket::priority`] first; FIFO among equal priorities.
+    Priority,
+}
+
+/// What `submit` does when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backpressure {
+    /// Block the submitting thread until a worker frees a slot.
+    Block,
+    /// Fail fast with [`Error::Busy`](crate::Error::Busy).
+    Reject,
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Maximum queued (not yet dispatched) jobs.
+    pub capacity: usize,
+    /// Queue ordering.
+    pub policy: QueuePolicy,
+    /// Behaviour at capacity.
+    pub backpressure: Backpressure,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { capacity: 256, policy: QueuePolicy::Fifo, backpressure: Backpressure::Block }
+    }
+}
+
+struct HandleShared {
+    slot: Mutex<Option<JobResult>>,
+    done: Condvar,
+}
+
+/// Waitable handle to one submitted job, returned by
+/// [`Scheduler::submit`]. Handles resolve independently and in any order
+/// — out-of-order completion (priority scheduling, uneven batch sizes)
+/// is fully supported.
+pub struct JobHandle {
+    id: u64,
+    shared: Arc<HandleShared>,
+}
+
+impl JobHandle {
+    /// The caller-chosen job id this handle tracks.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// True once the result is available (non-blocking).
+    pub fn is_done(&self) -> bool {
+        self.shared.slot.lock().unwrap_or_else(|e| e.into_inner()).is_some()
+    }
+
+    /// Take the result if it is already available (non-blocking).
+    pub fn try_take(&self) -> Option<JobResult> {
+        self.shared.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+
+    /// Block until the job completes and return its result.
+    pub fn wait(self) -> JobResult {
+        let mut slot = self.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.shared.done.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// The completing side of a [`JobHandle`]. Owned by the [`Ticket`];
+/// dropping it without completing delivers an "abandoned" error result so
+/// waiters can never deadlock on a dead worker.
+pub struct Completion {
+    id: u64,
+    shared: Arc<HandleShared>,
+    delivered: bool,
+}
+
+impl Completion {
+    fn pair(id: u64) -> (JobHandle, Completion) {
+        let shared = Arc::new(HandleShared { slot: Mutex::new(None), done: Condvar::new() });
+        (
+            JobHandle { id, shared: Arc::clone(&shared) },
+            Completion { id, shared, delivered: false },
+        )
+    }
+
+    /// Deliver the result and wake the waiter.
+    pub fn complete(mut self, result: JobResult) {
+        self.deliver(result);
+    }
+
+    fn deliver(&mut self, result: JobResult) {
+        self.delivered = true;
+        let mut slot = self.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
+        *slot = Some(result);
+        self.shared.done.notify_all();
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        if !self.delivered {
+            let abandoned = JobResult {
+                id: self.id,
+                output: Vec::new(),
+                stats: Default::default(),
+                wall_us: 0.0,
+                worker: usize::MAX,
+                batch_size: 0,
+                error: Some("job abandoned: completion dropped before a result was delivered".into()),
+            };
+            self.deliver(abandoned);
+        }
+    }
+}
+
+/// A queued job together with its completion channel and queueing
+/// metadata. Produced by the pop/collect operations; consumed by
+/// [`Ticket::complete`].
+pub struct Ticket {
+    /// The submitted job.
+    pub job: Job,
+    /// Submission priority (higher dispatches first under
+    /// [`QueuePolicy::Priority`]).
+    pub priority: u8,
+    /// Monotonic submission sequence number (FIFO tie-break).
+    pub seq: u64,
+    /// When the job entered the queue.
+    pub enqueued_at: Instant,
+    /// Micro-batching coalescing key derived from the job payload.
+    pub key: BatchKey,
+    completion: Completion,
+}
+
+impl Ticket {
+    /// Time this job has spent queued so far, in microseconds.
+    pub fn queue_wait_us(&self) -> f64 {
+        self.enqueued_at.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Deliver the job's result to its [`JobHandle`].
+    pub fn complete(self, result: JobResult) {
+        self.completion.complete(result);
+    }
+}
+
+struct State {
+    items: VecDeque<Ticket>,
+    closed: bool,
+    next_seq: u64,
+    /// Total submissions ever accepted — the batcher's arrival clock.
+    arrivals: u64,
+}
+
+struct Inner {
+    cfg: SchedulerConfig,
+    state: Mutex<State>,
+    /// Signalled on every arrival and on close.
+    not_empty: Condvar,
+    /// Signalled whenever a slot frees up and on close.
+    not_full: Condvar,
+    metrics: Arc<ServingMetrics>,
+}
+
+/// The bounded submission queue. Cheap to clone (all clones share one
+/// queue); submitters and workers hold clones on both sides.
+#[derive(Clone)]
+pub struct Scheduler {
+    inner: Arc<Inner>,
+}
+
+impl Scheduler {
+    /// Build a scheduler. Queue-depth observations go to `metrics`.
+    pub fn new(cfg: SchedulerConfig, metrics: Arc<ServingMetrics>) -> Result<Self> {
+        if cfg.capacity == 0 {
+            return Err(Error::Config("scheduler capacity must be >= 1".into()));
+        }
+        Ok(Self {
+            inner: Arc::new(Inner {
+                cfg,
+                state: Mutex::new(State {
+                    items: VecDeque::new(),
+                    closed: false,
+                    next_seq: 0,
+                    arrivals: 0,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                metrics,
+            }),
+        })
+    }
+
+    /// Configuration in effect.
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.inner.cfg
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.inner.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Submit at default priority (0). See
+    /// [`submit_with_priority`](Self::submit_with_priority).
+    pub fn submit(&self, job: Job) -> Result<JobHandle> {
+        self.submit_with_priority(job, 0)
+    }
+
+    /// Submit a job, returning its completion handle.
+    ///
+    /// At capacity this blocks or rejects per
+    /// [`SchedulerConfig::backpressure`]; after [`close`](Self::close) it
+    /// always fails.
+    pub fn submit_with_priority(&self, job: Job, priority: u8) -> Result<JobHandle> {
+        let key = BatchKey::of(&job.kind);
+        let mut st = self.lock();
+        loop {
+            if st.closed {
+                return Err(Error::Runtime("scheduler is closed".into()));
+            }
+            if st.items.len() < self.inner.cfg.capacity {
+                break;
+            }
+            match self.inner.cfg.backpressure {
+                Backpressure::Reject => {
+                    return Err(Error::Busy(format!(
+                        "submission queue full ({} jobs)",
+                        self.inner.cfg.capacity
+                    )))
+                }
+                Backpressure::Block => {
+                    st = self.inner.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+        let (handle, completion) = Completion::pair(job.id);
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.arrivals += 1;
+        let ticket = Ticket { job, priority, seq, enqueued_at: Instant::now(), key, completion };
+        match self.inner.cfg.policy {
+            QueuePolicy::Fifo => st.items.push_back(ticket),
+            QueuePolicy::Priority => {
+                // Before the first strictly-lower-priority ticket: stable
+                // (FIFO) among equals.
+                let idx = st
+                    .items
+                    .iter()
+                    .position(|t| t.priority < priority)
+                    .unwrap_or(st.items.len());
+                st.items.insert(idx, ticket);
+            }
+        }
+        self.inner.metrics.record_depth(st.items.len());
+        drop(st);
+        self.inner.not_empty.notify_all();
+        Ok(handle)
+    }
+
+    /// Jobs currently queued.
+    pub fn depth(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    /// True once [`close`](Self::close) has been called.
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Stop accepting submissions. Queued jobs remain dispatchable so
+    /// workers drain the backlog before exiting.
+    pub fn close(&self) {
+        let mut st = self.lock();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    /// Pop the head-of-line ticket, blocking while the queue is empty.
+    /// Returns `None` once the scheduler is closed **and** drained.
+    pub fn pop_blocking(&self) -> Option<Ticket> {
+        let mut st = self.lock();
+        loop {
+            if let Some(t) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_all();
+                return Some(t);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Remove and return the first queued ticket whose coalescing key
+    /// matches, without blocking.
+    pub fn try_pop_matching(&self, key: &BatchKey) -> Option<Ticket> {
+        let mut st = self.lock();
+        let idx = st.items.iter().position(|t| &t.key == key)?;
+        let t = st.items.remove(idx).expect("position is in range");
+        drop(st);
+        self.inner.not_full.notify_all();
+        Some(t)
+    }
+
+    /// The arrival counter — increases by one per accepted submission.
+    /// The batcher uses it to sleep for *new* arrivals rather than
+    /// busy-polling a non-empty queue of non-matching jobs.
+    pub fn arrivals(&self) -> u64 {
+        self.lock().arrivals
+    }
+
+    /// Block until the arrival counter moves past `last_seen`, the
+    /// scheduler closes, or `deadline` passes. Returns the current
+    /// counter and whether the wait ended without a new arrival
+    /// (timeout or close).
+    pub fn wait_new_arrival(&self, last_seen: u64, deadline: Instant) -> (u64, bool) {
+        let mut st = self.lock();
+        loop {
+            if st.arrivals != last_seen {
+                return (st.arrivals, false);
+            }
+            if st.closed {
+                return (st.arrivals, true);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (st.arrivals, true);
+            }
+            let (g, _timeout) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Job, JobKind};
+    use super::*;
+    use crate::compiler::GemmShape;
+
+    fn tiny_job(id: u64) -> Job {
+        Job {
+            id,
+            kind: JobKind::Gemm {
+                shape: GemmShape { m: 1, k: 2, n: 1 },
+                width: 8,
+                a: vec![1, 2],
+                b: vec![3, 4],
+            },
+        }
+    }
+
+    fn sched(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler::new(cfg, Arc::new(ServingMetrics::new())).unwrap()
+    }
+
+    fn ok_result(id: u64) -> JobResult {
+        JobResult {
+            id,
+            output: vec![id as i64],
+            stats: Default::default(),
+            wall_us: 1.0,
+            worker: 0,
+            batch_size: 1,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_handles() {
+        let s = sched(SchedulerConfig::default());
+        let h1 = s.submit(tiny_job(1)).unwrap();
+        let h2 = s.submit(tiny_job(2)).unwrap();
+        assert_eq!(s.depth(), 2);
+        let t1 = s.pop_blocking().unwrap();
+        let t2 = s.pop_blocking().unwrap();
+        assert_eq!((t1.job.id, t2.job.id), (1, 2));
+        // Complete out of submission order; handles resolve independently.
+        t2.complete(ok_result(2));
+        t1.complete(ok_result(1));
+        assert_eq!(h2.wait().output, vec![2]);
+        assert_eq!(h1.wait().output, vec![1]);
+    }
+
+    #[test]
+    fn priority_policy_reorders() {
+        let s = sched(SchedulerConfig {
+            policy: QueuePolicy::Priority,
+            ..Default::default()
+        });
+        s.submit_with_priority(tiny_job(1), 1).unwrap();
+        s.submit_with_priority(tiny_job(5), 5).unwrap();
+        s.submit_with_priority(tiny_job(3), 3).unwrap();
+        s.submit_with_priority(tiny_job(6), 5).unwrap(); // ties keep FIFO
+        let order: Vec<u64> = (0..4).map(|_| s.pop_blocking().unwrap().job.id).collect();
+        assert_eq!(order, vec![5, 6, 3, 1]);
+    }
+
+    #[test]
+    fn reject_backpressure_errors_at_capacity() {
+        let s = sched(SchedulerConfig {
+            capacity: 2,
+            backpressure: Backpressure::Reject,
+            ..Default::default()
+        });
+        s.submit(tiny_job(1)).unwrap();
+        s.submit(tiny_job(2)).unwrap();
+        let err = s.submit(tiny_job(3)).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        // Freeing a slot re-admits.
+        let t = s.pop_blocking().unwrap();
+        t.complete(ok_result(1));
+        s.submit(tiny_job(3)).unwrap();
+    }
+
+    #[test]
+    fn block_backpressure_waits_for_a_slot() {
+        let s = sched(SchedulerConfig { capacity: 1, ..Default::default() });
+        s.submit(tiny_job(1)).unwrap();
+        let s2 = s.clone();
+        let submitter = std::thread::spawn(move || s2.submit(tiny_job(2)).map(|h| h.id()));
+        // Give the submitter time to block, then free the slot.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let t = s.pop_blocking().unwrap();
+        t.complete(ok_result(1));
+        let got = submitter.join().unwrap().unwrap();
+        assert_eq!(got, 2);
+        assert_eq!(s.depth(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let s = sched(SchedulerConfig::default());
+        s.submit(tiny_job(1)).unwrap();
+        s.close();
+        assert!(s.submit(tiny_job(2)).is_err());
+        assert!(s.pop_blocking().is_some(), "backlog still dispatchable");
+        assert!(s.pop_blocking().is_none(), "closed + drained");
+    }
+
+    #[test]
+    fn dropped_ticket_resolves_handle_with_error() {
+        let s = sched(SchedulerConfig::default());
+        let h = s.submit(tiny_job(9)).unwrap();
+        let t = s.pop_blocking().unwrap();
+        drop(t);
+        let r = h.wait();
+        assert!(r.error.as_deref().unwrap_or("").contains("abandoned"));
+    }
+
+    #[test]
+    fn zero_capacity_rejected() {
+        assert!(Scheduler::new(
+            SchedulerConfig { capacity: 0, ..Default::default() },
+            Arc::new(ServingMetrics::new()),
+        )
+        .is_err());
+    }
+}

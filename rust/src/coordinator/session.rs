@@ -1,0 +1,271 @@
+//! Persistent model sessions: pinned plans and pre-staged weights.
+//!
+//! Serving traffic is dominated by *repeat* inference: the same layer
+//! (shape, width, weights) applied to a stream of fresh activations. The
+//! seed coordinator recompiled nothing thanks to its plan cache, but it
+//! still re-gathered the weight operand into staged lane order for every
+//! single job. A [`ModelSession`] hoists everything that depends only on
+//! the pinned weights out of the request path:
+//!
+//! * the compiled [`GemmPlan`] (microcode, accumulator width, slicing);
+//! * the **weight staging table** — for each of the `m·n` output
+//!   elements, the exact per-slice lane vector the executor would gather
+//!   from `B`, precomputed once at
+//!   [`ModelSession::prepare`] so each round's weight staging is a plain
+//!   `memcpy` regardless of how jobs are packed into rounds.
+//!
+//! Sessions compose with the [`Batcher`](super::Batcher): same-session
+//! jobs coalesce into packed rounds exactly like same-shape GEMMs, and
+//! the staging table indexes by *local* output element, so arbitrary
+//! batch alignments reuse it unchanged.
+//!
+//! ```
+//! use picaso::compiler::{gemm_ref, GemmShape, PimCompiler};
+//! use picaso::coordinator::{ModelSession, SessionSpec};
+//! use picaso::prelude::{ArrayGeometry, PimArray, PipelineConfig};
+//!
+//! let geom = ArrayGeometry::new(2, 1);
+//! let shape = GemmShape { m: 1, k: 16, n: 2 };
+//! let weights: Vec<i64> = (0..32).map(|v| (v % 5) - 2).collect();
+//! let spec = SessionSpec { shape, width: 8, weights: weights.clone() };
+//! let session = ModelSession::prepare(&PimCompiler::new(geom), &spec)?;
+//!
+//! let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+//! let a: Vec<i64> = (0..16).map(|v| v - 8).collect();
+//! let (c, _stats) = session.infer(&mut arr, &a)?;
+//! assert_eq!(c, gemm_ref(shape, &a, &weights));
+//! # Ok::<(), picaso::Error>(())
+//! ```
+
+use crate::array::{ArrayGeometry, PimArray, RunStats};
+use crate::compiler::{GemmPlan, GemmShape, PimCompiler};
+use crate::{Error, Result};
+
+/// Opaque identifier of an open session, allocated by
+/// [`Coordinator::open_session`](super::Coordinator::open_session).
+/// Ids are never reused within a coordinator's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session#{}", self.0)
+    }
+}
+
+/// Immutable description of a model session: the GEMM it serves and the
+/// pinned weight matrix.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    /// Problem shape (`m` activations rows × `k` inner × `n` outputs).
+    pub shape: GemmShape,
+    /// Operand width (bits).
+    pub width: u16,
+    /// Weights `B`, row-major `k×n`.
+    pub weights: Vec<i64>,
+}
+
+impl SessionSpec {
+    /// Check internal consistency (weight size vs shape).
+    pub fn validate(&self) -> Result<()> {
+        let want = self.shape.k * self.shape.n;
+        if self.weights.len() != want {
+            return Err(Error::Config(format!(
+                "session weights have {} values, shape {}x{}x{} needs {want}",
+                self.weights.len(),
+                self.shape.m,
+                self.shape.k,
+                self.shape.n
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A compiled, weight-staged session bound to one array geometry.
+///
+/// Cheap to clone relative to re-preparation; each coordinator worker
+/// holds its own copy so inference never contends on shared state.
+#[derive(Debug, Clone)]
+pub struct ModelSession {
+    plan: GemmPlan,
+    /// `b_rows[local]` is the staged weight lane vector (length
+    /// `slices·q`) for output element `local` of one job.
+    b_rows: Vec<Vec<i64>>,
+    geom: ArrayGeometry,
+}
+
+impl ModelSession {
+    /// Compile the plan and precompute the weight staging table.
+    pub fn prepare(compiler: &PimCompiler, spec: &SessionSpec) -> Result<Self> {
+        spec.validate()?;
+        let plan = compiler.gemm(spec.shape, spec.width)?;
+        let geom = compiler.geometry();
+        let q = geom.row_lanes();
+        let GemmShape { m, k, n } = spec.shape;
+        let per_job = m * n;
+        let mut b_rows = Vec::with_capacity(per_job);
+        for local in 0..per_job {
+            let j = local % n;
+            // Lane position of dot-product index kk is kk itself
+            // (slice s, lane l ⇒ position s·q + l = kk); tail lanes of
+            // the last slice stay zero.
+            let mut lanes = vec![0i64; plan.slices * q];
+            for (kk, lane) in lanes.iter_mut().enumerate().take(k) {
+                *lane = spec.weights[kk * n + j];
+            }
+            b_rows.push(lanes);
+        }
+        Ok(Self { plan, b_rows, geom })
+    }
+
+    /// The pinned compiled plan.
+    pub fn plan(&self) -> &GemmPlan {
+        &self.plan
+    }
+
+    /// The geometry this session's staging table was built for.
+    pub fn geometry(&self) -> ArrayGeometry {
+        self.geom
+    }
+
+    /// Run one inference (activations `A`, row-major `m×k`).
+    pub fn infer(&self, arr: &mut PimArray, a: &[i64]) -> Result<(Vec<i64>, RunStats)> {
+        let (mut outs, stats) = self.infer_batch(arr, &[a])?;
+        Ok((outs.pop().expect("batch of one yields one output"), stats))
+    }
+
+    /// Run a micro-batch of inferences in one packed execution (see
+    /// [`execute_gemm_batch`](crate::compiler::execute_gemm_batch) for
+    /// the packing scheme). Weight staging is a `memcpy` from the
+    /// precomputed table; only activations are gathered per job.
+    pub fn infer_batch(
+        &self,
+        arr: &mut PimArray,
+        acts: &[&[i64]],
+    ) -> Result<(Vec<Vec<i64>>, RunStats)> {
+        if arr.geometry() != self.geom {
+            return Err(Error::Config(format!(
+                "session prepared for {}x{} blocks, array is {}x{}",
+                self.geom.rows,
+                self.geom.cols,
+                arr.geometry().rows,
+                arr.geometry().cols
+            )));
+        }
+        let GemmShape { m, k, n } = self.plan.shape;
+        for (t, a) in acts.iter().enumerate() {
+            if a.len() != m * k {
+                return Err(Error::Compile(format!(
+                    "batch item {t}: activation size {} does not match shape {m}x{k}x{n}",
+                    a.len()
+                )));
+            }
+        }
+        let q = self.geom.row_lanes();
+        // Same packed engine as the plain executor; only the weight
+        // staging differs — a memcpy from the precomputed table instead
+        // of a gather from `B`.
+        crate::compiler::run_packed_rounds(
+            arr,
+            &self.plan,
+            acts.len(),
+            |t, local, s, lanes| {
+                let i = local / n;
+                let a = acts[t];
+                for (lane, slot) in lanes.iter_mut().enumerate() {
+                    let kk = s * q + lane;
+                    if kk < k {
+                        *slot = a[i * k + kk];
+                    }
+                }
+            },
+            |_t, local, s, lanes| {
+                lanes.copy_from_slice(&self.b_rows[local][s * q..(s + 1) * q]);
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PipelineConfig;
+    use crate::compiler::{execute_gemm, gemm_ref};
+    use crate::util::Xoshiro256;
+
+    fn spec(shape: GemmShape, seed: u64) -> SessionSpec {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut weights = vec![0i64; shape.k * shape.n];
+        rng.fill_signed(&mut weights, 8);
+        SessionSpec { shape, width: 8, weights }
+    }
+
+    #[test]
+    fn session_matches_reference_and_plain_executor() {
+        let geom = ArrayGeometry::new(4, 1);
+        let shape = GemmShape { m: 2, k: 20, n: 3 }; // multi-slice, ragged rounds
+        let sp = spec(shape, 0xAB);
+        let compiler = PimCompiler::new(geom);
+        let session = ModelSession::prepare(&compiler, &sp).unwrap();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let mut rng = Xoshiro256::seeded(0xCD);
+        for _ in 0..3 {
+            let mut a = vec![0i64; shape.m * shape.k];
+            rng.fill_signed(&mut a, 8);
+            let (c, stats) = session.infer(&mut arr, &a).unwrap();
+            assert_eq!(c, gemm_ref(shape, &a, &sp.weights));
+            // Same packed execution as the generic path: identical cycles.
+            let plan = compiler.gemm(shape, 8).unwrap();
+            let mut arr2 = PimArray::new(geom, PipelineConfig::FullPipe);
+            let (c2, stats2) = execute_gemm(&mut arr2, &plan, &a, &sp.weights).unwrap();
+            assert_eq!(c, c2);
+            assert_eq!(stats.cycles, stats2.cycles);
+        }
+    }
+
+    #[test]
+    fn session_batch_packs_rounds() {
+        let geom = ArrayGeometry::new(4, 1);
+        let shape = GemmShape { m: 1, k: 16, n: 3 }; // 3 outputs on 4 rows
+        let sp = spec(shape, 7);
+        let session = ModelSession::prepare(&PimCompiler::new(geom), &sp).unwrap();
+        let mut rng = Xoshiro256::seeded(9);
+        let mut acts = Vec::new();
+        for _ in 0..4 {
+            let mut a = vec![0i64; shape.m * shape.k];
+            rng.fill_signed(&mut a, 8);
+            acts.push(a);
+        }
+        let refs: Vec<&[i64]> = acts.iter().map(|a| a.as_slice()).collect();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (outs, batch_stats) = session.infer_batch(&mut arr, &refs).unwrap();
+        let mut solo_cycles = 0;
+        for (t, a) in acts.iter().enumerate() {
+            assert_eq!(outs[t], gemm_ref(shape, a, &sp.weights), "job {t}");
+            let mut arr2 = PimArray::new(geom, PipelineConfig::FullPipe);
+            let (_, s) = session.infer(&mut arr2, a).unwrap();
+            solo_cycles += s.cycles;
+        }
+        // 4 jobs x 3 outputs pack into 3 full rounds instead of 4 ragged.
+        assert!(batch_stats.cycles < solo_cycles);
+    }
+
+    #[test]
+    fn rejects_bad_weights_activations_and_geometry() {
+        let geom = ArrayGeometry::new(2, 1);
+        let shape = GemmShape { m: 1, k: 8, n: 2 };
+        let compiler = PimCompiler::new(geom);
+        let bad = SessionSpec { shape, width: 8, weights: vec![0; 3] };
+        assert!(ModelSession::prepare(&compiler, &bad).is_err());
+
+        let sp = spec(shape, 1);
+        let session = ModelSession::prepare(&compiler, &sp).unwrap();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        assert!(session.infer(&mut arr, &[0; 3]).is_err());
+
+        let mut wrong = PimArray::new(ArrayGeometry::new(4, 1), PipelineConfig::FullPipe);
+        let err = session.infer(&mut wrong, &vec![0; 8]).unwrap_err();
+        assert!(err.to_string().contains("prepared for"), "{err}");
+    }
+}

@@ -67,14 +67,21 @@ pub fn format_program(mc: &Microcode) -> String {
 }
 
 /// Assembler parse error with line context.
-#[derive(Debug, thiserror::Error)]
-#[error("asm line {line}: {msg}")]
+#[derive(Debug)]
 pub struct AsmError {
     /// 1-based source line.
     pub line: usize,
     /// Description of the problem.
     pub msg: String,
 }
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
 
 fn err(line: usize, msg: impl Into<String>) -> AsmError {
     AsmError { line, msg: msg.into() }

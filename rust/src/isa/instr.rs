@@ -58,54 +58,105 @@ pub enum Instruction {
     /// `dst[0..width] = op(x, y)` element-wise in every lane
     /// (OpMux config `A-OP-B`).
     Alu {
+        /// The FA/S op-code applied bit-serially.
         op: AluOp,
+        /// Destination operand base wordline.
         dst: RfAddr,
+        /// First source operand.
         x: RfAddr,
+        /// Second source operand.
         y: RfAddr,
+        /// Operand width (bits).
         width: u16,
     },
     /// Booth radix-2 multiply: `dst[0..2*width] = mand * mier`
     /// (initialized via `0-OP-B`, then `width` Booth steps).
     Mult {
+        /// Destination (2·width bits written).
         dst: RfAddr,
+        /// Multiplicand operand.
         mand: RfAddr,
+        /// Multiplier operand (Booth-recoded).
         mier: RfAddr,
+        /// Operand width (bits).
         width: u16,
     },
     /// One zero-copy fold level inside each PE block
     /// (OpMux config `A-FOLD-level`): receiver lanes do
     /// `dst += value at partner lane`.
     Fold {
+        /// Halving or adjacent fold pattern (Table III).
         pattern: FoldPattern,
+        /// Fold level (1-based; halves the active lanes each level).
         level: u8,
+        /// Operand folded in place.
         dst: RfAddr,
+        /// Operand width (bits).
         width: u16,
     },
     /// One reduction level across PE blocks via the binary-hopping
     /// network (OpMux config `A-OP-NET`).
-    NetReduce { level: u8, dst: RfAddr, width: u16 },
+    NetReduce {
+        /// Network hop level (0-based; doubles the hop distance).
+        level: u8,
+        /// Operand reduced in place.
+        dst: RfAddr,
+        /// Operand width (bits).
+        width: u16,
+    },
     /// Full row accumulation macro: all in-block folds followed by all
     /// network levels; the paper reports this as a single operation
     /// (Table V "Accumulation").
-    Accumulate { dst: RfAddr, width: u16 },
+    Accumulate {
+        /// Operand accumulated in place (row sum lands in lane 0).
+        dst: RfAddr,
+        /// Operand width (bits).
+        width: u16,
+    },
     /// One pooling fold level (paper §III-B + Fig 2(b)): receiver lanes
     /// keep `max`/`min` of themselves and their fold partner — a SUB
     /// compare followed by a CPX/CPY select through the OpMux.
     Pool {
+        /// Max or min pooling.
         op: PoolOp,
+        /// Halving or adjacent fold pattern (Table III).
         pattern: FoldPattern,
+        /// Fold level (1-based).
         level: u8,
+        /// Operand pooled in place.
         dst: RfAddr,
+        /// Operand width (bits).
         width: u16,
     },
     /// Sign-extend an operand in place from `from` bits to `to` bits in
     /// every lane (a CPX of the sign wordline into `to − from` planes) —
     /// required before accumulating 2N-bit products at full precision.
-    Extend { dst: RfAddr, from: u16, to: u16 },
+    Extend {
+        /// Operand extended in place.
+        dst: RfAddr,
+        /// Current width (bits).
+        from: u16,
+        /// Target width (bits).
+        to: u16,
+    },
     /// Corner-turn a host buffer into the register files.
-    Load { dst: RfAddr, width: u16, buf: BufId },
+    Load {
+        /// Destination base wordline.
+        dst: RfAddr,
+        /// Operand width (bits).
+        width: u16,
+        /// Host staging buffer to read.
+        buf: BufId,
+    },
     /// Corner-turn register-file contents back to a host buffer.
-    Store { src: RfAddr, width: u16, buf: BufId },
+    Store {
+        /// Source base wordline.
+        src: RfAddr,
+        /// Operand width (bits).
+        width: u16,
+        /// Host staging buffer to fill.
+        buf: BufId,
+    },
     /// No operation (one cycle).
     Nop,
 }

@@ -26,14 +26,27 @@
 //!   (Table VI), scalability sweeps (Fig 4).
 //! * [`analytic`] — closed-form latency/throughput/memory-efficiency models
 //!   (Table V, Table VIII, Figs 5–7), cross-validated against the simulator.
-//! * [`compiler`] — maps GEMM / MLP layers onto the PIM array as microcode.
-//! * [`coordinator`] — the system driver: array partitioning, job scheduling,
-//!   batched inference serving.
+//! * [`compiler`] — maps GEMM / MLP layers onto the PIM array as microcode,
+//!   with single-job and micro-batched executors.
+//! * [`coordinator`] — the serving subsystem: a bounded submission
+//!   [`coordinator::Scheduler`] with backpressure and per-job completion
+//!   handles, a micro-[`coordinator::Batcher`] that coalesces same-shape
+//!   jobs into one array invocation, persistent
+//!   [`coordinator::ModelSession`]s that pin compiled plans and pre-staged
+//!   weights, and the [`coordinator::Coordinator`] worker pool tying them
+//!   together.
+//! * [`metrics`] — request-path metrics: queue depth, batch size, and
+//!   per-stage latency percentiles (p50/p95/p99).
 //! * [`runtime`] — PJRT/XLA golden-model execution of the AOT-compiled JAX
 //!   models in `artifacts/` (Python is build-time only, never on the request
-//!   path).
+//!   path). Stubbed unless the `xla` feature is enabled.
 //! * [`report`] — renders the paper's tables and figure series with
 //!   paper-vs-measured columns.
+//!
+//! See `README.md` for a quickstart and `docs/PAPER_MAP.md` for the
+//! paper-artifact-to-module map.
+
+#![warn(missing_docs)]
 
 pub mod analytic;
 pub mod arch;
@@ -63,27 +76,66 @@ pub mod prelude {
     pub use crate::array::{ArrayGeometry, PimArray, RunStats};
     pub use crate::bits::{corner_turn, corner_turn_back, BitPlanes};
     pub use crate::compiler::{GemmPlan, GemmShape, MacProgram, PimCompiler};
-    pub use crate::coordinator::{Coordinator, CoordinatorConfig, Job, JobKind, JobResult};
+    pub use crate::coordinator::{
+        Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobHandle, JobKind,
+        JobResult, ModelSession, QueuePolicy, SchedulerConfig, SessionId,
+    };
     pub use crate::device::{Device, DeviceFamily, DEVICES};
     pub use crate::isa::{AluOp, BoothConf, Instruction, Microcode, OpMuxConf};
+    pub use crate::metrics::{MetricsSnapshot, ServingMetrics};
     pub use crate::synth::{ImplModel, ImplReport, TileReport};
 }
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Implemented by hand (no `thiserror`): the build environment is
+/// network-isolated and the crate is dependency-free.
+#[derive(Debug)]
 pub enum Error {
-    #[error("configuration error: {0}")]
+    /// Invalid configuration (bad geometry, worker count, CLI flags …).
     Config(String),
-    #[error("simulation error: {0}")]
+    /// Simulation-level failure (bad microcode, register-file overflow …).
     Sim(String),
-    #[error("compile error: {0}")]
+    /// The compiler rejected a workload.
     Compile(String),
-    #[error("placement failed: {0}")]
+    /// The virtual implementation tool could not place a design.
     Placement(String),
-    #[error("runtime error: {0}")]
+    /// Request-path failure (worker pool down, runtime unavailable …).
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// The submission queue is at capacity and the scheduler is configured
+    /// to reject rather than block (see [`coordinator::Backpressure`]).
+    Busy(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Compile(m) => write!(f, "compile error: {m}"),
+            Error::Placement(m) => write!(f, "placement failed: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Busy(m) => write!(f, "backpressure: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

@@ -1,7 +1,18 @@
 //! Runtime metrics for the coordinator: counters, latency recorders and
 //! throughput accounting, all cheap enough for the request path.
+//!
+//! Two layers:
+//!
+//! * [`Metrics`] — the original single-threaded per-batch accounting kept
+//!   for the synchronous [`Coordinator::run_batch`](crate::coordinator::Coordinator::run_batch)
+//!   path and the bench harness.
+//! * [`ServingMetrics`] — the thread-safe serving-path recorder fed by the
+//!   scheduler and every worker: queue depth, micro-batch sizes, and
+//!   per-stage latency histograms (queue-wait / execute / end-to-end) with
+//!   p50/p95/p99 summaries via [`MetricsSnapshot`].
 
 use crate::util::{OnlineStats, Percentiles};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Metrics for one serving/batch run.
@@ -107,6 +118,296 @@ impl Metrics {
     }
 }
 
+/// p50/p95/p99/mean/max summary of one latency stage, in microseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Worst observation.
+    pub max: f64,
+    /// Number of observations.
+    pub count: u64,
+}
+
+impl LatencySummary {
+    /// One-line rendering (µs).
+    pub fn render(&self) -> String {
+        format!(
+            "p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us max={:.0}us",
+            self.p50, self.p95, self.p99, self.mean, self.max
+        )
+    }
+}
+
+/// Observations kept per latency stage. Beyond this, reservoir
+/// sampling (Algorithm R) keeps a uniform sample of everything seen, so
+/// a long-running server neither grows without bound nor sorts
+/// multi-million-entry buffers under the metrics mutex at snapshot
+/// time; mean/max/count stay exact through [`OnlineStats`].
+const RESERVOIR_CAP: usize = 1 << 16;
+
+/// Percentile recorder + streaming moments for one stage.
+#[derive(Debug)]
+struct LatencyTrack {
+    samples: Vec<f64>,
+    stats: OnlineStats,
+    rng: crate::util::Xoshiro256,
+}
+
+impl Default for LatencyTrack {
+    fn default() -> Self {
+        Self {
+            samples: Vec::new(),
+            stats: OnlineStats::new(),
+            rng: crate::util::Xoshiro256::seeded(0x1A7E_0b5e),
+        }
+    }
+}
+
+impl LatencyTrack {
+    fn push(&mut self, v: f64) {
+        self.stats.push(v);
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            // Algorithm R: observation i replaces a reservoir slot with
+            // probability cap/i, keeping the sample uniform over all
+            // observations so far.
+            let j = self.rng.next_below(self.stats.count()) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    fn summary(&mut self) -> LatencySummary {
+        if self.samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut pct = Percentiles::new();
+        for &v in &self.samples {
+            pct.push(v);
+        }
+        LatencySummary {
+            p50: pct.quantile(0.50).unwrap_or(0.0),
+            p95: pct.quantile(0.95).unwrap_or(0.0),
+            p99: pct.quantile(0.99).unwrap_or(0.0),
+            mean: self.stats.mean(),
+            max: self.stats.max(),
+            count: self.stats.count(),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct ServingInner {
+    jobs: u64,
+    errors: u64,
+    batches: u64,
+    macs: u64,
+    pim_cycles: u64,
+    queue_wait_us: LatencyTrack,
+    exec_us: LatencyTrack,
+    total_us: LatencyTrack,
+    batch_size: OnlineStats,
+    batch_max: u64,
+    queue_depth: OnlineStats,
+    depth_hwm: u64,
+    window_start: Option<Instant>,
+}
+
+/// Thread-safe serving-path metrics shared by the scheduler and all
+/// workers. Recording is a short mutex hold (a few pushes). Latency
+/// percentiles are computed over a bounded uniform reservoir (65536
+/// samples per stage), so memory and snapshot cost stay constant on a
+/// long-running server; counters, means and maxima are exact.
+///
+/// ```
+/// use picaso::metrics::ServingMetrics;
+///
+/// let m = ServingMetrics::new();
+/// m.record_depth(3);
+/// m.record_batch(4, 180.0);
+/// m.record_job(25.0, 180.0, 205.0, 1024, 9000, false);
+/// let snap = m.snapshot();
+/// assert_eq!(snap.jobs, 1);
+/// assert!(snap.total.p99 >= snap.queue_wait.p50);
+/// ```
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    inner: Mutex<ServingInner>,
+}
+
+impl ServingMetrics {
+    /// Fresh metrics with the measurement window starting at the first
+    /// recorded event.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ServingInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Clear all recorded data and restart the measurement window now.
+    /// Call between load phases so throughput reflects only the phase.
+    pub fn reset_window(&self) {
+        let mut g = self.lock();
+        *g = ServingInner::default();
+        g.window_start = Some(Instant::now());
+    }
+
+    /// Record the submission-queue depth observed at an enqueue.
+    pub fn record_depth(&self, depth: usize) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.queue_depth.push(depth as f64);
+        g.depth_hwm = g.depth_hwm.max(depth as u64);
+    }
+
+    /// Record one dispatched micro-batch and its array-invocation wall
+    /// time (µs).
+    pub fn record_batch(&self, size: usize, exec_us: f64) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.batches += 1;
+        g.batch_size.push(size as f64);
+        g.batch_max = g.batch_max.max(size as u64);
+        g.exec_us.push(exec_us);
+    }
+
+    /// Record one completed job with its per-stage latencies (µs) and
+    /// simulator accounting.
+    pub fn record_job(
+        &self,
+        queue_us: f64,
+        exec_us: f64,
+        total_us: f64,
+        macs: u64,
+        cycles: u64,
+        failed: bool,
+    ) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.jobs += 1;
+        if failed {
+            g.errors += 1;
+        }
+        g.macs += macs;
+        g.pim_cycles += cycles;
+        g.queue_wait_us.push(queue_us);
+        let _ = exec_us; // exec latency is recorded per-batch; kept in the
+                         // signature so per-job attribution can evolve.
+        g.total_us.push(total_us);
+    }
+
+    /// Summarize everything recorded since the last
+    /// [`reset_window`](Self::reset_window) (or construction).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut g = self.lock();
+        let elapsed_s = g
+            .window_start
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        MetricsSnapshot {
+            jobs: g.jobs,
+            errors: g.errors,
+            batches: g.batches,
+            macs: g.macs,
+            pim_cycles: g.pim_cycles,
+            elapsed_s,
+            queue_wait: g.queue_wait_us.summary(),
+            exec: g.exec_us.summary(),
+            total: g.total_us.summary(),
+            mean_batch: g.batch_size.mean(),
+            max_batch: g.batch_max,
+            mean_queue_depth: g.queue_depth.mean(),
+            depth_hwm: g.depth_hwm,
+        }
+    }
+}
+
+/// Point-in-time summary produced by [`ServingMetrics::snapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Jobs completed (including failures).
+    pub jobs: u64,
+    /// Jobs that completed with an error.
+    pub errors: u64,
+    /// Micro-batches dispatched to arrays.
+    pub batches: u64,
+    /// Model-level MAC operations executed.
+    pub macs: u64,
+    /// PIM cycles simulated.
+    pub pim_cycles: u64,
+    /// Measurement-window wall time (s).
+    pub elapsed_s: f64,
+    /// Time jobs spent queued before a worker picked them up.
+    pub queue_wait: LatencySummary,
+    /// Array-invocation wall time per micro-batch.
+    pub exec: LatencySummary,
+    /// End-to-end job latency (submit → completion).
+    pub total: LatencySummary,
+    /// Mean micro-batch size.
+    pub mean_batch: f64,
+    /// Largest micro-batch dispatched.
+    pub max_batch: u64,
+    /// Mean queue depth observed at enqueue.
+    pub mean_queue_depth: f64,
+    /// Queue-depth high-water mark.
+    pub depth_hwm: u64,
+}
+
+impl MetricsSnapshot {
+    /// Jobs per second over the window.
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.jobs as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Model-level MAC/s over the window.
+    pub fn macs_per_sec(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.macs as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        format!(
+            "jobs={} errors={} wall={:.2}s thpt={:.1} jobs/s macs/s={}\n\
+             batches={} mean_batch={:.2} max_batch={} queue_depth mean={:.1} hwm={}\n\
+             queue_wait  {}\n\
+             batch_exec  {}\n\
+             end_to_end  {}",
+            self.jobs,
+            self.errors,
+            self.elapsed_s,
+            self.jobs_per_sec(),
+            crate::util::fmt_rate(self.macs_per_sec(), "MAC"),
+            self.batches,
+            self.mean_batch,
+            self.max_batch,
+            self.mean_queue_depth,
+            self.depth_hwm,
+            self.queue_wait.render(),
+            self.exec.render(),
+            self.total.render(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +435,49 @@ mod tests {
         let mut m = Metrics::new();
         assert_eq!(m.jobs_per_sec(), 0.0);
         assert!(m.summary().contains("jobs=0"));
+    }
+
+    #[test]
+    fn serving_metrics_stages_and_percentiles() {
+        let m = ServingMetrics::new();
+        for i in 0..100 {
+            m.record_depth(i % 7);
+            m.record_job(10.0 + i as f64, 50.0, 70.0 + i as f64, 64, 1000, i % 10 == 0);
+        }
+        m.record_batch(4, 200.0);
+        m.record_batch(8, 400.0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let s = m.snapshot();
+        assert_eq!(s.jobs, 100);
+        assert_eq!(s.errors, 10);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.max_batch, 8);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert!(s.queue_wait.p50 <= s.queue_wait.p99);
+        assert!(s.total.p95 <= s.total.p99);
+        assert!(s.total.max >= s.total.p99);
+        assert!(s.depth_hwm == 6);
+        assert!(s.jobs_per_sec() > 0.0);
+        let text = s.render();
+        assert!(text.contains("queue_wait"), "{text}");
+        assert!(text.contains("p95="), "{text}");
+    }
+
+    #[test]
+    fn serving_metrics_reset_window() {
+        let m = ServingMetrics::new();
+        m.record_job(1.0, 1.0, 2.0, 1, 1, false);
+        m.reset_window();
+        let s = m.snapshot();
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.total.count, 0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_safe() {
+        let s = ServingMetrics::new().snapshot();
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.jobs_per_sec(), 0.0);
+        assert!(s.render().contains("jobs=0"));
     }
 }

@@ -9,9 +9,21 @@
 //! Interchange is HLO *text*, not serialized `HloModuleProto` — jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! ## Feature gating
+//!
+//! The PJRT bindings (`xla` crate + XLA extension shared library) are a
+//! heavyweight, non-vendorable dependency, so the real client is gated
+//! behind the **`xla`** cargo feature. Without it (the default), this
+//! module compiles a faithful stub: [`XlaRuntime::cpu`] still constructs,
+//! [`XlaRuntime::has_artifact`] reports `false` for every artifact, and
+//! [`XlaRuntime::load`] / [`XlaRuntime::run_f32`] return descriptive
+//! [`Error::Runtime`](crate::Error::Runtime) values — callers degrade
+//! gracefully exactly as they do when `make artifacts` has not run. To use
+//! the real runtime, vendor the `xla` crate as a path dependency and build
+//! with `--features xla`.
 
-use crate::{Error, Result};
-use std::collections::HashMap;
+use crate::Result;
 use std::path::{Path, PathBuf};
 
 /// Default artifacts directory relative to the repo root.
@@ -27,117 +39,201 @@ pub mod artifact {
     pub const BITSERIAL: &str = "bitserial_mac";
 }
 
-/// A loaded, compiled XLA executable.
-pub struct GoldenModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Artifact name.
-    pub name: String,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::{artifact, Path, PathBuf, Result};
+    use crate::Error;
+    use std::collections::HashMap;
 
-/// The PJRT CPU runtime holding compiled golden models.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    models: HashMap<String, GoldenModel>,
-    dir: PathBuf,
-}
-
-impl XlaRuntime {
-    /// Create a CPU runtime rooted at the given artifacts directory.
-    pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
-        Ok(Self { client, models: HashMap::new(), dir: dir.as_ref().to_path_buf() })
+    /// A loaded, compiled XLA executable.
+    pub struct GoldenModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact name.
+        pub name: String,
     }
 
-    /// Platform string (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The PJRT CPU runtime holding compiled golden models.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        models: HashMap<String, GoldenModel>,
+        dir: PathBuf,
     }
 
-    /// Path of an artifact by name.
-    pub fn artifact_path(&self, name: &str) -> PathBuf {
-        self.dir.join(format!("{name}.hlo.txt"))
-    }
-
-    /// True if the artifact file exists (lets callers degrade gracefully
-    /// when `make artifacts` has not run).
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifact_path(name).exists()
-    }
-
-    /// Load and compile an artifact.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        let path = self.artifact_path(name);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )
-        .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
-        self.models.insert(name.to_string(), GoldenModel { exe, name: name.to_string() });
-        Ok(())
-    }
-
-    /// Execute a loaded model on f32 inputs (`(data, shape)` pairs) and
-    /// return the first element of its result tuple, flattened.
-    ///
-    /// All our golden models are lowered with `return_tuple=True`, so the
-    /// output is always a 1-tuple.
-    pub fn run_f32(&self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<f32>> {
-        let model = self
-            .models
-            .get(name)
-            .ok_or_else(|| Error::Runtime(format!("model '{name}' not loaded")))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let expect: usize = shape.iter().product();
-            if expect != data.len() {
-                return Err(Error::Runtime(format!(
-                    "input length {} != shape {:?}",
-                    data.len(),
-                    shape
-                )));
-            }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
-            literals.push(lit);
+    impl XlaRuntime {
+        /// Create a CPU runtime rooted at the given artifacts directory.
+        pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+            Ok(Self { client, models: HashMap::new(), dir: dir.as_ref().to_path_buf() })
         }
-        let result = model
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
-        let first = out
-            .to_tuple1()
-            .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
-        first
-            .to_vec::<f32>()
-            .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
-    }
 
-    /// Golden int GEMM via the f32-carried artifact: converts the integer
-    /// operands, executes, and rounds back. Exact for |values| < 2^24.
-    pub fn gemm_golden(
-        &self,
-        m: usize,
-        k: usize,
-        n: usize,
-        a: &[i64],
-        b: &[i64],
-    ) -> Result<Vec<i64>> {
-        let fa: Vec<f32> = a.iter().map(|&v| v as f32).collect();
-        let fb: Vec<f32> = b.iter().map(|&v| v as f32).collect();
-        let out = self.run_f32(artifact::GEMM, &[(fa, vec![m, k]), (fb, vec![k, n])])?;
-        Ok(out.iter().map(|&v| v.round() as i64).collect())
+        /// Platform string (for logs).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Path of an artifact by name.
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.dir.join(format!("{name}.hlo.txt"))
+        }
+
+        /// True if the artifact file exists (lets callers degrade gracefully
+        /// when `make artifacts` has not run).
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        /// Load and compile an artifact.
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            let path = self.artifact_path(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+            self.models.insert(name.to_string(), GoldenModel { exe, name: name.to_string() });
+            Ok(())
+        }
+
+        /// Execute a loaded model on f32 inputs (`(data, shape)` pairs) and
+        /// return the first element of its result tuple, flattened.
+        ///
+        /// All our golden models are lowered with `return_tuple=True`, so the
+        /// output is always a 1-tuple.
+        pub fn run_f32(&self, name: &str, inputs: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<f32>> {
+            let model = self
+                .models
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("model '{name}' not loaded")))?;
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let expect: usize = shape.iter().product();
+                if expect != data.len() {
+                    return Err(Error::Runtime(format!(
+                        "input length {} != shape {:?}",
+                        data.len(),
+                        shape
+                    )));
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+                literals.push(lit);
+            }
+            let result = model
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
+            let first = out
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+            first
+                .to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+        }
+
+        /// Golden int GEMM via the f32-carried artifact: converts the integer
+        /// operands, executes, and rounds back. Exact for |values| < 2^24.
+        pub fn gemm_golden(
+            &self,
+            m: usize,
+            k: usize,
+            n: usize,
+            a: &[i64],
+            b: &[i64],
+        ) -> Result<Vec<i64>> {
+            let fa: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let fb: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            let out = self.run_f32(artifact::GEMM, &[(fa, vec![m, k]), (fb, vec![k, n])])?;
+            Ok(out.iter().map(|&v| v.round() as i64).collect())
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::{Path, PathBuf, Result};
+    use crate::Error;
+
+    const GATE_HINT: &str =
+        "picaso was built without the `xla` feature; the PJRT golden runtime is stubbed";
+
+    /// Placeholder for a compiled XLA executable (the `xla` feature is off,
+    /// so none can ever be constructed).
+    pub struct GoldenModel {
+        /// Artifact name.
+        pub name: String,
+    }
+
+    /// Stub PJRT runtime: constructs, reports no artifacts, and returns
+    /// descriptive errors from every execution entry point.
+    pub struct XlaRuntime {
+        dir: PathBuf,
+    }
+
+    impl XlaRuntime {
+        /// Create a (stub) CPU runtime rooted at the given artifacts
+        /// directory. Always succeeds; see the module docs for the gate.
+        pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+            Ok(Self { dir: dir.as_ref().to_path_buf() })
+        }
+
+        /// Platform string (for logs).
+        pub fn platform(&self) -> String {
+            "stub-cpu (xla feature disabled)".to_string()
+        }
+
+        /// Path of an artifact by name.
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.dir.join(format!("{name}.hlo.txt"))
+        }
+
+        /// Always `false`: without the `xla` feature no artifact is
+        /// loadable, so callers take their graceful-degradation path.
+        pub fn has_artifact(&self, _name: &str) -> bool {
+            false
+        }
+
+        /// Always an error naming the artifact and the feature gate.
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            Err(Error::Runtime(format!("cannot load '{name}': {GATE_HINT}")))
+        }
+
+        /// Always an error: no model can be loaded in the stub.
+        pub fn run_f32(
+            &self,
+            name: &str,
+            _inputs: &[(Vec<f32>, Vec<usize>)],
+        ) -> Result<Vec<f32>> {
+            Err(Error::Runtime(format!("model '{name}' not loaded: {GATE_HINT}")))
+        }
+
+        /// Always an error: no golden GEMM without the `xla` feature.
+        pub fn gemm_golden(
+            &self,
+            _m: usize,
+            _k: usize,
+            _n: usize,
+            _a: &[i64],
+            _b: &[i64],
+        ) -> Result<Vec<i64>> {
+            Err(Error::Runtime(format!("golden GEMM unavailable: {GATE_HINT}")))
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use pjrt::{GoldenModel, XlaRuntime};
+#[cfg(not(feature = "xla"))]
+pub use stub::{GoldenModel, XlaRuntime};
 
 #[cfg(test)]
 mod tests {
