@@ -23,6 +23,13 @@ fi
 step "compile benches + examples"
 cargo build --release --benches --examples
 
+step "lint gate: cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets --quiet -- -D warnings
+else
+    echo "clippy not installed — skipping (install with: rustup component add clippy)"
+fi
+
 step "doc gate: cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -59,13 +59,15 @@ fn main() -> picaso::Result<()> {
     // Custom tiles: same workload on the behavioural models.
     for design in CustomDesign::ALL {
         let mut tile = CustomTile::new(design);
-        let (sum, cycles) = tile.mac_group(&a, &b, 8, 16)?;
+        let (sum, tile_stats) = tile.mac_group(&a, &b, 8, 16)?;
         assert_eq!(sum, expect, "{design:?} computes the right dot product");
         let m = ArchKind::Custom(design).cycles();
-        assert_eq!(cycles, m.mult(8) + m.accumulate(16, 16), "{design:?}");
+        assert_eq!(tile_stats.breakdown.mult, m.mult(8), "{design:?}");
+        assert_eq!(tile_stats.breakdown.accumulate, m.accumulate(16, 16), "{design:?}");
         println!(
-            "  {:<8} : sim {cycles:4} cycles == analytic {} (result {sum})",
+            "  {:<8} : sim {:4} cycles == analytic {} (result {sum})",
             design.name(),
+            tile_stats.cycles,
             m.mult(8) + m.accumulate(16, 16),
         );
     }

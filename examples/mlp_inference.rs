@@ -186,15 +186,15 @@ fn main() -> picaso::Result<()> {
     })?;
     let mut batch_jobs = Vec::new();
     for id in 0..jobs as u64 {
-        batch_jobs.push(Job {
+        batch_jobs.push(Job::new(
             id,
-            kind: JobKind::Gemm {
+            JobKind::Gemm {
                 shape: GemmShape { m: BATCH, k: IN, n: HIDDEN },
                 width: 8,
                 a: x.clone(),
                 b: params.w1.clone(),
             },
-        });
+        ));
     }
     let (results, mut metrics) = coord.run_batch(batch_jobs)?;
     let failures = results.iter().filter(|r| r.error.is_some()).count();

@@ -15,13 +15,21 @@
 //! Every result is verified against the software reference
 //! (`gemm_ref`) in both phases — the speedup is at equal correctness.
 //!
+//! The third argument picks the execution backend: a single design name
+//! (`picaso`, `spar2`, `ccb`, `comefa-d`, `comefa-a`, `a-mod`, `d-mod`)
+//! runs a homogeneous pool; `mixed` splits the pool into overlay +
+//! CoMeFa-A regions, tags jobs to alternate classes, and reports the
+//! per-backend throughput/latency comparison (the paper's Fig 6 /
+//! Table V numbers under live load).
+//!
 //! ```bash
-//! cargo run --release --example serve -- [jobs-per-phase] [workers]
+//! cargo run --release --example serve -- [jobs-per-phase] [workers] [backend]
 //! ```
 
+use picaso::arch::CustomDesign;
 use picaso::compiler::{gemm_ref, GemmShape};
 use picaso::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, SessionId,
+    BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, RegionSpec, SessionId,
 };
 use picaso::metrics::MetricsSnapshot;
 use picaso::prelude::*;
@@ -39,6 +47,7 @@ fn run_phase(
     shape: GemmShape,
     weights: &Arc<Vec<i64>>,
     session: Option<SessionId>,
+    tags: &Arc<Vec<Option<BackendClass>>>,
     id_base: u64,
 ) -> picaso::Result<(MetricsSnapshot, usize)> {
     coord.serving_metrics().reset_window();
@@ -47,6 +56,7 @@ fn run_phase(
         let quota = jobs / clients + usize::from(c < jobs % clients);
         let coord = Arc::clone(coord);
         let weights = Arc::clone(weights);
+        let tags = Arc::clone(tags);
         threads.push(std::thread::spawn(move || -> picaso::Result<usize> {
             let mut rng = Xoshiro256::seeded(id_base ^ (0xC11E47 + c as u64));
             let mut bad = 0;
@@ -55,18 +65,21 @@ fn run_phase(
                 let mut a = vec![0i64; shape.m * shape.k];
                 rng.fill_signed(&mut a, 8);
                 let expect = gemm_ref(shape, &a, &weights);
-                let handle = match session {
-                    Some(sid) => coord.submit_session(id, sid, a)?,
-                    None => coord.submit_job(Job {
-                        id,
-                        kind: JobKind::Gemm {
-                            shape,
-                            width: 8,
-                            a,
-                            b: weights.as_ref().clone(),
-                        },
-                    })?,
+                // In mixed mode, alternate the backend tag so every
+                // region kind serves an equal share of the load.
+                let tag = tags[j % tags.len()];
+                let kind = match session {
+                    Some(sid) => JobKind::SessionGemm { session: sid, a },
+                    None => JobKind::Gemm {
+                        shape,
+                        width: 8,
+                        a,
+                        b: weights.as_ref().clone(),
+                    },
                 };
+                let mut job = Job::new(id, kind);
+                job.backend = tag;
+                let handle = coord.submit_job(job)?;
                 let r = handle.wait();
                 if r.error.is_some() || r.output != expect {
                     bad += 1;
@@ -88,6 +101,25 @@ fn main() -> picaso::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let jobs: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(96);
     let workers: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let backend_name: String = argv.get(2).cloned().unwrap_or_else(|| "picaso".into());
+
+    // Backend selection: homogeneous pool (same names/aliases as the
+    // CLI's --backend, via the shared parser), or the mixed
+    // overlay+CoMeFa-A comparison with per-class job tagging.
+    let (kind, regions, tags): (ArchKind, Vec<RegionSpec>, Vec<Option<BackendClass>>) =
+        if backend_name == "mixed" {
+            (
+                ArchKind::PICASO_F,
+                RegionSpec::mixed_pool(workers),
+                vec![
+                    Some(BackendClass::Overlay),
+                    Some(BackendClass::Custom(CustomDesign::CoMeFaA)),
+                ],
+            )
+        } else {
+            (picaso::cli::parse_backend(&backend_name)?, Vec::new(), vec![None])
+        };
+    let tags = Arc::new(tags);
 
     let geom = ArrayGeometry::new(8, 4);
     // Single-sample inference against one pinned layer: 10 outputs per
@@ -95,8 +127,8 @@ fn main() -> picaso::Result<()> {
     // packs away.
     let shape = GemmShape { m: 1, k: 64, n: 10 };
     println!(
-        "serving {jobs} jobs/phase on {workers} workers, each an {}x{}-block PiCaSO-F region \
-         ({} PEs); workload: {}x{}x{} int8 GEMM, pinned weights",
+        "serving {jobs} jobs/phase on {workers} {backend_name} workers, each an {}x{}-block \
+         region ({} PEs); workload: {}x{}x{} int8 GEMM, pinned weights",
         geom.rows,
         geom.cols,
         geom.pes(),
@@ -117,10 +149,13 @@ fn main() -> picaso::Result<()> {
     let seed_coord = Arc::new(Coordinator::new(CoordinatorConfig {
         workers,
         geom,
+        kind,
+        regions: regions.clone(),
         batch: BatchPolicy::disabled(),
         ..Default::default()
     })?);
-    let (seed_snap, seed_bad) = run_phase(&seed_coord, load, jobs, shape, &weights, None, 0)?;
+    let (seed_snap, seed_bad) =
+        run_phase(&seed_coord, load, jobs, shape, &weights, None, &tags, 0)?;
     assert_eq!(seed_bad, 0, "seed path must verify against gemm_ref");
     if let Ok(c) = Arc::try_unwrap(seed_coord) {
         c.shutdown();
@@ -132,6 +167,8 @@ fn main() -> picaso::Result<()> {
     let coord = Arc::new(Coordinator::new(CoordinatorConfig {
         workers,
         geom,
+        kind,
+        regions,
         batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
         ..Default::default()
     })?);
@@ -151,6 +188,7 @@ fn main() -> picaso::Result<()> {
             shape,
             &weights,
             Some(sid),
+            &tags,
             (phase as u64 + 1) * 100_000_000,
         )?;
         assert_eq!(bad, 0, "serving path must verify against gemm_ref");
@@ -189,6 +227,24 @@ fn main() -> picaso::Result<()> {
         if seed_snap.jobs > 0 { seed_snap.pim_cycles / seed_snap.jobs } else { 0 },
         if batched.jobs > 0 { batched.pim_cycles / batched.jobs } else { 0 },
     );
+
+    // Per-backend comparison at the saturated point — the Fig 6 /
+    // Table V headline: throughput and tail latency per design class.
+    if !batched.per_backend.is_empty() {
+        println!("\n--- per-backend comparison at {load} clients ---");
+        for b in &batched.per_backend {
+            println!(
+                "  {:<10} {:>8.1} jobs/s  p50={:>6.0}us p95={:>6.0}us p99={:>6.0}us  \
+                 cycles/job={}",
+                b.backend.name(),
+                b.jobs_per_sec(batched.elapsed_s),
+                b.total.p50,
+                b.total.p95,
+                b.total.p99,
+                if b.jobs > 0 { b.pim_cycles / b.jobs } else { 0 },
+            );
+        }
+    }
     println!("\nserve OK");
     Ok(())
 }

@@ -26,10 +26,10 @@ fn main() {
         let mut tile = CustomTile::new(design);
         // mac_group accumulates at 2N; the figure pairs Table VIII\'s
         // width-N row — check the mult portion matches either way.
-        let (_, cycles) = tile.mac_group(&a, &b, 4, 16).unwrap();
+        let (_, stats) = tile.mac_group(&a, &b, 4, 16).unwrap();
         let kind = ArchKind::Custom(design);
         assert_eq!(
-            cycles,
+            stats.cycles,
             kind.cycles().mult(4) + kind.cycles().accumulate(16, 8),
             "{design:?}"
         );

@@ -74,6 +74,16 @@ impl CycleBreakdown {
     pub fn total(&self) -> u64 {
         self.alu + self.mult + self.reduce + self.accumulate + self.dma + self.nop
     }
+
+    /// Add another breakdown's charges into this one.
+    pub fn merge(&mut self, other: &CycleBreakdown) {
+        self.alu += other.alu;
+        self.mult += other.mult;
+        self.reduce += other.reduce;
+        self.accumulate += other.accumulate;
+        self.dma += other.dma;
+        self.nop += other.nop;
+    }
 }
 
 /// Result of running a program.
@@ -95,6 +105,16 @@ impl RunStats {
     /// Wall-clock time at a given operating frequency.
     pub fn time_ns(&self, freq_hz: f64) -> f64 {
         self.cycles as f64 / freq_hz * 1e9
+    }
+
+    /// Fold another run's counters into this one (used by the packed
+    /// multi-round executors to report one combined statistic).
+    pub fn merge(&mut self, other: &RunStats) {
+        self.cycles += other.cycles;
+        self.instructions += other.instructions;
+        self.breakdown.merge(&other.breakdown);
+        self.booth_active_steps += other.booth_active_steps;
+        self.booth_total_steps += other.booth_total_steps;
     }
 }
 
@@ -317,6 +337,36 @@ impl PimArray {
             }
         }
         Ok(())
+    }
+}
+
+impl crate::backend::PimBackend for PimArray {
+    fn arch(&self) -> ArchKind {
+        self.kind
+    }
+
+    fn rows(&self) -> usize {
+        self.geom.rows
+    }
+
+    fn row_lanes(&self) -> usize {
+        self.geom.row_lanes()
+    }
+
+    fn set_buffer(&mut self, buf: BufId, data: Vec<i64>) {
+        PimArray::set_buffer(self, buf, data);
+    }
+
+    fn buffer(&self, buf: BufId) -> Option<&[i64]> {
+        PimArray::buffer(self, buf)
+    }
+
+    fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {
+        PimArray::execute(self, mc)
+    }
+
+    fn row_result(&self, row: usize, base: RfAddr, width: u32) -> i64 {
+        PimArray::row_result(self, row, base, width)
     }
 }
 

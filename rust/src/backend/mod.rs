@@ -1,0 +1,172 @@
+//! The unified execution backend API: one trait in front of every design
+//! the paper compares.
+//!
+//! The paper's whole argument is a *comparison* — the PiCaSO overlay
+//! (stock BRAMs, §III) versus the custom read-modify-write BRAM-PIM tiles
+//! (CCB, CoMeFa-D/-A and the fused A-Mod/D-Mod, §V). Before this module
+//! existed the serving stack could only drive the overlay: the compiler's
+//! executors, the coordinator workers and the CLI were all hardwired to
+//! [`PimArray`], while the custom tiles lived behind an incompatible
+//! ad-hoc API. [`PimBackend`] is the common contract both sides now
+//! implement:
+//!
+//! * **staging** — host buffers bound by id ([`PimBackend::set_buffer`]),
+//!   consumed by the plan's `LOAD`s and filled by its `STORE`s;
+//! * **execution** — a compiled [`Microcode`] program runs as-is on any
+//!   backend ([`PimBackend::execute`]); the *data* semantics are
+//!   identical, while each backend charges its own
+//!   [`CycleModel`](crate::arch::CycleModel) costs (Table V vs the
+//!   Table VIII footnotes), so cycle comparisons stay apples-to-apples on
+//!   the exact same instruction stream;
+//! * **results** — per-row reduction read-back
+//!   ([`PimBackend::row_result`]) and a shared
+//!   [`RunStats`](crate::array::RunStats) cycle breakdown.
+//!
+//! [`BackendClass`] is the *routing* label the serving layer uses: a
+//! [`Job`](crate::coordinator::Job) or session tagged with a class only
+//! dispatches to worker regions of that class, which is what lets one
+//! [`Coordinator`](crate::coordinator::Coordinator) serve a mixed
+//! overlay + custom deployment and report per-backend latency — the
+//! paper's Fig 6 / Table V comparison under live load.
+
+use crate::arch::{ArchKind, CustomDesign};
+use crate::array::{ArrayGeometry, PimArray, RunStats};
+use crate::custom::CustomRegion;
+use crate::isa::{BufId, Microcode, RfAddr};
+use crate::Result;
+
+/// Scheduler-facing class of an execution backend. Coarser than
+/// [`ArchKind`]: all overlay pipeline configurations (and SPAR-2) share
+/// one class because they accept the same jobs at the same geometry,
+/// while every custom tile design is its own class (Table VIII compares
+/// them individually).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendClass {
+    /// A bit-serial overlay region built from stock BRAMs (any PiCaSO
+    /// pipeline configuration, or the SPAR-2 benchmark overlay).
+    Overlay,
+    /// A custom read-modify-write BRAM-PIM tile region of one design.
+    Custom(CustomDesign),
+}
+
+impl BackendClass {
+    /// The routing class of a design.
+    pub fn of(kind: ArchKind) -> BackendClass {
+        match kind {
+            ArchKind::Overlay(_) | ArchKind::Spar2 => BackendClass::Overlay,
+            ArchKind::Custom(d) => BackendClass::Custom(d),
+        }
+    }
+
+    /// Display name (matches the paper's design names).
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendClass::Overlay => "overlay",
+            BackendClass::Custom(d) => d.name(),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The unified execution API every PIM design implements.
+///
+/// A backend is a `rows × row_lanes` grid of bit-serial lanes with
+/// independent per-row reduction domains, a host staging-buffer table,
+/// and an interpreter for compiled [`Microcode`]. The compiler's
+/// executors ([`execute_gemm`](crate::compiler::execute_gemm) /
+/// [`execute_gemm_batch`](crate::compiler::execute_gemm_batch)) and the
+/// coordinator workers are generic over this trait, so the overlay
+/// simulator and every custom-tile region are interchangeable behind the
+/// same serving stack.
+pub trait PimBackend {
+    /// The simulated design.
+    fn arch(&self) -> ArchKind;
+
+    /// Independent reduction rows — output elements computable per round.
+    fn rows(&self) -> usize;
+
+    /// Lanes per row (the `q` of the accumulation formulas).
+    fn row_lanes(&self) -> usize;
+
+    /// Bind a host buffer for `LOAD`, or to be filled by `STORE`.
+    /// `data` holds one value per lane, row-major (`rows × row_lanes`);
+    /// shorter buffers fill leading lanes, the rest load as zero.
+    fn set_buffer(&mut self, buf: BufId, data: Vec<i64>);
+
+    /// Read a host buffer back (after `STORE`).
+    fn buffer(&self, buf: BufId) -> Option<&[i64]>;
+
+    /// Execute a microcode program, returning the cycle statistics
+    /// charged from this backend's [`CycleModel`](crate::arch::CycleModel).
+    fn execute(&mut self, mc: &Microcode) -> Result<RunStats>;
+
+    /// The reduction result of row `row` (its lane 0) for the operand at
+    /// `base..base+width`.
+    fn row_result(&self, row: usize, base: RfAddr, width: u32) -> i64;
+
+    /// The routing class of this backend.
+    fn class(&self) -> BackendClass {
+        BackendClass::of(self.arch())
+    }
+}
+
+/// Build the execution backend for a design: the cycle-accurate
+/// [`PimArray`] for overlay kinds (honouring `booth_skip`), a
+/// [`CustomRegion`] for custom tile kinds (which have no Booth datapath,
+/// so `booth_skip` is ignored).
+pub fn make_backend(
+    kind: ArchKind,
+    geom: ArrayGeometry,
+    booth_skip: bool,
+) -> Box<dyn PimBackend + Send> {
+    match kind {
+        ArchKind::Overlay(_) | ArchKind::Spar2 => {
+            let mut arr = PimArray::with_kind(geom, kind);
+            arr.set_booth_skip(booth_skip);
+            Box::new(arr)
+        }
+        ArchKind::Custom(d) => Box::new(CustomRegion::new(d, geom)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PipelineConfig;
+
+    #[test]
+    fn class_of_every_kind() {
+        for cfg in PipelineConfig::ALL {
+            assert_eq!(BackendClass::of(ArchKind::Overlay(cfg)), BackendClass::Overlay);
+        }
+        assert_eq!(BackendClass::of(ArchKind::Spar2), BackendClass::Overlay);
+        for d in CustomDesign::ALL {
+            assert_eq!(BackendClass::of(ArchKind::Custom(d)), BackendClass::Custom(d));
+        }
+    }
+
+    #[test]
+    fn class_names_match_the_paper() {
+        assert_eq!(BackendClass::Overlay.name(), "overlay");
+        assert_eq!(BackendClass::Custom(CustomDesign::CoMeFaA).name(), "CoMeFa-A");
+        assert_eq!(format!("{}", BackendClass::Custom(CustomDesign::AMod)), "A-Mod");
+    }
+
+    #[test]
+    fn factory_builds_the_right_backend() {
+        let geom = ArrayGeometry::new(2, 1);
+        let overlay = make_backend(ArchKind::PICASO_F, geom, true);
+        assert_eq!(overlay.class(), BackendClass::Overlay);
+        assert_eq!(overlay.rows(), 2);
+        assert_eq!(overlay.row_lanes(), 16);
+        let custom = make_backend(ArchKind::Custom(CustomDesign::Ccb), geom, false);
+        assert_eq!(custom.class(), BackendClass::Custom(CustomDesign::Ccb));
+        assert_eq!(custom.rows(), 2);
+        assert_eq!(custom.row_lanes(), 16);
+    }
+}

@@ -7,20 +7,21 @@
 //!   table4|table5|table6|table7|table8   regenerate a paper table
 //!   fig4|fig5|fig6|fig7                  regenerate a paper figure
 //!   all                                  everything above, in order
-//!   gemm      [--m --k --n --width --rows --cols --arch --booth-skip]
+//!   gemm      [--m --k --n --width --rows --cols --arch|--backend --booth-skip]
 //!   serve     [--jobs --workers --clients --rows --cols --m --k --n
 //!              --batch --max-wait-us --capacity --policy --backpressure
-//!              --no-session]
+//!              --no-session --backend]
 //!   asm       --file=<path> [--width]    assemble + disassemble a program
 //!   info                                 device database summary
 //! ```
 
-use crate::arch::{ArchKind, PipelineConfig};
+use crate::arch::{ArchKind, CustomDesign, PipelineConfig};
 use crate::array::ArrayGeometry;
+use crate::backend::{make_backend, BackendClass};
 use crate::compiler::{gemm_ref, GemmShape};
 use crate::coordinator::{
     Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, QueuePolicy,
-    SchedulerConfig,
+    RegionSpec, SchedulerConfig,
 };
 use crate::report::paper;
 use crate::util::Xoshiro256;
@@ -86,8 +87,14 @@ paper artifacts:
 
 system:
   gemm   --m=16 --k=64 --n=16 --width=8 --rows=8 --cols=4
+         [--backend=picaso|spar2|ccb|comefa-d|comefa-a|a-mod|d-mod]
          [--arch=full|single|rf|op|spar2] [--booth-skip]
   serve  --jobs=64 --workers=4 --clients=4 --rows=8 --cols=4
+         [--backend=picaso|spar2|ccb|comefa-d|comefa-a|a-mod|d-mod|mixed]
+                                         execution backend; `mixed` splits
+                                         the pool into overlay + CoMeFa-A
+                                         regions and reports per-backend
+                                         p50/p95/p99
          [--m=4 --k=64 --n=8]            served GEMM shape
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--capacity=256]                submission queue bound
@@ -95,6 +102,8 @@ system:
          [--no-session]                  per-job weights (seed behaviour)
   info   device database summary
   help   this text
+
+backend aliases: comefa-mod/amod = a-mod, ccb-mod/dmod = d-mod, full/picaso
 ";
 
 /// Run a parsed command, returning its textual output.
@@ -129,14 +138,25 @@ pub fn run(args: &Args) -> Result<String> {
     }
 }
 
-fn parse_arch(s: &str) -> Result<ArchKind> {
+/// Parse a design name: the overlay pipeline configurations, SPAR-2, and
+/// every custom tile design of the study (with the common aliases for
+/// the fused Mod variants). Shared by the CLI and the examples so the
+/// accepted names can never drift.
+pub fn parse_backend(s: &str) -> Result<ArchKind> {
     Ok(match s {
-        "full" => ArchKind::Overlay(PipelineConfig::FullPipe),
+        "full" | "picaso" => ArchKind::Overlay(PipelineConfig::FullPipe),
         "single" => ArchKind::Overlay(PipelineConfig::SingleCycle),
         "rf" => ArchKind::Overlay(PipelineConfig::RfPipe),
         "op" => ArchKind::Overlay(PipelineConfig::OpPipe),
         "spar2" => ArchKind::Spar2,
-        other => return Err(Error::Config(format!("unknown arch '{other}'"))),
+        "ccb" => ArchKind::Custom(CustomDesign::Ccb),
+        "comefa-d" => ArchKind::Custom(CustomDesign::CoMeFaD),
+        "comefa-a" => ArchKind::Custom(CustomDesign::CoMeFaA),
+        // A-Mod = CoMeFa-A + PiCaSO's OpMux/network fused in (§V-A).
+        "a-mod" | "amod" | "comefa-mod" => ArchKind::Custom(CustomDesign::AMod),
+        // D-Mod = the same fusion applied to CoMeFa-D (CCB-style RMW).
+        "d-mod" | "dmod" | "ccb-mod" => ArchKind::Custom(CustomDesign::DMod),
+        other => return Err(Error::Config(format!("unknown arch/backend '{other}'"))),
     })
 }
 
@@ -147,7 +167,10 @@ fn cmd_gemm(args: &Args) -> Result<String> {
     let width: u16 = args.get("width", 8)?;
     let rows: usize = args.get("rows", 8)?;
     let cols: usize = args.get("cols", 4)?;
-    let kind = parse_arch(&args.get::<String>("arch", "full".into())?)?;
+    // --backend is the unified selector (overlay and custom designs);
+    // --arch remains as the original overlay-focused spelling.
+    let arch_name = args.get::<String>("backend", args.get::<String>("arch", "full".into())?)?;
+    let kind = parse_backend(&arch_name)?;
     let geom = ArrayGeometry::new(rows, cols);
     let shape = GemmShape { m, k, n };
     let mut rng = Xoshiro256::seeded(args.get("seed", 42u64)?);
@@ -156,11 +179,10 @@ fn cmd_gemm(args: &Args) -> Result<String> {
     rng.fill_signed(&mut a, width as u32);
     rng.fill_signed(&mut b, width as u32);
 
-    let mut arr = crate::array::PimArray::with_kind(geom, kind);
-    arr.set_booth_skip(args.flag("booth-skip"));
+    let mut backend = make_backend(kind, geom, args.flag("booth-skip"));
     let plan = crate::compiler::PimCompiler::new(geom).gemm(shape, width)?;
     let t0 = std::time::Instant::now();
-    let (c, stats) = crate::compiler::execute_gemm(&mut arr, &plan, &a, &b)?;
+    let (c, stats) = crate::compiler::execute_gemm(&mut *backend, &plan, &a, &b)?;
     let wall = t0.elapsed();
     let ok = c == gemm_ref(shape, &a, &b);
     let freq = crate::analytic::design_clock_hz(kind, crate::device::Device::by_id("U55").unwrap());
@@ -210,9 +232,29 @@ fn cmd_serve(args: &Args) -> Result<String> {
     };
     let use_session = !args.flag("no-session");
 
+    // Backend selection: one design name for a homogeneous pool, or
+    // "mixed" for an overlay + CoMeFa-A split with jobs tagged to
+    // alternate classes — the paper's comparison under identical load.
+    let backend_name: String = args.get("backend", "picaso".into())?;
+    let (kind, regions, tags): (ArchKind, Vec<RegionSpec>, Vec<Option<BackendClass>>) =
+        if backend_name == "mixed" {
+            (
+                ArchKind::PICASO_F,
+                RegionSpec::mixed_pool(workers),
+                vec![
+                    Some(BackendClass::Overlay),
+                    Some(BackendClass::Custom(CustomDesign::CoMeFaA)),
+                ],
+            )
+        } else {
+            (parse_backend(&backend_name)?, Vec::new(), vec![None])
+        };
+
     let cfg = CoordinatorConfig {
         workers,
         geom: ArrayGeometry::new(rows, cols),
+        kind,
+        regions,
         scheduler: SchedulerConfig { capacity, policy, backpressure },
         batch: BatchPolicy {
             max_batch: batch.max(1),
@@ -242,6 +284,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
         let quota = jobs / clients + usize::from(c < jobs % clients);
         let coord = Arc::clone(&coord);
         let weights = Arc::clone(&weights);
+        let tags = tags.clone();
         client_threads.push(std::thread::spawn(move || -> Result<(usize, usize, usize)> {
             let mut rng = Xoshiro256::seeded(0x5EED + c as u64);
             let mut served = 0;
@@ -259,6 +302,9 @@ fn cmd_serve(args: &Args) -> Result<String> {
                     QueuePolicy::Priority => (j % 4) as u8,
                     QueuePolicy::Fifo => 0,
                 };
+                // In mixed mode jobs alternate backend classes so the
+                // run exercises (and reports) every region kind.
+                let tag = tags[j % tags.len()];
                 // Under --backpressure=reject a full queue sheds the
                 // request; count it and retry after a short backoff so
                 // the closed loop still completes its quota.
@@ -272,7 +318,9 @@ fn cmd_serve(args: &Args) -> Result<String> {
                             b: weights.as_ref().clone(),
                         },
                     };
-                    match coord.submit_with_priority(Job { id, kind }, priority) {
+                    let mut job = Job::new(id, kind);
+                    job.backend = tag;
+                    match coord.submit_with_priority(job, priority) {
                         Ok(h) => break h,
                         Err(Error::Busy(_)) => {
                             shed += 1;
@@ -301,13 +349,15 @@ fn cmd_serve(args: &Args) -> Result<String> {
         shed += sh;
     }
     let snap = coord.metrics_snapshot();
+    let nworkers = coord.worker_kinds().len();
     if let Ok(c) = Arc::try_unwrap(coord) {
         c.shutdown();
     }
 
     Ok(format!(
-        "served {served} gemm jobs on {workers} workers ({clients} closed-loop clients, \
-         {m}x{k}x{n}, {mode})\nfailures: {failures}\nrejected then retried: {shed}\n{report}\n",
+        "served {served} gemm jobs on {nworkers} {backend_name} workers \
+         ({clients} closed-loop clients, {m}x{k}x{n}, {mode})\n\
+         failures: {failures}\nrejected then retried: {shed}\n{report}\n",
         m = shape.m,
         k = shape.k,
         n = shape.n,
@@ -375,6 +425,17 @@ mod tests {
     }
 
     #[test]
+    fn gemm_command_runs_on_every_custom_backend() {
+        for backend in ["ccb", "comefa-d", "comefa-a", "a-mod", "d-mod", "comefa-mod", "ccb-mod"] {
+            let out =
+                run_line(&format!("gemm --m=2 --k=16 --n=2 --rows=2 --cols=1 --backend={backend}"))
+                    .unwrap();
+            assert!(out.contains("OK"), "{backend}: {out}");
+        }
+        assert!(run_line("gemm --backend=bogus").is_err());
+    }
+
+    #[test]
     fn serve_command_runs() {
         let out = run_line("serve --jobs=6 --workers=2 --rows=2 --cols=1").unwrap();
         assert!(out.contains("served 6"), "{out}");
@@ -395,6 +456,31 @@ mod tests {
         assert!(out.contains("per-job weights"), "{out}");
         assert!(run_line("serve --policy=bogus").is_err());
         assert!(run_line("serve --backpressure=bogus").is_err());
+    }
+
+    #[test]
+    fn serve_command_custom_backend() {
+        let out =
+            run_line("serve --jobs=6 --workers=2 --rows=2 --cols=1 --backend=comefa-a").unwrap();
+        assert!(out.contains("served 6"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("backend CoMeFa-A"), "{out}");
+        assert!(run_line("serve --backend=bogus").is_err());
+    }
+
+    #[test]
+    fn serve_command_mixed_backends() {
+        let out = run_line(
+            "serve --jobs=8 --workers=2 --rows=2 --cols=1 --backend=mixed \
+             --backpressure=reject --capacity=64",
+        )
+        .unwrap();
+        assert!(out.contains("served 8"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        // Per-backend comparison lines (the Fig 6 / Table V numbers).
+        assert!(out.contains("backend overlay"), "{out}");
+        assert!(out.contains("backend CoMeFa-A"), "{out}");
+        assert!(out.contains("p95="), "{out}");
     }
 
     #[test]

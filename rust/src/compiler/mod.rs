@@ -15,7 +15,8 @@
 //! operand widths up to 16 bits with room for the staging slot.
 
 use crate::arch::check_reduction_q;
-use crate::array::{ArrayGeometry, PimArray, RunStats};
+use crate::array::{ArrayGeometry, RunStats};
+use crate::backend::PimBackend;
 use crate::isa::{AluOp, BufId, FoldPattern, Instruction, Microcode, PoolOp, RfAddr};
 use crate::util::ceil_log2;
 use crate::{Error, Result};
@@ -202,19 +203,22 @@ impl PimCompiler {
     }
 }
 
-/// Execute a compiled GEMM on an array: stages operand slices round by
-/// round, runs the microcode, and collects `C` (row-major `m×n`).
+/// Execute a compiled GEMM on any [`PimBackend`]: stages operand slices
+/// round by round, runs the microcode, and collects `C` (row-major
+/// `m×n`). The same plan drives the overlay [`PimArray`](crate::array::PimArray)
+/// and the custom-tile [`CustomRegion`](crate::custom::CustomRegion)
+/// backends; only the cycle charges differ.
 ///
 /// This is the data-movement half the coordinator performs on the real
 /// system; kept as a free function so examples and tests can drive it
 /// directly. Single-job convenience wrapper over [`execute_gemm_batch`].
-pub fn execute_gemm(
-    arr: &mut PimArray,
+pub fn execute_gemm<B: PimBackend + ?Sized>(
+    backend: &mut B,
     plan: &GemmPlan,
     a: &[i64],
     b: &[i64],
 ) -> Result<(Vec<i64>, RunStats)> {
-    let (mut outs, stats) = execute_gemm_batch(arr, plan, &[(a, b)])?;
+    let (mut outs, stats) = execute_gemm_batch(backend, plan, &[(a, b)])?;
     Ok((outs.pop().expect("batch of one yields one output"), stats))
 }
 
@@ -231,8 +235,8 @@ pub fn execute_gemm(
 ///
 /// Returns one output matrix (row-major `m×n`) per job plus the combined
 /// run statistics of the packed execution.
-pub fn execute_gemm_batch(
-    arr: &mut PimArray,
+pub fn execute_gemm_batch<B: PimBackend + ?Sized>(
+    backend: &mut B,
     plan: &GemmPlan,
     items: &[(&[i64], &[i64])],
 ) -> Result<(Vec<Vec<i64>>, RunStats)> {
@@ -246,9 +250,9 @@ pub fn execute_gemm_batch(
             )));
         }
     }
-    let q = arr.geometry().row_lanes();
+    let q = backend.row_lanes();
     run_packed_rounds(
-        arr,
+        backend,
         plan,
         items.len(),
         |t, local, s, lanes| {
@@ -284,14 +288,15 @@ pub fn execute_gemm_batch(
 /// `q` lanes (pre-zeroed; leave tail lanes past `k` untouched). Keeping
 /// one engine guarantees the plain and session paths can never diverge
 /// in packing, buffer layout, or cycle accounting.
-pub(crate) fn run_packed_rounds<FA, FB>(
-    arr: &mut PimArray,
+pub(crate) fn run_packed_rounds<B, FA, FB>(
+    backend: &mut B,
     plan: &GemmPlan,
     jobs: usize,
     mut fill_a: FA,
     mut fill_b: FB,
 ) -> Result<(Vec<Vec<i64>>, RunStats)>
 where
+    B: PimBackend + ?Sized,
     FA: FnMut(usize, usize, usize, &mut [i64]),
     FB: FnMut(usize, usize, usize, &mut [i64]),
 {
@@ -299,8 +304,8 @@ where
         return Ok((Vec::new(), RunStats::default()));
     }
     let GemmShape { m, n, .. } = plan.shape;
-    let q = arr.geometry().row_lanes();
-    let rows = arr.geometry().rows;
+    let q = backend.row_lanes();
+    let rows = backend.rows();
     let per_job = m * n;
     let outputs = per_job * jobs;
     let rounds = outputs.div_ceil(rows);
@@ -320,17 +325,14 @@ where
                 fill_a(t, local, s, &mut a_stage[r * q..(r + 1) * q]);
                 fill_b(t, local, s, &mut b_stage[r * q..(r + 1) * q]);
             }
-            arr.set_buffer(BufId(BUF_A.0 + 2 * s as u16), a_stage);
-            arr.set_buffer(BufId(BUF_A.0 + 2 * s as u16 + 1), b_stage);
+            backend.set_buffer(BufId(BUF_A.0 + 2 * s as u16), a_stage);
+            backend.set_buffer(BufId(BUF_A.0 + 2 * s as u16 + 1), b_stage);
         }
-        let stats = arr.execute(&plan.microcode)?;
-        total.cycles += stats.cycles;
-        total.instructions += stats.instructions;
-        total.booth_active_steps += stats.booth_active_steps;
-        total.booth_total_steps += stats.booth_total_steps;
+        let stats = backend.execute(&plan.microcode)?;
+        total.merge(&stats);
         for r in 0..live {
             let g = first_out + r;
-            c[g / per_job][g % per_job] = arr.row_result(r, WL_PARTIAL, plan.acc_width as u32);
+            c[g / per_job][g % per_job] = backend.row_result(r, WL_PARTIAL, plan.acc_width as u32);
         }
     }
     Ok((c, total))
@@ -355,7 +357,9 @@ pub fn gemm_ref(shape: GemmShape, a: &[i64], b: &[i64]) -> Vec<i64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::PipelineConfig;
+    use crate::arch::{CustomDesign, PipelineConfig};
+    use crate::array::PimArray;
+    use crate::custom::CustomRegion;
     use crate::util::Xoshiro256;
 
     fn random_gemm(shape: GemmShape, width: u32, seed: u64) -> (Vec<i64>, Vec<i64>) {
@@ -552,6 +556,25 @@ mod tests {
         let (outs, stats) = execute_gemm_batch(&mut arr, &plan, &[]).unwrap();
         assert!(outs.is_empty());
         assert_eq!(stats.cycles, 0);
+    }
+
+    #[test]
+    fn same_plan_runs_on_overlay_and_custom_backends() {
+        // The tentpole contract: one compiled plan, every backend,
+        // bit-identical outputs (cycle charges differ by design).
+        let geom = ArrayGeometry::new(2, 1); // 2 rows x 16 lanes
+        let shape = GemmShape { m: 2, k: 20, n: 2 }; // multi-slice, ragged
+        let (a, b) = random_gemm(shape, 8, 0xB0);
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        let expect = gemm_ref(shape, &a, &b);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (c_overlay, s_overlay) = execute_gemm(&mut arr, &plan, &a, &b).unwrap();
+        assert_eq!(c_overlay, expect);
+        let mut region = CustomRegion::new(CustomDesign::CoMeFaA, geom);
+        let (c_custom, s_custom) = execute_gemm(&mut region, &plan, &a, &b).unwrap();
+        assert_eq!(c_custom, expect);
+        assert!(s_overlay.cycles > 0 && s_custom.cycles > 0);
+        assert_ne!(s_overlay.cycles, s_custom.cycles, "different cycle models");
     }
 
     #[test]

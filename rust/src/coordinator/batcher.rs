@@ -29,7 +29,7 @@
 //! let sched = Scheduler::new(SchedulerConfig::default(), Arc::new(ServingMetrics::new()))?;
 //! let shape = GemmShape { m: 1, k: 2, n: 1 };
 //! for id in 0..3 {
-//!     let job = Job { id, kind: JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] } };
+//!     let job = Job::new(id, JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] });
 //!     sched.submit(job)?;
 //! }
 //! let batcher = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
@@ -43,6 +43,7 @@
 
 use super::scheduler::{Scheduler, Ticket};
 use super::{JobKind, SessionId};
+use crate::backend::BackendClass;
 use crate::compiler::GemmShape;
 use std::time::{Duration, Instant};
 
@@ -117,9 +118,23 @@ impl Batcher {
     /// Pull the next micro-batch: blocks for a head-of-line ticket, then
     /// coalesces same-key tickets until a flush trigger fires. Returns
     /// `None` once the scheduler is closed and drained. Every returned
-    /// batch is non-empty and single-key.
+    /// batch is non-empty and single-key. Equivalent to
+    /// [`collect_for`](Self::collect_for) with no class filter.
     pub fn collect(&self, sched: &Scheduler) -> Option<Vec<Ticket>> {
-        let first = sched.pop_blocking()?;
+        self.collect_for(sched, None)
+    }
+
+    /// [`collect`](Self::collect) for a worker of the given backend
+    /// class: only tickets the class may run are taken (untagged tickets
+    /// run anywhere), so a batch never mixes jobs bound for different
+    /// region kinds. Returns `None` once the scheduler is closed and no
+    /// eligible ticket remains.
+    pub fn collect_for(
+        &self,
+        sched: &Scheduler,
+        class: Option<BackendClass>,
+    ) -> Option<Vec<Ticket>> {
+        let first = sched.pop_blocking_for(class)?;
         let max = self.policy.max_batch.max(1);
         if max == 1 {
             return Some(vec![first]);
@@ -129,7 +144,7 @@ impl Batcher {
         let mut batch = vec![first];
         let mut seen = sched.arrivals();
         while batch.len() < max {
-            if let Some(t) = sched.try_pop_matching(&key) {
+            if let Some(t) = sched.try_pop_matching(&key, class) {
                 batch.push(t);
                 continue;
             }
@@ -155,15 +170,15 @@ mod tests {
     use std::sync::Arc;
 
     fn gemm_job(id: u64, n: usize) -> Job {
-        Job {
+        Job::new(
             id,
-            kind: JobKind::Gemm {
+            JobKind::Gemm {
                 shape: GemmShape { m: 1, k: 2, n },
                 width: 8,
                 a: vec![1, 2],
                 b: vec![0; 2 * n],
             },
-        }
+        )
     }
 
     fn sched() -> Scheduler {
@@ -209,6 +224,32 @@ mod tests {
         let next = b.collect(&s).unwrap();
         assert_eq!(next.len(), 1);
         assert_eq!(next[0].job.id, 1);
+    }
+
+    #[test]
+    fn backend_tags_do_not_coalesce_across_classes() {
+        use crate::arch::CustomDesign;
+        let s = sched();
+        let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+        let mut j0 = gemm_job(0, 1);
+        j0.backend = Some(BackendClass::Overlay);
+        let mut j1 = gemm_job(1, 1);
+        j1.backend = Some(comefa);
+        let j2 = gemm_job(2, 1); // untagged: joins any batch
+        s.submit(j0).unwrap();
+        s.submit(j1).unwrap();
+        s.submit(j2).unwrap();
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        let overlay: Vec<u64> = b
+            .collect_for(&s, Some(BackendClass::Overlay))
+            .unwrap()
+            .iter()
+            .map(|t| t.job.id)
+            .collect();
+        assert_eq!(overlay, vec![0, 2], "same key, but the CoMeFa job must not join");
+        let custom: Vec<u64> =
+            b.collect_for(&s, Some(comefa)).unwrap().iter().map(|t| t.job.id).collect();
+        assert_eq!(custom, vec![1]);
     }
 
     #[test]

@@ -21,11 +21,19 @@
 //!   table, so repeat inference skips both compilation and weight
 //!   gathering.
 //!
-//! The [`Coordinator`] spawns one worker thread per array region; each
-//! worker pulls micro-batches, executes them on its own simulated
-//! [`PimArray`], and resolves the jobs' handles. Queue depth, batch sizes
-//! and per-stage latencies stream into a shared
-//! [`ServingMetrics`](crate::metrics::ServingMetrics).
+//! The [`Coordinator`] spawns one worker thread per region; each worker
+//! owns a simulated execution backend behind the unified
+//! [`PimBackend`](crate::backend::PimBackend) trait — an overlay
+//! [`PimArray`](crate::array::PimArray) or a custom-tile
+//! [`CustomRegion`](crate::custom::CustomRegion) — pulls micro-batches it
+//! is eligible for, executes them, and resolves the jobs' handles. A
+//! deployment can mix region kinds ([`CoordinatorConfig::regions`]); jobs
+//! and sessions tagged with a [`BackendClass`](crate::backend::BackendClass)
+//! route only to matching regions. Queue depth, batch sizes and per-stage
+//! latencies stream into a shared
+//! [`ServingMetrics`](crate::metrics::ServingMetrics), tagged per backend
+//! class so mixed deployments report the paper's overlay-vs-custom
+//! comparison live.
 //!
 //! Implementation notes: the vendored crate set has no tokio, so
 //! everything is std threads + `Mutex`/`Condvar`. This matches the SIMD
@@ -43,7 +51,8 @@ pub use scheduler::{
 pub use session::{ModelSession, SessionId, SessionSpec};
 
 use crate::arch::{ArchKind, PipelineConfig};
-use crate::array::{ArrayGeometry, PimArray, RunStats};
+use crate::array::{ArrayGeometry, RunStats};
+use crate::backend::{make_backend, BackendClass, PimBackend};
 use crate::compiler::{execute_gemm, execute_gemm_batch, GemmPlan, GemmShape, PimCompiler};
 use crate::metrics::{Metrics, MetricsSnapshot, ServingMetrics};
 use crate::{Error, Result};
@@ -53,16 +62,55 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// One group of identical worker regions in a (possibly heterogeneous)
+/// deployment: `count` workers, each simulating `kind` at the
+/// coordinator's shared geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionSpec {
+    /// The design these regions simulate (overlay or custom).
+    pub kind: ArchKind,
+    /// Number of worker regions of this kind.
+    pub count: usize,
+}
+
+impl RegionSpec {
+    /// The standard mixed benchmark pool: `workers` split into PiCaSO-F
+    /// overlay and CoMeFa-A custom regions (odd counts favour the
+    /// overlay; always at least one region of each kind, so a mixed
+    /// pool can never be missing a class its tagged jobs need). Shared
+    /// by the CLI `serve --backend=mixed` and `examples/serve.rs` so
+    /// the split can never drift between them.
+    pub fn mixed_pool(workers: usize) -> Vec<RegionSpec> {
+        let w = workers.max(2);
+        vec![
+            RegionSpec { kind: ArchKind::PICASO_F, count: w.div_ceil(2) },
+            RegionSpec {
+                kind: ArchKind::Custom(crate::arch::CustomDesign::CoMeFaA),
+                count: w / 2,
+            },
+        ]
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Worker regions (each owns one simulated array).
+    /// Worker regions (each owns one simulated backend). Ignored when
+    /// [`regions`](Self::regions) is non-empty.
     pub workers: usize,
-    /// Geometry of each region.
+    /// Geometry of each region (shared by every region so one compiled
+    /// plan and one session staging table serve the whole pool).
     pub geom: ArrayGeometry,
-    /// Overlay design each region simulates.
+    /// Design each region simulates when [`regions`](Self::regions) is
+    /// empty (the homogeneous configuration).
     pub kind: ArchKind,
-    /// Charge Booth NOP-skipping latency.
+    /// Heterogeneous deployment: an explicit mix of region kinds (e.g.
+    /// 2 overlay + 2 CoMeFa-A). Empty means `workers × kind`. Jobs and
+    /// sessions tagged with a [`BackendClass`] are routed only to
+    /// matching regions; untagged work runs anywhere.
+    pub regions: Vec<RegionSpec>,
+    /// Charge Booth NOP-skipping latency (overlay regions only; the
+    /// custom tiles have no Booth datapath).
     pub booth_skip: bool,
     /// Submission-queue bounds, ordering and backpressure.
     pub scheduler: SchedulerConfig,
@@ -79,9 +127,26 @@ impl Default for CoordinatorConfig {
                 .unwrap_or(4),
             geom: ArrayGeometry::new(8, 4),
             kind: ArchKind::Overlay(PipelineConfig::FullPipe),
+            regions: Vec::new(),
             booth_skip: false,
             scheduler: SchedulerConfig::default(),
             batch: BatchPolicy::default(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// The flat per-worker design list this configuration spawns:
+    /// [`regions`](Self::regions) expanded in order, or
+    /// `workers × kind` when no explicit regions are given.
+    pub fn worker_kinds(&self) -> Vec<ArchKind> {
+        if self.regions.is_empty() {
+            vec![self.kind; self.workers]
+        } else {
+            self.regions
+                .iter()
+                .flat_map(|r| std::iter::repeat(r.kind).take(r.count))
+                .collect()
         }
     }
 }
@@ -93,6 +158,23 @@ pub struct Job {
     pub id: u64,
     /// Payload.
     pub kind: JobKind,
+    /// Required worker backend class. `None` (the default) runs on any
+    /// region; `Some` routes the job only to matching regions — the
+    /// handle on which the serving benchmark compares overlay vs custom
+    /// designs under identical load.
+    pub backend: Option<BackendClass>,
+}
+
+impl Job {
+    /// An untagged job (runs on any worker region).
+    pub fn new(id: u64, kind: JobKind) -> Self {
+        Self { id, kind, backend: None }
+    }
+
+    /// A job pinned to worker regions of the given backend class.
+    pub fn on(id: u64, kind: JobKind, backend: BackendClass) -> Self {
+        Self { id, kind, backend: Some(backend) }
+    }
 }
 
 /// Job payloads.
@@ -132,6 +214,9 @@ pub struct JobResult {
     /// per-instruction-kind breakdown is not attributed per job and
     /// stays zeroed for batched executions.
     pub stats: RunStats,
+    /// Backend class of the worker region that ran the job (`None` only
+    /// for abandoned jobs that never reached a worker).
+    pub backend: Option<BackendClass>,
     /// This job's share of the wall-clock execution time (µs) of the
     /// array invocation that served it (the batch's wall time divided by
     /// [`batch_size`](Self::batch_size)), so per-job latency accounting
@@ -159,7 +244,8 @@ struct SessionRegistryInner {
 
 type SessionRegistry = Arc<SessionRegistryInner>;
 
-/// The serving coordinator: a scheduler-fed, micro-batching worker pool.
+/// The serving coordinator: a scheduler-fed, micro-batching worker pool
+/// over homogeneous or mixed backend regions.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     sched: Scheduler,
@@ -170,15 +256,28 @@ pub struct Coordinator {
     sessions: SessionRegistry,
     next_session: AtomicU64,
     metrics: Arc<ServingMetrics>,
+    /// Design of each worker region, indexed by worker id.
+    worker_kinds: Vec<ArchKind>,
+    /// Distinct backend classes present in the pool (for routing
+    /// validation at submit time).
+    classes: Vec<BackendClass>,
 }
 
 impl Coordinator {
     /// Spawn the worker pool.
     pub fn new(cfg: CoordinatorConfig) -> Result<Self> {
-        if cfg.workers == 0 {
+        let worker_kinds = cfg.worker_kinds();
+        if worker_kinds.is_empty() {
             return Err(Error::Config("workers must be >= 1".into()));
         }
         crate::arch::check_reduction_q(cfg.geom.row_lanes())?;
+        let mut classes: Vec<BackendClass> = Vec::new();
+        for k in &worker_kinds {
+            let c = BackendClass::of(*k);
+            if !classes.contains(&c) {
+                classes.push(c);
+            }
+        }
         let metrics = Arc::new(ServingMetrics::new());
         let sched = Scheduler::new(cfg.scheduler.clone(), Arc::clone(&metrics))?;
         let sessions: SessionRegistry = Arc::new(SessionRegistryInner {
@@ -187,13 +286,14 @@ impl Coordinator {
         });
         let batcher = Batcher::new(cfg.batch);
         let mut handles = Vec::new();
-        for widx in 0..cfg.workers {
+        for (widx, kind) in worker_kinds.iter().enumerate() {
+            let kind = *kind;
             let sched = sched.clone();
             let cfg = cfg.clone();
             let registry = Arc::clone(&sessions);
             let metrics = Arc::clone(&metrics);
             handles.push(std::thread::spawn(move || {
-                worker_loop(widx, cfg, sched, batcher, registry, metrics);
+                worker_loop(widx, kind, cfg, sched, batcher, registry, metrics);
             }));
         }
         Ok(Self {
@@ -204,12 +304,25 @@ impl Coordinator {
             sessions,
             next_session: AtomicU64::new(1),
             metrics,
+            worker_kinds,
+            classes,
         })
     }
 
     /// Configuration in effect.
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
+    }
+
+    /// Design of each worker region, indexed by the `worker` field of
+    /// [`JobResult`].
+    pub fn worker_kinds(&self) -> &[ArchKind] {
+        &self.worker_kinds
+    }
+
+    /// Distinct backend classes available in this pool.
+    pub fn backend_classes(&self) -> &[BackendClass] {
+        &self.classes
     }
 
     /// The underlying scheduler (for depth inspection or direct use).
@@ -229,14 +342,36 @@ impl Coordinator {
     }
 
     /// Submit a job and get its completion handle — the primary serving
-    /// API. Applies the configured backpressure at capacity.
+    /// API. Applies the configured backpressure at capacity. Jobs tagged
+    /// with a [`BackendClass`] absent from the pool are rejected here
+    /// (they could never dispatch); session jobs inherit their session's
+    /// backend requirement unless tagged explicitly.
     pub fn submit_job(&self, job: Job) -> Result<JobHandle> {
-        self.sched.submit(job)
+        self.submit_with_priority(job, 0)
     }
 
     /// [`submit_job`](Self::submit_job) at an explicit priority (higher
     /// runs first under [`QueuePolicy::Priority`]).
-    pub fn submit_with_priority(&self, job: Job, priority: u8) -> Result<JobHandle> {
+    pub fn submit_with_priority(&self, mut job: Job, priority: u8) -> Result<JobHandle> {
+        if job.backend.is_none() {
+            if let JobKind::SessionGemm { session, .. } = &job.kind {
+                job.backend = self
+                    .sessions
+                    .map
+                    .read()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .get(session)
+                    .and_then(|spec| spec.backend);
+            }
+        }
+        if let Some(b) = job.backend {
+            if !self.classes.contains(&b) {
+                return Err(Error::Config(format!(
+                    "job {} requires backend class {b}, but this pool has no such region",
+                    job.id
+                )));
+            }
+        }
         self.sched.submit_with_priority(job, priority)
     }
 
@@ -244,13 +379,35 @@ impl Coordinator {
     /// the compiled plan for `shape`/`width` so repeat inference skips
     /// compilation and weight staging. Returns the id to use with
     /// [`JobKind::SessionGemm`] / [`submit_session`](Self::submit_session).
+    /// The session's jobs run on any region; use
+    /// [`open_session_on`](Self::open_session_on) to pin a backend class.
     pub fn open_session(
         &self,
         shape: GemmShape,
         width: u16,
         weights: Vec<i64>,
     ) -> Result<SessionId> {
-        let spec = SessionSpec { shape, width, weights };
+        self.open_session_on(shape, width, weights, None)
+    }
+
+    /// [`open_session`](Self::open_session) with an optional backend
+    /// requirement: when `backend` is `Some`, every job submitted against
+    /// the session dispatches only to worker regions of that class.
+    pub fn open_session_on(
+        &self,
+        shape: GemmShape,
+        width: u16,
+        weights: Vec<i64>,
+        backend: Option<BackendClass>,
+    ) -> Result<SessionId> {
+        if let Some(b) = backend {
+            if !self.classes.contains(&b) {
+                return Err(Error::Config(format!(
+                    "session requires backend class {b}, but this pool has no such region"
+                )));
+            }
+        }
+        let spec = SessionSpec { shape, width, weights, backend };
         // Validate eagerly (spec consistency + compilability) so errors
         // surface at open time, not per-job on a worker.
         spec.validate()?;
@@ -290,14 +447,14 @@ impl Coordinator {
         session: SessionId,
         a: Vec<i64>,
     ) -> Result<JobHandle> {
-        self.submit_job(Job { id: job_id, kind: JobKind::SessionGemm { session, a } })
+        self.submit_job(Job::new(job_id, JobKind::SessionGemm { session, a }))
     }
 
     /// Enqueue a job (legacy path). Prefer [`submit_job`](Self::submit_job),
     /// which returns the completion handle instead of parking it for
     /// [`drain`](Self::drain).
     pub fn submit(&mut self, job: Job) -> Result<()> {
-        let h = self.sched.submit(job)?;
+        let h = self.submit_job(job)?;
         self.pending
             .lock()
             .unwrap_or_else(|e| e.into_inner())
@@ -333,7 +490,7 @@ impl Coordinator {
         metrics.start();
         let mut handles = Vec::with_capacity(jobs.len());
         for j in jobs {
-            handles.push(self.sched.submit(j)?);
+            handles.push(self.submit_job(j)?);
         }
         let mut results: Vec<JobResult> = handles.into_iter().map(JobHandle::wait).collect();
         metrics.stop();
@@ -392,14 +549,18 @@ struct BatchOutcome {
 
 fn worker_loop(
     widx: usize,
+    kind: ArchKind,
     cfg: CoordinatorConfig,
     sched: Scheduler,
     batcher: Batcher,
     registry: SessionRegistry,
     metrics: Arc<ServingMetrics>,
 ) {
-    let mut array = PimArray::with_kind(cfg.geom, cfg.kind);
-    array.set_booth_skip(cfg.booth_skip);
+    // The unified backend: an overlay array or a custom-tile region,
+    // depending on this worker's design — everything below here is
+    // backend-agnostic.
+    let mut backend = make_backend(kind, cfg.geom, cfg.booth_skip);
+    let class = BackendClass::of(kind);
     let compiler = PimCompiler::new(cfg.geom);
     // Plan cache: compiling a shape once per worker (microcode reuse is
     // what makes the "python never on the request path" contract cheap).
@@ -408,7 +569,7 @@ fn worker_loop(
     // first use; swept against the registry whenever a close happens.
     let mut sessions: HashMap<SessionId, ModelSession> = HashMap::new();
     let mut seen_epoch = 0u64;
-    while let Some(batch) = batcher.collect(&sched) {
+    while let Some(batch) = batcher.collect_for(&sched, Some(class)) {
         let epoch = registry.closed_epoch.load(Ordering::Acquire);
         if epoch != seen_epoch {
             seen_epoch = epoch;
@@ -419,10 +580,10 @@ fn worker_loop(
         let t0 = Instant::now();
         let outcome = match batch[0].key {
             BatchKey::Gemm { shape, width } => {
-                run_gemm_batch(&mut array, &compiler, &mut plans, shape, width, &batch)
+                run_gemm_batch(&mut *backend, &compiler, &mut plans, shape, width, &batch)
             }
             BatchKey::Session(sid) => run_session_batch(
-                &mut array,
+                &mut *backend,
                 &compiler,
                 &registry,
                 &mut sessions,
@@ -443,11 +604,20 @@ fn worker_loop(
             let id = ticket.job.id;
             let total_us = ticket.enqueued_at.elapsed().as_secs_f64() * 1e6;
             let macs = output.len() as u64;
-            metrics.record_job(queue_us, wall_us, total_us, macs, stats.cycles, error.is_some());
+            metrics.record_job(
+                Some(class),
+                queue_us,
+                wall_us,
+                total_us,
+                macs,
+                stats.cycles,
+                error.is_some(),
+            );
             ticket.complete(JobResult {
                 id,
                 output,
                 stats,
+                backend: Some(class),
                 wall_us,
                 worker: widx,
                 batch_size,
@@ -460,8 +630,8 @@ fn worker_loop(
 /// Execute a micro-batch of plain GEMM jobs. Per-ticket validation keeps
 /// one poison job from failing its batch-mates; a batch-level simulator
 /// error falls back to per-job execution for the same reason.
-fn run_gemm_batch(
-    array: &mut PimArray,
+fn run_gemm_batch<B: PimBackend + ?Sized>(
+    backend: &mut B,
     compiler: &PimCompiler,
     plans: &mut HashMap<(GemmShape, u16), GemmPlan>,
     shape: GemmShape,
@@ -511,7 +681,7 @@ fn run_gemm_batch(
     if items.is_empty() {
         return BatchOutcome { per_job };
     }
-    match execute_gemm_batch(array, plan, &items) {
+    match execute_gemm_batch(backend, plan, &items) {
         Ok((outs, stats)) => {
             let shares = stats_shares(&stats, items.len());
             for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {
@@ -521,7 +691,7 @@ fn run_gemm_batch(
         Err(_) if items.len() > 1 => {
             // Isolate the failure: run the batch members one by one.
             for (slot, (a, b)) in valid_idx.iter().zip(&items) {
-                match execute_gemm(array, plan, a, b) {
+                match execute_gemm(backend, plan, a, b) {
                     Ok((out, stats)) => per_job[*slot] = (out, stats, None),
                     Err(e) => per_job[*slot].2 = Some(e.to_string()),
                 }
@@ -534,8 +704,8 @@ fn run_gemm_batch(
 
 /// Execute a micro-batch of session jobs against the worker's cached
 /// (or freshly prepared) [`ModelSession`].
-fn run_session_batch(
-    array: &mut PimArray,
+fn run_session_batch<B: PimBackend + ?Sized>(
+    backend: &mut B,
     compiler: &PimCompiler,
     registry: &SessionRegistry,
     sessions: &mut HashMap<SessionId, ModelSession>,
@@ -601,7 +771,7 @@ fn run_session_batch(
     if acts.is_empty() {
         return BatchOutcome { per_job };
     }
-    match session.infer_batch(array, &acts) {
+    match session.infer_batch(backend, &acts) {
         Ok((outs, stats)) => {
             let shares = stats_shares(&stats, acts.len());
             for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {
@@ -610,7 +780,7 @@ fn run_session_batch(
         }
         Err(_) if acts.len() > 1 => {
             for (slot, a) in valid_idx.iter().zip(&acts) {
-                match session.infer(array, a) {
+                match session.infer(backend, a) {
                     Ok((out, stats)) => per_job[*slot] = (out, stats, None),
                     Err(e) => per_job[*slot].2 = Some(e.to_string()),
                 }
@@ -634,7 +804,7 @@ mod tests {
         rng.fill_signed(&mut a, 8);
         rng.fill_signed(&mut b, 8);
         let expect = gemm_ref(shape, &a, &b);
-        (Job { id, kind: JobKind::Gemm { shape, width: 8, a, b } }, expect)
+        (Job::new(id, JobKind::Gemm { shape, width: 8, a, b }), expect)
     }
 
     #[test]
@@ -684,15 +854,15 @@ mod tests {
         .unwrap();
         // Mismatched operand size.
         coord
-            .submit(Job {
-                id: 1,
-                kind: JobKind::Gemm {
+            .submit(Job::new(
+                1,
+                JobKind::Gemm {
                     shape: GemmShape { m: 2, k: 8, n: 2 },
                     width: 8,
                     a: vec![0; 3],
                     b: vec![0; 16],
                 },
-            })
+            ))
             .unwrap();
         let r = coord.drain(1).unwrap();
         assert!(r[0].error.is_some());
@@ -797,6 +967,85 @@ mod tests {
         // Post-close submissions fail at execution with a clear error.
         let r = coord.submit_session(99, sid, vec![0; 16]).unwrap().wait();
         assert!(r.error.as_deref().unwrap_or("").contains("not open"), "{:?}", r.error);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mixed_regions_route_by_backend_class() {
+        use crate::arch::CustomDesign;
+        let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+        let coord = Coordinator::new(CoordinatorConfig {
+            geom: ArrayGeometry::new(2, 1),
+            regions: vec![
+                RegionSpec { kind: ArchKind::PICASO_F, count: 1 },
+                RegionSpec { kind: ArchKind::Custom(CustomDesign::CoMeFaA), count: 1 },
+            ],
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(coord.worker_kinds().len(), 2);
+        assert_eq!(coord.backend_classes(), &[BackendClass::Overlay, comefa]);
+        let shape = GemmShape { m: 2, k: 16, n: 2 };
+        let mut handles = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..10u64 {
+            let (mut job, expect) = gemm_job(i, shape, 0x711 + i);
+            let want = if i % 2 == 0 { BackendClass::Overlay } else { comefa };
+            job.backend = Some(want);
+            handles.push(coord.submit_job(job).unwrap());
+            wants.push((want, expect));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait();
+            assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+            assert_eq!(r.output, wants[i].1, "job {i} output");
+            assert_eq!(r.backend, Some(wants[i].0), "job {i} landed on the wrong class");
+            assert_eq!(
+                BackendClass::of(coord.worker_kinds()[r.worker]),
+                wants[i].0,
+                "job {i} worker index disagrees with its class"
+            );
+        }
+        // A class with no region in this pool is rejected at submit.
+        let (mut job, _) = gemm_job(99, shape, 1);
+        job.backend = Some(BackendClass::Custom(CustomDesign::Ccb));
+        assert!(coord.submit_job(job).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_backend_requirement_is_inherited_and_validated() {
+        use crate::arch::CustomDesign;
+        let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+        let coord = Coordinator::new(CoordinatorConfig {
+            geom: ArrayGeometry::new(2, 1),
+            regions: vec![
+                RegionSpec { kind: ArchKind::PICASO_F, count: 1 },
+                RegionSpec { kind: ArchKind::Custom(CustomDesign::CoMeFaA), count: 1 },
+            ],
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 1, k: 16, n: 2 };
+        let mut rng = Xoshiro256::seeded(0xBEAD);
+        let mut weights = vec![0i64; shape.k * shape.n];
+        rng.fill_signed(&mut weights, 8);
+        let sid = coord
+            .open_session_on(shape, 8, weights.clone(), Some(comefa))
+            .unwrap();
+        for i in 0..4u64 {
+            let mut a = vec![0i64; shape.m * shape.k];
+            rng.fill_signed(&mut a, 8);
+            let expect = gemm_ref(shape, &a, &weights);
+            let r = coord.submit_session(i, sid, a).unwrap().wait();
+            assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+            assert_eq!(r.output, expect, "job {i}");
+            assert_eq!(r.backend, Some(comefa), "session jobs must run on CoMeFa-A");
+        }
+        // Pinning a session to an absent class fails at open.
+        assert!(coord
+            .open_session_on(shape, 8, weights, Some(BackendClass::Custom(CustomDesign::DMod)))
+            .is_err());
         coord.shutdown();
     }
 

@@ -26,7 +26,7 @@
 //!
 //! let sched = Scheduler::new(SchedulerConfig::default(), Arc::new(ServingMetrics::new()))?;
 //! let shape = GemmShape { m: 1, k: 2, n: 1 };
-//! let job = Job { id: 7, kind: JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] } };
+//! let job = Job::new(7, JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] });
 //! let handle = sched.submit(job)?;
 //!
 //! // ... a worker thread pops the ticket and completes it:
@@ -38,6 +38,7 @@
 //!     stats: Default::default(),
 //!     wall_us: 0.0,
 //!     worker: 0,
+//!     backend: None,
 //!     batch_size: 1,
 //!     error: None,
 //! });
@@ -48,6 +49,7 @@
 
 use super::batcher::BatchKey;
 use super::{Job, JobResult};
+use crate::backend::BackendClass;
 use crate::metrics::ServingMetrics;
 use crate::{Error, Result};
 use std::collections::VecDeque;
@@ -171,6 +173,7 @@ impl Drop for Completion {
                 stats: Default::default(),
                 wall_us: 0.0,
                 worker: usize::MAX,
+                backend: None,
                 batch_size: 0,
                 error: Some("job abandoned: completion dropped before a result was delivered".into()),
             };
@@ -206,6 +209,16 @@ impl Ticket {
     /// Deliver the job's result to its [`JobHandle`].
     pub fn complete(self, result: JobResult) {
         self.completion.complete(result);
+    }
+
+    /// True if a worker of the given class may run this ticket, per the
+    /// job's [`backend`](super::Job::backend) tag (`class = None` means
+    /// the worker accepts anything — the single-backend legacy path).
+    pub fn eligible_for(&self, class: Option<BackendClass>) -> bool {
+        match (class, self.job.backend) {
+            (None, _) | (_, None) => true,
+            (Some(worker), Some(job)) => worker == job,
+        }
     }
 }
 
@@ -344,10 +357,21 @@ impl Scheduler {
 
     /// Pop the head-of-line ticket, blocking while the queue is empty.
     /// Returns `None` once the scheduler is closed **and** drained.
+    /// Equivalent to [`pop_blocking_for`](Self::pop_blocking_for) with no
+    /// class filter.
     pub fn pop_blocking(&self) -> Option<Ticket> {
+        self.pop_blocking_for(None)
+    }
+
+    /// Pop the first ticket a worker of `class` may run, blocking while
+    /// none is queued. Tickets tagged for other backend classes are left
+    /// in place for their own workers. Returns `None` once the scheduler
+    /// is closed **and** holds no eligible ticket.
+    pub fn pop_blocking_for(&self, class: Option<BackendClass>) -> Option<Ticket> {
         let mut st = self.lock();
         loop {
-            if let Some(t) = st.items.pop_front() {
+            if let Some(idx) = st.items.iter().position(|t| t.eligible_for(class)) {
+                let t = st.items.remove(idx).expect("position is in range");
                 drop(st);
                 self.inner.not_full.notify_all();
                 return Some(t);
@@ -360,10 +384,17 @@ impl Scheduler {
     }
 
     /// Remove and return the first queued ticket whose coalescing key
-    /// matches, without blocking.
-    pub fn try_pop_matching(&self, key: &BatchKey) -> Option<Ticket> {
+    /// matches and that a worker of `class` may run, without blocking.
+    pub fn try_pop_matching(
+        &self,
+        key: &BatchKey,
+        class: Option<BackendClass>,
+    ) -> Option<Ticket> {
         let mut st = self.lock();
-        let idx = st.items.iter().position(|t| &t.key == key)?;
+        let idx = st
+            .items
+            .iter()
+            .position(|t| &t.key == key && t.eligible_for(class))?;
         let t = st.items.remove(idx).expect("position is in range");
         drop(st);
         self.inner.not_full.notify_all();
@@ -411,15 +442,15 @@ mod tests {
     use crate::compiler::GemmShape;
 
     fn tiny_job(id: u64) -> Job {
-        Job {
+        Job::new(
             id,
-            kind: JobKind::Gemm {
+            JobKind::Gemm {
                 shape: GemmShape { m: 1, k: 2, n: 1 },
                 width: 8,
                 a: vec![1, 2],
                 b: vec![3, 4],
             },
-        }
+        )
     }
 
     fn sched(cfg: SchedulerConfig) -> Scheduler {
@@ -433,6 +464,7 @@ mod tests {
             stats: Default::default(),
             wall_us: 1.0,
             worker: 0,
+            backend: None,
             batch_size: 1,
             error: None,
         }
@@ -518,6 +550,31 @@ mod tests {
         drop(t);
         let r = h.wait();
         assert!(r.error.as_deref().unwrap_or("").contains("abandoned"));
+    }
+
+    #[test]
+    fn class_filtered_pop_skips_mismatched_tickets() {
+        use crate::arch::CustomDesign;
+        let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+        let s = sched(SchedulerConfig::default());
+        let mut tagged = tiny_job(1);
+        tagged.backend = Some(comefa);
+        s.submit(tagged).unwrap();
+        s.submit(tiny_job(2)).unwrap(); // untagged: runs anywhere
+        // An overlay worker must skip the custom-tagged head-of-line.
+        let t = s.pop_blocking_for(Some(BackendClass::Overlay)).unwrap();
+        assert_eq!(t.job.id, 2);
+        // The matching worker takes the tagged ticket.
+        let t2 = s.pop_blocking_for(Some(comefa)).unwrap();
+        assert_eq!(t2.job.id, 1);
+        // Closed with only mismatched tickets left: the wrong class gets
+        // None (exit), the right class still drains the backlog.
+        let mut overlay_only = tiny_job(3);
+        overlay_only.backend = Some(BackendClass::Overlay);
+        s.submit(overlay_only).unwrap();
+        s.close();
+        assert!(s.pop_blocking_for(Some(comefa)).is_none());
+        assert!(s.pop_blocking_for(Some(BackendClass::Overlay)).is_some());
     }
 
     #[test]

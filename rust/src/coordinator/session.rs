@@ -27,7 +27,7 @@
 //! let geom = ArrayGeometry::new(2, 1);
 //! let shape = GemmShape { m: 1, k: 16, n: 2 };
 //! let weights: Vec<i64> = (0..32).map(|v| (v % 5) - 2).collect();
-//! let spec = SessionSpec { shape, width: 8, weights: weights.clone() };
+//! let spec = SessionSpec { shape, width: 8, weights: weights.clone(), backend: None };
 //! let session = ModelSession::prepare(&PimCompiler::new(geom), &spec)?;
 //!
 //! let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
@@ -37,7 +37,8 @@
 //! # Ok::<(), picaso::Error>(())
 //! ```
 
-use crate::array::{ArrayGeometry, PimArray, RunStats};
+use crate::array::{ArrayGeometry, RunStats};
+use crate::backend::{BackendClass, PimBackend};
 use crate::compiler::{GemmPlan, GemmShape, PimCompiler};
 use crate::{Error, Result};
 
@@ -53,8 +54,9 @@ impl std::fmt::Display for SessionId {
     }
 }
 
-/// Immutable description of a model session: the GEMM it serves and the
-/// pinned weight matrix.
+/// Immutable description of a model session: the GEMM it serves, the
+/// pinned weight matrix, and (optionally) the backend class its jobs
+/// must run on.
 #[derive(Debug, Clone)]
 pub struct SessionSpec {
     /// Problem shape (`m` activations rows × `k` inner × `n` outputs).
@@ -63,6 +65,10 @@ pub struct SessionSpec {
     pub width: u16,
     /// Weights `B`, row-major `k×n`.
     pub weights: Vec<i64>,
+    /// Required worker backend class. `None` lets the scheduler place
+    /// this session's jobs on any region; `Some` pins them (e.g. to
+    /// compare the same model across overlay and custom regions).
+    pub backend: Option<BackendClass>,
 }
 
 impl SessionSpec {
@@ -129,9 +135,14 @@ impl ModelSession {
         self.geom
     }
 
-    /// Run one inference (activations `A`, row-major `m×k`).
-    pub fn infer(&self, arr: &mut PimArray, a: &[i64]) -> Result<(Vec<i64>, RunStats)> {
-        let (mut outs, stats) = self.infer_batch(arr, &[a])?;
+    /// Run one inference (activations `A`, row-major `m×k`) on any
+    /// [`PimBackend`].
+    pub fn infer<B: PimBackend + ?Sized>(
+        &self,
+        backend: &mut B,
+        a: &[i64],
+    ) -> Result<(Vec<i64>, RunStats)> {
+        let (mut outs, stats) = self.infer_batch(backend, &[a])?;
         Ok((outs.pop().expect("batch of one yields one output"), stats))
     }
 
@@ -139,18 +150,18 @@ impl ModelSession {
     /// [`execute_gemm_batch`](crate::compiler::execute_gemm_batch) for
     /// the packing scheme). Weight staging is a `memcpy` from the
     /// precomputed table; only activations are gathered per job.
-    pub fn infer_batch(
+    pub fn infer_batch<B: PimBackend + ?Sized>(
         &self,
-        arr: &mut PimArray,
+        backend: &mut B,
         acts: &[&[i64]],
     ) -> Result<(Vec<Vec<i64>>, RunStats)> {
-        if arr.geometry() != self.geom {
+        if backend.rows() != self.geom.rows || backend.row_lanes() != self.geom.row_lanes() {
             return Err(Error::Config(format!(
-                "session prepared for {}x{} blocks, array is {}x{}",
+                "session prepared for {} rows x {} lanes, backend is {} rows x {} lanes",
                 self.geom.rows,
-                self.geom.cols,
-                arr.geometry().rows,
-                arr.geometry().cols
+                self.geom.row_lanes(),
+                backend.rows(),
+                backend.row_lanes()
             )));
         }
         let GemmShape { m, k, n } = self.plan.shape;
@@ -167,7 +178,7 @@ impl ModelSession {
         // staging differs — a memcpy from the precomputed table instead
         // of a gather from `B`.
         crate::compiler::run_packed_rounds(
-            arr,
+            backend,
             &self.plan,
             acts.len(),
             |t, local, s, lanes| {
@@ -190,15 +201,17 @@ impl ModelSession {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::PipelineConfig;
+    use crate::arch::{CustomDesign, PipelineConfig};
+    use crate::array::PimArray;
     use crate::compiler::{execute_gemm, gemm_ref};
+    use crate::custom::CustomRegion;
     use crate::util::Xoshiro256;
 
     fn spec(shape: GemmShape, seed: u64) -> SessionSpec {
         let mut rng = Xoshiro256::seeded(seed);
         let mut weights = vec![0i64; shape.k * shape.n];
         rng.fill_signed(&mut weights, 8);
-        SessionSpec { shape, width: 8, weights }
+        SessionSpec { shape, width: 8, weights, backend: None }
     }
 
     #[test]
@@ -252,11 +265,31 @@ mod tests {
     }
 
     #[test]
+    fn session_runs_on_custom_backend() {
+        // The same prepared session serves overlay and custom regions.
+        let geom = ArrayGeometry::new(2, 1);
+        let shape = GemmShape { m: 1, k: 20, n: 2 }; // multi-slice
+        let sp = spec(shape, 0x77);
+        let session = ModelSession::prepare(&PimCompiler::new(geom), &sp).unwrap();
+        let mut rng = Xoshiro256::seeded(3);
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        let expect = gemm_ref(shape, &a, &sp.weights);
+        let mut region = CustomRegion::new(CustomDesign::AMod, geom);
+        let (c, stats) = session.infer(&mut region, &a).unwrap();
+        assert_eq!(c, expect);
+        assert!(stats.cycles > 0);
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let (c2, _) = session.infer(&mut arr, &a).unwrap();
+        assert_eq!(c2, expect);
+    }
+
+    #[test]
     fn rejects_bad_weights_activations_and_geometry() {
         let geom = ArrayGeometry::new(2, 1);
         let shape = GemmShape { m: 1, k: 8, n: 2 };
         let compiler = PimCompiler::new(geom);
-        let bad = SessionSpec { shape, width: 8, weights: vec![0; 3] };
+        let bad = SessionSpec { shape, width: 8, weights: vec![0; 3], backend: None };
         assert!(ModelSession::prepare(&compiler, &bad).is_err());
 
         let sp = spec(shape, 1);

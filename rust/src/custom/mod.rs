@@ -21,7 +21,12 @@
 //! The tile exposes the paper's 256×144 geometry (one PE per bitline,
 //! column-muxing factor 4 removed).
 
+mod region;
+
+pub use region::CustomRegion;
+
 use crate::arch::{ArchKind, CustomDesign, CycleModel};
+use crate::array::RunStats;
 use crate::bram::{ColumnMemory, CUSTOM_PIM_GEOMETRY};
 use crate::isa::{fa_s, AluOp};
 use crate::{Error, Result};
@@ -222,15 +227,23 @@ impl CustomTile {
 
     /// The Fig 5 MAC workload on this tile: element-wise multiply of two
     /// `w`-bit operand sets followed by accumulation of the first `q`
-    /// products. Returns (result, cycles charged for the group).
-    pub fn mac_group(&mut self, a: &[i64], b: &[i64], w: u32, q: usize) -> Result<(i64, u64)> {
-        let before = self.cycles;
+    /// products. Returns the result and the [`RunStats`] cycle breakdown
+    /// of the group — the same accounting shape the overlay reports, so
+    /// custom-vs-overlay MAC costs compare directly.
+    pub fn mac_group(&mut self, a: &[i64], b: &[i64], w: u32, q: usize) -> Result<(i64, RunStats)> {
+        let mut stats = RunStats::default();
         self.write_values(0, w, a)?;
         self.write_values(w as usize, w, b)?;
+        let before = self.cycles;
         self.mult(2 * w as usize, 0, w as usize, w)?;
+        stats.breakdown.mult = self.cycles - before;
+        let before = self.cycles;
         self.accumulate(2 * w as usize, 2 * w, q, (4 * w) as usize)?;
+        stats.breakdown.accumulate = self.cycles - before;
+        stats.cycles = stats.breakdown.total();
+        stats.instructions = 2; // one MULT, one ACCUMULATE macro
         let sum = self.mem.lane_value(0, 2 * w as usize, 2 * w);
-        Ok((sum, self.cycles - before))
+        Ok((sum, stats))
     }
 }
 
@@ -298,12 +311,15 @@ mod tests {
             let mut b = vec![0i64; 16];
             rng.fill_signed(&mut a, 8);
             rng.fill_signed(&mut b, 8);
-            let (sum, cycles) = tile.mac_group(&a, &b, 8, 16).unwrap();
+            let (sum, stats) = tile.mac_group(&a, &b, 8, 16).unwrap();
             let expect: i64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert_eq!(sum, expect, "{design:?}");
-            // Cycle charge = mult + accumulate per the design's model.
+            // Cycle charge = mult + accumulate per the design's model,
+            // attributed per category in the shared RunStats breakdown.
             let m = ArchKind::Custom(design).cycles();
-            assert_eq!(cycles, m.mult(8) + m.accumulate(16, 16), "{design:?}");
+            assert_eq!(stats.breakdown.mult, m.mult(8), "{design:?}");
+            assert_eq!(stats.breakdown.accumulate, m.accumulate(16, 16), "{design:?}");
+            assert_eq!(stats.cycles, m.mult(8) + m.accumulate(16, 16), "{design:?}");
         }
     }
 

@@ -1,0 +1,461 @@
+//! A multi-row **custom-tile worker region**: the packed-GEMM execution
+//! surface of the custom BRAM-PIM designs.
+//!
+//! A [`CustomTile`](super::CustomTile) models one redesigned 36Kb BRAM
+//! (256×144, Table VIII). A [`CustomRegion`] gangs enough tiles SIMD to
+//! expose the same `rows × row_lanes` layout as the overlay's
+//! [`PimArray`](crate::array::PimArray) — rows are independent reduction
+//! domains, exactly mirroring the packed layout
+//! [`execute_gemm_batch`](crate::compiler::execute_gemm_batch) stages —
+//! and interprets compiled [`Microcode`] through the
+//! [`PimBackend`](crate::backend::PimBackend) trait. The *data* effect of
+//! every instruction is identical to the overlay's; the *cycle* charges
+//! come from the design's [`CycleModel`] (Table VIII footnotes):
+//!
+//! * `ALU` — `N` read-modify-write cycles (vs the overlay's `2N`);
+//! * `MULT` — the Neural-Cache shift-add algorithm, `N² + 3N − 2` cycles
+//!   (CCB cannot run Booth, CoMeFa only in OOOR mode);
+//! * `ACCUMULATE` — copy-based tree for the original designs
+//!   (`(2N + log2 q)·log2 q`, burning scratch wordlines), OpMux folding
+//!   for A-Mod/D-Mod (`(N + 2)·log2 q`, no copies);
+//! * `EXTEND` — one RMW pass per extended plane;
+//! * `FOLD` / `NETREDUCE` / `POOL` — rejected: the original custom tiles
+//!   have no fold network (that is the paper's point), and the region
+//!   models the Mod designs' fused path only through `ACCUMULATE`.
+//!
+//! The custom tiles' scarce resource is their 256-deep register file
+//! (Fig 7): the compiler's wordline layout (`A@0`, `B@32`, `ACC@64`,
+//! `PARTIAL@192`) fits exactly, with the copy scratchpad at
+//! wordline 128 — so the *same* compiled plan drives overlay and custom
+//! backends, and any workload that would not fit the 256 rows fails
+//! loudly instead of silently diverging from the paper's model.
+
+use crate::arch::{check_reduction_q, ArchKind, CustomDesign, CycleModel};
+use crate::array::{ArrayGeometry, RunStats};
+use crate::backend::PimBackend;
+use crate::bram::{ColumnMemory, CUSTOM_PIM_GEOMETRY};
+use crate::isa::{fa_s, AluOp, BufId, Instruction, Microcode, RfAddr};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Base wordline of the copy scratchpad used by the original (non-Mod)
+/// designs' reduction: between the compiler's accumulator (ends ≤ 112)
+/// and partial-sum slot (starts at 192).
+const SCRATCH_WL: usize = 128;
+
+/// A `rows × row_lanes` custom-tile worker region (ganged 256×144 tiles
+/// driven SIMD), executing compiled microcode behind [`PimBackend`].
+#[derive(Debug, Clone)]
+pub struct CustomRegion {
+    design: CustomDesign,
+    model: CycleModel,
+    geom: ArrayGeometry,
+    mem: ColumnMemory,
+    host: HashMap<u16, Vec<i64>>,
+}
+
+impl CustomRegion {
+    /// A region of the given design exposing the overlay-compatible
+    /// geometry (`geom.rows` reduction rows of `geom.row_lanes()` lanes).
+    pub fn new(design: CustomDesign, geom: ArrayGeometry) -> Self {
+        let lanes = geom.rows * geom.row_lanes();
+        Self {
+            design,
+            model: ArchKind::Custom(design).cycles(),
+            geom,
+            mem: ColumnMemory::new(CUSTOM_PIM_GEOMETRY.rows as usize, lanes),
+            host: HashMap::new(),
+        }
+    }
+
+    /// The modeled design.
+    pub fn design(&self) -> CustomDesign {
+        self.design
+    }
+
+    /// Region geometry (overlay block units: `rows × cols`, 16 PEs per
+    /// block).
+    pub fn geometry(&self) -> ArrayGeometry {
+        self.geom
+    }
+
+    /// Total lanes (PEs) in the region.
+    pub fn lanes(&self) -> usize {
+        self.mem.lanes()
+    }
+
+    /// 256×144 tiles ganged to provide the region's lanes (Table VIII:
+    /// one PE per bitline, 144 bitlines per redesigned 36Kb BRAM).
+    pub fn tiles(&self) -> usize {
+        self.lanes().div_ceil(CUSTOM_PIM_GEOMETRY.bitlines as usize)
+    }
+
+    fn check(&self, base: usize, w: u32) -> Result<()> {
+        if base + w as usize > self.mem.depth() {
+            return Err(Error::Sim(format!(
+                "wordlines {base}..+{w} exceed tile depth {} — the 256-row \
+                 register file is the custom designs' scarce resource (Fig 7)",
+                self.mem.depth()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Element-wise bit-serial ALU pass over every lane (`N` RMW cycles).
+    fn alu_pass(&mut self, op: AluOp, dst: usize, x: usize, y: usize, w: usize) {
+        for lane in 0..self.lanes() {
+            let mut carry = op.initial_carry();
+            for b in 0..w {
+                let r = fa_s(op, self.mem.get(x + b, lane), self.mem.get(y + b, lane), carry);
+                self.mem.set(dst + b, lane, r.sum);
+                carry = r.carry;
+            }
+        }
+    }
+
+    /// The Neural-Cache shift-add multiply (same data algorithm as
+    /// [`CustomTile::mult`](super::CustomTile::mult)), over every lane.
+    fn mult_pass(&mut self, dst: usize, a: usize, b: usize, w: usize) {
+        for lane in 0..self.lanes() {
+            for bb in 0..2 * w {
+                self.mem.set(dst + bb, lane, false);
+            }
+            let a_sign = self.mem.get(a + w - 1, lane);
+            for i in 0..w {
+                if !self.mem.get(b + i, lane) {
+                    continue;
+                }
+                let negate = i == w - 1; // sign bit has negative weight
+                let op = if negate { AluOp::Sub } else { AluOp::Add };
+                let mut carry = op.initial_carry();
+                for bb in 0..(2 * w - i) {
+                    let yb = if bb < w { self.mem.get(a + bb, lane) } else { a_sign };
+                    let xb = self.mem.get(dst + i + bb, lane);
+                    let r = fa_s(op, xb, yb, carry);
+                    self.mem.set(dst + i + bb, lane, r.sum);
+                    carry = r.carry;
+                }
+            }
+        }
+    }
+
+    /// Row-local reduction: every row's `q` lanes fold into the row's
+    /// lane 0 — copy-based for the original designs, OpMux folding for
+    /// the Mods. All rows reduce simultaneously (SIMD), so the cycle
+    /// charge is one [`CycleModel::accumulate`] regardless of `rows`.
+    fn accumulate_rows(&mut self, dst: usize, w: usize) -> Result<()> {
+        let q = self.geom.row_lanes();
+        check_reduction_q(q)?;
+        let copies_needed = !self.design.is_modified();
+        if copies_needed {
+            self.check(SCRATCH_WL, w as u32)?;
+            // The compiler's layout keeps dst clear of the scratchpad;
+            // reject hand-written programs that would alias it.
+            if dst < SCRATCH_WL + w && SCRATCH_WL < dst + w {
+                return Err(Error::Sim(format!(
+                    "accumulate at wordlines {dst}..+{w} overlaps the copy \
+                     scratchpad at {SCRATCH_WL}..+{w}"
+                )));
+            }
+        }
+        for row in 0..self.geom.rows {
+            let base_lane = row * q;
+            let mut stride = 1usize;
+            while stride < q {
+                for lane in (0..q).step_by(2 * stride) {
+                    let recv = base_lane + lane;
+                    let partner = base_lane + lane + stride;
+                    if copies_needed {
+                        // Copy the partner operand to the receiver's
+                        // scratch wordlines (multi-wordline activation in
+                        // CCB, SA cycling in CoMeFa), then add.
+                        for b in 0..w {
+                            let bit = self.mem.get(dst + b, partner);
+                            self.mem.set(SCRATCH_WL + b, recv, bit);
+                        }
+                        let mut carry = false;
+                        for b in 0..w {
+                            let r = fa_s(
+                                AluOp::Add,
+                                self.mem.get(dst + b, recv),
+                                self.mem.get(SCRATCH_WL + b, recv),
+                                carry,
+                            );
+                            self.mem.set(dst + b, recv, r.sum);
+                            carry = r.carry;
+                        }
+                    } else {
+                        // Mod designs: partner bits arrive through the
+                        // fused OpMux — no copies.
+                        let mut carry = false;
+                        for b in 0..w {
+                            let r = fa_s(
+                                AluOp::Add,
+                                self.mem.get(dst + b, recv),
+                                self.mem.get(dst + b, partner),
+                                carry,
+                            );
+                            self.mem.set(dst + b, recv, r.sum);
+                            carry = r.carry;
+                        }
+                    }
+                }
+                stride *= 2;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a single instruction, charging this design's cycle model.
+    pub fn step(&mut self, instr: Instruction, stats: &mut RunStats) -> Result<()> {
+        stats.instructions += 1;
+        match instr {
+            Instruction::Nop => {
+                stats.cycles += 1;
+                stats.breakdown.nop += 1;
+            }
+            Instruction::Alu { op, dst, x, y, width } => {
+                let w = width as u32;
+                self.check(dst.0 as usize, w)?;
+                self.check(x.0 as usize, w)?;
+                self.check(y.0 as usize, w)?;
+                self.alu_pass(op, dst.0 as usize, x.0 as usize, y.0 as usize, width as usize);
+                let c = self.model.alu(w);
+                stats.cycles += c;
+                stats.breakdown.alu += c;
+            }
+            Instruction::Mult { dst, mand, mier, width } => {
+                let w = width as u32;
+                self.check(dst.0 as usize, 2 * w)?;
+                self.check(mand.0 as usize, w)?;
+                self.check(mier.0 as usize, w)?;
+                self.mult_pass(dst.0 as usize, mand.0 as usize, mier.0 as usize, width as usize);
+                // No Booth datapath: the full shift-add latency is always
+                // paid, so the Booth step counters stay zero.
+                let c = self.model.mult(w);
+                stats.cycles += c;
+                stats.breakdown.mult += c;
+            }
+            Instruction::Extend { dst, from, to } => {
+                if from == 0 || to <= from {
+                    return Err(Error::Sim(format!("EXTEND {from}->{to} is not widening")));
+                }
+                self.check(dst.0 as usize, to as u32)?;
+                let d = dst.0 as usize;
+                for lane in 0..self.lanes() {
+                    let sign = self.mem.get(d + from as usize - 1, lane);
+                    for b in from as usize..to as usize {
+                        self.mem.set(d + b, lane, sign);
+                    }
+                }
+                // One RMW write per extended plane.
+                let c = (to - from) as u64;
+                stats.cycles += c;
+                stats.breakdown.alu += c;
+            }
+            Instruction::Accumulate { dst, width } => {
+                let w = width as u32;
+                self.check(dst.0 as usize, w)?;
+                self.accumulate_rows(dst.0 as usize, width as usize)?;
+                let c = self.model.accumulate(self.geom.row_lanes(), w);
+                stats.cycles += c;
+                stats.breakdown.accumulate += c;
+            }
+            Instruction::Load { dst, width, buf } => {
+                let d = dst.0 as usize;
+                self.check(d, width as u32)?;
+                let data = self
+                    .host
+                    .remove(&buf.0)
+                    .ok_or_else(|| Error::Sim(format!("LOAD from unbound {buf}")))?;
+                for lane in 0..self.lanes() {
+                    let v = data.get(lane).copied().unwrap_or(0);
+                    self.mem.set_lane_value(lane, d, width as u32, v);
+                }
+                self.host.insert(buf.0, data);
+                // One wordline write per bit-plane, same as the overlay's
+                // corner-turn DMA.
+                let c = width as u64;
+                stats.cycles += c;
+                stats.breakdown.dma += c;
+            }
+            Instruction::Store { src, width, buf } => {
+                let s = src.0 as usize;
+                self.check(s, width as u32)?;
+                let out: Vec<i64> = (0..self.lanes())
+                    .map(|lane| self.mem.lane_value(lane, s, width as u32))
+                    .collect();
+                self.host.insert(buf.0, out);
+                let c = width as u64;
+                stats.cycles += c;
+                stats.breakdown.dma += c;
+            }
+            Instruction::Fold { .. } | Instruction::NetReduce { .. } | Instruction::Pool { .. } => {
+                return Err(Error::Sim(format!(
+                    "{instr:?} requires the overlay's OpMux/network datapath; \
+                     custom tiles reduce through ACCUMULATE only (§V)"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl PimBackend for CustomRegion {
+    fn arch(&self) -> ArchKind {
+        ArchKind::Custom(self.design)
+    }
+
+    fn rows(&self) -> usize {
+        self.geom.rows
+    }
+
+    fn row_lanes(&self) -> usize {
+        self.geom.row_lanes()
+    }
+
+    fn set_buffer(&mut self, buf: BufId, data: Vec<i64>) {
+        self.host.insert(buf.0, data);
+    }
+
+    fn buffer(&self, buf: BufId) -> Option<&[i64]> {
+        self.host.get(&buf.0).map(|v| v.as_slice())
+    }
+
+    fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {
+        let mut stats = RunStats::default();
+        for instr in &mc.instrs {
+            self.step(*instr, &mut stats)?;
+        }
+        Ok(stats)
+    }
+
+    fn row_result(&self, row: usize, base: RfAddr, width: u32) -> i64 {
+        self.mem
+            .lane_value(row * self.geom.row_lanes(), base.0 as usize, width)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{BUF_A, BUF_B, BUF_OUT};
+    use crate::util::Xoshiro256;
+
+    fn mac_microcode(width: u16, acc: u16) -> Microcode {
+        let mut mc = Microcode::new("custom-mac", width);
+        mc.push(Instruction::Load { dst: RfAddr(0), width, buf: BUF_A });
+        mc.push(Instruction::Load { dst: RfAddr(32), width, buf: BUF_B });
+        mc.push(Instruction::Mult { dst: RfAddr(64), mand: RfAddr(0), mier: RfAddr(32), width });
+        mc.push(Instruction::Extend { dst: RfAddr(64), from: 2 * width, to: acc });
+        mc.push(Instruction::Accumulate { dst: RfAddr(64), width: acc });
+        mc.push(Instruction::Store { src: RfAddr(64), width: acc, buf: BUF_OUT });
+        mc
+    }
+
+    #[test]
+    fn mac_workload_every_design_matches_dot_product() {
+        let geom = ArrayGeometry::new(1, 1); // q = 16
+        let mut rng = Xoshiro256::seeded(0xC0);
+        let mut a = vec![0i64; 16];
+        let mut b = vec![0i64; 16];
+        rng.fill_signed(&mut a, 8);
+        rng.fill_signed(&mut b, 8);
+        let expect: i64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        for design in CustomDesign::ALL {
+            let mut region = CustomRegion::new(design, geom);
+            region.set_buffer(BUF_A, a.clone());
+            region.set_buffer(BUF_B, b.clone());
+            let stats = region.execute(&mac_microcode(8, 20)).unwrap();
+            assert_eq!(region.row_result(0, RfAddr(64), 20), expect, "{design:?}");
+            let out = region.buffer(BUF_OUT).unwrap();
+            assert_eq!(out[0], expect, "{design:?}");
+            // Cycle charges come from the design's Table VIII model.
+            let m = ArchKind::Custom(design).cycles();
+            assert_eq!(stats.breakdown.mult, m.mult(8), "{design:?}");
+            assert_eq!(stats.breakdown.accumulate, m.accumulate(16, 20), "{design:?}");
+            assert_eq!(stats.breakdown.dma, 8 + 8 + 20, "{design:?}");
+            assert_eq!(stats.booth_total_steps, 0, "no Booth datapath");
+        }
+    }
+
+    #[test]
+    fn rows_reduce_independently() {
+        let geom = ArrayGeometry::new(3, 1); // 3 rows x 16 lanes
+        let mut region = CustomRegion::new(CustomDesign::CoMeFaA, geom);
+        let data: Vec<i64> = (0..48).collect();
+        region.set_buffer(BUF_A, data.clone());
+        let mut mc = Microcode::new("acc", 16);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 16, buf: BUF_A });
+        mc.push(Instruction::Accumulate { dst: RfAddr(0), width: 16 });
+        let stats = region.execute(&mc).unwrap();
+        for r in 0..3 {
+            let expect: i64 = data[r * 16..(r + 1) * 16].iter().sum();
+            assert_eq!(region.row_result(r, RfAddr(0), 16), expect, "row {r}");
+        }
+        // SIMD: one accumulate charge for all three rows.
+        let m = ArchKind::Custom(CustomDesign::CoMeFaA).cycles();
+        assert_eq!(stats.breakdown.accumulate, m.accumulate(16, 16));
+    }
+
+    #[test]
+    fn mod_design_skips_the_copy_scratchpad() {
+        // A-Mod reduction cycles are the Table VIII (e) form, cheaper
+        // than the copy-based (c) form the original designs pay.
+        let geom = ArrayGeometry::new(1, 2); // q = 32
+        let vals: Vec<i64> = (0..32).map(|v| v - 16).collect();
+        let run = |design: CustomDesign| {
+            let mut region = CustomRegion::new(design, geom);
+            region.set_buffer(BUF_A, vals.clone());
+            let mut mc = Microcode::new("acc", 16);
+            mc.push(Instruction::Load { dst: RfAddr(0), width: 16, buf: BUF_A });
+            mc.push(Instruction::Accumulate { dst: RfAddr(0), width: 16 });
+            let stats = region.execute(&mc).unwrap();
+            assert_eq!(region.row_result(0, RfAddr(0), 16), vals.iter().sum::<i64>());
+            stats.breakdown.accumulate
+        };
+        assert!(run(CustomDesign::AMod) < run(CustomDesign::CoMeFaA));
+    }
+
+    #[test]
+    fn overlay_only_instructions_are_rejected() {
+        let mut region = CustomRegion::new(CustomDesign::Ccb, ArrayGeometry::new(1, 1));
+        let mut stats = RunStats::default();
+        let r = region.step(
+            Instruction::Pool {
+                op: crate::isa::PoolOp::Max,
+                pattern: crate::isa::FoldPattern::Adjacent,
+                level: 1,
+                dst: RfAddr(0),
+                width: 8,
+            },
+            &mut stats,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn register_file_depth_is_enforced() {
+        let mut region = CustomRegion::new(CustomDesign::Ccb, ArrayGeometry::new(1, 1));
+        let mut stats = RunStats::default();
+        let r = region.step(
+            Instruction::Alu {
+                op: AluOp::Add,
+                dst: RfAddr(250),
+                x: RfAddr(0),
+                y: RfAddr(0),
+                width: 16,
+            },
+            &mut stats,
+        );
+        assert!(r.is_err(), "write past the 256-deep register file must fail");
+    }
+
+    #[test]
+    fn load_requires_bound_buffer() {
+        let mut region = CustomRegion::new(CustomDesign::Ccb, ArrayGeometry::new(1, 1));
+        let mut mc = Microcode::new("bad", 8);
+        mc.push(Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(9) });
+        assert!(region.execute(&mc).is_err());
+    }
+}

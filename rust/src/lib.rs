@@ -19,7 +19,12 @@
 //! * [`pe`], [`block`], [`network`], [`array`] — the cycle-accurate
 //!   simulator of the overlay micro-architecture (all four pipeline
 //!   configurations).
-//! * [`custom`] — behavioural models of the custom read-modify-write tiles.
+//! * [`custom`] — behavioural models of the custom read-modify-write tiles,
+//!   including the [`custom::CustomRegion`] packed-GEMM execution surface.
+//! * [`backend`] — the unified [`backend::PimBackend`] execution trait: the
+//!   overlay array and every custom tile design behind one staging /
+//!   execute / read-back API, with [`backend::BackendClass`] routing labels
+//!   for heterogeneous serving.
 //! * [`device`], [`bram`], [`synth`] — the virtual implementation tool:
 //!   device database (Table VII), resource/clock models calibrated to the
 //!   paper's synthesis results (Table IV), control-set-aware placement
@@ -51,6 +56,7 @@
 pub mod analytic;
 pub mod arch;
 pub mod array;
+pub mod backend;
 pub mod bits;
 pub mod block;
 pub mod bram;
@@ -74,12 +80,14 @@ pub mod prelude {
     pub use crate::analytic::{AccumModel, DesignPoint, MacLatencyModel, ThroughputModel};
     pub use crate::arch::{ArchKind, CustomDesign, PipelineConfig};
     pub use crate::array::{ArrayGeometry, PimArray, RunStats};
+    pub use crate::backend::{make_backend, BackendClass, PimBackend};
     pub use crate::bits::{corner_turn, corner_turn_back, BitPlanes};
     pub use crate::compiler::{GemmPlan, GemmShape, MacProgram, PimCompiler};
     pub use crate::coordinator::{
         Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobHandle, JobKind,
-        JobResult, ModelSession, QueuePolicy, SchedulerConfig, SessionId,
+        JobResult, ModelSession, QueuePolicy, RegionSpec, SchedulerConfig, SessionId,
     };
+    pub use crate::custom::{CustomRegion, CustomTile};
     pub use crate::device::{Device, DeviceFamily, DEVICES};
     pub use crate::isa::{AluOp, BoothConf, Instruction, Microcode, OpMuxConf};
     pub use crate::metrics::{MetricsSnapshot, ServingMetrics};

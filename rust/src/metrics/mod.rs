@@ -11,6 +11,7 @@
 //!   per-stage latency histograms (queue-wait / execute / end-to-end) with
 //!   p50/p95/p99 summaries via [`MetricsSnapshot`].
 
+use crate::backend::BackendClass;
 use crate::util::{OnlineStats, Percentiles};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -205,6 +206,18 @@ impl LatencyTrack {
     }
 }
 
+/// Per-backend-class accumulation: jobs completed on worker regions of
+/// one [`BackendClass`], with their own end-to-end latency track so a
+/// mixed deployment reports overlay-vs-custom percentiles side by side.
+#[derive(Debug, Default)]
+struct BackendTrack {
+    jobs: u64,
+    errors: u64,
+    macs: u64,
+    pim_cycles: u64,
+    total_us: LatencyTrack,
+}
+
 #[derive(Debug, Default)]
 struct ServingInner {
     jobs: u64,
@@ -220,6 +233,9 @@ struct ServingInner {
     queue_depth: OnlineStats,
     depth_hwm: u64,
     window_start: Option<Instant>,
+    /// Per-backend-class breakdown, keyed by the completing worker's
+    /// class (small fixed set — linear scan beats hashing here).
+    per_backend: Vec<(BackendClass, BackendTrack)>,
 }
 
 /// Thread-safe serving-path metrics shared by the scheduler and all
@@ -229,15 +245,18 @@ struct ServingInner {
 /// long-running server; counters, means and maxima are exact.
 ///
 /// ```
+/// use picaso::backend::BackendClass;
 /// use picaso::metrics::ServingMetrics;
 ///
 /// let m = ServingMetrics::new();
 /// m.record_depth(3);
 /// m.record_batch(4, 180.0);
-/// m.record_job(25.0, 180.0, 205.0, 1024, 9000, false);
+/// m.record_job(Some(BackendClass::Overlay), 25.0, 180.0, 205.0, 1024, 9000, false);
 /// let snap = m.snapshot();
 /// assert_eq!(snap.jobs, 1);
 /// assert!(snap.total.p99 >= snap.queue_wait.p50);
+/// assert_eq!(snap.per_backend.len(), 1);
+/// assert_eq!(snap.per_backend[0].backend, BackendClass::Overlay);
 /// ```
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
@@ -283,9 +302,12 @@ impl ServingMetrics {
     }
 
     /// Record one completed job with its per-stage latencies (µs) and
-    /// simulator accounting.
+    /// simulator accounting. `backend` tags the job to the class of the
+    /// worker region that ran it (pass `None` outside the worker pool,
+    /// e.g. in direct scheduler tests).
     pub fn record_job(
         &self,
+        backend: Option<BackendClass>,
         queue_us: f64,
         exec_us: f64,
         total_us: f64,
@@ -305,6 +327,23 @@ impl ServingMetrics {
         let _ = exec_us; // exec latency is recorded per-batch; kept in the
                          // signature so per-job attribution can evolve.
         g.total_us.push(total_us);
+        if let Some(b) = backend {
+            let idx = match g.per_backend.iter().position(|(k, _)| *k == b) {
+                Some(i) => i,
+                None => {
+                    g.per_backend.push((b, BackendTrack::default()));
+                    g.per_backend.len() - 1
+                }
+            };
+            let track = &mut g.per_backend[idx].1;
+            track.jobs += 1;
+            if failed {
+                track.errors += 1;
+            }
+            track.macs += macs;
+            track.pim_cycles += cycles;
+            track.total_us.push(total_us);
+        }
     }
 
     /// Summarize everything recorded since the last
@@ -315,6 +354,21 @@ impl ServingMetrics {
             .window_start
             .map(|t| t.elapsed().as_secs_f64())
             .unwrap_or(0.0);
+        let mut per_backend: Vec<BackendSnapshot> = Vec::with_capacity(g.per_backend.len());
+        for i in 0..g.per_backend.len() {
+            let backend = g.per_backend[i].0;
+            let track = &mut g.per_backend[i].1;
+            per_backend.push(BackendSnapshot {
+                backend,
+                jobs: track.jobs,
+                errors: track.errors,
+                macs: track.macs,
+                pim_cycles: track.pim_cycles,
+                total: track.total_us.summary(),
+            });
+        }
+        // Stable report order regardless of which worker finished first.
+        per_backend.sort_by_key(|b| b.backend.name());
         MetricsSnapshot {
             jobs: g.jobs,
             errors: g.errors,
@@ -329,6 +383,38 @@ impl ServingMetrics {
             max_batch: g.batch_max,
             mean_queue_depth: g.queue_depth.mean(),
             depth_hwm: g.depth_hwm,
+            per_backend,
+        }
+    }
+}
+
+/// Per-backend-class slice of a [`MetricsSnapshot`]: the jobs one class
+/// of worker regions completed, with their end-to-end latency summary —
+/// the rows of the live overlay-vs-custom comparison (paper Fig 6 /
+/// Table V under load).
+#[derive(Debug, Clone)]
+pub struct BackendSnapshot {
+    /// The worker regions' backend class.
+    pub backend: BackendClass,
+    /// Jobs completed on this class (including failures).
+    pub jobs: u64,
+    /// Jobs that completed with an error.
+    pub errors: u64,
+    /// Model-level MAC operations executed.
+    pub macs: u64,
+    /// PIM cycles simulated on this class.
+    pub pim_cycles: u64,
+    /// End-to-end job latency (submit → completion).
+    pub total: LatencySummary,
+}
+
+impl BackendSnapshot {
+    /// Jobs per second over the window that produced the snapshot.
+    pub fn jobs_per_sec(&self, elapsed_s: f64) -> f64 {
+        if elapsed_s > 0.0 {
+            self.jobs as f64 / elapsed_s
+        } else {
+            0.0
         }
     }
 }
@@ -362,6 +448,9 @@ pub struct MetricsSnapshot {
     pub mean_queue_depth: f64,
     /// Queue-depth high-water mark.
     pub depth_hwm: u64,
+    /// Per-backend-class breakdown (sorted by class name; empty when no
+    /// job carried a backend tag).
+    pub per_backend: Vec<BackendSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -383,9 +472,11 @@ impl MetricsSnapshot {
         }
     }
 
-    /// Multi-line human-readable report.
+    /// Multi-line human-readable report. Mixed deployments append one
+    /// comparison line per backend class — the Fig 6 / Table V headline
+    /// numbers (throughput and p50/p95/p99 latency) measured live.
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "jobs={} errors={} wall={:.2}s thpt={:.1} jobs/s macs/s={}\n\
              batches={} mean_batch={:.2} max_batch={} queue_depth mean={:.1} hwm={}\n\
              queue_wait  {}\n\
@@ -404,7 +495,22 @@ impl MetricsSnapshot {
             self.queue_wait.render(),
             self.exec.render(),
             self.total.render(),
-        )
+        );
+        for b in &self.per_backend {
+            out.push_str(&format!(
+                "\nbackend {:<10} jobs={} errors={} thpt={:.1} jobs/s \
+                 p50={:.0}us p95={:.0}us p99={:.0}us cycles={}",
+                b.backend.name(),
+                b.jobs,
+                b.errors,
+                b.jobs_per_sec(self.elapsed_s),
+                b.total.p50,
+                b.total.p95,
+                b.total.p99,
+                b.pim_cycles,
+            ));
+        }
+        out
     }
 }
 
@@ -442,7 +548,7 @@ mod tests {
         let m = ServingMetrics::new();
         for i in 0..100 {
             m.record_depth(i % 7);
-            m.record_job(10.0 + i as f64, 50.0, 70.0 + i as f64, 64, 1000, i % 10 == 0);
+            m.record_job(None, 10.0 + i as f64, 50.0, 70.0 + i as f64, 64, 1000, i % 10 == 0);
         }
         m.record_batch(4, 200.0);
         m.record_batch(8, 400.0);
@@ -466,11 +572,41 @@ mod tests {
     #[test]
     fn serving_metrics_reset_window() {
         let m = ServingMetrics::new();
-        m.record_job(1.0, 1.0, 2.0, 1, 1, false);
+        m.record_job(Some(BackendClass::Overlay), 1.0, 1.0, 2.0, 1, 1, false);
         m.reset_window();
         let s = m.snapshot();
         assert_eq!(s.jobs, 0);
         assert_eq!(s.total.count, 0);
+        assert!(s.per_backend.is_empty());
+    }
+
+    #[test]
+    fn per_backend_tracks_split_and_sort() {
+        use crate::arch::CustomDesign;
+        let m = ServingMetrics::new();
+        let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+        for i in 0..6 {
+            // CoMeFa jobs are recorded slower than overlay jobs.
+            m.record_job(Some(comefa), 1.0, 1.0, 500.0 + i as f64, 8, 100, false);
+        }
+        for i in 0..4 {
+            m.record_job(Some(BackendClass::Overlay), 1.0, 1.0, 50.0 + i as f64, 8, 300, i == 0);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.jobs, 10);
+        assert_eq!(s.per_backend.len(), 2);
+        // Sorted by name: "CoMeFa-A" < "overlay".
+        assert_eq!(s.per_backend[0].backend, comefa);
+        assert_eq!(s.per_backend[0].jobs, 6);
+        assert_eq!(s.per_backend[0].errors, 0);
+        assert_eq!(s.per_backend[0].pim_cycles, 600);
+        assert_eq!(s.per_backend[1].backend, BackendClass::Overlay);
+        assert_eq!(s.per_backend[1].jobs, 4);
+        assert_eq!(s.per_backend[1].errors, 1);
+        assert!(s.per_backend[0].total.p50 > s.per_backend[1].total.p50);
+        let text = s.render();
+        assert!(text.contains("backend CoMeFa-A"), "{text}");
+        assert!(text.contains("backend overlay"), "{text}");
     }
 
     #[test]

@@ -124,7 +124,7 @@ fn coordinator_surfaces_worker_errors_without_dying() {
             (vec![1i64; 32], vec![1i64; 32])
         };
         coord
-            .submit(Job { id, kind: JobKind::Gemm { shape: good_shape, width: 8, a, b } })
+            .submit(Job::new(id, JobKind::Gemm { shape: good_shape, width: 8, a, b }))
             .unwrap();
     }
     let mut results = coord.drain(4).unwrap();

@@ -139,7 +139,7 @@ fn coordinator_end_to_end_with_mixed_shapes() {
         let a = gen_signed_vec(&mut rng, shape.m * shape.k, 8);
         let b = gen_signed_vec(&mut rng, shape.k * shape.n, 8);
         expects.push(gemm_ref(shape, &a, &b));
-        jobs.push(Job { id, kind: JobKind::Gemm { shape, width: 8, a, b } });
+        jobs.push(Job::new(id, JobKind::Gemm { shape, width: 8, a, b }));
     }
     let (results, _) = coord.run_batch(jobs).unwrap();
     for (i, r) in results.iter().enumerate() {

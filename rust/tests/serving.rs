@@ -2,10 +2,11 @@
 //! triggers, out-of-order handle completion, and session reuse — all at
 //! equal correctness with the software GEMM reference.
 
+use picaso::arch::CustomDesign;
 use picaso::compiler::{execute_gemm, execute_gemm_batch, gemm_ref, GemmShape, PimCompiler};
 use picaso::coordinator::{
     Backpressure, BatchPolicy, Batcher, Coordinator, CoordinatorConfig, Job, JobKind, QueuePolicy,
-    Scheduler, SchedulerConfig,
+    RegionSpec, Scheduler, SchedulerConfig,
 };
 use picaso::metrics::ServingMetrics;
 use picaso::prelude::*;
@@ -20,7 +21,7 @@ fn tiny_job(id: u64, shape: GemmShape, seed: u64) -> (Job, Vec<i64>) {
     rng.fill_signed(&mut a, 8);
     rng.fill_signed(&mut b, 8);
     let expect = gemm_ref(shape, &a, &b);
-    (Job { id, kind: JobKind::Gemm { shape, width: 8, a, b } }, expect)
+    (Job::new(id, JobKind::Gemm { shape, width: 8, a, b }), expect)
 }
 
 fn bare_scheduler(cfg: SchedulerConfig) -> Scheduler {
@@ -273,10 +274,10 @@ fn batched_session_serving_charges_fewer_cycles_than_seed_path() {
             .map(|(i, a)| match sid {
                 Some(sid) => coord.submit_session(i as u64, sid, a.clone()).unwrap(),
                 None => coord
-                    .submit_job(Job {
-                        id: i as u64,
-                        kind: JobKind::Gemm { shape, width: 8, a: a.clone(), b: weights.clone() },
-                    })
+                    .submit_job(Job::new(
+                        i as u64,
+                        JobKind::Gemm { shape, width: 8, a: a.clone(), b: weights.clone() },
+                    ))
                     .unwrap(),
             })
             .collect();
@@ -301,6 +302,110 @@ fn batched_session_serving_charges_fewer_cycles_than_seed_path() {
         batched_cycles < seed_cycles,
         "micro-batching must pack ragged rounds: batched {batched_cycles} !< seed {seed_cycles}"
     );
+}
+
+// ------------------------------------------- heterogeneous routing
+
+/// Jobs tagged for a `BackendClass` must only ever complete on worker
+/// regions of that class, even under concurrent mixed load.
+#[test]
+fn tagged_jobs_never_land_on_a_mismatched_region() {
+    let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+    let coord = Coordinator::new(CoordinatorConfig {
+        geom: ArrayGeometry::new(2, 1),
+        regions: vec![
+            RegionSpec { kind: ArchKind::PICASO_F, count: 2 },
+            RegionSpec { kind: ArchKind::Custom(CustomDesign::CoMeFaA), count: 2 },
+        ],
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 16, n: 2 };
+    let mut handles = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..24u64 {
+        let (mut job, expect) = tiny_job(i, shape, 0x9A0 + i);
+        // Mix: overlay-tagged, custom-tagged, and untagged jobs.
+        let want = match i % 3 {
+            0 => Some(BackendClass::Overlay),
+            1 => Some(comefa),
+            _ => None,
+        };
+        job.backend = want;
+        handles.push(coord.submit_job(job).unwrap());
+        wants.push((want, expect));
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait();
+        assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+        assert_eq!(r.output, wants[i].1, "job {i}");
+        let ran_on = BackendClass::of(coord.worker_kinds()[r.worker]);
+        assert_eq!(r.backend, Some(ran_on), "job {i} result tag");
+        if let Some(want) = wants[i].0 {
+            assert_eq!(ran_on, want, "job {i} routed to a mismatched region");
+        }
+    }
+    coord.shutdown();
+}
+
+/// A mixed-region pool under `Backpressure::Reject` sheds overload with
+/// `Error::Busy` but drains everything it admitted — cleanly, on the
+/// right regions, and bit-exact.
+#[test]
+fn mixed_regions_drain_cleanly_under_reject_backpressure() {
+    let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+    let coord = Coordinator::new(CoordinatorConfig {
+        geom: ArrayGeometry::new(2, 1),
+        regions: vec![
+            RegionSpec { kind: ArchKind::PICASO_F, count: 1 },
+            RegionSpec { kind: ArchKind::Custom(CustomDesign::CoMeFaA), count: 1 },
+        ],
+        scheduler: SchedulerConfig {
+            capacity: 4,
+            backpressure: Backpressure::Reject,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 16, n: 2 };
+    let mut done = 0u64;
+    let mut shed = 0u64;
+    let mut i = 0u64;
+    while done < 32 {
+        // Burst-submit past the queue bound, then drain the admitted
+        // handles: rejection (Error::Busy) is load shedding, not failure.
+        let mut burst = Vec::new();
+        while burst.len() < 8 {
+            let (mut job, expect) = tiny_job(i, shape, 0x7777 + i);
+            i += 1;
+            job.backend = Some(if i % 2 == 0 { BackendClass::Overlay } else { comefa });
+            let want = job.backend;
+            match coord.submit_job(job) {
+                Ok(h) => burst.push((h, expect, want)),
+                Err(picaso::Error::Busy(_)) => {
+                    shed += 1;
+                    break;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        for (h, expect, want) in burst {
+            let r = h.wait();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.output, expect);
+            assert_eq!(r.backend, want);
+            done += 1;
+        }
+        assert!(i < 100_000, "livelock: queue never admits");
+    }
+    // Every admitted job completed on its tagged region; nothing is
+    // stuck in the queue at shutdown.
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.jobs, done);
+    assert_eq!(snap.per_backend.len(), 2);
+    coord.shutdown();
 }
 
 // ---------------------------------------------- packed executor direct
