@@ -20,6 +20,14 @@ if [ "${1:-}" = "fast" ]; then
     exit 0
 fi
 
+# Release profile so the artifacts are shared with the tier-1 build and
+# the bench-compile step below instead of paying a second debug compile.
+step "examples: cargo build --release --examples"
+cargo build --release --examples
+
+step "doctests: cargo test --doc -q"
+cargo test --doc -q
+
 step "compile benches + examples"
 cargo build --release --benches --examples
 

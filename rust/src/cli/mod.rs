@@ -21,8 +21,9 @@ use crate::backend::{make_backend, BackendClass};
 use crate::compiler::{gemm_ref, GemmShape};
 use crate::coordinator::{
     Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, QueuePolicy,
-    RegionSpec, SchedulerConfig,
+    RegionSpec, SchedulerConfig, ShardPolicy,
 };
+use crate::device::Device;
 use crate::report::paper;
 use crate::util::Xoshiro256;
 use crate::{Error, Result};
@@ -89,6 +90,8 @@ system:
   gemm   --m=16 --k=64 --n=16 --width=8 --rows=8 --cols=4
          [--backend=picaso|spar2|ccb|comefa-d|comefa-a|a-mod|d-mod]
          [--arch=full|single|rf|op|spar2] [--booth-skip]
+         [--device=U55]                  target device for the cycles→ns
+                                         conversion (see `picaso info`)
   serve  --jobs=64 --workers=4 --clients=4 --rows=8 --cols=4
          [--backend=picaso|spar2|ccb|comefa-d|comefa-a|a-mod|d-mod|mixed]
                                          execution backend; `mixed` splits
@@ -96,10 +99,15 @@ system:
                                          regions and reports per-backend
                                          p50/p95/p99
          [--m=4 --k=64 --n=8]            served GEMM shape
+         [--shards=1|<k>|auto]           scatter each GEMM into k shards
+                                         across regions (auto = one per
+                                         compatible region; implies
+                                         per-job weights)
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--capacity=256]                submission queue bound
          [--policy=fifo|priority] [--backpressure=block|reject]
          [--no-session]                  per-job weights (seed behaviour)
+         [--device=U55]                  device for per-backend cycles→ns
   info   device database summary
   help   this text
 
@@ -160,6 +168,30 @@ pub fn parse_backend(s: &str) -> Result<ArchKind> {
     })
 }
 
+/// Parse `--device` against the device database (default U55, the
+/// paper's primary part). Shared by `gemm` and `serve` so cycle→ns
+/// conversions always use the requested target's `design_clock_hz`
+/// instead of a hardcoded device.
+fn parse_device(args: &Args) -> Result<&'static Device> {
+    let id: String = args.get("device", "U55".into())?;
+    Device::by_id(&id)
+        .ok_or_else(|| Error::Config(format!("unknown device '{id}'; see `picaso info`")))
+}
+
+/// Parse `--shards`: a fixed fan-out, `auto` (one shard per compatible
+/// region), or 1/absent for unsharded execution.
+fn parse_shards(args: &Args) -> Result<ShardPolicy> {
+    let raw: String = args.get("shards", "1".into())?;
+    match raw.as_str() {
+        "auto" => Ok(ShardPolicy::Auto),
+        s => match s.parse::<usize>() {
+            Ok(k) if k <= 1 => Ok(ShardPolicy::None),
+            Ok(k) => Ok(ShardPolicy::Fixed(k)),
+            Err(_) => Err(Error::Config(format!("bad value for --shards: '{s}'"))),
+        },
+    }
+}
+
 fn cmd_gemm(args: &Args) -> Result<String> {
     let m: usize = args.get("m", 16)?;
     let k: usize = args.get("k", 64)?;
@@ -171,6 +203,7 @@ fn cmd_gemm(args: &Args) -> Result<String> {
     // --arch remains as the original overlay-focused spelling.
     let arch_name = args.get::<String>("backend", args.get::<String>("arch", "full".into())?)?;
     let kind = parse_backend(&arch_name)?;
+    let device = parse_device(args)?;
     let geom = ArrayGeometry::new(rows, cols);
     let shape = GemmShape { m, k, n };
     let mut rng = Xoshiro256::seeded(args.get("seed", 42u64)?);
@@ -185,11 +218,11 @@ fn cmd_gemm(args: &Args) -> Result<String> {
     let (c, stats) = crate::compiler::execute_gemm(&mut *backend, &plan, &a, &b)?;
     let wall = t0.elapsed();
     let ok = c == gemm_ref(shape, &a, &b);
-    let freq = crate::analytic::design_clock_hz(kind, crate::device::Device::by_id("U55").unwrap());
+    let freq = crate::analytic::design_clock_hz(kind, device);
     Ok(format!(
         "gemm {m}x{k}x{n} w={width} on {} ({rows}x{cols} blocks, q={})\n\
          verified: {}\n\
-         pim cycles: {} ({} at {})\n\
+         pim cycles: {} ({} at {freq_txt} on {dev})\n\
          sim wall: {:?} ({} cycles/s)\n\
          instructions: {} rounds: {} slices: {}\n",
         kind.name(),
@@ -197,12 +230,13 @@ fn cmd_gemm(args: &Args) -> Result<String> {
         if ok { "OK — matches software reference" } else { "FAILED" },
         stats.cycles,
         crate::util::fmt_ns(stats.time_ns(freq)),
-        crate::util::fmt_freq(freq),
         wall,
         crate::util::fmt_rate(stats.cycles as f64 / wall.as_secs_f64(), "cyc"),
         stats.instructions,
         plan.rounds,
         plan.slices,
+        freq_txt = crate::util::fmt_freq(freq),
+        dev = device.id,
     ))
 }
 
@@ -230,7 +264,13 @@ fn cmd_serve(args: &Args) -> Result<String> {
         "reject" => Backpressure::Reject,
         other => return Err(Error::Config(format!("unknown backpressure '{other}'"))),
     };
-    let use_session = !args.flag("no-session");
+    let device = parse_device(args)?;
+    let shard_policy = parse_shards(args)?;
+    let sharded = shard_policy != ShardPolicy::None;
+    // Sharding slices each job's weight operand per shard, which is
+    // incompatible with session-pinned whole weights: sharded runs use
+    // the per-job-weights path.
+    let use_session = !args.flag("no-session") && !sharded;
 
     // Backend selection: one design name for a homogeneous pool, or
     // "mixed" for an overlay + CoMeFa-A split with jobs tagged to
@@ -318,7 +358,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
                             b: weights.as_ref().clone(),
                         },
                     };
-                    let mut job = Job::new(id, kind);
+                    let mut job = Job::new(id, kind).with_shards(shard_policy);
                     job.backend = tag;
                     match coord.submit_with_priority(job, priority) {
                         Ok(h) => break h,
@@ -349,19 +389,47 @@ fn cmd_serve(args: &Args) -> Result<String> {
         shed += sh;
     }
     let snap = coord.metrics_snapshot();
-    let nworkers = coord.worker_kinds().len();
+    let worker_kinds = coord.worker_kinds().to_vec();
+    let nworkers = worker_kinds.len();
     if let Ok(c) = Arc::try_unwrap(coord) {
         c.shutdown();
     }
 
+    // Clock-aware latency: convert each backend class's simulated
+    // cycles to time at its design clock on the requested device.
+    let mut clock_report = String::new();
+    for b in &snap.per_backend {
+        let Some(kind) = worker_kinds
+            .iter()
+            .copied()
+            .find(|k| BackendClass::of(*k) == b.backend)
+        else {
+            continue;
+        };
+        let freq = crate::analytic::design_clock_hz(kind, device);
+        let avg_cycles = if b.jobs > 0 { b.pim_cycles as f64 / b.jobs as f64 } else { 0.0 };
+        clock_report.push_str(&format!(
+            "\npim time {:<10} {:>10}/job at {} ({})",
+            b.backend.name(),
+            crate::util::fmt_ns(avg_cycles / freq * 1e9),
+            crate::util::fmt_freq(freq),
+            device.id,
+        ));
+    }
+
+    let mode = match shard_policy {
+        ShardPolicy::Auto => "sharded auto, per-job weights".to_string(),
+        ShardPolicy::Fixed(k) => format!("sharded x{k}, per-job weights"),
+        ShardPolicy::None if use_session => "session weights".to_string(),
+        ShardPolicy::None => "per-job weights".to_string(),
+    };
     Ok(format!(
         "served {served} gemm jobs on {nworkers} {backend_name} workers \
          ({clients} closed-loop clients, {m}x{k}x{n}, {mode})\n\
-         failures: {failures}\nrejected then retried: {shed}\n{report}\n",
+         failures: {failures}\nrejected then retried: {shed}\n{report}{clock_report}\n",
         m = shape.m,
         k = shape.k,
         n = shape.n,
-        mode = if use_session { "session weights" } else { "per-job weights" },
         report = snap.render(),
     ))
 }
@@ -466,6 +534,36 @@ mod tests {
         assert!(out.contains("failures: 0"), "{out}");
         assert!(out.contains("backend CoMeFa-A"), "{out}");
         assert!(run_line("serve --backend=bogus").is_err());
+    }
+
+    #[test]
+    fn gemm_command_honors_device_flag() {
+        let out = run_line("gemm --m=2 --k=16 --n=2 --rows=2 --cols=1 --device=V7").unwrap();
+        assert!(out.contains("OK"), "{out}");
+        assert!(out.contains("on V7"), "{out}");
+        // Default stays the paper's primary part.
+        let out = run_line("gemm --m=2 --k=16 --n=2 --rows=2 --cols=1").unwrap();
+        assert!(out.contains("on U55"), "{out}");
+        assert!(run_line("gemm --device=bogus").is_err());
+    }
+
+    #[test]
+    fn serve_command_sharded() {
+        let out =
+            run_line("serve --jobs=6 --workers=2 --rows=2 --cols=1 --shards=2 --device=V7")
+                .unwrap();
+        assert!(out.contains("served 6"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("sharded x2"), "{out}");
+        assert!(out.contains("sharding"), "{out}");
+        assert!(out.contains("pim time"), "{out}");
+        assert!(out.contains("(V7)"), "{out}");
+        let out =
+            run_line("serve --jobs=4 --workers=2 --rows=2 --cols=1 --shards=auto").unwrap();
+        assert!(out.contains("sharded auto"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(run_line("serve --shards=bogus").is_err());
+        assert!(run_line("serve --device=bogus").is_err());
     }
 
     #[test]

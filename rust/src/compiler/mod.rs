@@ -338,6 +338,72 @@ where
     Ok((c, total))
 }
 
+// ------------------------------------------------------------------
+// Sharding helpers: partition one logical GEMM along `n` so the
+// coordinator can scatter shards across worker regions and gather the
+// partial outputs back (the paper's multi-block scaling story applied
+// to one job instead of one job per block).
+// ------------------------------------------------------------------
+
+/// Partition a GEMM's output along `n` into at most `shards` contiguous
+/// column ranges, returned as `(first_column, shard_shape)` pairs in
+/// column order.
+///
+/// The split is balanced: when `n % shards != 0` the first `n % shards`
+/// shards carry one extra column, so no shard is ever empty and the
+/// widths differ by at most one. `shards` is clamped to `n` (a shard
+/// needs at least one output column) and to at least 1.
+///
+/// Each shard is an independent GEMM `C[.., j0..j0+nn] =
+/// A · B[.., j0..j0+nn]`: `A` is shared whole, `B` is sliced with
+/// [`slice_b_cols`], and the shard outputs reassemble with
+/// [`merge_shard_outputs`]. Because each shard has `outputs = m·nn`,
+/// its compiled plan runs `ceil(m·nn / rows)` rounds — roughly a
+/// `shards`-fold drop per region versus the unsharded `ceil(m·n / rows)`.
+pub fn split_shape_n(shape: GemmShape, shards: usize) -> Vec<(usize, GemmShape)> {
+    let GemmShape { m, k, n } = shape;
+    let parts = shards.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut col = 0;
+    for idx in 0..parts {
+        let nn = base + usize::from(idx < extra);
+        out.push((col, GemmShape { m, k, n: nn }));
+        col += nn;
+    }
+    out
+}
+
+/// Extract columns `[col0, col0 + cols)` of `B` (row-major `k×n` for
+/// `shape`) into a fresh row-major `k×cols` matrix — the weight operand
+/// of one shard produced by [`split_shape_n`].
+pub fn slice_b_cols(shape: GemmShape, b: &[i64], col0: usize, cols: usize) -> Vec<i64> {
+    let GemmShape { k, n, .. } = shape;
+    debug_assert!(col0 + cols <= n, "column slice out of range");
+    let mut out = Vec::with_capacity(k * cols);
+    for row in 0..k {
+        out.extend_from_slice(&b[row * n + col0..row * n + col0 + cols]);
+    }
+    out
+}
+
+/// Reassemble shard outputs into the parent `m×n` matrix. `parts` holds
+/// `(first_column, shard_columns, shard_output)` triples as produced by
+/// [`split_shape_n`] and the per-shard executions; order does not
+/// matter, but the column ranges must tile `0..n` exactly once each.
+pub fn merge_shard_outputs(shape: GemmShape, parts: &[(usize, usize, Vec<i64>)]) -> Vec<i64> {
+    let GemmShape { m, n, .. } = shape;
+    let mut c = vec![0i64; m * n];
+    for (col0, cols, out) in parts {
+        debug_assert_eq!(out.len(), m * cols, "shard output size");
+        for i in 0..m {
+            c[i * n + col0..i * n + col0 + cols].copy_from_slice(&out[i * cols..(i + 1) * cols]);
+        }
+    }
+    c
+}
+
 /// Reference GEMM used by tests and the golden cross-check.
 pub fn gemm_ref(shape: GemmShape, a: &[i64], b: &[i64]) -> Vec<i64> {
     let GemmShape { m, k, n } = shape;
@@ -575,6 +641,79 @@ mod tests {
         assert_eq!(c_custom, expect);
         assert!(s_overlay.cycles > 0 && s_custom.cycles > 0);
         assert_ne!(s_overlay.cycles, s_custom.cycles, "different cycle models");
+    }
+
+    #[test]
+    fn split_shape_is_balanced_and_clamped() {
+        let shape = GemmShape { m: 2, k: 8, n: 7 };
+        // Ragged: 7 columns over 3 shards => widths 3, 2, 2.
+        let parts = split_shape_n(shape, 3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], (0, GemmShape { m: 2, k: 8, n: 3 }));
+        assert_eq!(parts[1], (3, GemmShape { m: 2, k: 8, n: 2 }));
+        assert_eq!(parts[2], (5, GemmShape { m: 2, k: 8, n: 2 }));
+        // Clamped: more shards than columns degenerates to one per column.
+        assert_eq!(split_shape_n(shape, 100).len(), 7);
+        // K = 1 (and 0) is the unsharded identity.
+        assert_eq!(split_shape_n(shape, 1), vec![(0, shape)]);
+        assert_eq!(split_shape_n(shape, 0), vec![(0, shape)]);
+    }
+
+    #[test]
+    fn shard_slice_execute_merge_is_bit_exact() {
+        let geom = ArrayGeometry::new(2, 1);
+        let shape = GemmShape { m: 3, k: 20, n: 7 }; // multi-slice, ragged n
+        let (a, b) = random_gemm(shape, 8, 0x5A);
+        let expect = gemm_ref(shape, &a, &b);
+        let compiler = PimCompiler::new(geom);
+        for shards in [1, 2, 3, 7] {
+            let mut parts = Vec::new();
+            for (col0, sshape) in split_shape_n(shape, shards) {
+                let sb = slice_b_cols(shape, &b, col0, sshape.n);
+                let plan = compiler.gemm(sshape, 8).unwrap();
+                let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+                let (c, _) = execute_gemm(&mut arr, &plan, &a, &sb).unwrap();
+                parts.push((col0, sshape.n, c));
+            }
+            assert_eq!(merge_shard_outputs(shape, &parts), expect, "K={shards}");
+        }
+    }
+
+    /// The scaling contract behind sharding: each shard's compiled plan
+    /// runs ~K× fewer rounds than the unsharded plan, so K regions
+    /// executing concurrently cut the per-region round count ~K-fold.
+    /// Round counts are pure plan arithmetic, so this is deterministic.
+    #[test]
+    fn shard_plans_drop_per_region_rounds_k_fold() {
+        let geom = ArrayGeometry::new(4, 1); // 4 rows
+        let compiler = PimCompiler::new(geom);
+        let shape = GemmShape { m: 4, k: 16, n: 8 }; // 32 outputs => 8 rounds
+        let parent = compiler.gemm(shape, 8).unwrap();
+        assert_eq!(parent.rounds, 8);
+        for shards in [2usize, 4] {
+            let per_region: Vec<usize> = split_shape_n(shape, shards)
+                .into_iter()
+                .map(|(_, s)| compiler.gemm(s, 8).unwrap().rounds)
+                .collect();
+            // Even split: exactly rounds/K per region.
+            assert!(
+                per_region.iter().all(|&r| r == parent.rounds / shards),
+                "K={shards}: {per_region:?}"
+            );
+        }
+        // Ragged split: no region exceeds ceil(rounds/K) + 1.
+        let ragged = GemmShape { m: 4, k: 16, n: 7 }; // 28 outputs => 7 rounds
+        let parent = compiler.gemm(ragged, 8).unwrap();
+        let worst = split_shape_n(ragged, 3)
+            .into_iter()
+            .map(|(_, s)| compiler.gemm(s, 8).unwrap().rounds)
+            .max()
+            .unwrap();
+        assert!(
+            worst <= parent.rounds.div_ceil(3) + 1,
+            "worst region {worst} vs parent {} over 3 shards",
+            parent.rounds
+        );
     }
 
     #[test]

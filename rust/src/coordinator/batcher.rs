@@ -19,6 +19,12 @@
 //!   taken (new *non-matching* arrivals never reset the clock);
 //! * **close** — the scheduler shut down.
 //!
+//! Sibling shards of one scattered job
+//! ([`ShardInfo`](super::ShardInfo)) never coalesce with each other —
+//! packing them into one batch would serialize the whole scatter on a
+//! single region. Shards of different parents (and plain same-key
+//! jobs) batch freely.
+//!
 //! ```
 //! use picaso::compiler::GemmShape;
 //! use picaso::coordinator::{BatchPolicy, Batcher, Job, JobKind, Scheduler, SchedulerConfig};
@@ -140,11 +146,20 @@ impl Batcher {
             return Some(vec![first]);
         }
         let key = first.key;
+        // Sibling shards of one scattered job must not coalesce: packing
+        // them into one batch would run the whole scatter serially on
+        // this worker while the other regions idle. Track every parent
+        // already represented in the batch, not just the head's — the
+        // head may be a plain job with two siblings queued behind it.
+        let mut exclude_parents: Vec<u64> = first.shard.map(|s| s.parent).into_iter().collect();
         let deadline = Instant::now() + self.policy.max_wait;
         let mut batch = vec![first];
         let mut seen = sched.arrivals();
         while batch.len() < max {
-            if let Some(t) = sched.try_pop_matching(&key, class) {
+            if let Some(t) = sched.try_pop_matching(&key, class, &exclude_parents) {
+                if let Some(s) = t.shard {
+                    exclude_parents.push(s.parent);
+                }
                 batch.push(t);
                 continue;
             }
@@ -250,6 +265,53 @@ mod tests {
         let custom: Vec<u64> =
             b.collect_for(&s, Some(comefa)).unwrap().iter().map(|t| t.job.id).collect();
         assert_eq!(custom, vec![1]);
+    }
+
+    #[test]
+    fn sibling_shards_do_not_coalesce() {
+        use super::super::scheduler::ShardInfo;
+        let s = sched();
+        // Two shards of logical job 7 plus one unrelated same-key job.
+        for index in 0..2usize {
+            s.submit_shard_with_priority(
+                gemm_job(7, 1),
+                0,
+                Some(ShardInfo { parent: 7, index, of: 2 }),
+            )
+            .unwrap();
+        }
+        s.submit(gemm_job(9, 1)).unwrap();
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        // First batch: shard 0 plus the unrelated job — never shard 1.
+        let first = b.collect(&s).unwrap();
+        let picked: Vec<Option<usize>> =
+            first.iter().map(|t| t.shard.map(|sh| sh.index)).collect();
+        assert_eq!(first.len(), 2, "unrelated same-key job still coalesces");
+        assert_eq!(picked, vec![Some(0), None]);
+        // The sibling shard dispatches in its own batch.
+        let second = b.collect(&s).unwrap();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].shard.map(|sh| sh.index), Some(1));
+
+        // Same invariant when a plain job leads the batch: the siblings
+        // queued behind it must not both join.
+        let s2 = sched();
+        s2.submit(gemm_job(30, 1)).unwrap();
+        for index in 0..2usize {
+            s2.submit_shard_with_priority(
+                gemm_job(31, 1),
+                0,
+                Some(ShardInfo { parent: 31, index, of: 2 }),
+            )
+            .unwrap();
+        }
+        let first = b.collect(&s2).unwrap();
+        let picked: Vec<Option<usize>> =
+            first.iter().map(|t| t.shard.map(|sh| sh.index)).collect();
+        assert_eq!(picked, vec![None, Some(0)], "plain head takes only one sibling");
+        let second = b.collect(&s2).unwrap();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].shard.map(|sh| sh.index), Some(1));
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //!   table, so repeat inference skips both compilation and weight
 //!   gathering.
 //!
+//! One logical GEMM can also span regions: a [`ShardPolicy`] on the
+//! [`Job`] scatters it into per-column-range shard tickets at submit
+//! time ([`compiler::split_shape_n`](crate::compiler::split_shape_n)),
+//! heterogeneous regions execute the shards concurrently, and the
+//! returned [`JobHandle`] is the gather barrier that merges the partial
+//! outputs bit-exact and rolls the shard cycle counts up to the parent.
+//!
 //! The [`Coordinator`] spawns one worker thread per region; each worker
 //! owns a simulated execution backend behind the unified
 //! [`PimBackend`](crate::backend::PimBackend) trait — an overlay
@@ -46,14 +53,18 @@ pub mod session;
 
 pub use batcher::{BatchKey, BatchPolicy, Batcher};
 pub use scheduler::{
-    Backpressure, Completion, JobHandle, QueuePolicy, Scheduler, SchedulerConfig, Ticket,
+    Backpressure, Completion, JobHandle, QueuePolicy, Scheduler, SchedulerConfig, ShardInfo,
+    Ticket,
 };
 pub use session::{ModelSession, SessionId, SessionSpec};
 
 use crate::arch::{ArchKind, PipelineConfig};
 use crate::array::{ArrayGeometry, RunStats};
 use crate::backend::{make_backend, BackendClass, PimBackend};
-use crate::compiler::{execute_gemm, execute_gemm_batch, GemmPlan, GemmShape, PimCompiler};
+use crate::compiler::{
+    execute_gemm, execute_gemm_batch, slice_b_cols, split_shape_n, GemmPlan, GemmShape,
+    PimCompiler,
+};
 use crate::metrics::{Metrics, MetricsSnapshot, ServingMetrics};
 use crate::{Error, Result};
 use std::collections::{HashMap, VecDeque};
@@ -151,6 +162,22 @@ impl CoordinatorConfig {
     }
 }
 
+/// How a logical GEMM job is split across worker regions at submit time
+/// (the scatter half of scatter–gather; see
+/// [`Coordinator::submit_job`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardPolicy {
+    /// Run as one ticket on one region (the default).
+    #[default]
+    None,
+    /// Split the output into exactly this many shards along `n`
+    /// (clamped to `n`; 0 and 1 behave like [`ShardPolicy::None`]).
+    Fixed(usize),
+    /// One shard per compatible worker region: the number of regions
+    /// matching the job's backend tag (all regions for untagged jobs).
+    Auto,
+}
+
 /// A unit of work.
 #[derive(Debug, Clone)]
 pub struct Job {
@@ -161,19 +188,32 @@ pub struct Job {
     /// Required worker backend class. `None` (the default) runs on any
     /// region; `Some` routes the job only to matching regions — the
     /// handle on which the serving benchmark compares overlay vs custom
-    /// designs under identical load.
+    /// designs under identical load. Shard sub-jobs inherit this tag, so
+    /// a shard can never land on a mismatched region.
     pub backend: Option<BackendClass>,
+    /// Scatter–gather sharding for [`JobKind::Gemm`] payloads: split the
+    /// output along `n` so multiple regions execute one logical job
+    /// concurrently. Session jobs reject any policy other than
+    /// [`ShardPolicy::None`] (their weights are pinned per session, not
+    /// per shard).
+    pub shards: ShardPolicy,
 }
 
 impl Job {
     /// An untagged job (runs on any worker region).
     pub fn new(id: u64, kind: JobKind) -> Self {
-        Self { id, kind, backend: None }
+        Self { id, kind, backend: None, shards: ShardPolicy::None }
     }
 
     /// A job pinned to worker regions of the given backend class.
     pub fn on(id: u64, kind: JobKind, backend: BackendClass) -> Self {
-        Self { id, kind, backend: Some(backend) }
+        Self { id, kind, backend: Some(backend), shards: ShardPolicy::None }
+    }
+
+    /// This job with a sharding policy applied (builder style).
+    pub fn with_shards(mut self, shards: ShardPolicy) -> Self {
+        self.shards = shards;
+        self
     }
 }
 
@@ -214,21 +254,40 @@ pub struct JobResult {
     /// per-instruction-kind breakdown is not attributed per job and
     /// stays zeroed for batched executions.
     pub stats: RunStats,
-    /// Backend class of the worker region that ran the job (`None` only
-    /// for abandoned jobs that never reached a worker).
+    /// Backend class of the worker region that ran the job (`None` for
+    /// abandoned jobs that never reached a worker, and for merged
+    /// sharded results whose shards ran on different classes).
     pub backend: Option<BackendClass>,
+    /// Time this job spent queued before a worker picked it up (µs) —
+    /// carried on the result so every consumer (the legacy
+    /// [`Metrics`](crate::metrics::Metrics) fed by
+    /// [`Coordinator::run_batch`], external callers) sees the real queue
+    /// wait instead of reconstructing it. For merged sharded results:
+    /// the maximum over shards (the gather waits for the slowest).
+    pub queue_us: f64,
     /// This job's share of the wall-clock execution time (µs) of the
-    /// array invocation that served it (the batch's wall time divided by
-    /// [`batch_size`](Self::batch_size)), so per-job latency accounting
-    /// stays comparable whether or not micro-batching coalesced the job.
-    /// The whole batch's execution wall time is available as the
-    /// `exec` stage in [`MetricsSnapshot`](crate::metrics::MetricsSnapshot).
+    /// array invocation that served it: the batch's wall time split
+    /// across its jobs **weighted by output length** (a poison job that
+    /// produced no output gets no share; the shares sum to the batch's
+    /// wall time), so per-job latency accounting stays
+    /// comparable whether or not micro-batching coalesced the job.
+    /// For merged sharded results: the critical path — shard shares
+    /// sum per worker region (same-region shards ran serially) and the
+    /// largest per-region sum wins (regions run concurrently). The
+    /// whole batch's execution wall time is available as the `exec`
+    /// stage in [`MetricsSnapshot`](crate::metrics::MetricsSnapshot).
     pub wall_us: f64,
-    /// Worker index that ran the job.
+    /// Worker index that ran the job (the first shard's worker for
+    /// merged sharded results).
     pub worker: usize,
-    /// Number of jobs in the micro-batch this job was served in.
+    /// Number of jobs in the micro-batch this job was served in (the
+    /// largest shard batch for merged sharded results).
     pub batch_size: usize,
-    /// Error text if the job failed.
+    /// Number of shards this logical job was scattered into (1 for an
+    /// unsharded job; the stats of a merged result roll up all shards).
+    pub shards: usize,
+    /// Error text if the job failed. A sharded job's first failed shard
+    /// (by index) propagates here with a `shard i/K` context prefix.
     pub error: Option<String>,
 }
 
@@ -346,6 +405,16 @@ impl Coordinator {
     /// with a [`BackendClass`] absent from the pool are rejected here
     /// (they could never dispatch); session jobs inherit their session's
     /// backend requirement unless tagged explicitly.
+    ///
+    /// **Scatter–gather**: a [`JobKind::Gemm`] job with a
+    /// [`ShardPolicy`] other than `None` is split along `n` into K
+    /// linked shard tickets here (each carrying the parent id, its shard
+    /// index, and the job's backend tag), and the returned [`JobHandle`]
+    /// is the gather barrier that merges the shard outputs back into the
+    /// parent result in submission order. Under
+    /// [`Backpressure::Reject`], a rejection mid-scatter fails the whole
+    /// submission; shards already queued still execute but their results
+    /// are discarded with the dropped handle.
     pub fn submit_job(&self, job: Job) -> Result<JobHandle> {
         self.submit_with_priority(job, 0)
     }
@@ -372,7 +441,80 @@ impl Coordinator {
                 )));
             }
         }
+        let shards = self.resolve_shards(&job)?;
+        if shards >= 2 {
+            return self.scatter_gemm(job, priority, shards);
+        }
+        self.metrics.record_shards(1);
         self.sched.submit_with_priority(job, priority)
+    }
+
+    /// Resolve a job's [`ShardPolicy`] to a concrete shard count against
+    /// this pool. Validates that sharding is only requested for plain
+    /// GEMM payloads.
+    fn resolve_shards(&self, job: &Job) -> Result<usize> {
+        let want = match job.shards {
+            ShardPolicy::None => return Ok(1),
+            ShardPolicy::Fixed(k) => k.max(1),
+            ShardPolicy::Auto => self.compatible_regions(job.backend).max(1),
+        };
+        match &job.kind {
+            // Clamp to n: a shard needs at least one output column.
+            JobKind::Gemm { shape, .. } => Ok(want.min(shape.n)),
+            JobKind::SessionGemm { .. } if want <= 1 => Ok(1),
+            JobKind::SessionGemm { .. } => Err(Error::Config(format!(
+                "job {}: sharding applies to plain GEMM jobs; session weights are pinned \
+                 whole per region (open one session per shard instead)",
+                job.id
+            ))),
+        }
+    }
+
+    /// Number of worker regions a job tagged `backend` may run on.
+    fn compatible_regions(&self, backend: Option<BackendClass>) -> usize {
+        match backend {
+            None => self.worker_kinds.len(),
+            Some(c) => self
+                .worker_kinds
+                .iter()
+                .filter(|k| BackendClass::of(**k) == c)
+                .count(),
+        }
+    }
+
+    /// The scatter half of sharded execution: split the GEMM's output
+    /// columns into `shards` balanced ranges, slice `B` per shard,
+    /// submit each shard as a linked ticket (inheriting backend tag and
+    /// priority), and return the gather handle.
+    fn scatter_gemm(&self, job: Job, priority: u8, shards: usize) -> Result<JobHandle> {
+        let Job { id, kind, backend, .. } = job;
+        let JobKind::Gemm { shape, width, a, b } = kind else {
+            unreachable!("resolve_shards only shards plain GEMM jobs");
+        };
+        let parts = split_shape_n(shape, shards);
+        let of = parts.len();
+        self.metrics.record_shards(of);
+        let mut handles = Vec::with_capacity(of);
+        for (index, (col0, sshape)) in parts.into_iter().enumerate() {
+            let sub = Job {
+                id,
+                kind: JobKind::Gemm {
+                    shape: sshape,
+                    width,
+                    a: a.clone(),
+                    b: slice_b_cols(shape, &b, col0, sshape.n),
+                },
+                backend,
+                shards: ShardPolicy::None,
+            };
+            let h = self.sched.submit_shard_with_priority(
+                sub,
+                priority,
+                Some(ShardInfo { parent: id, index, of }),
+            )?;
+            handles.push((col0, sshape.n, h));
+        }
+        Ok(JobHandle::gather(id, shape, handles))
     }
 
     /// Open a persistent session: pins `weights` (row-major `k×n`) and
@@ -497,7 +639,9 @@ impl Coordinator {
         results.sort_by_key(|r| r.id);
         for r in &results {
             let macs = r.output.len() as u64; // one dot product per element
-            metrics.record_job(r.wall_us, 0.0, macs, r.stats.cycles);
+            // The real measured queue wait rides on the result — the
+            // percentiles must reflect induced queuing, not a constant 0.
+            metrics.record_job(r.wall_us, r.queue_us, 0.0, macs, r.stats.cycles);
         }
         Ok((results, metrics))
     }
@@ -518,6 +662,45 @@ impl Drop for Coordinator {
         // detached (not joined) in that case.
         self.sched.close();
     }
+}
+
+/// Attribute a batch's execution wall time (µs) across its jobs,
+/// weighted by each job's output length — in a ragged batch (e.g. one
+/// containing poison jobs that produced no output) jobs contribute
+/// unequal output rows to the packed rounds, and an even split would
+/// misattribute the cost. Mirrors the exact-sum property of
+/// [`stats_shares`]: the last weighted job absorbs the floating-point
+/// remainder, so the shares reconstruct `batch_wall_us` to within
+/// rounding of the final addition. When no job produced output, the
+/// time is split evenly (same remainder construction).
+fn wall_shares(batch_wall_us: f64, out_lens: &[usize]) -> Vec<f64> {
+    let n = out_lens.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total: usize = out_lens.iter().sum();
+    let mut shares = vec![0.0f64; n];
+    let last_weighted = if total == 0 {
+        // Degenerate batch (every job failed validation): even split.
+        for s in shares.iter_mut() {
+            *s = batch_wall_us / n as f64;
+        }
+        n - 1
+    } else {
+        for (s, &len) in shares.iter_mut().zip(out_lens) {
+            *s = batch_wall_us * len as f64 / total as f64;
+        }
+        // The remainder lands on the last job that did real work.
+        out_lens.iter().rposition(|&l| l > 0).expect("total > 0")
+    };
+    let sum_others: f64 = shares
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != last_weighted)
+        .map(|(_, s)| s)
+        .sum();
+    shares[last_weighted] = batch_wall_us - sum_others;
+    shares
 }
 
 /// Attribute a batch's run statistics across its `n` jobs: every job
@@ -595,11 +778,17 @@ fn worker_loop(
         let batch_size = batch.len();
         metrics.record_batch(batch_size, batch_wall_us);
         // Per-job execution cost is the batch's wall time split across
-        // its jobs — keeps JobResult.wall_us (and the legacy Metrics fed
-        // from it) comparable with the seed one-job-per-invocation path.
-        let wall_us = batch_wall_us / batch_size.max(1) as f64;
-        for ((ticket, (output, stats, error)), queue_us) in
-            batch.into_iter().zip(outcome.per_job).zip(queue_waits)
+        // its jobs, weighted by output length (ragged batches attribute
+        // cost where the packed rounds actually went) — keeps
+        // JobResult.wall_us (and the legacy Metrics fed from it)
+        // comparable with the seed one-job-per-invocation path.
+        let out_lens: Vec<usize> = outcome.per_job.iter().map(|(o, _, _)| o.len()).collect();
+        let shares = wall_shares(batch_wall_us, &out_lens);
+        for (((ticket, (output, stats, error)), queue_us), wall_us) in batch
+            .into_iter()
+            .zip(outcome.per_job)
+            .zip(queue_waits)
+            .zip(shares)
         {
             let id = ticket.job.id;
             let total_us = ticket.enqueued_at.elapsed().as_secs_f64() * 1e6;
@@ -618,9 +807,11 @@ fn worker_loop(
                 output,
                 stats,
                 backend: Some(class),
+                queue_us,
                 wall_us,
                 worker: widx,
                 batch_size,
+                shards: 1,
                 error,
             });
         }
@@ -1047,6 +1238,116 @@ mod tests {
             .open_session_on(shape, 8, weights, Some(BackendClass::Custom(CustomDesign::DMod)))
             .is_err());
         coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_gemm_merges_bit_exact_and_rolls_up_stats() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 3,
+            geom: ArrayGeometry::new(2, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 2, k: 16, n: 7 }; // ragged: 7 % 3 != 0
+        let (job, expect) = gemm_job(1, shape, 0x51A2);
+        let r = coord
+            .submit_job(job.clone().with_shards(ShardPolicy::Fixed(3)))
+            .unwrap()
+            .wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect, "gathered output == gemm_ref");
+        assert_eq!(r.shards, 3);
+        assert!(r.stats.cycles > 0, "shard cycles roll up to the parent");
+        // Auto resolves to one shard per compatible region.
+        let r = coord.submit_job(job.with_shards(ShardPolicy::Auto)).unwrap().wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect);
+        assert_eq!(r.shards, 3, "auto = 3 workers");
+        let snap = coord.metrics_snapshot();
+        assert_eq!(snap.sharded_jobs, 2);
+        assert_eq!(snap.max_shards, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shard_count_clamps_to_output_columns() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            geom: ArrayGeometry::new(2, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 1, k: 16, n: 2 };
+        let (job, expect) = gemm_job(5, shape, 0xC1A);
+        let h = coord.submit_job(job.with_shards(ShardPolicy::Fixed(64))).unwrap();
+        assert_eq!(h.shard_count(), 2, "64 requested, 2 columns available");
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_jobs_reject_sharding() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            geom: ArrayGeometry::new(2, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 1, k: 16, n: 2 };
+        let sid = coord.open_session(shape, 8, vec![1; 32]).unwrap();
+        let job = Job::new(1, JobKind::SessionGemm { session: sid, a: vec![0; 16] })
+            .with_shards(ShardPolicy::Fixed(2));
+        let err = coord.submit_job(job).unwrap_err();
+        assert!(err.to_string().contains("session"), "{err}");
+        // Auto on a session job is rejected too (it would resolve > 1).
+        let job = Job::new(2, JobKind::SessionGemm { session: sid, a: vec![0; 16] })
+            .with_shards(ShardPolicy::Auto);
+        assert!(coord.submit_job(job).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn run_batch_records_real_queue_waits() {
+        // One worker and a burst of jobs induce real queuing; the legacy
+        // Metrics percentiles must reflect it (the seed recorded 0.0).
+        let mut coord = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            geom: ArrayGeometry::new(2, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 2, k: 16, n: 2 };
+        let jobs: Vec<Job> = (0..8).map(|i| gemm_job(i, shape, 0xAB + i).0).collect();
+        let (results, mut metrics) = coord.run_batch(jobs).unwrap();
+        assert!(results.iter().all(|r| r.error.is_none()));
+        assert!(
+            results.iter().all(|r| r.queue_us > 0.0),
+            "every result carries its measured queue wait"
+        );
+        assert!(
+            metrics.queue_wait_us.median().unwrap_or(0.0) > 0.0,
+            "queue-wait percentiles must be nonzero under induced queuing"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn wall_shares_weight_by_output_and_sum_exactly() {
+        // Ragged batch: a poison job contributed no output rows.
+        let shares = wall_shares(90.0, &[6, 0, 3]);
+        assert_eq!(shares[1], 0.0, "no output, no share");
+        assert!((shares[0] - 60.0).abs() < 1e-12);
+        assert!((shares[2] - 30.0).abs() < 1e-12);
+        assert_eq!(shares.iter().sum::<f64>(), 90.0, "shares sum exactly");
+        // Degenerate batch (everything failed): even split, exact sum.
+        let shares = wall_shares(10.0, &[0, 0, 0]);
+        assert_eq!(shares.iter().sum::<f64>(), 10.0);
+        assert!(shares.iter().all(|s| *s > 3.0));
+        // Irrational weights still sum exactly thanks to the remainder.
+        let shares = wall_shares(1.0, &[1, 1, 1]);
+        assert_eq!(shares.iter().sum::<f64>(), 1.0);
     }
 
     #[test]

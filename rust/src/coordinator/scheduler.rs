@@ -36,10 +36,12 @@
 //!     id,
 //!     output: vec![11],
 //!     stats: Default::default(),
+//!     queue_us: 0.0,
 //!     wall_us: 0.0,
 //!     worker: 0,
 //!     backend: None,
 //!     batch_size: 1,
+//!     shards: 1,
 //!     error: None,
 //! });
 //!
@@ -49,12 +51,29 @@
 
 use super::batcher::BatchKey;
 use super::{Job, JobResult};
+use crate::array::RunStats;
 use crate::backend::BackendClass;
+use crate::compiler::{merge_shard_outputs, GemmShape};
 use crate::metrics::ServingMetrics;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
+
+/// Linkage of a shard sub-ticket to the logical job it was scattered
+/// from (see [`Coordinator::submit_job`](super::Coordinator::submit_job)
+/// and [`ShardPolicy`](super::ShardPolicy)): sharded GEMMs enter the
+/// queue as `of` independent tickets that workers execute like any other
+/// job; the parent [`JobHandle`] gathers them back in shard-index order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// Caller-chosen id of the logical (parent) job.
+    pub parent: u64,
+    /// This shard's index within the scatter (0-based).
+    pub index: usize,
+    /// Total shards the parent was split into.
+    pub of: usize,
+}
 
 /// Queue ordering policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,9 +119,28 @@ struct HandleShared {
 /// [`Scheduler::submit`]. Handles resolve independently and in any order
 /// — out-of-order completion (priority scheduling, uneven batch sizes)
 /// is fully supported.
+///
+/// A handle is either a plain completion slot, or — for sharded
+/// submissions — a **gather barrier** over the shard sub-handles:
+/// [`wait`](Self::wait) blocks for every shard in shard-index
+/// (submission) order, merges the partial outputs back into the parent
+/// `m×n` matrix, rolls the shard [`RunStats`] up into one total, and
+/// propagates the first shard failure as the parent's error (tagged
+/// `shard i/K` so the operator can see which partition died).
 pub struct JobHandle {
     id: u64,
-    shared: Arc<HandleShared>,
+    inner: HandleInner,
+}
+
+enum HandleInner {
+    /// One queue ticket, one completion slot.
+    Single(Arc<HandleShared>),
+    /// Scatter–gather: `(first_column, shard_columns, handle)` per
+    /// shard, in shard-index order over the parent shape.
+    Gather {
+        shape: GemmShape,
+        parts: Vec<(usize, usize, JobHandle)>,
+    },
 }
 
 impl JobHandle {
@@ -111,25 +149,154 @@ impl JobHandle {
         self.id
     }
 
-    /// True once the result is available (non-blocking).
-    pub fn is_done(&self) -> bool {
-        self.shared.slot.lock().unwrap_or_else(|e| e.into_inner()).is_some()
-    }
-
-    /// Take the result if it is already available (non-blocking).
-    pub fn try_take(&self) -> Option<JobResult> {
-        self.shared.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
-    }
-
-    /// Block until the job completes and return its result.
-    pub fn wait(self) -> JobResult {
-        let mut slot = self.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
-        loop {
-            if let Some(r) = slot.take() {
-                return r;
-            }
-            slot = self.shared.done.wait(slot).unwrap_or_else(|e| e.into_inner());
+    /// The number of shard sub-jobs this handle gathers (1 for an
+    /// unsharded submission).
+    pub fn shard_count(&self) -> usize {
+        match &self.inner {
+            HandleInner::Single(_) => 1,
+            HandleInner::Gather { parts, .. } => parts.len(),
         }
+    }
+
+    /// Build the gather barrier over shard sub-handles (coordinator
+    /// scatter path). `parts` are `(first_column, shard_columns,
+    /// handle)` in shard-index order, tiling the parent shape's columns.
+    pub(crate) fn gather(
+        id: u64,
+        shape: GemmShape,
+        parts: Vec<(usize, usize, JobHandle)>,
+    ) -> JobHandle {
+        debug_assert!(!parts.is_empty(), "gather of zero shards");
+        JobHandle { id, inner: HandleInner::Gather { shape, parts } }
+    }
+
+    /// True once the result is available (non-blocking). A sharded
+    /// handle is done only when **every** shard has completed.
+    pub fn is_done(&self) -> bool {
+        match &self.inner {
+            HandleInner::Single(shared) => {
+                shared.slot.lock().unwrap_or_else(|e| e.into_inner()).is_some()
+            }
+            HandleInner::Gather { parts, .. } => parts.iter().all(|(_, _, h)| h.is_done()),
+        }
+    }
+
+    /// Take the result if it is already available (non-blocking). Like
+    /// the single-ticket case, a result is taken exactly once: the first
+    /// successful `try_take` consumes the shard results, and later calls
+    /// return `None`.
+    pub fn try_take(&self) -> Option<JobResult> {
+        match &self.inner {
+            HandleInner::Single(shared) => {
+                shared.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
+            }
+            HandleInner::Gather { shape, parts } => {
+                if !self.is_done() {
+                    return None;
+                }
+                let mut results = Vec::with_capacity(parts.len());
+                for (_, _, h) in parts {
+                    results.push(h.try_take()?);
+                }
+                let metas: Vec<(usize, usize)> =
+                    parts.iter().map(|(c, n, _)| (*c, *n)).collect();
+                Some(merge_shard_results(self.id, *shape, &metas, results))
+            }
+        }
+    }
+
+    /// Block until the job completes and return its result. For a
+    /// sharded handle this is the gather barrier: it waits for all
+    /// shards and returns the merged parent result.
+    pub fn wait(self) -> JobResult {
+        match self.inner {
+            HandleInner::Single(shared) => {
+                let mut slot = shared.slot.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if let Some(r) = slot.take() {
+                        return r;
+                    }
+                    slot = shared.done.wait(slot).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+            HandleInner::Gather { shape, parts } => {
+                let metas: Vec<(usize, usize)> =
+                    parts.iter().map(|(c, n, _)| (*c, *n)).collect();
+                let results: Vec<JobResult> =
+                    parts.into_iter().map(|(_, _, h)| h.wait()).collect();
+                merge_shard_results(self.id, shape, &metas, results)
+            }
+        }
+    }
+}
+
+/// Merge shard results into the parent [`JobResult`] (gather half of
+/// scatter–gather). Outputs reassemble at their column offsets; cycles
+/// and instruction counts roll up by summation; `queue_us` takes the
+/// maximum over shards, and `wall_us` is the **critical path**: shard
+/// wall shares are summed per worker region (shards that landed on the
+/// same region ran serially) and the largest per-region sum wins
+/// (distinct regions run concurrently). `worker` is the first shard's
+/// region and `batch_size` the largest batch any shard rode in. The
+/// first failed shard (by index) fails the parent with a `shard i/K`
+/// context prefix, and the merged output is withheld (partial results
+/// are not returned).
+fn merge_shard_results(
+    id: u64,
+    shape: GemmShape,
+    metas: &[(usize, usize)],
+    results: Vec<JobResult>,
+) -> JobResult {
+    let of = results.len();
+    let mut stats = RunStats::default();
+    let mut queue_us = 0.0f64;
+    let mut batch_size = 0usize;
+    let mut backend = results.first().and_then(|r| r.backend);
+    let worker = results.first().map(|r| r.worker).unwrap_or(usize::MAX);
+    // Per-region wall accumulation (tiny shard counts — linear scan).
+    let mut region_walls: Vec<(usize, f64)> = Vec::new();
+    let mut error = None;
+    for (idx, r) in results.iter().enumerate() {
+        stats.merge(&r.stats);
+        queue_us = queue_us.max(r.queue_us);
+        match region_walls.iter_mut().find(|(w, _)| *w == r.worker) {
+            Some((_, sum)) => *sum += r.wall_us,
+            None => region_walls.push((r.worker, r.wall_us)),
+        }
+        batch_size = batch_size.max(r.batch_size);
+        if r.backend != backend {
+            // Shards landed on different region classes (legal for
+            // untagged jobs in a mixed pool): no single class applies.
+            backend = None;
+        }
+        if error.is_none() {
+            if let Some(e) = &r.error {
+                error = Some(format!("shard {idx}/{of}: {e}"));
+            }
+        }
+    }
+    let wall_us = region_walls.iter().map(|(_, w)| *w).fold(0.0f64, f64::max);
+    let output = if error.is_none() {
+        let parts: Vec<(usize, usize, Vec<i64>)> = metas
+            .iter()
+            .zip(results)
+            .map(|(&(col0, cols), r)| (col0, cols, r.output))
+            .collect();
+        merge_shard_outputs(shape, &parts)
+    } else {
+        Vec::new()
+    };
+    JobResult {
+        id,
+        output,
+        stats,
+        backend,
+        queue_us,
+        wall_us,
+        worker,
+        batch_size,
+        shards: of,
+        error,
     }
 }
 
@@ -146,7 +313,7 @@ impl Completion {
     fn pair(id: u64) -> (JobHandle, Completion) {
         let shared = Arc::new(HandleShared { slot: Mutex::new(None), done: Condvar::new() });
         (
-            JobHandle { id, shared: Arc::clone(&shared) },
+            JobHandle { id, inner: HandleInner::Single(Arc::clone(&shared)) },
             Completion { id, shared, delivered: false },
         )
     }
@@ -171,10 +338,12 @@ impl Drop for Completion {
                 id: self.id,
                 output: Vec::new(),
                 stats: Default::default(),
+                queue_us: 0.0,
                 wall_us: 0.0,
                 worker: usize::MAX,
                 backend: None,
                 batch_size: 0,
+                shards: 1,
                 error: Some("job abandoned: completion dropped before a result was delivered".into()),
             };
             self.deliver(abandoned);
@@ -197,6 +366,12 @@ pub struct Ticket {
     pub enqueued_at: Instant,
     /// Micro-batching coalescing key derived from the job payload.
     pub key: BatchKey,
+    /// Set when this ticket is one shard of a scattered logical job:
+    /// the parent id, this shard's index, and the total shard count.
+    /// Workers treat shard tickets like any other job (class tags are
+    /// still respected); the linkage exists for the gather barrier and
+    /// for observability.
+    pub shard: Option<ShardInfo>,
     completion: Completion,
 }
 
@@ -290,6 +465,19 @@ impl Scheduler {
     /// [`SchedulerConfig::backpressure`]; after [`close`](Self::close) it
     /// always fails.
     pub fn submit_with_priority(&self, job: Job, priority: u8) -> Result<JobHandle> {
+        self.submit_shard_with_priority(job, priority, None)
+    }
+
+    /// [`submit_with_priority`](Self::submit_with_priority) for one
+    /// shard of a scattered logical job: the ticket carries the parent
+    /// linkage so workers and metrics can attribute it (coordinator
+    /// scatter path).
+    pub(crate) fn submit_shard_with_priority(
+        &self,
+        job: Job,
+        priority: u8,
+        shard: Option<ShardInfo>,
+    ) -> Result<JobHandle> {
         let key = BatchKey::of(&job.kind);
         let mut st = self.lock();
         loop {
@@ -315,7 +503,8 @@ impl Scheduler {
         let seq = st.next_seq;
         st.next_seq += 1;
         st.arrivals += 1;
-        let ticket = Ticket { job, priority, seq, enqueued_at: Instant::now(), key, completion };
+        let ticket =
+            Ticket { job, priority, seq, enqueued_at: Instant::now(), key, shard, completion };
         match self.inner.cfg.policy {
             QueuePolicy::Fifo => st.items.push_back(ticket),
             QueuePolicy::Priority => {
@@ -385,16 +574,24 @@ impl Scheduler {
 
     /// Remove and return the first queued ticket whose coalescing key
     /// matches and that a worker of `class` may run, without blocking.
+    ///
+    /// `exclude_parents` keeps scatter–gather honest: shards whose
+    /// parent job already has a shard in the batch being built are
+    /// skipped — coalescing siblings would serialize the whole scatter
+    /// on one region, defeating the point of sharding. Shards of
+    /// *different* parents (and plain same-key jobs) still coalesce.
     pub fn try_pop_matching(
         &self,
         key: &BatchKey,
         class: Option<BackendClass>,
+        exclude_parents: &[u64],
     ) -> Option<Ticket> {
         let mut st = self.lock();
-        let idx = st
-            .items
-            .iter()
-            .position(|t| &t.key == key && t.eligible_for(class))?;
+        let idx = st.items.iter().position(|t| {
+            &t.key == key
+                && t.eligible_for(class)
+                && !t.shard.is_some_and(|s| exclude_parents.contains(&s.parent))
+        })?;
         let t = st.items.remove(idx).expect("position is in range");
         drop(st);
         self.inner.not_full.notify_all();
@@ -462,10 +659,12 @@ mod tests {
             id,
             output: vec![id as i64],
             stats: Default::default(),
+            queue_us: 0.0,
             wall_us: 1.0,
             worker: 0,
             backend: None,
             batch_size: 1,
+            shards: 1,
             error: None,
         }
     }
@@ -575,6 +774,109 @@ mod tests {
         s.close();
         assert!(s.pop_blocking_for(Some(comefa)).is_none());
         assert!(s.pop_blocking_for(Some(BackendClass::Overlay)).is_some());
+    }
+
+    #[test]
+    fn shard_tickets_carry_parent_linkage_and_gather_merges() {
+        let s = sched(SchedulerConfig::default());
+        let shape = GemmShape { m: 1, k: 2, n: 2 };
+        // Two shards of logical job 7, one output column each.
+        let mut parts = Vec::new();
+        for idx in 0..2usize {
+            let h = s
+                .submit_shard_with_priority(
+                    tiny_job(7),
+                    0,
+                    Some(ShardInfo { parent: 7, index: idx, of: 2 }),
+                )
+                .unwrap();
+            parts.push((idx, 1usize, h));
+        }
+        let parent = JobHandle::gather(7, shape, parts);
+        assert_eq!(parent.shard_count(), 2);
+        assert!(!parent.is_done());
+        assert!(parent.try_take().is_none(), "gather not complete yet");
+        for want_idx in 0..2usize {
+            let t = s.pop_blocking().unwrap();
+            let info = t.shard.expect("shard ticket carries linkage");
+            assert_eq!((info.parent, info.index, info.of), (7, want_idx, 2));
+            let mut r = ok_result(7);
+            r.output = vec![10 + want_idx as i64]; // shard's single column
+            r.stats.cycles = 100;
+            r.wall_us = 1.0 + want_idx as f64;
+            r.worker = want_idx; // distinct regions: shards ran concurrently
+            t.complete(r);
+        }
+        assert!(parent.is_done());
+        let merged = parent.wait();
+        assert_eq!(merged.id, 7);
+        assert!(merged.error.is_none(), "{:?}", merged.error);
+        assert_eq!(merged.output, vec![10, 11], "columns reassembled in order");
+        assert_eq!(merged.stats.cycles, 200, "shard cycles roll up");
+        assert_eq!(merged.shards, 2);
+        assert_eq!(merged.wall_us, 2.0, "critical path = slowest region");
+    }
+
+    #[test]
+    fn gather_wall_sums_shards_that_shared_a_region() {
+        // Two shards executed serially on ONE region: the parent's wall
+        // must be their sum, not the max — oversubscribed scatters
+        // (K > regions) may not report as if they ran concurrently.
+        let s = sched(SchedulerConfig::default());
+        let shape = GemmShape { m: 1, k: 2, n: 2 };
+        let mut parts = Vec::new();
+        for idx in 0..2usize {
+            let h = s
+                .submit_shard_with_priority(
+                    tiny_job(8),
+                    0,
+                    Some(ShardInfo { parent: 8, index: idx, of: 2 }),
+                )
+                .unwrap();
+            parts.push((idx, 1usize, h));
+        }
+        let parent = JobHandle::gather(8, shape, parts);
+        for idx in 0..2usize {
+            let t = s.pop_blocking().unwrap();
+            let mut r = ok_result(8);
+            r.output = vec![idx as i64];
+            r.wall_us = 1.5;
+            r.worker = 0; // same region both times
+            t.complete(r);
+        }
+        let merged = parent.wait();
+        assert!(merged.error.is_none(), "{:?}", merged.error);
+        assert_eq!(merged.wall_us, 3.0, "serialized shards sum their walls");
+    }
+
+    #[test]
+    fn one_failed_shard_fails_the_parent_with_context() {
+        let s = sched(SchedulerConfig::default());
+        let shape = GemmShape { m: 1, k: 2, n: 2 };
+        let h0 = s
+            .submit_shard_with_priority(
+                tiny_job(9),
+                0,
+                Some(ShardInfo { parent: 9, index: 0, of: 2 }),
+            )
+            .unwrap();
+        let h1 = s
+            .submit_shard_with_priority(
+                tiny_job(9),
+                0,
+                Some(ShardInfo { parent: 9, index: 1, of: 2 }),
+            )
+            .unwrap();
+        let parent = JobHandle::gather(9, shape, vec![(0, 1, h0), (1, 1, h1)]);
+        let t0 = s.pop_blocking().unwrap();
+        let t1 = s.pop_blocking().unwrap();
+        t0.complete(ok_result(9));
+        drop(t1); // shard 1 abandoned => delivered as an error result
+        let merged = parent.wait();
+        let err = merged.error.as_deref().unwrap_or("");
+        assert!(err.contains("shard 1/2"), "missing shard context: {err}");
+        assert!(err.contains("abandoned"), "missing cause: {err}");
+        assert!(merged.output.is_empty(), "no partial output on failure");
     }
 
     #[test]

@@ -85,7 +85,8 @@ pub mod prelude {
     pub use crate::compiler::{GemmPlan, GemmShape, MacProgram, PimCompiler};
     pub use crate::coordinator::{
         Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobHandle, JobKind,
-        JobResult, ModelSession, QueuePolicy, RegionSpec, SchedulerConfig, SessionId,
+        JobResult, ModelSession, QueuePolicy, RegionSpec, SchedulerConfig, SessionId, ShardInfo,
+        ShardPolicy,
     };
     pub use crate::custom::{CustomRegion, CustomTile};
     pub use crate::device::{Device, DeviceFamily, DEVICES};

@@ -29,6 +29,9 @@ pub struct Metrics {
     pub latency_us: Percentiles,
     /// Per-job wall latency stats (µs).
     pub latency_stats: OnlineStats,
+    /// Per-job queue wait (µs) — time between submission and a worker
+    /// picking the job up.
+    pub queue_wait_us: Percentiles,
     /// Per-job PIM-time (µs at the modeled clock).
     pub pim_time_us: OnlineStats,
     started: Option<Instant>,
@@ -53,13 +56,18 @@ impl Metrics {
         }
     }
 
-    /// Record one finished job.
-    pub fn record_job(&mut self, wall_us: f64, pim_us: f64, macs: u64, cycles: u64) {
+    /// Record one finished job. `queue_us` is the job's real measured
+    /// queue wait (carried on
+    /// [`JobResult::queue_us`](crate::coordinator::JobResult::queue_us)),
+    /// so the queue-wait percentiles reflect induced queuing instead of
+    /// a constant zero.
+    pub fn record_job(&mut self, wall_us: f64, queue_us: f64, pim_us: f64, macs: u64, cycles: u64) {
         self.jobs += 1;
         self.macs += macs;
         self.pim_cycles += cycles;
         self.latency_us.push(wall_us);
         self.latency_stats.push(wall_us);
+        self.queue_wait_us.push(queue_us);
         self.pim_time_us.push(pim_us);
     }
 
@@ -107,8 +115,9 @@ impl Metrics {
     pub fn summary(&mut self) -> String {
         let p50 = self.latency_us.median().unwrap_or(0.0);
         let p99 = self.latency_us.p99().unwrap_or(0.0);
+        let q50 = self.queue_wait_us.median().unwrap_or(0.0);
         format!(
-            "jobs={} wall={:.2}s thpt={:.1} jobs/s macs/s={} p50={:.0}us p99={:.0}us",
+            "jobs={} wall={:.2}s thpt={:.1} jobs/s macs/s={} p50={:.0}us p99={:.0}us qwait p50={q50:.0}us",
             self.jobs,
             self.elapsed_s(),
             self.jobs_per_sec(),
@@ -232,6 +241,12 @@ struct ServingInner {
     batch_max: u64,
     queue_depth: OnlineStats,
     depth_hwm: u64,
+    /// Shards-per-job distribution, recorded once per *logical*
+    /// submission (1 for unsharded jobs).
+    shard_count: OnlineStats,
+    /// Logical jobs that were scattered into >= 2 shards.
+    sharded_jobs: u64,
+    max_shards: u64,
     window_start: Option<Instant>,
     /// Per-backend-class breakdown, keyed by the completing worker's
     /// class (small fixed set — linear scan beats hashing here).
@@ -288,6 +303,20 @@ impl ServingMetrics {
         g.window_start.get_or_insert_with(Instant::now);
         g.queue_depth.push(depth as f64);
         g.depth_hwm = g.depth_hwm.max(depth as u64);
+    }
+
+    /// Record the shard count of one logical job submission (1 for an
+    /// unsharded job). Feeds the shards-per-job track of the snapshot,
+    /// which is how a deployment observes whether its scatter policy is
+    /// actually spreading work across regions.
+    pub fn record_shards(&self, shards: usize) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.shard_count.push(shards as f64);
+        g.max_shards = g.max_shards.max(shards as u64);
+        if shards >= 2 {
+            g.sharded_jobs += 1;
+        }
     }
 
     /// Record one dispatched micro-batch and its array-invocation wall
@@ -383,6 +412,9 @@ impl ServingMetrics {
             max_batch: g.batch_max,
             mean_queue_depth: g.queue_depth.mean(),
             depth_hwm: g.depth_hwm,
+            mean_shards: g.shard_count.mean(),
+            max_shards: g.max_shards,
+            sharded_jobs: g.sharded_jobs,
             per_backend,
         }
     }
@@ -448,6 +480,13 @@ pub struct MetricsSnapshot {
     pub mean_queue_depth: f64,
     /// Queue-depth high-water mark.
     pub depth_hwm: u64,
+    /// Mean shards per logical job submission (1.0 when nothing was
+    /// sharded; 0.0 when no submission went through a coordinator).
+    pub mean_shards: f64,
+    /// Largest shard fan-out of any logical job.
+    pub max_shards: u64,
+    /// Logical jobs scattered into >= 2 shards.
+    pub sharded_jobs: u64,
     /// Per-backend-class breakdown (sorted by class name; empty when no
     /// job carried a backend tag).
     pub per_backend: Vec<BackendSnapshot>,
@@ -496,6 +535,12 @@ impl MetricsSnapshot {
             self.exec.render(),
             self.total.render(),
         );
+        if self.sharded_jobs > 0 {
+            out.push_str(&format!(
+                "\nsharding    {} jobs scattered, mean {:.2} shards/job, max fan-out {}",
+                self.sharded_jobs, self.mean_shards, self.max_shards,
+            ));
+        }
         for b in &self.per_backend {
             out.push_str(&format!(
                 "\nbackend {:<10} jobs={} errors={} thpt={:.1} jobs/s \
@@ -523,7 +568,7 @@ mod tests {
         let mut m = Metrics::new();
         m.start();
         for i in 0..10 {
-            m.record_job(100.0 + i as f64, 5.0, 1000, 50_000);
+            m.record_job(100.0 + i as f64, 2.0 + i as f64, 5.0, 1000, 50_000);
         }
         std::thread::sleep(std::time::Duration::from_millis(5));
         m.stop();
@@ -532,8 +577,10 @@ mod tests {
         assert!(m.elapsed_s() >= 0.005);
         assert!(m.jobs_per_sec() > 0.0);
         assert!(m.sim_cycles_per_sec() > 0.0);
+        assert!(m.queue_wait_us.median().unwrap_or(0.0) > 0.0, "queue waits recorded");
         let s = m.summary();
         assert!(s.contains("jobs=10"), "{s}");
+        assert!(s.contains("qwait"), "{s}");
     }
 
     #[test]
@@ -607,6 +654,24 @@ mod tests {
         let text = s.render();
         assert!(text.contains("backend CoMeFa-A"), "{text}");
         assert!(text.contains("backend overlay"), "{text}");
+    }
+
+    #[test]
+    fn shards_per_job_track() {
+        let m = ServingMetrics::new();
+        m.record_shards(1);
+        m.record_shards(4);
+        m.record_shards(2);
+        let s = m.snapshot();
+        assert_eq!(s.sharded_jobs, 2, "only fan-outs >= 2 count as sharded");
+        assert_eq!(s.max_shards, 4);
+        assert!((s.mean_shards - 7.0 / 3.0).abs() < 1e-9);
+        let text = s.render();
+        assert!(text.contains("sharding"), "{text}");
+        // Unsharded-only windows keep the render line out.
+        let quiet = ServingMetrics::new();
+        quiet.record_shards(1);
+        assert!(!quiet.snapshot().render().contains("sharding"));
     }
 
     #[test]

@@ -121,6 +121,97 @@ fn batcher_only_coalesces_matching_shapes() {
     assert_eq!(second, vec![1]);
 }
 
+/// Several submitters blocked on a full queue under `Priority` must all
+/// be re-admitted as slots free (no lost wakeups), and once admitted the
+/// queue must still dispatch in priority order.
+#[test]
+fn blocked_submitters_under_priority_all_admit_in_order() {
+    let shape = GemmShape { m: 1, k: 4, n: 1 };
+    let sched = bare_scheduler(SchedulerConfig {
+        capacity: 2,
+        policy: QueuePolicy::Priority,
+        backpressure: Backpressure::Block,
+        ..Default::default()
+    });
+    // Fill the queue, then park 6 submitters with distinct priorities.
+    sched.submit_with_priority(tiny_job(100, shape, 0).0, 0).unwrap();
+    sched.submit_with_priority(tiny_job(101, shape, 1).0, 0).unwrap();
+    let mut submitters = Vec::new();
+    for p in 1..=6u8 {
+        let s = sched.clone();
+        submitters.push(std::thread::spawn(move || {
+            s.submit_with_priority(tiny_job(p as u64, shape, p as u64).0, p).map(|h| h.id())
+        }));
+    }
+    // Give the submitters time to park, then free exactly enough slots
+    // one by one: every wakeup must admit someone (no lost wakeups).
+    std::thread::sleep(Duration::from_millis(30));
+    let mut freed = Vec::new();
+    for _ in 0..6 {
+        freed.push(sched.pop_blocking().expect("queue holds tickets"));
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for t in submitters {
+        t.join().expect("submitter must not deadlock").unwrap();
+    }
+    // All 6 parked submissions are now queued (6 popped, 2+6 submitted).
+    assert_eq!(sched.depth(), 2);
+    // Drain everything still queued: admitted tickets must come out in
+    // priority order (descending), regardless of admission interleaving.
+    let mut last = u8::MAX;
+    while sched.depth() > 0 {
+        let t = sched.pop_blocking().expect("non-empty queue yields a ticket");
+        assert!(t.priority <= last, "priority inversion: {} after {last}", t.priority);
+        last = t.priority;
+    }
+    drop(freed);
+}
+
+/// A stream of arrivals the worker's class can never take must not keep
+/// the batcher spinning past its wait budget: `max_wait` bounds the
+/// collection even while the arrival clock keeps moving.
+#[test]
+fn batcher_max_wait_holds_under_nonmatching_arrival_stream() {
+    let comefa = BackendClass::Custom(CustomDesign::CoMeFaA);
+    let shape = GemmShape { m: 1, k: 4, n: 1 };
+    let sched = bare_scheduler(SchedulerConfig::default());
+    // Head-of-line ticket the overlay worker can take.
+    let mut head = tiny_job(0, shape, 0).0;
+    head.backend = Some(BackendClass::Overlay);
+    sched.submit(head).unwrap();
+    // Background stream of CoMeFa-only arrivals, each moving the
+    // arrival clock the batcher sleeps on.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let feeder = {
+        let sched = sched.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut id = 1u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let mut j = tiny_job(id, shape, id).0;
+                j.backend = Some(comefa);
+                if sched.submit(j).is_err() {
+                    break;
+                }
+                id += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+    let batcher = Batcher::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(40) });
+    let t0 = Instant::now();
+    let batch = batcher.collect_for(&sched, Some(BackendClass::Overlay)).unwrap();
+    let waited = t0.elapsed();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(batch.len(), 1, "only the overlay head was ever eligible");
+    assert_eq!(batch[0].job.id, 0);
+    assert!(
+        waited < Duration::from_millis(400),
+        "batcher spun far past its 40ms budget: {waited:?}"
+    );
+    feeder.join().unwrap();
+}
+
 // ------------------------------------------- out-of-order completion
 
 #[test]
@@ -302,6 +393,53 @@ fn batched_session_serving_charges_fewer_cycles_than_seed_path() {
         batched_cycles < seed_cycles,
         "micro-batching must pack ragged rounds: batched {batched_cycles} !< seed {seed_cycles}"
     );
+}
+
+/// Wall-time attribution invariant: per-job `wall_us` shares — weighted
+/// by output length, so a poison job in a ragged batch gets no share —
+/// sum to the total batch execution time recorded in the `exec` stage.
+#[test]
+fn ragged_batch_wall_shares_sum_to_batch_wall_time() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) },
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 16, n: 2 };
+    let mut handles = Vec::new();
+    for i in 0..3u64 {
+        handles.push(coord.submit_job(tiny_job(i, shape, 0xEA7 + i).0).unwrap());
+    }
+    // Poison job: same batch key (same declared shape/width), but the
+    // operands do not match — it contributes no output rows.
+    handles.push(
+        coord
+            .submit_job(Job::new(
+                3,
+                JobKind::Gemm { shape, width: 8, a: vec![0; 2], b: vec![0; 32] },
+            ))
+            .unwrap(),
+    );
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    assert!(results[3].error.is_some(), "poison job must fail");
+    for r in &results[..3] {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    // If the poison job shared a batch with real work, its weighted
+    // share must be zero.
+    if results[3].batch_size > 1 {
+        assert_eq!(results[3].wall_us, 0.0, "no output rows, no wall share");
+    }
+    let snap = coord.metrics_snapshot();
+    let batch_wall_total = snap.exec.mean * snap.exec.count as f64;
+    let share_sum: f64 = results.iter().map(|r| r.wall_us).sum();
+    assert!(
+        (share_sum - batch_wall_total).abs() <= 1e-6 * batch_wall_total.max(1.0),
+        "shares {share_sum} != batch wall total {batch_wall_total}"
+    );
+    coord.shutdown();
 }
 
 // ------------------------------------------- heterogeneous routing
