@@ -28,6 +28,15 @@ cargo build --release --examples
 step "doctests: cargo test --doc -q"
 cargo test --doc -q
 
+# Perf trajectory per PR: run the serving example headless and persist
+# its headline numbers (p50/p95 queue + end-to-end latency, throughput,
+# retry/shed counts) so regressions show up in review as a JSON diff.
+step "bench smoke: examples/serve headless -> BENCH_serve.json"
+SERVE_BENCH_JSON=BENCH_serve.json cargo run --release --example serve -- 48 2 picaso >/dev/null
+test -s BENCH_serve.json || { echo "BENCH_serve.json missing or empty"; exit 1; }
+echo "BENCH_serve.json:"
+cat BENCH_serve.json
+
 step "compile benches + examples"
 cargo build --release --benches --examples
 

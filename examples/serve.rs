@@ -22,14 +22,25 @@
 //! per-backend throughput/latency comparison (the paper's Fig 6 /
 //! Table V numbers under live load).
 //!
+//! A final **resilience phase** poisons one region with a
+//! [`FaultInjector`] and serves sharded (ad-hoc and session-backed)
+//! jobs through it: failure-domain retry must absorb every injected
+//! fault bit-exactly, and a zero-deadline job must shed instead of
+//! executing.
+//!
 //! ```bash
 //! cargo run --release --example serve -- [jobs-per-phase] [workers] [backend]
 //! ```
+//!
+//! Set `SERVE_BENCH_JSON=<path>` to also write the headline numbers
+//! (p50/p95 queue + end-to-end latency, throughput, retry/shed counts)
+//! as a JSON object — the per-PR perf trajectory tracked by `ci.sh`'s
+//! bench-smoke step.
 
 use picaso::arch::CustomDesign;
 use picaso::compiler::{gemm_ref, GemmShape};
 use picaso::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, RegionSpec, SessionId,
+    BackendHook, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, RegionSpec, SessionId,
 };
 use picaso::metrics::MetricsSnapshot;
 use picaso::prelude::*;
@@ -169,7 +180,7 @@ fn main() -> picaso::Result<()> {
         geom,
         kind,
         regions: regions.clone(),
-        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_micros(200) },
         ..Default::default()
     })?);
     let sid = coord.open_session(shape, 8, weights.as_ref().clone())?;
@@ -263,7 +274,7 @@ fn main() -> picaso::Result<()> {
         workers,
         geom,
         kind,
-        regions,
+        regions: regions.clone(),
         batch: BatchPolicy::disabled(),
         ..Default::default()
     })?;
@@ -300,6 +311,105 @@ fn main() -> picaso::Result<()> {
         sharded.shards,
     );
     coord.shutdown();
+
+    // --------------------------------------- phase 4: resilience drill
+    // Poison one region outright (every execute on it fails) and serve
+    // sharded jobs — ad-hoc and session-backed — through the degraded
+    // pool: failure-domain retry re-queues each failing shard onto a
+    // healthy region, so every result stays bit-exact and the only
+    // visible symptom is the retry counter. A zero-deadline job is shed
+    // at pop time instead of wasting an array invocation.
+    // The chaos pool mirrors the pool under test (mixed mode keeps its
+    // overlay + CoMeFa-A regions); `regions` being non-empty overrides
+    // `workers`, and a homogeneous pool gets at least two regions so
+    // retry always has a healthy domain.
+    let chaos = Arc::new(Coordinator::new(CoordinatorConfig {
+        workers: workers.max(2), // retry needs at least one healthy domain
+        geom,
+        kind,
+        regions,
+        batch: BatchPolicy::disabled(),
+        backend_hook: Some(BackendHook(Arc::new(|widx, inner| {
+            if widx == 0 {
+                Box::new(FaultInjector::new(inner, FaultPlan::Poisoned))
+            } else {
+                inner
+            }
+        }))),
+        ..Default::default()
+    })?);
+    chaos.serving_metrics().reset_window();
+    let chaos_shape = GemmShape { m: 2, k: 64, n: 2 * workers.max(2) };
+    let mut cw = vec![0i64; chaos_shape.k * chaos_shape.n];
+    rng.fill_signed(&mut cw, 8);
+    let chaos_sid = chaos.open_session(chaos_shape, 8, cw.clone())?;
+    let chaos_jobs = 12usize;
+    let mut chaos_bad = 0usize;
+    for i in 0..chaos_jobs {
+        let mut a = vec![0i64; chaos_shape.m * chaos_shape.k];
+        rng.fill_signed(&mut a, 8);
+        let expect = gemm_ref(chaos_shape, &a, &cw);
+        // Alternate ad-hoc and session-backed sharded jobs.
+        let kind = if i % 2 == 0 {
+            JobKind::Gemm { shape: chaos_shape, width: 8, a, b: cw.clone() }
+        } else {
+            JobKind::SessionGemm { session: chaos_sid, a }
+        };
+        let r = chaos
+            .submit_job(Job::new(i as u64, kind).with_shards(ShardPolicy::Auto))?
+            .wait();
+        if r.error.is_some() || r.output != expect {
+            chaos_bad += 1;
+        }
+    }
+    // Deadline shedding: a job that expired in the queue is dropped at
+    // pop time with a shed result, not executed.
+    let shed_r = chaos
+        .submit_job(
+            Job::new(999, JobKind::SessionGemm { session: chaos_sid, a: vec![0; chaos_shape.m * chaos_shape.k] })
+                .with_deadline_us(0.0),
+        )?
+        .wait();
+    assert!(shed_r.shed, "zero-deadline job must shed, got {:?}", shed_r.error);
+    let chaos_snap = chaos.metrics_snapshot();
+    if let Ok(c) = Arc::try_unwrap(chaos) {
+        c.shutdown();
+    }
+    assert_eq!(chaos_bad, 0, "retry must absorb the poisoned region bit-exactly");
+    println!(
+        "\n--- resilience: region 0 poisoned, {chaos_jobs} sharded jobs (ad-hoc + session) ---"
+    );
+    println!(
+        "  all outputs == gemm_ref; retries absorbed: {}, deadline sheds: {}",
+        chaos_snap.retries, chaos_snap.sheds,
+    );
+
+    // ------------------------------------------------ bench JSON (CI)
+    if let Ok(path) = std::env::var("SERVE_BENCH_JSON") {
+        if !path.is_empty() {
+            let json = format!(
+                "{{\n  \"jobs_per_phase\": {},\n  \"workers\": {},\n  \"backend\": \"{}\",\n  \
+                 \"jobs_per_sec\": {:.3},\n  \"speedup_vs_seed\": {:.3},\n  \
+                 \"queue_p50_us\": {:.3},\n  \"queue_p95_us\": {:.3},\n  \
+                 \"wall_p50_us\": {:.3},\n  \"wall_p95_us\": {:.3},\n  \
+                 \"pim_cycles_per_job\": {},\n  \"retries\": {},\n  \"sheds\": {}\n}}\n",
+                jobs,
+                workers,
+                backend_name,
+                batched.jobs_per_sec(),
+                speedup,
+                batched.queue_wait.p50,
+                batched.queue_wait.p95,
+                batched.total.p50,
+                batched.total.p95,
+                if batched.jobs > 0 { batched.pim_cycles / batched.jobs } else { 0 },
+                chaos_snap.retries,
+                chaos_snap.sheds,
+            );
+            std::fs::write(&path, json)?;
+            println!("\nwrote bench snapshot to {path}");
+        }
+    }
 
     println!("\nserve OK");
     Ok(())

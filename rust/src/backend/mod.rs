@@ -115,6 +115,91 @@ pub trait PimBackend {
     }
 }
 
+/// Failure schedule of a [`FaultInjector`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPlan {
+    /// Every `execute` fails — a dead region (permanent fault domain).
+    Poisoned,
+    /// Every `n`th `execute` fails (1-based: `EveryNth(3)` fails calls
+    /// 3, 6, 9, …; `EveryNth(1)` behaves like [`FaultPlan::Poisoned`]).
+    EveryNth(u64),
+}
+
+/// Fault-injection wrapper for resilience testing and chaos drills: a
+/// backend whose `execute` fails on the injected [`FaultPlan`] schedule
+/// while staging, geometry and result read-back pass through untouched.
+/// Injected failures are *transient* from the serving layer's point of
+/// view — exactly the class of error the coordinator's failure-domain
+/// retry re-queues onto a different region — so wrapping one region of
+/// a pool (via
+/// [`CoordinatorConfig::backend_hook`](crate::coordinator::CoordinatorConfig::backend_hook))
+/// exercises the full retry path end to end.
+pub struct FaultInjector {
+    inner: Box<dyn PimBackend + Send>,
+    plan: FaultPlan,
+    executes: u64,
+    injected: u64,
+}
+
+impl FaultInjector {
+    /// Wrap `inner` with the given failure schedule.
+    pub fn new(inner: Box<dyn PimBackend + Send>, plan: FaultPlan) -> Self {
+        Self { inner, plan, executes: 0, injected: 0 }
+    }
+
+    /// Total `execute` calls observed (failed and passed).
+    pub fn executes(&self) -> u64 {
+        self.executes
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+impl PimBackend for FaultInjector {
+    fn arch(&self) -> ArchKind {
+        self.inner.arch()
+    }
+
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn row_lanes(&self) -> usize {
+        self.inner.row_lanes()
+    }
+
+    fn set_buffer(&mut self, buf: BufId, data: Vec<i64>) {
+        self.inner.set_buffer(buf, data);
+    }
+
+    fn buffer(&self, buf: BufId) -> Option<&[i64]> {
+        self.inner.buffer(buf)
+    }
+
+    fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {
+        self.executes += 1;
+        let fail = match self.plan {
+            FaultPlan::Poisoned => true,
+            FaultPlan::EveryNth(n) => n > 0 && self.executes % n == 0,
+        };
+        if fail {
+            self.injected += 1;
+            return Err(crate::Error::Runtime(format!(
+                "injected fault ({:?}, execute #{})",
+                self.plan, self.executes
+            )));
+        }
+        self.inner.execute(mc)
+    }
+
+    fn row_result(&self, row: usize, base: RfAddr, width: u32) -> i64 {
+        self.inner.row_result(row, base, width)
+    }
+}
+
 /// Build the execution backend for a design: the cycle-accurate
 /// [`PimArray`] for overlay kinds (honouring `booth_skip`), a
 /// [`CustomRegion`] for custom tile kinds (which have no Booth datapath,
@@ -155,6 +240,37 @@ mod tests {
         assert_eq!(BackendClass::Overlay.name(), "overlay");
         assert_eq!(BackendClass::Custom(CustomDesign::CoMeFaA).name(), "CoMeFa-A");
         assert_eq!(format!("{}", BackendClass::Custom(CustomDesign::AMod)), "A-Mod");
+    }
+
+    #[test]
+    fn fault_injector_follows_its_schedule() {
+        use crate::compiler::MacProgram;
+        let geom = ArrayGeometry::new(1, 1);
+        let mc = MacProgram::elementwise_add(8);
+        // Poisoned: every execute fails; everything else passes through.
+        let mut poisoned =
+            FaultInjector::new(make_backend(ArchKind::PICASO_F, geom, false), FaultPlan::Poisoned);
+        assert_eq!(poisoned.class(), BackendClass::Overlay);
+        assert_eq!((poisoned.rows(), poisoned.row_lanes()), (1, 16));
+        poisoned.set_buffer(crate::compiler::BUF_A, vec![1; 16]);
+        poisoned.set_buffer(crate::compiler::BUF_B, vec![2; 16]);
+        for i in 1..=3u64 {
+            let err = poisoned.execute(&mc).unwrap_err();
+            assert!(err.to_string().contains("injected fault"), "{err}");
+            assert_eq!(poisoned.injected(), i);
+        }
+        // EveryNth(2): odd executes pass, even ones fail.
+        let mut flaky = FaultInjector::new(
+            make_backend(ArchKind::PICASO_F, geom, false),
+            FaultPlan::EveryNth(2),
+        );
+        flaky.set_buffer(crate::compiler::BUF_A, vec![1; 16]);
+        flaky.set_buffer(crate::compiler::BUF_B, vec![2; 16]);
+        assert!(flaky.execute(&mc).is_ok());
+        assert!(flaky.execute(&mc).is_err());
+        assert!(flaky.execute(&mc).is_ok());
+        assert_eq!(flaky.executes(), 3);
+        assert_eq!(flaky.injected(), 1);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::backend::{make_backend, BackendClass};
 use crate::compiler::{gemm_ref, GemmShape};
 use crate::coordinator::{
     Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, QueuePolicy,
-    RegionSpec, SchedulerConfig, ShardPolicy,
+    RegionSpec, RetryPolicy, SchedulerConfig, ShardPolicy,
 };
 use crate::device::Device;
 use crate::report::paper;
@@ -101,11 +101,18 @@ system:
          [--m=4 --k=64 --n=8]            served GEMM shape
          [--shards=1|<k>|auto]           scatter each GEMM into k shards
                                          across regions (auto = one per
-                                         compatible region; implies
-                                         per-job weights)
+                                         compatible region; sessions
+                                         shard via sliced staging tables)
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
+         [--adaptive]                    scale flush size/wait from the
+                                         live queue-depth signal instead
+                                         of the fixed thresholds
          [--capacity=256]                submission queue bound
          [--policy=fifo|priority] [--backpressure=block|reject]
+         [--max-attempts=3]              failure-domain retry budget per
+                                         ticket (1 = fail fast)
+         [--deadline-us=0]               shed jobs still queued past this
+                                         deadline (0 = never shed)
          [--no-session]                  per-job weights (seed behaviour)
          [--device=U55]                  device for per-backend cycles→ns
   info   device database summary
@@ -266,11 +273,11 @@ fn cmd_serve(args: &Args) -> Result<String> {
     };
     let device = parse_device(args)?;
     let shard_policy = parse_shards(args)?;
-    let sharded = shard_policy != ShardPolicy::None;
-    // Sharding slices each job's weight operand per shard, which is
-    // incompatible with session-pinned whole weights: sharded runs use
-    // the per-job-weights path.
-    let use_session = !args.flag("no-session") && !sharded;
+    // Sharding now composes with sessions: shard tickets slice the
+    // pinned staging table per partition slot on the worker.
+    let use_session = !args.flag("no-session");
+    let retry = RetryPolicy { max_attempts: args.get("max-attempts", 3u32)?.max(1) };
+    let deadline_us: f64 = args.get("deadline-us", 0.0f64)?;
 
     // Backend selection: one design name for a homogeneous pool, or
     // "mixed" for an overlay + CoMeFa-A split with jobs tagged to
@@ -296,9 +303,16 @@ fn cmd_serve(args: &Args) -> Result<String> {
         kind,
         regions,
         scheduler: SchedulerConfig { capacity, policy, backpressure },
-        batch: BatchPolicy {
-            max_batch: batch.max(1),
-            max_wait: Duration::from_micros(max_wait_us),
+        batch: if args.flag("adaptive") {
+            BatchPolicy::Adaptive {
+                max_batch: batch.max(1),
+                max_wait: Duration::from_micros(max_wait_us),
+            }
+        } else {
+            BatchPolicy::Fixed {
+                max_batch: batch.max(1),
+                max_wait: Duration::from_micros(max_wait_us),
+            }
         },
         ..Default::default()
     };
@@ -325,10 +339,11 @@ fn cmd_serve(args: &Args) -> Result<String> {
         let coord = Arc::clone(&coord);
         let weights = Arc::clone(&weights);
         let tags = tags.clone();
-        client_threads.push(std::thread::spawn(move || -> Result<(usize, usize, usize)> {
+        client_threads.push(std::thread::spawn(move || -> Result<(usize, usize, usize, usize)> {
             let mut rng = Xoshiro256::seeded(0x5EED + c as u64);
             let mut served = 0;
             let mut failures = 0;
+            let mut rejected = 0;
             let mut shed = 0;
             for j in 0..quota {
                 let id = (c * 1_000_000 + j) as u64;
@@ -358,12 +373,15 @@ fn cmd_serve(args: &Args) -> Result<String> {
                             b: weights.as_ref().clone(),
                         },
                     };
-                    let mut job = Job::new(id, kind).with_shards(shard_policy);
+                    let mut job = Job::new(id, kind).with_shards(shard_policy).with_retry(retry);
+                    if deadline_us > 0.0 {
+                        job = job.with_deadline_us(deadline_us);
+                    }
                     job.backend = tag;
                     match coord.submit_with_priority(job, priority) {
                         Ok(h) => break h,
                         Err(Error::Busy(_)) => {
-                            shed += 1;
+                            rejected += 1;
                             std::thread::sleep(std::time::Duration::from_micros(200));
                         }
                         Err(e) => return Err(e),
@@ -371,21 +389,27 @@ fn cmd_serve(args: &Args) -> Result<String> {
                 };
                 let r = handle.wait();
                 served += 1;
-                if r.error.is_some() || r.output != expect {
+                if r.shed {
+                    // Deadline-shed jobs are load management, not wrong
+                    // answers — tallied separately from failures.
+                    shed += 1;
+                } else if r.error.is_some() || r.output != expect {
                     failures += 1;
                 }
             }
-            Ok((served, failures, shed))
+            Ok((served, failures, rejected, shed))
         }));
     }
     let mut served = 0;
     let mut failures = 0;
+    let mut rejected = 0;
     let mut shed = 0;
     for t in client_threads {
-        let (s, f, sh) =
+        let (s, f, rj, sh) =
             t.join().map_err(|_| Error::Runtime("client thread panicked".into()))??;
         served += s;
         failures += f;
+        rejected += rj;
         shed += sh;
     }
     let snap = coord.metrics_snapshot();
@@ -417,16 +441,17 @@ fn cmd_serve(args: &Args) -> Result<String> {
         ));
     }
 
+    let weights_mode = if use_session { "session weights" } else { "per-job weights" };
     let mode = match shard_policy {
-        ShardPolicy::Auto => "sharded auto, per-job weights".to_string(),
-        ShardPolicy::Fixed(k) => format!("sharded x{k}, per-job weights"),
-        ShardPolicy::None if use_session => "session weights".to_string(),
-        ShardPolicy::None => "per-job weights".to_string(),
+        ShardPolicy::Auto => format!("sharded auto, {weights_mode}"),
+        ShardPolicy::Fixed(k) => format!("sharded x{k}, {weights_mode}"),
+        ShardPolicy::None => weights_mode.to_string(),
     };
     Ok(format!(
         "served {served} gemm jobs on {nworkers} {backend_name} workers \
          ({clients} closed-loop clients, {m}x{k}x{n}, {mode})\n\
-         failures: {failures}\nrejected then retried: {shed}\n{report}{clock_report}\n",
+         failures: {failures}\nshed on deadline: {shed}\n\
+         rejected then retried: {rejected}\n{report}{clock_report}\n",
         m = shape.m,
         k = shape.k,
         n = shape.n,
@@ -564,6 +589,40 @@ mod tests {
         assert!(out.contains("failures: 0"), "{out}");
         assert!(run_line("serve --shards=bogus").is_err());
         assert!(run_line("serve --device=bogus").is_err());
+    }
+
+    #[test]
+    fn serve_command_adaptive_retry_and_deadline_flags() {
+        // Adaptive flush + a tightened retry budget serve cleanly on a
+        // healthy pool.
+        let out = run_line(
+            "serve --jobs=6 --workers=2 --rows=2 --cols=1 --adaptive --max-attempts=2",
+        )
+        .unwrap();
+        assert!(out.contains("served 6"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        // A 1us deadline under contention sheds rather than fails: shed
+        // jobs are never counted as failures, and executed ones verify.
+        let out = run_line(
+            "serve --jobs=8 --workers=1 --clients=4 --rows=2 --cols=1 --deadline-us=1",
+        )
+        .unwrap();
+        assert!(out.contains("served 8"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("shed on deadline:"), "{out}");
+        assert!(run_line("serve --max-attempts=bogus").is_err());
+        assert!(run_line("serve --deadline-us=bogus").is_err());
+    }
+
+    #[test]
+    fn serve_command_sharded_session() {
+        // Sharding and sessions now compose: shard tickets slice the
+        // pinned staging table per partition slot.
+        let out =
+            run_line("serve --jobs=6 --workers=2 --rows=2 --cols=1 --shards=2").unwrap();
+        assert!(out.contains("served 6"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("sharded x2, session weights"), "{out}");
     }
 
     #[test]

@@ -388,6 +388,33 @@ pub fn slice_b_cols(shape: GemmShape, b: &[i64], col0: usize, cols: usize) -> Ve
     out
 }
 
+/// Staging-table slicer for sharded sessions: from a full per-output
+/// staging table (`m·n` entries, one pre-gathered lane vector per output
+/// element of `shape`, laid out row-major like the output matrix),
+/// extract the sub-table covering output columns `[col0, col0 + cols)`.
+/// Local element `(i, j)` of the shard maps to `(i, col0 + j)` of the
+/// parent, so the sub-table drives a shard plan compiled for
+/// `{m, k, cols}` without re-gathering anything from the weights —
+/// sharded session inference stays a `memcpy` per round, exactly like
+/// the unsharded path.
+pub fn slice_staging_table(
+    shape: GemmShape,
+    table: &[Vec<i64>],
+    col0: usize,
+    cols: usize,
+) -> Vec<Vec<i64>> {
+    let GemmShape { m, n, .. } = shape;
+    debug_assert_eq!(table.len(), m * n, "staging table covers every output element");
+    debug_assert!(col0 + cols <= n, "column slice out of range");
+    let mut out = Vec::with_capacity(m * cols);
+    for i in 0..m {
+        for j in 0..cols {
+            out.push(table[i * n + col0 + j].clone());
+        }
+    }
+    out
+}
+
 /// Reassemble shard outputs into the parent `m×n` matrix. `parts` holds
 /// `(first_column, shard_columns, shard_output)` triples as produced by
 /// [`split_shape_n`] and the per-shard executions; order does not
@@ -714,6 +741,21 @@ mod tests {
             "worst region {worst} vs parent {} over 3 shards",
             parent.rounds
         );
+    }
+
+    #[test]
+    fn staging_table_slicer_maps_columns() {
+        let shape = GemmShape { m: 2, k: 4, n: 3 };
+        // Table entry for output (i, j) is a recognisable vector.
+        let table: Vec<Vec<i64>> = (0..shape.m)
+            .flat_map(|i| (0..shape.n).map(move |j| vec![(10 * i + j) as i64; 4]))
+            .collect();
+        let sub = slice_staging_table(shape, &table, 1, 2);
+        assert_eq!(sub.len(), 4, "2 rows x 2 sliced columns");
+        assert_eq!(sub[0][0], 1, "(0, 0) of the shard is (0, 1) of the parent");
+        assert_eq!(sub[1][0], 2);
+        assert_eq!(sub[2][0], 11);
+        assert_eq!(sub[3][0], 12);
     }
 
     #[test]

@@ -5,25 +5,34 @@
 //! not a multiple of the array's rows wastes lanes in its final ragged
 //! round. The [`Batcher`] amortizes both: it pulls a head-of-line
 //! [`Ticket`] from the [`Scheduler`], then coalesces further tickets with
-//! the same [`BatchKey`] (same `(GemmShape, width)`, or same session)
-//! until the batch is full or the wait budget expires, and the worker
-//! executes the whole batch through
+//! the same [`BatchKey`] (same `(GemmShape, width)`, or same session and
+//! shard partition) until the batch is full or the wait budget expires,
+//! and the worker executes the whole batch through
 //! [`execute_gemm_batch`](crate::compiler::execute_gemm_batch) — packing
 //! `B` jobs into `ceil(B·m·n / rows)` rounds instead of
 //! `B · ceil(m·n / rows)`.
 //!
 //! Flush triggers (whichever comes first):
 //!
-//! * **size** — the batch reached [`BatchPolicy::max_batch`];
-//! * **wait** — [`BatchPolicy::max_wait`] elapsed since the head job was
-//!   taken (new *non-matching* arrivals never reset the clock);
+//! * **size** — the batch reached the policy's flush size;
+//! * **wait** — the wait window elapsed since the head job was taken
+//!   (new *non-matching* arrivals never reset the clock);
 //! * **close** — the scheduler shut down.
+//!
+//! [`BatchPolicy::Fixed`] uses constant thresholds.
+//! [`BatchPolicy::Adaptive`] scales both from the live queue-depth
+//! signal: a deep queue means companions are plentiful (flush at the
+//! size ceiling, full wait window — though in practice the batch fills
+//! instantly), while an idle queue means waiting only adds latency
+//! (small flush target, near-zero window).
 //!
 //! Sibling shards of one scattered job
 //! ([`ShardInfo`](super::ShardInfo)) never coalesce with each other —
 //! packing them into one batch would serialize the whole scatter on a
 //! single region. Shards of different parents (and plain same-key
-//! jobs) batch freely.
+//! jobs) batch freely; sharded *session* jobs additionally key on their
+//! `(index, of)` partition slot, since shards of different column
+//! ranges run different sub-plans.
 //!
 //! ```
 //! use picaso::compiler::GemmShape;
@@ -38,7 +47,7 @@
 //!     let job = Job::new(id, JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] });
 //!     sched.submit(job)?;
 //! }
-//! let batcher = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::ZERO });
+//! let batcher = Batcher::new(BatchPolicy::Fixed { max_batch: 2, max_wait: Duration::ZERO });
 //! let batch = batcher.collect(&sched).expect("three jobs queued");
 //! assert_eq!(batch.len(), 2); // size-triggered flush
 //! let rest = batcher.collect(&sched).expect("one job left");
@@ -47,7 +56,7 @@
 //! # Ok::<(), picaso::Error>(())
 //! ```
 
-use super::scheduler::{Scheduler, Ticket};
+use super::scheduler::{Scheduler, ShardInfo, Ticket};
 use super::{JobKind, SessionId};
 use crate::backend::BackendClass;
 use crate::compiler::GemmShape;
@@ -66,41 +75,116 @@ pub enum BatchKey {
         width: u16,
     },
     /// Session jobs coalesce per session — shape, width and weights are
-    /// pinned by the session itself.
-    Session(SessionId),
+    /// pinned by the session itself. Sharded session jobs additionally
+    /// coalesce only within the same `(index, of)` partition slot: each
+    /// slot covers a distinct output-column range with its own sub-plan
+    /// and sliced staging table, so mixing slots in one packed
+    /// execution would corrupt the round layout.
+    Session {
+        /// The session the jobs run against.
+        session: SessionId,
+        /// `Some((index, of))` for a shard of a scattered session job;
+        /// `None` for a whole (unsharded) session job.
+        part: Option<(usize, usize)>,
+    },
 }
 
 impl BatchKey {
-    /// Derive the coalescing key of a job payload.
+    /// Derive the coalescing key of a job payload (unsharded form).
     pub fn of(kind: &JobKind) -> BatchKey {
+        Self::for_ticket(kind, None)
+    }
+
+    /// Derive the coalescing key of a ticket: like [`BatchKey::of`],
+    /// but a session job that is one shard of a scatter keys on its
+    /// partition slot so only same-range shards (of *different*
+    /// parents) coalesce.
+    pub fn for_ticket(kind: &JobKind, shard: Option<ShardInfo>) -> BatchKey {
         match kind {
             JobKind::Gemm { shape, width, .. } => BatchKey::Gemm { shape: *shape, width: *width },
-            JobKind::SessionGemm { session, .. } => BatchKey::Session(*session),
+            JobKind::SessionGemm { session, .. } => BatchKey::Session {
+                session: *session,
+                part: shard
+                    .filter(|s| s.of >= 2)
+                    .map(|s| (s.index, s.of)),
+            },
         }
     }
 }
 
 /// Micro-batch flush policy.
 #[derive(Debug, Clone, Copy)]
-pub struct BatchPolicy {
-    /// Largest batch dispatched in one array invocation (≥ 1; 1 disables
-    /// coalescing).
-    pub max_batch: usize,
-    /// Longest a head-of-line job waits for companions before the batch
-    /// is flushed anyway.
-    pub max_wait: Duration,
+pub enum BatchPolicy {
+    /// Constant flush thresholds.
+    Fixed {
+        /// Largest batch dispatched in one array invocation (≥ 1; 1
+        /// disables coalescing).
+        max_batch: usize,
+        /// Longest a head-of-line job waits for companions before the
+        /// batch is flushed anyway.
+        max_wait: Duration,
+    },
+    /// Thresholds scaled per collection from the live queue-depth
+    /// signal ([`Scheduler::queue_depth_signal`], a time-decaying peak
+    /// of recent enqueue depths, combined with the instantaneous
+    /// depth): at load `d` against a size ceiling `B`, the flush target
+    /// is `min(B, d + 1)` and the wait window is `max_wait · min(1,
+    /// d/B)` — an idle queue flushes singletons near-immediately
+    /// (waiting would only add latency; a burst that ended decays out
+    /// of the signal within milliseconds), a saturated queue batches at
+    /// the ceiling.
+    Adaptive {
+        /// Flush-size ceiling at saturation (≥ 1).
+        max_batch: usize,
+        /// Wait-window ceiling at saturation.
+        max_wait: Duration,
+    },
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait: Duration::from_micros(200) }
+        Self::Fixed { max_batch: 8, max_wait: Duration::from_micros(200) }
     }
 }
 
 impl BatchPolicy {
     /// One job per invocation — the seed coordinator's behaviour.
     pub fn disabled() -> Self {
-        Self { max_batch: 1, max_wait: Duration::ZERO }
+        Self::Fixed { max_batch: 1, max_wait: Duration::ZERO }
+    }
+
+    /// The policy's flush-size ceiling.
+    pub fn max_batch(&self) -> usize {
+        match self {
+            Self::Fixed { max_batch, .. } | Self::Adaptive { max_batch, .. } => (*max_batch).max(1),
+        }
+    }
+
+    /// The policy's wait-window ceiling.
+    pub fn max_wait(&self) -> Duration {
+        match self {
+            Self::Fixed { max_wait, .. } | Self::Adaptive { max_wait, .. } => *max_wait,
+        }
+    }
+
+    /// Resolve the flush target and wait window for one collection,
+    /// given the scheduler's live load.
+    fn resolve(&self, sched: &Scheduler) -> (usize, Duration) {
+        match *self {
+            Self::Fixed { max_batch, max_wait } => (max_batch.max(1), max_wait),
+            Self::Adaptive { max_batch, max_wait } => {
+                let ceiling = max_batch.max(1);
+                // Load signal: whichever is larger of the instantaneous
+                // queue depth (work already waiting behind the head)
+                // and the time-decaying peak of recent enqueue depths
+                // (arrival pressure; stale bursts decay away, so an
+                // idle queue never inherits a dead burst's window).
+                let load = (sched.depth() as f64).max(sched.queue_depth_signal());
+                let target = ((load.ceil() as usize) + 1).clamp(1, ceiling);
+                let frac = (load / ceiling as f64).clamp(0.0, 1.0);
+                (target, max_wait.mul_f64(frac))
+            }
+        }
     }
 }
 
@@ -125,23 +209,26 @@ impl Batcher {
     /// coalesces same-key tickets until a flush trigger fires. Returns
     /// `None` once the scheduler is closed and drained. Every returned
     /// batch is non-empty and single-key. Equivalent to
-    /// [`collect_for`](Self::collect_for) with no class filter.
+    /// [`collect_for`](Self::collect_for) with no worker or class filter.
     pub fn collect(&self, sched: &Scheduler) -> Option<Vec<Ticket>> {
-        self.collect_for(sched, None)
+        self.collect_for(sched, None, None)
     }
 
-    /// [`collect`](Self::collect) for a worker of the given backend
-    /// class: only tickets the class may run are taken (untagged tickets
-    /// run anywhere), so a batch never mixes jobs bound for different
-    /// region kinds. Returns `None` once the scheduler is closed and no
+    /// [`collect`](Self::collect) for worker region `worker` of the
+    /// given backend class: only tickets the worker may run are taken —
+    /// untagged tickets run anywhere, but tickets whose retry history
+    /// already burned this region's fault domain are left for other
+    /// workers, and a batch never mixes jobs bound for different region
+    /// kinds. Returns `None` once the scheduler is closed and no
     /// eligible ticket remains.
     pub fn collect_for(
         &self,
         sched: &Scheduler,
+        worker: Option<usize>,
         class: Option<BackendClass>,
     ) -> Option<Vec<Ticket>> {
-        let first = sched.pop_blocking_for(class)?;
-        let max = self.policy.max_batch.max(1);
+        let first = sched.pop_blocking_for(worker, class)?;
+        let (max, wait) = self.policy.resolve(sched);
         if max == 1 {
             return Some(vec![first]);
         }
@@ -152,11 +239,11 @@ impl Batcher {
         // already represented in the batch, not just the head's — the
         // head may be a plain job with two siblings queued behind it.
         let mut exclude_parents: Vec<u64> = first.shard.map(|s| s.parent).into_iter().collect();
-        let deadline = Instant::now() + self.policy.max_wait;
+        let deadline = Instant::now() + wait;
         let mut batch = vec![first];
         let mut seen = sched.arrivals();
         while batch.len() < max {
-            if let Some(t) = sched.try_pop_matching(&key, class, &exclude_parents) {
+            if let Some(t) = sched.try_pop_matching(&key, worker, class, &exclude_parents) {
                 if let Some(s) = t.shard {
                     exclude_parents.push(s.parent);
                 }
@@ -206,7 +293,10 @@ mod tests {
         for id in 0..5 {
             s.submit(gemm_job(id, 1)).unwrap();
         }
-        let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(5) });
+        let b = Batcher::new(BatchPolicy::Fixed {
+            max_batch: 3,
+            max_wait: Duration::from_secs(5),
+        });
         let batch = b.collect(&s).unwrap();
         assert_eq!(batch.len(), 3, "size trigger");
         assert_eq!(s.depth(), 2);
@@ -217,7 +307,10 @@ mod tests {
         let s = sched();
         s.submit(gemm_job(0, 1)).unwrap();
         s.submit(gemm_job(1, 1)).unwrap();
-        let b = Batcher::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(30) });
+        let b = Batcher::new(BatchPolicy::Fixed {
+            max_batch: 64,
+            max_wait: Duration::from_millis(30),
+        });
         let t0 = Instant::now();
         let batch = b.collect(&s).unwrap();
         let waited = t0.elapsed();
@@ -227,12 +320,72 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_policy_flushes_an_idle_queue_immediately() {
+        let s = sched();
+        s.submit(gemm_job(0, 1)).unwrap();
+        // A huge wait ceiling that the adaptive window must scale down:
+        // one lone job against a 64-deep ceiling → near-zero window.
+        let b = Batcher::new(BatchPolicy::Adaptive {
+            max_batch: 64,
+            max_wait: Duration::from_secs(10),
+        });
+        let t0 = Instant::now();
+        let batch = b.collect(&s).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "idle queue must not wait out the 10s ceiling: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn adaptive_policy_batches_a_deep_queue_at_the_ceiling() {
+        let s = sched();
+        for id in 0..16 {
+            s.submit(gemm_job(id, 1)).unwrap();
+        }
+        let b = Batcher::new(BatchPolicy::Adaptive {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+        });
+        let batch = b.collect(&s).unwrap();
+        assert_eq!(batch.len(), 8, "deep queue coalesces to the ceiling");
+        assert_eq!(s.depth(), 8);
+    }
+
+    #[test]
+    fn session_shard_partitions_do_not_coalesce_across_slots() {
+        use super::super::scheduler::ShardInfo;
+        let s = sched();
+        let session = SessionId(9);
+        let sjob = |id: u64| Job::new(id, JobKind::SessionGemm { session, a: vec![0; 2] });
+        // Shard (0 of 2) of parents 1 and 2, shard (1 of 2) of parent 1:
+        // the two slot-0 shards coalesce (different parents, same column
+        // range); the slot-1 shard runs its own sub-plan.
+        s.submit_shard_with_priority(sjob(1), 0, Some(ShardInfo { parent: 1, index: 0, of: 2 }))
+            .unwrap();
+        s.submit_shard_with_priority(sjob(2), 0, Some(ShardInfo { parent: 2, index: 0, of: 2 }))
+            .unwrap();
+        s.submit_shard_with_priority(sjob(1), 0, Some(ShardInfo { parent: 1, index: 1, of: 2 }))
+            .unwrap();
+        let b = Batcher::new(BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::ZERO });
+        let first = b.collect(&s).unwrap();
+        let picked: Vec<(u64, usize)> =
+            first.iter().map(|t| (t.shard.unwrap().parent, t.shard.unwrap().index)).collect();
+        assert_eq!(picked, vec![(1, 0), (2, 0)], "same slot, different parents coalesce");
+        let second = b.collect(&s).unwrap();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].shard.unwrap().index, 1, "other slot dispatches alone");
+    }
+
+    #[test]
     fn different_keys_do_not_coalesce() {
         let s = sched();
         s.submit(gemm_job(0, 1)).unwrap();
         s.submit(gemm_job(1, 2)).unwrap(); // different n => different shape key
         s.submit(gemm_job(2, 1)).unwrap();
-        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        let b = Batcher::new(BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::ZERO });
         let batch = b.collect(&s).unwrap();
         let ids: Vec<u64> = batch.iter().map(|t| t.job.id).collect();
         assert_eq!(ids, vec![0, 2], "only same-shape jobs coalesce");
@@ -254,16 +407,16 @@ mod tests {
         s.submit(j0).unwrap();
         s.submit(j1).unwrap();
         s.submit(j2).unwrap();
-        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        let b = Batcher::new(BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::ZERO });
         let overlay: Vec<u64> = b
-            .collect_for(&s, Some(BackendClass::Overlay))
+            .collect_for(&s, None, Some(BackendClass::Overlay))
             .unwrap()
             .iter()
             .map(|t| t.job.id)
             .collect();
         assert_eq!(overlay, vec![0, 2], "same key, but the CoMeFa job must not join");
         let custom: Vec<u64> =
-            b.collect_for(&s, Some(comefa)).unwrap().iter().map(|t| t.job.id).collect();
+            b.collect_for(&s, None, Some(comefa)).unwrap().iter().map(|t| t.job.id).collect();
         assert_eq!(custom, vec![1]);
     }
 
@@ -281,7 +434,7 @@ mod tests {
             .unwrap();
         }
         s.submit(gemm_job(9, 1)).unwrap();
-        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        let b = Batcher::new(BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::ZERO });
         // First batch: shard 0 plus the unrelated job — never shard 1.
         let first = b.collect(&s).unwrap();
         let picked: Vec<Option<usize>> =

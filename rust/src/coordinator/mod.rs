@@ -11,22 +11,39 @@
 //!
 //! * [`scheduler`] — bounded submission queue with [`Backpressure`]
 //!   (block or reject at capacity), FIFO/[priority](QueuePolicy) ordering,
-//!   and a per-job [`JobHandle`] replacing the order-fragile `drain(n)`.
+//!   an explicit per-ticket lifecycle
+//!   ([`TicketState`]: `Queued → Dispatched → Done | Retrying(n) | Shed`),
+//!   scatter-atomic multi-slot admission ([`Scheduler::reserve`]), and a
+//!   per-job [`JobHandle`] replacing the order-fragile `drain(n)`.
 //! * [`batcher`] — micro-batching: same-`(GemmShape, width)` (or
 //!   same-session) jobs coalesce into **one** packed array invocation,
-//!   amortizing corner-turn, staging and ragged final rounds, with
-//!   size/wait flush triggers ([`BatchPolicy`]).
+//!   amortizing corner-turn, staging and ragged final rounds, with fixed
+//!   or queue-depth-adaptive flush triggers ([`BatchPolicy`]).
 //! * [`session`] — persistent [`ModelSession`]s that pin a compiled
 //!   [`GemmPlan`](crate::compiler::GemmPlan) and a pre-staged weight
 //!   table, so repeat inference skips both compilation and weight
-//!   gathering.
+//!   gathering. Sessions shard too: per-partition staging sub-tables are
+//!   sliced from the pinned table ([`ModelSession::shard`]), so
+//!   pinned-weight inference scatters across regions like ad-hoc GEMMs.
 //!
-//! One logical GEMM can also span regions: a [`ShardPolicy`] on the
-//! [`Job`] scatters it into per-column-range shard tickets at submit
-//! time ([`compiler::split_shape_n`](crate::compiler::split_shape_n)),
-//! heterogeneous regions execute the shards concurrently, and the
-//! returned [`JobHandle`] is the gather barrier that merges the partial
-//! outputs bit-exact and rolls the shard cycle counts up to the parent.
+//! One logical GEMM (ad-hoc **or** session-backed) can span regions: a
+//! [`ShardPolicy`] on the [`Job`] scatters it into per-column-range shard
+//! tickets at submit time
+//! ([`compiler::split_shape_n`](crate::compiler::split_shape_n)) under a
+//! single all-or-none queue reservation, heterogeneous regions execute
+//! the shards concurrently, and the returned [`JobHandle`] is the gather
+//! barrier that merges the partial outputs bit-exact and rolls the shard
+//! cycle and retry counts up to the parent.
+//!
+//! **Failure-domain retry**: a shard (or unsharded job) that fails on a
+//! region with a *transient* execution error is re-queued with that
+//! region excluded, bounded by the job's [`RetryPolicy`] and the number
+//! of compatible regions — one bad region degrades a request's latency,
+//! not its result. Deterministic failures (operand-shape mismatches,
+//! unknown sessions) fail immediately. **Deadline shedding**: a job with
+//! [`deadline_us`](Job::deadline_us) that expires while queued is
+//! dropped at pop time with a [`shed`](JobResult::shed) result instead
+//! of wasting an array invocation.
 //!
 //! The [`Coordinator`] spawns one worker thread per region; each worker
 //! owns a simulated execution backend behind the unified
@@ -36,11 +53,11 @@
 //! is eligible for, executes them, and resolves the jobs' handles. A
 //! deployment can mix region kinds ([`CoordinatorConfig::regions`]); jobs
 //! and sessions tagged with a [`BackendClass`](crate::backend::BackendClass)
-//! route only to matching regions. Queue depth, batch sizes and per-stage
-//! latencies stream into a shared
-//! [`ServingMetrics`](crate::metrics::ServingMetrics), tagged per backend
-//! class so mixed deployments report the paper's overlay-vs-custom
-//! comparison live.
+//! route only to matching regions. Queue depth, batch sizes, per-stage
+//! latencies and resilience counters (retries, sheds) stream into a
+//! shared [`ServingMetrics`](crate::metrics::ServingMetrics), tagged per
+//! backend class so mixed deployments report the paper's
+//! overlay-vs-custom comparison live.
 //!
 //! Implementation notes: the vendored crate set has no tokio, so
 //! everything is std threads + `Mutex`/`Condvar`. This matches the SIMD
@@ -53,8 +70,8 @@ pub mod session;
 
 pub use batcher::{BatchKey, BatchPolicy, Batcher};
 pub use scheduler::{
-    Backpressure, Completion, JobHandle, QueuePolicy, Scheduler, SchedulerConfig, ShardInfo,
-    Ticket,
+    Backpressure, Completion, JobHandle, QueuePolicy, Reservation, RetryPolicy, Scheduler,
+    SchedulerConfig, ShardInfo, Ticket, TicketState,
 };
 pub use session::{ModelSession, SessionId, SessionSpec};
 
@@ -103,6 +120,30 @@ impl RegionSpec {
     }
 }
 
+/// Signature of a [`BackendHook`] closure: receives the worker index
+/// and the backend that worker would have used, returns the (possibly
+/// wrapped) backend it will actually use.
+pub type BackendWrapFn =
+    dyn Fn(usize, Box<dyn PimBackend + Send>) -> Box<dyn PimBackend + Send> + Send + Sync;
+
+/// Spawn-time hook that wraps each worker region's freshly built
+/// execution backend — the fault-injection / instrumentation seam used
+/// by the resilience tests and the chaos phase of `examples/serve.rs`
+/// (e.g. wrapping one region in a
+/// [`FaultInjector`](crate::backend::FaultInjector) to poison its fault
+/// domain).
+#[derive(Clone)]
+pub struct BackendHook(
+    /// The wrapping closure.
+    pub Arc<BackendWrapFn>,
+);
+
+impl std::fmt::Debug for BackendHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("BackendHook(<fn>)")
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -128,6 +169,9 @@ pub struct CoordinatorConfig {
     /// Micro-batch flush policy ([`BatchPolicy::disabled`] restores the
     /// seed one-job-per-invocation behaviour).
     pub batch: BatchPolicy,
+    /// Optional backend-wrapping hook applied to every worker region at
+    /// spawn (fault injection, instrumentation). `None` in production.
+    pub backend_hook: Option<BackendHook>,
 }
 
 impl Default for CoordinatorConfig {
@@ -142,6 +186,7 @@ impl Default for CoordinatorConfig {
             booth_skip: false,
             scheduler: SchedulerConfig::default(),
             batch: BatchPolicy::default(),
+            backend_hook: None,
         }
     }
 }
@@ -191,28 +236,60 @@ pub struct Job {
     /// designs under identical load. Shard sub-jobs inherit this tag, so
     /// a shard can never land on a mismatched region.
     pub backend: Option<BackendClass>,
-    /// Scatter–gather sharding for [`JobKind::Gemm`] payloads: split the
-    /// output along `n` so multiple regions execute one logical job
-    /// concurrently. Session jobs reject any policy other than
-    /// [`ShardPolicy::None`] (their weights are pinned per session, not
-    /// per shard).
+    /// Scatter–gather sharding: split the output along `n` so multiple
+    /// regions execute one logical job concurrently. Applies to
+    /// [`JobKind::Gemm`] and — via per-shard staging sub-tables sliced
+    /// from the pinned weight table — to [`JobKind::SessionGemm`].
     pub shards: ShardPolicy,
+    /// Failure-domain retry budget: total execution attempts allowed
+    /// per ticket, each retry excluding the region that failed. Shard
+    /// sub-jobs inherit this policy. Defaults to three attempts; use
+    /// [`RetryPolicy::none`] for the seed fail-fast behaviour.
+    pub retry: RetryPolicy,
+    /// Optional end-to-end deadline in microseconds, measured from
+    /// admission. A ticket still queued past its deadline is shed at
+    /// pop time ([`JobResult::shed`]) instead of wasting an array
+    /// invocation on an answer nobody is waiting for. `None` (the
+    /// default) never sheds.
+    pub deadline_us: Option<f64>,
 }
 
 impl Job {
     /// An untagged job (runs on any worker region).
     pub fn new(id: u64, kind: JobKind) -> Self {
-        Self { id, kind, backend: None, shards: ShardPolicy::None }
+        Self {
+            id,
+            kind,
+            backend: None,
+            shards: ShardPolicy::None,
+            retry: RetryPolicy::default(),
+            deadline_us: None,
+        }
     }
 
     /// A job pinned to worker regions of the given backend class.
     pub fn on(id: u64, kind: JobKind, backend: BackendClass) -> Self {
-        Self { id, kind, backend: Some(backend), shards: ShardPolicy::None }
+        let mut job = Self::new(id, kind);
+        job.backend = Some(backend);
+        job
     }
 
     /// This job with a sharding policy applied (builder style).
     pub fn with_shards(mut self, shards: ShardPolicy) -> Self {
         self.shards = shards;
+        self
+    }
+
+    /// This job with a retry policy applied (builder style).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// This job with an end-to-end deadline (µs) applied (builder
+    /// style).
+    pub fn with_deadline_us(mut self, deadline_us: f64) -> Self {
+        self.deadline_us = Some(deadline_us);
         self
     }
 }
@@ -255,15 +332,17 @@ pub struct JobResult {
     /// stays zeroed for batched executions.
     pub stats: RunStats,
     /// Backend class of the worker region that ran the job (`None` for
-    /// abandoned jobs that never reached a worker, and for merged
-    /// sharded results whose shards ran on different classes).
+    /// abandoned or shed jobs that never reached a worker, and for
+    /// merged sharded results whose shards ran on different classes).
     pub backend: Option<BackendClass>,
     /// Time this job spent queued before a worker picked it up (µs) —
     /// carried on the result so every consumer (the legacy
     /// [`Metrics`](crate::metrics::Metrics) fed by
     /// [`Coordinator::run_batch`], external callers) sees the real queue
     /// wait instead of reconstructing it. For merged sharded results:
-    /// the maximum over shards (the gather waits for the slowest).
+    /// the maximum over shards (the gather waits for the slowest). For
+    /// retried tickets: measured from first admission, so it includes
+    /// failed attempts.
     pub queue_us: f64,
     /// This job's share of the wall-clock execution time (µs) of the
     /// array invocation that served it: the batch's wall time split
@@ -286,6 +365,14 @@ pub struct JobResult {
     /// Number of shards this logical job was scattered into (1 for an
     /// unsharded job; the stats of a merged result roll up all shards).
     pub shards: usize,
+    /// Failure-domain retries this job consumed (attempts beyond the
+    /// first; summed over shards for merged sharded results). A nonzero
+    /// count on a successful result means a region fault was absorbed.
+    pub retries: u32,
+    /// True when the job was shed unexecuted because its
+    /// [`deadline_us`](Job::deadline_us) expired in the queue (for
+    /// merged sharded results: any shard shed).
+    pub shed: bool,
     /// Error text if the job failed. A sharded job's first failed shard
     /// (by index) propagates here with a `shard i/K` context prefix.
     pub error: Option<String>,
@@ -395,7 +482,7 @@ impl Coordinator {
     }
 
     /// Snapshot of the serving metrics (queue depth, batch sizes,
-    /// per-stage latency percentiles).
+    /// per-stage latency percentiles, retry/shed counters).
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -406,15 +493,17 @@ impl Coordinator {
     /// (they could never dispatch); session jobs inherit their session's
     /// backend requirement unless tagged explicitly.
     ///
-    /// **Scatter–gather**: a [`JobKind::Gemm`] job with a
-    /// [`ShardPolicy`] other than `None` is split along `n` into K
-    /// linked shard tickets here (each carrying the parent id, its shard
-    /// index, and the job's backend tag), and the returned [`JobHandle`]
-    /// is the gather barrier that merges the shard outputs back into the
-    /// parent result in submission order. Under
-    /// [`Backpressure::Reject`], a rejection mid-scatter fails the whole
-    /// submission; shards already queued still execute but their results
-    /// are discarded with the dropped handle.
+    /// **Scatter–gather**: a job with a [`ShardPolicy`] other than
+    /// `None` — ad-hoc GEMM or session-backed — is split along `n` into
+    /// K linked shard tickets here (each carrying the parent id, its
+    /// shard index, and the job's backend/retry/deadline settings), and
+    /// the returned [`JobHandle`] is the gather barrier that merges the
+    /// shard outputs back into the parent result in submission order.
+    /// Admission is **scatter-atomic**: the K slots are reserved
+    /// up-front ([`Scheduler::reserve`]), so under
+    /// [`Backpressure::Reject`] either the whole scatter is admitted or
+    /// the submission fails with nothing queued — a rejection can no
+    /// longer strand a partial scatter.
     pub fn submit_job(&self, job: Job) -> Result<JobHandle> {
         self.submit_with_priority(job, 0)
     }
@@ -424,13 +513,7 @@ impl Coordinator {
     pub fn submit_with_priority(&self, mut job: Job, priority: u8) -> Result<JobHandle> {
         if job.backend.is_none() {
             if let JobKind::SessionGemm { session, .. } = &job.kind {
-                job.backend = self
-                    .sessions
-                    .map
-                    .read()
-                    .unwrap_or_else(|e| e.into_inner())
-                    .get(session)
-                    .and_then(|spec| spec.backend);
+                job.backend = self.session_spec(*session).and_then(|spec| spec.backend);
             }
         }
         if let Some(b) = job.backend {
@@ -443,15 +526,16 @@ impl Coordinator {
         }
         let shards = self.resolve_shards(&job)?;
         if shards >= 2 {
-            return self.scatter_gemm(job, priority, shards);
+            return self.scatter(job, priority, shards);
         }
         self.metrics.record_shards(1);
         self.sched.submit_with_priority(job, priority)
     }
 
     /// Resolve a job's [`ShardPolicy`] to a concrete shard count against
-    /// this pool. Validates that sharding is only requested for plain
-    /// GEMM payloads.
+    /// this pool, clamped to the job's output columns. A sharded session
+    /// job against an unknown (e.g. already-closed) session degrades to
+    /// one ticket, whose worker reports the unknown-session error.
     fn resolve_shards(&self, job: &Job) -> Result<usize> {
         let want = match job.shards {
             ShardPolicy::None => return Ok(1),
@@ -461,13 +545,20 @@ impl Coordinator {
         match &job.kind {
             // Clamp to n: a shard needs at least one output column.
             JobKind::Gemm { shape, .. } => Ok(want.min(shape.n)),
-            JobKind::SessionGemm { .. } if want <= 1 => Ok(1),
-            JobKind::SessionGemm { .. } => Err(Error::Config(format!(
-                "job {}: sharding applies to plain GEMM jobs; session weights are pinned \
-                 whole per region (open one session per shard instead)",
-                job.id
-            ))),
+            JobKind::SessionGemm { session, .. } => Ok(self
+                .session_spec(*session)
+                .map(|spec| want.min(spec.shape.n))
+                .unwrap_or(1)),
         }
+    }
+
+    fn session_spec(&self, id: SessionId) -> Option<Arc<SessionSpec>> {
+        self.sessions
+            .map
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&id)
+            .cloned()
     }
 
     /// Number of worker regions a job tagged `backend` may run on.
@@ -482,32 +573,63 @@ impl Coordinator {
         }
     }
 
-    /// The scatter half of sharded execution: split the GEMM's output
-    /// columns into `shards` balanced ranges, slice `B` per shard,
-    /// submit each shard as a linked ticket (inheriting backend tag and
-    /// priority), and return the gather handle.
-    fn scatter_gemm(&self, job: Job, priority: u8, shards: usize) -> Result<JobHandle> {
-        let Job { id, kind, backend, .. } = job;
-        let JobKind::Gemm { shape, width, a, b } = kind else {
-            unreachable!("resolve_shards only shards plain GEMM jobs");
+    /// The scatter half of sharded execution: split the job's output
+    /// columns into `shards` balanced ranges, reserve the whole scatter's
+    /// queue slots atomically, submit each shard as a linked ticket
+    /// (inheriting backend tag, priority, retry policy and deadline),
+    /// and return the gather handle. For ad-hoc GEMMs each shard carries
+    /// its slice of `B`; for session jobs each shard carries the full
+    /// activations and the worker slices the session's pinned staging
+    /// table per partition slot.
+    fn scatter(&self, job: Job, priority: u8, shards: usize) -> Result<JobHandle> {
+        // A sharded session job needs its spec for the parent shape; the
+        // session may close concurrently — degrade to one ticket then
+        // (the worker reports the unknown session).
+        let spec = match &job.kind {
+            JobKind::SessionGemm { session, .. } => match self.session_spec(*session) {
+                Some(s) => Some(s),
+                None => {
+                    self.metrics.record_shards(1);
+                    return self.sched.submit_with_priority(job, priority);
+                }
+            },
+            JobKind::Gemm { .. } => None,
+        };
+        let Job { id, kind, backend, retry, deadline_us, .. } = job;
+        let shape = match (&kind, &spec) {
+            (JobKind::Gemm { shape, .. }, _) => *shape,
+            (JobKind::SessionGemm { .. }, Some(spec)) => spec.shape,
+            (JobKind::SessionGemm { .. }, None) => unreachable!("spec resolved above"),
         };
         let parts = split_shape_n(shape, shards);
         let of = parts.len();
+        // All-or-none admission: the whole scatter's slots are held
+        // before the first shard enqueues, so `Reject` either admits
+        // every shard or fails cleanly with nothing queued.
+        let mut reservation = self.sched.reserve(of)?;
         self.metrics.record_shards(of);
         let mut handles = Vec::with_capacity(of);
         for (index, (col0, sshape)) in parts.into_iter().enumerate() {
+            let sub_kind = match &kind {
+                JobKind::Gemm { shape, width, a, b } => JobKind::Gemm {
+                    shape: sshape,
+                    width: *width,
+                    a: a.clone(),
+                    b: slice_b_cols(*shape, b, col0, sshape.n),
+                },
+                JobKind::SessionGemm { session, a } => {
+                    JobKind::SessionGemm { session: *session, a: a.clone() }
+                }
+            };
             let sub = Job {
                 id,
-                kind: JobKind::Gemm {
-                    shape: sshape,
-                    width,
-                    a: a.clone(),
-                    b: slice_b_cols(shape, &b, col0, sshape.n),
-                },
+                kind: sub_kind,
                 backend,
                 shards: ShardPolicy::None,
+                retry,
+                deadline_us,
             };
-            let h = self.sched.submit_shard_with_priority(
+            let h = reservation.submit(
                 sub,
                 priority,
                 Some(ShardInfo { parent: id, index, of }),
@@ -566,8 +688,8 @@ impl Coordinator {
     /// Close a session. Batches already dispatched to a worker finish
     /// normally; jobs still queued (and any submitted later) complete
     /// with an unknown-session error. Workers drop their pinned staging
-    /// tables for it on their next batch. Returns `true` if the session
-    /// existed.
+    /// tables (whole-session and per-shard) for it on their next batch.
+    /// Returns `true` if the session existed.
     pub fn close_session(&self, id: SessionId) -> bool {
         let existed = self
             .sessions
@@ -725,9 +847,47 @@ fn stats_shares(total: &RunStats, n: usize) -> Vec<RunStats> {
         .collect()
 }
 
+/// One ticket's failure, classified for the retry machinery.
+struct JobError {
+    msg: String,
+    /// Transient errors (backend execution faults) are worth another
+    /// fault domain; deterministic ones (operand-shape mismatches,
+    /// unknown sessions, compile rejections) fail identically on every
+    /// region and are not retried.
+    transient: bool,
+}
+
+impl JobError {
+    fn permanent(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into(), transient: false }
+    }
+
+    fn transient(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into(), transient: true }
+    }
+}
+
 struct BatchOutcome {
     /// Per-ticket `(output, stats, error)` in ticket order.
-    per_job: Vec<(Vec<i64>, RunStats, Option<String>)>,
+    per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)>,
+}
+
+/// Worker regions (other than `widx`) that could still take this ticket:
+/// compatible with the job's backend tag and not already burned as a
+/// fault domain. Governs whether a transient failure is worth a retry.
+fn untried_domains(kinds: &[ArchKind], ticket: &Ticket, widx: usize) -> usize {
+    kinds
+        .iter()
+        .enumerate()
+        .filter(|(i, k)| {
+            *i != widx
+                && !ticket.tried_workers.contains(i)
+                && match ticket.job.backend {
+                    None => true,
+                    Some(c) => BackendClass::of(**k) == c,
+                }
+        })
+        .count()
 }
 
 fn worker_loop(
@@ -741,23 +901,30 @@ fn worker_loop(
 ) {
     // The unified backend: an overlay array or a custom-tile region,
     // depending on this worker's design — everything below here is
-    // backend-agnostic.
+    // backend-agnostic. The optional hook wraps it (fault injection).
     let mut backend = make_backend(kind, cfg.geom, cfg.booth_skip);
+    if let Some(hook) = &cfg.backend_hook {
+        backend = (hook.0)(widx, backend);
+    }
     let class = BackendClass::of(kind);
+    let pool_kinds = cfg.worker_kinds();
     let compiler = PimCompiler::new(cfg.geom);
     // Plan cache: compiling a shape once per worker (microcode reuse is
     // what makes the "python never on the request path" contract cheap).
     let mut plans: HashMap<(GemmShape, u16), GemmPlan> = HashMap::new();
-    // Per-worker session cache: sessions pin their staging tables here on
-    // first use; swept against the registry whenever a close happens.
-    let mut sessions: HashMap<SessionId, ModelSession> = HashMap::new();
+    // Per-worker session cache, keyed by session id plus the shard
+    // partition slot (`None` = the whole session): sessions pin their
+    // staging tables here on first use — shard slots hold sub-plans and
+    // sliced sub-tables — swept against the registry whenever a close
+    // happens.
+    let mut sessions: HashMap<(SessionId, Option<(usize, usize)>), ModelSession> = HashMap::new();
     let mut seen_epoch = 0u64;
-    while let Some(batch) = batcher.collect_for(&sched, Some(class)) {
+    while let Some(batch) = batcher.collect_for(&sched, Some(widx), Some(class)) {
         let epoch = registry.closed_epoch.load(Ordering::Acquire);
         if epoch != seen_epoch {
             seen_epoch = epoch;
             let live = registry.map.read().unwrap_or_else(|e| e.into_inner());
-            sessions.retain(|sid, _| live.contains_key(sid));
+            sessions.retain(|(sid, _), _| live.contains_key(sid));
         }
         let queue_waits: Vec<f64> = batch.iter().map(Ticket::queue_wait_us).collect();
         let t0 = Instant::now();
@@ -765,12 +932,13 @@ fn worker_loop(
             BatchKey::Gemm { shape, width } => {
                 run_gemm_batch(&mut *backend, &compiler, &mut plans, shape, width, &batch)
             }
-            BatchKey::Session(sid) => run_session_batch(
+            BatchKey::Session { session, part } => run_session_batch(
                 &mut *backend,
                 &compiler,
                 &registry,
                 &mut sessions,
-                sid,
+                session,
+                part,
                 &batch,
             ),
         };
@@ -790,37 +958,111 @@ fn worker_loop(
             .zip(queue_waits)
             .zip(shares)
         {
-            let id = ticket.job.id;
-            let total_us = ticket.enqueued_at.elapsed().as_secs_f64() * 1e6;
-            let macs = output.len() as u64;
-            metrics.record_job(
-                Some(class),
-                queue_us,
-                wall_us,
-                total_us,
-                macs,
-                stats.cycles,
-                error.is_some(),
-            );
-            ticket.complete(JobResult {
-                id,
-                output,
-                stats,
-                backend: Some(class),
-                queue_us,
-                wall_us,
-                worker: widx,
-                batch_size,
-                shards: 1,
-                error,
+            // Failure-domain retry: a transient error with attempts and
+            // untried compatible regions left re-queues the ticket with
+            // this region excluded — the handle resolves on a later
+            // attempt instead of seeing this failure.
+            if let Some(err) = &error {
+                if err.transient
+                    && ticket.attempt + 1 < ticket.job.retry.attempts()
+                    && untried_domains(&pool_kinds, &ticket, widx) > 0
+                {
+                    match sched.retry(ticket, widx) {
+                        Ok(()) => {
+                            metrics.record_retry(Some(class));
+                            continue;
+                        }
+                        Err(t) => {
+                            // Closed during shutdown: fail it instead of
+                            // stranding a ticket no worker will drain.
+                            deliver_result(
+                                t,
+                                widx,
+                                class,
+                                batch_size,
+                                Vec::new(),
+                                RunStats::default(),
+                                queue_us,
+                                wall_us,
+                                Some(format!("{} (scheduler closed during retry)", err.msg)),
+                                &metrics,
+                            );
+                            continue;
+                        }
+                    }
+                }
+            }
+            // Final completion (success, permanent error, or exhausted
+            // retry budget/domains — annotated so the operator sees the
+            // attempts consumed).
+            let msg = error.map(|e| {
+                if ticket.attempt > 0 {
+                    format!(
+                        "{} (gave up after {} attempts across {} regions)",
+                        e.msg,
+                        ticket.attempt + 1,
+                        ticket.tried_workers.len() + 1,
+                    )
+                } else {
+                    e.msg
+                }
             });
+            deliver_result(
+                ticket, widx, class, batch_size, output, stats, queue_us, wall_us, msg, &metrics,
+            );
         }
     }
 }
 
+/// Record one finished job in the serving metrics and resolve its
+/// handle.
+#[allow(clippy::too_many_arguments)]
+fn deliver_result(
+    ticket: Ticket,
+    widx: usize,
+    class: BackendClass,
+    batch_size: usize,
+    output: Vec<i64>,
+    stats: RunStats,
+    queue_us: f64,
+    wall_us: f64,
+    error: Option<String>,
+    metrics: &ServingMetrics,
+) {
+    let id = ticket.job.id;
+    let retries = ticket.attempt;
+    let total_us = ticket.enqueued_at.elapsed().as_secs_f64() * 1e6;
+    let macs = output.len() as u64;
+    metrics.record_job(
+        Some(class),
+        queue_us,
+        wall_us,
+        total_us,
+        macs,
+        stats.cycles,
+        error.is_some(),
+    );
+    ticket.complete(JobResult {
+        id,
+        output,
+        stats,
+        backend: Some(class),
+        queue_us,
+        wall_us,
+        worker: widx,
+        batch_size,
+        shards: 1,
+        retries,
+        shed: false,
+        error,
+    });
+}
+
 /// Execute a micro-batch of plain GEMM jobs. Per-ticket validation keeps
 /// one poison job from failing its batch-mates; a batch-level simulator
-/// error falls back to per-job execution for the same reason.
+/// error falls back to per-job execution for the same reason. Validation
+/// and compile failures are permanent; execution failures are transient
+/// (retryable on another region).
 fn run_gemm_batch<B: PimBackend + ?Sized>(
     backend: &mut B,
     compiler: &PimCompiler,
@@ -829,7 +1071,7 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
     width: u16,
     batch: &[Ticket],
 ) -> BatchOutcome {
-    let mut per_job: Vec<(Vec<i64>, RunStats, Option<String>)> = batch
+    let mut per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)> = batch
         .iter()
         .map(|_| (Vec::new(), RunStats::default(), None))
         .collect();
@@ -839,7 +1081,7 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
             Ok(p) => v.insert(p),
             Err(e) => {
                 for slot in &mut per_job {
-                    slot.2 = Some(e.to_string());
+                    slot.2 = Some(JobError::permanent(e.to_string()));
                 }
                 return BatchOutcome { per_job };
             }
@@ -856,16 +1098,16 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
                 items.push((a.as_slice(), b.as_slice()));
             }
             JobKind::Gemm { a, b, .. } => {
-                per_job[idx].2 = Some(format!(
+                per_job[idx].2 = Some(JobError::permanent(format!(
                     "operand sizes {}/{} do not match shape {m}x{k}x{n}",
                     a.len(),
                     b.len()
-                ));
+                )));
             }
             other => {
-                per_job[idx].2 = Some(format!(
+                per_job[idx].2 = Some(JobError::permanent(format!(
                     "internal: {other:?} routed into a GEMM batch"
-                ));
+                )));
             }
         }
     }
@@ -884,29 +1126,37 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
             for (slot, (a, b)) in valid_idx.iter().zip(&items) {
                 match execute_gemm(backend, plan, a, b) {
                     Ok((out, stats)) => per_job[*slot] = (out, stats, None),
-                    Err(e) => per_job[*slot].2 = Some(e.to_string()),
+                    Err(e) => per_job[*slot].2 = Some(JobError::transient(e.to_string())),
                 }
             }
         }
-        Err(e) => per_job[valid_idx[0]].2 = Some(e.to_string()),
+        Err(e) => per_job[valid_idx[0]].2 = Some(JobError::transient(e.to_string())),
     }
     BatchOutcome { per_job }
 }
 
 /// Execute a micro-batch of session jobs against the worker's cached
-/// (or freshly prepared) [`ModelSession`].
+/// (or freshly prepared) [`ModelSession`] — the whole session for
+/// `part = None`, or the per-partition shard view (sub-plan plus sliced
+/// staging table) for shard tickets.
 fn run_session_batch<B: PimBackend + ?Sized>(
     backend: &mut B,
     compiler: &PimCompiler,
     registry: &SessionRegistry,
-    sessions: &mut HashMap<SessionId, ModelSession>,
+    sessions: &mut HashMap<(SessionId, Option<(usize, usize)>), ModelSession>,
     sid: SessionId,
+    part: Option<(usize, usize)>,
     batch: &[Ticket],
 ) -> BatchOutcome {
-    let mut per_job: Vec<(Vec<i64>, RunStats, Option<String>)> = batch
+    let mut per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)> = batch
         .iter()
         .map(|_| (Vec::new(), RunStats::default(), None))
         .collect();
+    let fail_all = |per_job: &mut Vec<(Vec<i64>, RunStats, Option<JobError>)>, msg: &str| {
+        for slot in per_job.iter_mut() {
+            slot.2 = Some(JobError::permanent(msg));
+        }
+    };
     let spec = registry
         .map
         .read()
@@ -916,27 +1166,35 @@ fn run_session_batch<B: PimBackend + ?Sized>(
     let spec = match spec {
         Some(s) => s,
         None => {
-            sessions.remove(&sid); // closed: drop the pinned staging table
-            for slot in &mut per_job {
-                slot.2 = Some(format!("{sid} is not open"));
-            }
+            // Closed: drop every pinned staging table for this session.
+            sessions.retain(|(cached, _), _| *cached != sid);
+            fail_all(&mut per_job, &format!("{sid} is not open"));
             return BatchOutcome { per_job };
         }
     };
-    if !sessions.contains_key(&sid) {
-        match ModelSession::prepare(compiler, &spec) {
+    if !sessions.contains_key(&(sid, part)) {
+        // Whole-session jobs pin the full staging table. Shard slots
+        // slice it when it is already pinned here, and otherwise stage
+        // just their own partition from the spec — a worker that only
+        // ever serves one slot never materializes the full table.
+        let prepared = match part {
+            None => ModelSession::prepare(compiler, &spec),
+            Some((index, of)) => match sessions.get(&(sid, None)) {
+                Some(base) => base.shard(compiler, index, of),
+                None => ModelSession::prepare_shard(compiler, &spec, index, of),
+            },
+        };
+        match prepared {
             Ok(s) => {
-                sessions.insert(sid, s);
+                sessions.insert((sid, part), s);
             }
             Err(e) => {
-                for slot in &mut per_job {
-                    slot.2 = Some(e.to_string());
-                }
+                fail_all(&mut per_job, &e.to_string());
                 return BatchOutcome { per_job };
             }
         }
     }
-    let session = sessions.get(&sid).expect("inserted above");
+    let session = sessions.get(&(sid, part)).expect("inserted above");
     let GemmShape { m, k, .. } = spec.shape;
     let mut valid_idx = Vec::with_capacity(batch.len());
     let mut acts: Vec<&[i64]> = Vec::with_capacity(batch.len());
@@ -947,15 +1205,15 @@ fn run_session_batch<B: PimBackend + ?Sized>(
                 acts.push(a.as_slice());
             }
             JobKind::SessionGemm { a, .. } => {
-                per_job[idx].2 = Some(format!(
+                per_job[idx].2 = Some(JobError::permanent(format!(
                     "activation size {} does not match {sid} shape {m}x{k}",
                     a.len()
-                ));
+                )));
             }
             other => {
-                per_job[idx].2 = Some(format!(
+                per_job[idx].2 = Some(JobError::permanent(format!(
                     "internal: {other:?} routed into a session batch"
-                ));
+                )));
             }
         }
     }
@@ -973,11 +1231,11 @@ fn run_session_batch<B: PimBackend + ?Sized>(
             for (slot, a) in valid_idx.iter().zip(&acts) {
                 match session.infer(backend, a) {
                     Ok((out, stats)) => per_job[*slot] = (out, stats, None),
-                    Err(e) => per_job[*slot].2 = Some(e.to_string()),
+                    Err(e) => per_job[*slot].2 = Some(JobError::transient(e.to_string())),
                 }
             }
         }
-        Err(e) => per_job[valid_idx[0]].2 = Some(e.to_string()),
+        Err(e) => per_job[valid_idx[0]].2 = Some(JobError::transient(e.to_string())),
     }
     BatchOutcome { per_job }
 }
@@ -1020,6 +1278,8 @@ mod tests {
             assert!(r.error.is_none(), "job {i}: {:?}", r.error);
             assert_eq!(r.output, expects[i], "job {i}");
             assert!(r.batch_size >= 1);
+            assert_eq!(r.retries, 0, "healthy pool retries nothing");
+            assert!(!r.shed);
         }
         // Workers participated (with the packed engine jobs are fast
         // enough that a single worker may legitimately drain the queue,
@@ -1031,6 +1291,8 @@ mod tests {
         let snap = coord.metrics_snapshot();
         assert_eq!(snap.jobs, 12);
         assert_eq!(snap.errors, 0);
+        assert_eq!(snap.retries, 0);
+        assert_eq!(snap.sheds, 0);
         assert!(snap.batches >= 1);
         coord.shutdown();
     }
@@ -1043,7 +1305,8 @@ mod tests {
             ..Default::default()
         })
         .unwrap();
-        // Mismatched operand size.
+        // Mismatched operand size: a deterministic failure — reported
+        // immediately, never retried.
         coord
             .submit(Job::new(
                 1,
@@ -1057,6 +1320,7 @@ mod tests {
             .unwrap();
         let r = coord.drain(1).unwrap();
         assert!(r[0].error.is_some());
+        assert_eq!(r[0].retries, 0, "permanent errors are not retried");
         coord.shutdown();
     }
 
@@ -1288,23 +1552,41 @@ mod tests {
     }
 
     #[test]
-    fn session_jobs_reject_sharding() {
+    fn sharded_session_jobs_merge_bit_exact() {
         let coord = Coordinator::new(CoordinatorConfig {
-            workers: 2,
+            workers: 3,
             geom: ArrayGeometry::new(2, 1),
             ..Default::default()
         })
         .unwrap();
-        let shape = GemmShape { m: 1, k: 16, n: 2 };
-        let sid = coord.open_session(shape, 8, vec![1; 32]).unwrap();
-        let job = Job::new(1, JobKind::SessionGemm { session: sid, a: vec![0; 16] })
-            .with_shards(ShardPolicy::Fixed(2));
-        let err = coord.submit_job(job).unwrap_err();
-        assert!(err.to_string().contains("session"), "{err}");
-        // Auto on a session job is rejected too (it would resolve > 1).
-        let job = Job::new(2, JobKind::SessionGemm { session: sid, a: vec![0; 16] })
-            .with_shards(ShardPolicy::Auto);
-        assert!(coord.submit_job(job).is_err());
+        let shape = GemmShape { m: 2, k: 20, n: 7 }; // multi-slice, ragged n
+        let mut rng = Xoshiro256::seeded(0x5EA5);
+        let mut weights = vec![0i64; shape.k * shape.n];
+        rng.fill_signed(&mut weights, 8);
+        let sid = coord.open_session(shape, 8, weights.clone()).unwrap();
+        for (i, policy) in
+            [ShardPolicy::Fixed(2), ShardPolicy::Fixed(3), ShardPolicy::Auto]
+                .into_iter()
+                .enumerate()
+        {
+            let mut a = vec![0i64; shape.m * shape.k];
+            rng.fill_signed(&mut a, 8);
+            let expect = gemm_ref(shape, &a, &weights);
+            let job = Job::new(i as u64, JobKind::SessionGemm { session: sid, a })
+                .with_shards(policy);
+            let r = coord.submit_job(job).unwrap().wait();
+            assert!(r.error.is_none(), "{policy:?}: {:?}", r.error);
+            assert_eq!(r.output, expect, "{policy:?} must match gemm_ref");
+            assert!(r.shards >= 2, "{policy:?} actually scattered");
+        }
+        // Sharding against a closed session degrades to one ticket whose
+        // worker reports the unknown session.
+        coord.close_session(sid);
+        let job = Job::new(9, JobKind::SessionGemm { session: sid, a: vec![0; 40] })
+            .with_shards(ShardPolicy::Fixed(3));
+        let r = coord.submit_job(job).unwrap().wait();
+        assert_eq!(r.shards, 1);
+        assert!(r.error.as_deref().unwrap_or("").contains("not open"), "{:?}", r.error);
         coord.shutdown();
     }
 

@@ -1,14 +1,44 @@
-//! Bounded submission queue with backpressure and per-job completion
-//! handles.
+//! Bounded submission queue with backpressure, an explicit per-ticket
+//! lifecycle, multi-slot (scatter-atomic) admission, and failure-domain
+//! retry support.
 //!
-//! The seed coordinator had a single unbounded mpsc queue and a blocking
-//! `drain(n)` whose results arrived in completion order — order-fragile
-//! and impossible to apply admission control to. The [`Scheduler`]
-//! replaces it:
+//! # Job lifecycle
+//!
+//! Every ticket moves through an explicit state machine instead of the
+//! seed's implicit oneshot-slot lifecycle:
+//!
+//! ```text
+//!  submit ──→ Queued ───pop───→ Dispatched ──execute──┬─ ok / permanent ──→ Done
+//!               ▲  │                                  │
+//!               │  └─ deadline expired at pop ──→ Shed│
+//!               │                                     │
+//!               └────── Retrying(n) ←── transient error, attempts and
+//!                        (re-queued with the failing region excluded)
+//! ```
+//!
+//! * **Queued** — admitted, waiting in the bounded queue.
+//! * **Dispatched** — a worker popped the ticket and is executing it.
+//! * **Retrying(n)** — attempt `n` failed on a region with a *transient*
+//!   error; the ticket re-entered the queue with that region excluded
+//!   (`Scheduler::retry`), so the next attempt lands on a different
+//!   fault domain. Bounded by the job's [`RetryPolicy`] and by the
+//!   number of compatible regions.
+//! * **Done** — a result (success or final error) was delivered to the
+//!   [`JobHandle`].
+//! * **Shed** — the job's [`deadline_us`](super::Job::deadline_us)
+//!   expired while it was still queued; it was dropped *at pop time*
+//!   without executing, and the handle resolved with a
+//!   [`shed`](super::JobResult::shed) result.
+//!
+//! # Admission
 //!
 //! * **bounded**: at most [`SchedulerConfig::capacity`] jobs queue; above
 //!   that, submission either blocks or rejects with
 //!   [`Error::Busy`](crate::Error::Busy) ([`Backpressure`]).
+//! * **scatter-atomic**: a K-shard scatter first takes a multi-slot
+//!   [`Reservation`] ([`Scheduler::reserve`]) and then commits every
+//!   shard against it — all K shards enter the queue or none do, so
+//!   [`Backpressure::Reject`] can never strand half a scatter.
 //! * **per-job handles**: every submission returns a [`JobHandle`] the
 //!   caller can wait on independently, in any order.
 //! * **policy**: FIFO, or priority order with FIFO tie-breaking
@@ -20,7 +50,7 @@
 //!
 //! ```
 //! use picaso::compiler::GemmShape;
-//! use picaso::coordinator::{Job, JobKind, JobResult, Scheduler, SchedulerConfig};
+//! use picaso::coordinator::{Job, JobKind, JobResult, Scheduler, SchedulerConfig, TicketState};
 //! use picaso::metrics::ServingMetrics;
 //! use std::sync::Arc;
 //!
@@ -28,9 +58,11 @@
 //! let shape = GemmShape { m: 1, k: 2, n: 1 };
 //! let job = Job::new(7, JobKind::Gemm { shape, width: 8, a: vec![1, 2], b: vec![3, 4] });
 //! let handle = sched.submit(job)?;
+//! assert_eq!(handle.state(), TicketState::Queued);
 //!
 //! // ... a worker thread pops the ticket and completes it:
 //! let ticket = sched.pop_blocking().expect("queue is non-empty");
+//! assert_eq!(handle.state(), TicketState::Dispatched);
 //! let id = ticket.job.id;
 //! ticket.complete(JobResult {
 //!     id,
@@ -42,9 +74,12 @@
 //!     backend: None,
 //!     batch_size: 1,
 //!     shards: 1,
+//!     retries: 0,
+//!     shed: false,
 //!     error: None,
 //! });
 //!
+//! assert_eq!(handle.state(), TicketState::Done);
 //! assert_eq!(handle.wait().output, vec![11]);
 //! # Ok::<(), picaso::Error>(())
 //! ```
@@ -73,6 +108,59 @@ pub struct ShardInfo {
     pub index: usize,
     /// Total shards the parent was split into.
     pub of: usize,
+}
+
+/// One ticket's position in the job lifecycle (see the module docs for
+/// the state diagram). Observable through [`JobHandle::state`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketState {
+    /// Admitted and waiting in the queue.
+    Queued,
+    /// Popped by a worker; executing (or batched for execution).
+    Dispatched,
+    /// Attempt `n` failed with a transient error; re-queued with the
+    /// failing region excluded (`n` counts completed attempts, so the
+    /// first retry is `Retrying(1)`).
+    Retrying(u32),
+    /// A final result (success or error) was delivered.
+    Done,
+    /// Dropped unexecuted at pop time because the job's deadline had
+    /// already expired in the queue.
+    Shed,
+}
+
+/// Failure-domain retry policy of one job: how many total execution
+/// attempts a ticket may consume. Each retry re-queues the ticket with
+/// the failed worker region excluded, so attempts always move to a fresh
+/// fault domain; a ticket fails early when no compatible region remains
+/// untried, whatever the attempt budget says.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total execution attempts allowed per ticket (>= 1; 1 disables
+    /// retry). Only *transient* errors (backend execution faults) are
+    /// retried — deterministic failures such as operand-shape mismatches
+    /// fail immediately on any region and are not worth a second domain.
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    /// Three attempts: the first execution plus up to two retries on
+    /// fresh regions — resilience on by default, bounded tightly.
+    fn default() -> Self {
+        Self { max_attempts: 3 }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-fast policy: one attempt, no retry (the seed behaviour).
+    pub fn none() -> Self {
+        Self { max_attempts: 1 }
+    }
+
+    /// The attempt budget, clamped to at least one execution.
+    pub fn attempts(&self) -> u32 {
+        self.max_attempts.max(1)
+    }
 }
 
 /// Queue ordering policy.
@@ -113,6 +201,7 @@ impl Default for SchedulerConfig {
 struct HandleShared {
     slot: Mutex<Option<JobResult>>,
     done: Condvar,
+    state: Mutex<TicketState>,
 }
 
 /// Waitable handle to one submitted job, returned by
@@ -124,9 +213,12 @@ struct HandleShared {
 /// submissions — a **gather barrier** over the shard sub-handles:
 /// [`wait`](Self::wait) blocks for every shard in shard-index
 /// (submission) order, merges the partial outputs back into the parent
-/// `m×n` matrix, rolls the shard [`RunStats`] up into one total, and
-/// propagates the first shard failure as the parent's error (tagged
-/// `shard i/K` so the operator can see which partition died).
+/// `m×n` matrix, rolls the shard [`RunStats`] and retry counts up into
+/// one total, and propagates the first shard failure as the parent's
+/// error (tagged `shard i/K` so the operator can see which partition
+/// died). A shard only fails after its retry policy and fault domains
+/// are exhausted, so one bad region degrades a scatter's latency, not
+/// its result.
 pub struct JobHandle {
     id: u64,
     inner: HandleInner,
@@ -155,6 +247,34 @@ impl JobHandle {
         match &self.inner {
             HandleInner::Single(_) => 1,
             HandleInner::Gather { parts, .. } => parts.len(),
+        }
+    }
+
+    /// Current lifecycle state (see [`TicketState`]). For a sharded
+    /// handle this is the aggregate: the state of the first shard still
+    /// in flight, or — once every shard is terminal — `Shed` if any
+    /// shard was shed (matching the merged result's
+    /// [`shed`](super::JobResult::shed) flag) and `Done` otherwise.
+    pub fn state(&self) -> TicketState {
+        match &self.inner {
+            HandleInner::Single(shared) => {
+                *shared.state.lock().unwrap_or_else(|e| e.into_inner())
+            }
+            HandleInner::Gather { parts, .. } => {
+                let mut any_shed = false;
+                for (_, _, h) in parts {
+                    match h.state() {
+                        TicketState::Shed => any_shed = true,
+                        TicketState::Done => {}
+                        in_flight => return in_flight,
+                    }
+                }
+                if any_shed {
+                    TicketState::Shed
+                } else {
+                    TicketState::Done
+                }
+            }
         }
     }
 
@@ -231,16 +351,17 @@ impl JobHandle {
 }
 
 /// Merge shard results into the parent [`JobResult`] (gather half of
-/// scatter–gather). Outputs reassemble at their column offsets; cycles
-/// and instruction counts roll up by summation; `queue_us` takes the
-/// maximum over shards, and `wall_us` is the **critical path**: shard
-/// wall shares are summed per worker region (shards that landed on the
-/// same region ran serially) and the largest per-region sum wins
-/// (distinct regions run concurrently). `worker` is the first shard's
-/// region and `batch_size` the largest batch any shard rode in. The
-/// first failed shard (by index) fails the parent with a `shard i/K`
-/// context prefix, and the merged output is withheld (partial results
-/// are not returned).
+/// scatter–gather). Outputs reassemble at their column offsets; cycles,
+/// instruction counts and retry counts roll up by summation; `queue_us`
+/// takes the maximum over shards, and `wall_us` is the **critical
+/// path**: shard wall shares are summed per worker region (shards that
+/// landed on the same region ran serially) and the largest per-region
+/// sum wins (distinct regions run concurrently). `worker` is the first
+/// shard's region and `batch_size` the largest batch any shard rode in.
+/// The first failed shard (by index) fails the parent with a
+/// `shard i/K` context prefix, and the merged output is withheld
+/// (partial results are not returned). A shard that was shed marks the
+/// merged result shed as well.
 fn merge_shard_results(
     id: u64,
     shape: GemmShape,
@@ -251,6 +372,8 @@ fn merge_shard_results(
     let mut stats = RunStats::default();
     let mut queue_us = 0.0f64;
     let mut batch_size = 0usize;
+    let mut retries = 0u32;
+    let mut shed = false;
     let mut backend = results.first().and_then(|r| r.backend);
     let worker = results.first().map(|r| r.worker).unwrap_or(usize::MAX);
     // Per-region wall accumulation (tiny shard counts — linear scan).
@@ -259,6 +382,8 @@ fn merge_shard_results(
     for (idx, r) in results.iter().enumerate() {
         stats.merge(&r.stats);
         queue_us = queue_us.max(r.queue_us);
+        retries += r.retries;
+        shed |= r.shed;
         match region_walls.iter_mut().find(|(w, _)| *w == r.worker) {
             Some((_, sum)) => *sum += r.wall_us,
             None => region_walls.push((r.worker, r.wall_us)),
@@ -296,6 +421,8 @@ fn merge_shard_results(
         worker,
         batch_size,
         shards: of,
+        retries,
+        shed,
         error,
     }
 }
@@ -311,16 +438,30 @@ pub struct Completion {
 
 impl Completion {
     fn pair(id: u64) -> (JobHandle, Completion) {
-        let shared = Arc::new(HandleShared { slot: Mutex::new(None), done: Condvar::new() });
+        let shared = Arc::new(HandleShared {
+            slot: Mutex::new(None),
+            done: Condvar::new(),
+            state: Mutex::new(TicketState::Queued),
+        });
         (
             JobHandle { id, inner: HandleInner::Single(Arc::clone(&shared)) },
             Completion { id, shared, delivered: false },
         )
     }
 
-    /// Deliver the result and wake the waiter.
+    fn set_state(&self, s: TicketState) {
+        *self.shared.state.lock().unwrap_or_else(|e| e.into_inner()) = s;
+    }
+
+    /// Deliver the result and wake the waiter. The result lands in the
+    /// slot *before* the state turns terminal, so a poller that
+    /// observes `Done`/`Shed` is guaranteed the result has been
+    /// delivered (it may already have been consumed by `try_take` —
+    /// results are taken exactly once).
     pub fn complete(mut self, result: JobResult) {
+        let state = if result.shed { TicketState::Shed } else { TicketState::Done };
         self.deliver(result);
+        self.set_state(state);
     }
 
     fn deliver(&mut self, result: JobResult) {
@@ -344,16 +485,21 @@ impl Drop for Completion {
                 backend: None,
                 batch_size: 0,
                 shards: 1,
+                retries: 0,
+                shed: false,
                 error: Some("job abandoned: completion dropped before a result was delivered".into()),
             };
             self.deliver(abandoned);
+            self.set_state(TicketState::Done);
         }
     }
 }
 
 /// A queued job together with its completion channel and queueing
 /// metadata. Produced by the pop/collect operations; consumed by
-/// [`Ticket::complete`].
+/// [`Ticket::complete`] — or handed back to the scheduler for
+/// re-queueing when a region fails it transiently (failure-domain
+/// retry).
 pub struct Ticket {
     /// The submitted job.
     pub job: Job,
@@ -362,9 +508,13 @@ pub struct Ticket {
     pub priority: u8,
     /// Monotonic submission sequence number (FIFO tie-break).
     pub seq: u64,
-    /// When the job entered the queue.
+    /// When the job first entered the queue. Retries keep the original
+    /// timestamp: queue wait, end-to-end latency and deadline shedding
+    /// are all measured against first admission, not the latest
+    /// re-queue.
     pub enqueued_at: Instant,
-    /// Micro-batching coalescing key derived from the job payload.
+    /// Micro-batching coalescing key derived from the job payload (and
+    /// shard linkage, for sharded session jobs).
     pub key: BatchKey,
     /// Set when this ticket is one shard of a scattered logical job:
     /// the parent id, this shard's index, and the total shard count.
@@ -372,13 +522,40 @@ pub struct Ticket {
     /// still respected); the linkage exists for the gather barrier and
     /// for observability.
     pub shard: Option<ShardInfo>,
+    /// Execution attempts already completed (0 on first dispatch).
+    pub attempt: u32,
+    /// Worker regions that already failed this ticket — excluded from
+    /// later dispatch so every retry lands on a fresh fault domain.
+    pub tried_workers: Vec<usize>,
     completion: Completion,
 }
 
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket")
+            .field("job", &self.job.id)
+            .field("priority", &self.priority)
+            .field("seq", &self.seq)
+            .field("key", &self.key)
+            .field("shard", &self.shard)
+            .field("attempt", &self.attempt)
+            .field("tried_workers", &self.tried_workers)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Ticket {
-    /// Time this job has spent queued so far, in microseconds.
+    /// Time this job has spent since first admission, in microseconds.
     pub fn queue_wait_us(&self) -> f64 {
         self.enqueued_at.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// True when the job carried a deadline and it has already expired
+    /// (measured from first admission).
+    pub fn deadline_expired(&self) -> bool {
+        self.job
+            .deadline_us
+            .is_some_and(|d| self.queue_wait_us() > d)
     }
 
     /// Deliver the job's result to its [`JobHandle`].
@@ -386,13 +563,45 @@ impl Ticket {
         self.completion.complete(result);
     }
 
-    /// True if a worker of the given class may run this ticket, per the
-    /// job's [`backend`](super::Job::backend) tag (`class = None` means
-    /// the worker accepts anything — the single-backend legacy path).
-    pub fn eligible_for(&self, class: Option<BackendClass>) -> bool {
+    /// Resolve this ticket as shed: the deadline expired in the queue,
+    /// so the job is dropped without executing and its handle gets an
+    /// empty [`shed`](super::JobResult::shed) result.
+    fn shed(self, metrics: &ServingMetrics) {
+        metrics.record_shed();
+        let queued = self.queue_wait_us();
+        let deadline = self.job.deadline_us.unwrap_or(0.0);
+        let id = self.job.id;
+        self.complete(JobResult {
+            id,
+            output: Vec::new(),
+            stats: Default::default(),
+            queue_us: queued,
+            wall_us: 0.0,
+            worker: usize::MAX,
+            backend: None,
+            batch_size: 0,
+            shards: 1,
+            retries: self.attempt,
+            shed: true,
+            error: Some(format!(
+                "shed: deadline {deadline:.0}us expired after {queued:.0}us in queue"
+            )),
+        });
+    }
+
+    /// True if a worker may run this ticket: the worker's class must
+    /// satisfy the job's [`backend`](super::Job::backend) tag (`class =
+    /// None` accepts anything — the single-backend legacy path), and the
+    /// worker must not be an already-failed fault domain for this ticket
+    /// (`worker = None` skips the domain check — direct pops outside a
+    /// worker pool).
+    pub fn eligible_for(&self, worker: Option<usize>, class: Option<BackendClass>) -> bool {
+        if worker.is_some_and(|w| self.tried_workers.contains(&w)) {
+            return false;
+        }
         match (class, self.job.backend) {
             (None, _) | (_, None) => true,
-            (Some(worker), Some(job)) => worker == job,
+            (Some(worker_class), Some(job_class)) => worker_class == job_class,
         }
     }
 }
@@ -403,6 +612,16 @@ struct State {
     next_seq: u64,
     /// Total submissions ever accepted — the batcher's arrival clock.
     arrivals: u64,
+    /// Queue slots held by outstanding [`Reservation`]s but not yet
+    /// committed: counted against capacity so a scatter's slots cannot
+    /// be stolen between `reserve` and the shard submissions.
+    reserved: usize,
+    /// True while a [`Backpressure::Block`] reservation is accumulating
+    /// its slots. Single submitters defer to it (so a stream of them
+    /// cannot starve a multi-slot scatter out of ever seeing `k` free
+    /// slots at once), and other blocking reservations queue behind it
+    /// (so two half-filled reservations can never deadlock each other).
+    reserve_waiter: bool,
 }
 
 struct Inner {
@@ -422,6 +641,52 @@ pub struct Scheduler {
     inner: Arc<Inner>,
 }
 
+/// A multi-slot admission hold returned by [`Scheduler::reserve`]: `k`
+/// queue slots are debited from capacity atomically, then committed one
+/// by one via [`submit`](Reservation::submit) (each commit converts a
+/// reserved slot into a queued ticket). Dropping the reservation
+/// releases any uncommitted slots — so a scatter either fully enters the
+/// queue or leaves no trace.
+pub struct Reservation {
+    sched: Scheduler,
+    remaining: usize,
+}
+
+impl Reservation {
+    /// Reserved slots not yet committed.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Commit one job against this reservation. Never blocks on
+    /// capacity (the slot is already held); fails only if the
+    /// reservation is exhausted or the scheduler has closed.
+    pub fn submit(
+        &mut self,
+        job: Job,
+        priority: u8,
+        shard: Option<ShardInfo>,
+    ) -> Result<JobHandle> {
+        if self.remaining == 0 {
+            return Err(Error::Runtime("reservation exhausted".into()));
+        }
+        let h = self.sched.submit_inner(job, priority, shard, true)?;
+        self.remaining -= 1;
+        Ok(h)
+    }
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        if self.remaining > 0 {
+            let mut st = self.sched.lock();
+            st.reserved = st.reserved.saturating_sub(self.remaining);
+            drop(st);
+            self.sched.inner.not_full.notify_all();
+        }
+    }
+}
+
 impl Scheduler {
     /// Build a scheduler. Queue-depth observations go to `metrics`.
     pub fn new(cfg: SchedulerConfig, metrics: Arc<ServingMetrics>) -> Result<Self> {
@@ -436,6 +701,8 @@ impl Scheduler {
                     closed: false,
                     next_seq: 0,
                     arrivals: 0,
+                    reserved: 0,
+                    reserve_waiter: false,
                 }),
                 not_empty: Condvar::new(),
                 not_full: Condvar::new(),
@@ -465,26 +732,45 @@ impl Scheduler {
     /// [`SchedulerConfig::backpressure`]; after [`close`](Self::close) it
     /// always fails.
     pub fn submit_with_priority(&self, job: Job, priority: u8) -> Result<JobHandle> {
-        self.submit_shard_with_priority(job, priority, None)
+        self.submit_inner(job, priority, None, false)
     }
 
     /// [`submit_with_priority`](Self::submit_with_priority) for one
     /// shard of a scattered logical job: the ticket carries the parent
     /// linkage so workers and metrics can attribute it (coordinator
-    /// scatter path).
+    /// scatter path). Prefer committing shards against a
+    /// [`Reservation`] so the scatter admits atomically.
     pub(crate) fn submit_shard_with_priority(
         &self,
         job: Job,
         priority: u8,
         shard: Option<ShardInfo>,
     ) -> Result<JobHandle> {
-        let key = BatchKey::of(&job.kind);
+        self.submit_inner(job, priority, shard, false)
+    }
+
+    fn submit_inner(
+        &self,
+        job: Job,
+        priority: u8,
+        shard: Option<ShardInfo>,
+        from_reservation: bool,
+    ) -> Result<JobHandle> {
+        let key = BatchKey::for_ticket(&job.kind, shard);
         let mut st = self.lock();
         loop {
             if st.closed {
                 return Err(Error::Runtime("scheduler is closed".into()));
             }
-            if st.items.len() < self.inner.cfg.capacity {
+            if from_reservation {
+                // The slot was debited at reserve time: convert it.
+                st.reserved = st.reserved.saturating_sub(1);
+                break;
+            }
+            // Defer to an accumulating multi-slot reservation (Block
+            // mode only): without this, a stream of single submitters
+            // would race away every freed slot and starve the scatter.
+            if !st.reserve_waiter && st.items.len() + st.reserved < self.inner.cfg.capacity {
                 break;
             }
             match self.inner.cfg.backpressure {
@@ -503,25 +789,168 @@ impl Scheduler {
         let seq = st.next_seq;
         st.next_seq += 1;
         st.arrivals += 1;
-        let ticket =
-            Ticket { job, priority, seq, enqueued_at: Instant::now(), key, shard, completion };
-        match self.inner.cfg.policy {
-            QueuePolicy::Fifo => st.items.push_back(ticket),
-            QueuePolicy::Priority => {
-                // Before the first strictly-lower-priority ticket: stable
-                // (FIFO) among equals.
-                let idx = st
-                    .items
-                    .iter()
-                    .position(|t| t.priority < priority)
-                    .unwrap_or(st.items.len());
-                st.items.insert(idx, ticket);
-            }
-        }
+        let ticket = Ticket {
+            job,
+            priority,
+            seq,
+            enqueued_at: Instant::now(),
+            key,
+            shard,
+            attempt: 0,
+            tried_workers: Vec::new(),
+            completion,
+        };
+        self.insert_ticket(&mut st, ticket, false);
         self.inner.metrics.record_depth(st.items.len());
         drop(st);
         self.inner.not_empty.notify_all();
         Ok(handle)
+    }
+
+    /// Insert per queue policy. `front_of_band` places the ticket ahead
+    /// of its priority peers (used for retries, which were admitted
+    /// before everything currently queued).
+    fn insert_ticket(&self, st: &mut State, ticket: Ticket, front_of_band: bool) {
+        let priority = ticket.priority;
+        match (self.inner.cfg.policy, front_of_band) {
+            (QueuePolicy::Fifo, false) => st.items.push_back(ticket),
+            (QueuePolicy::Fifo, true) => st.items.push_front(ticket),
+            (QueuePolicy::Priority, _) => {
+                // Stable among equals; retries go ahead of their band.
+                let idx = st
+                    .items
+                    .iter()
+                    .position(|t| {
+                        if front_of_band {
+                            t.priority <= priority
+                        } else {
+                            t.priority < priority
+                        }
+                    })
+                    .unwrap_or(st.items.len());
+                st.items.insert(idx, ticket);
+            }
+        }
+    }
+
+    /// Atomically reserve `k` queue slots for a scatter (all-or-none
+    /// admission). Under [`Backpressure::Reject`] the decision is
+    /// instantaneous: either `k` slots are free right now or the call
+    /// fails with [`Error::Busy`](crate::Error::Busy) — a partial
+    /// scatter can never be admitted. Under [`Backpressure::Block`] the
+    /// reservation takes the (single) accumulation turn and claims
+    /// freed slots as workers pop, while plain submitters defer to it —
+    /// so a K-slot scatter completes after at most K pops instead of
+    /// racing single submissions for a simultaneous K-slot window it
+    /// might never see. A scatter wider than the queue itself is a
+    /// configuration error (it could never fit).
+    pub fn reserve(&self, k: usize) -> Result<Reservation> {
+        if k > self.inner.cfg.capacity {
+            return Err(Error::Config(format!(
+                "scatter of {k} shards exceeds the submission queue capacity {}",
+                self.inner.cfg.capacity
+            )));
+        }
+        let mut st = self.lock();
+        if st.closed {
+            return Err(Error::Runtime("scheduler is closed".into()));
+        }
+        if k == 0 {
+            return Ok(Reservation { sched: self.clone(), remaining: 0 });
+        }
+        let fits =
+            |st: &State| st.items.len() + st.reserved + k <= self.inner.cfg.capacity;
+        match self.inner.cfg.backpressure {
+            Backpressure::Reject => {
+                if fits(&st) {
+                    st.reserved += k;
+                    Ok(Reservation { sched: self.clone(), remaining: k })
+                } else {
+                    Err(Error::Busy(format!(
+                        "submission queue cannot admit a {k}-shard scatter atomically \
+                         ({} of {} slots in use)",
+                        st.items.len() + st.reserved,
+                        self.inner.cfg.capacity
+                    )))
+                }
+            }
+            Backpressure::Block => {
+                // Wait for the accumulation turn: one blocking
+                // reservation at a time, so two half-filled ones can
+                // never deadlock each other.
+                while st.reserve_waiter {
+                    if st.closed {
+                        return Err(Error::Runtime("scheduler is closed".into()));
+                    }
+                    st = self.inner.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+                if st.closed {
+                    return Err(Error::Runtime("scheduler is closed".into()));
+                }
+                st.reserve_waiter = true;
+                let mut have = 0usize;
+                loop {
+                    let free = self
+                        .inner
+                        .cfg
+                        .capacity
+                        .saturating_sub(st.items.len() + st.reserved);
+                    let take = free.min(k - have);
+                    st.reserved += take;
+                    have += take;
+                    if have == k {
+                        break;
+                    }
+                    if st.closed {
+                        // Release what was accumulated and bow out.
+                        st.reserved = st.reserved.saturating_sub(have);
+                        st.reserve_waiter = false;
+                        drop(st);
+                        self.inner.not_full.notify_all();
+                        return Err(Error::Runtime("scheduler is closed".into()));
+                    }
+                    st = self.inner.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+                st.reserve_waiter = false;
+                drop(st);
+                // Wake deferred submitters and queued reservations.
+                self.inner.not_full.notify_all();
+                Ok(Reservation { sched: self.clone(), remaining: k })
+            }
+        }
+    }
+
+    /// Re-queue a ticket that failed transiently on `failed_worker`
+    /// (failure-domain retry): the attempt counter advances, the failed
+    /// region joins the ticket's exclusion list, the handle state moves
+    /// to [`TicketState::Retrying`], and the ticket re-enters the queue
+    /// *ahead* of its priority band (it was admitted before anything
+    /// currently queued). Capacity is deliberately bypassed — the job
+    /// was already admitted once, and a worker must never block on its
+    /// own queue. Returns the ticket back if the scheduler has closed
+    /// (the caller should fail it instead of retrying).
+    pub(crate) fn retry(
+        &self,
+        mut t: Ticket,
+        failed_worker: usize,
+    ) -> std::result::Result<(), Ticket> {
+        let mut st = self.lock();
+        if st.closed {
+            return Err(t);
+        }
+        t.attempt += 1;
+        if !t.tried_workers.contains(&failed_worker) {
+            t.tried_workers.push(failed_worker);
+        }
+        t.completion.set_state(TicketState::Retrying(t.attempt));
+        t.seq = st.next_seq;
+        st.next_seq += 1;
+        st.arrivals += 1;
+        self.insert_ticket(&mut st, t, true);
+        self.inner.metrics.record_depth(st.items.len());
+        drop(st);
+        self.inner.not_empty.notify_all();
+        Ok(())
     }
 
     /// Jobs currently queued.
@@ -544,23 +973,66 @@ impl Scheduler {
         self.inner.not_full.notify_all();
     }
 
+    /// Remove every queued ticket whose deadline has expired. Called
+    /// with the state lock held; the removed tickets are shed *after*
+    /// the lock is released by the caller.
+    fn take_expired(st: &mut State) -> Vec<Ticket> {
+        let mut expired = Vec::new();
+        let mut i = 0;
+        while i < st.items.len() {
+            if st.items[i].deadline_expired() {
+                expired.push(st.items.remove(i).expect("index in range"));
+            } else {
+                i += 1;
+            }
+        }
+        expired
+    }
+
+    /// Shed the given expired tickets (outside the state lock) and wake
+    /// blocked submitters for the freed slots.
+    fn shed_all(&self, expired: Vec<Ticket>) {
+        if expired.is_empty() {
+            return;
+        }
+        for t in expired {
+            t.shed(&self.inner.metrics);
+        }
+        self.inner.not_full.notify_all();
+    }
+
     /// Pop the head-of-line ticket, blocking while the queue is empty.
     /// Returns `None` once the scheduler is closed **and** drained.
     /// Equivalent to [`pop_blocking_for`](Self::pop_blocking_for) with no
-    /// class filter.
+    /// worker or class filter.
     pub fn pop_blocking(&self) -> Option<Ticket> {
-        self.pop_blocking_for(None)
+        self.pop_blocking_for(None, None)
     }
 
-    /// Pop the first ticket a worker of `class` may run, blocking while
-    /// none is queued. Tickets tagged for other backend classes are left
-    /// in place for their own workers. Returns `None` once the scheduler
+    /// Pop the first ticket worker `worker` of `class` may run, blocking
+    /// while none is queued. Tickets tagged for other backend classes —
+    /// or whose retry history already burned this worker's fault domain —
+    /// are left in place for other workers. Tickets whose deadline
+    /// expired in the queue are shed here (any worker sheds any expired
+    /// ticket, regardless of class). Returns `None` once the scheduler
     /// is closed **and** holds no eligible ticket.
-    pub fn pop_blocking_for(&self, class: Option<BackendClass>) -> Option<Ticket> {
+    pub fn pop_blocking_for(
+        &self,
+        worker: Option<usize>,
+        class: Option<BackendClass>,
+    ) -> Option<Ticket> {
         let mut st = self.lock();
         loop {
-            if let Some(idx) = st.items.iter().position(|t| t.eligible_for(class)) {
+            let expired = Self::take_expired(&mut st);
+            if !expired.is_empty() {
+                drop(st);
+                self.shed_all(expired);
+                st = self.lock();
+                continue;
+            }
+            if let Some(idx) = st.items.iter().position(|t| t.eligible_for(worker, class)) {
                 let t = st.items.remove(idx).expect("position is in range");
+                t.completion.set_state(TicketState::Dispatched);
                 drop(st);
                 self.inner.not_full.notify_all();
                 return Some(t);
@@ -573,7 +1045,8 @@ impl Scheduler {
     }
 
     /// Remove and return the first queued ticket whose coalescing key
-    /// matches and that a worker of `class` may run, without blocking.
+    /// matches and that worker `worker` of `class` may run, without
+    /// blocking. Expired tickets encountered here are shed first.
     ///
     /// `exclude_parents` keeps scatter–gather honest: shards whose
     /// parent job already has a shard in the batch being built are
@@ -583,26 +1056,45 @@ impl Scheduler {
     pub fn try_pop_matching(
         &self,
         key: &BatchKey,
+        worker: Option<usize>,
         class: Option<BackendClass>,
         exclude_parents: &[u64],
     ) -> Option<Ticket> {
         let mut st = self.lock();
+        let expired = Self::take_expired(&mut st);
         let idx = st.items.iter().position(|t| {
             &t.key == key
-                && t.eligible_for(class)
+                && t.eligible_for(worker, class)
                 && !t.shard.is_some_and(|s| exclude_parents.contains(&s.parent))
-        })?;
-        let t = st.items.remove(idx).expect("position is in range");
+        });
+        let t = idx.map(|i| {
+            let t = st.items.remove(i).expect("position is in range");
+            t.completion.set_state(TicketState::Dispatched);
+            t
+        });
         drop(st);
-        self.inner.not_full.notify_all();
-        Some(t)
+        self.shed_all(expired);
+        if t.is_some() {
+            self.inner.not_full.notify_all();
+        }
+        t
     }
 
-    /// The arrival counter — increases by one per accepted submission.
-    /// The batcher uses it to sleep for *new* arrivals rather than
+    /// The arrival counter — increases by one per accepted submission
+    /// (retries count too: they are new dispatch opportunities). The
+    /// batcher uses it to sleep for *new* arrivals rather than
     /// busy-polling a non-empty queue of non-matching jobs.
     pub fn arrivals(&self) -> u64 {
         self.lock().arrivals
+    }
+
+    /// The live queue-depth signal for adaptive batching: a
+    /// time-decaying peak-hold of the depths observed at enqueue (see
+    /// [`ServingMetrics::queue_depth_signal`]) — stale bursts are
+    /// forgotten within a few decay constants, so an idle queue reads
+    /// as idle.
+    pub fn queue_depth_signal(&self) -> f64 {
+        self.inner.metrics.queue_depth_signal()
     }
 
     /// Block until the arrival counter moves past `last_seen`, the
@@ -665,6 +1157,8 @@ mod tests {
             backend: None,
             batch_size: 1,
             shards: 1,
+            retries: 0,
+            shed: false,
             error: None,
         }
     }
@@ -683,6 +1177,190 @@ mod tests {
         t1.complete(ok_result(1));
         assert_eq!(h2.wait().output, vec![2]);
         assert_eq!(h1.wait().output, vec![1]);
+    }
+
+    #[test]
+    fn ticket_state_machine_transitions() {
+        let s = sched(SchedulerConfig::default());
+        let h = s.submit(tiny_job(1)).unwrap();
+        assert_eq!(h.state(), TicketState::Queued);
+        let t = s.pop_blocking().unwrap();
+        assert_eq!(h.state(), TicketState::Dispatched);
+        // Transient region failure: the scheduler re-queues the ticket
+        // with the failing worker excluded.
+        s.retry(t, 0).expect("open scheduler accepts retries");
+        assert_eq!(h.state(), TicketState::Retrying(1));
+        // The failed region may not take the ticket again.
+        assert!(s.try_pop_matching(
+            &BatchKey::for_ticket(&tiny_job(1).kind, None),
+            Some(0),
+            None,
+            &[],
+        ).is_none());
+        // A fresh region picks it up and completes it.
+        let t = s.pop_blocking_for(Some(1), None).unwrap();
+        assert_eq!(t.attempt, 1);
+        assert_eq!(t.tried_workers, vec![0]);
+        let mut r = ok_result(1);
+        r.retries = t.attempt;
+        t.complete(r);
+        assert_eq!(h.state(), TicketState::Done);
+        assert_eq!(h.wait().retries, 1);
+    }
+
+    #[test]
+    fn retry_goes_ahead_of_its_priority_band() {
+        let s = sched(SchedulerConfig::default());
+        s.submit(tiny_job(1)).unwrap();
+        s.submit(tiny_job(2)).unwrap();
+        let t = s.pop_blocking().unwrap(); // job 1
+        assert_eq!(t.job.id, 1);
+        s.retry(t, 0).unwrap();
+        // The retried job 1 dispatches before job 2 (it was admitted
+        // first and has already waited through one attempt).
+        let t = s.pop_blocking_for(Some(1), None).unwrap();
+        assert_eq!(t.job.id, 1);
+    }
+
+    #[test]
+    fn retry_after_close_returns_the_ticket() {
+        let s = sched(SchedulerConfig::default());
+        let h = s.submit(tiny_job(5)).unwrap();
+        let t = s.pop_blocking().unwrap();
+        s.close();
+        let t = s.retry(t, 0).expect_err("closed scheduler refuses retries");
+        t.complete(ok_result(5));
+        assert!(h.wait().error.is_none());
+    }
+
+    #[test]
+    fn deadline_expired_tickets_shed_at_pop() {
+        let s = sched(SchedulerConfig::default());
+        // Deadline 0: expired the moment anything pops.
+        let h_shed = s.submit(tiny_job(1).with_deadline_us(0.0)).unwrap();
+        let h_live = s.submit(tiny_job(2)).unwrap();
+        let t = s.pop_blocking().unwrap();
+        assert_eq!(t.job.id, 2, "expired head is shed, live job dispatches");
+        t.complete(ok_result(2));
+        let r = h_shed.wait();
+        assert!(r.shed, "result must be marked shed");
+        assert!(r.error.as_deref().unwrap_or("").contains("shed"), "{:?}", r.error);
+        assert!(r.output.is_empty());
+        assert_eq!(h_shed.state(), TicketState::Shed);
+        assert!(h_live.wait().error.is_none());
+
+        // A gather whose shards all shed reports Shed, not Done —
+        // matching the merged result's `shed` flag.
+        let shape = GemmShape { m: 1, k: 2, n: 2 };
+        let mut parts = Vec::new();
+        for idx in 0..2usize {
+            let h = s
+                .submit_shard_with_priority(
+                    tiny_job(40).with_deadline_us(0.0),
+                    0,
+                    Some(ShardInfo { parent: 40, index: idx, of: 2 }),
+                )
+                .unwrap();
+            parts.push((idx, 1usize, h));
+        }
+        let parent = JobHandle::gather(40, shape, parts);
+        // A non-blocking pop attempt sheds the expired tickets and
+        // returns nothing.
+        let key = BatchKey::for_ticket(&tiny_job(40).kind, None);
+        assert!(s.try_pop_matching(&key, None, None, &[]).is_none());
+        assert_eq!(parent.state(), TicketState::Shed, "all-shed gather is Shed, not Done");
+        let merged = parent.try_take().expect("all shards resolved");
+        assert!(merged.shed, "merged result carries the shed flag");
+        assert!(merged.error.is_some());
+    }
+
+    #[test]
+    fn reservation_is_all_or_none() {
+        let s = sched(SchedulerConfig {
+            capacity: 4,
+            backpressure: Backpressure::Reject,
+            ..Default::default()
+        });
+        s.submit(tiny_job(1)).unwrap();
+        s.submit(tiny_job(2)).unwrap();
+        // 2 of 4 slots used: a 3-shard scatter must reject atomically.
+        let err = s.reserve(3).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        assert_eq!(s.depth(), 2, "no partial scatter admitted");
+        // A 2-shard scatter fits: both commits succeed without blocking.
+        let mut res = s.reserve(2).unwrap();
+        assert_eq!(res.remaining(), 2);
+        res.submit(tiny_job(3), 0, None).unwrap();
+        res.submit(tiny_job(4), 0, None).unwrap();
+        assert!(res.submit(tiny_job(5), 0, None).is_err(), "reservation exhausted");
+        assert_eq!(s.depth(), 4);
+        // Queue full again: plain submission rejects.
+        assert!(matches!(s.submit(tiny_job(6)).unwrap_err(), Error::Busy(_)));
+    }
+
+    #[test]
+    fn blocking_reservation_is_not_starved_by_single_submitters() {
+        // Queue full under Block: a 2-slot reservation parks first, a
+        // single submitter parks after it. As slots free one at a time
+        // the reservation must accumulate both (submitters defer), so
+        // the scatter is admitted whole, ahead of the single job.
+        let s = sched(SchedulerConfig {
+            capacity: 2,
+            backpressure: Backpressure::Block,
+            ..Default::default()
+        });
+        s.submit(tiny_job(1)).unwrap();
+        s.submit(tiny_job(2)).unwrap();
+        let s_res = s.clone();
+        let reserver = std::thread::spawn(move || {
+            let mut r = s_res.reserve(2).expect("reservation completes");
+            let h1 = r.submit(tiny_job(10), 0, None).unwrap();
+            let h2 = r.submit(tiny_job(11), 0, None).unwrap();
+            (h1, h2)
+        });
+        // Let the reservation take the accumulation turn, then park a
+        // single submitter behind it.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let s_sub = s.clone();
+        let submitter = std::thread::spawn(move || s_sub.submit(tiny_job(20)).map(|h| h.id()));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // Free slots one at a time: each must go to the reservation.
+        drop(s.pop_blocking().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(s.pop_blocking().unwrap());
+        let _handles = reserver.join().unwrap();
+        // Both shards queued before the single job was admitted.
+        assert_eq!(s.pop_blocking().unwrap().job.id, 10);
+        let next = s.pop_blocking().unwrap();
+        assert_eq!(next.job.id, 11, "scatter admitted whole ahead of the single submitter");
+        drop(next);
+        assert_eq!(submitter.join().unwrap().unwrap(), 20);
+        assert_eq!(s.pop_blocking().unwrap().job.id, 20);
+    }
+
+    #[test]
+    fn dropped_reservation_releases_its_slots() {
+        let s = sched(SchedulerConfig {
+            capacity: 4,
+            backpressure: Backpressure::Reject,
+            ..Default::default()
+        });
+        {
+            let mut res = s.reserve(4).unwrap();
+            res.submit(tiny_job(1), 0, None).unwrap();
+            // res dropped with 3 uncommitted slots.
+        }
+        for id in 2..=4 {
+            s.submit(tiny_job(id)).unwrap();
+        }
+        assert_eq!(s.depth(), 4);
+    }
+
+    #[test]
+    fn oversized_reservation_is_a_config_error() {
+        let s = sched(SchedulerConfig { capacity: 2, ..Default::default() });
+        let err = s.reserve(3).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
     }
 
     #[test]
@@ -737,6 +1415,7 @@ mod tests {
         s.submit(tiny_job(1)).unwrap();
         s.close();
         assert!(s.submit(tiny_job(2)).is_err());
+        assert!(s.reserve(2).is_err());
         assert!(s.pop_blocking().is_some(), "backlog still dispatchable");
         assert!(s.pop_blocking().is_none(), "closed + drained");
     }
@@ -761,10 +1440,10 @@ mod tests {
         s.submit(tagged).unwrap();
         s.submit(tiny_job(2)).unwrap(); // untagged: runs anywhere
         // An overlay worker must skip the custom-tagged head-of-line.
-        let t = s.pop_blocking_for(Some(BackendClass::Overlay)).unwrap();
+        let t = s.pop_blocking_for(None, Some(BackendClass::Overlay)).unwrap();
         assert_eq!(t.job.id, 2);
         // The matching worker takes the tagged ticket.
-        let t2 = s.pop_blocking_for(Some(comefa)).unwrap();
+        let t2 = s.pop_blocking_for(None, Some(comefa)).unwrap();
         assert_eq!(t2.job.id, 1);
         // Closed with only mismatched tickets left: the wrong class gets
         // None (exit), the right class still drains the backlog.
@@ -772,8 +1451,8 @@ mod tests {
         overlay_only.backend = Some(BackendClass::Overlay);
         s.submit(overlay_only).unwrap();
         s.close();
-        assert!(s.pop_blocking_for(Some(comefa)).is_none());
-        assert!(s.pop_blocking_for(Some(BackendClass::Overlay)).is_some());
+        assert!(s.pop_blocking_for(None, Some(comefa)).is_none());
+        assert!(s.pop_blocking_for(None, Some(BackendClass::Overlay)).is_some());
     }
 
     #[test]
@@ -794,6 +1473,7 @@ mod tests {
         }
         let parent = JobHandle::gather(7, shape, parts);
         assert_eq!(parent.shard_count(), 2);
+        assert_eq!(parent.state(), TicketState::Queued);
         assert!(!parent.is_done());
         assert!(parent.try_take().is_none(), "gather not complete yet");
         for want_idx in 0..2usize {
@@ -805,15 +1485,18 @@ mod tests {
             r.stats.cycles = 100;
             r.wall_us = 1.0 + want_idx as f64;
             r.worker = want_idx; // distinct regions: shards ran concurrently
+            r.retries = want_idx as u32; // second shard needed one retry
             t.complete(r);
         }
         assert!(parent.is_done());
+        assert_eq!(parent.state(), TicketState::Done);
         let merged = parent.wait();
         assert_eq!(merged.id, 7);
         assert!(merged.error.is_none(), "{:?}", merged.error);
         assert_eq!(merged.output, vec![10, 11], "columns reassembled in order");
         assert_eq!(merged.stats.cycles, 200, "shard cycles roll up");
         assert_eq!(merged.shards, 2);
+        assert_eq!(merged.retries, 1, "shard retry counts roll up");
         assert_eq!(merged.wall_us, 2.0, "critical path = slowest region");
     }
 

@@ -39,7 +39,9 @@
 
 use crate::array::{ArrayGeometry, RunStats};
 use crate::backend::{BackendClass, PimBackend};
-use crate::compiler::{GemmPlan, GemmShape, PimCompiler};
+use crate::compiler::{
+    slice_b_cols, slice_staging_table, split_shape_n, GemmPlan, GemmShape, PimCompiler,
+};
 use crate::{Error, Result};
 
 /// Opaque identifier of an open session, allocated by
@@ -128,6 +130,73 @@ impl ModelSession {
     /// The pinned compiled plan.
     pub fn plan(&self) -> &GemmPlan {
         &self.plan
+    }
+
+    /// Prepare **only** the shard view for partition slot `(index, of)`
+    /// of the [`split_shape_n`] column partition, without materializing
+    /// the whole session's staging table first: the shard's weight
+    /// columns are sliced from the spec ([`slice_b_cols`]) and staged
+    /// for the sub-shape directly. This is what a worker that only ever
+    /// serves one partition slot of a session uses — it pays `1/of` of
+    /// the staging cost and memory instead of the full table plus a
+    /// slice.
+    pub fn prepare_shard(
+        compiler: &PimCompiler,
+        spec: &SessionSpec,
+        index: usize,
+        of: usize,
+    ) -> Result<ModelSession> {
+        spec.validate()?;
+        let parts = split_shape_n(spec.shape, of);
+        let &(col0, sshape) = parts.get(index).ok_or_else(|| {
+            Error::Config(format!(
+                "shard slot {index}/{of} out of range for session shape {}x{}x{}",
+                spec.shape.m, spec.shape.k, spec.shape.n
+            ))
+        })?;
+        let sub = SessionSpec {
+            shape: sshape,
+            width: spec.width,
+            weights: slice_b_cols(spec.shape, &spec.weights, col0, sshape.n),
+            backend: spec.backend,
+        };
+        Self::prepare(compiler, &sub)
+    }
+
+    /// Derive the shard view for partition slot `(index, of)` of the
+    /// [`split_shape_n`] column partition: a self-contained session
+    /// whose plan is compiled for the shard's `{m, k, nn}` sub-shape
+    /// and whose staging table is **sliced** from this session's pinned
+    /// table ([`slice_staging_table`]) — no weight re-gathering, so
+    /// sharded session inference keeps the memcpy-only staging property.
+    /// Equivalent to [`prepare_shard`](Self::prepare_shard) but cheaper
+    /// when the whole-session table is already pinned (it reuses it
+    /// instead of re-staging from the weights). This is what lets
+    /// pinned-weight (session) jobs scatter across worker regions
+    /// exactly like ad-hoc GEMMs.
+    pub fn shard(&self, compiler: &PimCompiler, index: usize, of: usize) -> Result<ModelSession> {
+        if compiler.geometry().rows != self.geom.rows
+            || compiler.geometry().row_lanes() != self.geom.row_lanes()
+        {
+            return Err(Error::Config(format!(
+                "shard view compiler geometry {}x{} does not match the session's {}x{}",
+                compiler.geometry().rows,
+                compiler.geometry().row_lanes(),
+                self.geom.rows,
+                self.geom.row_lanes()
+            )));
+        }
+        let parts = split_shape_n(self.plan.shape, of);
+        let &(col0, sshape) = parts.get(index).ok_or_else(|| {
+            Error::Config(format!(
+                "shard slot {index}/{of} out of range for session shape \
+                 {}x{}x{}",
+                self.plan.shape.m, self.plan.shape.k, self.plan.shape.n
+            ))
+        })?;
+        let plan = compiler.gemm(sshape, self.plan.width)?;
+        let b_rows = slice_staging_table(self.plan.shape, &self.b_rows, col0, sshape.n);
+        Ok(ModelSession { plan, b_rows, geom: self.geom })
     }
 
     /// The geometry this session's staging table was built for.
@@ -282,6 +351,45 @@ mod tests {
         let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
         let (c2, _) = session.infer(&mut arr, &a).unwrap();
         assert_eq!(c2, expect);
+    }
+
+    #[test]
+    fn shard_views_tile_the_session_bit_exact() {
+        use crate::compiler::merge_shard_outputs;
+        let geom = ArrayGeometry::new(2, 1);
+        let shape = GemmShape { m: 3, k: 20, n: 7 }; // multi-slice, ragged n
+        let sp = spec(shape, 0x5AA5);
+        let compiler = PimCompiler::new(geom);
+        let session = ModelSession::prepare(&compiler, &sp).unwrap();
+        let mut rng = Xoshiro256::seeded(0x11);
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        let expect = gemm_ref(shape, &a, &sp.weights);
+        for of in [2usize, 3, 7] {
+            let mut parts = Vec::new();
+            for (index, (col0, sshape)) in
+                crate::compiler::split_shape_n(shape, of).into_iter().enumerate()
+            {
+                let view = session.shard(&compiler, index, of).unwrap();
+                assert_eq!(view.plan().shape, sshape, "shard plan covers the sub-shape");
+                let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+                let (c, _) = view.infer(&mut arr, &a).unwrap();
+                // Staging the shard directly from the spec (no base
+                // table) must be bit-identical to slicing the table.
+                let direct = ModelSession::prepare_shard(&compiler, &sp, index, of).unwrap();
+                assert_eq!(direct.plan().shape, sshape);
+                let mut arr2 = PimArray::new(geom, PipelineConfig::FullPipe);
+                let (c2, _) = direct.infer(&mut arr2, &a).unwrap();
+                assert_eq!(c, c2, "prepare_shard == shard, slot {index}/{of}");
+                parts.push((col0, sshape.n, c));
+            }
+            assert_eq!(merge_shard_outputs(shape, &parts), expect, "of={of}");
+        }
+        // Out-of-range slot and mismatched geometry are rejected.
+        assert!(session.shard(&compiler, 7, 7).is_err());
+        assert!(ModelSession::prepare_shard(&compiler, &sp, 7, 7).is_err());
+        let wrong = PimCompiler::new(ArrayGeometry::new(4, 1));
+        assert!(session.shard(&wrong, 0, 2).is_err());
     }
 
     #[test]

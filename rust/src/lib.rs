@@ -34,14 +34,17 @@
 //! * [`compiler`] — maps GEMM / MLP layers onto the PIM array as microcode,
 //!   with single-job and micro-batched executors.
 //! * [`coordinator`] — the serving subsystem: a bounded submission
-//!   [`coordinator::Scheduler`] with backpressure and per-job completion
-//!   handles, a micro-[`coordinator::Batcher`] that coalesces same-shape
-//!   jobs into one array invocation, persistent
-//!   [`coordinator::ModelSession`]s that pin compiled plans and pre-staged
-//!   weights, and the [`coordinator::Coordinator`] worker pool tying them
-//!   together.
-//! * [`metrics`] — request-path metrics: queue depth, batch size, and
-//!   per-stage latency percentiles (p50/p95/p99).
+//!   [`coordinator::Scheduler`] with backpressure, scatter-atomic
+//!   admission, an explicit per-ticket lifecycle (`Queued → Dispatched →
+//!   Done | Retrying | Shed`) with failure-domain retry and deadline
+//!   shedding, a micro-[`coordinator::Batcher`] that coalesces same-shape
+//!   jobs into one array invocation (fixed or queue-depth-adaptive
+//!   flush), persistent [`coordinator::ModelSession`]s that pin compiled
+//!   plans and pre-staged weights (and shard them across regions), and
+//!   the [`coordinator::Coordinator`] worker pool tying them together.
+//! * [`metrics`] — request-path metrics: queue depth, batch size,
+//!   per-stage latency percentiles (p50/p95/p99), and resilience
+//!   counters (retries, sheds).
 //! * [`runtime`] — PJRT/XLA golden-model execution of the AOT-compiled JAX
 //!   models in `artifacts/` (Python is build-time only, never on the request
 //!   path). Stubbed unless the `xla` feature is enabled.
@@ -80,13 +83,13 @@ pub mod prelude {
     pub use crate::analytic::{AccumModel, DesignPoint, MacLatencyModel, ThroughputModel};
     pub use crate::arch::{ArchKind, CustomDesign, PipelineConfig};
     pub use crate::array::{ArrayGeometry, PimArray, RunStats};
-    pub use crate::backend::{make_backend, BackendClass, PimBackend};
+    pub use crate::backend::{make_backend, BackendClass, FaultInjector, FaultPlan, PimBackend};
     pub use crate::bits::{corner_turn, corner_turn_back, BitPlanes};
     pub use crate::compiler::{GemmPlan, GemmShape, MacProgram, PimCompiler};
     pub use crate::coordinator::{
-        Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobHandle, JobKind,
-        JobResult, ModelSession, QueuePolicy, RegionSpec, SchedulerConfig, SessionId, ShardInfo,
-        ShardPolicy,
+        BackendHook, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobHandle,
+        JobKind, JobResult, ModelSession, QueuePolicy, RegionSpec, RetryPolicy, SchedulerConfig,
+        SessionId, ShardInfo, ShardPolicy, TicketState,
     };
     pub use crate::custom::{CustomRegion, CustomTile};
     pub use crate::device::{Device, DeviceFamily, DEVICES};

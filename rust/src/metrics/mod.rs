@@ -222,6 +222,7 @@ impl LatencyTrack {
 struct BackendTrack {
     jobs: u64,
     errors: u64,
+    retries: u64,
     macs: u64,
     pim_cycles: u64,
     total_us: LatencyTrack,
@@ -241,12 +242,22 @@ struct ServingInner {
     batch_max: u64,
     queue_depth: OnlineStats,
     depth_hwm: u64,
+    /// Peak-hold queue-depth signal with exponential wall-time decay
+    /// (see [`ServingMetrics::queue_depth_signal`]).
+    depth_signal: f64,
+    depth_signal_at: Option<Instant>,
     /// Shards-per-job distribution, recorded once per *logical*
     /// submission (1 for unsharded jobs).
     shard_count: OnlineStats,
     /// Logical jobs that were scattered into >= 2 shards.
     sharded_jobs: u64,
     max_shards: u64,
+    /// Failure-domain retries: tickets re-queued after a transient
+    /// region failure (counted once per retry, not per job).
+    retries: u64,
+    /// Tickets shed unexecuted at pop time because their deadline
+    /// expired in the queue.
+    sheds: u64,
     window_start: Option<Instant>,
     /// Per-backend-class breakdown, keyed by the completing worker's
     /// class (small fixed set — linear scan beats hashing here).
@@ -297,12 +308,34 @@ impl ServingMetrics {
         g.window_start = Some(Instant::now());
     }
 
+    /// Decay constant (seconds) of the live queue-depth signal: a burst
+    /// that ended ~5τ ago no longer registers as load.
+    pub const DEPTH_SIGNAL_TAU_S: f64 = 0.01;
+
+    /// The queue-depth signal's current value: the stored peak decayed
+    /// exponentially by the wall time since it was last updated. The
+    /// single source of the decay model — both the accumulator and the
+    /// reader go through here so they can never drift apart.
+    fn decayed_signal(g: &ServingInner) -> f64 {
+        match g.depth_signal_at {
+            None => 0.0,
+            Some(at) => {
+                g.depth_signal
+                    * (-(at.elapsed().as_secs_f64()) / Self::DEPTH_SIGNAL_TAU_S).exp()
+            }
+        }
+    }
+
     /// Record the submission-queue depth observed at an enqueue.
     pub fn record_depth(&self, depth: usize) {
         let mut g = self.lock();
         g.window_start.get_or_insert_with(Instant::now);
         g.queue_depth.push(depth as f64);
         g.depth_hwm = g.depth_hwm.max(depth as u64);
+        // Live signal: exponentially decay the previous peak, then hold
+        // whichever is larger — rises instantly, forgets within ~5τ.
+        g.depth_signal = Self::decayed_signal(&g).max(depth as f64);
+        g.depth_signal_at = Some(Instant::now());
     }
 
     /// Record the shard count of one logical job submission (1 for an
@@ -317,6 +350,50 @@ impl ServingMetrics {
         if shards >= 2 {
             g.sharded_jobs += 1;
         }
+    }
+
+    /// Record one failure-domain retry: a ticket that failed
+    /// transiently on a region of `backend` and was re-queued with that
+    /// region excluded. Feeds the resilience counters of the snapshot.
+    pub fn record_retry(&self, backend: Option<BackendClass>) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.retries += 1;
+        if let Some(b) = backend {
+            let idx = match g.per_backend.iter().position(|(k, _)| *k == b) {
+                Some(i) => i,
+                None => {
+                    g.per_backend.push((b, BackendTrack::default()));
+                    g.per_backend.len() - 1
+                }
+            };
+            g.per_backend[idx].1.retries += 1;
+        }
+    }
+
+    /// Record one deadline shed: a ticket dropped unexecuted at pop time
+    /// because its deadline expired in the queue.
+    pub fn record_shed(&self) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.sheds += 1;
+    }
+
+    /// The mean queue depth observed at enqueue over the current window.
+    pub fn mean_queue_depth(&self) -> f64 {
+        self.lock().queue_depth.mean()
+    }
+
+    /// The **live** queue-depth signal behind
+    /// [`BatchPolicy::Adaptive`](crate::coordinator::BatchPolicy::Adaptive):
+    /// a peak-hold of the depths observed at enqueue that decays
+    /// exponentially with wall time (τ =
+    /// [`DEPTH_SIGNAL_TAU_S`](Self::DEPTH_SIGNAL_TAU_S)). Unlike the
+    /// lifetime mean, it rises instantly under a burst and collapses to
+    /// ~0 within a few τ once traffic stops, so an idle queue is never
+    /// mistaken for a loaded one by stale history.
+    pub fn queue_depth_signal(&self) -> f64 {
+        Self::decayed_signal(&self.lock())
     }
 
     /// Record one dispatched micro-batch and its array-invocation wall
@@ -391,6 +468,7 @@ impl ServingMetrics {
                 backend,
                 jobs: track.jobs,
                 errors: track.errors,
+                retries: track.retries,
                 macs: track.macs,
                 pim_cycles: track.pim_cycles,
                 total: track.total_us.summary(),
@@ -415,6 +493,8 @@ impl ServingMetrics {
             mean_shards: g.shard_count.mean(),
             max_shards: g.max_shards,
             sharded_jobs: g.sharded_jobs,
+            retries: g.retries,
+            sheds: g.sheds,
             per_backend,
         }
     }
@@ -432,6 +512,9 @@ pub struct BackendSnapshot {
     pub jobs: u64,
     /// Jobs that completed with an error.
     pub errors: u64,
+    /// Failure-domain retries charged to this class (tickets that
+    /// failed transiently on one of its regions and were re-queued).
+    pub retries: u64,
     /// Model-level MAC operations executed.
     pub macs: u64,
     /// PIM cycles simulated on this class.
@@ -487,6 +570,13 @@ pub struct MetricsSnapshot {
     pub max_shards: u64,
     /// Logical jobs scattered into >= 2 shards.
     pub sharded_jobs: u64,
+    /// Failure-domain retries: tickets re-queued after a transient
+    /// region failure. Nonzero with zero `errors` means faults were
+    /// fully absorbed by retry.
+    pub retries: u64,
+    /// Tickets shed unexecuted because their deadline expired in the
+    /// queue.
+    pub sheds: u64,
     /// Per-backend-class breakdown (sorted by class name; empty when no
     /// job carried a backend tag).
     pub per_backend: Vec<BackendSnapshot>,
@@ -541,13 +631,20 @@ impl MetricsSnapshot {
                 self.sharded_jobs, self.mean_shards, self.max_shards,
             ));
         }
+        if self.retries > 0 || self.sheds > 0 {
+            out.push_str(&format!(
+                "\nresilience  retries={} shed={}",
+                self.retries, self.sheds,
+            ));
+        }
         for b in &self.per_backend {
             out.push_str(&format!(
-                "\nbackend {:<10} jobs={} errors={} thpt={:.1} jobs/s \
+                "\nbackend {:<10} jobs={} errors={} retries={} thpt={:.1} jobs/s \
                  p50={:.0}us p95={:.0}us p99={:.0}us cycles={}",
                 b.backend.name(),
                 b.jobs,
                 b.errors,
+                b.retries,
                 b.jobs_per_sec(self.elapsed_s),
                 b.total.p50,
                 b.total.p95,
@@ -672,6 +769,55 @@ mod tests {
         let quiet = ServingMetrics::new();
         quiet.record_shards(1);
         assert!(!quiet.snapshot().render().contains("sharding"));
+    }
+
+    #[test]
+    fn resilience_counters_track_and_render() {
+        let m = ServingMetrics::new();
+        m.record_retry(Some(BackendClass::Overlay));
+        m.record_retry(Some(BackendClass::Overlay));
+        m.record_retry(None);
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.retries, 3);
+        assert_eq!(s.sheds, 1);
+        assert_eq!(s.per_backend.len(), 1);
+        assert_eq!(s.per_backend[0].retries, 2);
+        let text = s.render();
+        assert!(text.contains("resilience"), "{text}");
+        assert!(text.contains("retries=3"), "{text}");
+        assert!(text.contains("shed=1"), "{text}");
+        // Quiet windows keep the resilience line out.
+        assert!(!ServingMetrics::new().snapshot().render().contains("resilience"));
+    }
+
+    #[test]
+    fn mean_queue_depth_signal() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.mean_queue_depth(), 0.0);
+        m.record_depth(2);
+        m.record_depth(4);
+        assert!((m.mean_queue_depth() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_depth_signal_rises_instantly_and_decays_with_time() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.queue_depth_signal(), 0.0, "no observations, no load");
+        m.record_depth(8);
+        assert!(m.queue_depth_signal() > 6.0, "fresh burst registers at full height");
+        // After many decay constants the burst must be forgotten — this
+        // is what keeps a lone job after a burst from waiting out the
+        // full adaptive window (the lifetime mean would stay high).
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            8.0 * ServingMetrics::DEPTH_SIGNAL_TAU_S,
+        ));
+        assert!(
+            m.queue_depth_signal() < 1.0,
+            "stale burst must decay: {}",
+            m.queue_depth_signal()
+        );
+        assert!(m.mean_queue_depth() > 7.0, "the window mean, by contrast, remembers");
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Resilient job lifecycle, end to end: fault-injected regions are
+//! absorbed by failure-domain retry (bit-exact results, bounded
+//! attempts), scatter admission is all-or-none under `Reject`, and
+//! expired jobs shed at pop time instead of executing.
+
+use picaso::backend::{FaultInjector, FaultPlan};
+use picaso::compiler::{gemm_ref, GemmShape};
+use picaso::coordinator::{
+    BackendHook, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind,
+    RetryPolicy, SchedulerConfig, ShardPolicy, TicketState,
+};
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A pool whose region `poisoned[i]` fails every execute — the fault
+/// domains the retry machinery must route around.
+fn chaos_pool(workers: usize, poisoned: &[usize], batch: BatchPolicy) -> Coordinator {
+    let poisoned = poisoned.to_vec();
+    Coordinator::new(CoordinatorConfig {
+        workers,
+        geom: ArrayGeometry::new(2, 1),
+        batch,
+        backend_hook: Some(BackendHook(Arc::new(move |widx, inner| {
+            if poisoned.contains(&widx) {
+                Box::new(FaultInjector::new(inner, FaultPlan::Poisoned))
+            } else {
+                inner
+            }
+        }))),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn gemm_job(id: u64, shape: GemmShape, seed: u64) -> (Job, Vec<i64>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut a = vec![0i64; shape.m * shape.k];
+    let mut b = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut a, 8);
+    rng.fill_signed(&mut b, 8);
+    let expect = gemm_ref(shape, &a, &b);
+    (Job::new(id, JobKind::Gemm { shape, width: 8, a, b }), expect)
+}
+
+// ------------------------------------------------ failure-domain retry
+
+/// The acceptance scenario: with a fault-injecting region in the pool,
+/// K-shard scatters — ad-hoc and session-backed — return bit-exact
+/// `gemm_ref` output via retry, and the results report the retry counts
+/// consumed. Two of three regions are poisoned, so every shard those
+/// regions touch *must* travel to the lone healthy domain.
+#[test]
+fn sharded_jobs_survive_poisoned_regions_bit_exact() {
+    let coord = chaos_pool(3, &[0, 1], BatchPolicy::disabled());
+    let shape = GemmShape { m: 2, k: 20, n: 6 };
+    let mut rng = Xoshiro256::seeded(0xFA117);
+    let mut weights = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut weights, 8);
+    let sid = coord.open_session(shape, 8, weights.clone()).unwrap();
+    let mut total_retries = 0u32;
+    for i in 0..8u64 {
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        // Alternate ad-hoc scatters (with their own weights) and
+        // session-backed scatters (pinned weights, sliced per shard).
+        let (job, expect) = if i % 2 == 0 {
+            gemm_job(i, shape, 0xAB5 + i)
+        } else {
+            let expect = gemm_ref(shape, &a, &weights);
+            (Job::new(i, JobKind::SessionGemm { session: sid, a }), expect)
+        };
+        let r = coord.submit_job(job.with_shards(ShardPolicy::Fixed(3))).unwrap().wait();
+        assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+        assert_eq!(r.output, expect, "job {i} must be bit-exact after retry");
+        assert_eq!(r.shards, 3, "job {i}");
+        total_retries += r.retries;
+    }
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.errors, 0, "every injected fault was absorbed");
+    assert!(
+        total_retries >= 1 && snap.retries >= 1,
+        "poisoned regions must have forced retries (JobResult {total_retries}, \
+         metrics {})",
+        snap.retries
+    );
+    assert_eq!(
+        u64::from(total_retries),
+        snap.retries,
+        "JobResult retry counts roll up to the metrics counter"
+    );
+    coord.shutdown();
+}
+
+/// An intermittently failing region (every 2nd execute) is also
+/// absorbed: unsharded jobs retried onto the healthy region, bit-exact,
+/// zero surfaced errors.
+#[test]
+fn intermittent_faults_retry_to_a_healthy_region() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy::disabled(),
+        backend_hook: Some(BackendHook(Arc::new(|widx, inner| {
+            if widx == 0 {
+                Box::new(FaultInjector::new(inner, FaultPlan::EveryNth(2)))
+            } else {
+                inner
+            }
+        }))),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 16, n: 2 };
+    let mut handles = Vec::new();
+    let mut expects = Vec::new();
+    for i in 0..24u64 {
+        let (job, expect) = gemm_job(i, shape, 0x1E7 + i);
+        handles.push(coord.submit_job(job).unwrap());
+        expects.push(expect);
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait();
+        assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+        assert_eq!(r.output, expects[i], "job {i}");
+    }
+    assert_eq!(coord.metrics_snapshot().errors, 0);
+    coord.shutdown();
+}
+
+/// Bounded-attempt exhaustion: when every fault domain is poisoned the
+/// job fails — after consuming exactly the domains it had, with the
+/// attempt history in the error — instead of retrying forever.
+#[test]
+fn retry_exhaustion_fails_with_attempt_history() {
+    let coord = chaos_pool(2, &[0, 1], BatchPolicy::disabled());
+    let shape = GemmShape { m: 1, k: 16, n: 2 };
+    let (job, _) = gemm_job(1, shape, 0xDEAD);
+    let r = coord
+        .submit_job(job.with_retry(RetryPolicy { max_attempts: 5 }))
+        .unwrap()
+        .wait();
+    let err = r.error.as_deref().unwrap_or("");
+    assert!(err.contains("injected fault"), "{err}");
+    assert!(
+        err.contains("gave up after 2 attempts across 2 regions"),
+        "attempt history missing: {err}"
+    );
+    assert_eq!(r.retries, 1, "one retry consumed before domains ran out");
+
+    // Fail-fast policy: one attempt, no retry, no annotation.
+    let (job, _) = gemm_job(2, shape, 0xBEEF);
+    let r = coord.submit_job(job.with_retry(RetryPolicy::none())).unwrap().wait();
+    let err = r.error.as_deref().unwrap_or("");
+    assert!(err.contains("injected fault"), "{err}");
+    assert!(!err.contains("gave up"), "fail-fast must not retry: {err}");
+    assert_eq!(r.retries, 0);
+    coord.shutdown();
+}
+
+/// A single-region pool cannot retry (no second fault domain): a
+/// transient failure surfaces immediately rather than re-queueing onto
+/// the same broken region.
+#[test]
+fn single_region_pool_fails_fast_without_domains() {
+    let coord = chaos_pool(1, &[0], BatchPolicy::disabled());
+    let shape = GemmShape { m: 1, k: 16, n: 1 };
+    let (job, _) = gemm_job(1, shape, 7);
+    let t0 = Instant::now();
+    let r = coord.submit_job(job).unwrap().wait();
+    assert!(r.error.as_deref().unwrap_or("").contains("injected fault"));
+    assert_eq!(r.retries, 0);
+    assert!(t0.elapsed() < Duration::from_secs(10), "no retry loop");
+    coord.shutdown();
+}
+
+// ------------------------------------------- scatter-atomic admission
+
+/// Under `Backpressure::Reject` at capacity, a K-shard scatter either
+/// fully enters the queue or cleanly rejects — the queue never holds a
+/// partial scatter. The worker is parked on an effectively-infinite
+/// coalescing window (it pops the head and waits 600s for companions
+/// that never come), so the queue state is fully under the test's
+/// control with no wall-clock sensitivity; closing the scheduler at the
+/// end releases the window and drains everything admitted.
+#[test]
+fn reject_at_capacity_never_admits_a_partial_scatter() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        scheduler: SchedulerConfig {
+            capacity: 4,
+            backpressure: Backpressure::Reject,
+            ..Default::default()
+        },
+        batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_secs(600) },
+        ..Default::default()
+    })
+    .unwrap();
+    let head_shape = GemmShape { m: 1, k: 16, n: 1 };
+    let filler_shape = GemmShape { m: 1, k: 16, n: 2 };
+    let scatter_shape = GemmShape { m: 1, k: 16, n: 4 };
+    // Park the worker: it pops the head and coalesces until close; the
+    // fillers use a different batch key so they stay queued.
+    let (head, head_expect) = gemm_job(0, head_shape, 1);
+    let head_h = coord.submit_job(head).unwrap();
+    let t0 = Instant::now();
+    while coord.scheduler().depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "worker never popped the head");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut filler_handles = Vec::new();
+    let mut filler_expects = Vec::new();
+    for i in 1..=4u64 {
+        let (job, expect) = gemm_job(i, filler_shape, 100 + i);
+        filler_handles.push(coord.submit_job(job).unwrap());
+        filler_expects.push(expect);
+    }
+    assert_eq!(coord.scheduler().depth(), 4, "queue exactly at capacity");
+    // A 2-shard scatter cannot fit: it must reject with NOTHING queued.
+    let (job, _) = gemm_job(9, scatter_shape, 0x9);
+    let err = coord
+        .submit_job(job.with_shards(ShardPolicy::Fixed(2)))
+        .unwrap_err();
+    assert!(matches!(err, picaso::Error::Busy(_)), "{err}");
+    assert_eq!(
+        coord.scheduler().depth(),
+        4,
+        "a rejected scatter must leave no partial shard in the queue"
+    );
+    // Wider than the queue itself can never fit: config error, still
+    // nothing queued.
+    let (job, _) = gemm_job(10, GemmShape { m: 1, k: 16, n: 8 }, 0xA);
+    let err = coord
+        .submit_job(job.with_shards(ShardPolicy::Fixed(8)))
+        .unwrap_err();
+    assert!(matches!(err, picaso::Error::Config(_)), "{err}");
+    assert_eq!(coord.scheduler().depth(), 4);
+    // Close the queue: the worker's coalescing wait ends, the head
+    // executes, and the backlog drains before the pool exits.
+    coord.shutdown();
+    assert_eq!(head_h.wait().output, head_expect);
+    for (h, expect) in filler_handles.into_iter().zip(filler_expects) {
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect);
+    }
+    // With room, the same scatter is admitted whole and verifies (fresh
+    // pool — the parked one was shut down above).
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        scheduler: SchedulerConfig {
+            capacity: 4,
+            backpressure: Backpressure::Reject,
+            ..Default::default()
+        },
+        batch: BatchPolicy::disabled(),
+        ..Default::default()
+    })
+    .unwrap();
+    let (job, expect) = gemm_job(11, scatter_shape, 0xB);
+    let r = coord.submit_job(job.with_shards(ShardPolicy::Fixed(2))).unwrap().wait();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.output, expect);
+    assert_eq!(r.shards, 2);
+    coord.shutdown();
+}
+
+// --------------------------------------------------- deadline shedding
+
+/// A job whose deadline expired while queued is dropped at pop time
+/// with a `Shed` result — no array invocation, a distinct metrics
+/// counter, and no effect on its queue neighbours.
+#[test]
+fn expired_jobs_shed_at_pop_not_execute() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy::disabled(),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 1, k: 16, n: 2 };
+    // Deadline 0: expired by the time any worker pops it.
+    let (job, _) = gemm_job(1, shape, 0x51);
+    let shed_h = coord.submit_job(job.with_deadline_us(0.0)).unwrap();
+    let (live, live_expect) = gemm_job(2, shape, 0x52);
+    let live_h = coord.submit_job(live).unwrap();
+    let r = shed_h.wait();
+    assert!(r.shed, "expired job must report shed, got {:?}", r.error);
+    assert!(r.error.as_deref().unwrap_or("").contains("shed"), "{:?}", r.error);
+    assert!(r.output.is_empty(), "shed jobs never execute");
+    assert_eq!(r.stats.cycles, 0, "no array invocation was spent");
+    let live_r = live_h.wait();
+    assert!(live_r.error.is_none(), "{:?}", live_r.error);
+    assert_eq!(live_r.output, live_expect, "neighbours are unaffected");
+    assert!(!live_r.shed);
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.sheds, 1);
+    coord.shutdown();
+}
+
+// ----------------------------------------------- lifecycle observability
+
+/// The handle exposes the ticket's lifecycle: a queued job reports
+/// `Queued`, and a completed one `Done` — the states the retry and shed
+/// paths transition through are covered by the scheduler unit tests.
+#[test]
+fn handle_state_tracks_the_lifecycle() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 1, k: 16, n: 1 };
+    let (job, _) = gemm_job(1, shape, 3);
+    let h = coord.submit_job(job).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !h.is_done() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(h.is_done());
+    assert_eq!(h.state(), TicketState::Done);
+    let r = h.try_take().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    coord.shutdown();
+}

@@ -84,7 +84,7 @@ fn batcher_flushes_when_the_batch_is_full() {
     for id in 0..7 {
         sched.submit(tiny_job(id, shape, id).0).unwrap();
     }
-    let batcher = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+    let batcher = Batcher::new(BatchPolicy::Fixed { max_batch: 4, max_wait: Duration::from_secs(10) });
     let t0 = Instant::now();
     let batch = batcher.collect(&sched).unwrap();
     assert_eq!(batch.len(), 4, "size trigger fires before the 10s budget");
@@ -97,7 +97,7 @@ fn batcher_flushes_when_the_wait_budget_expires() {
     let shape = GemmShape { m: 1, k: 4, n: 1 };
     let sched = bare_scheduler(SchedulerConfig::default());
     sched.submit(tiny_job(0, shape, 0).0).unwrap();
-    let batcher = Batcher::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(25) });
+    let batcher = Batcher::new(BatchPolicy::Fixed { max_batch: 64, max_wait: Duration::from_millis(25) });
     let t0 = Instant::now();
     let batch = batcher.collect(&sched).unwrap();
     let waited = t0.elapsed();
@@ -114,7 +114,7 @@ fn batcher_only_coalesces_matching_shapes() {
     sched.submit(tiny_job(0, small, 0).0).unwrap();
     sched.submit(tiny_job(1, big, 1).0).unwrap();
     sched.submit(tiny_job(2, small, 2).0).unwrap();
-    let batcher = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+    let batcher = Batcher::new(BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::ZERO });
     let first: Vec<u64> = batcher.collect(&sched).unwrap().iter().map(|t| t.job.id).collect();
     assert_eq!(first, vec![0, 2]);
     let second: Vec<u64> = batcher.collect(&sched).unwrap().iter().map(|t| t.job.id).collect();
@@ -198,9 +198,9 @@ fn batcher_max_wait_holds_under_nonmatching_arrival_stream() {
             }
         })
     };
-    let batcher = Batcher::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(40) });
+    let batcher = Batcher::new(BatchPolicy::Fixed { max_batch: 64, max_wait: Duration::from_millis(40) });
     let t0 = Instant::now();
-    let batch = batcher.collect_for(&sched, Some(BackendClass::Overlay)).unwrap();
+    let batch = batcher.collect_for(&sched, None, Some(BackendClass::Overlay)).unwrap();
     let waited = t0.elapsed();
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     assert_eq!(batch.len(), 1, "only the overlay head was ever eligible");
@@ -386,7 +386,7 @@ fn batched_session_serving_charges_fewer_cycles_than_seed_path() {
 
     let seed_cycles = run(BatchPolicy::disabled(), false);
     let batched_cycles = run(
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+        BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_millis(20) },
         true,
     );
     assert!(
@@ -403,7 +403,7 @@ fn ragged_batch_wall_shares_sum_to_batch_wall_time() {
     let coord = Coordinator::new(CoordinatorConfig {
         workers: 1,
         geom: ArrayGeometry::new(2, 1),
-        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) },
+        batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_millis(50) },
         ..Default::default()
     })
     .unwrap();

@@ -177,7 +177,7 @@ fn sibling_shards_never_serialize_into_one_batch() {
     let coord = Coordinator::new(CoordinatorConfig {
         workers: 1,
         geom: ArrayGeometry::new(2, 1),
-        batch: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+        batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_millis(5) },
         ..Default::default()
     })
     .unwrap();
@@ -191,8 +191,69 @@ fn sibling_shards_never_serialize_into_one_batch() {
     coord.shutdown();
 }
 
-/// Sharding a session job is rejected at submit; sharding survives the
-/// legacy submit/drain path for plain GEMMs.
+/// Session-backed sharding: pinned-weight inference scatters across
+/// regions exactly like ad-hoc GEMMs — the worker slices the session's
+/// pre-staged weight table per partition slot — across homogeneous and
+/// mixed pools, even and ragged splits, bit-exact against the software
+/// reference.
+#[test]
+fn sharded_session_jobs_bit_exact_across_pools() {
+    use picaso::coordinator::SessionId;
+    use picaso::util::Xoshiro256;
+    let overlay = RegionSpec { kind: ArchKind::PICASO_F, count: 1 };
+    let comefa = RegionSpec { kind: ArchKind::Custom(CustomDesign::CoMeFaA), count: 1 };
+    let pools: Vec<(&str, Vec<RegionSpec>)> = vec![
+        ("overlay-only", vec![RegionSpec { count: 2, ..overlay }]),
+        ("custom-only", vec![RegionSpec { count: 2, ..comefa }]),
+        ("mixed", vec![overlay, comefa]),
+    ];
+    let shape = GemmShape { m: 2, k: 20, n: 7 }; // multi-slice, ragged n
+    for (name, regions) in pools {
+        let coord = pool(regions);
+        let mut rng = Xoshiro256::seeded(0x5E55_10);
+        let mut weights = vec![0i64; shape.k * shape.n];
+        rng.fill_signed(&mut weights, 8);
+        let sid: SessionId = coord.open_session(shape, 8, weights.clone()).unwrap();
+        for (i, policy) in [
+            ShardPolicy::Fixed(2),
+            ShardPolicy::Fixed(3), // ragged: 7 % 3 != 0
+            ShardPolicy::Auto,
+            ShardPolicy::Fixed(64), // clamps to n = 7
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mut a = vec![0i64; shape.m * shape.k];
+            rng.fill_signed(&mut a, 8);
+            let expect = gemm_ref(shape, &a, &weights);
+            let job = Job::new(i as u64, JobKind::SessionGemm { session: sid, a })
+                .with_shards(policy);
+            let h = coord.submit_job(job).unwrap();
+            let want_shards = match policy {
+                ShardPolicy::Fixed(k) => k.min(shape.n),
+                ShardPolicy::Auto => 2,
+                ShardPolicy::None => 1,
+            };
+            assert_eq!(h.shard_count(), want_shards, "{name} {policy:?}");
+            let r = h.wait();
+            assert!(r.error.is_none(), "{name} {policy:?}: {:?}", r.error);
+            assert_eq!(r.output, expect, "{name} {policy:?} must match gemm_ref");
+            assert_eq!(r.shards, want_shards, "{name} {policy:?}");
+        }
+        // Unsharded session inference through the same coordinator still
+        // verifies (the whole-session table and its shard views coexist
+        // in the worker caches).
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        let expect = gemm_ref(shape, &a, &weights);
+        let r = coord.submit_session(100, sid, a).unwrap().wait();
+        assert!(r.error.is_none(), "{name}: {:?}", r.error);
+        assert_eq!(r.output, expect, "{name}");
+        coord.shutdown();
+    }
+}
+
+/// Sharding survives the legacy submit/drain path for plain GEMMs.
 #[test]
 fn sharding_composes_with_legacy_submit_path() {
     let mut coord = Coordinator::new(CoordinatorConfig {
