@@ -37,6 +37,14 @@ test -s BENCH_serve.json || { echo "BENCH_serve.json missing or empty"; exit 1; 
 echo "BENCH_serve.json:"
 cat BENCH_serve.json
 
+# Model-graph executor trajectory: pipelined multi-layer inference with
+# per-layer + end-to-end latency and the cycle-makespan speedup.
+step "bench smoke: examples/infer headless -> BENCH_infer.json"
+INFER_BENCH_JSON=BENCH_infer.json cargo run --release --example infer -- 24 2 picaso >/dev/null
+test -s BENCH_infer.json || { echo "BENCH_infer.json missing or empty"; exit 1; }
+echo "BENCH_infer.json:"
+cat BENCH_infer.json
+
 step "compile benches + examples"
 cargo build --release --benches --examples
 

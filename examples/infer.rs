@@ -1,0 +1,183 @@
+//! Multi-layer MLP inference through the model-graph executor — the
+//! deployment shape the paper's ML motivation actually implies: a whole
+//! network mapped onto the serving stack, not a stream of isolated
+//! GEMMs.
+//!
+//! The drill builds a 48→32→24→10 int8 MLP with the paper's
+//! BNN-flavoured `sign` activation (binarized hidden activations keep
+//! every layer's operands in range with zero requantization logic),
+//! compiles it to pinned per-layer sessions, and serves a request batch
+//! two ways over the same pool:
+//!
+//! 1. **pipelined** — each request's next layer is submitted the moment
+//!    its previous layer gathers, so layer `L` of request `i` overlaps
+//!    layer `L-1` of request `i+1` across the worker regions;
+//! 2. **layer-barrier** — every request finishes layer `L` before any
+//!    request starts `L+1` (the sequential baseline).
+//!
+//! Every output is verified bit-exact against the scalar i64 reference
+//! in both modes. The report shows per-layer cycles/retries/occupancy,
+//! per-layer pim-time at each design's clock on the U55 (via
+//! `design_clock_hz`), end-to-end p50/p95, and the deterministic
+//! cycle-makespan comparison (sequential vs pipelined).
+//!
+//! ```bash
+//! cargo run --release --example infer -- [requests] [workers] [backend]
+//! ```
+//!
+//! Set `INFER_BENCH_JSON=<path>` to persist the headline numbers (per
+//! layer + end-to-end latency, throughput, makespans) for the per-PR
+//! perf trajectory tracked by `ci.sh`'s bench-smoke step.
+
+use picaso::analytic::design_clock_hz;
+use picaso::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, RegionSpec};
+use picaso::device::Device;
+use picaso::model::{CompileOptions, CompiledModel, ExecMode, GraphExecutor};
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+use std::time::Duration;
+
+const DIMS: [usize; 4] = [48, 32, 24, 10];
+const WIDTH: u16 = 8;
+
+fn main() -> picaso::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(32);
+    let workers: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let backend_name: String = argv.get(2).cloned().unwrap_or_else(|| "picaso".into());
+
+    let (kind, regions): (ArchKind, Vec<RegionSpec>) = if backend_name == "mixed" {
+        (ArchKind::PICASO_F, RegionSpec::mixed_pool(workers))
+    } else {
+        (picaso::cli::parse_backend(&backend_name)?, Vec::new())
+    };
+    let geom = ArrayGeometry::new(8, 4);
+    let device = Device::by_id("U55").expect("U55 is in the device database");
+
+    println!(
+        "model-graph inference: {}x{}x{}x{} int8 MLP (sign/BNN hidden activations), \
+         {requests} requests on {workers} {backend_name} workers ({}x{}-block regions)",
+        DIMS[0], DIMS[1], DIMS[2], DIMS[3], geom.rows, geom.cols,
+    );
+
+    let graph = picaso::cli::build_mlp(&DIMS, WIDTH, "sign", 0xD161)?;
+    let mut rng = Xoshiro256::seeded(0x1F2E);
+    let mut inputs = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let mut a = vec![0i64; DIMS[0]];
+        rng.fill_signed(&mut a, WIDTH as u32);
+        inputs.push(a);
+    }
+    let expects: Vec<Vec<i64>> = inputs
+        .iter()
+        .map(|a| graph.forward_ref(a, 1))
+        .collect::<picaso::Result<_>>()?;
+
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        geom,
+        kind,
+        regions,
+        batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_micros(200) },
+        ..Default::default()
+    })?;
+    let model = CompiledModel::compile(&coord, graph, CompileOptions::default())?;
+    let exec = GraphExecutor::new(&coord, &model);
+
+    // ------------------------------------------------ phase 1: pipelined
+    coord.serving_metrics().reset_window();
+    let pipe = exec.infer_batch(&inputs, ExecMode::Pipelined)?;
+    let pipe_bad = pipe.outputs.iter().zip(&expects).filter(|(g, w)| g != w).count();
+    assert_eq!(pipe_bad, 0, "pipelined outputs must match the scalar reference");
+
+    println!("\n--- pipelined (layer L of request i overlaps layer L-1 of request i+1) ---");
+    println!(
+        "{:>6} {:>10} {:>6} {:>12} {:>8} {:>10} {:>14}",
+        "layer", "shape", "jobs", "cycles", "retries", "busy us", "pim/job"
+    );
+    for (idx, cl) in model.layers().iter().enumerate() {
+        let lr = &pipe.per_layer[idx];
+        let lspec = &model.graph().layers()[idx];
+        let freq = design_clock_hz(cl.kind, device);
+        let per_job = if lr.jobs > 0 { lr.cycles as f64 / lr.jobs as f64 } else { 0.0 };
+        println!(
+            "{:>6} {:>10} {:>6} {:>12} {:>8} {:>10.0} {:>14}",
+            idx,
+            format!("{}->{}", lspec.k, lspec.n),
+            lr.jobs,
+            lr.cycles,
+            lr.retries,
+            lr.busy_us,
+            format!(
+                "{} @{}",
+                picaso::util::fmt_ns(per_job / freq * 1e9),
+                picaso::util::fmt_freq(freq)
+            ),
+        );
+    }
+    let (p50, p95) = pipe.request_latency_p50_p95();
+    println!(
+        "end-to-end p50={p50:.0}us p95={p95:.0}us  throughput={:.1} req/s (wall {:.1}ms)",
+        requests as f64 / (pipe.wall_us / 1e6).max(1e-9),
+        pipe.wall_us / 1e3,
+    );
+
+    // ---------------------------------------------- phase 2: the barrier
+    let barrier = exec.infer_batch(&inputs, ExecMode::LayerBarrier)?;
+    let barrier_bad = barrier.outputs.iter().zip(&expects).filter(|(g, w)| g != w).count();
+    assert_eq!(barrier_bad, 0, "barrier outputs must match the scalar reference");
+    assert_eq!(pipe.outputs, barrier.outputs, "modes must agree bit-for-bit");
+    let (bp50, bp95) = barrier.request_latency_p50_p95();
+    println!(
+        "\n--- layer-barrier baseline: p50={bp50:.0}us p95={bp95:.0}us wall {:.1}ms ---",
+        barrier.wall_us / 1e3
+    );
+
+    // ------------------------------------------- the deterministic model
+    let est = model.pipeline_estimate(requests);
+    println!(
+        "\ncycle-makespan model (measured per-layer sums): sequential {:.0} vs \
+         pipelined {:.0} => {:.2}x  (compile-time estimate {:.2}x)",
+        pipe.sequential_makespan_cycles,
+        pipe.pipelined_makespan_cycles,
+        pipe.pipeline_speedup(),
+        est.speedup(),
+    );
+    println!("\nserving metrics:\n{}", coord.metrics_snapshot().render());
+
+    // ------------------------------------------------ bench JSON (CI)
+    if let Ok(path) = std::env::var("INFER_BENCH_JSON") {
+        if !path.is_empty() {
+            let per_layer_cycles: Vec<String> =
+                pipe.per_layer.iter().map(|l| l.cycles.to_string()).collect();
+            let json = format!(
+                "{{\n  \"requests\": {},\n  \"workers\": {},\n  \"backend\": \"{}\",\n  \
+                 \"layers\": {},\n  \"e2e_p50_us\": {:.3},\n  \"e2e_p95_us\": {:.3},\n  \
+                 \"throughput_req_s\": {:.3},\n  \"barrier_wall_us\": {:.3},\n  \
+                 \"pipelined_wall_us\": {:.3},\n  \"per_layer_cycles\": [{}],\n  \
+                 \"sequential_makespan_cycles\": {:.1},\n  \
+                 \"pipelined_makespan_cycles\": {:.1},\n  \"makespan_speedup\": {:.3}\n}}\n",
+                requests,
+                workers,
+                backend_name,
+                model.layers().len(),
+                p50,
+                p95,
+                requests as f64 / (pipe.wall_us / 1e6).max(1e-9),
+                barrier.wall_us,
+                pipe.wall_us,
+                per_layer_cycles.join(", "),
+                pipe.sequential_makespan_cycles,
+                pipe.pipelined_makespan_cycles,
+                pipe.pipeline_speedup(),
+            );
+            std::fs::write(&path, json)?;
+            println!("\nwrote bench snapshot to {path}");
+        }
+    }
+
+    model.close(&coord);
+    coord.shutdown();
+    println!("\ninfer OK — all {requests} requests bit-exact in both modes");
+    Ok(())
+}

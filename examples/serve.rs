@@ -380,8 +380,9 @@ fn main() -> picaso::Result<()> {
         "\n--- resilience: region 0 poisoned, {chaos_jobs} sharded jobs (ad-hoc + session) ---"
     );
     println!(
-        "  all outputs == gemm_ref; retries absorbed: {}, deadline sheds: {}",
-        chaos_snap.retries, chaos_snap.sheds,
+        "  all outputs == gemm_ref; retries absorbed: {}, deadline sheds: {}, \
+         region quarantines: {}",
+        chaos_snap.retries, chaos_snap.sheds, chaos_snap.quarantines,
     );
 
     // ------------------------------------------------ bench JSON (CI)

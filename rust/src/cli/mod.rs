@@ -10,7 +10,9 @@
 //!   gemm      [--m --k --n --width --rows --cols --arch|--backend --booth-skip]
 //!   serve     [--jobs --workers --clients --rows --cols --m --k --n
 //!              --batch --max-wait-us --capacity --policy --backpressure
-//!              --no-session --backend]
+//!              --no-session --backend --quarantine --backoff-us]
+//!   infer     [--model=mlp:KxH..xN --requests --m --act --mode --shards
+//!              --workers --rows --cols --batch --backend --device]
 //!   asm       --file=<path> [--width]    assemble + disassemble a program
 //!   info                                 device database summary
 //! ```
@@ -20,10 +22,11 @@ use crate::array::ArrayGeometry;
 use crate::backend::{make_backend, BackendClass};
 use crate::compiler::{gemm_ref, GemmShape};
 use crate::coordinator::{
-    Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, QueuePolicy,
-    RegionSpec, RetryPolicy, SchedulerConfig, ShardPolicy,
+    BackoffPolicy, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind,
+    QuarantinePolicy, QueuePolicy, RegionSpec, RetryPolicy, SchedulerConfig, ShardPolicy,
 };
 use crate::device::Device;
+use crate::model::{CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor, ModelGraph};
 use crate::report::paper;
 use crate::util::Xoshiro256;
 use crate::{Error, Result};
@@ -114,7 +117,28 @@ system:
          [--deadline-us=0]               shed jobs still queued past this
                                          deadline (0 = never shed)
          [--no-session]                  per-job weights (seed behaviour)
+         [--quarantine=3]                consecutive transient faults that
+                                         bench a region for a cooldown
+                                         (0 disables quarantining)
+         [--backoff-us=50]               retry backoff base (exponential,
+                                         deterministic jitter; 0 disables)
          [--device=U55]                  device for per-backend cycles→ns
+  infer  --model=mlp:32x16x10            multi-layer MLP through the
+                                         model-graph executor, pipelined
+                                         across the worker pool and
+                                         verified bit-exact against the
+                                         scalar i64 reference
+         [--requests=16 --m=1]           request count / activation rows
+         [--act=sign|relu]               hidden activation: the paper's
+                                         BNN sign binarizer, or ReLU plus
+                                         a requantizing shift
+         [--mode=pipelined|barrier]      overlapped layers vs a barrier
+                                         between layers (the baseline)
+         [--shards=1|<k>|auto]           scatter each layer across regions
+         [--workers=4 --rows=8 --cols=4 --width=8]
+         [--batch=8 --max-wait-us=200]   micro-batch flush policy
+         [--window=0]                    max requests in flight (0 = all)
+         [--backend=...|mixed] [--device=U55] [--seed=42]
   info   device database summary
   help   this text
 
@@ -147,6 +171,7 @@ pub fn run(args: &Args) -> Result<String> {
         .join("\n")),
         "gemm" => cmd_gemm(args),
         "serve" => cmd_serve(args),
+        "infer" => cmd_infer(args),
         "info" => Ok(cmd_info()),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => Err(Error::Config(format!("unknown command '{other}'; try `picaso help`"))),
@@ -297,12 +322,35 @@ fn cmd_serve(args: &Args) -> Result<String> {
             (parse_backend(&backend_name)?, Vec::new(), vec![None])
         };
 
+    let quarantine_threshold: u32 = args.get("quarantine", 3u32)?;
+    let backoff_us: u64 = args.get("backoff-us", 50u64)?;
     let cfg = CoordinatorConfig {
         workers,
         geom: ArrayGeometry::new(rows, cols),
         kind,
         regions,
-        scheduler: SchedulerConfig { capacity, policy, backpressure },
+        scheduler: SchedulerConfig {
+            capacity,
+            policy,
+            backpressure,
+            retry_backoff: if backoff_us == 0 {
+                BackoffPolicy::none()
+            } else {
+                // Scale the cap with the base so a large --backoff-us
+                // still escalates exponentially instead of silently
+                // clamping to the default cap.
+                let base = Duration::from_micros(backoff_us);
+                BackoffPolicy {
+                    base,
+                    cap: base.saturating_mul(100).max(Duration::from_millis(5)),
+                }
+            },
+            quarantine: if quarantine_threshold == 0 {
+                QuarantinePolicy::disabled()
+            } else {
+                QuarantinePolicy { threshold: quarantine_threshold, ..Default::default() }
+            },
+        },
         batch: if args.flag("adaptive") {
             BatchPolicy::Adaptive {
                 max_batch: batch.max(1),
@@ -457,6 +505,199 @@ fn cmd_serve(args: &Args) -> Result<String> {
         n = shape.n,
         report = snap.render(),
     ))
+}
+
+/// Parse a `--model` spec of the form `mlp:KxH..xN` (the `mlp:` prefix
+/// is optional): at least two nonzero feature counts, one GEMM layer
+/// per adjacent pair.
+fn parse_model_dims(spec: &str) -> Result<Vec<usize>> {
+    let body = spec.strip_prefix("mlp:").unwrap_or(spec);
+    let dims = body
+        .split('x')
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|_| Error::Config(format!("bad model spec '{spec}'")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if dims.len() < 2 || dims.contains(&0) {
+        return Err(Error::Config(format!(
+            "model spec '{spec}' needs at least two nonzero dims (mlp:KxH..xN)"
+        )));
+    }
+    Ok(dims)
+}
+
+/// Build a seeded random-weight MLP over `dims` (feature counts at each
+/// layer boundary): every layer gets a bias; hidden layers additionally
+/// get the chosen activation — `"sign"` is the paper's BNN binarizer
+/// (outputs ±1, always in operand range), `"relu"` is ReLU plus a
+/// requantizing shift sized so the next layer's operands can never
+/// overflow `width` bits. Shared by the `infer` subcommand and
+/// `examples/infer.rs` so the workload can never drift between them.
+pub fn build_mlp(dims: &[usize], width: u16, act: &str, seed: u64) -> Result<ModelGraph> {
+    if !matches!(act, "relu" | "sign") {
+        return Err(Error::Config(format!("unknown activation '{act}' (relu|sign)")));
+    }
+    if dims.len() < 2 {
+        return Err(Error::Config("an MLP needs at least two dims".into()));
+    }
+    if width == 0 || width > 16 {
+        return Err(Error::Config(format!(
+            "operand width {width} outside 1..=16 (register budget)"
+        )));
+    }
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut b = GraphBuilder::new(dims[0], width);
+    for (li, pair) in dims.windows(2).enumerate() {
+        let (k, n) = (pair[0], pair[1]);
+        let mut weights = vec![0i64; k * n];
+        rng.fill_signed(&mut weights, width as u32);
+        let id = b.dense(weights, n)?;
+        let mut bias = vec![0i64; n];
+        rng.fill_signed(&mut bias, width as u32);
+        b.bias(id, bias)?;
+        if li + 1 < dims.len() - 1 {
+            match act {
+                "sign" => b.sign(id)?,
+                _ => {
+                    b.relu(id)?;
+                    // |dot + bias| <= k·2^(2w-2) + 2^(w-1); this shift
+                    // brings the rectified value under 2^(w-2), safely
+                    // inside the next layer's operand range.
+                    b.shift(id, width as u32 - 1 + crate::util::ceil_log2(k.max(2)) + 1)?;
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+fn cmd_infer(args: &Args) -> Result<String> {
+    let spec: String = args.get("model", "mlp:32x16x10".into())?;
+    let dims = parse_model_dims(&spec)?;
+    let width: u16 = args.get("width", 8)?;
+    let requests: usize = args.get("requests", 16)?.max(1);
+    let m: usize = args.get("m", 1)?;
+    let workers: usize = args.get("workers", 4)?;
+    let rows: usize = args.get("rows", 8)?;
+    let cols: usize = args.get("cols", 4)?;
+    let batch: usize = args.get("batch", 8)?;
+    let max_wait_us: u64 = args.get("max-wait-us", 200)?;
+    let seed: u64 = args.get("seed", 42u64)?;
+    let act: String = args.get("act", "sign".into())?;
+    let device = parse_device(args)?;
+    let shard_policy = parse_shards(args)?;
+    let mode = match args.get::<String>("mode", "pipelined".into())?.as_str() {
+        "pipelined" => ExecMode::Pipelined,
+        "barrier" | "sequential" => ExecMode::LayerBarrier,
+        other => {
+            return Err(Error::Config(format!("unknown mode '{other}' (pipelined|barrier)")))
+        }
+    };
+    // Pool selection mirrors `serve`: one design name, or the mixed
+    // overlay + CoMeFa-A pool (model jobs stay untagged there, so the
+    // per-backend report shows both classes serving layers).
+    let backend_name: String = args.get("backend", "picaso".into())?;
+    let (kind, regions) = if backend_name == "mixed" {
+        (ArchKind::PICASO_F, RegionSpec::mixed_pool(workers))
+    } else {
+        (parse_backend(&backend_name)?, Vec::new())
+    };
+
+    let graph = build_mlp(&dims, width, &act, seed)?;
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        geom: ArrayGeometry::new(rows, cols),
+        kind,
+        regions,
+        batch: BatchPolicy::Fixed {
+            max_batch: batch.max(1),
+            max_wait: Duration::from_micros(max_wait_us),
+        },
+        ..Default::default()
+    })?;
+
+    let mut rng = Xoshiro256::seeded(seed ^ 0xA5A5);
+    let mut inputs = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let mut a = vec![0i64; m * dims[0]];
+        rng.fill_signed(&mut a, width as u32);
+        inputs.push(a);
+    }
+    let expects: Vec<Vec<i64>> =
+        inputs.iter().map(|a| graph.forward_ref(a, m)).collect::<Result<_>>()?;
+
+    let model = CompiledModel::compile(
+        &coord,
+        graph,
+        CompileOptions { rows_per_request: m, shards: shard_policy, ..Default::default() },
+    )?;
+    coord.serving_metrics().reset_window();
+    let exec =
+        GraphExecutor::new(&coord, &model).with_window(args.get("window", 0usize)?);
+    let report = exec.infer_batch(&inputs, mode)?;
+    let mismatched = report
+        .outputs
+        .iter()
+        .zip(&expects)
+        .filter(|(got, want)| got != want)
+        .count();
+
+    let mode_name = match mode {
+        ExecMode::Pipelined => "pipelined",
+        ExecMode::LayerBarrier => "layer-barrier",
+    };
+    let mut out = format!(
+        "infer {spec} w={width} on {workers} {backend_name} workers ({rows}x{cols} blocks): \
+         {requests} requests x m={m}, {mode_name}\n\
+         verified: {}\n",
+        if mismatched == 0 {
+            format!("OK — {requests}/{requests} match the scalar i64 reference")
+        } else {
+            format!("FAILED — {mismatched}/{requests} mismatched")
+        },
+    );
+    for (idx, cl) in model.layers().iter().enumerate() {
+        let lr = &report.per_layer[idx];
+        let lspec = &model.graph().layers()[idx];
+        let freq = crate::analytic::design_clock_hz(cl.kind, device);
+        let per_job = if lr.jobs > 0 { lr.cycles as f64 / lr.jobs as f64 } else { 0.0 };
+        out.push_str(&format!(
+            "layer {idx}  {:>4}->{:<4} jobs={} cycles={} retries={} busy={:.0}us  \
+             pim/job={} at {} ({})\n",
+            lspec.k,
+            lspec.n,
+            lr.jobs,
+            lr.cycles,
+            lr.retries,
+            lr.busy_us,
+            crate::util::fmt_ns(per_job / freq * 1e9),
+            crate::util::fmt_freq(freq),
+            device.id,
+        ));
+    }
+    let (p50, p95) = report.request_latency_p50_p95();
+    let est = model.pipeline_estimate(requests);
+    out.push_str(&format!(
+        "end-to-end  p50={p50:.0}us p95={p95:.0}us  throughput={:.1} req/s (wall {:.1}ms)\n\
+         pipeline model: sequential {:.0} cycles vs pipelined {:.0} cycles => {:.2}x \
+         (compile-time estimate {:.2}x)\n{}\n",
+        requests as f64 / (report.wall_us / 1e6).max(1e-9),
+        report.wall_us / 1e3,
+        report.sequential_makespan_cycles,
+        report.pipelined_makespan_cycles,
+        report.pipeline_speedup(),
+        est.speedup(),
+        coord.metrics_snapshot().render(),
+    ));
+    model.close(&coord);
+    coord.shutdown();
+    if mismatched > 0 {
+        return Err(Error::Runtime(format!(
+            "{mismatched}/{requests} outputs mismatched the scalar reference"
+        )));
+    }
+    Ok(out)
 }
 
 fn cmd_info() -> String {
@@ -644,5 +885,55 @@ mod tests {
     fn unknown_command_errors() {
         assert!(run_line("bogus").is_err());
         assert!(run_line("help").unwrap().contains("usage"));
+    }
+
+    #[test]
+    fn serve_command_resilience_tuning_flags() {
+        let out = run_line(
+            "serve --jobs=5 --workers=2 --rows=2 --cols=1 --quarantine=0 --backoff-us=0",
+        )
+        .unwrap();
+        assert!(out.contains("served 5"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(run_line("serve --quarantine=bogus").is_err());
+        assert!(run_line("serve --backoff-us=bogus").is_err());
+    }
+
+    #[test]
+    fn infer_command_verifies_and_reports_layers() {
+        let out =
+            run_line("infer --model=mlp:8x6x4 --requests=4 --workers=2 --rows=2 --cols=1")
+                .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        assert!(out.contains("layer 0"), "{out}");
+        assert!(out.contains("layer 1"), "{out}");
+        assert!(out.contains("pipeline model"), "{out}");
+        assert!(out.contains("p95="), "{out}");
+        assert!(out.contains("pim/job="), "{out}");
+    }
+
+    #[test]
+    fn infer_command_modes_activations_and_shards_compose() {
+        // Barrier mode, ReLU + requantizing shift, sharded layers.
+        let out = run_line(
+            "infer --model=mlp:8x6x4 --requests=3 --workers=2 --rows=2 --cols=1 \
+             --mode=barrier --act=relu --shards=2",
+        )
+        .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        assert!(out.contains("layer-barrier"), "{out}");
+        // Mixed pool serves layers on both classes.
+        let out = run_line(
+            "infer --model=mlp:8x6x4 --requests=4 --workers=2 --rows=2 --cols=1 \
+             --backend=mixed",
+        )
+        .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        // Bad specs fail loudly.
+        assert!(run_line("infer --model=bogus --rows=2 --cols=1").is_err());
+        assert!(run_line("infer --model=mlp:8 --rows=2 --cols=1").is_err());
+        assert!(run_line("infer --model=mlp:8x0x4 --rows=2 --cols=1").is_err());
+        assert!(run_line("infer --model=mlp:8x6x4 --act=bogus --rows=2 --cols=1").is_err());
+        assert!(run_line("infer --model=mlp:8x6x4 --mode=bogus --rows=2 --cols=1").is_err());
     }
 }

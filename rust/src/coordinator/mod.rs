@@ -13,8 +13,12 @@
 //!   (block or reject at capacity), FIFO/[priority](QueuePolicy) ordering,
 //!   an explicit per-ticket lifecycle
 //!   ([`TicketState`]: `Queued → Dispatched → Done | Retrying(n) | Shed`),
-//!   scatter-atomic multi-slot admission ([`Scheduler::reserve`]), and a
-//!   per-job [`JobHandle`] replacing the order-fragile `drain(n)`.
+//!   scatter-atomic multi-slot admission ([`Scheduler::reserve`]), a
+//!   per-job [`JobHandle`] replacing the order-fragile `drain(n)`, and
+//!   region-health policies: retry backoff with deterministic jitter
+//!   ([`BackoffPolicy`]), consecutive-fault region quarantine
+//!   ([`QuarantinePolicy`]), and deadline-aged priorities
+//!   ([`Ticket::effective_priority`]).
 //! * [`batcher`] — micro-batching: same-`(GemmShape, width)` (or
 //!   same-session) jobs coalesce into **one** packed array invocation,
 //!   amortizing corner-turn, staging and ragged final rounds, with fixed
@@ -70,8 +74,8 @@ pub mod session;
 
 pub use batcher::{BatchKey, BatchPolicy, Batcher};
 pub use scheduler::{
-    Backpressure, Completion, JobHandle, QueuePolicy, Reservation, RetryPolicy, Scheduler,
-    SchedulerConfig, ShardInfo, Ticket, TicketState,
+    BackoffPolicy, Backpressure, Completion, JobHandle, QuarantinePolicy, QueuePolicy,
+    Reservation, RetryPolicy, Scheduler, SchedulerConfig, ShardInfo, Ticket, TicketState,
 };
 pub use session::{ModelSession, SessionId, SessionSpec};
 
@@ -945,6 +949,20 @@ fn worker_loop(
         let batch_wall_us = t0.elapsed().as_secs_f64() * 1e6;
         let batch_size = batch.len();
         metrics.record_batch(batch_size, batch_wall_us);
+        // Region health for the quarantine policy: any transient error
+        // in this batch is a fault event for this region's streak; a
+        // clean batch with at least one success resets it (permanent
+        // errors are the job's fault, not the region's — no change).
+        let any_transient = outcome
+            .per_job
+            .iter()
+            .any(|(_, _, e)| e.as_ref().is_some_and(|e| e.transient));
+        let any_success = outcome.per_job.iter().any(|(_, _, e)| e.is_none());
+        if any_transient {
+            sched.note_region_fault(widx);
+        } else if any_success {
+            sched.note_region_success(widx);
+        }
         // Per-job execution cost is the batch's wall time split across
         // its jobs, weighted by output length (ragged batches attribute
         // cost where the packed rounds actually went) — keeps

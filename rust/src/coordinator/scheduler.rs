@@ -1,6 +1,20 @@
 //! Bounded submission queue with backpressure, an explicit per-ticket
 //! lifecycle, multi-slot (scatter-atomic) admission, and failure-domain
-//! retry support.
+//! retry support — with three region-health refinements on top:
+//!
+//! * **retry backoff** ([`BackoffPolicy`]): a retried ticket re-enters
+//!   the queue with a `not_before` timestamp (exponential in the attempt
+//!   number, with deterministic per-`(job, attempt)` jitter), so a
+//!   repeatedly-flaky pool cannot hot-loop one ticket through its
+//!   regions;
+//! * **region quarantine** ([`QuarantinePolicy`]): a region that reports
+//!   N *consecutive* transient faults leaves the pop rotation for a
+//!   cooldown and is re-probed on expiry, so a dying region stops
+//!   burning whole retry budgets;
+//! * **priority aging** ([`Ticket::effective_priority`]): under
+//!   [`QueuePolicy::Priority`], a deadline-carrying ticket's band rises
+//!   as its deadline approaches, so urgent work dispatches *before* the
+//!   only remaining option is shedding it at expiry.
 //!
 //! # Job lifecycle
 //!
@@ -93,7 +107,7 @@ use crate::metrics::ServingMetrics;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Linkage of a shard sub-ticket to the logical job it was scattered
 /// from (see [`Coordinator::submit_job`](super::Coordinator::submit_job)
@@ -163,6 +177,97 @@ impl RetryPolicy {
     }
 }
 
+/// Delay schedule applied when a ticket is re-queued after a transient
+/// region failure (see [`Scheduler::retry`]): exponential in the attempt
+/// number with **deterministic jitter** — the jitter factor is a pure
+/// hash of `(job id, attempt)`, so two tickets retried at the same
+/// instant desynchronize, yet any given retry's delay is exactly
+/// reproducible run to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackoffPolicy {
+    /// Delay scale of the first retry; each further attempt doubles it.
+    /// [`Duration::ZERO`] disables backoff (the pre-backoff hot-requeue
+    /// behaviour).
+    pub base: Duration,
+    /// Upper bound on the exponential term, so deep retry chains stay
+    /// responsive.
+    pub cap: Duration,
+}
+
+impl Default for BackoffPolicy {
+    /// 50µs base doubling to a 5ms cap — invisible on a healthy pool,
+    /// decisive against a hot retry loop.
+    fn default() -> Self {
+        Self { base: Duration::from_micros(50), cap: Duration::from_millis(5) }
+    }
+}
+
+impl BackoffPolicy {
+    /// No backoff: retries re-enter the queue immediately.
+    pub fn none() -> Self {
+        Self { base: Duration::ZERO, cap: Duration::ZERO }
+    }
+
+    /// The delay before retry `attempt` (1-based) of job `job_id`:
+    /// `base · 2^(attempt-1)` capped at [`cap`](Self::cap), scaled by a
+    /// deterministic jitter factor in `[0.5, 1.0)` derived from
+    /// `(job_id, attempt)`. Zero when backoff is disabled.
+    pub fn delay(&self, job_id: u64, attempt: u32) -> Duration {
+        if self.base.is_zero() {
+            return Duration::ZERO;
+        }
+        let doublings = attempt.saturating_sub(1).min(20);
+        let exp = self
+            .base
+            .saturating_mul(1u32 << doublings)
+            .min(self.cap.max(self.base));
+        // SplitMix64 of the (job, attempt) pair: a full-avalanche hash,
+        // so consecutive attempts land on unrelated jitter factors.
+        let mut h = crate::util::SplitMix64::new(
+            job_id ^ ((u64::from(attempt)) << 32) ^ 0x9E37_79B9_7F4A_7C15,
+        );
+        let frac = (h.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        exp.mul_f64(0.5 + frac / 2.0)
+    }
+}
+
+/// Region-quarantine policy: a worker region that reports
+/// [`threshold`](Self::threshold) **consecutive** transient faults
+/// (via [`Scheduler::note_region_fault`]) leaves the pop rotation for
+/// [`cooldown`](Self::cooldown). On expiry the region is on
+/// **probation**: it pops a single probe ticket at a time — the
+/// batcher may not coalesce companions onto it, so a still-dead region
+/// risks one retry budget per probe, not a whole batch — until either
+/// a success ([`Scheduler::note_region_success`]) clears its record or
+/// a further transient fault re-quarantines it immediately. Queued
+/// work is unaffected: healthy regions keep dispatching, and after
+/// [`Scheduler::close`] a quarantined region drains the backlog like
+/// any other (a cooldown must never strand admitted jobs at shutdown).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuarantinePolicy {
+    /// Consecutive transient faults that trigger quarantine. 0 disables
+    /// quarantining entirely.
+    pub threshold: u32,
+    /// How long a quarantined region sits out before its re-probe.
+    pub cooldown: Duration,
+}
+
+impl Default for QuarantinePolicy {
+    /// Three consecutive faults, 10ms cooldown: a flaky region keeps
+    /// serving, a dead one stops eating retry budgets within a few
+    /// batches.
+    fn default() -> Self {
+        Self { threshold: 3, cooldown: Duration::from_millis(10) }
+    }
+}
+
+impl QuarantinePolicy {
+    /// Quarantining disabled (every fault domain stays in rotation).
+    pub fn disabled() -> Self {
+        Self { threshold: 0, cooldown: Duration::ZERO }
+    }
+}
+
 /// Queue ordering policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QueuePolicy {
@@ -190,11 +295,24 @@ pub struct SchedulerConfig {
     pub policy: QueuePolicy,
     /// Behaviour at capacity.
     pub backpressure: Backpressure,
+    /// Delay schedule for failure-domain retries (exponential with
+    /// deterministic jitter; [`BackoffPolicy::none`] restores the
+    /// immediate-requeue behaviour).
+    pub retry_backoff: BackoffPolicy,
+    /// Consecutive-fault quarantine for worker regions
+    /// ([`QuarantinePolicy::disabled`] keeps every region in rotation).
+    pub quarantine: QuarantinePolicy,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { capacity: 256, policy: QueuePolicy::Fifo, backpressure: Backpressure::Block }
+        Self {
+            capacity: 256,
+            policy: QueuePolicy::Fifo,
+            backpressure: Backpressure::Block,
+            retry_backoff: BackoffPolicy::default(),
+            quarantine: QuarantinePolicy::default(),
+        }
     }
 }
 
@@ -527,6 +645,11 @@ pub struct Ticket {
     /// Worker regions that already failed this ticket — excluded from
     /// later dispatch so every retry lands on a fresh fault domain.
     pub tried_workers: Vec<usize>,
+    /// Retry backoff: the ticket may not dispatch before this instant
+    /// (`None` = immediately dispatchable). Set by [`Scheduler::retry`]
+    /// from the scheduler's [`BackoffPolicy`]; deadline shedding ignores
+    /// it (an expired ticket sheds even mid-backoff).
+    pub not_before: Option<Instant>,
     completion: Completion,
 }
 
@@ -556,6 +679,32 @@ impl Ticket {
         self.job
             .deadline_us
             .is_some_and(|d| self.queue_wait_us() > d)
+    }
+
+    /// Deadline-aged priority: the submission priority, bumped as the
+    /// job's deadline approaches — +1 at 25% of the deadline consumed in
+    /// queue, +2 at 50%, +3 at 75% (saturating). Jobs without a deadline
+    /// keep their base priority. Consulted at pop time under
+    /// [`QueuePolicy::Priority`], so an urgent ticket overtakes higher
+    /// bands *before* its only remaining outcome is being shed at
+    /// expiry; under FIFO it is informational only.
+    pub fn effective_priority(&self) -> u8 {
+        match self.job.deadline_us {
+            Some(d) if d > 0.0 => {
+                let frac = self.queue_wait_us() / d;
+                let boost = if frac >= 0.75 {
+                    3
+                } else if frac >= 0.5 {
+                    2
+                } else if frac >= 0.25 {
+                    1
+                } else {
+                    0
+                };
+                self.priority.saturating_add(boost)
+            }
+            _ => self.priority,
+        }
     }
 
     /// Deliver the job's result to its [`JobHandle`].
@@ -606,10 +755,23 @@ impl Ticket {
     }
 }
 
+/// Fault-streak bookkeeping for one worker region (quarantine support).
+#[derive(Debug, Default, Clone, Copy)]
+struct RegionHealth {
+    /// Transient faults since the last success.
+    consecutive: u32,
+    /// End of the current quarantine window, if one is active (a value
+    /// in the past means the region is on probation: eligible again,
+    /// but one more fault re-quarantines it instantly).
+    until: Option<Instant>,
+}
+
 struct State {
     items: VecDeque<Ticket>,
     closed: bool,
     next_seq: u64,
+    /// Per-region fault streaks, indexed by worker id (grown on demand).
+    health: Vec<RegionHealth>,
     /// Total submissions ever accepted — the batcher's arrival clock.
     arrivals: u64,
     /// Queue slots held by outstanding [`Reservation`]s but not yet
@@ -700,6 +862,7 @@ impl Scheduler {
                     items: VecDeque::new(),
                     closed: false,
                     next_seq: 0,
+                    health: Vec::new(),
                     arrivals: 0,
                     reserved: 0,
                     reserve_waiter: false,
@@ -798,6 +961,7 @@ impl Scheduler {
             shard,
             attempt: 0,
             tried_workers: Vec::new(),
+            not_before: None,
             completion,
         };
         self.insert_ticket(&mut st, ticket, false);
@@ -925,7 +1089,9 @@ impl Scheduler {
     /// region joins the ticket's exclusion list, the handle state moves
     /// to [`TicketState::Retrying`], and the ticket re-enters the queue
     /// *ahead* of its priority band (it was admitted before anything
-    /// currently queued). Capacity is deliberately bypassed — the job
+    /// currently queued) — but gated by the configured [`BackoffPolicy`]
+    /// (`not_before`), so repeated failures cannot hot-loop the ticket
+    /// through the pool. Capacity is deliberately bypassed — the job
     /// was already admitted once, and a worker must never block on its
     /// own queue. Returns the ticket back if the scheduler has closed
     /// (the caller should fail it instead of retrying).
@@ -942,6 +1108,8 @@ impl Scheduler {
         if !t.tried_workers.contains(&failed_worker) {
             t.tried_workers.push(failed_worker);
         }
+        let delay = self.inner.cfg.retry_backoff.delay(t.job.id, t.attempt);
+        t.not_before = if delay.is_zero() { None } else { Some(Instant::now() + delay) };
         t.completion.set_state(TicketState::Retrying(t.attempt));
         t.seq = st.next_seq;
         st.next_seq += 1;
@@ -951,6 +1119,72 @@ impl Scheduler {
         drop(st);
         self.inner.not_empty.notify_all();
         Ok(())
+    }
+
+    /// Report one transient fault on worker region `worker` (called by
+    /// the worker pool after a backend execution failure). After
+    /// [`QuarantinePolicy::threshold`] *consecutive* faults the region
+    /// is quarantined: it pops nothing until the cooldown expires, at
+    /// which point it is re-probed with a single ticket. Each quarantine
+    /// entry is counted in
+    /// [`ServingMetrics`](crate::metrics::ServingMetrics) (the
+    /// `quarantines` counter).
+    pub fn note_region_fault(&self, worker: usize) {
+        let policy = self.inner.cfg.quarantine;
+        if policy.threshold == 0 {
+            return;
+        }
+        let mut st = self.lock();
+        if st.health.len() <= worker {
+            st.health.resize(worker + 1, RegionHealth::default());
+        }
+        let h = &mut st.health[worker];
+        h.consecutive += 1;
+        if h.consecutive >= policy.threshold {
+            h.until = Some(Instant::now() + policy.cooldown);
+            drop(st);
+            self.inner.metrics.record_quarantine();
+        }
+    }
+
+    /// Report a successful execution on worker region `worker`: clears
+    /// its fault streak and any active quarantine (the re-probe
+    /// succeeded — the region rejoins the rotation for good).
+    pub fn note_region_success(&self, worker: usize) {
+        if self.inner.cfg.quarantine.threshold == 0 {
+            return;
+        }
+        let mut st = self.lock();
+        if let Some(h) = st.health.get_mut(worker) {
+            h.consecutive = 0;
+            h.until = None;
+        }
+    }
+
+    /// True while worker region `worker` is inside a quarantine
+    /// cooldown (observability; the pop operations enforce it).
+    pub fn region_quarantined(&self, worker: usize) -> bool {
+        Self::quarantine_until(&self.lock(), Some(worker)).is_some()
+    }
+
+    /// The end of `worker`'s active quarantine window, if one is in
+    /// effect right now.
+    fn quarantine_until(st: &State, worker: Option<usize>) -> Option<Instant> {
+        let w = worker?;
+        st.health
+            .get(w)
+            .and_then(|h| h.until)
+            .filter(|until| *until > Instant::now())
+    }
+
+    /// True while `worker` carries a quarantine record at all — active
+    /// cooldown **or** probation (cooldown expired, but no successful
+    /// probe has cleared it yet). Gates batch coalescing: a region on
+    /// probation takes single probe tickets only.
+    fn quarantine_flagged(st: &State, worker: Option<usize>) -> bool {
+        worker
+            .and_then(|w| st.health.get(w))
+            .is_some_and(|h| h.until.is_some())
     }
 
     /// Jobs currently queued.
@@ -1012,10 +1246,17 @@ impl Scheduler {
     /// Pop the first ticket worker `worker` of `class` may run, blocking
     /// while none is queued. Tickets tagged for other backend classes —
     /// or whose retry history already burned this worker's fault domain —
-    /// are left in place for other workers. Tickets whose deadline
-    /// expired in the queue are shed here (any worker sheds any expired
-    /// ticket, regardless of class). Returns `None` once the scheduler
-    /// is closed **and** holds no eligible ticket.
+    /// are left in place for other workers, as are tickets still inside
+    /// their retry backoff window (the pop sleeps until the earliest
+    /// such ticket becomes ready if nothing else is dispatchable). A
+    /// quarantined worker takes nothing until its cooldown expires
+    /// (ignored after [`close`](Self::close): the backlog must drain).
+    /// Tickets whose deadline expired in the queue are shed here (any
+    /// worker sheds any expired ticket, regardless of class). Under
+    /// [`QueuePolicy::Priority`] the pick is by **deadline-aged**
+    /// priority ([`Ticket::effective_priority`]), queue position
+    /// breaking ties. Returns `None` once the scheduler is closed
+    /// **and** holds no eligible ticket.
     pub fn pop_blocking_for(
         &self,
         worker: Option<usize>,
@@ -1030,17 +1271,82 @@ impl Scheduler {
                 st = self.lock();
                 continue;
             }
-            if let Some(idx) = st.items.iter().position(|t| t.eligible_for(worker, class)) {
+            // Quarantined region: sit out the cooldown (new arrivals or
+            // close wake the wait early; close switches to drain mode).
+            if !st.closed {
+                if let Some(until) = Self::quarantine_until(&st, worker) {
+                    let wait = until.saturating_duration_since(Instant::now());
+                    let (g, _) = self
+                        .inner
+                        .not_empty
+                        .wait_timeout(st, wait)
+                        .unwrap_or_else(|e| e.into_inner());
+                    st = g;
+                    continue;
+                }
+            }
+            let now = Instant::now();
+            let mut chosen: Option<usize> = None;
+            let mut best = 0u8;
+            // Earliest instant a currently-backing-off eligible ticket
+            // becomes dispatchable (bounds the wait below).
+            let mut next_ready: Option<Instant> = None;
+            for (i, t) in st.items.iter().enumerate() {
+                if !t.eligible_for(worker, class) {
+                    continue;
+                }
+                if let Some(nb) = t.not_before {
+                    if nb > now {
+                        next_ready = Some(next_ready.map_or(nb, |e| e.min(nb)));
+                        continue;
+                    }
+                }
+                match self.inner.cfg.policy {
+                    // Queue position *is* dispatch order under FIFO.
+                    QueuePolicy::Fifo => {
+                        chosen = Some(i);
+                        break;
+                    }
+                    // Deadline aging can promote a ticket past bands it
+                    // was inserted below, so every candidate is scored;
+                    // first position wins ties (FIFO among equals, and
+                    // front-of-band retries keep their head start).
+                    QueuePolicy::Priority => {
+                        let p = t.effective_priority();
+                        if chosen.is_none() || p > best {
+                            chosen = Some(i);
+                            best = p;
+                        }
+                    }
+                }
+            }
+            if let Some(idx) = chosen {
                 let t = st.items.remove(idx).expect("position is in range");
                 t.completion.set_state(TicketState::Dispatched);
                 drop(st);
                 self.inner.not_full.notify_all();
                 return Some(t);
             }
-            if st.closed {
-                return None;
+            match next_ready {
+                // A backing-off ticket exists — even after close the
+                // backlog must drain, so sleep until it is ready (or a
+                // new arrival / close wakes the wait).
+                Some(at) => {
+                    let wait = at.saturating_duration_since(Instant::now());
+                    let (g, _) = self
+                        .inner
+                        .not_empty
+                        .wait_timeout(st, wait)
+                        .unwrap_or_else(|e| e.into_inner());
+                    st = g;
+                }
+                None => {
+                    if st.closed {
+                        return None;
+                    }
+                    st = self.inner.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
             }
-            st = self.inner.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -1062,11 +1368,23 @@ impl Scheduler {
     ) -> Option<Ticket> {
         let mut st = self.lock();
         let expired = Self::take_expired(&mut st);
-        let idx = st.items.iter().position(|t| {
-            &t.key == key
-                && t.eligible_for(worker, class)
-                && !t.shard.is_some_and(|s| exclude_parents.contains(&s.parent))
-        });
+        let now = Instant::now();
+        // A quarantined worker coalesces nothing during its cooldown —
+        // nor on probation after it, so the expiry re-probe is a single
+        // ticket instead of a full batch risking max_batch retry
+        // budgets at once (the drain-after-close exemption matches
+        // pop_blocking_for).
+        let gated = !st.closed && Self::quarantine_flagged(&st, worker);
+        let idx = if gated {
+            None
+        } else {
+            st.items.iter().position(|t| {
+                &t.key == key
+                    && t.eligible_for(worker, class)
+                    && t.not_before.map_or(true, |nb| nb <= now)
+                    && !t.shard.is_some_and(|s| exclude_parents.contains(&s.parent))
+            })
+        };
         let t = idx.map(|i| {
             let t = st.items.remove(i).expect("position is in range");
             t.completion.set_state(TicketState::Dispatched);
@@ -1569,5 +1887,195 @@ mod tests {
             Arc::new(ServingMetrics::new()),
         )
         .is_err());
+    }
+
+    #[test]
+    fn backoff_delay_is_deterministic_bounded_and_escalating() {
+        let p = BackoffPolicy { base: Duration::from_micros(100), cap: Duration::from_millis(2) };
+        // Deterministic: the same (job, attempt) always gets the same delay.
+        assert_eq!(p.delay(7, 1), p.delay(7, 1));
+        // Jitter lands in [exp/2, exp): attempt 1 in [50us, 100us).
+        let d1 = p.delay(7, 1);
+        assert!(d1 >= Duration::from_micros(50) && d1 < Duration::from_micros(100), "{d1:?}");
+        // Consecutive attempts strictly escalate (their ranges are disjoint).
+        let d2 = p.delay(7, 2);
+        assert!(d2 >= Duration::from_micros(100) && d2 < Duration::from_micros(200), "{d2:?}");
+        // The cap bounds deep retry chains.
+        assert!(p.delay(7, 40) < Duration::from_millis(2));
+        // Different jobs at the same attempt desynchronize.
+        let distinct: std::collections::HashSet<Duration> =
+            (1..=8u64).map(|id| p.delay(id, 1)).collect();
+        assert!(distinct.len() > 1, "jitter must separate jobs");
+        // Disabled backoff is always zero.
+        assert_eq!(BackoffPolicy::none().delay(9, 3), Duration::ZERO);
+    }
+
+    #[test]
+    fn retried_ticket_backs_off_before_redispatch() {
+        let s = sched(SchedulerConfig {
+            retry_backoff: BackoffPolicy {
+                base: Duration::from_millis(40),
+                cap: Duration::from_millis(40),
+            },
+            ..Default::default()
+        });
+        let h = s.submit(tiny_job(1)).unwrap();
+        let t = s.pop_blocking().unwrap();
+        let t0 = Instant::now();
+        s.retry(t, 0).unwrap();
+        // Inside the backoff window nothing is dispatchable, even for a
+        // fresh region.
+        assert!(s
+            .try_pop_matching(&BatchKey::for_ticket(&tiny_job(1).kind, None), Some(1), None, &[])
+            .is_none());
+        // The blocking pop waits the window out instead of spinning or
+        // exiting.
+        let t = s.pop_blocking_for(Some(1), None).unwrap();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(20),
+            "jitter floor is exp/2: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(t.attempt, 1);
+        let mut r = ok_result(1);
+        r.retries = 1;
+        t.complete(r);
+        assert!(h.wait().error.is_none());
+    }
+
+    #[test]
+    fn backlog_with_backoff_still_drains_after_close() {
+        let s = sched(SchedulerConfig {
+            retry_backoff: BackoffPolicy {
+                base: Duration::from_millis(30),
+                cap: Duration::from_millis(30),
+            },
+            ..Default::default()
+        });
+        s.submit(tiny_job(1)).unwrap();
+        let t = s.pop_blocking().unwrap();
+        s.retry(t, 0).unwrap();
+        s.close();
+        // The backing-off ticket must still be waited out and dispatched
+        // (a closed queue may not strand admitted work).
+        let t = s.pop_blocking_for(Some(1), None).expect("backlog drains");
+        assert_eq!(t.job.id, 1);
+        drop(t);
+        assert!(s.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn consecutive_faults_quarantine_a_region_until_cooldown() {
+        let metrics = Arc::new(ServingMetrics::new());
+        let s = Scheduler::new(
+            SchedulerConfig {
+                quarantine: QuarantinePolicy {
+                    threshold: 2,
+                    cooldown: Duration::from_millis(40),
+                },
+                retry_backoff: BackoffPolicy::none(),
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        s.submit(tiny_job(1)).unwrap();
+        s.note_region_fault(0);
+        assert!(!s.region_quarantined(0), "one fault is below the threshold");
+        s.note_region_fault(0);
+        assert!(s.region_quarantined(0));
+        // The quarantined region coalesces and pops nothing...
+        assert!(s
+            .try_pop_matching(&BatchKey::for_ticket(&tiny_job(1).kind, None), Some(0), None, &[])
+            .is_none());
+        // ...while a healthy region is unaffected.
+        drop(s.pop_blocking_for(Some(1), None).unwrap());
+        // The blocking pop waits out the cooldown, then re-probes.
+        s.submit(tiny_job(2)).unwrap();
+        let t0 = Instant::now();
+        let t = s.pop_blocking_for(Some(0), None).expect("cooldown expired: region re-probed");
+        assert!(t0.elapsed() >= Duration::from_millis(10), "{:?}", t0.elapsed());
+        assert_eq!(t.job.id, 2);
+        drop(t);
+        // Probation: until a probe succeeds, the region pops single
+        // tickets only — the batcher may not coalesce onto it.
+        let key = BatchKey::for_ticket(&tiny_job(1).kind, None);
+        s.submit(tiny_job(3)).unwrap();
+        assert!(
+            s.try_pop_matching(&key, Some(0), None, &[]).is_none(),
+            "no coalescing on probation"
+        );
+        drop(s.pop_blocking_for(Some(0), None).unwrap());
+        // A probe failure re-quarantines instantly (the streak persists).
+        s.note_region_fault(0);
+        assert!(s.region_quarantined(0));
+        // A success clears the streak and the quarantine outright —
+        // including the coalescing gate.
+        s.note_region_success(0);
+        assert!(!s.region_quarantined(0));
+        s.submit(tiny_job(4)).unwrap();
+        assert!(
+            s.try_pop_matching(&key, Some(0), None, &[]).is_some(),
+            "a cleared region coalesces again"
+        );
+        s.note_region_fault(0);
+        assert!(!s.region_quarantined(0), "a fresh streak starts from zero");
+        assert!(metrics.snapshot().quarantines >= 2, "each quarantine entry is counted");
+    }
+
+    #[test]
+    fn quarantine_is_ignored_after_close_so_the_backlog_drains() {
+        let s = sched(SchedulerConfig {
+            quarantine: QuarantinePolicy {
+                threshold: 1,
+                cooldown: Duration::from_secs(600),
+            },
+            ..Default::default()
+        });
+        s.submit(tiny_job(1)).unwrap();
+        s.note_region_fault(0);
+        assert!(s.region_quarantined(0));
+        s.close();
+        let t = s.pop_blocking_for(Some(0), None).expect("drain mode ignores quarantine");
+        assert_eq!(t.job.id, 1);
+        drop(t);
+        assert!(s.pop_blocking_for(Some(0), None).is_none());
+    }
+
+    #[test]
+    fn effective_priority_ages_toward_the_deadline() {
+        let s = sched(SchedulerConfig { policy: QueuePolicy::Priority, ..Default::default() });
+        s.submit_with_priority(tiny_job(1).with_deadline_us(1_000_000.0), 1).unwrap();
+        // Backdate the ticket's admission to control the consumed
+        // fraction without sleeping.
+        let set_elapsed = |us: u64| {
+            let mut st = s.lock();
+            st.items[0].enqueued_at = Instant::now() - Duration::from_micros(us);
+        };
+        let prio = || s.lock().items[0].effective_priority();
+        assert_eq!(prio(), 1, "fresh ticket keeps its base priority");
+        set_elapsed(300_000);
+        assert_eq!(prio(), 2, "+1 past 25% of the deadline consumed");
+        set_elapsed(600_000);
+        assert_eq!(prio(), 3, "+2 past 50%");
+        set_elapsed(800_000);
+        assert_eq!(prio(), 4, "+3 past 75%");
+        drop(s.pop_blocking().unwrap());
+    }
+
+    #[test]
+    fn deadline_aging_overtakes_higher_bands_at_pop() {
+        let s = sched(SchedulerConfig { policy: QueuePolicy::Priority, ..Default::default() });
+        s.submit_with_priority(tiny_job(1).with_deadline_us(1_000_000.0), 0).unwrap();
+        s.submit_with_priority(tiny_job(2), 2).unwrap();
+        // 80% of the deadline consumed: boost +3 lifts the band-0 job
+        // to effective 3, past the fresh band-2 job.
+        {
+            let mut st = s.lock();
+            let idx = st.items.iter().position(|t| t.job.id == 1).unwrap();
+            st.items[idx].enqueued_at = Instant::now() - Duration::from_micros(800_000);
+        }
+        assert_eq!(s.pop_blocking().unwrap().job.id, 1, "aged ticket overtakes the band");
+        assert_eq!(s.pop_blocking().unwrap().job.id, 2);
     }
 }

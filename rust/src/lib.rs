@@ -33,6 +33,12 @@
 //!   (Table V, Table VIII, Figs 5–7), cross-validated against the simulator.
 //! * [`compiler`] — maps GEMM / MLP layers onto the PIM array as microcode,
 //!   with single-job and micro-batched executors.
+//! * [`model`] — the model-graph executor: a validated DAG of GEMM layers
+//!   with fused elementwise epilogues (bias/ReLU/BNN-sign/shift/residual),
+//!   compiled to pinned per-layer sessions and run **pipelined** through
+//!   the serving stack (layer `L` of request `i` overlaps layer `L-1` of
+//!   request `i+1`), with a deterministic cycle-makespan model of the
+//!   pipelined-vs-sequential win.
 //! * [`coordinator`] — the serving subsystem: a bounded submission
 //!   [`coordinator::Scheduler`] with backpressure, scatter-atomic
 //!   admission, an explicit per-ticket lifecycle (`Queued → Dispatched →
@@ -70,6 +76,7 @@ pub mod custom;
 pub mod device;
 pub mod isa;
 pub mod metrics;
+pub mod model;
 pub mod network;
 pub mod pe;
 pub mod report;
@@ -87,11 +94,15 @@ pub mod prelude {
     pub use crate::bits::{corner_turn, corner_turn_back, BitPlanes};
     pub use crate::compiler::{GemmPlan, GemmShape, MacProgram, PimCompiler};
     pub use crate::coordinator::{
-        BackendHook, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobHandle,
-        JobKind, JobResult, ModelSession, QueuePolicy, RegionSpec, RetryPolicy, SchedulerConfig,
-        SessionId, ShardInfo, ShardPolicy, TicketState,
+        BackendHook, BackoffPolicy, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig,
+        Job, JobHandle, JobKind, JobResult, ModelSession, QuarantinePolicy, QueuePolicy,
+        RegionSpec, RetryPolicy, SchedulerConfig, SessionId, ShardInfo, ShardPolicy, TicketState,
     };
     pub use crate::custom::{CustomRegion, CustomTile};
+    pub use crate::model::{
+        CompileOptions, CompiledModel, ElemOp, ExecMode, GraphBuilder, GraphExecutor, LayerId,
+        ModelGraph,
+    };
     pub use crate::device::{Device, DeviceFamily, DEVICES};
     pub use crate::isa::{AluOp, BoothConf, Instruction, Microcode, OpMuxConf};
     pub use crate::metrics::{MetricsSnapshot, ServingMetrics};

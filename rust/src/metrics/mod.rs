@@ -215,6 +215,22 @@ impl LatencyTrack {
     }
 }
 
+/// Per-model-layer accumulation fed by the graph executor
+/// (`picaso::model`): one slot per layer of the compiled model, so a
+/// multi-layer serving deployment can see which layer is the pipeline
+/// bottleneck (cycles), which one is eating retries, and how much array
+/// time each occupies.
+#[derive(Debug, Default)]
+struct LayerTrack {
+    jobs: u64,
+    cycles: u64,
+    retries: u64,
+    /// Summed per-job execution wall shares (µs) — the layer's array
+    /// occupancy over the window.
+    busy_us: f64,
+    wall: OnlineStats,
+}
+
 /// Per-backend-class accumulation: jobs completed on worker regions of
 /// one [`BackendClass`], with their own end-to-end latency track so a
 /// mixed deployment reports overlay-vs-custom percentiles side by side.
@@ -258,6 +274,12 @@ struct ServingInner {
     /// Tickets shed unexecuted at pop time because their deadline
     /// expired in the queue.
     sheds: u64,
+    /// Region-quarantine events: a worker region left the pop rotation
+    /// after its consecutive-fault threshold (re-entries after a failed
+    /// probe count again).
+    quarantines: u64,
+    /// Per-model-layer rollups (graph executor), indexed by layer.
+    per_layer: Vec<LayerTrack>,
     window_start: Option<Instant>,
     /// Per-backend-class breakdown, keyed by the completing worker's
     /// class (small fixed set — linear scan beats hashing here).
@@ -379,6 +401,35 @@ impl ServingMetrics {
         g.sheds += 1;
     }
 
+    /// Record one region-quarantine event: a worker region left the pop
+    /// rotation after hitting its consecutive-transient-fault threshold
+    /// (see [`QuarantinePolicy`](crate::coordinator::QuarantinePolicy)).
+    pub fn record_quarantine(&self) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.quarantines += 1;
+    }
+
+    /// Record one completed model-layer job (graph executor): the
+    /// layer's index in its compiled model, the simulated cycles it
+    /// consumed, the failure-domain retries it absorbed, and its share
+    /// of the array-invocation wall time (µs). Feeds the per-layer
+    /// rollups of the snapshot — the pipeline-bottleneck view of a
+    /// multi-layer model serving deployment.
+    pub fn record_layer(&self, layer: usize, cycles: u64, retries: u64, wall_us: f64) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        if g.per_layer.len() <= layer {
+            g.per_layer.resize_with(layer + 1, LayerTrack::default);
+        }
+        let track = &mut g.per_layer[layer];
+        track.jobs += 1;
+        track.cycles += cycles;
+        track.retries += retries;
+        track.busy_us += wall_us;
+        track.wall.push(wall_us);
+    }
+
     /// The mean queue depth observed at enqueue over the current window.
     pub fn mean_queue_depth(&self) -> f64 {
         self.lock().queue_depth.mean()
@@ -476,6 +527,20 @@ impl ServingMetrics {
         }
         // Stable report order regardless of which worker finished first.
         per_backend.sort_by_key(|b| b.backend.name());
+        let per_layer: Vec<LayerSnapshot> = g
+            .per_layer
+            .iter()
+            .enumerate()
+            .map(|(layer, t)| LayerSnapshot {
+                layer,
+                jobs: t.jobs,
+                cycles: t.cycles,
+                retries: t.retries,
+                busy_us: t.busy_us,
+                mean_wall_us: t.wall.mean(),
+                max_wall_us: t.wall.max(),
+            })
+            .collect();
         MetricsSnapshot {
             jobs: g.jobs,
             errors: g.errors,
@@ -495,9 +560,33 @@ impl ServingMetrics {
             sharded_jobs: g.sharded_jobs,
             retries: g.retries,
             sheds: g.sheds,
+            quarantines: g.quarantines,
+            per_layer,
             per_backend,
         }
     }
+}
+
+/// Per-model-layer slice of a [`MetricsSnapshot`] fed by the graph
+/// executor: how much work (jobs, cycles), resilience cost (retries)
+/// and array occupancy (`busy_us`) each layer of a compiled model
+/// consumed — the slowest layer is the pipeline's throughput bound.
+#[derive(Debug, Clone)]
+pub struct LayerSnapshot {
+    /// Layer index within its compiled model graph.
+    pub layer: usize,
+    /// Layer jobs completed.
+    pub jobs: u64,
+    /// PIM cycles the layer's jobs consumed.
+    pub cycles: u64,
+    /// Failure-domain retries the layer's jobs absorbed.
+    pub retries: u64,
+    /// Summed execution wall shares (µs) — array occupancy.
+    pub busy_us: f64,
+    /// Mean per-job execution wall share (µs).
+    pub mean_wall_us: f64,
+    /// Worst per-job execution wall share (µs).
+    pub max_wall_us: f64,
 }
 
 /// Per-backend-class slice of a [`MetricsSnapshot`]: the jobs one class
@@ -577,6 +666,12 @@ pub struct MetricsSnapshot {
     /// Tickets shed unexecuted because their deadline expired in the
     /// queue.
     pub sheds: u64,
+    /// Region-quarantine events: a region left the pop rotation after
+    /// its consecutive-fault threshold (probe failures re-count).
+    pub quarantines: u64,
+    /// Per-model-layer rollups from the graph executor (empty when no
+    /// model inference ran in the window).
+    pub per_layer: Vec<LayerSnapshot>,
     /// Per-backend-class breakdown (sorted by class name; empty when no
     /// job carried a backend tag).
     pub per_backend: Vec<BackendSnapshot>,
@@ -631,10 +726,17 @@ impl MetricsSnapshot {
                 self.sharded_jobs, self.mean_shards, self.max_shards,
             ));
         }
-        if self.retries > 0 || self.sheds > 0 {
+        if self.retries > 0 || self.sheds > 0 || self.quarantines > 0 {
             out.push_str(&format!(
-                "\nresilience  retries={} shed={}",
-                self.retries, self.sheds,
+                "\nresilience  retries={} shed={} quarantines={}",
+                self.retries, self.sheds, self.quarantines,
+            ));
+        }
+        for l in &self.per_layer {
+            out.push_str(&format!(
+                "\nlayer {:<3} jobs={} cycles={} retries={} busy={:.0}us \
+                 mean={:.0}us max={:.0}us",
+                l.layer, l.jobs, l.cycles, l.retries, l.busy_us, l.mean_wall_us, l.max_wall_us,
             ));
         }
         for b in &self.per_backend {
@@ -789,6 +891,42 @@ mod tests {
         assert!(text.contains("shed=1"), "{text}");
         // Quiet windows keep the resilience line out.
         assert!(!ServingMetrics::new().snapshot().render().contains("resilience"));
+    }
+
+    #[test]
+    fn quarantine_counter_tracks_and_renders() {
+        let m = ServingMetrics::new();
+        m.record_quarantine();
+        m.record_quarantine();
+        let s = m.snapshot();
+        assert_eq!(s.quarantines, 2);
+        let text = s.render();
+        assert!(text.contains("quarantines=2"), "{text}");
+        // The resilience line appears even with zero retries/sheds.
+        assert!(text.contains("resilience"), "{text}");
+    }
+
+    #[test]
+    fn per_layer_rollups_track_and_render() {
+        let m = ServingMetrics::new();
+        m.record_layer(0, 100, 0, 10.0);
+        m.record_layer(0, 100, 1, 14.0);
+        m.record_layer(2, 900, 0, 50.0); // sparse: layer 1 stays empty
+        let s = m.snapshot();
+        assert_eq!(s.per_layer.len(), 3);
+        assert_eq!(s.per_layer[0].jobs, 2);
+        assert_eq!(s.per_layer[0].cycles, 200);
+        assert_eq!(s.per_layer[0].retries, 1);
+        assert!((s.per_layer[0].busy_us - 24.0).abs() < 1e-9);
+        assert!((s.per_layer[0].mean_wall_us - 12.0).abs() < 1e-9);
+        assert!((s.per_layer[0].max_wall_us - 14.0).abs() < 1e-9);
+        assert_eq!(s.per_layer[1].jobs, 0);
+        assert_eq!(s.per_layer[2].cycles, 900);
+        let text = s.render();
+        assert!(text.contains("layer 0"), "{text}");
+        assert!(text.contains("layer 2"), "{text}");
+        // Model-free windows keep the layer lines out.
+        assert!(!ServingMetrics::new().snapshot().render().contains("layer"));
     }
 
     #[test]

@@ -1,0 +1,551 @@
+//! Compiling a [`ModelGraph`] onto the serving stack and executing
+//! request batches through it, pipelined.
+//!
+//! **Compile** ([`CompiledModel::compile`]) lowers every GEMM layer to a
+//! pinned per-layer session
+//! ([`Coordinator::open_session_on`](crate::coordinator::Coordinator::open_session_on)):
+//! the layer's weights are staged once, its plan compiled once, and its
+//! jobs inherit the layer's backend pin and the model's [`ShardPolicy`]
+//! — a wide layer scatters across worker regions exactly like a sharded
+//! ad-hoc GEMM. The fused elementwise epilogue runs host-side on the
+//! gathered output (it is part of the gather step, never a separate
+//! array job).
+//!
+//! **Execute** ([`GraphExecutor`]) runs batches of requests through the
+//! layer pipeline. In [`ExecMode::Pipelined`] the executor keeps every
+//! request's *next* layer in flight the moment its previous layer
+//! gathers, so layer `L` of request `i` overlaps layer `L-1` of request
+//! `i+1` on other regions — steady-state throughput is bounded by the
+//! **slowest layer's** regions, not by the sum of all layers. Same-layer
+//! jobs of different requests additionally coalesce in the
+//! [`Batcher`](crate::coordinator::Batcher) (same session key), so the
+//! pipeline composes with micro-batching. [`ExecMode::LayerBarrier`] is
+//! the contrast: every request finishes layer `L` before any request
+//! starts layer `L+1`.
+//!
+//! Both modes produce a [`BatchReport`] with measured per-layer cycle
+//! rollups and the two **cycle-denominated makespans** derived from
+//! them — `sequential_makespan_cycles` (one region executing every
+//! layer of every request back to back) vs `pipelined_makespan_cycles`
+//! (one region per layer, classic pipeline fill + steady state). The
+//! simulator's cycle charges are deterministic, so with batching
+//! disabled this comparison is exactly reproducible — it is the
+//! quantity the model tests assert a win on.
+
+use super::graph::{check_operand_range, LayerId, ModelGraph};
+use crate::arch::ArchKind;
+use crate::backend::{make_backend, BackendClass};
+use crate::compiler::PimCompiler;
+use crate::coordinator::{
+    Coordinator, Job, JobKind, JobResult, ModelSession, RetryPolicy, SessionId, SessionSpec,
+    ShardPolicy,
+};
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// How a [`ModelGraph`] is lowered onto a coordinator.
+#[derive(Debug, Clone, Copy)]
+pub struct CompileOptions {
+    /// Activation rows per request (`m` of every layer's GEMM).
+    pub rows_per_request: usize,
+    /// Scatter policy applied to every layer job (wide layers split
+    /// across regions via per-shard staging-table slices).
+    pub shards: ShardPolicy,
+    /// Default backend-class pin for layers without their own
+    /// (`LayerSpec::backend` overrides per layer).
+    pub backend: Option<BackendClass>,
+    /// Failure-domain retry budget of every layer job.
+    pub retry: RetryPolicy,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self {
+            rows_per_request: 1,
+            shards: ShardPolicy::None,
+            backend: None,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// One lowered layer: its pinned session plus the bookkeeping the
+/// executor and reports need.
+#[derive(Debug, Clone)]
+pub struct CompiledLayer {
+    /// The pinned per-layer session (plan + pre-staged weights).
+    pub session: SessionId,
+    /// Backend pin in effect (layer override, else the compile default).
+    pub backend: Option<BackendClass>,
+    /// The design used for single-region cycle estimates and clock
+    /// conversions: the first pool region compatible with the pin.
+    pub kind: ArchKind,
+    /// Deterministic cycles of **one request** through this layer alone
+    /// on one `kind` region (a compile-time dry run on zero
+    /// activations) — the per-stage service time of the pipeline model.
+    pub solo_cycles: u64,
+}
+
+/// Deterministic cycle-denominated makespans of serving `requests`
+/// through a compiled model (see [`CompiledModel::pipeline_estimate`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineEstimate {
+    /// Requests modeled.
+    pub requests: usize,
+    /// One region executing every layer of every request back to back:
+    /// `R · Σ cycles_l`.
+    pub sequential_cycles: f64,
+    /// One region per layer, requests streamed through:
+    /// `Σ cycles_l + (R-1) · max_l cycles_l` — fill plus steady state
+    /// at the slowest stage.
+    pub pipelined_cycles: f64,
+}
+
+impl PipelineEstimate {
+    /// Sequential-over-pipelined ratio (1.0 when nothing is gained).
+    pub fn speedup(&self) -> f64 {
+        if self.pipelined_cycles > 0.0 {
+            self.sequential_cycles / self.pipelined_cycles
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A [`ModelGraph`] lowered onto a [`Coordinator`]: one pinned session
+/// per layer plus compile-time cycle estimates. Sessions stay open (and
+/// their staging tables pinned on workers) until
+/// [`close`](Self::close).
+#[derive(Debug)]
+pub struct CompiledModel {
+    graph: ModelGraph,
+    m: usize,
+    layers: Vec<CompiledLayer>,
+    shards: ShardPolicy,
+    retry: RetryPolicy,
+}
+
+impl CompiledModel {
+    /// Lower `graph` onto `coord`: open a pinned session per layer
+    /// (weights staged once, plan compiled once, backend pin validated
+    /// against the pool) and dry-run each layer once on a detached
+    /// single region for its deterministic per-request cycle count. A
+    /// mid-compile failure closes the sessions already opened, so a
+    /// rejected model never leaves pinned staging tables behind.
+    pub fn compile(
+        coord: &Coordinator,
+        graph: ModelGraph,
+        opts: CompileOptions,
+    ) -> Result<CompiledModel> {
+        let m = opts.rows_per_request;
+        if m == 0 {
+            return Err(Error::Config("rows_per_request must be >= 1".into()));
+        }
+        let geom = coord.config().geom;
+        let booth_skip = coord.config().booth_skip;
+        let compiler = PimCompiler::new(geom);
+        let mut layers: Vec<CompiledLayer> = Vec::with_capacity(graph.layers().len());
+        for (idx, l) in graph.layers().iter().enumerate() {
+            let backend = l.backend.or(opts.backend);
+            let shape = graph.layer_shape(LayerId(idx), m);
+            let lowered: Result<CompiledLayer> = (|| {
+                // Representative region for estimates and clock
+                // conversion: the first pool region the layer may run
+                // on.
+                let kind = match backend {
+                    None => coord.worker_kinds()[0],
+                    Some(c) => *coord
+                        .worker_kinds()
+                        .iter()
+                        .find(|k| BackendClass::of(**k) == c)
+                        .ok_or_else(|| {
+                            Error::Config(format!(
+                                "layer {idx} requires backend class {c}, but this pool \
+                                 has no such region"
+                            ))
+                        })?,
+                };
+                // Dry run on a detached backend (no coordinator
+                // traffic): the simulator's cycle charge for one
+                // request, the deterministic service time of this
+                // pipeline stage. One weights clone serves both the
+                // probe and the session it hands its weights to.
+                let spec = SessionSpec {
+                    shape,
+                    width: graph.width(),
+                    weights: l.weights.clone(),
+                    backend,
+                };
+                let session_model = ModelSession::prepare(&compiler, &spec)?;
+                let mut probe = make_backend(kind, geom, booth_skip);
+                let zeros = vec![0i64; shape.m * shape.k];
+                let (_, stats) = session_model.infer(&mut *probe, &zeros)?;
+                drop(session_model);
+                let session =
+                    coord.open_session_on(shape, graph.width(), spec.weights, backend)?;
+                Ok(CompiledLayer { session, backend, kind, solo_cycles: stats.cycles })
+            })();
+            match lowered {
+                Ok(cl) => layers.push(cl),
+                Err(e) => {
+                    // Unwind: release the sessions of the layers
+                    // already lowered.
+                    for cl in &layers {
+                        coord.close_session(cl.session);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(CompiledModel { graph, m, layers, shards: opts.shards, retry: opts.retry })
+    }
+
+    /// The validated graph this model was compiled from.
+    pub fn graph(&self) -> &ModelGraph {
+        &self.graph
+    }
+
+    /// Activation rows per request.
+    pub fn rows_per_request(&self) -> usize {
+        self.m
+    }
+
+    /// The lowered layers, indexed like the graph's.
+    pub fn layers(&self) -> &[CompiledLayer] {
+        &self.layers
+    }
+
+    /// The deterministic cycle makespans of `requests` uniform requests
+    /// through this model, from the compile-time per-layer dry runs —
+    /// pure arithmetic, reproducible run to run, independent of live
+    /// batching.
+    pub fn pipeline_estimate(&self, requests: usize) -> PipelineEstimate {
+        let per_layer: Vec<f64> = self.layers.iter().map(|l| l.solo_cycles as f64).collect();
+        let total: f64 = per_layer.iter().sum();
+        let slowest = per_layer.iter().cloned().fold(0.0f64, f64::max);
+        let r = requests as f64;
+        PipelineEstimate {
+            requests,
+            sequential_cycles: r * total,
+            pipelined_cycles: if requests == 0 {
+                0.0
+            } else {
+                total + (r - 1.0) * slowest
+            },
+        }
+    }
+
+    /// Close every layer session (workers drop the pinned staging
+    /// tables on their next batch). Jobs submitted after this fail with
+    /// an unknown-session error.
+    pub fn close(&self, coord: &Coordinator) {
+        for l in &self.layers {
+            coord.close_session(l.session);
+        }
+    }
+}
+
+/// Pipeline scheduling mode of [`GraphExecutor::infer_batch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Software pipelining: each request's next layer is submitted the
+    /// moment its previous layer gathers, so different requests occupy
+    /// different layers concurrently.
+    Pipelined,
+    /// A barrier between layers: every request finishes layer `L`
+    /// before any request starts `L+1` (the comparison baseline).
+    LayerBarrier,
+}
+
+/// Measured rollup of one layer across a batch execution.
+#[derive(Debug, Clone, Default)]
+pub struct LayerReport {
+    /// Layer jobs completed.
+    pub jobs: u64,
+    /// Simulated cycles the layer consumed (shards rolled up).
+    pub cycles: u64,
+    /// Failure-domain retries absorbed.
+    pub retries: u64,
+    /// Summed execution wall shares (µs) — the layer's array occupancy.
+    pub busy_us: f64,
+}
+
+/// Result of one [`GraphExecutor::infer_batch`] run.
+#[derive(Debug, Clone, Default)]
+pub struct BatchReport {
+    /// Per-request outputs (row-major `m×output_dim`), request order.
+    pub outputs: Vec<Vec<i64>>,
+    /// Per-request end-to-end latency (µs), admission to final gather.
+    pub request_us: Vec<f64>,
+    /// Whole-batch wall time (µs).
+    pub wall_us: f64,
+    /// Measured per-layer rollups, indexed by layer.
+    pub per_layer: Vec<LayerReport>,
+    /// Total simulated cycles across all layers.
+    pub total_cycles: u64,
+    /// Cycle makespan of one region running everything back to back
+    /// (`Σ_l S_l`, from the *measured* per-layer sums).
+    pub sequential_makespan_cycles: f64,
+    /// Cycle makespan of one region per layer with requests streamed
+    /// through (`Σ_l S_l/R + (R-1)·max_l S_l/R`): pipeline fill plus
+    /// steady state at the slowest stage. With batching disabled the
+    /// measured sums are deterministic, so so is this number.
+    pub pipelined_makespan_cycles: f64,
+}
+
+impl BatchReport {
+    fn empty(layers: usize) -> Self {
+        Self { per_layer: vec![LayerReport::default(); layers], ..Default::default() }
+    }
+
+    /// Sequential-over-pipelined makespan ratio (1.0 when no gain).
+    pub fn pipeline_speedup(&self) -> f64 {
+        if self.pipelined_makespan_cycles > 0.0 {
+            self.sequential_makespan_cycles / self.pipelined_makespan_cycles
+        } else {
+            1.0
+        }
+    }
+
+    /// `(p50, p95)` of the per-request end-to-end latency (µs).
+    pub fn request_latency_p50_p95(&self) -> (f64, f64) {
+        let mut pct = crate::util::Percentiles::new();
+        for &v in &self.request_us {
+            pct.push(v);
+        }
+        (pct.quantile(0.50).unwrap_or(0.0), pct.quantile(0.95).unwrap_or(0.0))
+    }
+
+    fn finalize(&mut self, requests: usize) {
+        self.total_cycles = self.per_layer.iter().map(|l| l.cycles).sum();
+        let sums: Vec<f64> = self.per_layer.iter().map(|l| l.cycles as f64).collect();
+        let total: f64 = sums.iter().sum();
+        let slowest = sums.iter().cloned().fold(0.0f64, f64::max);
+        self.sequential_makespan_cycles = total;
+        self.pipelined_makespan_cycles = if requests == 0 {
+            0.0
+        } else {
+            let r = requests as f64;
+            total / r + (r - 1.0) * slowest / r
+        };
+    }
+}
+
+/// Per-request progress while a batch is in flight.
+struct ReqState {
+    t0: Instant,
+    /// Post-epilogue outputs by layer (residual producers stay
+    /// available until the request completes).
+    outs: Vec<Option<Vec<i64>>>,
+}
+
+/// Runs request batches through a [`CompiledModel`] on its coordinator.
+/// Layer jobs flow through the ordinary serving stack — scheduler,
+/// batcher, sharded sessions, failure-domain retry — and the per-layer
+/// rollups land in the coordinator's
+/// [`ServingMetrics`](crate::metrics::ServingMetrics).
+pub struct GraphExecutor<'a> {
+    coord: &'a Coordinator,
+    model: &'a CompiledModel,
+    /// Max requests in flight under [`ExecMode::Pipelined`]; 0 = all.
+    window: usize,
+    next_id: AtomicU64,
+}
+
+impl<'a> GraphExecutor<'a> {
+    /// An executor for `model` on the coordinator it was compiled
+    /// against.
+    pub fn new(coord: &'a Coordinator, model: &'a CompiledModel) -> Self {
+        Self { coord, model, window: 0, next_id: AtomicU64::new(0) }
+    }
+
+    /// Bound the number of requests in flight under
+    /// [`ExecMode::Pipelined`] (0 = no bound). A bound keeps peak
+    /// memory and queue pressure flat on very large batches.
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Run one request and return its output (row-major
+    /// `m×output_dim`).
+    pub fn infer(&self, input: Vec<i64>) -> Result<Vec<i64>> {
+        let mut report = self.infer_batch(&[input], ExecMode::Pipelined)?;
+        Ok(report.outputs.pop().expect("one request yields one output"))
+    }
+
+    /// Run a batch of requests through the layer pipeline. Inputs are
+    /// row-major `m×input_dim` each; outputs come back in request
+    /// order. Any layer-job failure (after its retry budget) fails the
+    /// whole batch with the request/layer context.
+    pub fn infer_batch(&self, inputs: &[Vec<i64>], mode: ExecMode) -> Result<BatchReport> {
+        let g = self.model.graph();
+        let nl = g.layers().len();
+        let m = self.model.rows_per_request();
+        let mut report = BatchReport::empty(nl);
+        if inputs.is_empty() {
+            return Ok(report);
+        }
+        for (r, a) in inputs.iter().enumerate() {
+            if a.len() != m * g.input_dim() {
+                return Err(Error::Config(format!(
+                    "request {r}: {} values do not fill {m}x{} activations",
+                    a.len(),
+                    g.input_dim()
+                )));
+            }
+            check_operand_range(a, g.width(), &format!("request {r} input"))?;
+        }
+        let t_start = Instant::now();
+        let mut states: Vec<ReqState> = inputs
+            .iter()
+            .map(|_| ReqState { t0: t_start, outs: vec![None; nl] })
+            .collect();
+        report.request_us = vec![0.0; inputs.len()];
+        match mode {
+            ExecMode::Pipelined => self.run_pipelined(inputs, &mut states, &mut report)?,
+            ExecMode::LayerBarrier => self.run_barrier(inputs, &mut states, &mut report)?,
+        }
+        report.outputs = states
+            .iter_mut()
+            .map(|s| s.outs[g.output_layer().0].take().expect("output layer evaluated"))
+            .collect();
+        report.wall_us = t_start.elapsed().as_secs_f64() * 1e6;
+        report.finalize(inputs.len());
+        Ok(report)
+    }
+
+    /// The software pipeline: a queue of in-flight `(request, stage)`
+    /// jobs, always waited front-first (oldest work first). Completing
+    /// a stage immediately submits the request's next stage at the back
+    /// of the queue, so while this thread waits on request `i`'s layer
+    /// `L`, requests behind it execute earlier layers on other regions.
+    fn run_pipelined(
+        &self,
+        inputs: &[Vec<i64>],
+        states: &mut [ReqState],
+        report: &mut BatchReport,
+    ) -> Result<()> {
+        let topo = self.model.graph().topo_order();
+        let last = topo.len() - 1;
+        let window = if self.window == 0 { inputs.len() } else { self.window.max(1) };
+        let mut in_flight: VecDeque<(usize, usize, crate::coordinator::JobHandle)> =
+            VecDeque::new();
+        let mut admitted = 0usize;
+        while admitted < inputs.len().min(window) {
+            states[admitted].t0 = Instant::now();
+            let h = self.submit_stage(admitted, 0, inputs, states)?;
+            in_flight.push_back((admitted, 0, h));
+            admitted += 1;
+        }
+        while let Some((req, pos, handle)) = in_flight.pop_front() {
+            let result = handle.wait();
+            self.absorb(req, pos, result, states, report)?;
+            if pos < last {
+                let h = self.submit_stage(req, pos + 1, inputs, states)?;
+                in_flight.push_back((req, pos + 1, h));
+            } else {
+                report.request_us[req] = states[req].t0.elapsed().as_secs_f64() * 1e6;
+                if admitted < inputs.len() {
+                    states[admitted].t0 = Instant::now();
+                    let h = self.submit_stage(admitted, 0, inputs, states)?;
+                    in_flight.push_back((admitted, 0, h));
+                    admitted += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The layer-by-layer baseline: submit every request's stage-`p`
+    /// job, wait for all of them, move to stage `p+1`.
+    fn run_barrier(
+        &self,
+        inputs: &[Vec<i64>],
+        states: &mut [ReqState],
+        report: &mut BatchReport,
+    ) -> Result<()> {
+        let topo_len = self.model.graph().topo_order().len();
+        for pos in 0..topo_len {
+            let mut handles = Vec::with_capacity(inputs.len());
+            for req in 0..inputs.len() {
+                handles.push(self.submit_stage(req, pos, inputs, states)?);
+            }
+            for (req, handle) in handles.into_iter().enumerate() {
+                let result = handle.wait();
+                self.absorb(req, pos, result, states, report)?;
+                if pos + 1 == topo_len {
+                    report.request_us[req] = states[req].t0.elapsed().as_secs_f64() * 1e6;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit topo stage `pos` of request `req`: gather its activations
+    /// (graph input or the producer layer's epilogued output), validate
+    /// their operand range, and enqueue the session job with the
+    /// model's shard and retry policies.
+    fn submit_stage(
+        &self,
+        req: usize,
+        pos: usize,
+        inputs: &[Vec<i64>],
+        states: &[ReqState],
+    ) -> Result<crate::coordinator::JobHandle> {
+        let g = self.model.graph();
+        let idx = g.topo_order()[pos];
+        let layer = &g.layers()[idx];
+        let act: &[i64] = match layer.input {
+            None => &inputs[req],
+            Some(from) => states[req].outs[from.0].as_deref().expect("topo order"),
+        };
+        if layer.input.is_some() {
+            check_operand_range(act, g.width(), &format!("request {req} layer {idx} activations"))?;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let job = Job::new(
+            id,
+            JobKind::SessionGemm { session: self.model.layers[idx].session, a: act.to_vec() },
+        )
+        .with_shards(self.model.shards)
+        .with_retry(self.model.retry);
+        self.coord.submit_job(job)
+    }
+
+    /// Fold one completed stage back in: fail loudly with context,
+    /// record the layer rollups (report + shared serving metrics),
+    /// apply the fused epilogue, and store the layer output for its
+    /// consumers.
+    fn absorb(
+        &self,
+        req: usize,
+        pos: usize,
+        result: JobResult,
+        states: &mut [ReqState],
+        report: &mut BatchReport,
+    ) -> Result<()> {
+        let g = self.model.graph();
+        let idx = g.topo_order()[pos];
+        if let Some(e) = &result.error {
+            return Err(Error::Runtime(format!("request {req} layer {idx}: {e}")));
+        }
+        let lr = &mut report.per_layer[idx];
+        lr.jobs += 1;
+        lr.cycles += result.stats.cycles;
+        lr.retries += u64::from(result.retries);
+        lr.busy_us += result.wall_us;
+        self.coord.serving_metrics().record_layer(
+            idx,
+            result.stats.cycles,
+            u64::from(result.retries),
+            result.wall_us,
+        );
+        let mut out = result.output;
+        g.apply_ops(idx, &mut out, &states[req].outs)?;
+        states[req].outs[idx] = Some(out);
+        Ok(())
+    }
+}

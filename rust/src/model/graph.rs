@@ -1,0 +1,670 @@
+//! Model graphs: a validated DAG of GEMM layers with fused elementwise
+//! epilogues, plus the scalar i64 reference semantics every execution
+//! path is checked against bit-for-bit.
+
+use crate::backend::BackendClass;
+use crate::compiler::{gemm_ref, GemmShape};
+use crate::{Error, Result};
+
+/// Identifier of one layer within a [`ModelGraph`] (its index in the
+/// graph's layer list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId(pub usize);
+
+impl std::fmt::Display for LayerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "layer {}", self.0)
+    }
+}
+
+/// Elementwise epilogue operations fused into a layer's gather step:
+/// they run host-side on the gathered GEMM output, before the result is
+/// forwarded to the next layer — never as separate array jobs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ElemOp {
+    /// Add a per-output-column bias vector (length `n`).
+    BiasAdd(Vec<i64>),
+    /// `max(0, x)` — the standard rectifier.
+    Relu,
+    /// `x >= 0 ? +1 : -1` — the paper's BNN-flavoured binarizing
+    /// activation; its outputs always fit any operand width.
+    Sign,
+    /// Arithmetic right shift by the given amount (requantization back
+    /// into the operand width after a dot product widened the values).
+    Shift(u32),
+    /// Add the (post-epilogue) output of an earlier layer elementwise —
+    /// a residual/skip connection. The referenced layer must produce
+    /// the same output width `n`.
+    Residual(LayerId),
+}
+
+/// One layer of a [`ModelGraph`]: a GEMM against pinned weights
+/// followed by an ordered list of fused [`ElemOp`]s.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Where this layer's activations come from: another layer's output
+    /// or (`None`) the graph input.
+    pub input: Option<LayerId>,
+    /// Weights, row-major `k×n`.
+    pub weights: Vec<i64>,
+    /// Input features (must match the producer's output width).
+    pub k: usize,
+    /// Output features.
+    pub n: usize,
+    /// Fused elementwise epilogue, applied in order.
+    pub ops: Vec<ElemOp>,
+    /// Optional per-layer backend-class pin: this layer's jobs dispatch
+    /// only to matching worker regions (a mixed pool can place heavy
+    /// layers on fast custom tiles and light ones on the overlay).
+    /// `None` inherits the compile-time default.
+    pub backend: Option<BackendClass>,
+}
+
+/// A validated multi-layer network over GEMM layers: shapes checked
+/// layer to layer, weight values checked against the operand width,
+/// references checked to form a DAG (cycles rejected). The graph's
+/// output is the output of the **last** layer in the list.
+///
+/// Build one with the [`GraphBuilder`] (references are
+/// created-before-use, so cycles cannot arise), or from explicit
+/// [`LayerSpec`]s via [`ModelGraph::new`] (arbitrary references,
+/// validated here).
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    input_dim: usize,
+    width: u16,
+    layers: Vec<LayerSpec>,
+    /// Evaluation order: every layer appears after its input and
+    /// residual producers.
+    topo: Vec<usize>,
+}
+
+/// Check that every value fits the signed two's-complement range of
+/// `width`-bit operands — the precision the array actually stages. A
+/// violating value would be silently truncated by the bit-plane corner
+/// turn and diverge from the scalar reference.
+pub(crate) fn check_operand_range(vals: &[i64], width: u16, what: &str) -> Result<()> {
+    let lo = -(1i64 << (width - 1));
+    let hi = (1i64 << (width - 1)) - 1;
+    if let Some(v) = vals.iter().find(|v| **v < lo || **v > hi) {
+        return Err(Error::Compile(format!(
+            "{what}: value {v} outside the signed {width}-bit operand range [{lo}, {hi}] — \
+             add a shift/sign requantization op upstream"
+        )));
+    }
+    Ok(())
+}
+
+impl ModelGraph {
+    /// Validate `layers` against `input_dim`/`width` and build the
+    /// graph. Errors on: empty layer lists, widths outside `1..=16`,
+    /// degenerate or inconsistent layer shapes, weights or biases
+    /// outside the signed `width`-bit operand range, out-of-range layer
+    /// references, residual width mismatches, and reference **cycles**.
+    pub fn new(input_dim: usize, width: u16, layers: Vec<LayerSpec>) -> Result<Self> {
+        if layers.is_empty() {
+            return Err(Error::Config("model graph needs at least one layer".into()));
+        }
+        if input_dim == 0 {
+            return Err(Error::Config("model input dimension must be >= 1".into()));
+        }
+        if width == 0 || width > 16 {
+            return Err(Error::Config(format!(
+                "operand width {width} outside 1..=16 (register budget)"
+            )));
+        }
+        let nl = layers.len();
+        let check_ref = |id: LayerId, what: &str| -> Result<()> {
+            if id.0 >= nl {
+                return Err(Error::Config(format!(
+                    "{what} references {id}, but the graph has {nl} layers"
+                )));
+            }
+            Ok(())
+        };
+        for (i, l) in layers.iter().enumerate() {
+            if l.k == 0 || l.n == 0 {
+                return Err(Error::Config(format!(
+                    "layer {i}: degenerate shape {}x{}",
+                    l.k, l.n
+                )));
+            }
+            if l.weights.len() != l.k * l.n {
+                return Err(Error::Config(format!(
+                    "layer {i}: {} weights do not fill the {}x{} matrix",
+                    l.weights.len(),
+                    l.k,
+                    l.n
+                )));
+            }
+            check_operand_range(&l.weights, width, &format!("layer {i} weights"))?;
+            if let Some(from) = l.input {
+                check_ref(from, &format!("layer {i} input"))?;
+            }
+            for op in &l.ops {
+                match op {
+                    ElemOp::BiasAdd(b) => {
+                        if b.len() != l.n {
+                            return Err(Error::Config(format!(
+                                "layer {i}: bias of {} values on {} outputs",
+                                b.len(),
+                                l.n
+                            )));
+                        }
+                    }
+                    ElemOp::Shift(s) => {
+                        if *s >= 63 {
+                            return Err(Error::Config(format!(
+                                "layer {i}: shift by {s} exceeds the i64 accumulator"
+                            )));
+                        }
+                    }
+                    ElemOp::Residual(from) => {
+                        check_ref(*from, &format!("layer {i} residual"))?;
+                        if layers[from.0].n != l.n {
+                            return Err(Error::Config(format!(
+                                "layer {i}: residual from {from} with {} outputs onto {} outputs",
+                                layers[from.0].n, l.n
+                            )));
+                        }
+                        if from.0 == i {
+                            return Err(Error::Config(format!(
+                                "layer {i}: residual from itself (cycle)"
+                            )));
+                        }
+                    }
+                    ElemOp::Relu | ElemOp::Sign => {}
+                }
+            }
+        }
+        let topo = Self::topo_sort(&layers)?;
+        // Shape inference along the dependency order: each layer's k
+        // must equal its producer's n (or the graph input dimension).
+        for &i in &topo {
+            let l = &layers[i];
+            let in_dim = match l.input {
+                None => input_dim,
+                Some(from) => layers[from.0].n,
+            };
+            if in_dim != l.k {
+                return Err(Error::Config(format!(
+                    "layer {i}: expects {} input features, but its producer supplies {in_dim}",
+                    l.k
+                )));
+            }
+        }
+        Ok(Self { input_dim, width, layers, topo })
+    }
+
+    /// Kahn's algorithm over the input + residual edges; leftovers mean
+    /// a cycle.
+    fn topo_sort(layers: &[LayerSpec]) -> Result<Vec<usize>> {
+        let nl = layers.len();
+        // deps[i] = layers that must complete before layer i.
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); nl];
+        for (i, l) in layers.iter().enumerate() {
+            if let Some(from) = l.input {
+                deps[i].push(from.0);
+            }
+            for op in &l.ops {
+                if let ElemOp::Residual(from) = op {
+                    deps[i].push(from.0);
+                }
+            }
+        }
+        let mut indegree: Vec<usize> = deps.iter().map(Vec::len).collect();
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); nl];
+        for (i, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                consumers[d].push(i);
+            }
+        }
+        // Seed with dependency-free layers, lowest index first, so the
+        // order is deterministic.
+        let mut ready: std::collections::VecDeque<usize> = (0..nl)
+            .filter(|i| indegree[*i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(nl);
+        while let Some(i) = ready.pop_front() {
+            order.push(i);
+            for &c in &consumers[i] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    ready.push_back(c);
+                }
+            }
+        }
+        if order.len() != nl {
+            let stuck: Vec<usize> =
+                (0..nl).filter(|i| indegree[*i] > 0).collect();
+            return Err(Error::Config(format!(
+                "model graph has a reference cycle through layers {stuck:?}"
+            )));
+        }
+        Ok(order)
+    }
+
+    /// The graph's input feature count.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// The graph's output feature count (the last layer's `n`).
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().expect("validated non-empty").n
+    }
+
+    /// Operand width (bits) every layer stages at.
+    pub fn width(&self) -> u16 {
+        self.width
+    }
+
+    /// The layers, indexed by [`LayerId`].
+    pub fn layers(&self) -> &[LayerSpec] {
+        &self.layers
+    }
+
+    /// The validated evaluation order (every layer after its producers).
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// The layer whose output is the graph's output (the last one).
+    pub fn output_layer(&self) -> LayerId {
+        LayerId(self.layers.len() - 1)
+    }
+
+    /// The GEMM shape layer `id` runs at for `m` activation rows per
+    /// request.
+    pub fn layer_shape(&self, id: LayerId, m: usize) -> GemmShape {
+        let l = &self.layers[id.0];
+        GemmShape { m, k: l.k, n: l.n }
+    }
+
+    /// Apply layer `idx`'s fused epilogue to its gathered GEMM output
+    /// (`out`, row-major `m×n`), reading residual producers from
+    /// `outs` (post-epilogue outputs indexed by layer). Shared by the
+    /// scalar reference and the serving executor so the elementwise
+    /// semantics can never diverge between them.
+    pub(crate) fn apply_ops(
+        &self,
+        idx: usize,
+        out: &mut [i64],
+        outs: &[Option<Vec<i64>>],
+    ) -> Result<()> {
+        let l = &self.layers[idx];
+        let n = l.n;
+        for op in &l.ops {
+            match op {
+                ElemOp::BiasAdd(b) => {
+                    for (e, v) in out.iter_mut().enumerate() {
+                        *v += b[e % n];
+                    }
+                }
+                ElemOp::Relu => {
+                    for v in out.iter_mut() {
+                        *v = (*v).max(0);
+                    }
+                }
+                ElemOp::Sign => {
+                    for v in out.iter_mut() {
+                        *v = if *v >= 0 { 1 } else { -1 };
+                    }
+                }
+                ElemOp::Shift(s) => {
+                    for v in out.iter_mut() {
+                        *v >>= *s;
+                    }
+                }
+                ElemOp::Residual(from) => {
+                    let prev = outs[from.0].as_deref().ok_or_else(|| {
+                        Error::Runtime(format!(
+                            "internal: residual producer {from} not evaluated before layer {idx}"
+                        ))
+                    })?;
+                    if prev.len() != out.len() {
+                        return Err(Error::Runtime(format!(
+                            "internal: residual {from} length {} vs {}",
+                            prev.len(),
+                            out.len()
+                        )));
+                    }
+                    for (v, r) in out.iter_mut().zip(prev) {
+                        *v += r;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The scalar i64 reference forward pass: exact GEMM
+    /// ([`gemm_ref`]) plus the fused epilogues, with the same
+    /// operand-range checks the serving executor applies (so both paths
+    /// accept and reject identical inputs). `a` is row-major
+    /// `m×input_dim`; the return value is the output layer's post-
+    /// epilogue output, row-major `m×output_dim`.
+    pub fn forward_ref(&self, a: &[i64], m: usize) -> Result<Vec<i64>> {
+        if m == 0 || a.len() != m * self.input_dim {
+            return Err(Error::Config(format!(
+                "input of {} values does not fill {m}x{} activations",
+                a.len(),
+                self.input_dim
+            )));
+        }
+        check_operand_range(a, self.width, "graph input")?;
+        let mut outs: Vec<Option<Vec<i64>>> = vec![None; self.layers.len()];
+        for &idx in &self.topo {
+            let l = &self.layers[idx];
+            let input: &[i64] = match l.input {
+                None => a,
+                Some(from) => outs[from.0].as_deref().expect("topo order"),
+            };
+            if l.input.is_some() {
+                check_operand_range(input, self.width, &format!("layer {idx} activations"))?;
+            }
+            let shape = GemmShape { m, k: l.k, n: l.n };
+            let mut out = gemm_ref(shape, input, &l.weights);
+            self.apply_ops(idx, &mut out, &outs)?;
+            outs[idx] = Some(out);
+        }
+        Ok(outs[self.output_layer().0].take().expect("output layer evaluated"))
+    }
+}
+
+/// Incremental [`ModelGraph`] construction: layers reference only
+/// already-added layers, so builder graphs are DAGs by construction
+/// (the final [`build`](Self::build) still runs full validation).
+///
+/// ```
+/// use picaso::model::{ElemOp, GraphBuilder};
+///
+/// // 4 -> 3 -> 2 MLP, BNN-style sign activation after the hidden layer.
+/// let mut b = GraphBuilder::new(4, 8);
+/// let h = b.dense(vec![1; 12], 3)?;
+/// b.bias(h, vec![0, 1, -1])?;
+/// b.sign(h)?;
+/// let o = b.dense(vec![2; 6], 2)?;
+/// let graph = b.build()?;
+/// assert_eq!(graph.layers().len(), 2);
+/// assert_eq!((graph.input_dim(), graph.output_dim()), (4, 2));
+/// assert_eq!(graph.output_layer(), o);
+/// assert!(graph.layers()[h.0].ops.contains(&ElemOp::Sign));
+/// # Ok::<(), picaso::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    input_dim: usize,
+    width: u16,
+    layers: Vec<LayerSpec>,
+}
+
+impl GraphBuilder {
+    /// Start a graph taking `input_dim` features at `width`-bit
+    /// operands.
+    pub fn new(input_dim: usize, width: u16) -> Self {
+        Self { input_dim, width, layers: Vec::new() }
+    }
+
+    /// The output feature count of `input` (or of the graph input).
+    fn source_dim(&self, input: Option<LayerId>) -> Result<usize> {
+        match input {
+            None => Ok(self.input_dim),
+            Some(id) => self
+                .layers
+                .get(id.0)
+                .map(|l| l.n)
+                .ok_or_else(|| Error::Config(format!("unknown producer {id}"))),
+        }
+    }
+
+    /// Append a dense (GEMM) layer fed by the most recently added layer
+    /// (or the graph input for the first layer). `k` is inferred from
+    /// the producer; `weights` must hold `k·n` values row-major.
+    pub fn dense(&mut self, weights: Vec<i64>, n: usize) -> Result<LayerId> {
+        let from = self.layers.len().checked_sub(1).map(LayerId);
+        self.dense_from(from, weights, n)
+    }
+
+    /// Append a dense layer fed by an explicit producer (`None` = the
+    /// graph input) — the branching half of the DAG API.
+    pub fn dense_from(
+        &mut self,
+        input: Option<LayerId>,
+        weights: Vec<i64>,
+        n: usize,
+    ) -> Result<LayerId> {
+        let k = self.source_dim(input)?;
+        if n == 0 || weights.len() != k * n {
+            return Err(Error::Config(format!(
+                "dense layer: {} weights do not fill the {k}x{n} matrix",
+                weights.len()
+            )));
+        }
+        let id = LayerId(self.layers.len());
+        self.layers.push(LayerSpec { input, weights, k, n, ops: Vec::new(), backend: None });
+        Ok(id)
+    }
+
+    /// Append an arbitrary epilogue op to `layer`.
+    pub fn op(&mut self, layer: LayerId, op: ElemOp) -> Result<()> {
+        let l = self
+            .layers
+            .get_mut(layer.0)
+            .ok_or_else(|| Error::Config(format!("unknown {layer}")))?;
+        l.ops.push(op);
+        Ok(())
+    }
+
+    /// Fuse a bias add (length `n`) into `layer`'s epilogue.
+    pub fn bias(&mut self, layer: LayerId, bias: Vec<i64>) -> Result<()> {
+        self.op(layer, ElemOp::BiasAdd(bias))
+    }
+
+    /// Fuse a ReLU into `layer`'s epilogue.
+    pub fn relu(&mut self, layer: LayerId) -> Result<()> {
+        self.op(layer, ElemOp::Relu)
+    }
+
+    /// Fuse the BNN sign activation into `layer`'s epilogue.
+    pub fn sign(&mut self, layer: LayerId) -> Result<()> {
+        self.op(layer, ElemOp::Sign)
+    }
+
+    /// Fuse an arithmetic right shift (requantization) into `layer`'s
+    /// epilogue.
+    pub fn shift(&mut self, layer: LayerId, amount: u32) -> Result<()> {
+        self.op(layer, ElemOp::Shift(amount))
+    }
+
+    /// Fuse a residual add of `from`'s output into `layer`'s epilogue.
+    pub fn residual(&mut self, layer: LayerId, from: LayerId) -> Result<()> {
+        self.op(layer, ElemOp::Residual(from))
+    }
+
+    /// Pin `layer` to a backend class (its jobs dispatch only to
+    /// matching worker regions).
+    pub fn on_backend(&mut self, layer: LayerId, backend: BackendClass) -> Result<()> {
+        let l = self
+            .layers
+            .get_mut(layer.0)
+            .ok_or_else(|| Error::Config(format!("unknown {layer}")))?;
+        l.backend = Some(backend);
+        Ok(())
+    }
+
+    /// Validate and produce the [`ModelGraph`].
+    pub fn build(self) -> Result<ModelGraph> {
+        ModelGraph::new(self.input_dim, self.width, self.layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ones(k: usize, n: usize) -> Vec<i64> {
+        vec![1; k * n]
+    }
+
+    #[test]
+    fn builder_infers_dims_and_validates() {
+        let mut b = GraphBuilder::new(4, 8);
+        let h = b.dense(ones(4, 3), 3).unwrap();
+        b.relu(h).unwrap();
+        let o = b.dense(ones(3, 2), 2).unwrap();
+        let g = b.build().unwrap();
+        assert_eq!(g.layers().len(), 2);
+        assert_eq!(g.layer_shape(h, 2), GemmShape { m: 2, k: 4, n: 3 });
+        assert_eq!(g.output_layer(), o);
+        assert_eq!(g.topo_order(), &[0, 1]);
+        // Wrong weight count for the inferred k is rejected immediately.
+        let mut b = GraphBuilder::new(4, 8);
+        assert!(b.dense(ones(3, 3), 3).is_err());
+    }
+
+    #[test]
+    fn reference_forward_matches_hand_computation() {
+        // 2 -> 2 identity + bias + relu, then identity + residual + shift.
+        let mut b = GraphBuilder::new(2, 8);
+        let l0 = b.dense(vec![1, 0, 0, 1], 2).unwrap();
+        b.bias(l0, vec![3, -5]).unwrap();
+        b.relu(l0).unwrap();
+        let l1 = b.dense(vec![1, 0, 0, 1], 2).unwrap();
+        b.residual(l1, l0).unwrap();
+        b.shift(l1, 1).unwrap();
+        let g = b.build().unwrap();
+        // a = [4, 2]: l0 = relu([4+3, 2-5]) = [7, 0];
+        // l1 = ([7, 0] + [7, 0]) >> 1 = [7, 0].
+        assert_eq!(g.forward_ref(&[4, 2], 1).unwrap(), vec![7, 0]);
+    }
+
+    #[test]
+    fn sign_is_the_bnn_binarizer() {
+        let mut b = GraphBuilder::new(3, 8);
+        let l = b.dense(vec![1, 0, 0, 0, 1, 0, 0, 0, 1], 3).unwrap();
+        b.sign(l).unwrap();
+        let g = b.build().unwrap();
+        assert_eq!(g.forward_ref(&[-3, 0, 5], 1).unwrap(), vec![-1, 1, 1]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_graphs() {
+        // Empty.
+        assert!(ModelGraph::new(4, 8, vec![]).is_err());
+        // Bad widths.
+        let layer = LayerSpec {
+            input: None,
+            weights: ones(4, 2),
+            k: 4,
+            n: 2,
+            ops: vec![],
+            backend: None,
+        };
+        assert!(ModelGraph::new(4, 0, vec![layer.clone()]).is_err());
+        assert!(ModelGraph::new(4, 17, vec![layer.clone()]).is_err());
+        assert!(ModelGraph::new(0, 8, vec![layer.clone()]).is_err());
+        // Shape-inference mismatch: layer expects 4 inputs, graph has 3.
+        assert!(ModelGraph::new(3, 8, vec![layer.clone()]).is_err());
+        // Weights outside the operand width.
+        let mut wide = layer.clone();
+        wide.weights[0] = 100;
+        assert!(ModelGraph::new(4, 4, vec![wide]).is_err());
+        // Bias length mismatch.
+        let mut bad_bias = layer.clone();
+        bad_bias.ops = vec![ElemOp::BiasAdd(vec![1; 3])];
+        assert!(ModelGraph::new(4, 8, vec![bad_bias]).is_err());
+        // Residual width mismatch (2 outputs vs 4 outputs).
+        let l0 = LayerSpec {
+            input: None,
+            weights: ones(4, 4),
+            k: 4,
+            n: 4,
+            ops: vec![],
+            backend: None,
+        };
+        let mut l1 = layer.clone();
+        l1.input = Some(LayerId(0));
+        l1.k = 4;
+        l1.ops = vec![ElemOp::Residual(LayerId(0))];
+        assert!(ModelGraph::new(4, 8, vec![l0, l1]).is_err());
+        // Out-of-range references.
+        let mut dangling = layer.clone();
+        dangling.input = Some(LayerId(7));
+        assert!(ModelGraph::new(4, 8, vec![dangling]).is_err());
+    }
+
+    #[test]
+    fn cycles_are_rejected() {
+        // layer 0 <- layer 1 <- layer 0: a 2-cycle through inputs.
+        let l0 = LayerSpec {
+            input: Some(LayerId(1)),
+            weights: ones(2, 2),
+            k: 2,
+            n: 2,
+            ops: vec![],
+            backend: None,
+        };
+        let l1 = LayerSpec {
+            input: Some(LayerId(0)),
+            weights: ones(2, 2),
+            k: 2,
+            n: 2,
+            ops: vec![],
+            backend: None,
+        };
+        let err = ModelGraph::new(2, 8, vec![l0.clone(), l1]).unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+        // Self-residual is a cycle too.
+        let mut selfy = l0;
+        selfy.input = None;
+        selfy.ops = vec![ElemOp::Residual(LayerId(0))];
+        let err = ModelGraph::new(2, 8, vec![selfy]).unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn forward_refs_are_legal_when_acyclic() {
+        // Declaration order is not evaluation order: layer 0 consumes
+        // layer 1, which consumes the graph input — legal, topo-sorted.
+        let l0 = LayerSpec {
+            input: Some(LayerId(1)),
+            weights: ones(3, 2),
+            k: 3,
+            n: 2,
+            ops: vec![],
+            backend: None,
+        };
+        let l1 = LayerSpec {
+            input: None,
+            weights: ones(2, 3),
+            k: 2,
+            n: 3,
+            ops: vec![],
+            backend: None,
+        };
+        let g = ModelGraph::new(2, 8, vec![l0, l1]).unwrap();
+        assert_eq!(g.topo_order(), &[1, 0]);
+        // Output layer is the *last declared* layer (= layer 1 here).
+        assert_eq!(g.output_layer(), LayerId(1));
+        assert_eq!(g.output_dim(), 3);
+        // a = [1, 1]: l1 = [2, 2, 2]; output is l1.
+        assert_eq!(g.forward_ref(&[1, 1], 1).unwrap(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn reference_rejects_out_of_range_activations() {
+        // 2 -> 1 -> 1 without requantization: the first layer's output
+        // (up to 2·127·127) cannot be staged as an 8-bit operand.
+        let mut b = GraphBuilder::new(2, 8);
+        b.dense(vec![127, 127], 1).unwrap();
+        b.dense(vec![1], 1).unwrap();
+        let g = b.build().unwrap();
+        let err = g.forward_ref(&[127, 127], 1).unwrap_err();
+        assert!(err.to_string().contains("requant"), "{err}");
+        // Out-of-range *inputs* are rejected at the door.
+        assert!(g.forward_ref(&[1000, 0], 1).is_err());
+        // Wrong input size too.
+        assert!(g.forward_ref(&[1], 1).is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! The model-graph executor: multi-layer pipelined inference on the
+//! serving stack.
+//!
+//! The paper motivates PIM overlays with ML inference — MLPs, BNNs and
+//! friends with low operational intensity — yet a single GEMM job is
+//! not a model. This subsystem closes that gap with a layer *above* the
+//! coordinator's single-GEMM serving API:
+//!
+//! * [`ModelGraph`] / [`GraphBuilder`] — a validated DAG of GEMM layers
+//!   with **fused elementwise epilogues** ([`ElemOp`]): bias add, ReLU,
+//!   the paper's BNN-flavoured `sign` binarizer, requantizing shifts,
+//!   and residual (skip) connections. Validation covers shape inference
+//!   layer to layer, operand-width/quantization checks, and cycle
+//!   rejection.
+//! * [`CompiledModel`] — the lowering pass: every layer becomes a
+//!   pinned per-layer session
+//!   ([`open_session_on`](crate::coordinator::Coordinator::open_session_on)),
+//!   reusing [`ShardPolicy`](crate::coordinator::ShardPolicy) so wide
+//!   layers scatter across worker regions; epilogues are fused into the
+//!   gather step (host-side, zero extra array jobs). Compile also
+//!   dry-runs each layer once for a deterministic per-request cycle
+//!   count, feeding the [`PipelineEstimate`] makespan model.
+//! * [`GraphExecutor`] — batch execution through the layer pipeline:
+//!   under [`ExecMode::Pipelined`], layer `L` of request `i` overlaps
+//!   layer `L-1` of request `i+1`, so throughput is bounded by the
+//!   slowest layer's regions instead of the sum of all layers;
+//!   [`ExecMode::LayerBarrier`] is the sequential baseline the tests
+//!   assert the cycle-makespan win against. Per-layer rollups (cycles,
+//!   retries, occupancy) stream into
+//!   [`ServingMetrics`](crate::metrics::ServingMetrics).
+//!
+//! Every path is bit-exact against the scalar i64 reference
+//! ([`ModelGraph::forward_ref`]) on every backend class — the
+//! `infer` CLI subcommand and `examples/infer.rs` drive it end to end.
+//!
+//! ```
+//! use picaso::coordinator::{Coordinator, CoordinatorConfig};
+//! use picaso::model::{CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor};
+//! use picaso::prelude::ArrayGeometry;
+//!
+//! // 4 -> 3 -> 2 BNN-ish MLP.
+//! let mut b = GraphBuilder::new(4, 8);
+//! let h = b.dense((0..12i64).map(|v| v % 3 - 1).collect(), 3)?;
+//! b.sign(h)?;
+//! b.dense((0..6i64).map(|v| v % 5 - 2).collect(), 2)?;
+//! let graph = b.build()?;
+//!
+//! let coord = Coordinator::new(CoordinatorConfig {
+//!     workers: 2,
+//!     geom: ArrayGeometry::new(2, 1),
+//!     ..Default::default()
+//! })?;
+//! let input: Vec<i64> = vec![3, -1, 2, 0];
+//! let expect = graph.forward_ref(&input, 1)?;
+//! let model = CompiledModel::compile(&coord, graph, CompileOptions::default())?;
+//! let exec = GraphExecutor::new(&coord, &model);
+//! let report = exec.infer_batch(&[input], ExecMode::Pipelined)?;
+//! assert_eq!(report.outputs[0], expect);
+//! coord.shutdown();
+//! # Ok::<(), picaso::Error>(())
+//! ```
+
+mod exec;
+mod graph;
+
+pub use exec::{
+    BatchReport, CompileOptions, CompiledLayer, CompiledModel, ExecMode, GraphExecutor,
+    LayerReport, PipelineEstimate,
+};
+pub use graph::{ElemOp, GraphBuilder, LayerId, LayerSpec, ModelGraph};

@@ -268,6 +268,60 @@ fn reject_at_capacity_never_admits_a_partial_scatter() {
     coord.shutdown();
 }
 
+// ---------------------------------------------------- region quarantine
+
+/// A dead region leaves the pop rotation after its consecutive-fault
+/// threshold: traffic keeps verifying bit-exact on the healthy regions,
+/// and the quarantine events are counted and rendered. (ROADMAP PR-4
+/// follow-up: quarantining + retry backoff.)
+#[test]
+fn dead_region_is_quarantined_while_traffic_stays_bit_exact() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy::disabled(),
+        scheduler: SchedulerConfig {
+            quarantine: picaso::coordinator::QuarantinePolicy {
+                threshold: 2,
+                cooldown: Duration::from_millis(20),
+            },
+            ..Default::default()
+        },
+        backend_hook: Some(BackendHook(Arc::new(|widx, inner| {
+            if widx == 0 {
+                Box::new(FaultInjector::new(inner, FaultPlan::Poisoned))
+            } else {
+                inner
+            }
+        }))),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 1, k: 16, n: 2 };
+    // Burst-submit so the backlog keeps the poisoned region popping
+    // until its fault streak trips the threshold.
+    let mut handles = Vec::new();
+    let mut expects = Vec::new();
+    for i in 0..24u64 {
+        let (job, expect) = gemm_job(i, shape, 0x0DD + i);
+        handles.push(coord.submit_job(job).unwrap());
+        expects.push(expect);
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait();
+        assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+        assert_eq!(r.output, expects[i], "job {i} bit-exact through the degraded pool");
+    }
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.errors, 0, "every fault absorbed");
+    assert!(
+        snap.quarantines >= 1,
+        "a permanently dead region must be quarantined: {snap:?}"
+    );
+    assert!(snap.render().contains("quarantines="), "{}", snap.render());
+    coord.shutdown();
+}
+
 // --------------------------------------------------- deadline shedding
 
 /// A job whose deadline expired while queued is dropped at pop time
