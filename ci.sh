@@ -15,6 +15,11 @@ cargo build --release
 step "tier-1: cargo test -q"
 cargo test -q
 
+# The 2-D tiling acceptance suite, run by name so a tiling regression is
+# unmissable in the log even when the full suite is noisy.
+step "tier-1: cargo test --test tiling -q"
+cargo test --test tiling -q
+
 if [ "${1:-}" = "fast" ]; then
     echo "fast mode: skipping doc/fmt/bench-compile gates"
     exit 0
@@ -28,22 +33,72 @@ cargo build --release --examples
 step "doctests: cargo test --doc -q"
 cargo test --doc -q
 
-# Perf trajectory per PR: run the serving example headless and persist
-# its headline numbers (p50/p95 queue + end-to-end latency, throughput,
-# retry/shed counts) so regressions show up in review as a JSON diff.
-step "bench smoke: examples/serve headless -> BENCH_serve.json"
-SERVE_BENCH_JSON=BENCH_serve.json cargo run --release --example serve -- 48 2 picaso >/dev/null
-test -s BENCH_serve.json || { echo "BENCH_serve.json missing or empty"; exit 1; }
-echo "BENCH_serve.json:"
-cat BENCH_serve.json
+# ---------------------------------------------------------------------
+# Bench smokes + baseline regression gate.
+#
+# Each smoke writes a fresh JSON next to the committed baseline
+# (BENCH_*.json). Cycle-domain keys — simulated work, machine- and
+# load-independent — are compared against the baseline within
+# BENCH_TOL_PCT percent (default 10); wall-clock keys (throughput,
+# latency percentiles) are recorded for the review diff but not gated,
+# since they track the host, not the code. A missing baseline is seeded
+# from the fresh run: commit it so later runs have something to gate on.
+BENCH_TOL_PCT="${BENCH_TOL_PCT:-10}"
 
-# Model-graph executor trajectory: pipelined multi-layer inference with
-# per-layer + end-to-end latency and the cycle-makespan speedup.
-step "bench smoke: examples/infer headless -> BENCH_infer.json"
-INFER_BENCH_JSON=BENCH_infer.json cargo run --release --example infer -- 24 2 picaso >/dev/null
-test -s BENCH_infer.json || { echo "BENCH_infer.json missing or empty"; exit 1; }
-echo "BENCH_infer.json:"
-cat BENCH_infer.json
+bench_key() { # file key -> numeric value (first match)
+    sed -n "s/.*\"$2\": *\(-\{0,1\}[0-9][0-9.]*\).*/\1/p" "$1" | head -n 1
+}
+
+bench_gate() { # name baseline fresh key...
+    local name="$1" base="$2" fresh="$3" fail=0 key b f
+    shift 3
+    if [ ! -s "$base" ]; then
+        cp "$fresh" "$base"
+        echo "$name: no committed baseline — seeded $base from this run (commit it)"
+        return 0
+    fi
+    for key in "$@"; do
+        b="$(bench_key "$base" "$key")"
+        f="$(bench_key "$fresh" "$key")"
+        if [ -z "$b" ] || [ -z "$f" ]; then
+            echo "$name: key '$key' missing (baseline='$b' fresh='$f')"
+            fail=1
+            continue
+        fi
+        if ! awk -v b="$b" -v f="$f" -v t="$BENCH_TOL_PCT" 'BEGIN {
+            d = (b == 0) ? (f == 0 ? 0 : 1e9) : (f - b) / b * 100;
+            if (d < 0) d = -d;
+            exit (d > t) ? 1 : 0;
+        }'; then
+            echo "$name: '$key' drifted beyond ${BENCH_TOL_PCT}%: baseline $b, fresh $f"
+            fail=1
+        else
+            echo "$name: '$key' within tolerance (baseline $b, fresh $f)"
+        fi
+    done
+    return "$fail"
+}
+
+step "bench smoke: examples/serve headless -> BENCH_serve.fresh.json"
+SERVE_BENCH_JSON=BENCH_serve.fresh.json \
+    cargo run --release --example serve -- 48 2 picaso >/dev/null
+test -s BENCH_serve.fresh.json || { echo "BENCH_serve.fresh.json missing or empty"; exit 1; }
+cat BENCH_serve.fresh.json
+
+step "bench gate: BENCH_serve.json (cycle-domain keys, ±${BENCH_TOL_PCT}%)"
+bench_gate "serve" BENCH_serve.json BENCH_serve.fresh.json pim_cycles_per_job \
+    || { echo "serve bench gate failed (rerun and commit BENCH_serve.json if intended)"; exit 1; }
+
+step "bench smoke: examples/infer headless -> BENCH_infer.fresh.json"
+INFER_BENCH_JSON=BENCH_infer.fresh.json \
+    cargo run --release --example infer -- 24 2 picaso >/dev/null
+test -s BENCH_infer.fresh.json || { echo "BENCH_infer.fresh.json missing or empty"; exit 1; }
+cat BENCH_infer.fresh.json
+
+step "bench gate: BENCH_infer.json (cycle-domain keys, ±${BENCH_TOL_PCT}%)"
+bench_gate "infer" BENCH_infer.json BENCH_infer.fresh.json \
+    sequential_makespan_cycles pipelined_makespan_cycles makespan_speedup \
+    || { echo "infer bench gate failed (rerun and commit BENCH_infer.json if intended)"; exit 1; }
 
 step "compile benches + examples"
 cargo build --release --benches --examples

@@ -23,7 +23,7 @@ use crate::backend::{make_backend, BackendClass};
 use crate::compiler::{gemm_ref, GemmShape};
 use crate::coordinator::{
     BackoffPolicy, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind,
-    QuarantinePolicy, QueuePolicy, RegionSpec, RetryPolicy, SchedulerConfig, ShardPolicy,
+    QuarantinePolicy, QueuePolicy, RegionSpec, RetryPolicy, SchedulerConfig, TilePolicy,
 };
 use crate::device::Device;
 use crate::model::{CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor, ModelGraph};
@@ -106,6 +106,10 @@ system:
                                          across regions (auto = one per
                                          compatible region; sessions
                                          shard via sliced staging tables)
+         [--tiles=<k>x<n>|auto]          2-D scatter grid: k tiles along
+                                         the reduction dim × n column
+                                         tiles (partial sums add-reduce
+                                         at gather; wins over --shards)
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--adaptive]                    scale flush size/wait from the
                                          live queue-depth signal instead
@@ -135,6 +139,8 @@ system:
          [--mode=pipelined|barrier]      overlapped layers vs a barrier
                                          between layers (the baseline)
          [--shards=1|<k>|auto]           scatter each layer across regions
+         [--tiles=<k>x<n>|auto]          2-D scatter grid per layer
+                                         (wins over --shards)
          [--workers=4 --rows=8 --cols=4 --width=8]
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--window=0]                    max requests in flight (0 = all)
@@ -211,14 +217,29 @@ fn parse_device(args: &Args) -> Result<&'static Device> {
 }
 
 /// Parse `--shards`: a fixed fan-out, `auto` (one shard per compatible
-/// region), or 1/absent for unsharded execution.
-fn parse_shards(args: &Args) -> Result<ShardPolicy> {
+/// region), or 1/absent for unsharded execution. `--tiles=<k>x<n>`
+/// (2-D grid, e.g. `--tiles=2x4`) or `--tiles=auto` wins over
+/// `--shards` when both are given.
+fn parse_shards(args: &Args) -> Result<TilePolicy> {
+    let tiles: String = args.get("tiles", String::new())?;
+    match tiles.as_str() {
+        "" => {}
+        "auto" => return Ok(TilePolicy::Auto),
+        s => match s.split_once('x').map(|(k, n)| (k.parse::<usize>(), n.parse::<usize>())) {
+            Some((Ok(k), Ok(n))) if k >= 1 && n >= 1 => return Ok(TilePolicy::grid(k, n)),
+            _ => {
+                return Err(Error::Config(format!(
+                    "bad value for --tiles: '{s}' (want <k>x<n> or auto)"
+                )))
+            }
+        },
+    }
     let raw: String = args.get("shards", "1".into())?;
     match raw.as_str() {
-        "auto" => Ok(ShardPolicy::Auto),
+        "auto" => Ok(TilePolicy::Auto),
         s => match s.parse::<usize>() {
-            Ok(k) if k <= 1 => Ok(ShardPolicy::None),
-            Ok(k) => Ok(ShardPolicy::Fixed(k)),
+            Ok(k) if k <= 1 => Ok(TilePolicy::None),
+            Ok(k) => Ok(TilePolicy::Fixed(k)),
             Err(_) => Err(Error::Config(format!("bad value for --shards: '{s}'"))),
         },
     }
@@ -491,9 +512,12 @@ fn cmd_serve(args: &Args) -> Result<String> {
 
     let weights_mode = if use_session { "session weights" } else { "per-job weights" };
     let mode = match shard_policy {
-        ShardPolicy::Auto => format!("sharded auto, {weights_mode}"),
-        ShardPolicy::Fixed(k) => format!("sharded x{k}, {weights_mode}"),
-        ShardPolicy::None => weights_mode.to_string(),
+        TilePolicy::Auto => format!("sharded auto, {weights_mode}"),
+        TilePolicy::Fixed(k) => format!("sharded x{k}, {weights_mode}"),
+        TilePolicy::Grid { k_tiles, n_tiles } => {
+            format!("tiled {k_tiles}x{n_tiles}, {weights_mode}")
+        }
+        TilePolicy::None => weights_mode.to_string(),
     };
     Ok(format!(
         "served {served} gemm jobs on {nworkers} {backend_name} workers \
@@ -867,6 +891,34 @@ mod tests {
     }
 
     #[test]
+    fn serve_command_tiled() {
+        // --tiles=<k>x<n> scatters a 2-D grid; partial sums add-reduce
+        // at gather and the served outputs still verify bit-exact.
+        let out =
+            run_line("serve --jobs=6 --workers=2 --rows=2 --cols=1 --tiles=2x2").unwrap();
+        assert!(out.contains("served 6"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("tiled 2x2, session weights"), "{out}");
+        assert!(out.contains("tiling"), "{out}");
+        // --tiles wins over --shards; a 1xN grid renders as sharding.
+        let out = run_line(
+            "serve --jobs=4 --workers=2 --rows=2 --cols=1 --shards=auto --tiles=1x2",
+        )
+        .unwrap();
+        assert!(out.contains("sharded x2"), "{out}");
+        // Per-job weights take the ad-hoc (operand-slicing) tile path.
+        let out = run_line(
+            "serve --jobs=4 --workers=2 --rows=2 --cols=1 --tiles=3x2 --no-session",
+        )
+        .unwrap();
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("tiled 3x2, per-job weights"), "{out}");
+        assert!(run_line("serve --tiles=bogus").is_err());
+        assert!(run_line("serve --tiles=2xbogus").is_err());
+        assert!(run_line("serve --tiles=0x2").is_err());
+    }
+
+    #[test]
     fn serve_command_mixed_backends() {
         let out = run_line(
             "serve --jobs=8 --workers=2 --rows=2 --cols=1 --backend=mixed \
@@ -935,5 +987,17 @@ mod tests {
         assert!(run_line("infer --model=mlp:8x0x4 --rows=2 --cols=1").is_err());
         assert!(run_line("infer --model=mlp:8x6x4 --act=bogus --rows=2 --cols=1").is_err());
         assert!(run_line("infer --model=mlp:8x6x4 --mode=bogus --rows=2 --cols=1").is_err());
+    }
+
+    #[test]
+    fn infer_command_tiled_layers_verify() {
+        // A 2-D tile grid per layer still verifies the whole model
+        // bit-exact against the scalar reference.
+        let out = run_line(
+            "infer --model=mlp:8x6x4 --requests=3 --workers=2 --rows=2 --cols=1 --tiles=2x2",
+        )
+        .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        assert!(run_line("infer --model=mlp:8x6x4 --rows=2 --cols=1 --tiles=x2").is_err());
     }
 }

@@ -447,6 +447,247 @@ pub fn gemm_ref(shape: GemmShape, a: &[i64], b: &[i64]) -> Vec<i64> {
     c
 }
 
+// ------------------------------------------------------------------
+// 2-D tiling helpers: partition one logical GEMM along *both* the
+// reduction dimension `k` and the output dimension `n`, so a weight
+// table larger than any single region's staging capacity still maps —
+// the paper's multi-block scaling story (§V) applied to one job. A
+// `(ki, ni)` tile computes a *partial* `m×nn` product over its k-range;
+// same-`ni` tiles add-reduce element-wise on the host (exact i64, with
+// an accumulator-range check) before the usual column concat.
+// ------------------------------------------------------------------
+
+/// Logical (uncapped) accumulator width of a `width`-bit dot product of
+/// length `k`: `2·width + ceil(log2 k)` — the bit budget an exact
+/// partial-sum gather must respect. The *physical* plan caps
+/// [`GemmPlan::acc_width`] at 48 bits; k-tiling keeps every tile's
+/// dot product inside that cap and reduces across tiles on the host.
+pub fn acc_bits(width: u16, k: usize) -> u32 {
+    2 * u32::from(width) + ceil_log2(k.max(2))
+}
+
+/// Split an axis of length `len` into at most `parts` contiguous
+/// `(start, len)` ranges, balanced like [`split_shape_n`]: the first
+/// `len % parts` ranges carry one extra element, no range is empty, and
+/// `parts` is clamped to `1..=len`.
+pub fn split_axis(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, len.max(1));
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0;
+    for idx in 0..parts {
+        let span = base + usize::from(idx < extra);
+        out.push((at, span));
+        at += span;
+    }
+    out
+}
+
+/// Partition a GEMM into a `k_tiles × n_tiles` grid of sub-problems,
+/// returned row-major over `(ki, ni)` as `(k0, col0, tile_shape)`
+/// triples. Both tile counts are clamped ([`split_axis`]), so the
+/// returned grid may be smaller than requested; its actual dimensions
+/// are `split_axis(k, k_tiles).len() × split_axis(n, n_tiles).len()`.
+///
+/// Tile `(ki, ni)` computes the partial product
+/// `A[.., k0..k0+kk] · B[k0..k0+kk, col0..col0+nn]`; tiles sharing `ni`
+/// sum element-wise ([`add_reduce_partials`]) and the reduced columns
+/// reassemble with [`merge_shard_outputs`]. `k_tiles = 1` degenerates to
+/// [`split_shape_n`].
+pub fn split_shape_kn(
+    shape: GemmShape,
+    k_tiles: usize,
+    n_tiles: usize,
+) -> Vec<(usize, usize, GemmShape)> {
+    let GemmShape { m, k, n } = shape;
+    let krs = split_axis(k, k_tiles);
+    let nrs = split_axis(n, n_tiles);
+    let mut out = Vec::with_capacity(krs.len() * nrs.len());
+    for &(k0, kk) in &krs {
+        for &(col0, nn) in &nrs {
+            out.push((k0, col0, GemmShape { m, k: kk, n: nn }));
+        }
+    }
+    out
+}
+
+/// Extract the k-range columns `[k0, k0 + kk)` of `A` (row-major `m×k`
+/// for `shape`) into a fresh row-major `m×kk` matrix — the activation
+/// operand of one k-tile. One `memcpy` per row.
+pub fn slice_a_cols(shape: GemmShape, a: &[i64], k0: usize, kk: usize) -> Vec<i64> {
+    let GemmShape { m, k, .. } = shape;
+    debug_assert!(k0 + kk <= k, "k-range slice out of range");
+    let mut out = Vec::with_capacity(m * kk);
+    for row in 0..m {
+        out.extend_from_slice(&a[row * k + k0..row * k + k0 + kk]);
+    }
+    out
+}
+
+/// Extract the row range `[k0, k0 + kk)` of `B` (row-major `k×n` for
+/// `shape`) — a k-tile that keeps every output column. Because `B` is
+/// row-major, the rows are contiguous: this is a single `memcpy`, the
+/// cheap direction of the 2-D split.
+pub fn slice_b_rows(shape: GemmShape, b: &[i64], k0: usize, kk: usize) -> Vec<i64> {
+    let GemmShape { k, n, .. } = shape;
+    debug_assert!(k0 + kk <= k, "row slice out of range");
+    b[k0 * n..(k0 + kk) * n].to_vec()
+}
+
+/// Extract the `(ki, ni)` tile of `B`: rows `[k0, k0 + kk)` and columns
+/// `[col0, col0 + cols)`, as a fresh row-major `kk×cols` matrix — the
+/// weight operand of one 2-D tile ([`split_shape_kn`]). Composes
+/// [`slice_b_rows`] (contiguous row range) with the per-row column copy
+/// of [`slice_b_cols`].
+pub fn slice_b_block(
+    shape: GemmShape,
+    b: &[i64],
+    k0: usize,
+    kk: usize,
+    col0: usize,
+    cols: usize,
+) -> Vec<i64> {
+    let GemmShape { k, n, .. } = shape;
+    debug_assert!(k0 + kk <= k, "row slice out of range");
+    debug_assert!(col0 + cols <= n, "column slice out of range");
+    let mut out = Vec::with_capacity(kk * cols);
+    for row in k0..k0 + kk {
+        out.extend_from_slice(&b[row * n + col0..row * n + col0 + cols]);
+    }
+    out
+}
+
+/// 2-D staging-table slicer for tiled sessions: from a full per-output
+/// staging table (`m·n` lane vectors for `shape`, lane position `kk`
+/// holding `B[kk][j]`, built by
+/// [`ModelSession::prepare`](crate::coordinator::ModelSession::prepare)),
+/// extract the sub-table for the tile covering k-range `[k0, k0 + kk)`
+/// and output columns `[col0, col0 + cols)` on a `q`-lane row. Each
+/// sub-entry is one `copy_from_slice` of the parent's `[k0, k0 + kk)`
+/// lane span into a zero-padded vector of `ceil(kk/q)·q` lanes — tiled
+/// session staging stays `memcpy`-only, exactly like
+/// [`slice_staging_table`] (which is the `k0 = 0, kk = k` special case).
+pub fn slice_staging_table_kn(
+    shape: GemmShape,
+    table: &[Vec<i64>],
+    q: usize,
+    k0: usize,
+    kk: usize,
+    col0: usize,
+    cols: usize,
+) -> Vec<Vec<i64>> {
+    let GemmShape { m, k, n } = shape;
+    debug_assert_eq!(table.len(), m * n, "staging table covers every output element");
+    debug_assert!(k0 + kk <= k, "k-range slice out of range");
+    debug_assert!(col0 + cols <= n, "column slice out of range");
+    let padded = kk.div_ceil(q.max(1)) * q.max(1);
+    let mut out = Vec::with_capacity(m * cols);
+    for i in 0..m {
+        for j in 0..cols {
+            let parent = &table[i * n + col0 + j];
+            let mut lanes = vec![0i64; padded];
+            lanes[..kk].copy_from_slice(&parent[k0..k0 + kk]);
+            out.push(lanes);
+        }
+    }
+    out
+}
+
+/// The value range of a signed accumulator of `acc_bits` logical bits,
+/// clamped to what `i64` can represent (the host gather arithmetic).
+fn acc_range(acc_bits: u32) -> (i64, i64) {
+    if acc_bits >= 64 {
+        (i64::MIN, i64::MAX)
+    } else {
+        let half = 1i64 << (acc_bits.max(1) - 1);
+        (-half, half - 1)
+    }
+}
+
+/// Element-wise add-reduce of k-tile partial outputs (the gather half
+/// of the k-split): sums the same-`ni` partial matrices exactly in
+/// `i64`, then checks every reduced element against the **logical**
+/// accumulator range of the parent dot product (`acc_bits`, from
+/// [`acc_bits`]). Overflow — `i64` wraparound during the sum, or a
+/// reduced value outside the declared accumulator range (operands wider
+/// than the declared width) — is an error, never a silently wrapped
+/// result; [`gemm_ref_checked`] applies the identical check to the
+/// scalar reference so the two reject the same inputs.
+pub fn add_reduce_partials(parts: &[Vec<i64>], acc_bits: u32) -> Result<Vec<i64>> {
+    let first = parts
+        .first()
+        .ok_or_else(|| Error::Compile("add-reduce of zero partial outputs".into()))?;
+    let mut sum = first.clone();
+    for (ki, part) in parts.iter().enumerate().skip(1) {
+        if part.len() != sum.len() {
+            return Err(Error::Compile(format!(
+                "partial output {ki} has {} elements, expected {}",
+                part.len(),
+                sum.len()
+            )));
+        }
+        for (acc, v) in sum.iter_mut().zip(part) {
+            *acc = acc.checked_add(*v).ok_or_else(|| {
+                Error::Compile("partial-sum overflow: i64 wraparound in add-reduce".into())
+            })?;
+        }
+    }
+    let (lo, hi) = acc_range(acc_bits);
+    if let Some(v) = sum.iter().find(|v| **v < lo || **v > hi) {
+        return Err(Error::Compile(format!(
+            "partial-sum overflow: reduced value {v} outside the {acc_bits}-bit accumulator \
+             range [{lo}, {hi}] — operands exceed the declared width"
+        )));
+    }
+    Ok(sum)
+}
+
+/// Checked scalar reference GEMM: like [`gemm_ref`], but every dot
+/// product accumulates with overflow checks and the result is validated
+/// against the logical accumulator range for `(width, k)` — the exact
+/// mirror of the range check [`add_reduce_partials`] applies to a tiled
+/// gather, so the tiled pipeline and the reference reject the same
+/// out-of-range inputs instead of disagreeing on wrapped values.
+pub fn gemm_ref_checked(
+    shape: GemmShape,
+    width: u16,
+    a: &[i64],
+    b: &[i64],
+) -> Result<Vec<i64>> {
+    let GemmShape { m, k, n } = shape;
+    if a.len() != m * k || b.len() != k * n {
+        return Err(Error::Compile(format!(
+            "operand sizes {}/{} do not match shape {m}x{k}x{n}",
+            a.len(),
+            b.len()
+        )));
+    }
+    let (lo, hi) = acc_range(acc_bits(width, k));
+    let mut c = vec![0i64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for kk in 0..k {
+                let prod = a[i * k + kk].checked_mul(b[kk * n + j]).ok_or_else(|| {
+                    Error::Compile("dot-product overflow: i64 wraparound in multiply".into())
+                })?;
+                acc = acc.checked_add(prod).ok_or_else(|| {
+                    Error::Compile("dot-product overflow: i64 wraparound in accumulate".into())
+                })?;
+            }
+            if acc < lo || acc > hi {
+                return Err(Error::Compile(format!(
+                    "dot-product overflow: value {acc} outside the accumulator range \
+                     [{lo}, {hi}] for width {width}, k {k}"
+                )));
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    Ok(c)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -756,6 +997,150 @@ mod tests {
         assert_eq!(sub[1][0], 2);
         assert_eq!(sub[2][0], 11);
         assert_eq!(sub[3][0], 12);
+    }
+
+    #[test]
+    fn split_axis_is_balanced_and_clamped() {
+        // Ragged: 7 over 3 => spans 3, 2, 2 and contiguous coverage.
+        assert_eq!(split_axis(7, 3), vec![(0, 3), (3, 2), (5, 2)]);
+        // Clamped high and low.
+        assert_eq!(split_axis(4, 100).len(), 4);
+        assert_eq!(split_axis(5, 0), vec![(0, 5)]);
+        assert_eq!(split_axis(5, 1), vec![(0, 5)]);
+        // The grid helper composes two axis splits, row-major over (ki, ni).
+        let shape = GemmShape { m: 2, k: 5, n: 3 };
+        let grid = split_shape_kn(shape, 2, 2);
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0], (0, 0, GemmShape { m: 2, k: 3, n: 2 }));
+        assert_eq!(grid[1], (0, 2, GemmShape { m: 2, k: 3, n: 1 }));
+        assert_eq!(grid[2], (3, 0, GemmShape { m: 2, k: 2, n: 2 }));
+        assert_eq!(grid[3], (3, 2, GemmShape { m: 2, k: 2, n: 1 }));
+        // k_tiles = 1 degenerates to the 1-D column split.
+        let cols: Vec<_> = split_shape_kn(shape, 1, 2)
+            .into_iter()
+            .map(|(k0, col0, s)| {
+                assert_eq!(k0, 0);
+                (col0, s)
+            })
+            .collect();
+        assert_eq!(cols, split_shape_n(shape, 2));
+    }
+
+    #[test]
+    fn operand_slicers_extract_the_declared_block() {
+        let shape = GemmShape { m: 2, k: 4, n: 3 };
+        let a: Vec<i64> = (0..8).collect(); // 2x4 row-major
+        let b: Vec<i64> = (0..12).collect(); // 4x3 row-major
+        assert_eq!(slice_a_cols(shape, &a, 1, 2), vec![1, 2, 5, 6]);
+        assert_eq!(slice_a_cols(shape, &a, 0, 4), a, "full range is the identity");
+        assert_eq!(slice_b_rows(shape, &b, 1, 2), b[3..9].to_vec());
+        assert_eq!(slice_b_rows(shape, &b, 0, 4), b, "full range is the identity");
+        // Block slice = row range ∩ column range.
+        assert_eq!(slice_b_block(shape, &b, 1, 2, 1, 2), vec![4, 5, 7, 8]);
+        // Full k-range block slice matches the 1-D column slicer.
+        assert_eq!(slice_b_block(shape, &b, 0, 4, 1, 2), slice_b_cols(shape, &b, 1, 2));
+    }
+
+    #[test]
+    fn kn_tile_execute_add_reduce_merge_is_bit_exact() {
+        // End-to-end 2-D tiling at the compiler level: slice, run every
+        // (ki, ni) tile on a tiny region, add-reduce same-ni partials,
+        // column-concat — bit-exact vs both references, including ragged
+        // and degenerate grids.
+        let geom = ArrayGeometry::new(2, 1); // q = 16
+        let shape = GemmShape { m: 3, k: 50, n: 7 }; // 4 slices unsplit
+        let (a, b) = random_gemm(shape, 8, 0xD1CE);
+        let expect = gemm_ref(shape, &a, &b);
+        assert_eq!(gemm_ref_checked(shape, 8, &a, &b).unwrap(), expect);
+        let compiler = PimCompiler::new(geom);
+        let bits = acc_bits(8, shape.k);
+        for (kt, nt) in [(1, 1), (2, 3), (3, 2), (4, 7), (50, 1)] {
+            let krs = split_axis(shape.k, kt);
+            let nrs = split_axis(shape.n, nt);
+            let mut columns = Vec::new();
+            for &(col0, nn) in &nrs {
+                let mut partials = Vec::new();
+                for &(k0, kk) in &krs {
+                    let sshape = GemmShape { m: shape.m, k: kk, n: nn };
+                    let sa = slice_a_cols(shape, &a, k0, kk);
+                    let sb = slice_b_block(shape, &b, k0, kk, col0, nn);
+                    let plan = compiler.gemm(sshape, 8).unwrap();
+                    let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+                    let (c, _) = execute_gemm(&mut arr, &plan, &sa, &sb).unwrap();
+                    partials.push(c);
+                }
+                columns.push((col0, nn, add_reduce_partials(&partials, bits).unwrap()));
+            }
+            assert_eq!(merge_shard_outputs(shape, &columns), expect, "grid {kt}x{nt}");
+        }
+    }
+
+    #[test]
+    fn staging_table_slicer_kn_is_memcpy_exact() {
+        let shape = GemmShape { m: 2, k: 20, n: 3 };
+        let q = 16; // parent lanes padded to 32
+        let table: Vec<Vec<i64>> = (0..shape.m * shape.n)
+            .map(|e| {
+                let mut lanes = vec![0i64; 32];
+                for (kk, slot) in lanes.iter_mut().enumerate().take(shape.k) {
+                    *slot = (100 * e + kk) as i64;
+                }
+                lanes
+            })
+            .collect();
+        // Full-range 2-D slice == the 1-D column slicer, bit for bit.
+        assert_eq!(
+            slice_staging_table_kn(shape, &table, q, 0, shape.k, 1, 2),
+            slice_staging_table(shape, &table, 1, 2)
+        );
+        // A k-range lands the parent's [k0, k0+kk) lane span at offset 0,
+        // zero-padded to a whole number of q-lane slices.
+        let sub = slice_staging_table_kn(shape, &table, q, 16, 4, 0, 3);
+        assert_eq!(sub.len(), 6);
+        for (e, lanes) in sub.iter().enumerate() {
+            assert_eq!(lanes.len(), 16, "4 live lanes pad to one q=16 slice");
+            assert_eq!(lanes[..4], table[e][16..20]);
+            assert!(lanes[4..].iter().all(|&v| v == 0));
+        }
+    }
+
+    #[test]
+    fn add_reduce_checks_overflow_and_geometry() {
+        // Exact signed reduce, negatives included.
+        let bits = acc_bits(8, 4); // 18 bits => range ±2^17
+        let sum = add_reduce_partials(&[vec![5, -7], vec![-2, 3]], bits).unwrap();
+        assert_eq!(sum, vec![3, -4]);
+        // A reduced value outside the declared accumulator range is an
+        // error mentioning "overflow", not a wrapped number.
+        let too_big = vec![1i64 << 20];
+        let err = add_reduce_partials(&[too_big.clone(), too_big], bits).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // i64 wraparound during the sum is caught even before the range check.
+        let err =
+            add_reduce_partials(&[vec![i64::MAX], vec![1]], 64).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // Mismatched partial geometry and the empty reduce are rejected.
+        assert!(add_reduce_partials(&[vec![1, 2], vec![3]], bits).is_err());
+        assert!(add_reduce_partials(&[], bits).is_err());
+        // Boundary values inside the range pass.
+        let (lo, hi) = acc_range(bits);
+        assert_eq!(add_reduce_partials(&[vec![lo, hi]], bits).unwrap(), vec![lo, hi]);
+    }
+
+    #[test]
+    fn gemm_ref_checked_mirrors_the_gather_checks() {
+        let shape = GemmShape { m: 2, k: 8, n: 3 };
+        let (a, b) = random_gemm(shape, 8, 0xBEEF);
+        assert_eq!(gemm_ref_checked(shape, 8, &a, &b).unwrap(), gemm_ref(shape, &a, &b));
+        // Operands wider than the declared width blow the accumulator
+        // range — the checked reference rejects exactly like a tiled
+        // gather's add-reduce would.
+        let wide_a = vec![1 << 20; shape.m * shape.k];
+        let wide_b = vec![1 << 20; shape.k * shape.n];
+        let err = gemm_ref_checked(shape, 4, &wide_a, &wide_b).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // Operand-size validation mirrors execute_gemm.
+        assert!(gemm_ref_checked(shape, 8, &a[1..], &b).is_err());
     }
 
     #[test]

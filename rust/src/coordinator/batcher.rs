@@ -26,13 +26,14 @@
 //! instantly), while an idle queue means waiting only adds latency
 //! (small flush target, near-zero window).
 //!
-//! Sibling shards of one scattered job
-//! ([`ShardInfo`](super::ShardInfo)) never coalesce with each other —
+//! Sibling tiles of one scattered job
+//! ([`TileInfo`](super::TileInfo)) never coalesce with each other —
 //! packing them into one batch would serialize the whole scatter on a
-//! single region. Shards of different parents (and plain same-key
-//! jobs) batch freely; sharded *session* jobs additionally key on their
-//! `(index, of)` partition slot, since shards of different column
-//! ranges run different sub-plans.
+//! single region. Tiles of different parents (and plain same-key
+//! jobs) batch freely; tiled *session* jobs additionally key on their
+//! [`TileSlot`](super::TileSlot) grid position, since tiles of
+//! different k-ranges or column ranges run different sub-plans against
+//! different sliced staging tables.
 //!
 //! ```
 //! use picaso::compiler::GemmShape;
@@ -56,7 +57,7 @@
 //! # Ok::<(), picaso::Error>(())
 //! ```
 
-use super::scheduler::{Scheduler, ShardInfo, Ticket};
+use super::scheduler::{Scheduler, Ticket, TileInfo, TileSlot};
 use super::{JobKind, SessionId};
 use crate::backend::BackendClass;
 use crate::compiler::GemmShape;
@@ -75,17 +76,18 @@ pub enum BatchKey {
         width: u16,
     },
     /// Session jobs coalesce per session — shape, width and weights are
-    /// pinned by the session itself. Sharded session jobs additionally
-    /// coalesce only within the same `(index, of)` partition slot: each
-    /// slot covers a distinct output-column range with its own sub-plan
-    /// and sliced staging table, so mixing slots in one packed
-    /// execution would corrupt the round layout.
+    /// pinned by the session itself. Tiled session jobs additionally
+    /// coalesce only within the same [`TileSlot`] grid position: each
+    /// slot covers a distinct (k-range × output-column) block with its
+    /// own sub-plan and sliced staging table, so mixing slots — two
+    /// column ranges *or* two k-ranges — in one packed execution would
+    /// corrupt the round layout or sum the wrong operand window.
     Session {
         /// The session the jobs run against.
         session: SessionId,
-        /// `Some((index, of))` for a shard of a scattered session job;
-        /// `None` for a whole (unsharded) session job.
-        part: Option<(usize, usize)>,
+        /// `Some(slot)` for a tile of a scattered session job; `None`
+        /// for a whole (untiled) session job.
+        part: Option<TileSlot>,
     },
 }
 
@@ -96,17 +98,14 @@ impl BatchKey {
     }
 
     /// Derive the coalescing key of a ticket: like [`BatchKey::of`],
-    /// but a session job that is one shard of a scatter keys on its
-    /// partition slot so only same-range shards (of *different*
-    /// parents) coalesce.
-    pub fn for_ticket(kind: &JobKind, shard: Option<ShardInfo>) -> BatchKey {
+    /// but a session job that is one tile of a scatter keys on its grid
+    /// slot so only same-range tiles (of *different* parents) coalesce.
+    pub fn for_ticket(kind: &JobKind, shard: Option<TileInfo>) -> BatchKey {
         match kind {
             JobKind::Gemm { shape, width, .. } => BatchKey::Gemm { shape: *shape, width: *width },
             JobKind::SessionGemm { session, .. } => BatchKey::Session {
                 session: *session,
-                part: shard
-                    .filter(|s| s.of >= 2)
-                    .map(|s| (s.index, s.of)),
+                part: shard.filter(|s| s.slot.of() >= 2).map(|s| s.slot),
             },
         }
     }
@@ -356,27 +355,54 @@ mod tests {
 
     #[test]
     fn session_shard_partitions_do_not_coalesce_across_slots() {
-        use super::super::scheduler::ShardInfo;
         let s = sched();
         let session = SessionId(9);
         let sjob = |id: u64| Job::new(id, JobKind::SessionGemm { session, a: vec![0; 2] });
         // Shard (0 of 2) of parents 1 and 2, shard (1 of 2) of parent 1:
         // the two slot-0 shards coalesce (different parents, same column
         // range); the slot-1 shard runs its own sub-plan.
-        s.submit_shard_with_priority(sjob(1), 0, Some(ShardInfo { parent: 1, index: 0, of: 2 }))
+        let col = TileSlot::column;
+        s.submit_shard_with_priority(sjob(1), 0, Some(TileInfo { parent: 1, slot: col(0, 2) }))
             .unwrap();
-        s.submit_shard_with_priority(sjob(2), 0, Some(ShardInfo { parent: 2, index: 0, of: 2 }))
+        s.submit_shard_with_priority(sjob(2), 0, Some(TileInfo { parent: 2, slot: col(0, 2) }))
             .unwrap();
-        s.submit_shard_with_priority(sjob(1), 0, Some(ShardInfo { parent: 1, index: 1, of: 2 }))
+        s.submit_shard_with_priority(sjob(1), 0, Some(TileInfo { parent: 1, slot: col(1, 2) }))
             .unwrap();
         let b = Batcher::new(BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::ZERO });
         let first = b.collect(&s).unwrap();
         let picked: Vec<(u64, usize)> =
-            first.iter().map(|t| (t.shard.unwrap().parent, t.shard.unwrap().index)).collect();
+            first.iter().map(|t| (t.shard.unwrap().parent, t.shard.unwrap().slot.ni)).collect();
         assert_eq!(picked, vec![(1, 0), (2, 0)], "same slot, different parents coalesce");
         let second = b.collect(&s).unwrap();
         assert_eq!(second.len(), 1);
-        assert_eq!(second[0].shard.unwrap().index, 1, "other slot dispatches alone");
+        assert_eq!(second[0].shard.unwrap().slot.ni, 1, "other slot dispatches alone");
+    }
+
+    #[test]
+    fn session_tiles_do_not_coalesce_across_k_ranges() {
+        // Two parents tiled 2×1 over k: the (ki = 0) tiles of both
+        // parents share a key and coalesce; a (ki = 1) tile covers a
+        // different operand window (different sliced staging table) and
+        // must dispatch in its own batch even though the column range —
+        // and thus the output shape — is identical.
+        let s = sched();
+        let session = SessionId(9);
+        let sjob = |id: u64| Job::new(id, JobKind::SessionGemm { session, a: vec![0; 4] });
+        let slot = |ki: usize| TileSlot { ki, ni: 0, k_tiles: 2, n_tiles: 1 };
+        s.submit_shard_with_priority(sjob(1), 0, Some(TileInfo { parent: 1, slot: slot(0) }))
+            .unwrap();
+        s.submit_shard_with_priority(sjob(2), 0, Some(TileInfo { parent: 2, slot: slot(0) }))
+            .unwrap();
+        s.submit_shard_with_priority(sjob(2), 0, Some(TileInfo { parent: 2, slot: slot(1) }))
+            .unwrap();
+        let b = Batcher::new(BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::ZERO });
+        let first = b.collect(&s).unwrap();
+        let picked: Vec<(u64, usize)> =
+            first.iter().map(|t| (t.shard.unwrap().parent, t.shard.unwrap().slot.ki)).collect();
+        assert_eq!(picked, vec![(1, 0), (2, 0)], "same k-range, different parents coalesce");
+        let second = b.collect(&s).unwrap();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].shard.unwrap().slot.ki, 1, "other k-range dispatches alone");
     }
 
     #[test]
@@ -422,14 +448,13 @@ mod tests {
 
     #[test]
     fn sibling_shards_do_not_coalesce() {
-        use super::super::scheduler::ShardInfo;
         let s = sched();
         // Two shards of logical job 7 plus one unrelated same-key job.
         for index in 0..2usize {
             s.submit_shard_with_priority(
                 gemm_job(7, 1),
                 0,
-                Some(ShardInfo { parent: 7, index, of: 2 }),
+                Some(TileInfo { parent: 7, slot: TileSlot::column(index, 2) }),
             )
             .unwrap();
         }
@@ -438,33 +463,34 @@ mod tests {
         // First batch: shard 0 plus the unrelated job — never shard 1.
         let first = b.collect(&s).unwrap();
         let picked: Vec<Option<usize>> =
-            first.iter().map(|t| t.shard.map(|sh| sh.index)).collect();
+            first.iter().map(|t| t.shard.map(|sh| sh.slot.ni)).collect();
         assert_eq!(first.len(), 2, "unrelated same-key job still coalesces");
         assert_eq!(picked, vec![Some(0), None]);
         // The sibling shard dispatches in its own batch.
         let second = b.collect(&s).unwrap();
         assert_eq!(second.len(), 1);
-        assert_eq!(second[0].shard.map(|sh| sh.index), Some(1));
+        assert_eq!(second[0].shard.map(|sh| sh.slot.ni), Some(1));
 
         // Same invariant when a plain job leads the batch: the siblings
-        // queued behind it must not both join.
+        // queued behind it must not both join. Use a 2-D (k×n) grid so
+        // the rule is exercised across the k axis too.
         let s2 = sched();
         s2.submit(gemm_job(30, 1)).unwrap();
-        for index in 0..2usize {
+        for ki in 0..2usize {
             s2.submit_shard_with_priority(
                 gemm_job(31, 1),
                 0,
-                Some(ShardInfo { parent: 31, index, of: 2 }),
+                Some(TileInfo { parent: 31, slot: TileSlot { ki, ni: 0, k_tiles: 2, n_tiles: 1 } }),
             )
             .unwrap();
         }
         let first = b.collect(&s2).unwrap();
         let picked: Vec<Option<usize>> =
-            first.iter().map(|t| t.shard.map(|sh| sh.index)).collect();
+            first.iter().map(|t| t.shard.map(|sh| sh.slot.ki)).collect();
         assert_eq!(picked, vec![None, Some(0)], "plain head takes only one sibling");
         let second = b.collect(&s2).unwrap();
         assert_eq!(second.len(), 1);
-        assert_eq!(second[0].shard.map(|sh| sh.index), Some(1));
+        assert_eq!(second[0].shard.map(|sh| sh.slot.ki), Some(1));
     }
 
     #[test]

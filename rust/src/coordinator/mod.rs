@@ -26,18 +26,24 @@
 //! * [`session`] — persistent [`ModelSession`]s that pin a compiled
 //!   [`GemmPlan`](crate::compiler::GemmPlan) and a pre-staged weight
 //!   table, so repeat inference skips both compilation and weight
-//!   gathering. Sessions shard too: per-partition staging sub-tables are
-//!   sliced from the pinned table ([`ModelSession::shard`]), so
-//!   pinned-weight inference scatters across regions like ad-hoc GEMMs.
+//!   gathering. Sessions tile too: per-tile staging sub-tables (a
+//!   k-range × column-range block) are sliced from the pinned table
+//!   ([`ModelSession::tile`]), so pinned-weight inference scatters
+//!   across regions like ad-hoc GEMMs.
 //!
 //! One logical GEMM (ad-hoc **or** session-backed) can span regions: a
-//! [`ShardPolicy`] on the [`Job`] scatters it into per-column-range shard
-//! tickets at submit time
-//! ([`compiler::split_shape_n`](crate::compiler::split_shape_n)) under a
-//! single all-or-none queue reservation, heterogeneous regions execute
-//! the shards concurrently, and the returned [`JobHandle`] is the gather
-//! barrier that merges the partial outputs bit-exact and rolls the shard
-//! cycle and retry counts up to the parent.
+//! [`TilePolicy`] on the [`Job`] scatters it into a `k_tiles × n_tiles`
+//! grid of tile tickets at submit time
+//! ([`compiler::split_shape_kn`](crate::compiler::split_shape_kn)) under
+//! a single all-or-none queue reservation, heterogeneous regions execute
+//! the tiles concurrently, and the returned [`JobHandle`] is the gather
+//! barrier that add-reduces same-column partial sums
+//! ([`compiler::add_reduce_partials`](crate::compiler::add_reduce_partials)
+//! — with an accumulator-range overflow check), concatenates the column
+//! ranges bit-exact, and rolls the tile cycle and retry counts up to the
+//! parent. Splitting along `k` is what lets one job's weight table
+//! exceed a single region's staging capacity — the paper's multi-block
+//! scaling applied per job.
 //!
 //! **Failure-domain retry**: a shard (or unsharded job) that fails on a
 //! region with a *transient* execution error is re-queued with that
@@ -75,7 +81,8 @@ pub mod session;
 pub use batcher::{BatchKey, BatchPolicy, Batcher};
 pub use scheduler::{
     BackoffPolicy, Backpressure, Completion, JobHandle, QuarantinePolicy, QueuePolicy,
-    Reservation, RetryPolicy, Scheduler, SchedulerConfig, ShardInfo, Ticket, TicketState,
+    Reservation, RetryPolicy, Scheduler, SchedulerConfig, Ticket, TicketState, TileInfo,
+    TileSlot,
 };
 pub use session::{ModelSession, SessionId, SessionSpec};
 
@@ -83,8 +90,8 @@ use crate::arch::{ArchKind, PipelineConfig};
 use crate::array::{ArrayGeometry, RunStats};
 use crate::backend::{make_backend, BackendClass, PimBackend};
 use crate::compiler::{
-    execute_gemm, execute_gemm_batch, slice_b_cols, split_shape_n, GemmPlan, GemmShape,
-    PimCompiler,
+    execute_gemm, execute_gemm_batch, slice_a_cols, slice_b_block, split_shape_kn, GemmPlan,
+    GemmShape, PimCompiler,
 };
 use crate::metrics::{Metrics, MetricsSnapshot, ServingMetrics};
 use crate::{Error, Result};
@@ -213,19 +220,73 @@ impl CoordinatorConfig {
 
 /// How a logical GEMM job is split across worker regions at submit time
 /// (the scatter half of scatter–gather; see
-/// [`Coordinator::submit_job`]).
+/// [`Coordinator::submit_job`]): a `k_tiles × n_tiles` grid over the
+/// reduction dimension and the output columns. Splitting along `n`
+/// spreads output columns across regions; splitting along `k` is what
+/// lets a weight table **deeper** than any single region's staging
+/// capacity execute at all — each k-tile computes a partial product and
+/// the gather add-reduces same-column partials before concatenation
+/// (the paper's multi-block scaling, applied to one job).
+///
+/// ```
+/// use picaso::coordinator::{TilePolicy, TileSlot};
+///
+/// // A 2×3 grid: k split into 2 ranges, n into 3 column ranges.
+/// let policy = TilePolicy::Grid { k_tiles: 2, n_tiles: 3 };
+/// assert_eq!(policy, TilePolicy::grid(2, 3));
+/// // Back-compat: Fixed(n) is the k_tiles = 1 row of the grid …
+/// assert_eq!(TilePolicy::grid(1, 3), TilePolicy::Fixed(3));
+/// assert_eq!(TilePolicy::grid(0, 1), TilePolicy::None);
+/// // … and the old 1-D shard slots are that row's column slots.
+/// let slot = TileSlot { ki: 1, ni: 2, k_tiles: 2, n_tiles: 3 };
+/// assert_eq!((slot.of(), slot.index()), (6, 5));
+/// assert_eq!(TileSlot::column(2, 3), TileSlot { ki: 0, ni: 2, k_tiles: 1, n_tiles: 3 });
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum ShardPolicy {
+pub enum TilePolicy {
     /// Run as one ticket on one region (the default).
     #[default]
     None,
-    /// Split the output into exactly this many shards along `n`
-    /// (clamped to `n`; 0 and 1 behave like [`ShardPolicy::None`]).
+    /// Split the output into exactly this many shards along `n` only
+    /// (clamped to `n`; 0 and 1 behave like [`TilePolicy::None`]).
+    /// Equivalent to `Grid { k_tiles: 1, n_tiles }` — the pre-tiling
+    /// 1-D column sharding, kept for source compatibility.
     Fixed(usize),
-    /// One shard per compatible worker region: the number of regions
-    /// matching the job's backend tag (all regions for untagged jobs).
+    /// Full 2-D split: `k_tiles` ranges over the reduction dimension ×
+    /// `n_tiles` ranges over the output columns (each clamped to its
+    /// axis length; a resolved 1×1 grid behaves like
+    /// [`TilePolicy::None`]).
+    Grid {
+        /// Tiles along the reduction dimension `k`.
+        k_tiles: usize,
+        /// Tiles along the output dimension `n`.
+        n_tiles: usize,
+    },
+    /// One column shard per compatible worker region: the number of
+    /// regions matching the job's backend tag (all regions for untagged
+    /// jobs). Stays 1-D — choosing a k-split automatically needs the
+    /// mapping auto-tuner (see ROADMAP).
     Auto,
 }
+
+impl TilePolicy {
+    /// Normalizing constructor: `(1, 1)` (or smaller) is
+    /// [`TilePolicy::None`], a `k_tiles = 1` grid is the back-compat
+    /// [`TilePolicy::Fixed`] column split, anything else is
+    /// [`TilePolicy::Grid`].
+    pub fn grid(k_tiles: usize, n_tiles: usize) -> TilePolicy {
+        match (k_tiles.max(1), n_tiles.max(1)) {
+            (1, 1) => TilePolicy::None,
+            (1, n) => TilePolicy::Fixed(n),
+            (k, n) => TilePolicy::Grid { k_tiles: k, n_tiles: n },
+        }
+    }
+}
+
+/// The pre-tiling name of [`TilePolicy`], kept as an alias so existing
+/// call sites (`ShardPolicy::Fixed(4)`, `ShardPolicy::Auto`, …) compile
+/// unchanged.
+pub type ShardPolicy = TilePolicy;
 
 /// A unit of work.
 #[derive(Debug, Clone)]
@@ -497,17 +558,19 @@ impl Coordinator {
     /// (they could never dispatch); session jobs inherit their session's
     /// backend requirement unless tagged explicitly.
     ///
-    /// **Scatter–gather**: a job with a [`ShardPolicy`] other than
-    /// `None` — ad-hoc GEMM or session-backed — is split along `n` into
-    /// K linked shard tickets here (each carrying the parent id, its
-    /// shard index, and the job's backend/retry/deadline settings), and
-    /// the returned [`JobHandle`] is the gather barrier that merges the
-    /// shard outputs back into the parent result in submission order.
-    /// Admission is **scatter-atomic**: the K slots are reserved
-    /// up-front ([`Scheduler::reserve`]), so under
-    /// [`Backpressure::Reject`] either the whole scatter is admitted or
-    /// the submission fails with nothing queued — a rejection can no
-    /// longer strand a partial scatter.
+    /// **Scatter–gather**: a job with a [`TilePolicy`] other than
+    /// `None` — ad-hoc GEMM or session-backed — is split into a
+    /// `k_tiles × n_tiles` grid of linked tile tickets here (each
+    /// carrying the parent id, its [`TileSlot`], and the job's
+    /// backend/retry/deadline settings), and the returned [`JobHandle`]
+    /// is the gather barrier that add-reduces same-column partial sums
+    /// across the k-tiles and then concatenates the column ranges back
+    /// into the parent result in submission order. Admission is
+    /// **scatter-atomic**: the grid's slots are reserved up-front
+    /// ([`Scheduler::reserve`]), so under [`Backpressure::Reject`]
+    /// either the whole scatter is admitted or the submission fails
+    /// with nothing queued — a rejection can no longer strand a
+    /// partial scatter.
     pub fn submit_job(&self, job: Job) -> Result<JobHandle> {
         self.submit_with_priority(job, 0)
     }
@@ -528,32 +591,36 @@ impl Coordinator {
                 )));
             }
         }
-        let shards = self.resolve_shards(&job)?;
-        if shards >= 2 {
-            return self.scatter(job, priority, shards);
+        let (k_tiles, n_tiles) = self.resolve_tiles(&job)?;
+        if k_tiles * n_tiles >= 2 {
+            return self.scatter(job, priority, k_tiles, n_tiles);
         }
         self.metrics.record_shards(1);
+        self.metrics.record_tiles(1);
         self.sched.submit_with_priority(job, priority)
     }
 
-    /// Resolve a job's [`ShardPolicy`] to a concrete shard count against
-    /// this pool, clamped to the job's output columns. A sharded session
-    /// job against an unknown (e.g. already-closed) session degrades to
-    /// one ticket, whose worker reports the unknown-session error.
-    fn resolve_shards(&self, job: &Job) -> Result<usize> {
-        let want = match job.shards {
-            ShardPolicy::None => return Ok(1),
-            ShardPolicy::Fixed(k) => k.max(1),
-            ShardPolicy::Auto => self.compatible_regions(job.backend).max(1),
+    /// Resolve a job's [`TilePolicy`] to a concrete `(k_tiles, n_tiles)`
+    /// grid against this pool, clamped to the job's shape (a tile needs
+    /// at least one reduction term and one output column). A tiled
+    /// session job against an unknown (e.g. already-closed) session
+    /// degrades to one ticket, whose worker reports the unknown-session
+    /// error.
+    fn resolve_tiles(&self, job: &Job) -> Result<(usize, usize)> {
+        let (want_k, want_n) = match job.shards {
+            TilePolicy::None => return Ok((1, 1)),
+            TilePolicy::Fixed(n) => (1, n.max(1)),
+            TilePolicy::Grid { k_tiles, n_tiles } => (k_tiles.max(1), n_tiles.max(1)),
+            TilePolicy::Auto => (1, self.compatible_regions(job.backend).max(1)),
         };
-        match &job.kind {
-            // Clamp to n: a shard needs at least one output column.
-            JobKind::Gemm { shape, .. } => Ok(want.min(shape.n)),
-            JobKind::SessionGemm { session, .. } => Ok(self
-                .session_spec(*session)
-                .map(|spec| want.min(spec.shape.n))
-                .unwrap_or(1)),
-        }
+        let shape = match &job.kind {
+            JobKind::Gemm { shape, .. } => *shape,
+            JobKind::SessionGemm { session, .. } => match self.session_spec(*session) {
+                Some(spec) => spec.shape,
+                None => return Ok((1, 1)),
+            },
+        };
+        Ok((want_k.min(shape.k.max(1)), want_n.min(shape.n.max(1))))
     }
 
     fn session_spec(&self, id: SessionId) -> Option<Arc<SessionSpec>> {
@@ -577,49 +644,62 @@ impl Coordinator {
         }
     }
 
-    /// The scatter half of sharded execution: split the job's output
-    /// columns into `shards` balanced ranges, reserve the whole scatter's
-    /// queue slots atomically, submit each shard as a linked ticket
-    /// (inheriting backend tag, priority, retry policy and deadline),
-    /// and return the gather handle. For ad-hoc GEMMs each shard carries
-    /// its slice of `B`; for session jobs each shard carries the full
-    /// activations and the worker slices the session's pinned staging
-    /// table per partition slot.
-    fn scatter(&self, job: Job, priority: u8, shards: usize) -> Result<JobHandle> {
-        // A sharded session job needs its spec for the parent shape; the
-        // session may close concurrently — degrade to one ticket then
-        // (the worker reports the unknown session).
+    /// The scatter half of tiled execution: split the job into a
+    /// `k_tiles × n_tiles` grid of balanced `(k-range, column-range)`
+    /// tiles, reserve the whole scatter's queue slots atomically, submit
+    /// each tile as a linked ticket (inheriting backend tag, priority,
+    /// retry policy and deadline), and return the gather handle. For
+    /// ad-hoc GEMMs each tile carries its `A` column slice and `B`
+    /// block; for session jobs each tile carries the full activations
+    /// (the worker windows them to the tile's k-range at fill time) and
+    /// the worker slices the session's pinned staging table per tile
+    /// slot.
+    fn scatter(&self, job: Job, priority: u8, k_tiles: usize, n_tiles: usize) -> Result<JobHandle> {
+        // A tiled session job needs its spec for the parent shape and
+        // width; the session may close concurrently — degrade to one
+        // ticket then (the worker reports the unknown session).
         let spec = match &job.kind {
             JobKind::SessionGemm { session, .. } => match self.session_spec(*session) {
                 Some(s) => Some(s),
                 None => {
                     self.metrics.record_shards(1);
+                    self.metrics.record_tiles(1);
                     return self.sched.submit_with_priority(job, priority);
                 }
             },
             JobKind::Gemm { .. } => None,
         };
         let Job { id, kind, backend, retry, deadline_us, .. } = job;
-        let shape = match (&kind, &spec) {
-            (JobKind::Gemm { shape, .. }, _) => *shape,
-            (JobKind::SessionGemm { .. }, Some(spec)) => spec.shape,
+        let (shape, width) = match (&kind, &spec) {
+            (JobKind::Gemm { shape, width, .. }, _) => (*shape, *width),
+            (JobKind::SessionGemm { .. }, Some(spec)) => (spec.shape, spec.width),
             (JobKind::SessionGemm { .. }, None) => unreachable!("spec resolved above"),
         };
-        let parts = split_shape_n(shape, shards);
+        // `resolve_tiles` clamped the grid to the shape, so the split is
+        // exact: `of == k_tiles * n_tiles`, row-major over (ki, ni).
+        let parts = split_shape_kn(shape, k_tiles, n_tiles);
         let of = parts.len();
+        debug_assert_eq!(of, k_tiles * n_tiles);
         // All-or-none admission: the whole scatter's slots are held
-        // before the first shard enqueues, so `Reject` either admits
-        // every shard or fails cleanly with nothing queued.
+        // before the first tile enqueues, so `Reject` either admits
+        // every tile or fails cleanly with nothing queued.
         let mut reservation = self.sched.reserve(of)?;
         self.metrics.record_shards(of);
+        self.metrics.record_tiles(k_tiles);
         let mut handles = Vec::with_capacity(of);
-        for (index, (col0, sshape)) in parts.into_iter().enumerate() {
+        for (index, (k0, col0, sshape)) in parts.into_iter().enumerate() {
+            let slot = TileSlot {
+                ki: index / n_tiles,
+                ni: index % n_tiles,
+                k_tiles,
+                n_tiles,
+            };
             let sub_kind = match &kind {
                 JobKind::Gemm { shape, width, a, b } => JobKind::Gemm {
                     shape: sshape,
                     width: *width,
-                    a: a.clone(),
-                    b: slice_b_cols(*shape, b, col0, sshape.n),
+                    a: slice_a_cols(*shape, a, k0, sshape.k),
+                    b: slice_b_block(*shape, b, k0, sshape.k, col0, sshape.n),
                 },
                 JobKind::SessionGemm { session, a } => {
                     JobKind::SessionGemm { session: *session, a: a.clone() }
@@ -629,18 +709,14 @@ impl Coordinator {
                 id,
                 kind: sub_kind,
                 backend,
-                shards: ShardPolicy::None,
+                shards: TilePolicy::None,
                 retry,
                 deadline_us,
             };
-            let h = reservation.submit(
-                sub,
-                priority,
-                Some(ShardInfo { parent: id, index, of }),
-            )?;
-            handles.push((col0, sshape.n, h));
+            let h = reservation.submit(sub, priority, Some(TileInfo { parent: id, slot }))?;
+            handles.push((slot, col0, sshape.n, h));
         }
-        Ok(JobHandle::gather(id, shape, handles))
+        Ok(JobHandle::gather(id, shape, width, handles))
     }
 
     /// Open a persistent session: pins `weights` (row-major `k×n`) and
@@ -916,12 +992,12 @@ fn worker_loop(
     // Plan cache: compiling a shape once per worker (microcode reuse is
     // what makes the "python never on the request path" contract cheap).
     let mut plans: HashMap<(GemmShape, u16), GemmPlan> = HashMap::new();
-    // Per-worker session cache, keyed by session id plus the shard
-    // partition slot (`None` = the whole session): sessions pin their
-    // staging tables here on first use — shard slots hold sub-plans and
-    // sliced sub-tables — swept against the registry whenever a close
-    // happens.
-    let mut sessions: HashMap<(SessionId, Option<(usize, usize)>), ModelSession> = HashMap::new();
+    // Per-worker session cache, keyed by session id plus the tile slot
+    // (`None` = the whole session): sessions pin their staging tables
+    // here on first use — tile slots hold sub-plans and (k-range ×
+    // column-range) sliced sub-tables — swept against the registry
+    // whenever a close happens.
+    let mut sessions: HashMap<(SessionId, Option<TileSlot>), ModelSession> = HashMap::new();
     let mut seen_epoch = 0u64;
     while let Some(batch) = batcher.collect_for(&sched, Some(widx), Some(class)) {
         let epoch = registry.closed_epoch.load(Ordering::Acquire);
@@ -1155,15 +1231,18 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
 
 /// Execute a micro-batch of session jobs against the worker's cached
 /// (or freshly prepared) [`ModelSession`] — the whole session for
-/// `part = None`, or the per-partition shard view (sub-plan plus sliced
-/// staging table) for shard tickets.
+/// `part = None`, or the per-tile view (sub-plan plus k-range ×
+/// column-range sliced staging table) for tile tickets. Tile tickets
+/// carry the **full** parent activations; the tile view windows them
+/// to its k-range at operand-fill time, so validation here is always
+/// against the parent shape.
 fn run_session_batch<B: PimBackend + ?Sized>(
     backend: &mut B,
     compiler: &PimCompiler,
     registry: &SessionRegistry,
-    sessions: &mut HashMap<(SessionId, Option<(usize, usize)>), ModelSession>,
+    sessions: &mut HashMap<(SessionId, Option<TileSlot>), ModelSession>,
     sid: SessionId,
-    part: Option<(usize, usize)>,
+    part: Option<TileSlot>,
     batch: &[Ticket],
 ) -> BatchOutcome {
     let mut per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)> = batch
@@ -1191,15 +1270,15 @@ fn run_session_batch<B: PimBackend + ?Sized>(
         }
     };
     if !sessions.contains_key(&(sid, part)) {
-        // Whole-session jobs pin the full staging table. Shard slots
+        // Whole-session jobs pin the full staging table. Tile slots
         // slice it when it is already pinned here, and otherwise stage
-        // just their own partition from the spec — a worker that only
-        // ever serves one slot never materializes the full table.
+        // just their own tile from the spec — a worker that only ever
+        // serves one slot never materializes the full table.
         let prepared = match part {
             None => ModelSession::prepare(compiler, &spec),
-            Some((index, of)) => match sessions.get(&(sid, None)) {
-                Some(base) => base.shard(compiler, index, of),
-                None => ModelSession::prepare_shard(compiler, &spec, index, of),
+            Some(slot) => match sessions.get(&(sid, None)) {
+                Some(base) => base.tile(compiler, slot),
+                None => ModelSession::prepare_tile(compiler, &spec, slot),
             },
         };
         match prepared {
@@ -1548,6 +1627,50 @@ mod tests {
         let snap = coord.metrics_snapshot();
         assert_eq!(snap.sharded_jobs, 2);
         assert_eq!(snap.max_shards, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn grid_tiled_gemm_merges_bit_exact() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 3,
+            geom: ArrayGeometry::new(2, 1),
+            ..Default::default()
+        })
+        .unwrap();
+        // Ragged on both axes: 50 % 3 != 0, 7 % 2 != 0; k = 50 needs
+        // multiple row slices per region, so the k-split is real.
+        let shape = GemmShape { m: 2, k: 50, n: 7 };
+        let (job, expect) = gemm_job(1, shape, 0x6B1D);
+        let h = coord
+            .submit_job(job.clone().with_shards(TilePolicy::Grid { k_tiles: 3, n_tiles: 2 }))
+            .unwrap();
+        assert_eq!(h.shard_count(), 6, "3x2 grid = 6 tile tickets");
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect, "add-reduced + concatenated output == gemm_ref");
+        assert_eq!(r.shards, 6);
+        assert!(r.stats.cycles > 0, "tile cycles roll up to the parent");
+        // Oversubscribed grids clamp to the shape, per axis: k_tiles to
+        // k (tiles of one reduction term), n_tiles to n.
+        let h = coord
+            .submit_job(job.clone().with_shards(TilePolicy::Grid { k_tiles: 100, n_tiles: 2 }))
+            .unwrap();
+        assert_eq!(h.shard_count(), 50 * 2, "k split clamps to k = 50");
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect);
+        let h = coord
+            .submit_job(job.with_shards(TilePolicy::Grid { k_tiles: 2, n_tiles: 100 }))
+            .unwrap();
+        assert_eq!(h.shard_count(), 2 * 7, "n split clamps to n = 7");
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect);
+        let snap = coord.metrics_snapshot();
+        assert_eq!(snap.ktiled_jobs, 3);
+        assert_eq!(snap.max_k_tiles, 50);
+        assert_eq!(snap.max_shards, 100);
         coord.shutdown();
     }
 

@@ -102,26 +102,62 @@ use super::batcher::BatchKey;
 use super::{Job, JobResult};
 use crate::array::RunStats;
 use crate::backend::BackendClass;
-use crate::compiler::{merge_shard_outputs, GemmShape};
+use crate::compiler::{acc_bits, add_reduce_partials, merge_shard_outputs, GemmShape};
 use crate::metrics::ServingMetrics;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-/// Linkage of a shard sub-ticket to the logical job it was scattered
+/// Position of one tile inside a `k_tiles × n_tiles` scatter grid (see
+/// [`TilePolicy`](super::TilePolicy)): tile `(ki, ni)` computes a
+/// partial product over the parent's `ki`-th k-range and `ni`-th column
+/// range. The 1-D column sharding of earlier revisions is the
+/// `k_tiles = 1` row of this grid ([`TileSlot::column`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileSlot {
+    /// This tile's k-range index (0-based).
+    pub ki: usize,
+    /// This tile's column-range index (0-based).
+    pub ni: usize,
+    /// Number of k-ranges the parent's reduction dimension was split into.
+    pub k_tiles: usize,
+    /// Number of column ranges the parent's output columns were split into.
+    pub n_tiles: usize,
+}
+
+impl TileSlot {
+    /// The slot of a pure column shard: tile `index` of a 1-D split into
+    /// `of` column ranges (no k-split) — the shape every pre-tiling
+    /// `ShardPolicy::Fixed` scatter produced.
+    pub fn column(index: usize, of: usize) -> TileSlot {
+        TileSlot { ki: 0, ni: index, k_tiles: 1, n_tiles: of }
+    }
+
+    /// Total tiles in the parent's scatter grid.
+    pub fn of(&self) -> usize {
+        self.k_tiles * self.n_tiles
+    }
+
+    /// Flat (ki, ni) row-major index of this tile within the grid —
+    /// the scatter submission order, used in `shard i/K` error context.
+    pub fn index(&self) -> usize {
+        self.ki * self.n_tiles + self.ni
+    }
+}
+
+/// Linkage of a tile sub-ticket to the logical job it was scattered
 /// from (see [`Coordinator::submit_job`](super::Coordinator::submit_job)
-/// and [`ShardPolicy`](super::ShardPolicy)): sharded GEMMs enter the
-/// queue as `of` independent tickets that workers execute like any other
-/// job; the parent [`JobHandle`] gathers them back in shard-index order.
+/// and [`TilePolicy`](super::TilePolicy)): tiled GEMMs enter the queue
+/// as `of` independent tickets that workers execute like any other job;
+/// the parent [`JobHandle`] gathers them back — add-reducing same-`ni`
+/// partial sums, then concatenating columns.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ShardInfo {
+pub struct TileInfo {
     /// Caller-chosen id of the logical (parent) job.
     pub parent: u64,
-    /// This shard's index within the scatter (0-based).
-    pub index: usize,
-    /// Total shards the parent was split into.
-    pub of: usize,
+    /// This tile's position in the parent's scatter grid.
+    pub slot: TileSlot,
 }
 
 /// One ticket's position in the job lifecycle (see the module docs for
@@ -345,11 +381,14 @@ pub struct JobHandle {
 enum HandleInner {
     /// One queue ticket, one completion slot.
     Single(Arc<HandleShared>),
-    /// Scatter–gather: `(first_column, shard_columns, handle)` per
-    /// shard, in shard-index order over the parent shape.
+    /// Scatter–gather: `(slot, first_column, tile_columns, handle)` per
+    /// tile, in (ki, ni) row-major order over the parent's tile grid.
+    /// `width` is the parent's operand width — with the parent shape's
+    /// `k` it bounds the accumulator range the add-reduce must respect.
     Gather {
         shape: GemmShape,
-        parts: Vec<(usize, usize, JobHandle)>,
+        width: u16,
+        parts: Vec<(TileSlot, usize, usize, JobHandle)>,
     },
 }
 
@@ -380,7 +419,7 @@ impl JobHandle {
             }
             HandleInner::Gather { parts, .. } => {
                 let mut any_shed = false;
-                for (_, _, h) in parts {
+                for (_, _, _, h) in parts {
                     match h.state() {
                         TicketState::Shed => any_shed = true,
                         TicketState::Done => {}
@@ -396,16 +435,18 @@ impl JobHandle {
         }
     }
 
-    /// Build the gather barrier over shard sub-handles (coordinator
-    /// scatter path). `parts` are `(first_column, shard_columns,
-    /// handle)` in shard-index order, tiling the parent shape's columns.
+    /// Build the gather barrier over tile sub-handles (coordinator
+    /// scatter path). `parts` are `(slot, first_column, tile_columns,
+    /// handle)` in (ki, ni) row-major order; `width` is the parent's
+    /// operand width, bounding the add-reduce accumulator range.
     pub(crate) fn gather(
         id: u64,
         shape: GemmShape,
-        parts: Vec<(usize, usize, JobHandle)>,
+        width: u16,
+        parts: Vec<(TileSlot, usize, usize, JobHandle)>,
     ) -> JobHandle {
-        debug_assert!(!parts.is_empty(), "gather of zero shards");
-        JobHandle { id, inner: HandleInner::Gather { shape, parts } }
+        debug_assert!(!parts.is_empty(), "gather of zero tiles");
+        JobHandle { id, inner: HandleInner::Gather { shape, width, parts } }
     }
 
     /// True once the result is available (non-blocking). A sharded
@@ -415,7 +456,7 @@ impl JobHandle {
             HandleInner::Single(shared) => {
                 shared.slot.lock().unwrap_or_else(|e| e.into_inner()).is_some()
             }
-            HandleInner::Gather { parts, .. } => parts.iter().all(|(_, _, h)| h.is_done()),
+            HandleInner::Gather { parts, .. } => parts.iter().all(|(_, _, _, h)| h.is_done()),
         }
     }
 
@@ -428,17 +469,17 @@ impl JobHandle {
             HandleInner::Single(shared) => {
                 shared.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
             }
-            HandleInner::Gather { shape, parts } => {
+            HandleInner::Gather { shape, width, parts } => {
                 if !self.is_done() {
                     return None;
                 }
                 let mut results = Vec::with_capacity(parts.len());
-                for (_, _, h) in parts {
+                for (_, _, _, h) in parts {
                     results.push(h.try_take()?);
                 }
-                let metas: Vec<(usize, usize)> =
-                    parts.iter().map(|(c, n, _)| (*c, *n)).collect();
-                Some(merge_shard_results(self.id, *shape, &metas, results))
+                let metas: Vec<(TileSlot, usize, usize)> =
+                    parts.iter().map(|(s, c, n, _)| (*s, *c, *n)).collect();
+                Some(merge_shard_results(self.id, *shape, *width, &metas, results))
             }
         }
     }
@@ -457,33 +498,40 @@ impl JobHandle {
                     slot = shared.done.wait(slot).unwrap_or_else(|e| e.into_inner());
                 }
             }
-            HandleInner::Gather { shape, parts } => {
-                let metas: Vec<(usize, usize)> =
-                    parts.iter().map(|(c, n, _)| (*c, *n)).collect();
+            HandleInner::Gather { shape, width, parts } => {
+                let metas: Vec<(TileSlot, usize, usize)> =
+                    parts.iter().map(|(s, c, n, _)| (*s, *c, *n)).collect();
                 let results: Vec<JobResult> =
-                    parts.into_iter().map(|(_, _, h)| h.wait()).collect();
-                merge_shard_results(self.id, shape, &metas, results)
+                    parts.into_iter().map(|(_, _, _, h)| h.wait()).collect();
+                merge_shard_results(self.id, shape, width, &metas, results)
             }
         }
     }
 }
 
-/// Merge shard results into the parent [`JobResult`] (gather half of
-/// scatter–gather). Outputs reassemble at their column offsets; cycles,
-/// instruction counts and retry counts roll up by summation; `queue_us`
-/// takes the maximum over shards, and `wall_us` is the **critical
-/// path**: shard wall shares are summed per worker region (shards that
-/// landed on the same region ran serially) and the largest per-region
-/// sum wins (distinct regions run concurrently). `worker` is the first
-/// shard's region and `batch_size` the largest batch any shard rode in.
-/// The first failed shard (by index) fails the parent with a
-/// `shard i/K` context prefix, and the merged output is withheld
-/// (partial results are not returned). A shard that was shed marks the
-/// merged result shed as well.
+/// Merge tile results into the parent [`JobResult`] (gather half of
+/// scatter–gather). Same-`ni` tiles — partial products over disjoint
+/// k-ranges of the same output columns — add-reduce element-wise in
+/// exact `i64` arithmetic with an accumulator-range check
+/// ([`add_reduce_partials`]; a violation fails the parent with an
+/// overflow error), then the reduced columns reassemble at their column
+/// offsets exactly like the pre-tiling 1-D merge (a `k_tiles = 1` grid
+/// skips the reduce entirely and is byte-identical to the old path).
+/// Cycles, instruction counts and retry counts roll up by summation;
+/// `queue_us` takes the maximum over tiles, and `wall_us` is the
+/// **critical path**: tile wall shares are summed per worker region
+/// (tiles that landed on the same region ran serially — across either
+/// grid axis) and the largest per-region sum wins (distinct regions run
+/// concurrently). `worker` is the first tile's region and `batch_size`
+/// the largest batch any tile rode in. The first failed tile (by flat
+/// grid index) fails the parent with a `shard i/K` context prefix, and
+/// the merged output is withheld (partial results are not returned). A
+/// tile that was shed marks the merged result shed as well.
 fn merge_shard_results(
     id: u64,
     shape: GemmShape,
-    metas: &[(usize, usize)],
+    width: u16,
+    metas: &[(TileSlot, usize, usize)],
     results: Vec<JobResult>,
 ) -> JobResult {
     let of = results.len();
@@ -494,10 +542,10 @@ fn merge_shard_results(
     let mut shed = false;
     let mut backend = results.first().and_then(|r| r.backend);
     let worker = results.first().map(|r| r.worker).unwrap_or(usize::MAX);
-    // Per-region wall accumulation (tiny shard counts — linear scan).
+    // Per-region wall accumulation (tiny tile counts — linear scan).
     let mut region_walls: Vec<(usize, f64)> = Vec::new();
     let mut error = None;
-    for (idx, r) in results.iter().enumerate() {
+    for ((slot, _, _), r) in metas.iter().zip(results.iter()) {
         stats.merge(&r.stats);
         queue_us = queue_us.max(r.queue_us);
         retries += r.retries;
@@ -508,24 +556,58 @@ fn merge_shard_results(
         }
         batch_size = batch_size.max(r.batch_size);
         if r.backend != backend {
-            // Shards landed on different region classes (legal for
+            // Tiles landed on different region classes (legal for
             // untagged jobs in a mixed pool): no single class applies.
             backend = None;
         }
         if error.is_none() {
             if let Some(e) = &r.error {
-                error = Some(format!("shard {idx}/{of}: {e}"));
+                error = Some(format!("shard {}/{of}: {e}", slot.index()));
             }
         }
     }
     let wall_us = region_walls.iter().map(|(_, w)| *w).fold(0.0f64, f64::max);
+    let k_tiles = metas.first().map(|(s, _, _)| s.k_tiles).unwrap_or(1);
     let output = if error.is_none() {
-        let parts: Vec<(usize, usize, Vec<i64>)> = metas
-            .iter()
-            .zip(results)
-            .map(|(&(col0, cols), r)| (col0, cols, r.output))
-            .collect();
-        merge_shard_outputs(shape, &parts)
+        let columns: Vec<(usize, usize, Vec<i64>)> = if k_tiles >= 2 {
+            // Group partial products by column range and add-reduce each
+            // group under the parent's logical accumulator range.
+            let bits = acc_bits(width, shape.k);
+            let mut outputs: Vec<Option<Vec<i64>>> =
+                results.into_iter().map(|r| Some(r.output)).collect();
+            let mut reduced = Vec::new();
+            for at in 0..metas.len() {
+                let (slot, col0, cols) = metas[at];
+                if slot.ki != 0 {
+                    continue; // reduced into the ki = 0 entry of its column
+                }
+                let partials: Vec<Vec<i64>> = metas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (s, _, _))| s.ni == slot.ni)
+                    .map(|(i, _)| outputs[i].take().expect("each tile reduced once"))
+                    .collect();
+                match add_reduce_partials(&partials, bits) {
+                    Ok(sum) => reduced.push((col0, cols, sum)),
+                    Err(e) => {
+                        error = Some(format!("gather: {e}"));
+                        break;
+                    }
+                }
+            }
+            reduced
+        } else {
+            metas
+                .iter()
+                .zip(results)
+                .map(|(&(_, col0, cols), r)| (col0, cols, r.output))
+                .collect()
+        };
+        if error.is_none() {
+            merge_shard_outputs(shape, &columns)
+        } else {
+            Vec::new()
+        }
     } else {
         Vec::new()
     };
@@ -634,12 +716,11 @@ pub struct Ticket {
     /// Micro-batching coalescing key derived from the job payload (and
     /// shard linkage, for sharded session jobs).
     pub key: BatchKey,
-    /// Set when this ticket is one shard of a scattered logical job:
-    /// the parent id, this shard's index, and the total shard count.
-    /// Workers treat shard tickets like any other job (class tags are
-    /// still respected); the linkage exists for the gather barrier and
-    /// for observability.
-    pub shard: Option<ShardInfo>,
+    /// Set when this ticket is one tile of a scattered logical job: the
+    /// parent id and this tile's (ki, ni) grid slot. Workers treat tile
+    /// tickets like any other job (class tags are still respected); the
+    /// linkage exists for the gather barrier and for observability.
+    pub shard: Option<TileInfo>,
     /// Execution attempts already completed (0 on first dispatch).
     pub attempt: u32,
     /// Worker regions that already failed this ticket — excluded from
@@ -827,7 +908,7 @@ impl Reservation {
         &mut self,
         job: Job,
         priority: u8,
-        shard: Option<ShardInfo>,
+        shard: Option<TileInfo>,
     ) -> Result<JobHandle> {
         if self.remaining == 0 {
             return Err(Error::Runtime("reservation exhausted".into()));
@@ -899,15 +980,15 @@ impl Scheduler {
     }
 
     /// [`submit_with_priority`](Self::submit_with_priority) for one
-    /// shard of a scattered logical job: the ticket carries the parent
+    /// tile of a scattered logical job: the ticket carries the parent
     /// linkage so workers and metrics can attribute it (coordinator
-    /// scatter path). Prefer committing shards against a
+    /// scatter path). Prefer committing tiles against a
     /// [`Reservation`] so the scatter admits atomically.
     pub(crate) fn submit_shard_with_priority(
         &self,
         job: Job,
         priority: u8,
-        shard: Option<ShardInfo>,
+        shard: Option<TileInfo>,
     ) -> Result<JobHandle> {
         self.submit_inner(job, priority, shard, false)
     }
@@ -916,7 +997,7 @@ impl Scheduler {
         &self,
         job: Job,
         priority: u8,
-        shard: Option<ShardInfo>,
+        shard: Option<TileInfo>,
         from_reservation: bool,
     ) -> Result<JobHandle> {
         let key = BatchKey::for_ticket(&job.kind, shard);
@@ -1572,16 +1653,17 @@ mod tests {
         let shape = GemmShape { m: 1, k: 2, n: 2 };
         let mut parts = Vec::new();
         for idx in 0..2usize {
+            let slot = TileSlot::column(idx, 2);
             let h = s
                 .submit_shard_with_priority(
                     tiny_job(40).with_deadline_us(0.0),
                     0,
-                    Some(ShardInfo { parent: 40, index: idx, of: 2 }),
+                    Some(TileInfo { parent: 40, slot }),
                 )
                 .unwrap();
-            parts.push((idx, 1usize, h));
+            parts.push((slot, idx, 1usize, h));
         }
-        let parent = JobHandle::gather(40, shape, parts);
+        let parent = JobHandle::gather(40, shape, 8, parts);
         // A non-blocking pop attempt sheds the expired tickets and
         // returns nothing.
         let key = BatchKey::for_ticket(&tiny_job(40).kind, None);
@@ -1780,16 +1862,13 @@ mod tests {
         // Two shards of logical job 7, one output column each.
         let mut parts = Vec::new();
         for idx in 0..2usize {
+            let slot = TileSlot::column(idx, 2);
             let h = s
-                .submit_shard_with_priority(
-                    tiny_job(7),
-                    0,
-                    Some(ShardInfo { parent: 7, index: idx, of: 2 }),
-                )
+                .submit_shard_with_priority(tiny_job(7), 0, Some(TileInfo { parent: 7, slot }))
                 .unwrap();
-            parts.push((idx, 1usize, h));
+            parts.push((slot, idx, 1usize, h));
         }
-        let parent = JobHandle::gather(7, shape, parts);
+        let parent = JobHandle::gather(7, shape, 8, parts);
         assert_eq!(parent.shard_count(), 2);
         assert_eq!(parent.state(), TicketState::Queued);
         assert!(!parent.is_done());
@@ -1797,7 +1876,8 @@ mod tests {
         for want_idx in 0..2usize {
             let t = s.pop_blocking().unwrap();
             let info = t.shard.expect("shard ticket carries linkage");
-            assert_eq!((info.parent, info.index, info.of), (7, want_idx, 2));
+            assert_eq!((info.parent, info.slot.index(), info.slot.of()), (7, want_idx, 2));
+            assert_eq!(info.slot, TileSlot::column(want_idx, 2));
             let mut r = ok_result(7);
             r.output = vec![10 + want_idx as i64]; // shard's single column
             r.stats.cycles = 100;
@@ -1827,16 +1907,13 @@ mod tests {
         let shape = GemmShape { m: 1, k: 2, n: 2 };
         let mut parts = Vec::new();
         for idx in 0..2usize {
+            let slot = TileSlot::column(idx, 2);
             let h = s
-                .submit_shard_with_priority(
-                    tiny_job(8),
-                    0,
-                    Some(ShardInfo { parent: 8, index: idx, of: 2 }),
-                )
+                .submit_shard_with_priority(tiny_job(8), 0, Some(TileInfo { parent: 8, slot }))
                 .unwrap();
-            parts.push((idx, 1usize, h));
+            parts.push((slot, idx, 1usize, h));
         }
-        let parent = JobHandle::gather(8, shape, parts);
+        let parent = JobHandle::gather(8, shape, 8, parts);
         for idx in 0..2usize {
             let t = s.pop_blocking().unwrap();
             let mut r = ok_result(8);
@@ -1854,21 +1931,14 @@ mod tests {
     fn one_failed_shard_fails_the_parent_with_context() {
         let s = sched(SchedulerConfig::default());
         let shape = GemmShape { m: 1, k: 2, n: 2 };
+        let (s0, s1) = (TileSlot::column(0, 2), TileSlot::column(1, 2));
         let h0 = s
-            .submit_shard_with_priority(
-                tiny_job(9),
-                0,
-                Some(ShardInfo { parent: 9, index: 0, of: 2 }),
-            )
+            .submit_shard_with_priority(tiny_job(9), 0, Some(TileInfo { parent: 9, slot: s0 }))
             .unwrap();
         let h1 = s
-            .submit_shard_with_priority(
-                tiny_job(9),
-                0,
-                Some(ShardInfo { parent: 9, index: 1, of: 2 }),
-            )
+            .submit_shard_with_priority(tiny_job(9), 0, Some(TileInfo { parent: 9, slot: s1 }))
             .unwrap();
-        let parent = JobHandle::gather(9, shape, vec![(0, 1, h0), (1, 1, h1)]);
+        let parent = JobHandle::gather(9, shape, 8, vec![(s0, 0, 1, h0), (s1, 1, 1, h1)]);
         let t0 = s.pop_blocking().unwrap();
         let t1 = s.pop_blocking().unwrap();
         t0.complete(ok_result(9));
@@ -1878,6 +1948,70 @@ mod tests {
         assert!(err.contains("shard 1/2"), "missing shard context: {err}");
         assert!(err.contains("abandoned"), "missing cause: {err}");
         assert!(merged.output.is_empty(), "no partial output on failure");
+    }
+
+    /// Submit a full 2×2 tile grid for `parent`, then complete each tile
+    /// with the output chosen by `value(slot)` (looked up from the popped
+    /// ticket's linkage, so pop order does not matter).
+    fn run_grid_2x2(
+        s: &Scheduler,
+        parent: u64,
+        value: impl Fn(TileSlot) -> i64,
+    ) -> JobResult {
+        let shape = GemmShape { m: 1, k: 2, n: 2 };
+        let mut parts = Vec::new();
+        for ki in 0..2usize {
+            for ni in 0..2usize {
+                let slot = TileSlot { ki, ni, k_tiles: 2, n_tiles: 2 };
+                let h = s
+                    .submit_shard_with_priority(tiny_job(parent), 0, Some(TileInfo { parent, slot }))
+                    .unwrap();
+                parts.push((slot, ni, 1usize, h));
+            }
+        }
+        let handle = JobHandle::gather(parent, shape, 8, parts);
+        for _ in 0..4 {
+            let t = s.pop_blocking().unwrap();
+            let slot = t.shard.expect("tile ticket carries linkage").slot;
+            assert_eq!((slot.k_tiles, slot.n_tiles, slot.of()), (2, 2, 4));
+            let mut r = ok_result(parent);
+            r.output = vec![value(slot)];
+            r.stats.cycles = 100;
+            t.complete(r);
+        }
+        handle.wait()
+    }
+
+    #[test]
+    fn ktiled_gather_add_reduces_same_column_partials() {
+        // 2×2 grid: same-ni tiles are partial sums over disjoint
+        // k-ranges and must add element-wise; columns then concat.
+        let s = sched(SchedulerConfig::default());
+        let vals = |slot: TileSlot| match (slot.ki, slot.ni) {
+            (0, 0) => 5,
+            (0, 1) => 7,
+            (1, 0) => -2, // negative accumuland cancels into column 0
+            _ => 3,
+        };
+        let merged = run_grid_2x2(&s, 50, vals);
+        assert!(merged.error.is_none(), "{:?}", merged.error);
+        assert_eq!(merged.output, vec![3, 10], "partials add, then columns concat");
+        assert_eq!(merged.shards, 4, "fan-out counts the whole grid");
+        assert_eq!(merged.stats.cycles, 400, "all four tiles roll up");
+    }
+
+    #[test]
+    fn ktiled_gather_rejects_partial_sum_overflow() {
+        // tiny_job is width 8 over k = 2: the logical accumulator is
+        // acc_bits(8, 2) = 17 bits. Fabricated tile results far outside
+        // that range must fail the gather with an overflow error, not
+        // deliver a wrapped or out-of-range merged output.
+        let s = sched(SchedulerConfig::default());
+        let merged = run_grid_2x2(&s, 51, |_| 1 << 40);
+        let err = merged.error.as_deref().unwrap_or("");
+        assert!(err.contains("overflow"), "expected overflow rejection: {err}");
+        assert!(merged.output.is_empty(), "no partial output on overflow");
+        assert_eq!(merged.shards, 4, "roll-ups still describe the grid");
     }
 
     #[test]

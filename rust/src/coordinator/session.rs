@@ -37,10 +37,11 @@
 //! # Ok::<(), picaso::Error>(())
 //! ```
 
+use super::scheduler::TileSlot;
 use crate::array::{ArrayGeometry, RunStats};
 use crate::backend::{BackendClass, PimBackend};
 use crate::compiler::{
-    slice_b_cols, slice_staging_table, split_shape_n, GemmPlan, GemmShape, PimCompiler,
+    slice_b_block, slice_staging_table_kn, split_axis, GemmPlan, GemmShape, PimCompiler,
 };
 use crate::{Error, Result};
 
@@ -101,6 +102,29 @@ pub struct ModelSession {
     /// `slices·q`) for output element `local` of one job.
     b_rows: Vec<Vec<i64>>,
     geom: ArrayGeometry,
+    /// Activation window `(k0, parent_k)`: callers always pass the
+    /// parent's **full** `m×parent_k` activations, and the fill stage
+    /// reads the `[k0, k0 + plan.shape.k)` column window per row. A
+    /// whole session (and any pure column shard) has `(0, k)`; a k-tile
+    /// view offsets into the parent's reduction range — so scattered
+    /// tiles of one job all receive identical activation payloads and
+    /// slicing happens at the (already per-lane) fill, keeping weight
+    /// staging memcpy-only.
+    a_view: (usize, usize),
+}
+
+/// Resolve a grid slot against a parent shape: the tile's k-range and
+/// column-range `(k0, kk, col0, nn)`.
+fn tile_ranges(shape: GemmShape, slot: TileSlot) -> Result<(usize, usize, usize, usize)> {
+    let krs = split_axis(shape.k, slot.k_tiles);
+    let nrs = split_axis(shape.n, slot.n_tiles);
+    match (krs.get(slot.ki), nrs.get(slot.ni)) {
+        (Some(&(k0, kk)), Some(&(col0, nn))) => Ok((k0, kk, col0, nn)),
+        _ => Err(Error::Config(format!(
+            "tile slot ({}, {}) of a {}x{} grid out of range for session shape {}x{}x{}",
+            slot.ki, slot.ni, slot.k_tiles, slot.n_tiles, shape.m, shape.k, shape.n
+        ))),
+    }
 }
 
 impl ModelSession {
@@ -124,7 +148,7 @@ impl ModelSession {
             }
             b_rows.push(lanes);
         }
-        Ok(Self { plan, b_rows, geom })
+        Ok(Self { plan, b_rows, geom, a_view: (0, k) })
     }
 
     /// The pinned compiled plan.
@@ -133,70 +157,86 @@ impl ModelSession {
     }
 
     /// Prepare **only** the shard view for partition slot `(index, of)`
-    /// of the [`split_shape_n`] column partition, without materializing
-    /// the whole session's staging table first: the shard's weight
-    /// columns are sliced from the spec ([`slice_b_cols`]) and staged
-    /// for the sub-shape directly. This is what a worker that only ever
-    /// serves one partition slot of a session uses — it pays `1/of` of
-    /// the staging cost and memory instead of the full table plus a
-    /// slice.
+    /// of the 1-D column partition — [`prepare_tile`](Self::prepare_tile)
+    /// for the `k_tiles = 1` slot [`TileSlot::column`]`(index, of)`.
     pub fn prepare_shard(
         compiler: &PimCompiler,
         spec: &SessionSpec,
         index: usize,
         of: usize,
     ) -> Result<ModelSession> {
+        Self::prepare_tile(compiler, spec, TileSlot::column(index, of))
+    }
+
+    /// Prepare **only** the tile view for grid slot `(ki, ni)`, without
+    /// materializing the whole session's staging table first: the
+    /// tile's weight block — k-rows `[k0, k0+kk)` × its column range —
+    /// is sliced from the spec ([`slice_b_block`]) and staged for the
+    /// sub-shape directly. This is what a worker that only ever serves
+    /// one grid slot of a session uses — it pays `1/(k_tiles·n_tiles)`
+    /// of the staging cost and memory instead of the full table plus a
+    /// slice. A k-tile view still takes the parent's **full**
+    /// activations at inference and windows them per row at fill time.
+    pub fn prepare_tile(
+        compiler: &PimCompiler,
+        spec: &SessionSpec,
+        slot: TileSlot,
+    ) -> Result<ModelSession> {
         spec.validate()?;
-        let parts = split_shape_n(spec.shape, of);
-        let &(col0, sshape) = parts.get(index).ok_or_else(|| {
-            Error::Config(format!(
-                "shard slot {index}/{of} out of range for session shape {}x{}x{}",
-                spec.shape.m, spec.shape.k, spec.shape.n
-            ))
-        })?;
+        let (k0, kk, col0, nn) = tile_ranges(spec.shape, slot)?;
         let sub = SessionSpec {
-            shape: sshape,
+            shape: GemmShape { m: spec.shape.m, k: kk, n: nn },
             width: spec.width,
-            weights: slice_b_cols(spec.shape, &spec.weights, col0, sshape.n),
+            weights: slice_b_block(spec.shape, &spec.weights, k0, kk, col0, nn),
             backend: spec.backend,
         };
-        Self::prepare(compiler, &sub)
+        let mut view = Self::prepare(compiler, &sub)?;
+        view.a_view = (k0, spec.shape.k);
+        Ok(view)
     }
 
     /// Derive the shard view for partition slot `(index, of)` of the
-    /// [`split_shape_n`] column partition: a self-contained session
-    /// whose plan is compiled for the shard's `{m, k, nn}` sub-shape
-    /// and whose staging table is **sliced** from this session's pinned
-    /// table ([`slice_staging_table`]) — no weight re-gathering, so
-    /// sharded session inference keeps the memcpy-only staging property.
-    /// Equivalent to [`prepare_shard`](Self::prepare_shard) but cheaper
-    /// when the whole-session table is already pinned (it reuses it
-    /// instead of re-staging from the weights). This is what lets
-    /// pinned-weight (session) jobs scatter across worker regions
-    /// exactly like ad-hoc GEMMs.
+    /// 1-D column partition — [`tile`](Self::tile) for the `k_tiles = 1`
+    /// slot [`TileSlot::column`]`(index, of)`.
     pub fn shard(&self, compiler: &PimCompiler, index: usize, of: usize) -> Result<ModelSession> {
+        self.tile(compiler, TileSlot::column(index, of))
+    }
+
+    /// Derive the tile view for grid slot `(ki, ni)`: a self-contained
+    /// session whose plan is compiled for the tile's `{m, kk, nn}`
+    /// sub-shape and whose staging table is **sliced** from this
+    /// session's pinned table ([`slice_staging_table_kn`] — one
+    /// `copy_from_slice` per output element, no weight re-gathering),
+    /// so tiled session inference keeps the memcpy-only staging
+    /// property. Equivalent to [`prepare_tile`](Self::prepare_tile) but
+    /// cheaper when the whole-session table is already pinned (it
+    /// reuses it instead of re-staging from the weights). This is what
+    /// lets pinned-weight (session) jobs scatter across worker regions
+    /// exactly like ad-hoc GEMMs — including along the reduction
+    /// dimension, for weight tables deeper than one region can stage.
+    pub fn tile(&self, compiler: &PimCompiler, slot: TileSlot) -> Result<ModelSession> {
         if compiler.geometry().rows != self.geom.rows
             || compiler.geometry().row_lanes() != self.geom.row_lanes()
         {
             return Err(Error::Config(format!(
-                "shard view compiler geometry {}x{} does not match the session's {}x{}",
+                "tile view compiler geometry {}x{} does not match the session's {}x{}",
                 compiler.geometry().rows,
                 compiler.geometry().row_lanes(),
                 self.geom.rows,
                 self.geom.row_lanes()
             )));
         }
-        let parts = split_shape_n(self.plan.shape, of);
-        let &(col0, sshape) = parts.get(index).ok_or_else(|| {
-            Error::Config(format!(
-                "shard slot {index}/{of} out of range for session shape \
-                 {}x{}x{}",
-                self.plan.shape.m, self.plan.shape.k, self.plan.shape.n
-            ))
-        })?;
+        if self.a_view != (0, self.plan.shape.k) {
+            return Err(Error::Config(
+                "cannot derive a tile view from a tile view; tile the parent session".into(),
+            ));
+        }
+        let (k0, kk, col0, nn) = tile_ranges(self.plan.shape, slot)?;
+        let sshape = GemmShape { m: self.plan.shape.m, k: kk, n: nn };
         let plan = compiler.gemm(sshape, self.plan.width)?;
-        let b_rows = slice_staging_table(self.plan.shape, &self.b_rows, col0, sshape.n);
-        Ok(ModelSession { plan, b_rows, geom: self.geom })
+        let q = self.geom.row_lanes();
+        let b_rows = slice_staging_table_kn(self.plan.shape, &self.b_rows, q, k0, kk, col0, nn);
+        Ok(ModelSession { plan, b_rows, geom: self.geom, a_view: (k0, self.plan.shape.k) })
     }
 
     /// The geometry this session's staging table was built for.
@@ -234,10 +274,14 @@ impl ModelSession {
             )));
         }
         let GemmShape { m, k, n } = self.plan.shape;
+        // Activations are validated (and indexed) against the PARENT
+        // reduction length: a k-tile view receives the same full-length
+        // activation payload as every sibling and windows it per row.
+        let (k0, parent_k) = self.a_view;
         for (t, a) in acts.iter().enumerate() {
-            if a.len() != m * k {
+            if a.len() != m * parent_k {
                 return Err(Error::Compile(format!(
-                    "batch item {t}: activation size {} does not match shape {m}x{k}x{n}",
+                    "batch item {t}: activation size {} does not match shape {m}x{parent_k}x{n}",
                     a.len()
                 )));
             }
@@ -256,7 +300,7 @@ impl ModelSession {
                 for (lane, slot) in lanes.iter_mut().enumerate() {
                     let kk = s * q + lane;
                     if kk < k {
-                        *slot = a[i * k + kk];
+                        *slot = a[i * parent_k + k0 + kk];
                     }
                 }
             },
@@ -390,6 +434,65 @@ mod tests {
         assert!(ModelSession::prepare_shard(&compiler, &sp, 7, 7).is_err());
         let wrong = PimCompiler::new(ArrayGeometry::new(4, 1));
         assert!(session.shard(&wrong, 0, 2).is_err());
+    }
+
+    #[test]
+    fn tile_views_partition_k_and_n_bit_exact() {
+        use crate::compiler::{acc_bits, add_reduce_partials, merge_shard_outputs, split_axis};
+        let geom = ArrayGeometry::new(2, 1); // q = 16: k = 20 spans 2 slices
+        let shape = GemmShape { m: 3, k: 20, n: 7 };
+        let sp = spec(shape, 0x7EE7);
+        let compiler = PimCompiler::new(geom);
+        let session = ModelSession::prepare(&compiler, &sp).unwrap();
+        let mut rng = Xoshiro256::seeded(0x22);
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        let expect = gemm_ref(shape, &a, &sp.weights);
+        let bits = acc_bits(8, shape.k);
+        // 2-D grids, ragged on both axes: every tile view gets the FULL
+        // activations, computes its k-window partial, and the host
+        // add-reduce + column concat reproduces the parent bit-exactly.
+        for (kt, nt) in [(2usize, 2usize), (3, 1), (2, 7), (20, 3)] {
+            let mut columns = Vec::new();
+            for (ni, &(col0, nn)) in split_axis(shape.n, nt).iter().enumerate() {
+                let mut partials = Vec::new();
+                for ki in 0..split_axis(shape.k, kt).len() {
+                    let slot = TileSlot { ki, ni, k_tiles: kt, n_tiles: nt };
+                    let view = session.tile(&compiler, slot).unwrap();
+                    let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+                    let (c, _) = view.infer(&mut arr, &a).unwrap();
+                    // Staging the tile directly from the spec (no base
+                    // table) must be bit-identical to slicing the
+                    // pinned table — the memcpy-only staging contract.
+                    let direct = ModelSession::prepare_tile(&compiler, &sp, slot).unwrap();
+                    assert_eq!(direct.plan().shape, view.plan().shape);
+                    let mut arr2 = PimArray::new(geom, PipelineConfig::FullPipe);
+                    let (c2, _) = direct.infer(&mut arr2, &a).unwrap();
+                    assert_eq!(c, c2, "prepare_tile == tile, slot ({ki}, {ni}) of {kt}x{nt}");
+                    partials.push(c);
+                }
+                columns.push((col0, nn, add_reduce_partials(&partials, bits).unwrap()));
+            }
+            assert_eq!(merge_shard_outputs(shape, &columns), expect, "grid {kt}x{nt}");
+        }
+        // A k-tile view insists on full-length parent activations.
+        let ktile = TileSlot { ki: 1, ni: 0, k_tiles: 2, n_tiles: 1 };
+        let view = session.tile(&compiler, ktile).unwrap();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let err = view.infer(&mut arr, &a[..shape.m * 10]).unwrap_err();
+        assert!(err.to_string().contains("activation size"), "{err}");
+        // Tiling a k-tile view again is rejected (its activation window
+        // no longer covers the parent); out-of-range grid slots too.
+        assert!(view.tile(&compiler, TileSlot::column(0, 2)).is_err());
+        assert!(session
+            .tile(&compiler, TileSlot { ki: 2, ni: 0, k_tiles: 2, n_tiles: 1 })
+            .is_err());
+        assert!(ModelSession::prepare_tile(
+            &compiler,
+            &sp,
+            TileSlot { ki: 0, ni: 7, k_tiles: 1, n_tiles: 7 }
+        )
+        .is_err());
     }
 
     #[test]

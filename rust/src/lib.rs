@@ -96,7 +96,8 @@ pub mod prelude {
     pub use crate::coordinator::{
         BackendHook, BackoffPolicy, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig,
         Job, JobHandle, JobKind, JobResult, ModelSession, QuarantinePolicy, QueuePolicy,
-        RegionSpec, RetryPolicy, SchedulerConfig, SessionId, ShardInfo, ShardPolicy, TicketState,
+        RegionSpec, RetryPolicy, SchedulerConfig, SessionId, ShardPolicy, TicketState, TileInfo,
+        TilePolicy, TileSlot,
     };
     pub use crate::custom::{CustomRegion, CustomTile};
     pub use crate::model::{

@@ -263,11 +263,19 @@ struct ServingInner {
     depth_signal: f64,
     depth_signal_at: Option<Instant>,
     /// Shards-per-job distribution, recorded once per *logical*
-    /// submission (1 for unsharded jobs).
+    /// submission (1 for unsharded jobs). Under 2-D tiling this is the
+    /// total tile count, `k_tiles * n_tiles`.
     shard_count: OnlineStats,
     /// Logical jobs that were scattered into >= 2 shards.
     sharded_jobs: u64,
     max_shards: u64,
+    /// k-tiles-per-job distribution, recorded once per *logical*
+    /// submission (1 for jobs not split along the reduction dimension).
+    tile_count: OnlineStats,
+    /// Logical jobs split along `k` (>= 2 k-tiles), i.e. jobs whose
+    /// gather took the partial-sum add-reduce path.
+    ktiled_jobs: u64,
+    max_k_tiles: u64,
     /// Failure-domain retries: tickets re-queued after a transient
     /// region failure (counted once per retry, not per job).
     retries: u64,
@@ -371,6 +379,20 @@ impl ServingMetrics {
         g.max_shards = g.max_shards.max(shards as u64);
         if shards >= 2 {
             g.sharded_jobs += 1;
+        }
+    }
+
+    /// Record the k-tile count of one logical job submission (1 for a
+    /// job not split along the reduction dimension). Feeds the
+    /// tiles-per-job track of the snapshot — the lane that shows whether
+    /// deep-k jobs are actually taking the partial-sum gather path.
+    pub fn record_tiles(&self, k_tiles: usize) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.tile_count.push(k_tiles as f64);
+        g.max_k_tiles = g.max_k_tiles.max(k_tiles as u64);
+        if k_tiles >= 2 {
+            g.ktiled_jobs += 1;
         }
     }
 
@@ -558,6 +580,9 @@ impl ServingMetrics {
             mean_shards: g.shard_count.mean(),
             max_shards: g.max_shards,
             sharded_jobs: g.sharded_jobs,
+            mean_k_tiles: g.tile_count.mean(),
+            max_k_tiles: g.max_k_tiles,
+            ktiled_jobs: g.ktiled_jobs,
             retries: g.retries,
             sheds: g.sheds,
             quarantines: g.quarantines,
@@ -659,6 +684,15 @@ pub struct MetricsSnapshot {
     pub max_shards: u64,
     /// Logical jobs scattered into >= 2 shards.
     pub sharded_jobs: u64,
+    /// Mean k-tiles per logical job submission (1.0 when nothing was
+    /// split along `k`; 0.0 when no submission went through a
+    /// coordinator).
+    pub mean_k_tiles: f64,
+    /// Largest reduction-dimension split of any logical job.
+    pub max_k_tiles: u64,
+    /// Logical jobs split along the reduction dimension (>= 2 k-tiles),
+    /// i.e. jobs whose gather add-reduced partial sums.
+    pub ktiled_jobs: u64,
     /// Failure-domain retries: tickets re-queued after a transient
     /// region failure. Nonzero with zero `errors` means faults were
     /// fully absorbed by retry.
@@ -724,6 +758,12 @@ impl MetricsSnapshot {
             out.push_str(&format!(
                 "\nsharding    {} jobs scattered, mean {:.2} shards/job, max fan-out {}",
                 self.sharded_jobs, self.mean_shards, self.max_shards,
+            ));
+        }
+        if self.ktiled_jobs > 0 {
+            out.push_str(&format!(
+                "\ntiling      {} jobs k-split, mean {:.2} k-tiles/job, max k-split {}",
+                self.ktiled_jobs, self.mean_k_tiles, self.max_k_tiles,
             ));
         }
         if self.retries > 0 || self.sheds > 0 || self.quarantines > 0 {
@@ -871,6 +911,28 @@ mod tests {
         let quiet = ServingMetrics::new();
         quiet.record_shards(1);
         assert!(!quiet.snapshot().render().contains("sharding"));
+    }
+
+    #[test]
+    fn k_tiles_per_job_track() {
+        let m = ServingMetrics::new();
+        m.record_tiles(1);
+        m.record_tiles(3);
+        m.record_tiles(2);
+        let s = m.snapshot();
+        assert_eq!(s.ktiled_jobs, 2, "only k-splits >= 2 count as k-tiled");
+        assert_eq!(s.max_k_tiles, 3);
+        assert!((s.mean_k_tiles - 2.0).abs() < 1e-9);
+        let text = s.render();
+        assert!(text.contains("tiling"), "{text}");
+        // Column-sharding-only windows keep the tiling line out.
+        let quiet = ServingMetrics::new();
+        quiet.record_shards(4);
+        quiet.record_tiles(1);
+        let qs = quiet.snapshot();
+        assert_eq!(qs.sharded_jobs, 1);
+        assert_eq!(qs.ktiled_jobs, 0);
+        assert!(!qs.render().contains("tiling"));
     }
 
     #[test]

@@ -64,6 +64,9 @@ fn sharded_gemm_bit_exact_across_pools_and_shard_counts() {
             assert_eq!(r.output, expect, "{name} {policy:?} must match gemm_ref");
             let want_shards = match policy {
                 ShardPolicy::Fixed(k) => k.min(shape.n),
+                ShardPolicy::Grid { k_tiles, n_tiles } => {
+                    k_tiles.min(shape.k) * n_tiles.min(shape.n)
+                }
                 ShardPolicy::Auto => nregions,
                 ShardPolicy::None => 1,
             };
@@ -231,6 +234,9 @@ fn sharded_session_jobs_bit_exact_across_pools() {
             let h = coord.submit_job(job).unwrap();
             let want_shards = match policy {
                 ShardPolicy::Fixed(k) => k.min(shape.n),
+                ShardPolicy::Grid { k_tiles, n_tiles } => {
+                    k_tiles.min(shape.k) * n_tiles.min(shape.n)
+                }
                 ShardPolicy::Auto => 2,
                 ShardPolicy::None => 1,
             };

@@ -1,0 +1,285 @@
+//! 2-D tiled scatter–gather: one logical GEMM split into a
+//! `k_tiles × n_tiles` grid of tile tickets, executed across worker
+//! regions, and gathered back bit-exact — same-column partial sums
+//! add-reduce before the column ranges concatenate. Covers ad-hoc and
+//! pinned-session paths on overlay, custom and mixed pools, ragged and
+//! oversubscribed grids, overflow rejection, fault-injected retry of
+//! grid tiles, and tile/batch interaction.
+
+use picaso::arch::CustomDesign;
+use picaso::backend::{FaultInjector, FaultPlan};
+use picaso::compiler::{add_reduce_partials, gemm_ref, gemm_ref_checked, GemmShape};
+use picaso::coordinator::{
+    BackendHook, BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, RegionSpec,
+    TilePolicy,
+};
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn gemm_job(id: u64, shape: GemmShape, width: u16, seed: u64) -> (Job, Vec<i64>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut a = vec![0i64; shape.m * shape.k];
+    let mut b = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut a, u32::from(width));
+    rng.fill_signed(&mut b, u32::from(width));
+    let expect = gemm_ref(shape, &a, &b);
+    (Job::new(id, JobKind::Gemm { shape, width, a, b }), expect)
+}
+
+fn pool(regions: Vec<RegionSpec>) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        geom: ArrayGeometry::new(2, 1),
+        regions,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// The acceptance matrix: seeded random GEMMs over a sweep of shapes,
+/// widths and tile grids — square, ragged (axis % tiles != 0) and
+/// oversubscribed (tiles > axis, clamped) — on overlay-only,
+/// custom-only and mixed pools, through BOTH the ad-hoc operand-slicing
+/// path and the pinned-session staging-table path. Every gathered
+/// output must be bit-exact against the scalar i64 reference.
+#[test]
+fn tiled_gemm_bit_exact_across_pools_grids_and_paths() {
+    let overlay = RegionSpec { kind: ArchKind::PICASO_F, count: 1 };
+    let comefa = RegionSpec { kind: ArchKind::Custom(CustomDesign::CoMeFaA), count: 1 };
+    let pools: Vec<(&str, Vec<RegionSpec>)> = vec![
+        ("overlay-only", vec![RegionSpec { count: 2, ..overlay }]),
+        ("custom-only", vec![RegionSpec { count: 2, ..comefa }]),
+        ("mixed", vec![overlay, comefa]),
+    ];
+    // (shape, width, grids): k = 20 spans multiple row slices on the
+    // 2x1 test geometry, so k-splits cut real slice boundaries; 7 and
+    // 20 are both ragged against 3; (100, 100) oversubscribes both
+    // axes and must clamp to (k, n).
+    let cases: Vec<(GemmShape, u16, Vec<(usize, usize)>)> = vec![
+        (GemmShape { m: 2, k: 20, n: 7 }, 8, vec![(2, 2), (3, 3), (20, 1), (100, 100)]),
+        (GemmShape { m: 3, k: 9, n: 4 }, 4, vec![(2, 3), (9, 4)]),
+        (GemmShape { m: 1, k: 12, n: 2 }, 6, vec![(5, 2)]),
+    ];
+    for (pname, regions) in pools {
+        let coord = pool(regions);
+        let mut rng = Xoshiro256::seeded(0x711E5);
+        let mut id = 0u64;
+        for (shape, width, grids) in &cases {
+            let mut weights = vec![0i64; shape.k * shape.n];
+            rng.fill_signed(&mut weights, u32::from(*width));
+            let sid = coord.open_session(*shape, *width, weights.clone()).unwrap();
+            for &(kt, nt) in grids {
+                let policy = TilePolicy::Grid { k_tiles: kt, n_tiles: nt };
+                let ctx = format!("{pname} {shape:?} w{width} grid {kt}x{nt}");
+                let want_tiles = kt.min(shape.k) * nt.min(shape.n);
+                // Ad-hoc: tiles carry sliced A columns and B blocks.
+                let (job, expect) = gemm_job(id, *shape, *width, 0xAD0C + id);
+                let r = coord.submit_job(job.with_shards(policy)).unwrap().wait();
+                assert!(r.error.is_none(), "{ctx} ad-hoc: {:?}", r.error);
+                assert_eq!(r.output, expect, "{ctx} ad-hoc must match gemm_ref");
+                assert_eq!(r.shards, want_tiles, "{ctx} ad-hoc");
+                assert!(r.stats.cycles > 0, "{ctx}: tile cycles roll up");
+                // Session: tiles carry full activations; workers window
+                // them and slice the pinned staging table per slot.
+                let mut a = vec![0i64; shape.m * shape.k];
+                rng.fill_signed(&mut a, u32::from(*width));
+                let expect = gemm_ref(*shape, &a, &weights);
+                let job = Job::new(id + 1, JobKind::SessionGemm { session: sid, a })
+                    .with_shards(policy);
+                let r = coord.submit_job(job).unwrap().wait();
+                assert!(r.error.is_none(), "{ctx} session: {:?}", r.error);
+                assert_eq!(r.output, expect, "{ctx} session must match gemm_ref");
+                assert_eq!(r.shards, want_tiles, "{ctx} session");
+                id += 2;
+            }
+            coord.close_session(sid);
+        }
+        let snap = coord.metrics_snapshot();
+        assert!(snap.ktiled_jobs > 0, "{pname}: k-splits must hit the tiling lane");
+        assert!(snap.max_k_tiles >= 20, "{pname}: clamped k-split recorded");
+        coord.shutdown();
+    }
+}
+
+/// The headline capability: a session whose weight table is far deeper
+/// (k = 96 on a 2-lane test geometry, 48 row slices) than any single
+/// tile's sub-table executes bit-exact when split along k — each tile
+/// stages only its k-range, computes a partial product, and the gather
+/// add-reduces. Repeat submissions reuse the per-worker
+/// `(session, tile-slot)` caches and must stay bit-exact every round.
+#[test]
+fn deep_k_session_tiles_reuse_cache_bit_exact() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 3,
+        geom: ArrayGeometry::new(2, 1),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 96, n: 5 };
+    let mut rng = Xoshiro256::seeded(0xDEE9);
+    let mut weights = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut weights, 8);
+    let sid = coord.open_session(shape, 8, weights.clone()).unwrap();
+    for round in 0..3u64 {
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        let expect = gemm_ref(shape, &a, &weights);
+        let job = Job::new(round, JobKind::SessionGemm { session: sid, a })
+            .with_shards(TilePolicy::Grid { k_tiles: 4, n_tiles: 2 });
+        let r = coord.submit_job(job).unwrap().wait();
+        assert!(r.error.is_none(), "round {round}: {:?}", r.error);
+        assert_eq!(r.output, expect, "round {round} (cached tile views)");
+        assert_eq!(r.shards, 8, "round {round}");
+    }
+    // All-negative operands: partial sums accumulate negative values
+    // through the same add-reduce path.
+    let a = vec![-3i64; shape.m * shape.k];
+    let expect = gemm_ref(shape, &a, &weights);
+    let job = Job::new(9, JobKind::SessionGemm { session: sid, a })
+        .with_shards(TilePolicy::Grid { k_tiles: 6, n_tiles: 1 });
+    let r = coord.submit_job(job).unwrap().wait();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.output, expect, "negative accumulands add-reduce bit-exact");
+    coord.shutdown();
+}
+
+/// A single-tile grid is the degenerate case: no scatter, no gather, no
+/// tiling metrics — byte-identical behaviour to an untiled submission.
+#[test]
+fn single_tile_grid_degenerates_to_unsharded() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 8, n: 3 };
+    let (job, expect) = gemm_job(0, shape, 8, 0x0DE6);
+    let h = coord
+        .submit_job(job.with_shards(TilePolicy::Grid { k_tiles: 1, n_tiles: 1 }))
+        .unwrap();
+    assert_eq!(h.shard_count(), 1);
+    let r = h.wait();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.output, expect);
+    assert_eq!(r.shards, 1);
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.sharded_jobs, 0, "a 1x1 grid never counts as scattered");
+    assert_eq!(snap.ktiled_jobs, 0);
+    // The normalizing constructor agrees.
+    assert_eq!(TilePolicy::grid(1, 1), TilePolicy::None);
+    coord.shutdown();
+}
+
+/// Failure-domain retry inside a 2-D scatter: with a poisoned region in
+/// the pool, the tiles that land there fail transiently, re-queue with
+/// that region excluded, and the grid still gathers bit-exact — the
+/// parent result reports the retries its tiles consumed.
+#[test]
+fn grid_tiles_survive_poisoned_region_bit_exact() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 3,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy::disabled(),
+        backend_hook: Some(BackendHook(Arc::new(|widx, inner| {
+            if widx == 0 {
+                Box::new(FaultInjector::new(inner, FaultPlan::Poisoned))
+            } else {
+                inner
+            }
+        }))),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 20, n: 6 };
+    let mut rng = Xoshiro256::seeded(0xFA17);
+    let mut weights = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut weights, 8);
+    let sid = coord.open_session(shape, 8, weights.clone()).unwrap();
+    let mut total_retries = 0u32;
+    for i in 0..6u64 {
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        let (job, expect) = if i % 2 == 0 {
+            gemm_job(i, shape, 8, 0xF00 + i)
+        } else {
+            let expect = gemm_ref(shape, &a, &weights);
+            (Job::new(i, JobKind::SessionGemm { session: sid, a }), expect)
+        };
+        let r = coord
+            .submit_job(job.with_shards(TilePolicy::Grid { k_tiles: 2, n_tiles: 2 }))
+            .unwrap()
+            .wait();
+        assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+        assert_eq!(r.output, expect, "job {i} bit-exact after tile retry");
+        assert_eq!(r.shards, 4, "job {i}");
+        total_retries += r.retries;
+    }
+    assert!(
+        total_retries > 0,
+        "a poisoned region must have cost at least one tile retry"
+    );
+    coord.shutdown();
+}
+
+/// Tile/batch interaction: sibling tiles of one logical job must never
+/// coalesce into one micro-batch (they would serialize on one region,
+/// defeating the scatter), so on a single worker with a generous batch
+/// window a 2x2 grid still executes as four separate invocations.
+#[test]
+fn sibling_tiles_do_not_share_a_batch() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_millis(5) },
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 16, n: 4 };
+    let mut rng = Xoshiro256::seeded(0x5B1B);
+    let mut weights = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut weights, 8);
+    let sid = coord.open_session(shape, 8, weights.clone()).unwrap();
+    let mut a = vec![0i64; shape.m * shape.k];
+    rng.fill_signed(&mut a, 8);
+    let expect = gemm_ref(shape, &a, &weights);
+    let job = Job::new(0, JobKind::SessionGemm { session: sid, a })
+        .with_shards(TilePolicy::Grid { k_tiles: 2, n_tiles: 2 });
+    let r = coord.submit_job(job).unwrap().wait();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.output, expect);
+    assert_eq!(r.shards, 4);
+    assert_eq!(
+        r.batch_size, 1,
+        "sibling tiles (and different k-ranges) must not coalesce"
+    );
+    coord.shutdown();
+}
+
+/// The overflow contract, at the library level: the add-reduce rejects
+/// partial sums that leave the logical accumulator range (and i64
+/// wraparound outright), and the checked scalar reference rejects the
+/// same way — operands wider than declared cannot silently wrap.
+#[test]
+fn partial_sum_overflow_rejected_and_mirrored_by_reference() {
+    // acc_bits(2, 2) = 4 + 1 = 5 → range [-16, 15].
+    let parts = vec![vec![10i64, -10], vec![10, -10]];
+    let err = add_reduce_partials(&parts, 5).unwrap_err().to_string();
+    assert!(err.contains("partial-sum overflow"), "{err}");
+    // In range: sums to [14, -14].
+    let parts = vec![vec![7i64, -7], vec![7, -7]];
+    assert_eq!(add_reduce_partials(&parts, 5).unwrap(), vec![14, -14]);
+    // i64 wraparound is caught before the range check.
+    let parts = vec![vec![i64::MAX], vec![1]];
+    let err = add_reduce_partials(&parts, 64).unwrap_err().to_string();
+    assert!(err.contains("wraparound"), "{err}");
+    // The checked reference rejects over-width operands the same way: a
+    // width-2 GEMM whose operands are magnitude 3 overflows the 5-bit
+    // accumulator (3*3*2 = 18 > 15)…
+    let shape = GemmShape { m: 1, k: 2, n: 1 };
+    let err = gemm_ref_checked(shape, 2, &[3, 3], &[3, 3]).unwrap_err().to_string();
+    assert!(err.contains("overflow"), "{err}");
+    // …while genuinely width-2 operands (and negative sums) pass.
+    assert_eq!(gemm_ref_checked(shape, 2, &[-2, -2], &[1, 1]).unwrap(), vec![-4]);
+}
