@@ -20,6 +20,12 @@ cargo test -q
 step "tier-1: cargo test --test tiling -q"
 cargo test --test tiling -q
 
+# The convolution + auto-tuner acceptance suites, likewise by name: conv
+# bit-exactness across pools/policies and the tuner's cycle-exactness
+# and tuned-beats-1-D acceptance bar.
+step "tier-1: cargo test --test workload --test tuner -q"
+cargo test --test workload --test tuner -q
+
 if [ "${1:-}" = "fast" ]; then
     echo "fast mode: skipping doc/fmt/bench-compile gates"
     exit 0
@@ -99,6 +105,17 @@ step "bench gate: BENCH_infer.json (cycle-domain keys, ±${BENCH_TOL_PCT}%)"
 bench_gate "infer" BENCH_infer.json BENCH_infer.fresh.json \
     sequential_makespan_cycles pipelined_makespan_cycles makespan_speedup \
     || { echo "infer bench gate failed (rerun and commit BENCH_infer.json if intended)"; exit 1; }
+
+step "bench smoke: examples/conv headless -> BENCH_conv.fresh.json"
+CONV_BENCH_JSON=BENCH_conv.fresh.json \
+    cargo run --release --example conv -- 8 2 picaso >/dev/null
+test -s BENCH_conv.fresh.json || { echo "BENCH_conv.fresh.json missing or empty"; exit 1; }
+cat BENCH_conv.fresh.json
+
+step "bench gate: BENCH_conv.json (cycle-domain keys, ±${BENCH_TOL_PCT}%)"
+bench_gate "conv" BENCH_conv.json BENCH_conv.fresh.json \
+    tuned_total_cycles fixed_total_cycles pipelined_makespan_cycles \
+    || { echo "conv bench gate failed (rerun and commit BENCH_conv.json if intended)"; exit 1; }
 
 step "compile benches + examples"
 cargo build --release --benches --examples

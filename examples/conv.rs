@@ -1,0 +1,182 @@
+//! Convolution serving through the model-graph executor, with the
+//! analytic mapping tuner picking per-layer tile grids.
+//!
+//! The drill builds a small int8 CNN (`cnn:` spec: conv -> conv ->
+//! dense head with sign activations), lowers every conv via im2col to
+//! the GEMM the PIM arrays actually run, and serves a request batch
+//! twice over the same pool:
+//!
+//! 1. **fixed 1-D** — every layer column-split across the pool
+//!    (`TilePolicy::Fixed(workers)`, the pre-tuner `Auto` behaviour);
+//! 2. **tuned** — [`TuneMode::Auto`]: the tuner searches `k_tiles ×
+//!    n_tiles` grids per layer and submits each layer with its pick.
+//!
+//! Every output is verified bit-exact against the scalar direct
+//! convolution reference in both configurations, and the report
+//! compares per-layer measured cycles, the chosen grids with their
+//! predictions, and the cycle-denominated makespans (plus wall time at
+//! the design clock on the U55).
+//!
+//! ```bash
+//! cargo run --release --example conv -- [requests] [workers] [backend]
+//! ```
+//!
+//! Set `CONV_BENCH_JSON=<path>` to persist the headline cycle-domain
+//! numbers for the per-PR perf trajectory tracked by `ci.sh`'s
+//! bench-smoke step.
+
+use picaso::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, RegionSpec, TilePolicy};
+use picaso::device::Device;
+use picaso::model::{CompileOptions, CompiledModel, ExecMode, GraphExecutor, TuneMode};
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+use std::time::Duration;
+
+const SPEC: &str = "cnn:2@8x8,4@3x3,4@2x2s2,10";
+const WIDTH: u16 = 8;
+
+fn main() -> picaso::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let workers: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let backend_name: String = argv.get(2).cloned().unwrap_or_else(|| "picaso".into());
+
+    let (kind, regions): (ArchKind, Vec<RegionSpec>) = if backend_name == "mixed" {
+        (ArchKind::PICASO_F, RegionSpec::mixed_pool(workers))
+    } else {
+        (picaso::cli::parse_backend(&backend_name)?, Vec::new())
+    };
+    let geom = ArrayGeometry::new(8, 4);
+    let device = Device::by_id("U55").expect("U55 is in the device database");
+
+    println!(
+        "conv serving: {SPEC} int8 CNN (im2col-lowered), {requests} requests on \
+         {workers} {backend_name} workers ({}x{}-block regions)",
+        geom.rows, geom.cols,
+    );
+
+    let mut rng = Xoshiro256::seeded(0xC4A7);
+    let probe = picaso::cli::build_cnn(SPEC, WIDTH, "sign", 0xC0DE)?;
+    let mut inputs = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let mut a = vec![0i64; probe.input_dim()];
+        rng.fill_signed(&mut a, WIDTH as u32);
+        inputs.push(a);
+    }
+    let expects: Vec<Vec<i64>> = inputs
+        .iter()
+        .map(|a| probe.forward_ref(a, 1))
+        .collect::<picaso::Result<_>>()?;
+
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        geom,
+        kind,
+        regions,
+        batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_micros(200) },
+        ..Default::default()
+    })?;
+
+    // One pass per tiling configuration over the same pool.
+    let mut results = Vec::new();
+    for (label, tune) in [
+        ("fixed-1d", TuneMode::Fixed(TilePolicy::Fixed(workers))),
+        ("tuned", TuneMode::Auto),
+    ] {
+        let graph = picaso::cli::build_cnn(SPEC, WIDTH, "sign", 0xC0DE)?;
+        // Reset before compile: TuneMode::Auto records its per-layer
+        // grid picks into the tuner metrics lane at compile time.
+        coord.serving_metrics().reset_window();
+        let model = CompiledModel::compile(
+            &coord,
+            graph,
+            CompileOptions { tune, ..Default::default() },
+        )?;
+        let exec = GraphExecutor::new(&coord, &model);
+        let report = exec.infer_batch(&inputs, ExecMode::Pipelined)?;
+        let bad = report.outputs.iter().zip(&expects).filter(|(g, w)| g != w).count();
+        assert_eq!(bad, 0, "{label}: outputs must match the scalar direct convolution");
+
+        println!("\n--- {label} ---");
+        println!(
+            "{:>6} {:>12} {:>6} {:>12} {:>10} {:>16}",
+            "layer", "shape", "jobs", "cycles", "policy", "tuner"
+        );
+        for (idx, cl) in model.layers().iter().enumerate() {
+            let lr = &report.per_layer[idx];
+            let lspec = &model.graph().layers()[idx];
+            let tuner = match &cl.predicted {
+                Some(p) => format!("{}x{} {}cyc", p.k_tiles, p.n_tiles, p.total_cycles),
+                None => "-".into(),
+            };
+            println!(
+                "{:>6} {:>12} {:>6} {:>12} {:>10} {:>16}",
+                idx,
+                format!("{}->{}", lspec.k, lspec.n),
+                lr.jobs,
+                lr.cycles,
+                format!("{:?}", cl.shards).chars().take(10).collect::<String>(),
+                tuner,
+            );
+        }
+        let hz = model.min_clock_hz(device);
+        let (seq_ns, pipe_ns) = report.makespan_ns(hz);
+        println!(
+            "makespan: sequential {:.0} cycles ({}) vs pipelined {:.0} cycles ({}) => \
+             {:.2}x ({} at {})",
+            report.sequential_makespan_cycles,
+            picaso::util::fmt_ns(seq_ns),
+            report.pipelined_makespan_cycles,
+            picaso::util::fmt_ns(pipe_ns),
+            report.pipeline_speedup(),
+            device.id,
+            picaso::util::fmt_freq(hz),
+        );
+        let cycles: Vec<u64> = report.per_layer.iter().map(|l| l.cycles).collect();
+        model.close(&coord);
+        results.push((label, cycles, report));
+    }
+    println!("\nserving metrics (tuned window):\n{}", coord.metrics_snapshot().render());
+
+    let (_, fixed_cycles, fixed) = &results[0];
+    let (_, tuned_cycles, tuned) = &results[1];
+    let fixed_total: u64 = fixed_cycles.iter().sum();
+    let tuned_total: u64 = tuned_cycles.iter().sum();
+    println!(
+        "\ntuned vs fixed-1d: {tuned_total} vs {fixed_total} total pim-cycles \
+         ({:.2}x), pipelined makespan {:.0} vs {:.0}",
+        fixed_total as f64 / tuned_total.max(1) as f64,
+        tuned.pipelined_makespan_cycles,
+        fixed.pipelined_makespan_cycles,
+    );
+
+    // ------------------------------------------------ bench JSON (CI)
+    if let Ok(path) = std::env::var("CONV_BENCH_JSON") {
+        if !path.is_empty() {
+            let per_layer: Vec<String> = tuned_cycles.iter().map(u64::to_string).collect();
+            let json = format!(
+                "{{\n  \"requests\": {},\n  \"workers\": {},\n  \"backend\": \"{}\",\n  \
+                 \"layers\": {},\n  \"tuned_total_cycles\": {},\n  \
+                 \"fixed_total_cycles\": {},\n  \"per_layer_cycles\": [{}],\n  \
+                 \"sequential_makespan_cycles\": {:.1},\n  \
+                 \"pipelined_makespan_cycles\": {:.1},\n  \"makespan_speedup\": {:.3}\n}}\n",
+                requests,
+                workers,
+                backend_name,
+                tuned_cycles.len(),
+                tuned_total,
+                fixed_total,
+                per_layer.join(", "),
+                tuned.sequential_makespan_cycles,
+                tuned.pipelined_makespan_cycles,
+                tuned.pipeline_speedup(),
+            );
+            std::fs::write(&path, json)?;
+            println!("\nwrote bench snapshot to {path}");
+        }
+    }
+
+    coord.shutdown();
+    println!("\nconv OK — all {requests} requests bit-exact in both configurations");
+    Ok(())
+}

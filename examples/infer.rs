@@ -135,13 +135,19 @@ fn main() -> picaso::Result<()> {
 
     // ------------------------------------------- the deterministic model
     let est = model.pipeline_estimate(requests);
+    let hz = model.min_clock_hz(device);
+    let (seq_ns, pipe_ns) = pipe.makespan_ns(hz);
     println!(
-        "\ncycle-makespan model (measured per-layer sums): sequential {:.0} vs \
-         pipelined {:.0} => {:.2}x  (compile-time estimate {:.2}x)",
+        "\ncycle-makespan model (measured per-layer sums): sequential {:.0} ({}) vs \
+         pipelined {:.0} ({}) => {:.2}x  (compile-time estimate {:.2}x, {} at {})",
         pipe.sequential_makespan_cycles,
+        picaso::util::fmt_ns(seq_ns),
         pipe.pipelined_makespan_cycles,
+        picaso::util::fmt_ns(pipe_ns),
         pipe.pipeline_speedup(),
         est.speedup(),
+        device.id,
+        picaso::util::fmt_freq(hz),
     );
     println!("\nserving metrics:\n{}", coord.metrics_snapshot().render());
 

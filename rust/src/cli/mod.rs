@@ -11,8 +11,9 @@
 //!   serve     [--jobs --workers --clients --rows --cols --m --k --n
 //!              --batch --max-wait-us --capacity --policy --backpressure
 //!              --no-session --backend --quarantine --backoff-us]
-//!   infer     [--model=mlp:KxH..xN --requests --m --act --mode --shards
-//!              --workers --rows --cols --batch --backend --device]
+//!   infer     [--model=mlp:KxH..xN|cnn:C@HxW,K@RxS.. --requests --m --act
+//!              --mode --shards --tiles --workers --rows --cols --batch
+//!              --backend --device]
 //!   asm       --file=<path> [--width]    assemble + disassemble a program
 //!   info                                 device database summary
 //! ```
@@ -26,9 +27,12 @@ use crate::coordinator::{
     QuarantinePolicy, QueuePolicy, RegionSpec, RetryPolicy, SchedulerConfig, TilePolicy,
 };
 use crate::device::Device;
-use crate::model::{CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor, ModelGraph};
+use crate::model::{
+    CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor, ModelGraph, TuneMode,
+};
 use crate::report::paper;
 use crate::util::Xoshiro256;
+use crate::workload::ConvWorkload;
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -103,13 +107,15 @@ system:
                                          p50/p95/p99
          [--m=4 --k=64 --n=8]            served GEMM shape
          [--shards=1|<k>|auto]           scatter each GEMM into k shards
-                                         across regions (auto = one per
-                                         compatible region; sessions
-                                         shard via sliced staging tables)
-         [--tiles=<k>x<n>|auto]          2-D scatter grid: k tiles along
+                                         across regions (auto defers the
+                                         grid to the analytic mapping
+                                         tuner; sessions shard via
+                                         sliced staging tables)
+         [--tiles=<k>x<n>|auto|tuned]    2-D scatter grid: k tiles along
                                          the reduction dim × n column
                                          tiles (partial sums add-reduce
-                                         at gather; wins over --shards)
+                                         at gather; wins over --shards;
+                                         auto/tuned = tuner-chosen grid)
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--adaptive]                    scale flush size/wait from the
                                          live queue-depth signal instead
@@ -132,15 +138,24 @@ system:
                                          across the worker pool and
                                          verified bit-exact against the
                                          scalar i64 reference
-         [--requests=16 --m=1]           request count / activation rows
+         --model=cnn:2@8x8,4@3x3s1p1,10  CNN: C@HxW input image, K@RxS
+                                         conv layers (optional sN stride,
+                                         pN zero-pad suffixes; lowered to
+                                         GEMM via im2col), bare counts =
+                                         dense channel-mixing layers
+         [--requests=16 --m=1]           request count / items per request
          [--act=sign|relu]               hidden activation: the paper's
                                          BNN sign binarizer, or ReLU plus
                                          a requantizing shift
          [--mode=pipelined|barrier]      overlapped layers vs a barrier
                                          between layers (the baseline)
          [--shards=1|<k>|auto]           scatter each layer across regions
-         [--tiles=<k>x<n>|auto]          2-D scatter grid per layer
-                                         (wins over --shards)
+         [--tiles=<k>x<n>|auto|tuned]    2-D scatter grid per layer (wins
+                                         over --shards); `tuned` lets the
+                                         analytic auto-tuner pick a grid
+                                         per layer at compile time and
+                                         reports predicted-vs-measured
+                                         cycles in the metrics
          [--workers=4 --rows=8 --cols=4 --width=8]
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--window=0]                    max requests in flight (0 = all)
@@ -216,20 +231,22 @@ fn parse_device(args: &Args) -> Result<&'static Device> {
         .ok_or_else(|| Error::Config(format!("unknown device '{id}'; see `picaso info`")))
 }
 
-/// Parse `--shards`: a fixed fan-out, `auto` (one shard per compatible
-/// region), or 1/absent for unsharded execution. `--tiles=<k>x<n>`
-/// (2-D grid, e.g. `--tiles=2x4`) or `--tiles=auto` wins over
-/// `--shards` when both are given.
+/// Parse `--shards`: a fixed fan-out, `auto` (grid deferred to the
+/// analytic mapping tuner), or 1/absent for unsharded execution.
+/// `--tiles=<k>x<n>` (2-D grid, e.g. `--tiles=2x4`), `--tiles=auto`,
+/// or `--tiles=tuned` wins over `--shards` when both are given (`auto`
+/// and `tuned` both resolve to [`TilePolicy::Auto`]; `infer`
+/// additionally maps `tuned` to compile-time per-layer tuning).
 fn parse_shards(args: &Args) -> Result<TilePolicy> {
     let tiles: String = args.get("tiles", String::new())?;
     match tiles.as_str() {
         "" => {}
-        "auto" => return Ok(TilePolicy::Auto),
+        "auto" | "tuned" => return Ok(TilePolicy::Auto),
         s => match s.split_once('x').map(|(k, n)| (k.parse::<usize>(), n.parse::<usize>())) {
             Some((Ok(k), Ok(n))) if k >= 1 && n >= 1 => return Ok(TilePolicy::grid(k, n)),
             _ => {
                 return Err(Error::Config(format!(
-                    "bad value for --tiles: '{s}' (want <k>x<n> or auto)"
+                    "bad value for --tiles: '{s}' (want <k>x<n>, auto, or tuned)"
                 )))
             }
         },
@@ -596,9 +613,160 @@ pub fn build_mlp(dims: &[usize], width: u16, act: &str, seed: u64) -> Result<Mod
     b.build()
 }
 
+/// One parsed segment of a `cnn:` model spec.
+enum CnnSeg {
+    /// `K@RxS[sS][pP]` — a conv layer: `K` filters of `R×S`, with an
+    /// optional stride and zero-padding.
+    Conv { k: usize, r: usize, s: usize, stride: usize, pad: usize },
+    /// A bare feature count — a dense per-position channel-mixing
+    /// layer (the classifier head).
+    Dense(usize),
+}
+
+fn parse_cnn_num(spec: &str, tok: &str) -> Result<usize> {
+    match tok.parse::<usize>() {
+        Ok(v) if v >= 1 => Ok(v),
+        _ => Err(Error::Config(format!(
+            "bad model spec '{spec}': '{tok}' is not a nonzero count"
+        ))),
+    }
+}
+
+/// Parse `cnn:C@HxW,K@RxS[sS][pP],..` into the input image geometry
+/// `(c, h, w)` and the layer segments. The first layer must be a conv
+/// (a dense-only model is an `mlp:` spec).
+fn parse_cnn_spec(spec: &str) -> Result<((usize, usize, usize), Vec<CnnSeg>)> {
+    let body = spec.strip_prefix("cnn:").unwrap_or(spec);
+    let mut parts = body.split(',');
+    let input = parts.next().unwrap_or("");
+    let bad_input =
+        || Error::Config(format!("bad model spec '{spec}': input must be C@HxW"));
+    let (c, hw) = input.split_once('@').ok_or_else(bad_input)?;
+    let (h, w) = hw.split_once('x').ok_or_else(bad_input)?;
+    let (c, h, w) =
+        (parse_cnn_num(spec, c)?, parse_cnn_num(spec, h)?, parse_cnn_num(spec, w)?);
+    let mut segs = Vec::new();
+    for seg in parts {
+        match seg.split_once('@') {
+            None => segs.push(CnnSeg::Dense(parse_cnn_num(spec, seg)?)),
+            Some((k, geom)) => {
+                let k = parse_cnn_num(spec, k)?;
+                let (r, rest) = geom.split_once('x').ok_or_else(|| {
+                    Error::Config(format!(
+                        "bad model spec '{spec}': conv must be K@RxS[sS][pP]"
+                    ))
+                })?;
+                let cut = rest.find(|ch: char| !ch.is_ascii_digit()).unwrap_or(rest.len());
+                let (s, mut tail) = rest.split_at(cut);
+                let (r, s) = (parse_cnn_num(spec, r)?, parse_cnn_num(spec, s)?);
+                let (mut stride, mut pad) = (1, 0);
+                while !tail.is_empty() {
+                    let (tag, after) = tail.split_at(1);
+                    let cut = after.find(|ch: char| !ch.is_ascii_digit()).unwrap_or(after.len());
+                    let (num, next) = after.split_at(cut);
+                    match tag {
+                        "s" => stride = parse_cnn_num(spec, num)?,
+                        "p" => {
+                            pad = num.parse::<usize>().map_err(|_| {
+                                Error::Config(format!(
+                                    "bad model spec '{spec}': pad '{num}'"
+                                ))
+                            })?;
+                        }
+                        _ => {
+                            return Err(Error::Config(format!(
+                                "bad model spec '{spec}': unknown conv suffix '{tag}'"
+                            )))
+                        }
+                    }
+                    tail = next;
+                }
+                segs.push(CnnSeg::Conv { k, r, s, stride, pad });
+            }
+        }
+    }
+    if !matches!(segs.first(), Some(CnnSeg::Conv { .. })) {
+        return Err(Error::Config(format!(
+            "model spec '{spec}' needs a conv layer after the input (use mlp: for dense-only)"
+        )));
+    }
+    Ok(((c, h, w), segs))
+}
+
+/// Build a seeded random-weight CNN from a `cnn:` spec:
+/// `cnn:C@HxW,K@RxS[sS][pP],..[,N]` — an input image of `C` channels
+/// at `H×W`, conv segments (`K` filters of `R×S`, optional stride
+/// `s`/zero-pad `p` suffixes, lowered to GEMM via im2col), and bare
+/// feature counts as dense per-position channel-mixing layers. Every
+/// layer gets a bias; hidden layers get the chosen activation exactly
+/// like [`build_mlp`]. Shared by the `infer` subcommand and
+/// `examples/conv.rs` so the workload can never drift between them.
+pub fn build_cnn(spec: &str, width: u16, act: &str, seed: u64) -> Result<ModelGraph> {
+    if !matches!(act, "relu" | "sign") {
+        return Err(Error::Config(format!("unknown activation '{act}' (relu|sign)")));
+    }
+    if width == 0 || width > 16 {
+        return Err(Error::Config(format!(
+            "operand width {width} outside 1..=16 (register budget)"
+        )));
+    }
+    let ((c, h, w), segs) = parse_cnn_spec(spec)?;
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut b = GraphBuilder::new(h * w * c, width);
+    // (channels, height, width) of the activation entering each layer.
+    let mut cur = (c, h, w);
+    for (li, seg) in segs.iter().enumerate() {
+        let (id, fan_in, n) = match *seg {
+            CnnSeg::Conv { k, r, s, stride, pad } => {
+                let conv = ConvWorkload::new(1, cur.0, cur.1, cur.2, k, r, s, stride, pad)?;
+                let mut filters = vec![0i64; k * r * s * cur.0];
+                rng.fill_signed(&mut filters, width as u32);
+                let id = b.conv2d(conv, filters)?;
+                let fan_in = r * s * cur.0;
+                cur = (k, conv.p, conv.q);
+                (id, fan_in, k)
+            }
+            CnnSeg::Dense(n) => {
+                // Dense after conv mixes channels per output position
+                // (rows carry through), so its fan-in is the channels.
+                let k = cur.0;
+                let mut weights = vec![0i64; k * n];
+                rng.fill_signed(&mut weights, width as u32);
+                let id = b.dense(weights, n)?;
+                cur.0 = n;
+                (id, k, n)
+            }
+        };
+        let mut bias = vec![0i64; n];
+        rng.fill_signed(&mut bias, width as u32);
+        b.bias(id, bias)?;
+        if li + 1 < segs.len() {
+            match act {
+                "sign" => b.sign(id)?,
+                _ => {
+                    b.relu(id)?;
+                    // Same overflow argument as build_mlp, with the
+                    // conv fan-in R·S·C in place of the dense k.
+                    b.shift(id, width as u32 - 1 + crate::util::ceil_log2(fan_in.max(2)) + 1)?;
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// Build the `--model` workload: a `cnn:` spec via [`build_cnn`],
+/// anything else as an `mlp:` dims list via [`build_mlp`].
+pub fn build_model(spec: &str, width: u16, act: &str, seed: u64) -> Result<ModelGraph> {
+    if spec.starts_with("cnn:") {
+        build_cnn(spec, width, act, seed)
+    } else {
+        build_mlp(&parse_model_dims(spec)?, width, act, seed)
+    }
+}
+
 fn cmd_infer(args: &Args) -> Result<String> {
     let spec: String = args.get("model", "mlp:32x16x10".into())?;
-    let dims = parse_model_dims(&spec)?;
     let width: u16 = args.get("width", 8)?;
     let requests: usize = args.get("requests", 16)?.max(1);
     let m: usize = args.get("m", 1)?;
@@ -611,6 +779,14 @@ fn cmd_infer(args: &Args) -> Result<String> {
     let act: String = args.get("act", "sign".into())?;
     let device = parse_device(args)?;
     let shard_policy = parse_shards(args)?;
+    // --tiles=tuned compiles with the analytic auto-tuner choosing a
+    // grid per layer; every other policy applies fixed to all layers
+    // (--tiles=auto defers to the tuner per job at submit time).
+    let tune = if args.get::<String>("tiles", String::new())? == "tuned" {
+        TuneMode::Auto
+    } else {
+        TuneMode::Fixed(shard_policy)
+    };
     let mode = match args.get::<String>("mode", "pipelined".into())?.as_str() {
         "pipelined" => ExecMode::Pipelined,
         "barrier" | "sequential" => ExecMode::LayerBarrier,
@@ -628,7 +804,7 @@ fn cmd_infer(args: &Args) -> Result<String> {
         (parse_backend(&backend_name)?, Vec::new())
     };
 
-    let graph = build_mlp(&dims, width, &act, seed)?;
+    let graph = build_model(&spec, width, &act, seed)?;
     let coord = Coordinator::new(CoordinatorConfig {
         workers,
         geom: ArrayGeometry::new(rows, cols),
@@ -644,19 +820,21 @@ fn cmd_infer(args: &Args) -> Result<String> {
     let mut rng = Xoshiro256::seeded(seed ^ 0xA5A5);
     let mut inputs = Vec::with_capacity(requests);
     for _ in 0..requests {
-        let mut a = vec![0i64; m * dims[0]];
+        let mut a = vec![0i64; m * graph.input_dim()];
         rng.fill_signed(&mut a, width as u32);
         inputs.push(a);
     }
     let expects: Vec<Vec<i64>> =
         inputs.iter().map(|a| graph.forward_ref(a, m)).collect::<Result<_>>()?;
 
+    // Reset before compile so the tuner decisions recorded there stay
+    // in the reported window.
+    coord.serving_metrics().reset_window();
     let model = CompiledModel::compile(
         &coord,
         graph,
-        CompileOptions { rows_per_request: m, shards: shard_policy, ..Default::default() },
+        CompileOptions { rows_per_request: m, tune, ..Default::default() },
     )?;
-    coord.serving_metrics().reset_window();
     let exec =
         GraphExecutor::new(&coord, &model).with_window(args.get("window", 0usize)?);
     let report = exec.infer_batch(&inputs, mode)?;
@@ -686,9 +864,13 @@ fn cmd_infer(args: &Args) -> Result<String> {
         let lspec = &model.graph().layers()[idx];
         let freq = crate::analytic::design_clock_hz(cl.kind, device);
         let per_job = if lr.jobs > 0 { lr.cycles as f64 / lr.jobs as f64 } else { 0.0 };
+        let tuned = match &cl.predicted {
+            Some(p) => format!("  grid={}x{} pred={}cyc", p.k_tiles, p.n_tiles, p.total_cycles),
+            None => String::new(),
+        };
         out.push_str(&format!(
             "layer {idx}  {:>4}->{:<4} jobs={} cycles={} retries={} busy={:.0}us  \
-             pim/job={} at {} ({})\n",
+             pim/job={} at {} ({}){tuned}\n",
             lspec.k,
             lspec.n,
             lr.jobs,
@@ -702,16 +884,24 @@ fn cmd_infer(args: &Args) -> Result<String> {
     }
     let (p50, p95) = report.request_latency_p50_p95();
     let est = model.pipeline_estimate(requests);
+    // Clock-aware makespans: cycles at the slowest layer design's clock
+    // on the requested device (the pool's conservative rate).
+    let hz = model.min_clock_hz(device);
+    let (seq_ns, pipe_ns) = report.makespan_ns(hz);
     out.push_str(&format!(
         "end-to-end  p50={p50:.0}us p95={p95:.0}us  throughput={:.1} req/s (wall {:.1}ms)\n\
-         pipeline model: sequential {:.0} cycles vs pipelined {:.0} cycles => {:.2}x \
-         (compile-time estimate {:.2}x)\n{}\n",
+         pipeline model: sequential {:.0} cycles ({}) vs pipelined {:.0} cycles ({}) \
+         => {:.2}x (compile-time estimate {:.2}x, {} at {})\n{}\n",
         requests as f64 / (report.wall_us / 1e6).max(1e-9),
         report.wall_us / 1e3,
         report.sequential_makespan_cycles,
+        crate::util::fmt_ns(seq_ns),
         report.pipelined_makespan_cycles,
+        crate::util::fmt_ns(pipe_ns),
         report.pipeline_speedup(),
         est.speedup(),
+        device.id,
+        crate::util::fmt_freq(hz),
         coord.metrics_snapshot().render(),
     ));
     model.close(&coord);
@@ -987,6 +1177,52 @@ mod tests {
         assert!(run_line("infer --model=mlp:8x0x4 --rows=2 --cols=1").is_err());
         assert!(run_line("infer --model=mlp:8x6x4 --act=bogus --rows=2 --cols=1").is_err());
         assert!(run_line("infer --model=mlp:8x6x4 --mode=bogus --rows=2 --cols=1").is_err());
+    }
+
+    #[test]
+    fn infer_command_cnn_model_verifies() {
+        let out = run_line(
+            "infer --model=cnn:2@6x6,3@3x3,4 --requests=3 --workers=2 --rows=2 --cols=1",
+        )
+        .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        assert!(out.contains("layer 0"), "{out}");
+        // Strided + padded conv stacks with the ReLU path verify too.
+        let out = run_line(
+            "infer --model=cnn:1@5x5,2@3x3s2p1,2@2x2,3 --requests=2 --workers=2 \
+             --rows=2 --cols=1 --act=relu",
+        )
+        .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        // Bad cnn specs fail loudly.
+        assert!(run_line("infer --model=cnn:bogus --rows=2 --cols=1").is_err());
+        assert!(run_line("infer --model=cnn:2@6x6 --rows=2 --cols=1").is_err()); // no layers
+        assert!(run_line("infer --model=cnn:2@6x6,10 --rows=2 --cols=1").is_err()); // dense first
+        assert!(run_line("infer --model=cnn:2@6x6,3@3x3z9 --rows=2 --cols=1").is_err());
+        assert!(run_line("infer --model=cnn:0@6x6,3@3x3 --rows=2 --cols=1").is_err());
+    }
+
+    #[test]
+    fn infer_command_tuned_tiles() {
+        // --tiles=tuned: the auto-tuner picks a per-layer grid at
+        // compile time; outputs stay bit-exact and the report carries
+        // the chosen grids plus the tuner metrics lane.
+        let out = run_line(
+            "infer --model=mlp:8x6x4 --requests=3 --workers=2 --rows=2 --cols=1 --tiles=tuned",
+        )
+        .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        assert!(out.contains("grid="), "{out}");
+        assert!(out.contains("pred="), "{out}");
+        assert!(out.contains("tuner layer"), "{out}");
+        // A tuned CNN end to end: conv layers compile, tune, and verify.
+        let out = run_line(
+            "infer --model=cnn:2@6x6,3@3x3,4 --requests=2 --workers=2 --rows=2 --cols=1 \
+             --tiles=tuned",
+        )
+        .unwrap();
+        assert!(out.contains("verified: OK"), "{out}");
+        assert!(out.contains("tuner layer"), "{out}");
     }
 
     #[test]

@@ -262,10 +262,10 @@ pub enum TilePolicy {
         /// Tiles along the output dimension `n`.
         n_tiles: usize,
     },
-    /// One column shard per compatible worker region: the number of
-    /// regions matching the job's backend tag (all regions for untagged
-    /// jobs). Stays 1-D — choosing a k-split automatically needs the
-    /// mapping auto-tuner (see ROADMAP).
+    /// Let the analytic mapping tuner ([`crate::tuner`]) pick the grid:
+    /// the `k_tiles × n_tiles` split with the lowest predicted critical-
+    /// path cycles for this job's shape and operand width on the regions
+    /// matching its backend tag (all regions for untagged jobs).
     Auto,
 }
 
@@ -602,23 +602,32 @@ impl Coordinator {
 
     /// Resolve a job's [`TilePolicy`] to a concrete `(k_tiles, n_tiles)`
     /// grid against this pool, clamped to the job's shape (a tile needs
-    /// at least one reduction term and one output column). A tiled
-    /// session job against an unknown (e.g. already-closed) session
-    /// degrades to one ticket, whose worker reports the unknown-session
-    /// error.
+    /// at least one reduction term and one output column).
+    /// [`TilePolicy::Auto`] routes through the analytic mapping tuner
+    /// ([`crate::tuner::choose_grid`]): the predicted-best 2-D grid for
+    /// the job's shape on its compatible region pool. A tiled session
+    /// job against an unknown (e.g. already-closed) session degrades to
+    /// one ticket, whose worker reports the unknown-session error.
     fn resolve_tiles(&self, job: &Job) -> Result<(usize, usize)> {
-        let (want_k, want_n) = match job.shards {
-            TilePolicy::None => return Ok((1, 1)),
-            TilePolicy::Fixed(n) => (1, n.max(1)),
-            TilePolicy::Grid { k_tiles, n_tiles } => (k_tiles.max(1), n_tiles.max(1)),
-            TilePolicy::Auto => (1, self.compatible_regions(job.backend).max(1)),
-        };
-        let shape = match &job.kind {
-            JobKind::Gemm { shape, .. } => *shape,
+        if matches!(job.shards, TilePolicy::None) {
+            return Ok((1, 1));
+        }
+        let (shape, width) = match &job.kind {
+            JobKind::Gemm { shape, width, .. } => (*shape, *width),
             JobKind::SessionGemm { session, .. } => match self.session_spec(*session) {
-                Some(spec) => spec.shape,
+                Some(spec) => (spec.shape, spec.width),
                 None => return Ok((1, 1)),
             },
+        };
+        let (want_k, want_n) = match job.shards {
+            TilePolicy::None => unreachable!("handled above"),
+            TilePolicy::Fixed(n) => (1, n.max(1)),
+            TilePolicy::Grid { k_tiles, n_tiles } => (k_tiles.max(1), n_tiles.max(1)),
+            TilePolicy::Auto => {
+                let pool = self.compatible_kinds(job.backend);
+                let pred = crate::tuner::choose_grid(shape, width, &pool, self.cfg.geom);
+                (pred.k_tiles.max(1), pred.n_tiles.max(1))
+            }
         };
         Ok((want_k.min(shape.k.max(1)), want_n.min(shape.n.max(1))))
     }
@@ -641,6 +650,21 @@ impl Coordinator {
                 .iter()
                 .filter(|k| BackendClass::of(**k) == c)
                 .count(),
+        }
+    }
+
+    /// Designs of the worker regions a job tagged `backend` may run on
+    /// (all regions for untagged jobs) — the region pool the analytic
+    /// mapping tuner ([`crate::tuner`]) predicts placements against.
+    pub fn compatible_kinds(&self, backend: Option<BackendClass>) -> Vec<ArchKind> {
+        match backend {
+            None => self.worker_kinds.clone(),
+            Some(c) => self
+                .worker_kinds
+                .iter()
+                .copied()
+                .filter(|k| BackendClass::of(*k) == c)
+                .collect(),
         }
     }
 

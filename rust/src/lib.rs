@@ -33,6 +33,14 @@
 //!   (Table V, Table VIII, Figs 5–7), cross-validated against the simulator.
 //! * [`compiler`] — maps GEMM / MLP layers onto the PIM array as microcode,
 //!   with single-job and micro-batched executors.
+//! * [`workload`] — convolution workloads (`ConvWorkload {R,S,P,Q,C,K,N}`)
+//!   lowered onto the GEMM stack via im2col, with a scalar
+//!   direct-convolution reference the lowering is checked bit-exact
+//!   against.
+//! * [`tuner`] — the analytic mapping auto-tuner: a per-backend cycle cost
+//!   model mirroring the compiler's plan arithmetic, plus a bounded
+//!   branch-and-bound search over `k_tiles × n_tiles` grids that picks
+//!   per-layer [`coordinator::TilePolicy`]s.
 //! * [`model`] — the model-graph executor: a validated DAG of GEMM layers
 //!   with fused elementwise epilogues (bias/ReLU/BNN-sign/shift/residual),
 //!   compiled to pinned per-layer sessions and run **pipelined** through
@@ -83,7 +91,9 @@ pub mod report;
 pub mod runtime;
 pub mod synth;
 pub mod testutil;
+pub mod tuner;
 pub mod util;
+pub mod workload;
 
 /// Convenient re-exports of the most commonly used types.
 pub mod prelude {
@@ -102,12 +112,14 @@ pub mod prelude {
     pub use crate::custom::{CustomRegion, CustomTile};
     pub use crate::model::{
         CompileOptions, CompiledModel, ElemOp, ExecMode, GraphBuilder, GraphExecutor, LayerId,
-        ModelGraph,
+        ModelGraph, TuneMode,
     };
     pub use crate::device::{Device, DeviceFamily, DEVICES};
     pub use crate::isa::{AluOp, BoothConf, Instruction, Microcode, OpMuxConf};
     pub use crate::metrics::{MetricsSnapshot, ServingMetrics};
     pub use crate::synth::{ImplModel, ImplReport, TileReport};
+    pub use crate::tuner::{choose_grid, predict_cycles, TilePrediction};
+    pub use crate::workload::ConvWorkload;
 }
 
 /// Crate-wide error type.

@@ -231,6 +231,17 @@ struct LayerTrack {
     wall: OnlineStats,
 }
 
+/// One analytic-tuner decision (graph executor / coordinator): the
+/// `k_tiles × n_tiles` grid chosen for a model layer and the cycle cost
+/// the tuner predicted for it, joined against the layer's measured
+/// cycles at snapshot time.
+#[derive(Debug, Clone, Copy)]
+struct TunerChoice {
+    k_tiles: usize,
+    n_tiles: usize,
+    predicted_cycles: u64,
+}
+
 /// Per-backend-class accumulation: jobs completed on worker regions of
 /// one [`BackendClass`], with their own end-to-end latency track so a
 /// mixed deployment reports overlay-vs-custom percentiles side by side.
@@ -288,6 +299,9 @@ struct ServingInner {
     quarantines: u64,
     /// Per-model-layer rollups (graph executor), indexed by layer.
     per_layer: Vec<LayerTrack>,
+    /// Latest analytic-tuner decision per model layer (sparse — `None`
+    /// for layers compiled with a fixed policy).
+    tuner_choices: Vec<Option<TunerChoice>>,
     window_start: Option<Instant>,
     /// Per-backend-class breakdown, keyed by the completing worker's
     /// class (small fixed set — linear scan beats hashing here).
@@ -452,6 +466,28 @@ impl ServingMetrics {
         track.wall.push(wall_us);
     }
 
+    /// Record the analytic mapping tuner's decision for one model
+    /// layer: the chosen `k_tiles × n_tiles` grid and the total cycle
+    /// cost it predicted for the layer's GEMM. Joined against the
+    /// layer's measured per-job cycles at snapshot time, this is the
+    /// lane that shows how far the cost model sits from the simulator
+    /// (predicted-vs-measured error). Re-recording a layer replaces its
+    /// previous decision (latest compile wins).
+    pub fn record_tuner_choice(
+        &self,
+        layer: usize,
+        k_tiles: usize,
+        n_tiles: usize,
+        predicted_cycles: u64,
+    ) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        if g.tuner_choices.len() <= layer {
+            g.tuner_choices.resize_with(layer + 1, || None);
+        }
+        g.tuner_choices[layer] = Some(TunerChoice { k_tiles, n_tiles, predicted_cycles });
+    }
+
     /// The mean queue depth observed at enqueue over the current window.
     pub fn mean_queue_depth(&self) -> f64 {
         self.lock().queue_depth.mean()
@@ -563,6 +599,32 @@ impl ServingMetrics {
                 max_wall_us: t.wall.max(),
             })
             .collect();
+        let tuner: Vec<TunerSnapshot> = g
+            .tuner_choices
+            .iter()
+            .enumerate()
+            .filter_map(|(layer, c)| c.map(|c| (layer, c)))
+            .map(|(layer, c)| {
+                let measured_cycles = g
+                    .per_layer
+                    .get(layer)
+                    .filter(|t| t.jobs > 0)
+                    .map(|t| t.cycles as f64 / t.jobs as f64)
+                    .unwrap_or(0.0);
+                let error_pct = (measured_cycles > 0.0 && c.predicted_cycles > 0).then(|| {
+                    (measured_cycles - c.predicted_cycles as f64) / c.predicted_cycles as f64
+                        * 100.0
+                });
+                TunerSnapshot {
+                    layer,
+                    k_tiles: c.k_tiles,
+                    n_tiles: c.n_tiles,
+                    predicted_cycles: c.predicted_cycles,
+                    measured_cycles,
+                    error_pct,
+                }
+            })
+            .collect();
         MetricsSnapshot {
             jobs: g.jobs,
             errors: g.errors,
@@ -587,9 +649,34 @@ impl ServingMetrics {
             sheds: g.sheds,
             quarantines: g.quarantines,
             per_layer,
+            tuner,
             per_backend,
         }
     }
+}
+
+/// Per-layer slice of the tuner lane in a [`MetricsSnapshot`]: the grid
+/// the analytic mapping tuner chose for a compiled model layer, the
+/// cycle cost it predicted, and — once jobs for that layer complete —
+/// the measured per-job cycles with the signed prediction error. A
+/// deployment watches this lane to see whether the cost model still
+/// tracks the simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct TunerSnapshot {
+    /// Layer index within its compiled model graph.
+    pub layer: usize,
+    /// Tiles chosen along the reduction dimension `k`.
+    pub k_tiles: usize,
+    /// Tiles chosen along the output dimension `n`.
+    pub n_tiles: usize,
+    /// Total cycles the tuner predicted for the layer's GEMM.
+    pub predicted_cycles: u64,
+    /// Mean measured cycles per layer job over the window (0.0 until a
+    /// job for this layer completes).
+    pub measured_cycles: f64,
+    /// Signed predicted-vs-measured error (%), `None` until a job for
+    /// this layer has completed.
+    pub error_pct: Option<f64>,
 }
 
 /// Per-model-layer slice of a [`MetricsSnapshot`] fed by the graph
@@ -706,6 +793,9 @@ pub struct MetricsSnapshot {
     /// Per-model-layer rollups from the graph executor (empty when no
     /// model inference ran in the window).
     pub per_layer: Vec<LayerSnapshot>,
+    /// Analytic-tuner decisions per model layer with predicted-vs-
+    /// measured cycle error (empty when no layer was auto-tuned).
+    pub tuner: Vec<TunerSnapshot>,
     /// Per-backend-class breakdown (sorted by class name; empty when no
     /// job carried a backend tag).
     pub per_backend: Vec<BackendSnapshot>,
@@ -777,6 +867,16 @@ impl MetricsSnapshot {
                 "\nlayer {:<3} jobs={} cycles={} retries={} busy={:.0}us \
                  mean={:.0}us max={:.0}us",
                 l.layer, l.jobs, l.cycles, l.retries, l.busy_us, l.mean_wall_us, l.max_wall_us,
+            ));
+        }
+        for t in &self.tuner {
+            let err = match t.error_pct {
+                Some(e) => format!(" err={e:+.1}%"),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "\ntuner layer {:<3} grid={}x{} predicted={}cyc measured/job={:.0}cyc{}",
+                t.layer, t.k_tiles, t.n_tiles, t.predicted_cycles, t.measured_cycles, err,
             ));
         }
         for b in &self.per_backend {
@@ -989,6 +1089,31 @@ mod tests {
         assert!(text.contains("layer 2"), "{text}");
         // Model-free windows keep the layer lines out.
         assert!(!ServingMetrics::new().snapshot().render().contains("layer"));
+    }
+
+    #[test]
+    fn tuner_lane_tracks_and_renders() {
+        let m = ServingMetrics::new();
+        m.record_tuner_choice(0, 2, 3, 1000);
+        m.record_tuner_choice(2, 1, 2, 500); // sparse: layer 1 untuned
+        m.record_layer(0, 1100, 0, 10.0);
+        let s = m.snapshot();
+        assert_eq!(s.tuner.len(), 2);
+        assert_eq!(s.tuner[0].layer, 0);
+        assert_eq!((s.tuner[0].k_tiles, s.tuner[0].n_tiles), (2, 3));
+        assert!((s.tuner[0].measured_cycles - 1100.0).abs() < 1e-9);
+        assert!((s.tuner[0].error_pct.unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(s.tuner[1].layer, 2);
+        assert!(s.tuner[1].error_pct.is_none(), "no jobs completed, no error yet");
+        // Latest compile wins on re-record.
+        m.record_tuner_choice(2, 2, 2, 800);
+        assert_eq!(m.snapshot().tuner[1].predicted_cycles, 800);
+        let text = s.render();
+        assert!(text.contains("tuner layer 0"), "{text}");
+        assert!(text.contains("grid=2x3"), "{text}");
+        assert!(text.contains("err=+10.0%"), "{text}");
+        // Untuned windows keep the tuner lines out.
+        assert!(!ServingMetrics::new().snapshot().render().contains("tuner"));
     }
 
     #[test]

@@ -5,11 +5,16 @@
 //! pinned per-layer session
 //! ([`Coordinator::open_session_on`](crate::coordinator::Coordinator::open_session_on)):
 //! the layer's weights are staged once, its plan compiled once, and its
-//! jobs inherit the layer's backend pin and the model's [`ShardPolicy`]
-//! — a wide layer scatters across worker regions exactly like a sharded
-//! ad-hoc GEMM. The fused elementwise epilogue runs host-side on the
-//! gathered output (it is part of the gather step, never a separate
-//! array job).
+//! jobs inherit the layer's backend pin and a **per-layer**
+//! [`TilePolicy`] — one fixed policy for the whole model
+//! ([`TuneMode::Fixed`]) or a grid the analytic tuner picks per layer
+//! from its GEMM shape and compatible region pool
+//! ([`TuneMode::Auto`]). A wide layer scatters across worker regions
+//! exactly like a tiled ad-hoc GEMM. Conv layers
+//! ([`LayerSpec::pre`](super::graph::LayerSpec::pre)) are lowered
+//! host-side through im2col before submission. The fused elementwise
+//! epilogue runs host-side on the gathered output (it is part of the
+//! gather step, never a separate array job).
 //!
 //! **Execute** ([`GraphExecutor`]) runs batches of requests through the
 //! layer pipeline. In [`ExecMode::Pipelined`] the executor keeps every
@@ -38,21 +43,50 @@ use crate::backend::{make_backend, BackendClass};
 use crate::compiler::PimCompiler;
 use crate::coordinator::{
     Coordinator, Job, JobKind, JobResult, ModelSession, RetryPolicy, SessionId, SessionSpec,
-    ShardPolicy,
+    TilePolicy,
 };
+use crate::device::Device;
+use crate::tuner::{self, TilePrediction};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+/// How per-layer [`TilePolicy`]s are chosen when a [`ModelGraph`] is
+/// compiled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneMode {
+    /// Every layer job is submitted with this one policy.
+    /// `Fixed(TilePolicy::Auto)` defers the choice to submit time,
+    /// where the coordinator routes each job through the analytic
+    /// tuner individually.
+    Fixed(TilePolicy),
+    /// The analytic auto-tuner ([`crate::tuner::choose_grid`]) picks a
+    /// grid **per layer** at compile time from the layer's GEMM shape
+    /// and its compatible region pool, and records each decision in
+    /// the serving metrics (predicted-vs-measured error shows up in
+    /// the metrics report).
+    Auto,
+}
+
+impl Default for TuneMode {
+    /// `Fixed(TilePolicy::None)`: unsplit layer jobs, the pre-tuner
+    /// behaviour.
+    fn default() -> Self {
+        TuneMode::Fixed(TilePolicy::None)
+    }
+}
+
 /// How a [`ModelGraph`] is lowered onto a coordinator.
 #[derive(Debug, Clone, Copy)]
 pub struct CompileOptions {
-    /// Activation rows per request (`m` of every layer's GEMM).
+    /// Batch items per request. Dense layers run one GEMM row per item;
+    /// conv layers emit `P·Q` rows per item (see
+    /// [`ModelGraph::layer_shape`]).
     pub rows_per_request: usize,
-    /// Scatter policy applied to every layer job (wide layers split
-    /// across regions via per-shard staging-table slices).
-    pub shards: ShardPolicy,
+    /// Per-layer tile-policy choice: one fixed policy for every layer,
+    /// or the analytic auto-tuner picking a grid per layer.
+    pub tune: TuneMode,
     /// Default backend-class pin for layers without their own
     /// (`LayerSpec::backend` overrides per layer).
     pub backend: Option<BackendClass>,
@@ -64,7 +98,7 @@ impl Default for CompileOptions {
     fn default() -> Self {
         Self {
             rows_per_request: 1,
-            shards: ShardPolicy::None,
+            tune: TuneMode::Fixed(TilePolicy::None),
             backend: None,
             retry: RetryPolicy::default(),
         }
@@ -86,6 +120,22 @@ pub struct CompiledLayer {
     /// on one `kind` region (a compile-time dry run on zero
     /// activations) — the per-stage service time of the pipeline model.
     pub solo_cycles: u64,
+    /// Tile policy this layer's jobs are submitted with (the fixed
+    /// compile option, or the tuner's per-layer pick under
+    /// [`TuneMode::Auto`]).
+    pub shards: TilePolicy,
+    /// The tuner's chosen grid and predicted cycles for this layer —
+    /// `Some` only under [`TuneMode::Auto`].
+    pub predicted: Option<TilePrediction>,
+}
+
+impl CompiledLayer {
+    /// The design clock (Hz) of this layer's representative region on
+    /// `dev` — converts the layer's cycle counts into wall time
+    /// ([`crate::analytic::design_clock_hz`]).
+    pub fn clock_hz(&self, dev: &Device) -> f64 {
+        crate::analytic::design_clock_hz(self.kind, dev)
+    }
 }
 
 /// Deterministic cycle-denominated makespans of serving `requests`
@@ -123,7 +173,6 @@ pub struct CompiledModel {
     graph: ModelGraph,
     m: usize,
     layers: Vec<CompiledLayer>,
-    shards: ShardPolicy,
     retry: RetryPolicy,
 }
 
@@ -183,12 +232,40 @@ impl CompiledModel {
                 let zeros = vec![0i64; shape.m * shape.k];
                 let (_, stats) = session_model.infer(&mut *probe, &zeros)?;
                 drop(session_model);
+                // Per-layer tile policy: the fixed compile option, or
+                // the tuner's pick for this layer's shape on its
+                // compatible region pool.
+                let (shards, predicted) = match opts.tune {
+                    TuneMode::Fixed(p) => (p, None),
+                    TuneMode::Auto => {
+                        let pool = coord.compatible_kinds(backend);
+                        let pred = tuner::choose_grid(shape, graph.width(), &pool, geom);
+                        (pred.policy(), Some(pred))
+                    }
+                };
                 let session =
                     coord.open_session_on(shape, graph.width(), spec.weights, backend)?;
-                Ok(CompiledLayer { session, backend, kind, solo_cycles: stats.cycles })
+                Ok(CompiledLayer {
+                    session,
+                    backend,
+                    kind,
+                    solo_cycles: stats.cycles,
+                    shards,
+                    predicted,
+                })
             })();
             match lowered {
-                Ok(cl) => layers.push(cl),
+                Ok(cl) => {
+                    if let Some(pred) = &cl.predicted {
+                        coord.serving_metrics().record_tuner_choice(
+                            idx,
+                            pred.k_tiles,
+                            pred.n_tiles,
+                            pred.total_cycles,
+                        );
+                    }
+                    layers.push(cl);
+                }
                 Err(e) => {
                     // Unwind: release the sessions of the layers
                     // already lowered.
@@ -199,7 +276,7 @@ impl CompiledModel {
                 }
             }
         }
-        Ok(CompiledModel { graph, m, layers, shards: opts.shards, retry: opts.retry })
+        Ok(CompiledModel { graph, m, layers, retry: opts.retry })
     }
 
     /// The validated graph this model was compiled from.
@@ -235,6 +312,14 @@ impl CompiledModel {
                 total + (r - 1.0) * slowest
             },
         }
+    }
+
+    /// The slowest per-layer design clock (Hz) on `dev` — the rate
+    /// that conservatively converts the model's cycle-denominated
+    /// makespans into wall time (a pipeline drains no faster than its
+    /// slowest stage's clock).
+    pub fn min_clock_hz(&self, dev: &Device) -> f64 {
+        self.layers.iter().map(|l| l.clock_hz(dev)).fold(f64::INFINITY, f64::min)
     }
 
     /// Close every layer session (workers drop the pinned staging
@@ -307,6 +392,25 @@ impl BatchReport {
         } else {
             1.0
         }
+    }
+
+    /// Convert a cycle count to nanoseconds at the given design clock.
+    pub fn cycles_to_ns(cycles: f64, hz: f64) -> f64 {
+        if hz > 0.0 && hz.is_finite() {
+            cycles / hz * 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// `(sequential, pipelined)` makespans in nanoseconds at the given
+    /// design clock (use [`CompiledModel::min_clock_hz`] for the
+    /// device-accurate conservative rate).
+    pub fn makespan_ns(&self, hz: f64) -> (f64, f64) {
+        (
+            Self::cycles_to_ns(self.sequential_makespan_cycles, hz),
+            Self::cycles_to_ns(self.pipelined_makespan_cycles, hz),
+        )
     }
 
     /// `(p50, p95)` of the per-request end-to-end latency (µs).
@@ -486,8 +590,9 @@ impl<'a> GraphExecutor<'a> {
 
     /// Submit topo stage `pos` of request `req`: gather its activations
     /// (graph input or the producer layer's epilogued output), validate
-    /// their operand range, and enqueue the session job with the
-    /// model's shard and retry policies.
+    /// their operand range, lower them through im2col for conv layers,
+    /// and enqueue the session job with the **layer's** tile policy and
+    /// the model's retry policy.
     fn submit_stage(
         &self,
         req: usize,
@@ -505,13 +610,17 @@ impl<'a> GraphExecutor<'a> {
         if layer.input.is_some() {
             check_operand_range(act, g.width(), &format!("request {req} layer {idx} activations"))?;
         }
+        // Conv layers lower host-side: the array only ever sees the
+        // im2col'd GEMM (same lowering as ModelGraph::forward_ref).
+        let a = match &layer.pre {
+            None => act.to_vec(),
+            Some(cw) => cw.im2col(self.model.m, act)?,
+        };
+        let cl = &self.model.layers[idx];
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let job = Job::new(
-            id,
-            JobKind::SessionGemm { session: self.model.layers[idx].session, a: act.to_vec() },
-        )
-        .with_shards(self.model.shards)
-        .with_retry(self.model.retry);
+        let job = Job::new(id, JobKind::SessionGemm { session: cl.session, a })
+            .with_shards(cl.shards)
+            .with_retry(self.model.retry);
         self.coord.submit_job(job)
     }
 

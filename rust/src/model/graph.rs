@@ -4,6 +4,7 @@
 
 use crate::backend::BackendClass;
 use crate::compiler::{gemm_ref, GemmShape};
+use crate::workload::ConvWorkload;
 use crate::{Error, Result};
 
 /// Identifier of one layer within a [`ModelGraph`] (its index in the
@@ -39,17 +40,21 @@ pub enum ElemOp {
 }
 
 /// One layer of a [`ModelGraph`]: a GEMM against pinned weights
-/// followed by an ordered list of fused [`ElemOp`]s.
+/// followed by an ordered list of fused [`ElemOp`]s, optionally
+/// preceded by a host-side im2col lowering ([`LayerSpec::pre`]) that
+/// turns a convolution into that GEMM.
 #[derive(Debug, Clone)]
 pub struct LayerSpec {
     /// Where this layer's activations come from: another layer's output
     /// or (`None`) the graph input.
     pub input: Option<LayerId>,
-    /// Weights, row-major `k×n`.
+    /// Weights, row-major `k×n`. For a conv layer these are the
+    /// im2col-lowered filters ([`ConvWorkload::lower_weights`]).
     pub weights: Vec<i64>,
-    /// Input features (must match the producer's output width).
+    /// Input features per activation row (must match the producer's
+    /// output width; `R·S·C` for a conv layer).
     pub k: usize,
-    /// Output features.
+    /// Output features (`K` filters for a conv layer).
     pub n: usize,
     /// Fused elementwise epilogue, applied in order.
     pub ops: Vec<ElemOp>,
@@ -58,6 +63,11 @@ pub struct LayerSpec {
     /// layers on fast custom tiles and light ones on the overlay).
     /// `None` inherits the compile-time default.
     pub backend: Option<BackendClass>,
+    /// Convolution this layer lowers: the producer's activations run
+    /// through [`ConvWorkload::im2col`] host-side before the GEMM, so
+    /// `k = R·S·C`, `n = K`, and the layer emits `P·Q` output rows per
+    /// item. `None` is a plain dense layer.
+    pub pre: Option<ConvWorkload>,
 }
 
 /// A validated multi-layer network over GEMM layers: shapes checked
@@ -77,6 +87,10 @@ pub struct ModelGraph {
     /// Evaluation order: every layer appears after its input and
     /// residual producers.
     topo: Vec<usize>,
+    /// GEMM rows each layer emits per batch item: `P·Q` for conv
+    /// layers, inherited from the producer for dense layers (1 at the
+    /// graph input).
+    rows_per_item: Vec<usize>,
 }
 
 /// Check that every value fits the signed two's-complement range of
@@ -178,22 +192,73 @@ impl ModelGraph {
             }
         }
         let topo = Self::topo_sort(&layers)?;
-        // Shape inference along the dependency order: each layer's k
-        // must equal its producer's n (or the graph input dimension).
+        // Shape inference along the dependency order. A dense layer
+        // consumes its producer row for row (k must equal the
+        // producer's n); a conv layer re-rows the producer's whole
+        // per-item output (`h·w·c` values) through im2col and emits
+        // `P·Q` rows of its own.
+        let mut rows_per_item = vec![0usize; nl];
         for &i in &topo {
             let l = &layers[i];
-            let in_dim = match l.input {
-                None => input_dim,
-                Some(from) => layers[from.0].n,
+            let (in_rows, in_dim) = match l.input {
+                None => (1, input_dim),
+                Some(from) => (rows_per_item[from.0], layers[from.0].n),
             };
-            if in_dim != l.k {
-                return Err(Error::Config(format!(
-                    "layer {i}: expects {} input features, but its producer supplies {in_dim}",
-                    l.k
-                )));
+            match &l.pre {
+                None => {
+                    if in_dim != l.k {
+                        return Err(Error::Config(format!(
+                            "layer {i}: expects {} input features, but its producer \
+                             supplies {in_dim}",
+                            l.k
+                        )));
+                    }
+                    rows_per_item[i] = in_rows;
+                }
+                Some(cw) => {
+                    if l.k != cw.r * cw.s * cw.c {
+                        return Err(Error::Config(format!(
+                            "layer {i}: conv im2col needs k = R·S·C = {}, layer has {}",
+                            cw.r * cw.s * cw.c,
+                            l.k
+                        )));
+                    }
+                    if l.n != cw.k {
+                        return Err(Error::Config(format!(
+                            "layer {i}: conv emits K = {} channels, layer has n = {}",
+                            cw.k, l.n
+                        )));
+                    }
+                    if in_rows * in_dim != cw.input_len_per_item() {
+                        return Err(Error::Config(format!(
+                            "layer {i}: conv expects a {}x{}x{} image ({} values per item), \
+                             but its producer supplies {}",
+                            cw.h,
+                            cw.w,
+                            cw.c,
+                            cw.input_len_per_item(),
+                            in_rows * in_dim
+                        )));
+                    }
+                    rows_per_item[i] = cw.p * cw.q;
+                }
             }
         }
-        Ok(Self { input_dim, width, layers, topo })
+        // Residuals add producer outputs elementwise, so the row
+        // structure must match too (n equality was checked above).
+        for (i, l) in layers.iter().enumerate() {
+            for op in &l.ops {
+                if let ElemOp::Residual(from) = op {
+                    if rows_per_item[from.0] != rows_per_item[i] {
+                        return Err(Error::Config(format!(
+                            "layer {i}: residual from {from} with {} rows per item onto {}",
+                            rows_per_item[from.0], rows_per_item[i]
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(Self { input_dim, width, layers, topo, rows_per_item })
     }
 
     /// Kahn's algorithm over the input + residual edges; leftovers mean
@@ -274,11 +339,19 @@ impl ModelGraph {
         LayerId(self.layers.len() - 1)
     }
 
-    /// The GEMM shape layer `id` runs at for `m` activation rows per
-    /// request.
-    pub fn layer_shape(&self, id: LayerId, m: usize) -> GemmShape {
+    /// GEMM rows layer `id` emits per batch item: `P·Q` for conv
+    /// layers, inherited from the producer for dense layers (1 at the
+    /// graph input).
+    pub fn rows_per_item(&self, id: LayerId) -> usize {
+        self.rows_per_item[id.0]
+    }
+
+    /// The GEMM shape layer `id` runs at for `items` batch items per
+    /// request: `m = items ·` [`rows_per_item`](Self::rows_per_item)
+    /// (for pure-dense graphs `m = items`, the pre-conv behaviour).
+    pub fn layer_shape(&self, id: LayerId, items: usize) -> GemmShape {
         let l = &self.layers[id.0];
-        GemmShape { m, k: l.k, n: l.n }
+        GemmShape { m: items * self.rows_per_item[id.0], k: l.k, n: l.n }
     }
 
     /// Apply layer `idx`'s fused epilogue to its gathered GEMM output
@@ -339,11 +412,13 @@ impl ModelGraph {
     }
 
     /// The scalar i64 reference forward pass: exact GEMM
-    /// ([`gemm_ref`]) plus the fused epilogues, with the same
-    /// operand-range checks the serving executor applies (so both paths
-    /// accept and reject identical inputs). `a` is row-major
-    /// `m×input_dim`; the return value is the output layer's post-
-    /// epilogue output, row-major `m×output_dim`.
+    /// ([`gemm_ref`]) plus im2col for conv layers and the fused
+    /// epilogues, with the same operand-range checks the serving
+    /// executor applies (so both paths accept and reject identical
+    /// inputs). `a` is row-major `m×input_dim` — `m` batch items, one
+    /// input row each; the return value is the output layer's
+    /// post-epilogue output, row-major
+    /// `(m·rows_per_item)×output_dim`.
     pub fn forward_ref(&self, a: &[i64], m: usize) -> Result<Vec<i64>> {
         if m == 0 || a.len() != m * self.input_dim {
             return Err(Error::Config(format!(
@@ -363,8 +438,16 @@ impl ModelGraph {
             if l.input.is_some() {
                 check_operand_range(input, self.width, &format!("layer {idx} activations"))?;
             }
-            let shape = GemmShape { m, k: l.k, n: l.n };
-            let mut out = gemm_ref(shape, input, &l.weights);
+            let lowered;
+            let act: &[i64] = match &l.pre {
+                None => input,
+                Some(cw) => {
+                    lowered = cw.im2col(m, input)?;
+                    &lowered
+                }
+            };
+            let shape = self.layer_shape(LayerId(idx), m);
+            let mut out = gemm_ref(shape, act, &l.weights);
             self.apply_ops(idx, &mut out, &outs)?;
             outs[idx] = Some(out);
         }
@@ -442,7 +525,51 @@ impl GraphBuilder {
             )));
         }
         let id = LayerId(self.layers.len());
-        self.layers.push(LayerSpec { input, weights, k, n, ops: Vec::new(), backend: None });
+        self.layers.push(LayerSpec {
+            input,
+            weights,
+            k,
+            n,
+            ops: Vec::new(),
+            backend: None,
+            pre: None,
+        });
+        Ok(id)
+    }
+
+    /// Append a convolution layer fed by the most recently added layer
+    /// (or the graph input for the first layer), lowered via im2col to
+    /// a GEMM of shape `m = items·P·Q, k = R·S·C, n = K`. `filters`
+    /// holds `K·R·S·C` values, layout `((f·R + dr)·S + dc)·C + ch`;
+    /// they are lowered to the GEMM weight matrix here
+    /// ([`ConvWorkload::lower_weights`]). The producer must supply
+    /// `h·w·c` values per batch item (checked at
+    /// [`build`](Self::build)).
+    pub fn conv2d(&mut self, conv: ConvWorkload, filters: Vec<i64>) -> Result<LayerId> {
+        let from = self.layers.len().checked_sub(1).map(LayerId);
+        self.conv2d_from(from, conv, filters)
+    }
+
+    /// Append a convolution layer fed by an explicit producer (`None` =
+    /// the graph input) — see [`conv2d`](Self::conv2d).
+    pub fn conv2d_from(
+        &mut self,
+        input: Option<LayerId>,
+        conv: ConvWorkload,
+        filters: Vec<i64>,
+    ) -> Result<LayerId> {
+        self.source_dim(input)?; // producer must exist
+        let weights = conv.lower_weights(&filters)?;
+        let id = LayerId(self.layers.len());
+        self.layers.push(LayerSpec {
+            input,
+            weights,
+            k: conv.r * conv.s * conv.c,
+            n: conv.k,
+            ops: Vec::new(),
+            backend: None,
+            pre: Some(conv),
+        });
         Ok(id)
     }
 
@@ -560,6 +687,7 @@ mod tests {
             n: 2,
             ops: vec![],
             backend: None,
+            pre: None,
         };
         assert!(ModelGraph::new(4, 0, vec![layer.clone()]).is_err());
         assert!(ModelGraph::new(4, 17, vec![layer.clone()]).is_err());
@@ -582,6 +710,7 @@ mod tests {
             n: 4,
             ops: vec![],
             backend: None,
+            pre: None,
         };
         let mut l1 = layer.clone();
         l1.input = Some(LayerId(0));
@@ -604,6 +733,7 @@ mod tests {
             n: 2,
             ops: vec![],
             backend: None,
+            pre: None,
         };
         let l1 = LayerSpec {
             input: Some(LayerId(0)),
@@ -612,6 +742,7 @@ mod tests {
             n: 2,
             ops: vec![],
             backend: None,
+            pre: None,
         };
         let err = ModelGraph::new(2, 8, vec![l0.clone(), l1]).unwrap_err();
         assert!(err.to_string().contains("cycle"), "{err}");
@@ -634,6 +765,7 @@ mod tests {
             n: 2,
             ops: vec![],
             backend: None,
+            pre: None,
         };
         let l1 = LayerSpec {
             input: None,
@@ -642,6 +774,7 @@ mod tests {
             n: 3,
             ops: vec![],
             backend: None,
+            pre: None,
         };
         let g = ModelGraph::new(2, 8, vec![l0, l1]).unwrap();
         assert_eq!(g.topo_order(), &[1, 0]);
@@ -666,5 +799,50 @@ mod tests {
         assert!(g.forward_ref(&[1000, 0], 1).is_err());
         // Wrong input size too.
         assert!(g.forward_ref(&[1], 1).is_err());
+    }
+
+    #[test]
+    fn conv_layers_lower_and_chain_into_dense() {
+        // 4x4x2 image -> 2x2 conv stride 2 (3 filters) -> relu ->
+        // dense mixing the 3 channels down to 2, per output position.
+        let cw = ConvWorkload::new(1, 2, 4, 4, 3, 2, 2, 2, 0).unwrap();
+        assert_eq!((cw.p, cw.q), (2, 2));
+        let filters = vec![1i64; 3 * 2 * 2 * 2];
+        let dense_w = vec![1i64; 3 * 2];
+        let mut b = GraphBuilder::new(cw.input_len_per_item(), 8);
+        let c = b.conv2d(cw, filters.clone()).unwrap();
+        b.relu(c).unwrap();
+        let d = b.dense(dense_w.clone(), 2).unwrap();
+        let g = b.build().unwrap();
+        // Conv emits P·Q = 4 rows per item; the dense keeps them.
+        assert_eq!(g.rows_per_item(c), 4);
+        assert_eq!(g.rows_per_item(d), 4);
+        assert_eq!(g.layer_shape(c, 2), GemmShape { m: 8, k: 8, n: 3 });
+        assert_eq!(g.layer_shape(d, 2), GemmShape { m: 8, k: 3, n: 2 });
+        // forward_ref == direct conv -> relu -> plain GEMM, by hand.
+        let a: Vec<i64> = (0..cw.input_len_per_item() as i64).map(|v| v % 5 - 2).collect();
+        let mut mid = cw.conv_ref(1, &a, &filters).unwrap();
+        for v in mid.iter_mut() {
+            *v = (*v).max(0);
+        }
+        let want = gemm_ref(GemmShape { m: 4, k: 3, n: 2 }, &mid, &dense_w);
+        assert_eq!(g.forward_ref(&a, 1).unwrap(), want);
+    }
+
+    #[test]
+    fn conv_validation_rejects_geometry_mismatches() {
+        let cw = ConvWorkload::new(1, 2, 4, 4, 3, 2, 2, 2, 0).unwrap();
+        // Graph input does not fill the 4x4x2 image.
+        let mut b = GraphBuilder::new(10, 8);
+        b.conv2d(cw, vec![1; 24]).unwrap();
+        let err = b.build().unwrap_err();
+        assert!(err.to_string().contains("4x4x2"), "{err}");
+        // Residuals across different row structures are rejected: conv
+        // emits 4 rows/item, its dense producer-side sibling emits 1.
+        let mut b = GraphBuilder::new(cw.input_len_per_item(), 8);
+        let s = b.dense_from(None, vec![1; cw.input_len_per_item() * 3], 3).unwrap();
+        let c = b.conv2d_from(None, cw, vec![1; 24]).unwrap();
+        b.residual(c, s).unwrap();
+        assert!(b.build().unwrap_err().to_string().contains("rows per item"));
     }
 }

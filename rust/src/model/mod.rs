@@ -14,12 +14,16 @@
 //!   rejection.
 //! * [`CompiledModel`] — the lowering pass: every layer becomes a
 //!   pinned per-layer session
-//!   ([`open_session_on`](crate::coordinator::Coordinator::open_session_on)),
-//!   reusing [`ShardPolicy`](crate::coordinator::ShardPolicy) so wide
-//!   layers scatter across worker regions; epilogues are fused into the
-//!   gather step (host-side, zero extra array jobs). Compile also
-//!   dry-runs each layer once for a deterministic per-request cycle
-//!   count, feeding the [`PipelineEstimate`] makespan model.
+//!   ([`open_session_on`](crate::coordinator::Coordinator::open_session_on))
+//!   with a **per-layer** [`TilePolicy`](crate::coordinator::TilePolicy)
+//!   — one fixed policy, or a `k_tiles × n_tiles` grid the analytic
+//!   auto-tuner ([`crate::tuner`]) picks per layer under
+//!   [`TuneMode::Auto`] — so wide layers scatter across worker
+//!   regions; conv layers ([`crate::workload::ConvWorkload`]) lower
+//!   through im2col host-side; epilogues are fused into the gather
+//!   step (host-side, zero extra array jobs). Compile also dry-runs
+//!   each layer once for a deterministic per-request cycle count,
+//!   feeding the [`PipelineEstimate`] makespan model.
 //! * [`GraphExecutor`] — batch execution through the layer pipeline:
 //!   under [`ExecMode::Pipelined`], layer `L` of request `i` overlaps
 //!   layer `L-1` of request `i+1`, so throughput is bounded by the
@@ -65,6 +69,6 @@ mod graph;
 
 pub use exec::{
     BatchReport, CompileOptions, CompiledLayer, CompiledModel, ExecMode, GraphExecutor,
-    LayerReport, PipelineEstimate,
+    LayerReport, PipelineEstimate, TuneMode,
 };
 pub use graph::{ElemOp, GraphBuilder, LayerId, LayerSpec, ModelGraph};

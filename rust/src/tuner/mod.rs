@@ -1,0 +1,326 @@
+//! Analytic mapping auto-tuner: predict the simulated cycle cost of a
+//! `k_tiles × n_tiles` tiling of a GEMM on a (possibly heterogeneous)
+//! region pool, and search the grid space for the best mapping.
+//!
+//! The per-tile model ([`tile_cost`]) is built from the same
+//! per-backend [`CycleModel`](crate::arch::CycleModel) the simulators
+//! charge through, mirroring the compiler's plan arithmetic exactly:
+//! per round the array stages two operand planes, multiplies, extends
+//! the product into the accumulator width, reduces the `q` row lanes,
+//! folds the partial, and finally stores — so for an unbatched,
+//! non-booth run the prediction *equals* the interpreter's dry-run
+//! cycle charge (asserted in `rust/tests/tuner.rs`). On mixed pools
+//! the model stays an estimate: the scheduler places tiles dynamically,
+//! while the tuner assumes the greedy longest-processing-time
+//! placement computed here.
+//!
+//! Two cycle quantities come out of a prediction:
+//!
+//! * `critical_cycles` — the busiest region's load under LPT placement;
+//!   the latency the grid is **chosen** by (Fast-OverlaPIM's
+//!   overlap-driven objective).
+//! * `total_cycles` — the summed per-tile cost; what the gathered
+//!   [`RunStats`](crate::array::RunStats) cycle rollup of a scattered
+//!   job measures, and therefore what predictions are **validated**
+//!   against.
+//!
+//! [`choose_grid`] is the bounded search: greedy evaluation of every
+//! grid up to `2×` the pool size per axis (capped at 16) with a
+//! branch-and-bound prune on a perfect-balance lower bound. It fixes
+//! the 1-D-only limitation of [`TilePolicy::Auto`]: the coordinator
+//! routes `Auto` jobs through here, and
+//! [`TuneMode::Auto`](crate::model::TuneMode) picks a per-layer grid
+//! at model-compile time.
+
+use crate::arch::ArchKind;
+use crate::array::ArrayGeometry;
+use crate::compiler::{split_shape_kn, GemmShape};
+use crate::coordinator::TilePolicy;
+use crate::util::ceil_log2;
+
+/// The tuner's verdict for one GEMM on one pool: the chosen grid and
+/// its predicted cycle quantities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePrediction {
+    /// Tiles along the reduction dimension `k`.
+    pub k_tiles: usize,
+    /// Tiles along the output dimension `n`.
+    pub n_tiles: usize,
+    /// Busiest-region cycles under the greedy LPT placement — the
+    /// latency objective the grid is chosen by.
+    pub critical_cycles: u64,
+    /// Summed per-tile cycles — comparable to the gathered `RunStats`
+    /// cycle rollup of the scattered job.
+    pub total_cycles: u64,
+}
+
+impl TilePrediction {
+    /// The normalized [`TilePolicy`] carrying this grid.
+    pub fn policy(&self) -> TilePolicy {
+        TilePolicy::grid(self.k_tiles, self.n_tiles)
+    }
+
+    /// Total tiles in the grid.
+    pub fn tiles(&self) -> usize {
+        self.k_tiles * self.n_tiles
+    }
+}
+
+/// Deterministic preference order over candidate grids: lower critical
+/// path, then lower total work (less add-reduce/gather overhead), then
+/// fewer tiles, then the smaller k-split (host add-reduce is the more
+/// expensive gather).
+fn better(a: &TilePrediction, b: &TilePrediction) -> bool {
+    (a.critical_cycles, a.total_cycles, a.tiles(), a.k_tiles)
+        < (b.critical_cycles, b.total_cycles, b.tiles(), b.k_tiles)
+}
+
+/// Predicted cycles of one GEMM tile run alone on one `kind` region —
+/// the compiler's plan arithmetic evaluated through the design's
+/// [`CycleModel`](crate::arch::CycleModel). Exact for unbatched,
+/// non-booth execution; zero for degenerate (empty) shapes.
+pub fn tile_cost(shape: GemmShape, width: u16, kind: ArchKind, geom: ArrayGeometry) -> u64 {
+    if shape.m == 0 || shape.n == 0 || shape.k == 0 {
+        return 0;
+    }
+    // Row-lane count the Accumulate reduces over. The compiler rejects
+    // non-power-of-two lane counts before any plan exists; rounding up
+    // keeps the estimator total on geometries it never sees.
+    let mut q = geom.row_lanes();
+    if !q.is_power_of_two() {
+        q = q.next_power_of_two();
+    }
+    let w = u32::from(width.max(1));
+    // GemmPlan::acc_width: the dot-product accumulator, capped at 48.
+    let acc = (2 * w + ceil_log2(shape.k.max(2))).min(48);
+    let slices = shape.k.div_ceil(q) as u64;
+    let rounds = (shape.m * shape.n).div_ceil(geom.rows) as u64;
+    let model = kind.cycles();
+    let per_slice = u64::from(2 * w)      // Load A + Load B (one cycle per bit plane)
+        + model.mult(w)                   // bit-serial multiply
+        + model.alu(acc - 2 * w)          // Extend the 2w product to acc bits
+        + model.accumulate(q, acc)        // reduce the q row lanes
+        + model.alu(acc);                 // Cpx/Add into the running partial
+    rounds * (slices * per_slice + u64::from(acc)) // + the per-round Store
+}
+
+/// Greedy LPT placement of `tiles` onto `pool` regions: each tile
+/// (costliest first) lands on the region where it finishes earliest.
+/// Returns `(critical, total)` cycles of the placement.
+fn place(costs: &[Vec<u64>]) -> (u64, u64) {
+    let regions = costs.first().map_or(1, Vec::len);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by_key(|&t| std::cmp::Reverse(costs[t].iter().copied().min().unwrap_or(0)));
+    let mut load = vec![0u64; regions];
+    let mut total = 0u64;
+    for &t in &order {
+        let mut best_r = 0;
+        let mut best_f = u64::MAX;
+        for (r, &l) in load.iter().enumerate() {
+            let f = l.saturating_add(costs[t][r]);
+            if f < best_f {
+                best_f = f;
+                best_r = r;
+            }
+        }
+        load[best_r] = best_f;
+        total = total.saturating_add(costs[t][best_r]);
+    }
+    (load.into_iter().max().unwrap_or(0), total)
+}
+
+/// Cost matrix of a `k_t × n_t` grid: `costs[tile][region]`.
+fn grid_costs(
+    shape: GemmShape,
+    width: u16,
+    k_t: usize,
+    n_t: usize,
+    pool: &[ArchKind],
+    geom: ArrayGeometry,
+) -> Vec<Vec<u64>> {
+    split_shape_kn(shape, k_t, n_t)
+        .into_iter()
+        .map(|(_, _, tile)| pool.iter().map(|k| tile_cost(tile, width, *k, geom)).collect())
+        .collect()
+}
+
+fn evaluate_grid(
+    shape: GemmShape,
+    width: u16,
+    k_t: usize,
+    n_t: usize,
+    pool: &[ArchKind],
+    geom: ArrayGeometry,
+) -> TilePrediction {
+    let costs = grid_costs(shape, width, k_t, n_t, pool, geom);
+    let (critical_cycles, total_cycles) = place(&costs);
+    TilePrediction { k_tiles: k_t, n_tiles: n_t, critical_cycles, total_cycles }
+}
+
+/// Predicted cycles of running `shape` under an explicit [`TilePolicy`]
+/// on `pool` — the same model [`choose_grid`] searches with, exposed so
+/// fixed policies can be compared against the tuner's pick.
+/// `TilePolicy::Auto` delegates to the search itself. An empty pool is
+/// treated as one PiCaSO-F region.
+pub fn predict_cycles(
+    shape: GemmShape,
+    width: u16,
+    policy: TilePolicy,
+    pool: &[ArchKind],
+    geom: ArrayGeometry,
+) -> TilePrediction {
+    let one = [ArchKind::PICASO_F];
+    let pool = if pool.is_empty() { &one[..] } else { pool };
+    let (k_t, n_t) = match policy {
+        TilePolicy::None => (1, 1),
+        TilePolicy::Fixed(n) => (1, n.max(1)),
+        TilePolicy::Grid { k_tiles, n_tiles } => (k_tiles.max(1), n_tiles.max(1)),
+        TilePolicy::Auto => return choose_grid(shape, width, pool, geom),
+    };
+    evaluate_grid(shape, width, k_t.min(shape.k.max(1)), n_t.min(shape.n.max(1)), pool, geom)
+}
+
+/// The bounded mapping search: evaluate every `k_tiles × n_tiles` grid
+/// with each axis capped at `min(axis length, 2 × pool size, 16)`,
+/// pruning candidates whose perfect-balance lower bound (total work
+/// spread evenly, or the single costliest tile) already exceeds the
+/// best critical path found. Deterministic; ties break toward less
+/// total work, fewer tiles, and the smaller k-split. An empty pool is
+/// treated as one PiCaSO-F region.
+pub fn choose_grid(
+    shape: GemmShape,
+    width: u16,
+    pool: &[ArchKind],
+    geom: ArrayGeometry,
+) -> TilePrediction {
+    let one = [ArchKind::PICASO_F];
+    let pool = if pool.is_empty() { &one[..] } else { pool };
+    let cap = (2 * pool.len()).clamp(1, 16);
+    let k_cap = cap.min(shape.k.max(1));
+    let n_cap = cap.min(shape.n.max(1));
+    let mut best = evaluate_grid(shape, width, 1, 1, pool, geom);
+    for k_t in 1..=k_cap {
+        for n_t in 1..=n_cap {
+            if k_t == 1 && n_t == 1 {
+                continue;
+            }
+            let costs = grid_costs(shape, width, k_t, n_t, pool, geom);
+            // Branch-and-bound prune: even a perfectly balanced
+            // placement of the cheapest per-tile costs cannot beat a
+            // critical path below max(sum/regions, costliest tile).
+            let mins: Vec<u64> =
+                costs.iter().map(|c| c.iter().copied().min().unwrap_or(0)).collect();
+            let sum: u64 = mins.iter().sum();
+            let lb = sum.div_ceil(pool.len() as u64).max(mins.iter().copied().max().unwrap_or(0));
+            if lb > best.critical_cycles {
+                continue;
+            }
+            let (critical_cycles, total_cycles) = place(&costs);
+            let cand =
+                TilePrediction { k_tiles: k_t, n_tiles: n_t, critical_cycles, total_cycles };
+            if better(&cand, &best) {
+                best = cand;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CustomDesign;
+
+    const GEOM: ArrayGeometry = ArrayGeometry { rows: 2, cols: 1 };
+
+    #[test]
+    fn tile_cost_mirrors_the_plan_arithmetic() {
+        // m=2, k=20, n=7, w=8 on a 2x1 overlay: acc = 16 + ceil_log2(20)
+        // = 21, 2 slices of 16 lanes, ceil(14/2) = 7 rounds.
+        let shape = GemmShape { m: 2, k: 20, n: 7 };
+        let kind = ArchKind::PICASO_F;
+        let model = kind.cycles();
+        let per_slice =
+            16 + model.mult(8) + model.alu(5) + model.accumulate(16, 21) + model.alu(21);
+        assert_eq!(tile_cost(shape, 8, kind, GEOM), 7 * (2 * per_slice + 21));
+        // Degenerate shapes cost nothing.
+        assert_eq!(tile_cost(GemmShape { m: 0, k: 4, n: 4 }, 8, kind, GEOM), 0);
+    }
+
+    #[test]
+    fn cost_is_monotone_in_work() {
+        let kind = ArchKind::PICASO_F;
+        let base = tile_cost(GemmShape { m: 4, k: 16, n: 8 }, 8, kind, GEOM);
+        assert!(tile_cost(GemmShape { m: 8, k: 16, n: 8 }, 8, kind, GEOM) > base);
+        assert!(tile_cost(GemmShape { m: 4, k: 33, n: 8 }, 8, kind, GEOM) > base);
+        assert!(tile_cost(GemmShape { m: 4, k: 16, n: 16 }, 8, kind, GEOM) > base);
+    }
+
+    #[test]
+    fn single_region_prefers_no_split() {
+        // With one region every split pays gather overhead for zero
+        // parallelism: the tuner must keep the job whole.
+        let pool = [ArchKind::PICASO_F];
+        let pred = choose_grid(GemmShape { m: 4, k: 16, n: 8 }, 8, &pool, GEOM);
+        assert_eq!((pred.k_tiles, pred.n_tiles), (1, 1));
+        assert_eq!(pred.policy(), TilePolicy::None);
+    }
+
+    #[test]
+    fn multi_region_split_beats_unsplit_on_the_critical_path() {
+        let pool = [ArchKind::PICASO_F; 4];
+        let shape = GemmShape { m: 4, k: 16, n: 8 };
+        let unsplit = predict_cycles(shape, 8, TilePolicy::None, &pool, GEOM);
+        let tuned = choose_grid(shape, 8, &pool, GEOM);
+        assert!(tuned.tiles() > 1, "4 regions must earn a split: {tuned:?}");
+        assert!(
+            tuned.critical_cycles < unsplit.critical_cycles,
+            "tuned {} vs unsplit {}",
+            tuned.critical_cycles,
+            unsplit.critical_cycles
+        );
+        // The tuned pick is at least as good as the old 1-D Auto split.
+        let one_d = predict_cycles(shape, 8, TilePolicy::Fixed(pool.len()), &pool, GEOM);
+        assert!(tuned.critical_cycles <= one_d.critical_cycles);
+    }
+
+    #[test]
+    fn predictions_clamp_to_the_shape() {
+        let pool = [ArchKind::PICASO_F; 2];
+        let shape = GemmShape { m: 2, k: 3, n: 2 };
+        let pred = predict_cycles(
+            shape,
+            8,
+            TilePolicy::Grid { k_tiles: 64, n_tiles: 64 },
+            &pool,
+            GEOM,
+        );
+        assert!(pred.k_tiles <= shape.k && pred.n_tiles <= shape.n);
+    }
+
+    #[test]
+    fn heterogeneous_pools_place_on_the_cheaper_design() {
+        // CoMeFa-A multiplies ~2x faster than the overlay at w=8; on a
+        // mixed pool the LPT placement must exploit that, so the
+        // critical path is below an all-overlay pool's.
+        let mixed = [ArchKind::PICASO_F, ArchKind::Custom(CustomDesign::CoMeFaA)];
+        let overlay_only = [ArchKind::PICASO_F; 2];
+        let shape = GemmShape { m: 8, k: 32, n: 8 };
+        let m = choose_grid(shape, 8, &mixed, GEOM);
+        let o = choose_grid(shape, 8, &overlay_only, GEOM);
+        assert!(
+            m.critical_cycles < o.critical_cycles,
+            "mixed {} vs overlay {}",
+            m.critical_cycles,
+            o.critical_cycles
+        );
+    }
+
+    #[test]
+    fn empty_pool_falls_back_to_one_overlay_region() {
+        let shape = GemmShape { m: 2, k: 16, n: 4 };
+        let a = choose_grid(shape, 8, &[], GEOM);
+        let b = choose_grid(shape, 8, &[ArchKind::PICASO_F], GEOM);
+        assert_eq!(a, b);
+    }
+}

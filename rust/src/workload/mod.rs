@@ -1,0 +1,356 @@
+//! Convolution workloads lowered onto the GEMM serving stack.
+//!
+//! The paper's overlay-vs-custom comparison runs GEMMs; real PIM
+//! studies (Fast-OverlaPIM, the `pim_mapper` optimizer) are driven by
+//! convolution layers parameterized as `{R,S,P,Q,C,K,N}`. This module
+//! carries that workload class: [`ConvWorkload`] describes one 2-D
+//! convolution (kernel `R×S`, `C` input channels, `K` output channels,
+//! `N` images, stride/zero-padding) and lowers it to the GEMM the
+//! array actually executes via **im2col**:
+//!
+//! ```text
+//!   GEMM m = N·P·Q   (one row per output pixel per image)
+//!        k = R·S·C   (one column per kernel tap per input channel)
+//!        n = K       (one output column per filter)
+//! ```
+//!
+//! Activation layout is row-major spatial-major, channels innermost:
+//! an image is `h·w·c` values indexed `(y·w + x)·c + ch`, and a conv
+//! output is `p·q·k` values indexed `(py·q + px)·k + f` — so a conv
+//! layer's output is directly the next conv layer's input with
+//! `h' = p, w' = q, c' = k`, and a dense layer can consume it as
+//! `p·q` rows of `k` features (per-position channel mixing).
+//!
+//! [`ConvWorkload::conv_ref`] is an independent scalar direct
+//! convolution (no im2col) used by the tests to pin the lowering
+//! bit-exact end to end.
+
+use crate::compiler::GemmShape;
+use crate::{Error, Result};
+
+/// One 2-D convolution layer in the `pim_mapper` `{R,S,P,Q,C,K,N}`
+/// parameterization, plus the input geometry and stride/padding it is
+/// applied with. Construct via [`ConvWorkload::new`], which validates
+/// the geometry and derives the output extent `P×Q`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvWorkload {
+    /// Batch images (`N`).
+    pub n: usize,
+    /// Input channels (`C`).
+    pub c: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Output channels / filters (`K`).
+    pub k: usize,
+    /// Kernel height (`R`).
+    pub r: usize,
+    /// Kernel width (`S`).
+    pub s: usize,
+    /// Spatial stride (same both axes).
+    pub stride: usize,
+    /// Zero padding on every edge.
+    pub pad: usize,
+    /// Output height (`P`), derived: `(h + 2·pad − r)/stride + 1`.
+    pub p: usize,
+    /// Output width (`Q`), derived: `(w + 2·pad − s)/stride + 1`.
+    pub q: usize,
+}
+
+impl ConvWorkload {
+    /// Validate the geometry and derive the output extent. Errors on
+    /// zero dimensions, `stride == 0`, or a kernel larger than the
+    /// padded input.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        r: usize,
+        s: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<Self> {
+        if n == 0 || c == 0 || h == 0 || w == 0 || k == 0 || r == 0 || s == 0 {
+            return Err(Error::Config(format!(
+                "conv workload has a zero dimension: N={n} C={c} {h}x{w} K={k} {r}x{s}"
+            )));
+        }
+        if stride == 0 {
+            return Err(Error::Config("conv stride must be >= 1".into()));
+        }
+        if r > h + 2 * pad || s > w + 2 * pad {
+            return Err(Error::Config(format!(
+                "conv kernel {r}x{s} exceeds the padded {}x{} input",
+                h + 2 * pad,
+                w + 2 * pad
+            )));
+        }
+        let p = (h + 2 * pad - r) / stride + 1;
+        let q = (w + 2 * pad - s) / stride + 1;
+        Ok(Self { n, c, h, w, k, r, s, stride, pad, p, q })
+    }
+
+    /// The im2col GEMM shape for `items` images:
+    /// `m = items·P·Q, k = R·S·C, n = K`.
+    pub fn gemm_shape_for(&self, items: usize) -> GemmShape {
+        GemmShape { m: items * self.p * self.q, k: self.r * self.s * self.c, n: self.k }
+    }
+
+    /// The im2col GEMM shape at the workload's own batch `N`.
+    pub fn gemm_shape(&self) -> GemmShape {
+        self.gemm_shape_for(self.n)
+    }
+
+    /// Values per input image: `h·w·c`.
+    pub fn input_len_per_item(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Values per output image: `p·q·k`.
+    pub fn output_len_per_item(&self) -> usize {
+        self.p * self.q * self.k
+    }
+
+    /// Multiply-accumulates per image: `P·Q·K·R·S·C`.
+    pub fn macs_per_item(&self) -> u64 {
+        (self.p * self.q * self.k) as u64 * (self.r * self.s * self.c) as u64
+    }
+
+    /// Lower `items` images (`items·h·w·c` values, layout
+    /// `(y·w + x)·c + ch` per image) to the im2col activation matrix,
+    /// row-major `(items·P·Q) × (R·S·C)`. Out-of-bounds taps (padding)
+    /// contribute zeros. Row `(item·P + py)·Q + px` holds the receptive
+    /// field of output pixel `(py, px)`; column `(dr·S + dc)·C + ch`
+    /// holds kernel tap `(dr, dc)` of channel `ch` — matching
+    /// [`lower_weights`](Self::lower_weights)' row order so the plain
+    /// GEMM reproduces the convolution exactly.
+    pub fn im2col(&self, items: usize, input: &[i64]) -> Result<Vec<i64>> {
+        let per_item = self.input_len_per_item();
+        if items == 0 || input.len() != items * per_item {
+            return Err(Error::Config(format!(
+                "im2col: {} values do not fill {items} images of {per_item} ({}x{}x{})",
+                input.len(),
+                self.h,
+                self.w,
+                self.c
+            )));
+        }
+        let kdim = self.r * self.s * self.c;
+        let mut a = vec![0i64; items * self.p * self.q * kdim];
+        for item in 0..items {
+            let img = &input[item * per_item..(item + 1) * per_item];
+            for py in 0..self.p {
+                for px in 0..self.q {
+                    let row = (item * self.p + py) * self.q + px;
+                    let base = row * kdim;
+                    for dr in 0..self.r {
+                        // Signed arithmetic: y < pad underflows usize.
+                        let y = (py * self.stride + dr) as i64 - self.pad as i64;
+                        if y < 0 || y >= self.h as i64 {
+                            continue; // padding row: stays zero
+                        }
+                        for dc in 0..self.s {
+                            let x = (px * self.stride + dc) as i64 - self.pad as i64;
+                            if x < 0 || x >= self.w as i64 {
+                                continue; // padding column: stays zero
+                            }
+                            let src = (y as usize * self.w + x as usize) * self.c;
+                            let dst = base + (dr * self.s + dc) * self.c;
+                            a[dst..dst + self.c]
+                                .copy_from_slice(&img[src..src + self.c]);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(a)
+    }
+
+    /// Lower the filter bank (`k·r·s·c` values, layout
+    /// `((f·R + dr)·S + dc)·C + ch`) to the GEMM weight matrix,
+    /// row-major `(R·S·C) × K` — rows ordered exactly like
+    /// [`im2col`](Self::im2col)'s columns.
+    pub fn lower_weights(&self, filters: &[i64]) -> Result<Vec<i64>> {
+        let want = self.k * self.r * self.s * self.c;
+        if filters.len() != want {
+            return Err(Error::Config(format!(
+                "conv filters: {} values do not fill {} ({}x{}x{}x{})",
+                filters.len(),
+                want,
+                self.k,
+                self.r,
+                self.s,
+                self.c
+            )));
+        }
+        let kdim = self.r * self.s * self.c;
+        let mut b = vec![0i64; kdim * self.k];
+        for f in 0..self.k {
+            for tap in 0..kdim {
+                b[tap * self.k + f] = filters[f * kdim + tap];
+            }
+        }
+        Ok(b)
+    }
+
+    /// Scalar direct convolution of `items` images — an independent
+    /// reference implementation (no im2col, no GEMM) the lowering is
+    /// checked bit-exact against. Output layout is `(py·q + px)·k + f`
+    /// per image, identical to what the lowered GEMM produces.
+    pub fn conv_ref(&self, items: usize, input: &[i64], filters: &[i64]) -> Result<Vec<i64>> {
+        let per_item = self.input_len_per_item();
+        if items == 0 || input.len() != items * per_item {
+            return Err(Error::Config(format!(
+                "conv_ref: {} values do not fill {items} images of {per_item}",
+                input.len()
+            )));
+        }
+        let kdim = self.r * self.s * self.c;
+        if filters.len() != self.k * kdim {
+            return Err(Error::Config(format!(
+                "conv_ref: {} filter values, expected {}",
+                filters.len(),
+                self.k * kdim
+            )));
+        }
+        let mut out = vec![0i64; items * self.output_len_per_item()];
+        for item in 0..items {
+            let img = &input[item * per_item..(item + 1) * per_item];
+            for py in 0..self.p {
+                for px in 0..self.q {
+                    for f in 0..self.k {
+                        let mut acc = 0i64;
+                        for dr in 0..self.r {
+                            let y = (py * self.stride + dr) as i64 - self.pad as i64;
+                            if y < 0 || y >= self.h as i64 {
+                                continue;
+                            }
+                            for dc in 0..self.s {
+                                let x = (px * self.stride + dc) as i64 - self.pad as i64;
+                                if x < 0 || x >= self.w as i64 {
+                                    continue;
+                                }
+                                for ch in 0..self.c {
+                                    let v = img[(y as usize * self.w + x as usize) * self.c + ch];
+                                    let wt = filters
+                                        [(f * self.r + dr) * self.s * self.c + dc * self.c + ch];
+                                    acc += v * wt;
+                                }
+                            }
+                        }
+                        out[(item * self.p + py) * self.q * self.k + px * self.k + f] = acc;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::gemm_ref;
+    use crate::util::Xoshiro256;
+
+    fn filled(len: usize, width: u16, seed: u64) -> Vec<i64> {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut v = vec![0i64; len];
+        rng.fill_signed(&mut v, width);
+        v
+    }
+
+    #[test]
+    fn output_extent_arithmetic() {
+        // 8x8, 3x3, stride 1, pad 1: "same" convolution.
+        let cw = ConvWorkload::new(1, 3, 8, 8, 4, 3, 3, 1, 1).unwrap();
+        assert_eq!((cw.p, cw.q), (8, 8));
+        assert_eq!(cw.gemm_shape(), GemmShape { m: 64, k: 27, n: 4 });
+        // 7x7, 3x3, stride 2, pad 0: floor arithmetic.
+        let cw = ConvWorkload::new(2, 1, 7, 7, 2, 3, 3, 2, 0).unwrap();
+        assert_eq!((cw.p, cw.q), (3, 3));
+        assert_eq!(cw.gemm_shape(), GemmShape { m: 18, k: 9, n: 2 });
+        assert_eq!(cw.gemm_shape_for(5), GemmShape { m: 45, k: 9, n: 2 });
+    }
+
+    #[test]
+    fn invalid_geometry_is_rejected() {
+        assert!(ConvWorkload::new(1, 0, 4, 4, 1, 3, 3, 1, 0).is_err()); // zero dim
+        assert!(ConvWorkload::new(1, 1, 4, 4, 1, 3, 3, 0, 0).is_err()); // stride 0
+        assert!(ConvWorkload::new(1, 1, 2, 2, 1, 3, 3, 1, 0).is_err()); // kernel > input
+        // Padding can rescue an otherwise-too-small input.
+        assert!(ConvWorkload::new(1, 1, 2, 2, 1, 3, 3, 1, 1).is_ok());
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct_convolution() {
+        // Strides, padding, channels, batch — every lowering axis.
+        for (h, w, r, s, stride, pad, c, k, items) in [
+            (5, 5, 3, 3, 1, 0, 2, 3, 1),
+            (6, 5, 3, 2, 2, 1, 3, 2, 2),
+            (4, 4, 2, 2, 2, 0, 1, 4, 3),
+            (5, 5, 3, 3, 1, 2, 2, 2, 2),
+        ] {
+            let cw = ConvWorkload::new(items, c, h, w, k, r, s, stride, pad).unwrap();
+            let input = filled(items * cw.input_len_per_item(), 8, 0xC0DE + h as u64);
+            let filters = filled(k * r * s * c, 8, 0xF117 + w as u64);
+            let a = cw.im2col(items, &input).unwrap();
+            let b = cw.lower_weights(&filters).unwrap();
+            let shape = cw.gemm_shape_for(items);
+            assert_eq!(a.len(), shape.m * shape.k);
+            assert_eq!(b.len(), shape.k * shape.n);
+            let via_gemm = gemm_ref(shape, &a, &b);
+            let direct = cw.conv_ref(items, &input, &filters).unwrap();
+            assert_eq!(via_gemm, direct, "{h}x{w} k{r}x{s} s{stride} p{pad} c{c} f{k}");
+        }
+    }
+
+    #[test]
+    fn one_by_one_conv_is_plain_gemm() {
+        // 1x1 kernel, stride 1, no padding: im2col is the identity and
+        // the convolution degenerates to a (h·w) x c by c x k GEMM.
+        let cw = ConvWorkload::new(1, 3, 4, 4, 5, 1, 1, 1, 0).unwrap();
+        let input = filled(cw.input_len_per_item(), 8, 0x11);
+        let filters = filled(5 * 3, 8, 0x22);
+        let a = cw.im2col(1, &input).unwrap();
+        assert_eq!(a, input, "1x1/s1/p0 im2col must be the identity");
+        let b = cw.lower_weights(&filters).unwrap();
+        let direct = cw.conv_ref(1, &input, &filters).unwrap();
+        assert_eq!(gemm_ref(cw.gemm_shape(), &a, &b), direct);
+    }
+
+    #[test]
+    fn padding_contributes_zeros() {
+        // All-ones image and filter: corner output of a 3x3/pad 1 conv
+        // sees only 4 in-bounds taps, the center sees all 9.
+        let cw = ConvWorkload::new(1, 1, 3, 3, 1, 3, 3, 1, 1).unwrap();
+        let ones = [1i64; 9];
+        let out = cw.conv_ref(1, &ones, &ones).unwrap();
+        assert_eq!((cw.p, cw.q), (3, 3));
+        assert_eq!(out[0], 4, "corner");
+        assert_eq!(out[4], 9, "center");
+        let a = cw.im2col(1, &ones).unwrap();
+        let b = cw.lower_weights(&ones).unwrap();
+        assert_eq!(gemm_ref(cw.gemm_shape(), &a, &b), out);
+    }
+
+    #[test]
+    fn chained_convs_share_the_activation_layout() {
+        // conv1's output (p1·q1·k1, channels innermost) feeds conv2 as
+        // an h=p1, w=q1, c=k1 image with no relayout.
+        let c1 = ConvWorkload::new(1, 2, 6, 6, 3, 3, 3, 1, 0).unwrap(); // -> 4x4x3
+        let c2 = ConvWorkload::new(1, 3, c1.p, c1.q, 2, 2, 2, 2, 0).unwrap(); // -> 2x2x2
+        let input = filled(c1.input_len_per_item(), 6, 0x33);
+        let f1 = filled(3 * 3 * 3 * 2, 4, 0x44);
+        let f2 = filled(2 * 2 * 2 * 3, 4, 0x55);
+        let mid = c1.conv_ref(1, &input, &f1).unwrap();
+        let direct = c2.conv_ref(1, &mid, &f2).unwrap();
+        let a2 = c2.im2col(1, &mid).unwrap();
+        let b2 = c2.lower_weights(&f2).unwrap();
+        assert_eq!(gemm_ref(c2.gemm_shape(), &a2, &b2), direct);
+    }
+}

@@ -8,7 +8,7 @@ use picaso::arch::CustomDesign;
 use picaso::backend::BackendClass;
 use picaso::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, RegionSpec, ShardPolicy};
 use picaso::model::{
-    CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor, ModelGraph,
+    CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor, ModelGraph, TuneMode,
 };
 use picaso::prelude::*;
 use picaso::util::Xoshiro256;
@@ -73,7 +73,11 @@ fn mlp_bit_exact_across_pools_and_shard_policies() {
             let model = CompiledModel::compile(
                 &coord,
                 graph,
-                CompileOptions { rows_per_request: m, shards, ..Default::default() },
+                CompileOptions {
+                    rows_per_request: m,
+                    tune: TuneMode::Fixed(shards),
+                    ..Default::default()
+                },
             )
             .unwrap();
             let exec = GraphExecutor::new(&coord, &model);

@@ -30,6 +30,14 @@ fn pool(regions: Vec<RegionSpec>) -> Coordinator {
     .unwrap()
 }
 
+/// The fan-out `ShardPolicy::Auto` resolves to: the analytic mapping
+/// tuner's grid for this shape on the pool, clamped to the shape the
+/// same way the coordinator clamps it.
+fn auto_tiles(shape: GemmShape, kinds: &[ArchKind]) -> usize {
+    let p = choose_grid(shape, 8, kinds, ArrayGeometry::new(2, 1));
+    p.k_tiles.min(shape.k.max(1)) * p.n_tiles.min(shape.n.max(1))
+}
+
 /// The acceptance matrix: K ∈ {1, 2, #regions, ragged n % K != 0} on
 /// overlay-only, custom-only, and mixed pools — every gathered output
 /// bit-exact against the software reference.
@@ -67,15 +75,20 @@ fn sharded_gemm_bit_exact_across_pools_and_shard_counts() {
                 ShardPolicy::Grid { k_tiles, n_tiles } => {
                     k_tiles.min(shape.k) * n_tiles.min(shape.n)
                 }
-                ShardPolicy::Auto => nregions,
+                ShardPolicy::Auto => auto_tiles(shape, coord.worker_kinds()),
                 ShardPolicy::None => 1,
             };
             assert_eq!(r.shards, want_shards, "{name} {policy:?}");
             assert!(r.stats.cycles > 0, "{name} {policy:?}: cycles roll up");
         }
+        let auto = auto_tiles(shape, coord.worker_kinds()) as u64;
         let snap = coord.metrics_snapshot();
-        assert_eq!(snap.sharded_jobs, 4, "{name}: all but Fixed(1) scattered");
-        assert_eq!(snap.max_shards, 3, "{name}");
+        assert_eq!(
+            snap.sharded_jobs,
+            3 + u64::from(auto >= 2),
+            "{name}: every multi-tile policy scattered"
+        );
+        assert_eq!(snap.max_shards, 3.max(auto), "{name}");
         coord.shutdown();
     }
 }
@@ -96,7 +109,11 @@ fn sharded_jobs_respect_backend_tags_in_mixed_pools() {
         let r = coord.submit_job(job.with_shards(ShardPolicy::Auto)).unwrap().wait();
         assert!(r.error.is_none(), "{tag}: {:?}", r.error);
         assert_eq!(r.output, expect, "{tag}");
-        assert_eq!(r.shards, 2, "auto = the 2 compatible regions, not all 4");
+        let kinds = coord.compatible_kinds(Some(tag));
+        assert_eq!(kinds.len(), 2, "{tag}: the tag halves the pool");
+        let want = auto_tiles(shape, &kinds);
+        assert!(want >= 2, "{tag}: the tuner splits across the compatible regions");
+        assert_eq!(r.shards, want, "auto = the tuner's grid on the 2 compatible regions");
         // Every shard ran on the tagged class, so the merged result
         // keeps the unanimous class.
         assert_eq!(r.backend, Some(tag), "{tag}: a shard landed off-class");
@@ -237,7 +254,7 @@ fn sharded_session_jobs_bit_exact_across_pools() {
                 ShardPolicy::Grid { k_tiles, n_tiles } => {
                     k_tiles.min(shape.k) * n_tiles.min(shape.n)
                 }
-                ShardPolicy::Auto => 2,
+                ShardPolicy::Auto => auto_tiles(shape, coord.worker_kinds()),
                 ShardPolicy::None => 1,
             };
             assert_eq!(h.shard_count(), want_shards, "{name} {policy:?}");

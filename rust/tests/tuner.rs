@@ -1,0 +1,161 @@
+//! The analytic mapping tuner against the simulators: for unbatched,
+//! non-booth runs the per-tile cycle model is exact, predicted totals
+//! rank candidate grids exactly as the measured dry-runs do, and the
+//! tuner-chosen grid beats the old 1-D Auto column split on a CNN.
+
+use picaso::arch::CustomDesign;
+use picaso::compiler::gemm_ref;
+use picaso::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, TilePolicy,
+};
+use picaso::prelude::*;
+use picaso::tuner::tile_cost;
+use picaso::util::Xoshiro256;
+use picaso::workload::ConvWorkload;
+
+const GEOM: ArrayGeometry = ArrayGeometry { rows: 2, cols: 1 };
+
+fn gemm_job(id: u64, shape: GemmShape, seed: u64) -> (Job, Vec<i64>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut a = vec![0i64; shape.m * shape.k];
+    let mut b = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut a, 8);
+    rng.fill_signed(&mut b, 8);
+    let expect = gemm_ref(shape, &a, &b);
+    (Job::new(id, JobKind::Gemm { shape, width: 8, a, b }), expect)
+}
+
+fn pool_of(kind: ArchKind, workers: usize) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        workers,
+        geom: GEOM,
+        kind,
+        batch: BatchPolicy::disabled(),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// The per-tile model is not an estimate on homogeneous pools: for an
+/// unbatched, non-booth run the predicted cycles equal the simulator's
+/// measured dry-run charge bit for bit, on overlay and custom designs
+/// alike.
+#[test]
+fn predictions_match_measured_dry_run_cycles_exactly() {
+    let kinds = [
+        ArchKind::PICASO_F,
+        ArchKind::Custom(CustomDesign::CoMeFaA),
+        ArchKind::Custom(CustomDesign::Ccb),
+        ArchKind::Custom(CustomDesign::AMod),
+    ];
+    let shapes = [
+        GemmShape { m: 2, k: 20, n: 7 },
+        GemmShape { m: 4, k: 16, n: 3 },
+        GemmShape { m: 2, k: 5, n: 2 },
+    ];
+    for kind in kinds {
+        let coord = pool_of(kind, 1);
+        for (i, shape) in shapes.into_iter().enumerate() {
+            let (job, expect) = gemm_job(i as u64, shape, 0xBEEF + i as u64);
+            let r = coord.submit_job(job).unwrap().wait();
+            assert!(r.error.is_none(), "{kind:?} {shape:?}: {:?}", r.error);
+            assert_eq!(r.output, expect, "{kind:?} {shape:?}");
+            assert_eq!(
+                r.stats.cycles,
+                tile_cost(shape, 8, kind, GEOM),
+                "predicted != measured for {kind:?} {shape:?}"
+            );
+        }
+        coord.shutdown();
+    }
+}
+
+/// Predicted totals rank candidate grids exactly as the measured
+/// rollups do: every grid's measured scattered-job cycle total equals
+/// its prediction, so the predicted ordering IS the measured ordering.
+#[test]
+fn predicted_totals_rank_measured_grids() {
+    let coord = pool_of(ArchKind::PICASO_F, 4);
+    let pool = coord.worker_kinds().to_vec();
+    let shape = GemmShape { m: 4, k: 16, n: 8 };
+    let grids = [(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (4, 2)];
+    let mut ranked: Vec<(u64, u64)> = Vec::new();
+    for (i, (k_t, n_t)) in grids.into_iter().enumerate() {
+        let pred = predict_cycles(shape, 8, TilePolicy::grid(k_t, n_t), &pool, GEOM);
+        let (job, expect) = gemm_job(i as u64, shape, 0xFEED);
+        let r = coord.submit_job(job.with_shards(TilePolicy::grid(k_t, n_t))).unwrap().wait();
+        assert!(r.error.is_none(), "{k_t}x{n_t}: {:?}", r.error);
+        assert_eq!(r.output, expect, "{k_t}x{n_t}");
+        assert_eq!(r.stats.cycles, pred.total_cycles, "grid {k_t}x{n_t}");
+        ranked.push((pred.total_cycles, r.stats.cycles));
+    }
+    let mut by_pred = ranked.clone();
+    by_pred.sort_by_key(|&(p, _)| p);
+    let mut by_meas = ranked;
+    by_meas.sort_by_key(|&(_, m)| m);
+    assert_eq!(by_pred, by_meas, "predicted ranking must match measured ranking");
+    coord.shutdown();
+}
+
+/// The ISSUE acceptance bar: on a multi-layer CNN the tuner-chosen grid
+/// ([`TilePolicy::Auto`]) must cost no more measured dry-run cycles
+/// than the old 1-D `Fixed(pool size)` column split — and strictly less
+/// on at least one layer. The CNN is shaped so conv layers have few
+/// filters (columns) but a deep reduction: the 1-D split clamps to the
+/// column count and strands half the pool, while the 2-D grid keeps
+/// every region busy.
+#[test]
+fn tuned_grid_beats_the_one_d_auto_split_on_a_cnn() {
+    let coord = pool_of(ArchKind::PICASO_F, 4);
+    let pool = coord.worker_kinds().to_vec();
+    let items = 2;
+    // Two conv layers of a toy CNN: 2ch 5x5 -> 2 filters 2x2 -> 2ch 4x4
+    // -> 2 filters 2x2 stride 2. Both lower to GEMMs with n = 2 < pool.
+    let convs = [
+        ConvWorkload::new(items, 2, 5, 5, 2, 2, 2, 1, 0).unwrap(),
+        ConvWorkload::new(items, 2, 4, 4, 2, 2, 2, 2, 0).unwrap(),
+    ];
+    let mut strictly_better = false;
+    for (i, cw) in convs.iter().enumerate() {
+        let shape = cw.gemm_shape();
+        let tuned = choose_grid(shape, 8, &pool, GEOM);
+        let one_d = predict_cycles(shape, 8, TilePolicy::Fixed(pool.len()), &pool, GEOM);
+        assert!(
+            tuned.critical_cycles <= one_d.critical_cycles,
+            "layer {i}: tuned {} vs 1-D {}",
+            tuned.critical_cycles,
+            one_d.critical_cycles
+        );
+        strictly_better |= tuned.critical_cycles < one_d.critical_cycles;
+        // Anchor both predictions to the machines: run the layer's
+        // im2col GEMM under each policy and check the measured rollup
+        // equals the predicted total, cycle for cycle.
+        let mut rng = Xoshiro256::seeded(0xC0DE + i as u64);
+        let mut input = vec![0i64; items * cw.input_len_per_item()];
+        let mut filters = vec![0i64; cw.k * cw.r * cw.s * cw.c];
+        rng.fill_signed(&mut input, 8);
+        rng.fill_signed(&mut filters, 8);
+        let a = cw.im2col(items, &input).unwrap();
+        let b = cw.lower_weights(&filters).unwrap();
+        let expect = cw.conv_ref(items, &input, &filters).unwrap();
+        assert_eq!(expect, gemm_ref(shape, &a, &b));
+        for (policy, pred) in
+            [(TilePolicy::Auto, tuned), (TilePolicy::Fixed(pool.len()), one_d)]
+        {
+            let job = Job::new(
+                i as u64,
+                JobKind::Gemm { shape, width: 8, a: a.clone(), b: b.clone() },
+            )
+            .with_shards(policy);
+            let r = coord.submit_job(job).unwrap().wait();
+            assert!(r.error.is_none(), "layer {i} {policy:?}: {:?}", r.error);
+            assert_eq!(r.output, expect, "layer {i} {policy:?}");
+            assert_eq!(
+                r.stats.cycles, pred.total_cycles,
+                "layer {i} {policy:?}: measured rollup must equal the prediction"
+            );
+        }
+    }
+    assert!(strictly_better, "the 2-D grid must strictly win on at least one layer");
+    coord.shutdown();
+}

@@ -1,0 +1,172 @@
+//! Convolution workloads end to end: conv layers and `cnn:` models
+//! through the serving stack, bit-exact against the scalar direct
+//! convolution across overlay/custom/mixed pools, strides/padding, and
+//! fixed/tuned tile policies.
+
+use picaso::arch::CustomDesign;
+use picaso::compiler::gemm_ref;
+use picaso::coordinator::{Coordinator, CoordinatorConfig, RegionSpec};
+use picaso::model::{
+    CompileOptions, CompiledModel, ExecMode, GraphBuilder, GraphExecutor, TuneMode,
+};
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+use picaso::workload::ConvWorkload;
+
+fn filled(len: usize, width: u32, seed: u64) -> Vec<i64> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut v = vec![0i64; len];
+    rng.fill_signed(&mut v, width);
+    v
+}
+
+fn pools() -> Vec<(&'static str, CoordinatorConfig)> {
+    let overlay = RegionSpec { kind: ArchKind::PICASO_F, count: 1 };
+    let comefa = RegionSpec { kind: ArchKind::Custom(CustomDesign::CoMeFaA), count: 1 };
+    vec![
+        (
+            "overlay",
+            CoordinatorConfig {
+                workers: 2,
+                geom: ArrayGeometry::new(2, 1),
+                kind: ArchKind::PICASO_F,
+                ..Default::default()
+            },
+        ),
+        (
+            "custom",
+            CoordinatorConfig {
+                workers: 2,
+                geom: ArrayGeometry::new(2, 1),
+                kind: ArchKind::Custom(CustomDesign::CoMeFaA),
+                ..Default::default()
+            },
+        ),
+        (
+            "mixed",
+            CoordinatorConfig {
+                geom: ArrayGeometry::new(2, 1),
+                regions: vec![overlay, comefa],
+                ..Default::default()
+            },
+        ),
+    ]
+}
+
+/// The acceptance matrix: a conv layer served through the stack must
+/// reproduce [`ConvWorkload::conv_ref`] bit-exactly on every pool
+/// class, across strides/padding/channels, under no tiling, a fixed
+/// 2-D grid, and the auto-tuner.
+#[test]
+fn conv_layers_bit_exact_vs_direct_convolution_across_pools() {
+    // (c, h, w, k, r, s, stride, pad): stride-2, ragged taps, deep pad.
+    let geoms = [
+        (2usize, 5usize, 5usize, 3usize, 3usize, 3usize, 1usize, 0usize),
+        (1, 6, 5, 2, 3, 2, 2, 1),
+        (2, 5, 5, 2, 3, 3, 1, 2),
+    ];
+    let items = 2;
+    for (name, cfg) in pools() {
+        for (gi, (c, h, w, k, r, s, stride, pad)) in geoms.into_iter().enumerate() {
+            let cw = ConvWorkload::new(items, c, h, w, k, r, s, stride, pad).unwrap();
+            let input = filled(items * cw.input_len_per_item(), 8, 0x100 + gi as u64);
+            let filters = filled(k * r * s * c, 8, 0x200 + gi as u64);
+            let expect = cw.conv_ref(items, &input, &filters).unwrap();
+            let coord = Coordinator::new(cfg.clone()).unwrap();
+            for tune in [
+                TuneMode::Fixed(TilePolicy::None),
+                TuneMode::Fixed(TilePolicy::grid(2, 2)),
+                TuneMode::Auto,
+            ] {
+                let mut b = GraphBuilder::new(cw.input_len_per_item(), 8);
+                b.conv2d(cw, filters.clone()).unwrap();
+                let graph = b.build().unwrap();
+                assert_eq!(
+                    graph.forward_ref(&input, items).unwrap(),
+                    expect,
+                    "the scalar reference is the direct convolution"
+                );
+                let model = CompiledModel::compile(
+                    &coord,
+                    graph,
+                    CompileOptions { rows_per_request: items, tune, ..Default::default() },
+                )
+                .unwrap();
+                let exec = GraphExecutor::new(&coord, &model);
+                let report = exec.infer_batch(&[input.clone()], ExecMode::Pipelined).unwrap();
+                assert_eq!(report.outputs[0], expect, "{name} conv {gi} {tune:?}");
+                model.close(&coord);
+            }
+            coord.shutdown();
+        }
+    }
+}
+
+/// Multi-layer `cnn:` models (conv -> conv -> dense head, both hidden
+/// activations) verify bit-exact against the scalar reference on every
+/// pool, under a fixed column split and the auto-tuner.
+#[test]
+fn cnn_models_verify_end_to_end_on_every_pool() {
+    let specs =
+        [("cnn:2@6x6,3@3x3,4", "sign"), ("cnn:1@5x5,2@3x3s2p1,2@2x2,3", "relu")];
+    let m = 1;
+    for (name, cfg) in pools() {
+        let coord = Coordinator::new(cfg).unwrap();
+        for (si, (spec, act)) in specs.into_iter().enumerate() {
+            for tune in [TuneMode::Fixed(TilePolicy::Fixed(2)), TuneMode::Auto] {
+                let graph = picaso::cli::build_cnn(spec, 8, act, 0x5EED + si as u64).unwrap();
+                let inputs: Vec<Vec<i64>> =
+                    (0..3).map(|r| filled(graph.input_dim(), 8, 0x300 + r)).collect();
+                let expects: Vec<Vec<i64>> =
+                    inputs.iter().map(|a| graph.forward_ref(a, m).unwrap()).collect();
+                let model = CompiledModel::compile(
+                    &coord,
+                    graph,
+                    CompileOptions { rows_per_request: m, tune, ..Default::default() },
+                )
+                .unwrap();
+                let exec = GraphExecutor::new(&coord, &model);
+                let report = exec.infer_batch(&inputs, ExecMode::Pipelined).unwrap();
+                for (i, (got, want)) in report.outputs.iter().zip(&expects).enumerate() {
+                    assert_eq!(got, want, "{name} {spec} {tune:?} request {i}");
+                }
+                model.close(&coord);
+            }
+        }
+        coord.shutdown();
+    }
+}
+
+/// A 1x1/stride-1/unpadded conv is exactly the plain `(h·w) x c` by
+/// `c x k` GEMM — through the whole serving stack, not just the
+/// lowering arithmetic.
+#[test]
+fn one_by_one_conv_is_a_plain_gemm_through_the_stack() {
+    let cw = ConvWorkload::new(1, 3, 4, 4, 5, 1, 1, 1, 0).unwrap();
+    let input = filled(cw.input_len_per_item(), 8, 0x11);
+    let filters = filled(5 * 3, 8, 0x22);
+    let shape = cw.gemm_shape();
+    assert_eq!(shape, GemmShape { m: 16, k: 3, n: 5 });
+    let expect = gemm_ref(shape, &input, &cw.lower_weights(&filters).unwrap());
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut b = GraphBuilder::new(cw.input_len_per_item(), 8);
+    b.conv2d(cw, filters.clone()).unwrap();
+    let graph = b.build().unwrap();
+    let model = CompiledModel::compile(
+        &coord,
+        graph,
+        CompileOptions { rows_per_request: 1, ..Default::default() },
+    )
+    .unwrap();
+    let exec = GraphExecutor::new(&coord, &model);
+    let report = exec.infer_batch(&[input.clone()], ExecMode::Pipelined).unwrap();
+    assert_eq!(report.outputs[0], expect, "conv == plain GEMM");
+    assert_eq!(report.outputs[0], cw.conv_ref(1, &input, &filters).unwrap());
+    model.close(&coord);
+    coord.shutdown();
+}
