@@ -26,6 +26,12 @@ cargo test --test tiling -q
 step "tier-1: cargo test --test workload --test tuner -q"
 cargo test --test workload --test tuner -q
 
+# The static-verifier acceptance suite, by name: one negative test per
+# defect class, the compiler clean-sweep, and the enforce-at-admission
+# contract (rejection before any queue slot is debited).
+step "tier-1: cargo test --test verify -q"
+cargo test --test verify -q
+
 if [ "${1:-}" = "fast" ]; then
     echo "fast mode: skipping doc/fmt/bench-compile gates"
     exit 0
@@ -120,12 +126,11 @@ bench_gate "conv" BENCH_conv.json BENCH_conv.fresh.json \
 step "compile benches + examples"
 cargo build --release --benches --examples
 
+# Hard gate: the crate carries #![forbid(unsafe_code)] and must stay
+# clippy-clean at -D warnings. No soft-skip — a toolchain that can run
+# this script at all (cargo exists) must provide the lint gate too.
 step "lint gate: cargo clippy --all-targets -- -D warnings"
-if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets --quiet -- -D warnings
-else
-    echo "clippy not installed — skipping (install with: rustup component add clippy)"
-fi
+cargo clippy --all-targets --quiet -- -D warnings
 
 step "doc gate: cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

@@ -25,6 +25,12 @@ use crate::network;
 use crate::{Error, Result};
 use std::collections::HashMap;
 
+/// Base wordline of the scratch range the SPAR-2 NEWS copy-based
+/// accumulation stages partner values in. Reserved: an `ACCUM` operand
+/// overlapping it corrupts the reduction (the static verifier rejects
+/// such programs for [`ArchKind::Spar2`]).
+pub(crate) const NEWS_SCRATCH_WL: usize = 960;
+
 /// Grid shape in PE-blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ArrayGeometry {
@@ -159,7 +165,7 @@ impl PimArray {
             fused: BlockRow::new(geom.rows * geom.cols),
             host: HashMap::new(),
             booth_skip: false,
-            news_scratch: RfAddr(960),
+            news_scratch: RfAddr(NEWS_SCRATCH_WL as u16),
         }
     }
 
@@ -207,7 +213,25 @@ impl PimArray {
     pub fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {
         let mut stats = RunStats::default();
         for instr in &mc.instrs {
-            self.step(*instr, &mut stats)?;
+            let step = self.step(*instr, &mut stats);
+            // "No false negatives": in debug builds, any program-level
+            // runtime rejection must also have been statically provable
+            // by the verifier (see `rust/src/verify`). Register-file
+            // state and buffers from earlier programs are legal inputs,
+            // so the context assumes them initialized/bound.
+            #[cfg(debug_assertions)]
+            if let Err(Error::Sim(msg)) = &step {
+                let ctx = crate::verify::VerifyCtx::new(self.kind, self.geom)
+                    .with_booth_skip(self.booth_skip)
+                    .assume_initialized()
+                    .with_bound_bufs(self.host.keys().copied().collect());
+                debug_assert!(
+                    crate::verify::verify(mc, &ctx).has_errors(),
+                    "runtime program error escaped the static verifier: {msg} in '{}'",
+                    mc.label
+                );
+            }
+            step?;
         }
         Ok(stats)
     }

@@ -14,7 +14,8 @@
 //!   infer     [--model=mlp:KxH..xN|cnn:C@HxW,K@RxS.. --requests --m --act
 //!              --mode --shards --tiles --workers --rows --cols --batch
 //!              --backend --device]
-//!   asm       --file=<path> [--width]    assemble + disassemble a program
+//!   check     --file=<path> [--width --backend --rows --cols --booth-skip]
+//!                                        statically verify an .asm program
 //!   info                                 device database summary
 //! ```
 
@@ -32,6 +33,7 @@ use crate::model::{
 };
 use crate::report::paper;
 use crate::util::Xoshiro256;
+use crate::verify::{verify, VerifyCtx, VerifyMode};
 use crate::workload::ConvWorkload;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -132,6 +134,10 @@ system:
                                          (0 disables quarantining)
          [--backoff-us=50]               retry backoff base (exponential,
                                          deterministic jitter; 0 disables)
+         [--verify=off|warn|enforce]     static microcode verification at
+                                         admission: warn (default) lints,
+                                         enforce rejects refuted programs
+                                         before they reach the scheduler
          [--device=U55]                  device for per-backend cycles→ns
   infer  --model=mlp:32x16x10            multi-layer MLP through the
                                          model-graph executor, pipelined
@@ -160,6 +166,16 @@ system:
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--window=0]                    max requests in flight (0 = all)
          [--backend=...|mixed] [--device=U55] [--seed=42]
+  check  --file=prog.asm                 parse an assembler program and run
+                                         the static dataflow verifier over
+                                         it (exit nonzero on any
+                                         error-severity finding)
+         [--width=8]                     operand width the program runs at
+         [--backend=picaso|...]          design to verify against (RF
+                                         depth, datapath capabilities)
+         [--rows=8 --cols=4]             target array geometry
+         [--booth-skip]                  lint the Booth flag against the
+                                         design's datapath (Table VIII)
   info   device database summary
   help   this text
 
@@ -193,6 +209,7 @@ pub fn run(args: &Args) -> Result<String> {
         "gemm" => cmd_gemm(args),
         "serve" => cmd_serve(args),
         "infer" => cmd_infer(args),
+        "check" => cmd_check(args),
         "info" => Ok(cmd_info()),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => Err(Error::Config(format!("unknown command '{other}'; try `picaso help`"))),
@@ -362,11 +379,13 @@ fn cmd_serve(args: &Args) -> Result<String> {
 
     let quarantine_threshold: u32 = args.get("quarantine", 3u32)?;
     let backoff_us: u64 = args.get("backoff-us", 50u64)?;
+    let verify_mode: VerifyMode = args.get("verify", VerifyMode::default())?;
     let cfg = CoordinatorConfig {
         workers,
         geom: ArrayGeometry::new(rows, cols),
         kind,
         regions,
+        verify: verify_mode,
         scheduler: SchedulerConfig {
             capacity,
             policy,
@@ -914,6 +933,51 @@ fn cmd_infer(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+/// `check --file=prog.asm`: parse an assembler program and run the
+/// static dataflow verifier ([`crate::verify`]) over it against one
+/// design and geometry. Warnings print and exit cleanly; any
+/// error-severity finding fails the command with [`Error::Verify`], so
+/// the exit status is a usable lint gate.
+fn cmd_check(args: &Args) -> Result<String> {
+    let path: String = args.get("file", String::new())?;
+    if path.is_empty() {
+        return Err(Error::Config("check needs --file=<program.asm>".into()));
+    }
+    let width: u16 = args.get("width", 8)?;
+    let rows: usize = args.get("rows", 8)?;
+    let cols: usize = args.get("cols", 4)?;
+    let backend_name: String = args.get("backend", "picaso".into())?;
+    let kind = parse_backend(&backend_name)?;
+    let geom = ArrayGeometry::new(rows, cols);
+    let src = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+    let mc = crate::isa::asm::parse_program(&src, width)
+        .map_err(|e| Error::Compile(format!("{path}: {e}")))?;
+    // A standalone program starts from an uninitialized register file
+    // (its LOADs are the defs), so the init pass stays armed and no
+    // host buffers are pre-declared.
+    let ctx = VerifyCtx::new(kind, geom).with_booth_skip(args.flag("booth-skip"));
+    let report = verify(&mc, &ctx);
+    let head = format!(
+        "check {path}: '{}' ({} instructions) on {} ({rows}x{cols} blocks, w={width})\n",
+        mc.label,
+        mc.len(),
+        kind.name(),
+    );
+    if report.has_errors() {
+        Err(Error::Verify(format!(
+            "{path}: {} error(s), {} warning(s)\n{}",
+            report.errors(),
+            report.warnings(),
+            report.render(),
+        )))
+    } else if report.is_clean() {
+        Ok(format!("{head}clean — no findings\n"))
+    } else {
+        Ok(format!("{head}{}\n", report.render()))
+    }
+}
+
 fn cmd_info() -> String {
     let mut out = String::from("device database:\n");
     for d in crate::device::DEVICES {
@@ -1139,6 +1203,75 @@ mod tests {
         assert!(out.contains("failures: 0"), "{out}");
         assert!(run_line("serve --quarantine=bogus").is_err());
         assert!(run_line("serve --backoff-us=bogus").is_err());
+    }
+
+    #[test]
+    fn check_command_lints_asm_programs() {
+        let dir = std::env::temp_dir();
+        let write = |name: &str, body: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, body).unwrap();
+            p.display().to_string()
+        };
+        // A well-formed program is clean on the overlay.
+        let clean = write(
+            "picaso_check_clean.asm",
+            "# t\nLOAD r0, w=8, buf0\nLOAD r8, w=8, buf1\n\
+             MULT r16, r0, r8, w=8\nSTORE r16, w=16, buf2\n",
+        );
+        let out = run_line(&format!("check --file={clean} --rows=2 --cols=1")).unwrap();
+        assert!(out.contains("clean"), "{out}");
+        // The same program exceeds a custom tile's 256-deep RF when its
+        // wordlines move past the design depth.
+        let deep = write("picaso_check_deep.asm", "# t\nLOAD r250, w=8, buf0\n");
+        assert!(run_line(&format!("check --file={deep} --rows=2 --cols=1")).is_ok());
+        let e = run_line(&format!("check --file={deep} --backend=ccb --rows=2 --cols=1"))
+            .unwrap_err();
+        assert!(e.to_string().contains("depth 256"), "{e}");
+        // Reading a wordline no instruction wrote is refuted.
+        let uninit = write("picaso_check_uninit.asm", "ADD r0, r8, r16, w=8\n");
+        let e = run_line(&format!("check --file={uninit} --rows=2 --cols=1")).unwrap_err();
+        assert!(e.to_string().contains("before any write"), "{e}");
+        // Warning-severity findings report but exit cleanly: booth-skip
+        // on CCB (no Booth datapath) is a lint, not a refutation.
+        let booth = write(
+            "picaso_check_booth.asm",
+            "LOAD r0, w=8, buf0\nLOAD r8, w=8, buf1\nMULT r16, r0, r8, w=8\n",
+        );
+        let out = run_line(&format!(
+            "check --file={booth} --backend=ccb --rows=2 --cols=1 --booth-skip"
+        ))
+        .unwrap();
+        assert!(out.contains("warning"), "{out}");
+        assert!(out.contains("Booth"), "{out}");
+        // Parse failures surface with their line context.
+        let bad_op = write("picaso_check_badop.asm", "BOGUS r1\n");
+        let e = run_line(&format!("check --file={bad_op}")).unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        let bad_w = write("picaso_check_badw.asm", "ADD r1, r2, r3, w=zero\n");
+        let e = run_line(&format!("check --file={bad_w}")).unwrap_err();
+        assert!(e.to_string().contains("bad width"), "{e}");
+        // Missing or unreadable files fail loudly.
+        assert!(run_line("check").is_err());
+        assert!(run_line("check --file=/nonexistent/x.asm").is_err());
+    }
+
+    #[test]
+    fn serve_command_verify_flag() {
+        // Compiled gemm programs verify clean, so an enforcing server
+        // serves the whole batch and the metrics verify lane reports
+        // the admission passes (--no-session keeps jobs on the ad-hoc
+        // path, which verifies per submission inside the metrics
+        // window; a session verifies once at open, before the reset).
+        let out = run_line(
+            "serve --jobs=4 --workers=2 --rows=2 --cols=1 --verify=enforce --no-session",
+        )
+        .unwrap();
+        assert!(out.contains("served 4"), "{out}");
+        assert!(out.contains("failures: 0"), "{out}");
+        assert!(out.contains("verify"), "{out}");
+        assert!(out.contains("passes="), "{out}");
+        assert!(run_line("serve --verify=bogus").is_err());
     }
 
     #[test]

@@ -30,6 +30,13 @@ pub const WL_ACC: RfAddr = RfAddr(64);
 /// Wordline of the partial-sum staging slot.
 pub const WL_PARTIAL: RfAddr = RfAddr(192);
 
+/// Accumulator-width ceiling: exact-precision dot-product widths
+/// (`2·width + ceil(log2 k)`, Table V) are capped here so deep-`k`
+/// GEMMs still fit the custom tiles' 256-row register file (the
+/// partial-sum slot at wordline 192 leaves 64 rows). The tuner's cost
+/// model and the static verifier share this bound.
+pub const ACC_WIDTH_CAP: u16 = 48;
+
 /// Host buffer ids used by compiled programs.
 pub const BUF_A: BufId = BufId(0);
 /// Weights buffer.
@@ -151,7 +158,7 @@ impl PimCompiler {
                 "operand width {width} outside 1..=16 (register budget)"
             )));
         }
-        let acc_width = (2 * width + ceil_log2(shape.k.max(2)) as u16).min(48);
+        let acc_width = (2 * width + ceil_log2(shape.k.max(2)) as u16).min(ACC_WIDTH_CAP);
         let slices = shape.k.div_ceil(q);
         let outputs = shape.m * shape.n;
         let rounds = outputs.div_ceil(self.geom.rows);

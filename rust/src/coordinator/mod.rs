@@ -94,6 +94,7 @@ use crate::compiler::{
     GemmShape, PimCompiler,
 };
 use crate::metrics::{Metrics, MetricsSnapshot, ServingMetrics};
+use crate::verify::{verify_on_pool, VerifyMode, VerifyOutcome};
 use crate::{Error, Result};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -183,6 +184,15 @@ pub struct CoordinatorConfig {
     /// Optional backend-wrapping hook applied to every worker region at
     /// spawn (fault injection, instrumentation). `None` in production.
     pub backend_hook: Option<BackendHook>,
+    /// Static microcode verification at admission
+    /// ([`crate::verify`]): ad-hoc GEMM jobs are verified at
+    /// [`Coordinator::submit_job`] and session programs at
+    /// [`Coordinator::open_session`], against every region kind the
+    /// work may be placed on. Under [`VerifyMode::Enforce`], refuted
+    /// programs are rejected with [`Error::Verify`] **before** any
+    /// scheduler slot is debited; [`VerifyMode::Warn`] (the default)
+    /// only counts findings in the metrics verify lane.
+    pub verify: VerifyMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -198,6 +208,7 @@ impl Default for CoordinatorConfig {
             scheduler: SchedulerConfig::default(),
             batch: BatchPolicy::default(),
             backend_hook: None,
+            verify: VerifyMode::default(),
         }
     }
 }
@@ -591,6 +602,13 @@ impl Coordinator {
                 )));
             }
         }
+        // Static verification of ad-hoc GEMM programs, before any
+        // scheduler slot is reserved or debited. Session jobs run the
+        // program already verified at `open_session` and skip the
+        // (identical) re-check per submission.
+        if let JobKind::Gemm { shape, width, .. } = &job.kind {
+            self.verify_admission(*shape, *width, job.backend)?;
+        }
         let (k_tiles, n_tiles) = self.resolve_tiles(&job)?;
         if k_tiles * n_tiles >= 2 {
             return self.scatter(job, priority, k_tiles, n_tiles);
@@ -666,6 +684,65 @@ impl Coordinator {
                 .filter(|k| BackendClass::of(*k) == c)
                 .collect(),
         }
+    }
+
+    /// Statically verify the compiled program an ad-hoc GEMM would run,
+    /// against every region kind it may be placed on. A shape that does
+    /// not compile is not the verifier's concern — the worker (or the
+    /// session open path) surfaces the compile error itself.
+    fn verify_admission(
+        &self,
+        shape: GemmShape,
+        width: u16,
+        backend: Option<BackendClass>,
+    ) -> Result<()> {
+        if self.cfg.verify.is_off() {
+            return Ok(());
+        }
+        match PimCompiler::new(self.cfg.geom).gemm(shape, width) {
+            Ok(plan) => self.verify_program(&plan.microcode, shape.k, backend),
+            Err(_) => Ok(()),
+        }
+    }
+
+    /// Verify one program for the pool a `backend`-tagged job may run
+    /// on, record the outcome in the metrics verify lane, and reject
+    /// with [`Error::Verify`] under [`VerifyMode::Enforce`]. This is
+    /// the admission gate `submit` and `open_session` route compiled
+    /// programs through; it is public so hand-built microcode can be
+    /// held to the same standard before it is wrapped in a workload.
+    /// Runs before any scheduler interaction, so a rejection provably
+    /// debits no queue slot (`depth_hwm` stays untouched).
+    /// `summands` is the reduction length the program's ACCUM width is
+    /// checked against (see [`crate::verify::VerifyCtx::with_summands`]).
+    pub fn verify_program(
+        &self,
+        mc: &crate::isa::Microcode,
+        summands: usize,
+        backend: Option<BackendClass>,
+    ) -> Result<()> {
+        if self.cfg.verify.is_off() {
+            return Ok(());
+        }
+        let pool = self.compatible_kinds(backend);
+        let report =
+            verify_on_pool(mc, self.cfg.geom, &pool, self.cfg.booth_skip, Some(summands));
+        let outcome = if report.is_clean() {
+            VerifyOutcome::Pass
+        } else if report.has_errors() && self.cfg.verify == VerifyMode::Enforce {
+            VerifyOutcome::Reject
+        } else {
+            VerifyOutcome::Warn
+        };
+        self.metrics.record_verify(backend, outcome);
+        if outcome == VerifyOutcome::Reject {
+            return Err(Error::Verify(format!(
+                "program '{}' refuted at admission:\n{}",
+                mc.label,
+                report.render()
+            )));
+        }
+        Ok(())
     }
 
     /// The scatter half of tiled execution: split the job into a
@@ -776,10 +853,12 @@ impl Coordinator {
             }
         }
         let spec = SessionSpec { shape, width, weights, backend };
-        // Validate eagerly (spec consistency + compilability) so errors
-        // surface at open time, not per-job on a worker.
+        // Validate eagerly (spec consistency + compilability +
+        // static verification) so errors surface at open time, not
+        // per-job on a worker.
         spec.validate()?;
-        PimCompiler::new(self.cfg.geom).gemm(shape, width)?;
+        let plan = PimCompiler::new(self.cfg.geom).gemm(shape, width)?;
+        self.verify_program(&plan.microcode, shape.k, backend)?;
         let id = SessionId(self.next_session.fetch_add(1, Ordering::Relaxed));
         self.sessions
             .map

@@ -24,6 +24,7 @@
 mod region;
 
 pub use region::CustomRegion;
+pub(crate) use region::SCRATCH_WL;
 
 use crate::arch::{ArchKind, CustomDesign, CycleModel};
 use crate::array::RunStats;

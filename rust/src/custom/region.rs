@@ -40,8 +40,9 @@ use std::collections::HashMap;
 
 /// Base wordline of the copy scratchpad used by the original (non-Mod)
 /// designs' reduction: between the compiler's accumulator (ends ≤ 112)
-/// and partial-sum slot (starts at 192).
-const SCRATCH_WL: usize = 128;
+/// and partial-sum slot (starts at 192). Shared with the static
+/// verifier so `ACCUM` programs aliasing it are refuted at admission.
+pub(crate) const SCRATCH_WL: usize = 128;
 
 /// A `rows × row_lanes` custom-tile worker region (ganged 256×144 tiles
 /// driven SIMD), executing compiled microcode behind [`PimBackend`].
@@ -325,7 +326,25 @@ impl PimBackend for CustomRegion {
     fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {
         let mut stats = RunStats::default();
         for instr in &mc.instrs {
-            self.step(*instr, &mut stats)?;
+            let step = self.step(*instr, &mut stats);
+            // "No false negatives": in debug builds, any program-level
+            // runtime rejection must also have been statically provable
+            // by the verifier (see `rust/src/verify`). State left by
+            // earlier programs is legal input, so the context assumes
+            // the register file initialized and current buffers bound.
+            #[cfg(debug_assertions)]
+            if let Err(Error::Sim(msg)) = &step {
+                let ctx =
+                    crate::verify::VerifyCtx::new(ArchKind::Custom(self.design), self.geom)
+                        .assume_initialized()
+                        .with_bound_bufs(self.host.keys().copied().collect());
+                debug_assert!(
+                    crate::verify::verify(mc, &ctx).has_errors(),
+                    "runtime program error escaped the static verifier: {msg} in '{}'",
+                    mc.label
+                );
+            }
+            step?;
         }
         Ok(stats)
     }

@@ -178,6 +178,26 @@ impl Instruction {
             Instruction::Store { .. } | Instruction::Nop => None,
         }
     }
+
+    /// Wordline ranges this instruction *reads*, as `(base, width)` —
+    /// the complement of [`dst_range`](Self::dst_range). The in-place
+    /// reductions (`FOLD`/`POOL`/`NETRED`/`ACCUM`) read their operand
+    /// before rewriting it; `EXT` reads the `from`-wide prefix; `STORE`
+    /// reads without writing any wordline at all (which is why
+    /// destination tracking alone cannot bound a program's footprint).
+    pub fn src_ranges(&self) -> Vec<(RfAddr, u16)> {
+        match *self {
+            Instruction::Alu { x, y, width, .. } => vec![(x, width), (y, width)],
+            Instruction::Mult { mand, mier, width, .. } => vec![(mand, width), (mier, width)],
+            Instruction::Fold { dst, width, .. }
+            | Instruction::Pool { dst, width, .. }
+            | Instruction::NetReduce { dst, width, .. }
+            | Instruction::Accumulate { dst, width } => vec![(dst, width)],
+            Instruction::Extend { dst, from, .. } => vec![(dst, from)],
+            Instruction::Store { src, width, .. } => vec![(src, width)],
+            Instruction::Load { .. } | Instruction::Nop => Vec::new(),
+        }
+    }
 }
 
 /// A compiled microcode program plus the metadata the coordinator needs to
@@ -219,10 +239,12 @@ impl Microcode {
     }
 
     /// Highest register-file wordline touched — must fit the BRAM depth.
+    /// Covers both destinations and sources: a `STORE` (or a wide ALU
+    /// read) can exceed the register file without writing anything.
     pub fn max_wordline(&self) -> u16 {
         self.instrs
             .iter()
-            .filter_map(|i| i.dst_range())
+            .flat_map(|i| i.dst_range().into_iter().chain(i.src_ranges()))
             .map(|(b, w)| b.0 + w)
             .max()
             .unwrap_or(0)
@@ -243,6 +265,74 @@ mod tests {
         };
         assert_eq!(i.dst_range(), Some((RfAddr(32), 16)));
         assert_eq!(Instruction::Nop.dst_range(), None);
+    }
+
+    #[test]
+    fn src_ranges_per_variant() {
+        use super::super::FoldPattern;
+        let alu = Instruction::Alu {
+            op: AluOp::Add,
+            dst: RfAddr(64),
+            x: RfAddr(0),
+            y: RfAddr(8),
+            width: 8,
+        };
+        assert_eq!(alu.src_ranges(), vec![(RfAddr(0), 8), (RfAddr(8), 8)]);
+        let mult = Instruction::Mult {
+            dst: RfAddr(32),
+            mand: RfAddr(0),
+            mier: RfAddr(8),
+            width: 8,
+        };
+        // Sources are read at w even though the destination spans 2w.
+        assert_eq!(mult.src_ranges(), vec![(RfAddr(0), 8), (RfAddr(8), 8)]);
+        let fold = Instruction::Fold {
+            pattern: FoldPattern::Halving,
+            level: 1,
+            dst: RfAddr(16),
+            width: 12,
+        };
+        assert_eq!(fold.src_ranges(), vec![(RfAddr(16), 12)]);
+        let pool = Instruction::Pool {
+            op: PoolOp::Max,
+            pattern: FoldPattern::Adjacent,
+            level: 2,
+            dst: RfAddr(16),
+            width: 12,
+        };
+        assert_eq!(pool.src_ranges(), vec![(RfAddr(16), 12)]);
+        let net = Instruction::NetReduce { level: 0, dst: RfAddr(16), width: 12 };
+        assert_eq!(net.src_ranges(), vec![(RfAddr(16), 12)]);
+        let acc = Instruction::Accumulate { dst: RfAddr(16), width: 12 };
+        assert_eq!(acc.src_ranges(), vec![(RfAddr(16), 12)]);
+        // EXTEND reads only the from-wide prefix it widens.
+        let ext = Instruction::Extend { dst: RfAddr(16), from: 16, to: 21 };
+        assert_eq!(ext.src_ranges(), vec![(RfAddr(16), 16)]);
+        let store = Instruction::Store { src: RfAddr(40), width: 8, buf: BufId(2) };
+        assert_eq!(store.src_ranges(), vec![(RfAddr(40), 8)]);
+        let load = Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) };
+        assert!(load.src_ranges().is_empty());
+        assert!(Instruction::Nop.src_ranges().is_empty());
+    }
+
+    #[test]
+    fn max_wordline_covers_read_only_ranges() {
+        // A STORE touches no destination; before src_ranges() it was
+        // invisible to max_wordline.
+        let mut mc = Microcode::new("t", 8);
+        mc.push(Instruction::Store { src: RfAddr(1020), width: 8, buf: BufId(0) });
+        assert_eq!(mc.max_wordline(), 1028);
+        // An ALU whose sources sit above its destination is bounded by
+        // the sources.
+        let mut mc = Microcode::new("t", 8);
+        mc.push(Instruction::Alu {
+            op: AluOp::Add,
+            dst: RfAddr(0),
+            x: RfAddr(500),
+            y: RfAddr(600),
+            width: 8,
+        });
+        assert_eq!(mc.max_wordline(), 608);
     }
 
     #[test]

@@ -41,6 +41,10 @@
 //!   model mirroring the compiler's plan arithmetic, plus a bounded
 //!   branch-and-bound search over `k_tiles × n_tiles` grids that picks
 //!   per-layer [`coordinator::TilePolicy`]s.
+//! * [`verify`] — the static microcode verifier: a dataflow lint over
+//!   [`isa::Microcode`] (capacity, def-use initialization, overlap hazards,
+//!   a significant-bits width lattice per Table V, per-design capability)
+//!   wired in at admission, model compile, and tuner candidate costing.
 //! * [`model`] — the model-graph executor: a validated DAG of GEMM layers
 //!   with fused elementwise epilogues (bias/ReLU/BNN-sign/shift/residual),
 //!   compiled to pinned per-layer sessions and run **pipelined** through
@@ -69,6 +73,7 @@
 //! paper-artifact-to-module map.
 
 #![warn(missing_docs)]
+#![forbid(unsafe_code)]
 
 pub mod analytic;
 pub mod arch;
@@ -93,6 +98,7 @@ pub mod synth;
 pub mod testutil;
 pub mod tuner;
 pub mod util;
+pub mod verify;
 pub mod workload;
 
 /// Convenient re-exports of the most commonly used types.
@@ -119,6 +125,7 @@ pub mod prelude {
     pub use crate::metrics::{MetricsSnapshot, ServingMetrics};
     pub use crate::synth::{ImplModel, ImplReport, TileReport};
     pub use crate::tuner::{choose_grid, predict_cycles, TilePrediction};
+    pub use crate::verify::{verify, verify_on_pool, Report, Severity, VerifyCtx, VerifyMode};
     pub use crate::workload::ConvWorkload;
 }
 
@@ -141,6 +148,9 @@ pub enum Error {
     /// The submission queue is at capacity and the scheduler is configured
     /// to reject rather than block (see [`coordinator::Backpressure`]).
     Busy(String),
+    /// The static microcode verifier refuted the program at admission
+    /// (see [`verify`] and [`coordinator::CoordinatorConfig::verify`]).
+    Verify(String),
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -154,6 +164,7 @@ impl std::fmt::Display for Error {
             Error::Placement(m) => write!(f, "placement failed: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Busy(m) => write!(f, "backpressure: {m}"),
+            Error::Verify(m) => write!(f, "verification failed: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

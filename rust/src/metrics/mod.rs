@@ -13,6 +13,7 @@
 
 use crate::backend::BackendClass;
 use crate::util::{OnlineStats, Percentiles};
+use crate::verify::VerifyOutcome;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -252,6 +253,9 @@ struct BackendTrack {
     retries: u64,
     macs: u64,
     pim_cycles: u64,
+    verify_passes: u64,
+    verify_warns: u64,
+    verify_rejects: u64,
     total_us: LatencyTrack,
 }
 
@@ -297,6 +301,16 @@ struct ServingInner {
     /// after its consecutive-fault threshold (re-entries after a failed
     /// probe count again).
     quarantines: u64,
+    /// Static-verifier outcomes at admission: programs that verified
+    /// clean.
+    verify_passes: u64,
+    /// Programs admitted with findings
+    /// ([`crate::verify::VerifyMode::Warn`] mode, or warning-grade
+    /// findings under enforcement).
+    verify_warns: u64,
+    /// Programs rejected at admission under
+    /// [`VerifyMode::Enforce`](crate::verify::VerifyMode::Enforce).
+    verify_rejects: u64,
     /// Per-model-layer rollups (graph executor), indexed by layer.
     per_layer: Vec<LayerTrack>,
     /// Latest analytic-tuner decision per model layer (sparse — `None`
@@ -488,6 +502,38 @@ impl ServingMetrics {
         g.tuner_choices[layer] = Some(TunerChoice { k_tiles, n_tiles, predicted_cycles });
     }
 
+    /// Record one static-verification outcome at admission
+    /// ([`Coordinator::submit_job`](crate::coordinator::Coordinator::submit_job)
+    /// / session open): pass (clean), warn (findings, admitted) or
+    /// reject (refuted under
+    /// [`VerifyMode::Enforce`](crate::verify::VerifyMode::Enforce)).
+    /// `backend` tags the outcome to the class the work targeted
+    /// (`None` for untagged work, which may run anywhere).
+    pub fn record_verify(&self, backend: Option<BackendClass>, outcome: VerifyOutcome) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        match outcome {
+            VerifyOutcome::Pass => g.verify_passes += 1,
+            VerifyOutcome::Warn => g.verify_warns += 1,
+            VerifyOutcome::Reject => g.verify_rejects += 1,
+        }
+        if let Some(b) = backend {
+            let idx = match g.per_backend.iter().position(|(k, _)| *k == b) {
+                Some(i) => i,
+                None => {
+                    g.per_backend.push((b, BackendTrack::default()));
+                    g.per_backend.len() - 1
+                }
+            };
+            let track = &mut g.per_backend[idx].1;
+            match outcome {
+                VerifyOutcome::Pass => track.verify_passes += 1,
+                VerifyOutcome::Warn => track.verify_warns += 1,
+                VerifyOutcome::Reject => track.verify_rejects += 1,
+            }
+        }
+    }
+
     /// The mean queue depth observed at enqueue over the current window.
     pub fn mean_queue_depth(&self) -> f64 {
         self.lock().queue_depth.mean()
@@ -580,6 +626,9 @@ impl ServingMetrics {
                 retries: track.retries,
                 macs: track.macs,
                 pim_cycles: track.pim_cycles,
+                verify_passes: track.verify_passes,
+                verify_warns: track.verify_warns,
+                verify_rejects: track.verify_rejects,
                 total: track.total_us.summary(),
             });
         }
@@ -648,6 +697,9 @@ impl ServingMetrics {
             retries: g.retries,
             sheds: g.sheds,
             quarantines: g.quarantines,
+            verify_passes: g.verify_passes,
+            verify_warns: g.verify_warns,
+            verify_rejects: g.verify_rejects,
             per_layer,
             tuner,
             per_backend,
@@ -720,6 +772,13 @@ pub struct BackendSnapshot {
     pub macs: u64,
     /// PIM cycles simulated on this class.
     pub pim_cycles: u64,
+    /// Programs targeting this class that verified clean at admission.
+    pub verify_passes: u64,
+    /// Programs targeting this class admitted with verifier findings.
+    pub verify_warns: u64,
+    /// Programs targeting this class rejected at admission under
+    /// [`VerifyMode::Enforce`](crate::verify::VerifyMode::Enforce).
+    pub verify_rejects: u64,
     /// End-to-end job latency (submit → completion).
     pub total: LatencySummary,
 }
@@ -790,6 +849,14 @@ pub struct MetricsSnapshot {
     /// Region-quarantine events: a region left the pop rotation after
     /// its consecutive-fault threshold (probe failures re-count).
     pub quarantines: u64,
+    /// Programs that verified clean at admission.
+    pub verify_passes: u64,
+    /// Programs admitted with static-verifier findings.
+    pub verify_warns: u64,
+    /// Programs rejected at admission under
+    /// [`VerifyMode::Enforce`](crate::verify::VerifyMode::Enforce) —
+    /// each rejection happened before any queue slot was debited.
+    pub verify_rejects: u64,
     /// Per-model-layer rollups from the graph executor (empty when no
     /// model inference ran in the window).
     pub per_layer: Vec<LayerSnapshot>,
@@ -860,6 +927,12 @@ impl MetricsSnapshot {
             out.push_str(&format!(
                 "\nresilience  retries={} shed={} quarantines={}",
                 self.retries, self.sheds, self.quarantines,
+            ));
+        }
+        if self.verify_passes > 0 || self.verify_warns > 0 || self.verify_rejects > 0 {
+            out.push_str(&format!(
+                "\nverify      passes={} warns={} rejects={}",
+                self.verify_passes, self.verify_warns, self.verify_rejects,
             ));
         }
         for l in &self.per_layer {
@@ -1053,6 +1126,30 @@ mod tests {
         assert!(text.contains("shed=1"), "{text}");
         // Quiet windows keep the resilience line out.
         assert!(!ServingMetrics::new().snapshot().render().contains("resilience"));
+    }
+
+    #[test]
+    fn verify_lane_tracks_and_renders() {
+        use crate::verify::VerifyOutcome;
+        let m = ServingMetrics::new();
+        m.record_verify(Some(BackendClass::Overlay), VerifyOutcome::Pass);
+        m.record_verify(Some(BackendClass::Overlay), VerifyOutcome::Pass);
+        m.record_verify(Some(BackendClass::Overlay), VerifyOutcome::Warn);
+        m.record_verify(None, VerifyOutcome::Reject);
+        let s = m.snapshot();
+        assert_eq!(s.verify_passes, 2);
+        assert_eq!(s.verify_warns, 1);
+        assert_eq!(s.verify_rejects, 1);
+        assert_eq!(s.per_backend.len(), 1);
+        assert_eq!(s.per_backend[0].verify_passes, 2);
+        assert_eq!(s.per_backend[0].verify_warns, 1);
+        assert_eq!(s.per_backend[0].verify_rejects, 0);
+        let text = s.render();
+        assert!(text.contains("verify"), "{text}");
+        assert!(text.contains("passes=2"), "{text}");
+        assert!(text.contains("rejects=1"), "{text}");
+        // Windows with no verification activity keep the line out.
+        assert!(!ServingMetrics::new().snapshot().render().contains("verify"));
     }
 
     #[test]

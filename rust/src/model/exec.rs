@@ -47,6 +47,7 @@ use crate::coordinator::{
 };
 use crate::device::Device;
 use crate::tuner::{self, TilePrediction};
+use crate::verify::{verify_on_pool, VerifyMode};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -216,6 +217,31 @@ impl CompiledModel {
                             ))
                         })?,
                 };
+                // Static verification of the layer's program against
+                // every region class it may run on, before any probe
+                // or session work. A refuted layer fails here with its
+                // layer index attached; `open_session_on` re-checks at
+                // admission and owns the metrics lane, so nothing is
+                // recorded from this early pass.
+                let vmode = coord.config().verify;
+                if !vmode.is_off() {
+                    let plan = compiler.gemm(shape, graph.width())?;
+                    let pool = coord.compatible_kinds(backend);
+                    let report = verify_on_pool(
+                        &plan.microcode,
+                        geom,
+                        &pool,
+                        booth_skip,
+                        Some(shape.k),
+                    );
+                    if report.has_errors() && vmode == VerifyMode::Enforce {
+                        return Err(Error::Verify(format!(
+                            "layer {idx} program '{}' refuted:\n{}",
+                            plan.microcode.label,
+                            report.render()
+                        )));
+                    }
+                }
                 // Dry run on a detached backend (no coordinator
                 // traffic): the simulator's cycle charge for one
                 // request, the deterministic service time of this

@@ -34,9 +34,11 @@
 
 use crate::arch::ArchKind;
 use crate::array::ArrayGeometry;
-use crate::compiler::{split_shape_kn, GemmShape};
+use crate::compiler::{split_shape_kn, GemmShape, PimCompiler};
 use crate::coordinator::TilePolicy;
 use crate::util::ceil_log2;
+use crate::verify::verify_on_pool;
+use std::collections::HashMap;
 
 /// The tuner's verdict for one GEMM on one pool: the chosen grid and
 /// its predicted cycle quantities.
@@ -144,6 +146,33 @@ fn grid_costs(
         .collect()
 }
 
+/// True when every distinct tile of a `k_t × n_t` grid compiles and
+/// passes static verification ([`crate::verify`]) with no errors on
+/// every region class in `pool`. Memoized per tile shape: a search
+/// revisits the same remainder shapes across many grids, and each
+/// shape's program only needs one compile + one verification pass.
+fn grid_admissible(
+    shape: GemmShape,
+    width: u16,
+    k_t: usize,
+    n_t: usize,
+    pool: &[ArchKind],
+    geom: ArrayGeometry,
+    memo: &mut HashMap<(usize, usize, usize), bool>,
+) -> bool {
+    split_shape_kn(shape, k_t, n_t).into_iter().all(|(_, _, tile)| {
+        *memo.entry((tile.m, tile.k, tile.n)).or_insert_with(|| {
+            match PimCompiler::new(geom).gemm(tile, width) {
+                Ok(plan) => {
+                    !verify_on_pool(&plan.microcode, geom, pool, false, Some(tile.k))
+                        .has_errors()
+                }
+                Err(_) => false,
+            }
+        })
+    })
+}
+
 fn evaluate_grid(
     shape: GemmShape,
     width: u16,
@@ -184,9 +213,14 @@ pub fn predict_cycles(
 /// with each axis capped at `min(axis length, 2 × pool size, 16)`,
 /// pruning candidates whose perfect-balance lower bound (total work
 /// spread evenly, or the single costliest tile) already exceeds the
-/// best critical path found. Deterministic; ties break toward less
-/// total work, fewer tiles, and the smaller k-split. An empty pool is
-/// treated as one PiCaSO-F region.
+/// best critical path found. Every candidate's tile programs are
+/// statically verified ([`crate::verify`]) against the pool **before**
+/// costing — a grid whose tiles fail to compile or carry
+/// error-severity findings is never selected; the unsplit `(1,1)`
+/// baseline stays unconditional so the search always returns a
+/// mapping. Deterministic; ties break toward less total work, fewer
+/// tiles, and the smaller k-split. An empty pool is treated as one
+/// PiCaSO-F region.
 pub fn choose_grid(
     shape: GemmShape,
     width: u16,
@@ -199,9 +233,13 @@ pub fn choose_grid(
     let k_cap = cap.min(shape.k.max(1));
     let n_cap = cap.min(shape.n.max(1));
     let mut best = evaluate_grid(shape, width, 1, 1, pool, geom);
+    let mut memo = HashMap::new();
     for k_t in 1..=k_cap {
         for n_t in 1..=n_cap {
             if k_t == 1 && n_t == 1 {
+                continue;
+            }
+            if !grid_admissible(shape, width, k_t, n_t, pool, geom, &mut memo) {
                 continue;
             }
             let costs = grid_costs(shape, width, k_t, n_t, pool, geom);
@@ -314,6 +352,25 @@ mod tests {
             m.critical_cycles,
             o.critical_cycles
         );
+    }
+
+    #[test]
+    fn chosen_grid_tiles_verify_clean() {
+        // The admissibility gate means whatever grid the search picks,
+        // each of its tile programs must verify error-free on every
+        // region class of the pool it was chosen for.
+        let pool = [
+            ArchKind::PICASO_F,
+            ArchKind::Custom(CustomDesign::CoMeFaA),
+            ArchKind::Custom(CustomDesign::Ccb),
+        ];
+        let shape = GemmShape { m: 4, k: 40, n: 8 };
+        let pred = choose_grid(shape, 8, &pool, GEOM);
+        for (_, _, tile) in split_shape_kn(shape, pred.k_tiles, pred.n_tiles) {
+            let plan = PimCompiler::new(GEOM).gemm(tile, 8).expect("tile compiles");
+            let report = verify_on_pool(&plan.microcode, GEOM, &pool, false, Some(tile.k));
+            assert!(!report.has_errors(), "tile {tile:?}: {}", report.render());
+        }
     }
 
     #[test]

@@ -1,0 +1,1017 @@
+//! Static microcode verifier: a dataflow lint over [`Microcode`] that
+//! proves a program safe for a target design *before* it is enqueued.
+//!
+//! Every interpreter in this crate validates programs only by dying at
+//! execute time (the overlay's 1K-deep register-file checks, the custom
+//! tiles' 256-deep checks, `EXTEND` shrink rejection, …). In a serving
+//! stack that is far too late: a malformed program has already burned a
+//! scheduler slot, a retry budget, and possibly a region quarantine by
+//! the time the simulator reports it was statically doomed. This module
+//! is the admission-time answer — one forward dataflow pass over the
+//! instruction stream that checks five defect classes:
+//!
+//! 1. **Capacity** — every wordline range the program *reads or writes*
+//!    fits the design's register-file depth
+//!    ([`ArchKind::bits_per_pe`]: 1024 for the overlay/SPAR-2, 256 for
+//!    the custom tiles, paper Table VIII). Note
+//!    [`Microcode::max_wordline`] alone is not enough: a read-only
+//!    out-of-range operand never appears in a destination range.
+//! 2. **Initialization** — a def-use pass flags reads of wordlines no
+//!    earlier instruction (or declared staging, [`VerifyCtx`]) wrote.
+//! 3. **Hazards** — a destination range that partially overlaps a
+//!    source range the same instruction still reads is rejected; legal
+//!    in-place forms (ALU at the same base, the inherently in-place
+//!    fold/pool/reduce/extend ops) pass. `MULT` is special: it clears
+//!    its `2w` product planes before the shift-add, so *any* overlap
+//!    with a source operand silently corrupts the product.
+//! 4. **Width soundness** — an abstract significant-bits lattice:
+//!    `MULT` produces `2w` significant bits, `EXT` preserves them, and
+//!    every summing reduction (`ACCUM`/`FOLD`/`NETRED`) at width `w`
+//!    over `s` summands needs `w ≥ sig + ceil(log2 s)` — the paper's
+//!    Table V exact-precision accumulation width, capped at the
+//!    compiler's 48-bit accumulator budget
+//!    ([`crate::compiler::ACC_WIDTH_CAP`]).
+//! 5. **Capability** — fold/pool levels vs the 16-lane block, network
+//!    levels vs the region's block span, `FOLD`/`POOL`/`NETRED` on
+//!    custom tiles (which have no OpMux/network datapath, §V), SPAR-2's
+//!    NEWS copy scratch and the unfused custom tiles' copy scratchpad
+//!    (reserved wordlines, Fig 7), Booth multiply on designs whose
+//!    cycle model lacks it (Table VIII).
+//!
+//! Findings carry the instruction index and its rendered
+//! [`crate::isa::asm`] line. [`Severity::Error`] findings are defects
+//! the interpreters would reject (or silently corrupt data on);
+//! [`Severity::Warning`] findings are suspicious but executable — e.g.
+//! a possible accumulator overflow when the true summand count is
+//! unknown, or `booth_skip` on a design without a Booth datapath.
+//!
+//! The serving stack wires this in at three layers: the
+//! [`Coordinator`](crate::coordinator::Coordinator) verifies at
+//! admission behind
+//! [`CoordinatorConfig::verify`](crate::coordinator::CoordinatorConfig::verify)
+//! (rejecting *before* any scheduler slot is debited),
+//! [`CompiledModel::compile`](crate::model::CompiledModel::compile)
+//! verifies every layer program, and
+//! [`tuner::choose_grid`](crate::tuner::choose_grid) verifies candidate
+//! tile programs before costing them. The `check` CLI subcommand lints
+//! `.asm` files directly. In debug builds the interpreters cross-check
+//! the other direction: any runtime program error must also have been
+//! statically flagged ("no false negatives").
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+use crate::arch::{ArchKind, BoothSupport};
+use crate::array::ArrayGeometry;
+use crate::compiler::ACC_WIDTH_CAP;
+use crate::isa::{asm, Instruction, Microcode, RfAddr};
+use crate::util::ceil_log2;
+
+/// Admission-time verification policy of a
+/// [`Coordinator`](crate::coordinator::Coordinator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VerifyMode {
+    /// No static verification.
+    Off,
+    /// Verify and count findings in the metrics verify lane, but admit
+    /// the job regardless (the default: observability without new
+    /// rejection behavior).
+    #[default]
+    Warn,
+    /// Reject programs with [`Severity::Error`] findings at admission
+    /// with [`Error::Verify`](crate::Error::Verify), before any
+    /// scheduler slot is debited. Warning-grade findings still admit.
+    Enforce,
+}
+
+impl VerifyMode {
+    /// True when verification is disabled.
+    pub fn is_off(self) -> bool {
+        matches!(self, VerifyMode::Off)
+    }
+}
+
+impl std::str::FromStr for VerifyMode {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Ok(VerifyMode::Off),
+            "warn" => Ok(VerifyMode::Warn),
+            "enforce" => Ok(VerifyMode::Enforce),
+            other => Err(crate::Error::Config(format!(
+                "unknown verify mode '{other}' (off|warn|enforce)"
+            ))),
+        }
+    }
+}
+
+/// How one verification ended — the unit of the
+/// [`ServingMetrics`](crate::metrics::ServingMetrics) verify lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyOutcome {
+    /// No findings.
+    Pass,
+    /// Findings recorded, job admitted anyway ([`VerifyMode::Warn`], or
+    /// warning-grade findings under [`VerifyMode::Enforce`]).
+    Warn,
+    /// Error-grade findings under [`VerifyMode::Enforce`]: the job was
+    /// rejected at admission.
+    Reject,
+}
+
+/// Severity of a [`Diagnostic`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Suspicious but executable (possible overflow with an unknown
+    /// summand count, ignored `booth_skip`, degenerate network level).
+    Warning,
+    /// A defect: the interpreters would reject the program at runtime,
+    /// or execute it with silently corrupted data.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One verifier finding, anchored to an instruction.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Index of the offending instruction in the program.
+    pub index: usize,
+    /// The instruction rendered as its assembler line.
+    pub asm: String,
+    /// What is wrong.
+    pub message: String,
+    /// Defect or lint.
+    pub severity: Severity,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "#{} {}: {} [{}]",
+            self.index,
+            self.severity,
+            self.message,
+            self.asm.trim_end()
+        )
+    }
+}
+
+/// The verifier's verdict on one program: every finding, in program
+/// order.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// All findings (errors and warnings), in instruction order.
+    pub findings: Vec<Diagnostic>,
+}
+
+impl Report {
+    /// True when there are no findings at all.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// True when at least one [`Severity::Error`] finding exists.
+    pub fn has_errors(&self) -> bool {
+        self.findings.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// Number of error-grade findings.
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-grade findings.
+    pub fn warnings(&self) -> usize {
+        self.findings.len() - self.errors()
+    }
+
+    /// One line per finding (empty string when clean).
+    pub fn render(&self) -> String {
+        self.findings.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    }
+}
+
+/// Everything the verifier knows about the execution environment of a
+/// program: the target design, the region geometry, and optional
+/// declarations that sharpen the analysis (staged operands, the true
+/// summand count of a reduction, the bound staging buffers).
+#[derive(Debug, Clone)]
+pub struct VerifyCtx {
+    /// The design the program would execute on (fixes the register-file
+    /// depth, Booth support, and the OpMux/network capability set).
+    pub kind: ArchKind,
+    /// Lanes per reduction row — the `q` an `ACCUM` reduces over.
+    pub row_lanes: usize,
+    /// PE-blocks per logical row — the span `NETRED` levels hop within.
+    pub net_span: usize,
+    /// Whether the runtime would request Booth zero-skipping.
+    pub booth_skip: bool,
+    /// Upper bound on the *nonzero* summands per reduction (e.g. the
+    /// GEMM `k` of the slice): lanes past it are staged as zeros and
+    /// cannot overflow the accumulator. `None` assumes every lane may
+    /// be populated, and demotes width findings to warnings.
+    pub summands: Option<usize>,
+    /// Wordline ranges initialized before the program runs (staged
+    /// weights, state left by a previous program).
+    pub preinit: Vec<(RfAddr, u32)>,
+    /// Host staging buffers bound at execute time. `None` skips the
+    /// unbound-`LOAD` check (buffers unknown at compile time).
+    pub bound_bufs: Option<Vec<u16>>,
+}
+
+impl VerifyCtx {
+    /// Context for `kind` at the given region geometry, with no
+    /// declarations: cold register file, unknown buffers, no summand
+    /// bound, no Booth skipping.
+    pub fn new(kind: ArchKind, geom: ArrayGeometry) -> Self {
+        Self {
+            kind,
+            row_lanes: geom.row_lanes(),
+            net_span: geom.cols,
+            booth_skip: false,
+            summands: None,
+            preinit: Vec::new(),
+            bound_bufs: None,
+        }
+    }
+
+    /// Declare whether the runtime requests Booth zero-skipping.
+    pub fn with_booth_skip(mut self, on: bool) -> Self {
+        self.booth_skip = on;
+        self
+    }
+
+    /// Declare the true summand bound of reductions (promotes width
+    /// findings to errors).
+    pub fn with_summands(mut self, k: usize) -> Self {
+        self.summands = Some(k);
+        self
+    }
+
+    /// Declare a wordline range as initialized before the program runs.
+    pub fn with_preinit(mut self, base: RfAddr, width: u32) -> Self {
+        self.preinit.push((base, width));
+        self
+    }
+
+    /// Treat the whole register file as initialized (interpreter-side
+    /// cross-checks: state from earlier programs is legal to read).
+    pub fn assume_initialized(mut self) -> Self {
+        let depth = self.depth() as u32;
+        self.preinit.push((RfAddr(0), depth));
+        self
+    }
+
+    /// Declare the exact set of bound staging buffers (enables the
+    /// unbound-`LOAD` check).
+    pub fn with_bound_bufs(mut self, bufs: Vec<u16>) -> Self {
+        self.bound_bufs = Some(bufs);
+        self
+    }
+
+    /// Register-file depth of the target design (wordlines per PE).
+    pub fn depth(&self) -> usize {
+        self.kind.bits_per_pe() as usize
+    }
+}
+
+/// Statically verify `mc` for the environment in `ctx`. Pure analysis:
+/// no simulator state is touched, cost is `O(instructions)`.
+pub fn verify(mc: &Microcode, ctx: &VerifyCtx) -> Report {
+    let mut checker = Checker::new(ctx);
+    for (i, instr) in mc.instrs.iter().enumerate() {
+        checker.check(i, instr);
+    }
+    Report { findings: checker.findings }
+}
+
+/// Verify `mc` against every *distinct* design in `pool` (the set of
+/// regions a job may be placed on) and merge the findings: a program is
+/// admissible only if it is safe on every region that might run it.
+/// Duplicate findings across kinds are reported once, tagged with the
+/// first kind that produced them when the pool is heterogeneous. An
+/// empty pool verifies trivially clean.
+pub fn verify_on_pool(
+    mc: &Microcode,
+    geom: ArrayGeometry,
+    pool: &[ArchKind],
+    booth_skip: bool,
+    summands: Option<usize>,
+) -> Report {
+    let mut kinds: Vec<ArchKind> = Vec::new();
+    for k in pool {
+        if !kinds.contains(k) {
+            kinds.push(*k);
+        }
+    }
+    let tag = kinds.len() > 1;
+    let mut seen: HashSet<(usize, String)> = HashSet::new();
+    let mut findings: Vec<Diagnostic> = Vec::new();
+    for kind in kinds {
+        let mut ctx = VerifyCtx::new(kind, geom).with_booth_skip(booth_skip);
+        if let Some(k) = summands {
+            ctx = ctx.with_summands(k);
+        }
+        for d in verify(mc, &ctx).findings {
+            if seen.insert((d.index, d.message.clone())) {
+                let message = if tag {
+                    format!("[{}] {}", kind.name(), d.message)
+                } else {
+                    d.message
+                };
+                findings.push(Diagnostic { message, ..d });
+            }
+        }
+    }
+    findings.sort_by_key(|d| d.index);
+    Report { findings }
+}
+
+/// Significant-bits fact about the value last written at a base
+/// wordline: the planes it occupies and a bound on its magnitude.
+#[derive(Debug, Clone, Copy)]
+struct Val {
+    width: u32,
+    sig: u32,
+}
+
+fn ranges_overlap(a: usize, aw: usize, b: usize, bw: usize) -> bool {
+    a < b + bw && b < a + aw
+}
+
+struct Checker<'a> {
+    ctx: &'a VerifyCtx,
+    depth: usize,
+    init: Vec<bool>,
+    vals: HashMap<u16, Val>,
+    bufs: Option<HashSet<u16>>,
+    booth_warned: bool,
+    findings: Vec<Diagnostic>,
+}
+
+impl<'a> Checker<'a> {
+    fn new(ctx: &'a VerifyCtx) -> Self {
+        let depth = ctx.depth();
+        let mut c = Checker {
+            ctx,
+            depth,
+            init: vec![false; depth],
+            vals: HashMap::new(),
+            bufs: ctx.bound_bufs.as_ref().map(|b| b.iter().copied().collect()),
+            booth_warned: false,
+            findings: Vec::new(),
+        };
+        for &(base, w) in &ctx.preinit {
+            c.mark_written(base, w, w);
+        }
+        c
+    }
+
+    fn emit(&mut self, index: usize, instr: &Instruction, severity: Severity, message: String) {
+        self.findings.push(Diagnostic {
+            index,
+            asm: asm::format_instr(instr),
+            message,
+            severity,
+        });
+    }
+
+    /// Width findings are errors only when the summand bound is
+    /// declared: without it, zero-padded lanes may make the reduction
+    /// safe in practice.
+    fn width_severity(&self) -> Severity {
+        if self.ctx.summands.is_some() {
+            Severity::Error
+        } else {
+            Severity::Warning
+        }
+    }
+
+    fn is_custom(&self) -> bool {
+        matches!(self.ctx.kind, ArchKind::Custom(_))
+    }
+
+    /// Capacity: every range the instruction touches (destinations and
+    /// sources) must fit the register-file depth.
+    fn check_capacity(&mut self, i: usize, instr: &Instruction) {
+        let mut ranges: Vec<(RfAddr, u16)> = Vec::new();
+        if let Some(r) = instr.dst_range() {
+            ranges.push(r);
+        }
+        for r in instr.src_ranges() {
+            if !ranges.contains(&r) {
+                ranges.push(r);
+            }
+        }
+        for (base, w) in ranges {
+            if w == 0 {
+                self.emit(
+                    i,
+                    instr,
+                    Severity::Error,
+                    format!("zero-width operand at {base}"),
+                );
+            } else if base.0 as usize + w as usize > self.depth {
+                self.emit(
+                    i,
+                    instr,
+                    Severity::Error,
+                    format!(
+                        "wordlines {base}..+{w} exceed the {} register-file depth {}",
+                        self.ctx.kind.name(),
+                        self.depth
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Def-use read: flag reads of never-written wordlines, and return
+    /// the significant-bits bound of the value at `base`.
+    fn read(&mut self, i: usize, instr: &Instruction, base: RfAddr, w: u16) -> u32 {
+        let lo = base.0 as usize;
+        let hi = (lo + w as usize).min(self.depth);
+        if let Some(first) = (lo..hi).find(|&b| !self.init[b]) {
+            self.emit(
+                i,
+                instr,
+                Severity::Error,
+                format!("reads r{first} inside {base}..+{w} before any write initializes it"),
+            );
+        }
+        self.vals.get(&base.0).map_or(u32::from(w), |v| v.sig)
+    }
+
+    /// Record a write of `w` planes at `base` carrying `sig`
+    /// significant bits; values overlapped by the write are killed.
+    fn mark_written(&mut self, base: RfAddr, w: u32, sig: u32) {
+        let lo = base.0 as usize;
+        let hi = (lo + w as usize).min(self.depth);
+        for slot in &mut self.init[lo..hi] {
+            *slot = true;
+        }
+        self.vals.retain(|&b, v| {
+            b == base.0 || !ranges_overlap(b as usize, v.width as usize, lo, w as usize)
+        });
+        self.vals.insert(base.0, Val { width: w, sig: sig.min(w) });
+    }
+
+    fn check(&mut self, i: usize, instr: &Instruction) {
+        self.check_capacity(i, instr);
+        match *instr {
+            Instruction::Alu { op: _, dst, x, y, width } => {
+                self.read(i, instr, x, width);
+                self.read(i, instr, y, width);
+                let w = usize::from(width);
+                for src in [x, y] {
+                    if src.0 != dst.0
+                        && ranges_overlap(dst.0 as usize, w, src.0 as usize, w)
+                    {
+                        self.emit(
+                            i,
+                            instr,
+                            Severity::Error,
+                            format!(
+                                "destination {dst}..+{width} partially overlaps source \
+                                 {src}..+{width} (in-place ALU is only safe at the same \
+                                 base wordline)"
+                            ),
+                        );
+                    }
+                }
+                self.mark_written(dst, u32::from(width), u32::from(width));
+            }
+            Instruction::Mult { dst, mand, mier, width } => {
+                self.read(i, instr, mand, width);
+                self.read(i, instr, mier, width);
+                let w2 = 2 * usize::from(width);
+                for src in [mand, mier] {
+                    if ranges_overlap(dst.0 as usize, w2, src.0 as usize, usize::from(width)) {
+                        self.emit(
+                            i,
+                            instr,
+                            Severity::Error,
+                            format!(
+                                "product planes {dst}..+{} overlap source {src}..+{width}: \
+                                 MULT clears its destination before the shift-add",
+                                2 * width
+                            ),
+                        );
+                    }
+                }
+                if self.ctx.booth_skip
+                    && self.ctx.kind.booth_support() == BoothSupport::No
+                    && !self.booth_warned
+                {
+                    self.booth_warned = true;
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Warning,
+                        format!(
+                            "{} has no Booth datapath (Table VIII); booth_skip is ignored \
+                             and plain shift-add cycles are charged",
+                            self.ctx.kind.name()
+                        ),
+                    );
+                }
+                self.mark_written(dst, 2 * u32::from(width), 2 * u32::from(width));
+            }
+            Instruction::Fold { pattern: _, level, dst, width } => {
+                if self.is_custom() {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Error,
+                        "FOLD requires the overlay's OpMux fold datapath; custom tiles \
+                         reduce through ACCUM only (§V)"
+                            .into(),
+                    );
+                }
+                if !(1..=4).contains(&level) {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Error,
+                        format!("fold level {level} outside 1..=4 (16-lane block)"),
+                    );
+                }
+                let sig = self.read(i, instr, dst, width);
+                let w = u32::from(width);
+                if w < sig + 1 {
+                    self.emit(
+                        i,
+                        instr,
+                        self.width_severity(),
+                        format!(
+                            "folding {sig}-bit values in place at w={width} can overflow \
+                             (needs {} bits)",
+                            sig + 1
+                        ),
+                    );
+                }
+                self.mark_written(dst, w, (sig + 1).min(w));
+            }
+            Instruction::Pool { op: _, pattern: _, level, dst, width } => {
+                if self.is_custom() {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Error,
+                        "POOL requires the overlay's OpMux fold datapath; custom tiles \
+                         reduce through ACCUM only (§V)"
+                            .into(),
+                    );
+                }
+                if !(1..=4).contains(&level) {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Error,
+                        format!("pool level {level} outside 1..=4 (16-lane block)"),
+                    );
+                }
+                // Max/min pooling never grows operand magnitude.
+                let sig = self.read(i, instr, dst, width);
+                self.mark_written(dst, u32::from(width), sig);
+            }
+            Instruction::NetReduce { level, dst, width } => {
+                if self.is_custom() {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Error,
+                        "NETRED requires the binary-hopping network; custom tiles reduce \
+                         through ACCUM only (§V)"
+                            .into(),
+                    );
+                } else if (1usize << level.min(31)) >= self.ctx.net_span {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Warning,
+                        format!(
+                            "network level {level} has no transmitter blocks on a \
+                             {}-block row",
+                            self.ctx.net_span
+                        ),
+                    );
+                }
+                let sig = self.read(i, instr, dst, width);
+                let w = u32::from(width);
+                if w < sig + 1 {
+                    self.emit(
+                        i,
+                        instr,
+                        self.width_severity(),
+                        format!(
+                            "summing {sig}-bit block results at w={width} can overflow \
+                             (needs {} bits)",
+                            sig + 1
+                        ),
+                    );
+                }
+                self.mark_written(dst, w, (sig + 1).min(w));
+            }
+            Instruction::Accumulate { dst, width } => {
+                let q = self.ctx.row_lanes;
+                if !q.is_power_of_two() {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Error,
+                        format!("ACCUM reduces a row of {q} lanes, which is not a power of two"),
+                    );
+                }
+                let w = usize::from(width);
+                let scratch = match self.ctx.kind {
+                    ArchKind::Spar2 => {
+                        Some((crate::array::NEWS_SCRATCH_WL, "NEWS copy scratch"))
+                    }
+                    ArchKind::Custom(d) if !d.is_modified() => {
+                        Some((crate::custom::SCRATCH_WL, "copy scratchpad"))
+                    }
+                    _ => None,
+                };
+                if let Some((s, what)) = scratch {
+                    if s + w > self.depth {
+                        self.emit(
+                            i,
+                            instr,
+                            Severity::Error,
+                            format!(
+                                "{what} r{s}..+{width} exceeds the {} register-file \
+                                 depth {}",
+                                self.ctx.kind.name(),
+                                self.depth
+                            ),
+                        );
+                    }
+                    if ranges_overlap(dst.0 as usize, w, s, w) {
+                        self.emit(
+                            i,
+                            instr,
+                            Severity::Error,
+                            format!("ACCUM at {dst}..+{width} overlaps the {what} at r{s}..+{width}"),
+                        );
+                    }
+                }
+                let sig = self.read(i, instr, dst, width);
+                let bound = self
+                    .ctx
+                    .summands
+                    .map_or(q, |s| s.max(1).min(q))
+                    .max(2);
+                let required = (sig + ceil_log2(bound)).min(u32::from(ACC_WIDTH_CAP));
+                if u32::from(width) < required {
+                    self.emit(
+                        i,
+                        instr,
+                        self.width_severity(),
+                        format!(
+                            "ACCUM at w={width} can overflow: {sig}-bit operands summed \
+                             over {bound} lanes need {required} bits (Table V)"
+                        ),
+                    );
+                }
+                self.mark_written(dst, u32::from(width), required.min(u32::from(width)));
+            }
+            Instruction::Extend { dst, from, to } => {
+                if from == 0 || to <= from {
+                    self.emit(
+                        i,
+                        instr,
+                        Severity::Error,
+                        format!("EXT {from}->{to} is not widening"),
+                    );
+                    let w = u32::from(to.max(from).max(1));
+                    self.mark_written(dst, w, w);
+                } else {
+                    let sig = self.read(i, instr, dst, from);
+                    if sig > u32::from(from) {
+                        self.emit(
+                            i,
+                            instr,
+                            Severity::Warning,
+                            format!(
+                                "EXT from w={from} but the live value at {dst} has {sig} \
+                                 significant bits (sign plane is below the value's sign)"
+                            ),
+                        );
+                    }
+                    self.mark_written(dst, u32::from(to), sig.min(u32::from(from)));
+                }
+            }
+            Instruction::Load { dst, width, buf } => {
+                if let Some(bufs) = &self.bufs {
+                    if !bufs.contains(&buf.0) {
+                        self.emit(
+                            i,
+                            instr,
+                            Severity::Error,
+                            format!("LOAD from unbound {buf}"),
+                        );
+                    }
+                }
+                self.mark_written(dst, u32::from(width), u32::from(width));
+            }
+            Instruction::Store { src, width, buf } => {
+                self.read(i, instr, src, width);
+                if let Some(bufs) = &mut self.bufs {
+                    // A STORE binds its buffer: later LOADs may read it.
+                    bufs.insert(buf.0);
+                }
+            }
+            Instruction::Nop => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CustomDesign;
+    use crate::compiler::{GemmShape, MacProgram, PimCompiler, BUF_A, BUF_B};
+    use crate::isa::{AluOp, BufId, FoldPattern, PoolOp};
+
+    const GEOM: ArrayGeometry = ArrayGeometry { rows: 2, cols: 2 };
+
+    fn overlay_ctx() -> VerifyCtx {
+        VerifyCtx::new(ArchKind::PICASO_F, GEOM)
+    }
+
+    fn mc(instrs: &[Instruction]) -> Microcode {
+        let mut m = Microcode::new("t", 8);
+        for &i in instrs {
+            m.push(i);
+        }
+        m
+    }
+
+    #[test]
+    fn read_only_out_of_range_is_caught() {
+        // max_wordline() alone misses this: STORE has no dst range.
+        let p = mc(&[Instruction::Store { src: RfAddr(1020), width: 8, buf: BufId(0) }]);
+        assert_eq!(p.max_wordline(), 1028, "src_ranges now count toward max_wordline");
+        let r = verify(&p, &overlay_ctx().assume_initialized());
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("exceed"), "{}", r.render());
+    }
+
+    #[test]
+    fn capacity_uses_the_design_depth() {
+        // r200..+16 fits the overlay's 1024 but not the custom 256 RF
+        // at 2w... use a range beyond 256.
+        let p = mc(&[Instruction::Load { dst: RfAddr(250), width: 8, buf: BufId(0) }]);
+        assert!(verify(&p, &overlay_ctx()).is_clean());
+        let custom = VerifyCtx::new(ArchKind::Custom(CustomDesign::CoMeFaA), GEOM);
+        let r = verify(&p, &custom);
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("depth 256"), "{}", r.render());
+    }
+
+    #[test]
+    fn uninitialized_read_is_flagged() {
+        let p = mc(&[Instruction::Alu {
+            op: AluOp::Add,
+            dst: RfAddr(64),
+            x: RfAddr(0),
+            y: RfAddr(8),
+            width: 8,
+        }]);
+        let r = verify(&p, &overlay_ctx());
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("before any write"), "{}", r.render());
+        // Declaring the operands staged silences it.
+        let staged = overlay_ctx().with_preinit(RfAddr(0), 8).with_preinit(RfAddr(8), 8);
+        assert!(verify(&p, &staged).is_clean());
+    }
+
+    #[test]
+    fn shifted_alu_overlap_is_a_hazard_but_in_place_is_legal() {
+        let in_place = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+            Instruction::Alu { op: AluOp::Add, dst: RfAddr(0), x: RfAddr(0), y: RfAddr(8), width: 8 },
+        ]);
+        assert!(verify(&in_place, &overlay_ctx()).is_clean());
+        let shifted = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+            Instruction::Alu { op: AluOp::Add, dst: RfAddr(4), x: RfAddr(0), y: RfAddr(8), width: 8 },
+        ]);
+        let r = verify(&shifted, &overlay_ctx());
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("partially overlaps"), "{}", r.render());
+    }
+
+    #[test]
+    fn mult_destination_may_not_overlap_sources() {
+        let p = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+            // Product planes 8..24 overlap mier at 8..16.
+            Instruction::Mult { dst: RfAddr(8), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+        ]);
+        let r = verify(&p, &overlay_ctx());
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("clears its destination"), "{}", r.render());
+    }
+
+    #[test]
+    fn accumulate_width_lattice_matches_table_v() {
+        // 16-bit products over 32 lanes need 16 + 5 = 21 bits.
+        let narrow = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+            Instruction::Mult { dst: RfAddr(32), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+            Instruction::Accumulate { dst: RfAddr(32), width: 16 },
+        ]);
+        // Without a summand bound: warning only (tail lanes may be zero).
+        let r = verify(&narrow, &overlay_ctx());
+        assert!(!r.has_errors() && !r.is_clean(), "{}", r.render());
+        // With the true k declared: a hard error.
+        let r = verify(&narrow, &overlay_ctx().with_summands(32));
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("21 bits"), "{}", r.render());
+        // Extending to the Table V accumulation width first is clean.
+        let wide = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+            Instruction::Mult { dst: RfAddr(32), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+            Instruction::Extend { dst: RfAddr(32), from: 16, to: 21 },
+            Instruction::Accumulate { dst: RfAddr(32), width: 21 },
+        ]);
+        assert!(verify(&wide, &overlay_ctx().with_summands(32)).is_clean());
+    }
+
+    #[test]
+    fn summand_bound_is_clamped_to_the_row() {
+        // k = 1000 but only 32 lanes per row: 16 + 5 bits suffice per
+        // slice, and the requirement caps at the compiler's 48-bit
+        // accumulator budget.
+        let p = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+            Instruction::Mult { dst: RfAddr(32), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+            Instruction::Extend { dst: RfAddr(32), from: 16, to: 21 },
+            Instruction::Accumulate { dst: RfAddr(32), width: 21 },
+        ]);
+        assert!(verify(&p, &overlay_ctx().with_summands(1000)).is_clean());
+    }
+
+    #[test]
+    fn extend_must_widen() {
+        let p = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Extend { dst: RfAddr(0), from: 8, to: 8 },
+        ]);
+        let r = verify(&p, &overlay_ctx());
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("not widening"), "{}", r.render());
+        let p = mc(&[Instruction::Extend { dst: RfAddr(0), from: 0, to: 8 }]);
+        assert!(verify(&p, &overlay_ctx()).has_errors());
+    }
+
+    #[test]
+    fn custom_tiles_reject_the_overlay_only_datapaths() {
+        let ctx = VerifyCtx::new(ArchKind::Custom(CustomDesign::CoMeFaD), GEOM)
+            .assume_initialized();
+        for instr in [
+            Instruction::Fold { pattern: FoldPattern::Halving, level: 1, dst: RfAddr(0), width: 8 },
+            Instruction::Pool {
+                op: PoolOp::Max,
+                pattern: FoldPattern::Adjacent,
+                level: 1,
+                dst: RfAddr(0),
+                width: 8,
+            },
+            Instruction::NetReduce { level: 0, dst: RfAddr(0), width: 8 },
+        ] {
+            let r = verify(&mc(&[instr]), &ctx);
+            assert!(r.has_errors(), "{instr:?}: {}", r.render());
+            assert!(r.render().contains("ACCUM only"), "{}", r.render());
+        }
+    }
+
+    #[test]
+    fn fold_level_bounds() {
+        let p = mc(&[Instruction::Fold {
+            pattern: FoldPattern::Halving,
+            level: 5,
+            dst: RfAddr(0),
+            width: 8,
+        }]);
+        let r = verify(&p, &overlay_ctx().assume_initialized());
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("outside 1..=4"), "{}", r.render());
+    }
+
+    #[test]
+    fn scratch_collisions_are_errors() {
+        // Unfused custom tiles copy through r128..: accumulating there
+        // corrupts the reduction.
+        let ctx = VerifyCtx::new(ArchKind::Custom(CustomDesign::Ccb), GEOM)
+            .assume_initialized();
+        let p = mc(&[Instruction::Accumulate { dst: RfAddr(126), width: 20 }]);
+        let r = verify(&p, &ctx);
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("copy scratchpad"), "{}", r.render());
+        // SPAR-2 stages NEWS copies at r960.
+        let ctx = VerifyCtx::new(ArchKind::Spar2, GEOM).assume_initialized();
+        let p = mc(&[Instruction::Accumulate { dst: RfAddr(950), width: 20 }]);
+        let r = verify(&p, &ctx);
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("NEWS copy scratch"), "{}", r.render());
+        // The fused Mod designs removed the scratchpad (§V-A).
+        let ctx = VerifyCtx::new(ArchKind::Custom(CustomDesign::AMod), GEOM)
+            .assume_initialized();
+        let p = mc(&[Instruction::Accumulate { dst: RfAddr(126), width: 20 }]);
+        assert!(!verify(&p, &ctx).has_errors());
+    }
+
+    #[test]
+    fn booth_on_ccb_is_a_warning_not_an_error() {
+        let p = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+            Instruction::Mult { dst: RfAddr(32), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+        ]);
+        let ctx = VerifyCtx::new(ArchKind::Custom(CustomDesign::Ccb), GEOM).with_booth_skip(true);
+        let r = verify(&p, &ctx);
+        assert!(!r.has_errors(), "{}", r.render());
+        assert_eq!(r.warnings(), 1, "{}", r.render());
+        assert!(r.render().contains("no Booth datapath"), "{}", r.render());
+        // Without booth_skip the program is clean.
+        let ctx = VerifyCtx::new(ArchKind::Custom(CustomDesign::Ccb), GEOM);
+        assert!(verify(&p, &ctx).is_clean());
+    }
+
+    #[test]
+    fn unbound_load_needs_declared_buffers() {
+        let p = mc(&[Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(7) }]);
+        // Unknown buffers: no finding.
+        assert!(verify(&p, &overlay_ctx()).is_clean());
+        // Declared set without buf7: error.
+        let r = verify(&p, &overlay_ctx().with_bound_bufs(vec![0, 1]));
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("unbound buf7"), "{}", r.render());
+        // A prior STORE binds the buffer.
+        let p = mc(&[
+            Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+            Instruction::Store { src: RfAddr(0), width: 8, buf: BufId(7) },
+            Instruction::Load { dst: RfAddr(16), width: 8, buf: BufId(7) },
+        ]);
+        assert!(verify(&p, &overlay_ctx().with_bound_bufs(vec![0])).is_clean());
+    }
+
+    #[test]
+    fn compiler_programs_verify_clean_on_their_pools() {
+        let geom = ArrayGeometry::new(4, 2);
+        let shape = GemmShape { m: 3, k: 70, n: 5 };
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        let pool = [
+            ArchKind::PICASO_F,
+            ArchKind::Spar2,
+            ArchKind::Custom(CustomDesign::Ccb),
+            ArchKind::Custom(CustomDesign::AMod),
+        ];
+        let r = verify_on_pool(&plan.microcode, geom, &pool, false, Some(shape.k));
+        assert!(r.is_clean(), "{}", r.render());
+        // The canned MAC program too.
+        let p = MacProgram::elementwise_mul_then_accumulate(8, geom.row_lanes());
+        let ctx = overlay_ctx().with_summands(GEOM.row_lanes());
+        let _ = (BUF_A, BUF_B);
+        assert!(verify(&p, &ctx).is_clean());
+    }
+
+    #[test]
+    fn pool_verification_tags_heterogeneous_findings() {
+        let p = mc(&[Instruction::Load { dst: RfAddr(250), width: 8, buf: BufId(0) }]);
+        let pool = [ArchKind::PICASO_F, ArchKind::Custom(CustomDesign::Ccb)];
+        let r = verify_on_pool(&p, GEOM, &pool, false, None);
+        assert!(r.has_errors(), "{}", r.render());
+        assert!(r.render().contains("[CCB]"), "{}", r.render());
+        // Empty pools verify trivially.
+        assert!(verify_on_pool(&p, GEOM, &[], false, None).is_clean());
+    }
+
+    #[test]
+    fn verify_mode_parses_and_defaults_to_warn() {
+        assert_eq!(VerifyMode::default(), VerifyMode::Warn);
+        assert_eq!("enforce".parse::<VerifyMode>().unwrap(), VerifyMode::Enforce);
+        assert_eq!("OFF".parse::<VerifyMode>().unwrap(), VerifyMode::Off);
+        assert!("loose".parse::<VerifyMode>().is_err());
+        assert!(VerifyMode::Off.is_off());
+    }
+}

@@ -1,0 +1,343 @@
+//! Static-verifier integration tests: one targeted negative test per
+//! defect class, a clean-sweep over every compiler-emitted program, and
+//! the admission-gate contract — an enforcing coordinator rejects a
+//! refuted program before any scheduler slot is debited.
+
+use picaso::compiler::gemm_ref;
+use picaso::isa::{BufId, FoldPattern, RfAddr};
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+use picaso::Error;
+
+const GEOM: ArrayGeometry = ArrayGeometry { rows: 2, cols: 2 };
+
+fn overlay_ctx() -> VerifyCtx {
+    VerifyCtx::new(ArchKind::PICASO_F, GEOM)
+}
+
+fn mc(instrs: &[Instruction]) -> Microcode {
+    let mut m = Microcode::new("t", 8);
+    for i in instrs {
+        m.push(*i);
+    }
+    m
+}
+
+/// A program every backend refutes: it reads a wordline nothing wrote,
+/// from a range past every design's register file.
+fn refuted_program() -> Microcode {
+    mc(&[Instruction::Store { src: RfAddr(1020), width: 8, buf: BufId(0) }])
+}
+
+// --------------------------------------- one negative test per class
+
+#[test]
+fn defect_rf_capacity_is_refuted() {
+    // 250+8 fits the overlay's 1024-deep RF but not a custom tile's
+    // 256 rows (Table VIII).
+    let prog = mc(&[Instruction::Load { dst: RfAddr(250), width: 8, buf: BufId(0) }]);
+    assert!(verify(&prog, &overlay_ctx()).is_clean());
+    let custom = VerifyCtx::new(ArchKind::Custom(CustomDesign::CoMeFaA), GEOM);
+    let report = verify(&prog, &custom);
+    assert!(report.has_errors(), "{}", report.render());
+    assert!(report.render().contains("depth 256"), "{}", report.render());
+}
+
+#[test]
+fn defect_uninitialized_read_is_refuted() {
+    let prog = mc(&[Instruction::Store { src: RfAddr(0), width: 8, buf: BufId(0) }]);
+    let report = verify(&prog, &overlay_ctx());
+    assert!(report.has_errors(), "{}", report.render());
+    assert!(report.render().contains("before any write"), "{}", report.render());
+    // Declaring the operand staged (the session path) silences it.
+    let ctx = overlay_ctx().with_preinit(RfAddr(0), 8);
+    assert!(verify(&prog, &ctx).is_clean());
+}
+
+#[test]
+fn defect_hazard_overlap_is_refuted() {
+    // dst shifted 4 wordlines into a live 8-wide source: a partial
+    // overlap clobbers planes the op still reads. Same-base in-place
+    // stays legal (the compiler's Add-into-partial idiom).
+    let load = Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) };
+    let bad = Instruction::Alu {
+        op: AluOp::Add,
+        dst: RfAddr(4),
+        x: RfAddr(0),
+        y: RfAddr(0),
+        width: 8,
+    };
+    let report = verify(&mc(&[load, bad]), &overlay_ctx());
+    assert!(report.has_errors(), "{}", report.render());
+    assert!(report.render().contains("partially overlaps"), "{}", report.render());
+    let ok = Instruction::Alu {
+        op: AluOp::Add,
+        dst: RfAddr(0),
+        x: RfAddr(0),
+        y: RfAddr(0),
+        width: 8,
+    };
+    assert!(verify(&mc(&[load, ok]), &overlay_ctx()).is_clean());
+}
+
+#[test]
+fn defect_width_unsoundness_is_refuted() {
+    // ACCUM at w=16 over 16 lanes of 16-significant-bit products needs
+    // 16 + log2(16) = 20 bits: an error once the reduction length is
+    // declared, a lint without it.
+    let prog = mc(&[
+        Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+        Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+        Instruction::Mult { dst: RfAddr(32), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+        Instruction::Accumulate { dst: RfAddr(32), width: 16 },
+    ]);
+    let lint = verify(&prog, &overlay_ctx());
+    assert!(!lint.has_errors(), "{}", lint.render());
+    assert!(!lint.is_clean(), "the overflow risk must at least lint");
+    let strict = verify(&prog, &overlay_ctx().with_summands(64));
+    assert!(strict.has_errors(), "{}", strict.render());
+    assert!(strict.render().contains("can overflow"), "{}", strict.render());
+    // EXT must strictly widen.
+    let ext = mc(&[
+        Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+        Instruction::Extend { dst: RfAddr(0), from: 8, to: 8 },
+    ]);
+    let report = verify(&ext, &overlay_ctx());
+    assert!(report.has_errors(), "{}", report.render());
+    assert!(report.render().contains("not widening"), "{}", report.render());
+}
+
+#[test]
+fn defect_missing_capability_is_refuted() {
+    // FOLD needs the overlay's OpMux datapath; plain custom tiles only
+    // reduce through ACCUM (§V).
+    let prog = mc(&[
+        Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+        Instruction::Fold {
+            pattern: FoldPattern::Halving,
+            level: 1,
+            dst: RfAddr(0),
+            width: 8,
+        },
+    ]);
+    assert!(!verify(&prog, &overlay_ctx()).has_errors());
+    let ccb = VerifyCtx::new(ArchKind::Custom(CustomDesign::Ccb), GEOM);
+    let report = verify(&prog, &ccb);
+    assert!(report.has_errors(), "{}", report.render());
+    assert!(report.render().contains("ACCUM only"), "{}", report.render());
+    // A fold level past the 16-lane block is refuted everywhere.
+    let deep = mc(&[
+        Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+        Instruction::Fold {
+            pattern: FoldPattern::Halving,
+            level: 5,
+            dst: RfAddr(0),
+            width: 8,
+        },
+    ]);
+    let report = verify(&deep, &overlay_ctx());
+    assert!(report.has_errors(), "{}", report.render());
+    // booth_skip on a design without a Booth datapath is a lint, not a
+    // refutation (Table VIII).
+    let mult = mc(&[
+        Instruction::Load { dst: RfAddr(0), width: 8, buf: BufId(0) },
+        Instruction::Load { dst: RfAddr(8), width: 8, buf: BufId(1) },
+        Instruction::Mult { dst: RfAddr(32), mand: RfAddr(0), mier: RfAddr(8), width: 8 },
+    ]);
+    let ctx = VerifyCtx::new(ArchKind::Custom(CustomDesign::Ccb), GEOM).with_booth_skip(true);
+    let report = verify(&mult, &ctx);
+    assert!(!report.has_errors(), "{}", report.render());
+    assert_eq!(report.warnings(), 1, "{}", report.render());
+}
+
+// ----------------------------------------------- compiler clean sweep
+
+#[test]
+fn every_compiler_emitted_program_verifies_clean() {
+    // The "no false positives" half of the contract: every program the
+    // compiler can emit must verify with zero findings on every design
+    // it can execute on, across shapes that exercise remainder tiles,
+    // multi-slice reductions, and the full width range.
+    let all_kinds = [
+        ArchKind::PICASO_F,
+        ArchKind::Spar2,
+        ArchKind::Custom(CustomDesign::Ccb),
+        ArchKind::Custom(CustomDesign::CoMeFaD),
+        ArchKind::Custom(CustomDesign::CoMeFaA),
+        ArchKind::Custom(CustomDesign::AMod),
+        ArchKind::Custom(CustomDesign::DMod),
+    ];
+    let geoms = [ArrayGeometry::new(2, 1), ArrayGeometry::new(2, 2), ArrayGeometry::new(8, 4)];
+    let shapes = [
+        GemmShape { m: 1, k: 1, n: 1 },
+        GemmShape { m: 2, k: 16, n: 2 },
+        GemmShape { m: 3, k: 70, n: 5 },
+        GemmShape { m: 4, k: 64, n: 8 },
+        GemmShape { m: 7, k: 100, n: 3 },
+    ];
+    for geom in geoms {
+        let compiler = PimCompiler::new(geom);
+        for shape in shapes {
+            for width in [1u16, 4, 8, 16] {
+                let plan = compiler.gemm(shape, width).unwrap();
+                let report =
+                    verify_on_pool(&plan.microcode, geom, &all_kinds, false, Some(shape.k));
+                assert!(
+                    report.is_clean(),
+                    "gemm {shape:?} w={width} {geom:?}:\n{}",
+                    report.render()
+                );
+            }
+        }
+    }
+    // The canned MAC workloads: mul+accumulate runs everywhere; the
+    // fold-based pooling workload is overlay-datapath-only by design.
+    for geom in geoms {
+        let q = geom.row_lanes();
+        let mac = MacProgram::elementwise_mul_then_accumulate(8, q);
+        let report = verify_on_pool(&mac, geom, &all_kinds, false, Some(q));
+        assert!(report.is_clean(), "mac on {geom:?}:\n{}", report.render());
+        let add = MacProgram::elementwise_add(8);
+        let report = verify_on_pool(&add, geom, &all_kinds, false, None);
+        assert!(report.is_clean(), "add on {geom:?}:\n{}", report.render());
+        let pool = MacProgram::max_pool(8, 2);
+        let overlayish = [ArchKind::PICASO_F, ArchKind::Spar2];
+        let report = verify_on_pool(&pool, geom, &overlayish, false, None);
+        assert!(report.is_clean(), "maxpool on {geom:?}:\n{}", report.render());
+    }
+}
+
+// ------------------------------------------------- the admission gate
+
+#[test]
+fn enforce_rejects_before_any_scheduler_slot_is_debited() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        verify: VerifyMode::Enforce,
+        ..Default::default()
+    })
+    .unwrap();
+    // The admission gate refutes a hand-built bad program outright...
+    let err = coord.verify_program(&refuted_program(), 4, None).unwrap_err();
+    assert!(matches!(err, Error::Verify(_)), "expected Error::Verify, got {err}");
+    assert!(err.to_string().contains("refuted"), "{err}");
+    // ...and the rejection never touched the scheduler: the queue-depth
+    // high-water mark is still zero, with the rejection on the books.
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.verify_rejects, 1, "rejection must land in the verify lane");
+    assert_eq!(snap.depth_hwm, 0, "a refuted program must never debit a queue slot");
+    // A clean compiled job passes the same gate and executes bit-exact.
+    let shape = GemmShape { m: 2, k: 8, n: 2 };
+    let mut rng = Xoshiro256::seeded(9);
+    let mut a = vec![0i64; shape.m * shape.k];
+    let mut b = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut a, 8);
+    rng.fill_signed(&mut b, 8);
+    let expect = gemm_ref(shape, &a, &b);
+    let h = coord
+        .submit_job(Job::new(1, JobKind::Gemm { shape, width: 8, a, b }))
+        .unwrap();
+    let r = h.wait();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.output, expect);
+    let snap = coord.metrics_snapshot();
+    assert!(snap.verify_passes >= 1, "the clean admission must count as a pass");
+    assert!(snap.depth_hwm >= 1, "the admitted job does reach the scheduler");
+}
+
+#[test]
+fn warn_mode_counts_findings_but_admits() {
+    // The default mode lints: the same refuted program passes through
+    // with its findings tallied in the metrics verify lane.
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        ..Default::default()
+    })
+    .unwrap();
+    coord.verify_program(&refuted_program(), 4, None).unwrap();
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.verify_warns, 1);
+    assert_eq!(snap.verify_rejects, 0);
+}
+
+#[test]
+fn off_mode_skips_verification_entirely() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        geom: ArrayGeometry::new(2, 1),
+        verify: VerifyMode::Off,
+        ..Default::default()
+    })
+    .unwrap();
+    coord.verify_program(&refuted_program(), 4, None).unwrap();
+    let snap = coord.metrics_snapshot();
+    assert_eq!(snap.verify_passes + snap.verify_warns + snap.verify_rejects, 0);
+}
+
+#[test]
+fn session_open_verifies_once_and_serves() {
+    // Sessions verify their program at open (counted once), then every
+    // session job skips the identical re-check.
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        verify: VerifyMode::Enforce,
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 8, n: 2 };
+    let mut rng = Xoshiro256::seeded(11);
+    let mut weights = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut weights, 8);
+    let session = coord.open_session(shape, 8, weights.clone()).unwrap();
+    assert_eq!(coord.metrics_snapshot().verify_passes, 1);
+    for id in 0..3u64 {
+        let mut a = vec![0i64; shape.m * shape.k];
+        rng.fill_signed(&mut a, 8);
+        let expect = gemm_ref(shape, &a, &weights);
+        let h = coord
+            .submit_job(Job::new(id, JobKind::SessionGemm { session, a }))
+            .unwrap();
+        let r = h.wait();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.output, expect);
+    }
+    // Still exactly one verification: the admission check is per
+    // program, not per request.
+    assert_eq!(coord.metrics_snapshot().verify_passes, 1);
+}
+
+#[test]
+fn pool_verification_tags_the_refuting_backend() {
+    // On a heterogeneous pool a finding names the design that refutes
+    // it, so a mixed deployment's diagnostics stay actionable.
+    let prog = mc(&[Instruction::Load { dst: RfAddr(250), width: 8, buf: BufId(0) }]);
+    let pool = [ArchKind::PICASO_F, ArchKind::Custom(CustomDesign::Ccb)];
+    let report = verify_on_pool(&prog, GEOM, &pool, false, None);
+    assert!(report.has_errors(), "{}", report.render());
+    assert!(report.render().contains("[CCB]"), "{}", report.render());
+    assert!(!report.render().contains("[PiCaSO"), "{}", report.render());
+}
+
+#[test]
+fn diagnostics_carry_index_and_rendered_asm() {
+    let prog = refuted_program();
+    let report = verify(&prog, &overlay_ctx());
+    let text = report.render();
+    assert!(text.contains("#0"), "{text}");
+    assert!(text.contains("STORE"), "{text}");
+    assert!(text.contains("r1020"), "{text}");
+}
+
+#[test]
+fn verify_outcomes_render_in_the_metrics_report() {
+    use picaso::verify::VerifyOutcome;
+    let m = ServingMetrics::new();
+    m.record_verify(None, VerifyOutcome::Pass);
+    m.record_verify(None, VerifyOutcome::Reject);
+    let text = m.snapshot().render();
+    assert!(text.contains("verify"), "{text}");
+    assert!(text.contains("rejects=1"), "{text}");
+}
