@@ -32,6 +32,13 @@ cargo test --test workload --test tuner -q
 step "tier-1: cargo test --test verify -q"
 cargo test --test verify -q
 
+# The concurrency stress suite, by name: seeded many-producer /
+# many-worker load over mixed backend-class pools on both queue layouts
+# — no lost wakeups, no class starvation, reservation atomicity, and
+# bit-exact outputs under sustained contention.
+step "tier-1: cargo test --test stress -q"
+cargo test --test stress -q
+
 if [ "${1:-}" = "fast" ]; then
     echo "fast mode: skipping doc/fmt/bench-compile gates"
     exit 0
@@ -122,6 +129,22 @@ step "bench gate: BENCH_conv.json (cycle-domain keys, ±${BENCH_TOL_PCT}%)"
 bench_gate "conv" BENCH_conv.json BENCH_conv.fresh.json \
     tuned_total_cycles fixed_total_cycles pipelined_makespan_cycles \
     || { echo "conv bench gate failed (rerun and commit BENCH_conv.json if intended)"; exit 1; }
+
+step "bench smoke: examples/bench_sched open-loop -> BENCH_sched.fresh.json"
+SCHED_BENCH_JSON=BENCH_sched.fresh.json \
+    cargo run --release --example bench_sched -- 600 4 4 >/dev/null
+test -s BENCH_sched.fresh.json || { echo "BENCH_sched.fresh.json missing or empty"; exit 1; }
+cat BENCH_sched.fresh.json
+
+# The scheduler bench is pure wall-clock (there is no cycle domain in
+# queue contention), so its keys gate at a wider tolerance than the
+# cycle-domain benches — enough to catch a lost-wakeup stall or a
+# contention regression, loose enough to ride out host noise.
+step "bench gate: BENCH_sched.json (wall-clock keys, ±${BENCH_SCHED_TOL_PCT:-50}%)"
+BENCH_TOL_PCT="${BENCH_SCHED_TOL_PCT:-50}" \
+    bench_gate "sched" BENCH_sched.json BENCH_sched.fresh.json \
+    jobs_per_sec queue_lock_wait_ns_p95 \
+    || { echo "sched bench gate failed (rerun and commit BENCH_sched.json if intended)"; exit 1; }
 
 step "compile benches + examples"
 cargo build --release --benches --examples

@@ -1,0 +1,212 @@
+//! Open-loop scheduler stress: raw queue throughput under producer ×
+//! worker contention, with the per-class sharded lanes measured against
+//! the single-lock baseline in the same process.
+//!
+//! Unlike `examples/serve.rs` (closed loop: each client waits for its
+//! result before submitting the next), producers here submit their whole
+//! quota as fast as admission allows and only then wait on the handles —
+//! the queue runs saturated, so lock contention, pop scan cost and
+//! wakeup routing dominate instead of array execute time. Micro-batching
+//! is disabled for the same reason: one pop per job maximizes scheduler
+//! pressure.
+//!
+//! The pool is heterogeneous (overlay + CoMeFa-A regions via
+//! [`RegionSpec::mixed_pool`]) and jobs alternate class tags
+//! (overlay-pinned / custom-pinned / untagged), so the per-class lanes
+//! actually partition the load. Both [`QueueSharding`] modes run over
+//! the identical workload:
+//!
+//! 1. **single** — one shared sub-queue, the pre-sharding layout;
+//! 2. **per-class** — one lane per backend class plus the shared lane.
+//!
+//! Every output is checked against `gemm_ref`, so the speedup is at
+//! equal correctness. The perf lane of the metrics snapshot supplies the
+//! trajectory numbers: queue-lock wait p95, tickets scanned per pop,
+//! scratch-pool hit rate, and fresh bytes allocated per job.
+//!
+//! ```bash
+//! cargo run --release --example bench_sched -- [jobs] [producers] [workers]
+//! ```
+//!
+//! Set `SCHED_BENCH_JSON=<path>` to write the headline numbers
+//! (`jobs_per_sec`, `queue_lock_wait_ns_p95`, both modes + speedup) as a
+//! JSON object — the scheduler leg of the per-PR perf trajectory tracked
+//! by `ci.sh`'s bench-smoke step.
+
+use picaso::arch::CustomDesign;
+use picaso::compiler::{gemm_ref, GemmShape};
+use picaso::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Job, JobKind, QueueSharding, RegionSpec,
+    SchedulerConfig,
+};
+use picaso::metrics::MetricsSnapshot;
+use picaso::prelude::*;
+use picaso::util::Xoshiro256;
+use std::sync::Arc;
+
+/// One open-loop phase: `producers` threads each submit their share of
+/// `jobs` back-to-back (blocking only on queue admission), then wait on
+/// every handle and verify against the reference. Returns the metrics
+/// snapshot and the miscompare/failure count.
+fn run_open_loop(
+    sharding: QueueSharding,
+    jobs: usize,
+    producers: usize,
+    workers: usize,
+) -> picaso::Result<(MetricsSnapshot, usize)> {
+    let geom = ArrayGeometry::new(4, 1);
+    let shape = GemmShape { m: 2, k: 16, n: 2 };
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        workers,
+        geom,
+        kind: ArchKind::PICASO_F,
+        regions: RegionSpec::mixed_pool(workers),
+        // One pop per job: scheduler pressure, not batching, is under test.
+        batch: BatchPolicy::disabled(),
+        scheduler: SchedulerConfig {
+            backpressure: Backpressure::Block,
+            sharding,
+            ..Default::default()
+        },
+        ..Default::default()
+    })?);
+    let mut weights = vec![0i64; shape.k * shape.n];
+    Xoshiro256::seeded(0xBEEF).fill_signed(&mut weights, 8);
+    let sid = coord.open_session(shape, 8, weights.clone())?;
+    let weights = Arc::new(weights);
+    coord.serving_metrics().reset_window();
+
+    // The class rotation: untagged (any region), overlay-pinned,
+    // custom-pinned — all three lanes of the sharded queue see load.
+    let tags = [
+        None,
+        Some(BackendClass::Overlay),
+        Some(BackendClass::Custom(CustomDesign::CoMeFaA)),
+    ];
+    let mut threads = Vec::new();
+    for p in 0..producers {
+        let quota = jobs / producers + usize::from(p < jobs % producers);
+        let coord = Arc::clone(&coord);
+        let weights = Arc::clone(&weights);
+        threads.push(std::thread::spawn(move || -> picaso::Result<usize> {
+            let mut rng = Xoshiro256::seeded(0x0BE7 + p as u64);
+            // Open loop: admit everything first, wait afterwards.
+            let mut inflight = Vec::with_capacity(quota);
+            for j in 0..quota {
+                let id = (p * 1_000_000 + j) as u64;
+                let mut a = vec![0i64; shape.m * shape.k];
+                rng.fill_signed(&mut a, 8);
+                let expect = gemm_ref(shape, &a, &weights);
+                // Alternate ad-hoc and session-backed jobs so both the
+                // plain-GEMM and pinned-weight serving paths run hot.
+                let kind = if j % 2 == 0 {
+                    JobKind::Gemm { shape, width: 8, a, b: weights.as_ref().clone() }
+                } else {
+                    JobKind::SessionGemm { session: sid, a: a.into() }
+                };
+                let mut job = Job::new(id, kind);
+                job.backend = tags[j % tags.len()];
+                inflight.push((coord.submit_job(job)?, expect));
+            }
+            let mut bad = 0;
+            for (handle, expect) in inflight {
+                let r = handle.wait();
+                if r.error.is_some() || r.output != expect {
+                    bad += 1;
+                }
+            }
+            Ok(bad)
+        }));
+    }
+    let mut bad = 0;
+    for t in threads {
+        bad += t.join().expect("producer panicked")?;
+    }
+    let snap = coord.metrics_snapshot();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+    Ok((snap, bad))
+}
+
+fn perf_line(name: &str, snap: &MetricsSnapshot) {
+    println!(
+        "  {:<10} {:>10.1} jobs/s  lock_waits={:<6} lock_wait_p95={:>7.0}ns \
+         scanned/pop={:<5.2} pool_hit={:>3.0}% alloc/job={:.0}B",
+        name,
+        snap.jobs_per_sec(),
+        snap.lock_waits,
+        snap.lock_wait_ns.p95,
+        snap.scanned_per_pop(),
+        snap.pool_hit_rate() * 100.0,
+        snap.bytes_per_job(),
+    );
+}
+
+fn main() -> picaso::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arg = |i: usize, default: usize| -> usize {
+        args.get(i).and_then(|s| s.parse().ok()).unwrap_or(default)
+    };
+    let jobs = arg(0, 600);
+    let producers = arg(1, 4).max(1);
+    let workers = arg(2, 4).max(2);
+    println!(
+        "open-loop scheduler stress: {jobs} jobs, {producers} producers, {workers} workers \
+         (mixed overlay + CoMeFa-A pool, micro-batching off)\n"
+    );
+
+    // Same workload, both queue layouts. Single first so the per-class
+    // numbers land on a warmed process (allocator, page cache) — the
+    // conservative ordering for the speedup claim.
+    let (single, bad_single) = run_open_loop(QueueSharding::Single, jobs, producers, workers)?;
+    let (sharded, bad_sharded) = run_open_loop(QueueSharding::PerClass, jobs, producers, workers)?;
+    assert_eq!(bad_single, 0, "single-lane outputs must match gemm_ref");
+    assert_eq!(bad_sharded, 0, "per-class outputs must match gemm_ref");
+    assert_eq!(single.jobs as usize, jobs, "single lane served every job");
+    assert_eq!(sharded.jobs as usize, jobs, "per-class lanes served every job");
+
+    println!("--- queue layout comparison ({jobs} jobs, bit-exact in both) ---");
+    perf_line("single", &single);
+    perf_line("per-class", &sharded);
+    let speedup = if single.jobs_per_sec() > 0.0 {
+        sharded.jobs_per_sec() / single.jobs_per_sec()
+    } else {
+        0.0
+    };
+    println!(
+        "\nper-class lanes vs single lock: {speedup:.2}x jobs/s \
+         (lock_wait_p95 {:.0}ns -> {:.0}ns)",
+        single.lock_wait_ns.p95, sharded.lock_wait_ns.p95,
+    );
+
+    if let Ok(path) = std::env::var("SCHED_BENCH_JSON") {
+        if !path.is_empty() {
+            let json = format!(
+                "{{\n  \"jobs\": {},\n  \"producers\": {},\n  \"workers\": {},\n  \
+                 \"jobs_per_sec\": {:.3},\n  \"queue_lock_wait_ns_p95\": {:.3},\n  \
+                 \"scanned_per_pop\": {:.3},\n  \"pool_hit_rate\": {:.4},\n  \
+                 \"alloc_bytes_per_job\": {:.1},\n  \
+                 \"jobs_per_sec_single\": {:.3},\n  \
+                 \"queue_lock_wait_ns_p95_single\": {:.3},\n  \
+                 \"sharding_speedup\": {:.3}\n}}\n",
+                jobs,
+                producers,
+                workers,
+                sharded.jobs_per_sec(),
+                sharded.lock_wait_ns.p95,
+                sharded.scanned_per_pop(),
+                sharded.pool_hit_rate(),
+                sharded.bytes_per_job(),
+                single.jobs_per_sec(),
+                single.lock_wait_ns.p95,
+                speedup,
+            );
+            std::fs::write(&path, json)?;
+            println!("\nwrote bench snapshot to {path}");
+        }
+    }
+
+    println!("\nbench_sched OK");
+    Ok(())
+}

@@ -80,7 +80,7 @@ fn run_phase(
                 // region kind serves an equal share of the load.
                 let tag = tags[j % tags.len()];
                 let kind = match session {
-                    Some(sid) => JobKind::SessionGemm { session: sid, a },
+                    Some(sid) => JobKind::SessionGemm { session: sid, a: a.into() },
                     None => JobKind::Gemm {
                         shape,
                         width: 8,
@@ -353,7 +353,7 @@ fn main() -> picaso::Result<()> {
         let kind = if i % 2 == 0 {
             JobKind::Gemm { shape: chaos_shape, width: 8, a, b: cw.clone() }
         } else {
-            JobKind::SessionGemm { session: chaos_sid, a }
+            JobKind::SessionGemm { session: chaos_sid, a: a.into() }
         };
         let r = chaos
             .submit_job(Job::new(i as u64, kind).with_shards(ShardPolicy::Auto))?
@@ -366,7 +366,7 @@ fn main() -> picaso::Result<()> {
     // pop time with a shed result, not executed.
     let shed_r = chaos
         .submit_job(
-            Job::new(999, JobKind::SessionGemm { session: chaos_sid, a: vec![0; chaos_shape.m * chaos_shape.k] })
+            Job::new(999, JobKind::SessionGemm { session: chaos_sid, a: vec![0; chaos_shape.m * chaos_shape.k].into() })
                 .with_deadline_us(0.0),
         )?
         .wait();

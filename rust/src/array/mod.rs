@@ -197,6 +197,12 @@ impl PimArray {
         self.host.get(&buf.0).map(|v| v.as_slice())
     }
 
+    /// Unbind a host buffer and take its storage back (staging-buffer
+    /// reuse; see [`PimBackend::take_buffer`]).
+    pub fn take_buffer(&mut self, buf: BufId) -> Option<Vec<i64>> {
+        self.host.remove(&buf.0)
+    }
+
     /// Per-lane values of an operand in row `row`.
     pub fn row_values(&self, row: usize, base: RfAddr, w: u32) -> Vec<i64> {
         let q = self.geom.row_lanes();
@@ -383,6 +389,10 @@ impl crate::backend::PimBackend for PimArray {
 
     fn buffer(&self, buf: BufId) -> Option<&[i64]> {
         PimArray::buffer(self, buf)
+    }
+
+    fn take_buffer(&mut self, buf: BufId) -> Option<Vec<i64>> {
+        PimArray::take_buffer(self, buf)
     }
 
     fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {

@@ -101,6 +101,16 @@ pub trait PimBackend {
     /// Read a host buffer back (after `STORE`).
     fn buffer(&self, buf: BufId) -> Option<&[i64]>;
 
+    /// Unbind a host buffer and take its storage back — the reclaim half
+    /// of the executor's staging-buffer reuse (a round's input buffers
+    /// return to the [`ScratchPool`](crate::compiler::ScratchPool) after
+    /// `execute` instead of being dropped on the next `set_buffer`).
+    /// Backends that cannot release storage may keep the default (`None`
+    /// — the pool then allocates fresh, which is correct, just slower).
+    fn take_buffer(&mut self, _buf: BufId) -> Option<Vec<i64>> {
+        None
+    }
+
     /// Execute a microcode program, returning the cycle statistics
     /// charged from this backend's [`CycleModel`](crate::arch::CycleModel).
     fn execute(&mut self, mc: &Microcode) -> Result<RunStats>;
@@ -177,6 +187,10 @@ impl PimBackend for FaultInjector {
 
     fn buffer(&self, buf: BufId) -> Option<&[i64]> {
         self.inner.buffer(buf)
+    }
+
+    fn take_buffer(&mut self, buf: BufId) -> Option<Vec<i64>> {
+        self.inner.take_buffer(buf)
     }
 
     fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {

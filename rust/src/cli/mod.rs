@@ -135,9 +135,10 @@ system:
          [--backoff-us=50]               retry backoff base (exponential,
                                          deterministic jitter; 0 disables)
          [--verify=off|warn|enforce]     static microcode verification at
-                                         admission: warn (default) lints,
-                                         enforce rejects refuted programs
-                                         before they reach the scheduler
+                                         admission: enforce (default)
+                                         rejects refuted programs before
+                                         they reach the scheduler, warn
+                                         only lints
          [--device=U55]                  device for per-backend cycles→ns
   infer  --model=mlp:32x16x10            multi-layer MLP through the
                                          model-graph executor, pipelined
@@ -470,7 +471,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
                 // the closed loop still completes its quota.
                 let handle = loop {
                     let kind = match session {
-                        Some(sid) => JobKind::SessionGemm { session: sid, a: a.clone() },
+                        Some(sid) => JobKind::SessionGemm { session: sid, a: a.clone().into() },
                         None => JobKind::Gemm {
                             shape,
                             width: 8,

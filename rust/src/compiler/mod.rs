@@ -210,6 +210,72 @@ impl PimCompiler {
     }
 }
 
+/// Per-worker scratch-buffer pool for the packed-round executors: the
+/// staging vectors a round binds to the backend (`rows × q` lanes per
+/// operand slice) are reclaimed after `execute`
+/// ([`PimBackend::take_buffer`]) and reused by the next round — and, when
+/// a worker keeps one pool across batches, by every later batch that
+/// worker serves. On a steady-state worker the packed-round path
+/// allocates only on its first batch (and when a geometry change needs a
+/// larger buffer); everything after is a `fill(0)` + refill of warm
+/// memory. The hit/miss/bytes counters feed the serving perf lane
+/// ([`ServingMetrics::record_pool`](crate::metrics::ServingMetrics::record_pool)).
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    free: Vec<Vec<i64>>,
+    hits: u64,
+    misses: u64,
+    bytes_alloc: u64,
+}
+
+/// Pooled buffers retained per [`ScratchPool`]; beyond this the pool
+/// drops returns instead of growing without bound (a worker needs
+/// `2 × slices` staging buffers in flight, comfortably below this).
+const SCRATCH_POOL_CAP: usize = 64;
+
+impl ScratchPool {
+    /// An empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed buffer of exactly `len` values: reused from the pool
+    /// when a buffer with enough capacity is free (a **hit** — no heap
+    /// traffic), freshly allocated otherwise (a **miss**, counted with
+    /// its byte cost).
+    pub fn take(&mut self, len: usize) -> Vec<i64> {
+        if let Some(pos) = self.free.iter().position(|v| v.capacity() >= len) {
+            let mut v = self.free.swap_remove(pos);
+            v.clear();
+            v.resize(len, 0);
+            self.hits += 1;
+            v
+        } else {
+            self.misses += 1;
+            self.bytes_alloc += (len * std::mem::size_of::<i64>()) as u64;
+            vec![0i64; len]
+        }
+    }
+
+    /// Return a buffer for later reuse (dropped when the pool is full).
+    pub fn put(&mut self, v: Vec<i64>) {
+        if v.capacity() > 0 && self.free.len() < SCRATCH_POOL_CAP {
+            self.free.push(v);
+        }
+    }
+
+    /// Drain the accumulated `(hits, misses, bytes_allocated)` counters,
+    /// resetting them to zero — called once per batch by the worker to
+    /// roll pool activity into the serving metrics.
+    pub fn take_stats(&mut self) -> (u64, u64, u64) {
+        let stats = (self.hits, self.misses, self.bytes_alloc);
+        self.hits = 0;
+        self.misses = 0;
+        self.bytes_alloc = 0;
+        stats
+    }
+}
+
 /// Execute a compiled GEMM on any [`PimBackend`]: stages operand slices
 /// round by round, runs the microcode, and collects `C` (row-major
 /// `m×n`). The same plan drives the overlay [`PimArray`](crate::array::PimArray)
@@ -247,6 +313,20 @@ pub fn execute_gemm_batch<B: PimBackend + ?Sized>(
     plan: &GemmPlan,
     items: &[(&[i64], &[i64])],
 ) -> Result<(Vec<Vec<i64>>, RunStats)> {
+    let mut pool = ScratchPool::new();
+    execute_gemm_batch_pooled(backend, plan, items, &mut pool)
+}
+
+/// [`execute_gemm_batch`] with a caller-owned [`ScratchPool`]: staging
+/// buffers are drawn from (and reclaimed into) `pool`, so a worker that
+/// keeps one pool across batches stops allocating staging storage after
+/// warm-up. The plain entry point is this with a throwaway pool.
+pub fn execute_gemm_batch_pooled<B: PimBackend + ?Sized>(
+    backend: &mut B,
+    plan: &GemmPlan,
+    items: &[(&[i64], &[i64])],
+    pool: &mut ScratchPool,
+) -> Result<(Vec<Vec<i64>>, RunStats)> {
     let GemmShape { m, k, n } = plan.shape;
     for (idx, (a, b)) in items.iter().enumerate() {
         if a.len() != m * k || b.len() != k * n {
@@ -282,6 +362,7 @@ pub fn execute_gemm_batch<B: PimBackend + ?Sized>(
                 }
             }
         },
+        pool,
     )
 }
 
@@ -295,12 +376,18 @@ pub fn execute_gemm_batch<B: PimBackend + ?Sized>(
 /// `q` lanes (pre-zeroed; leave tail lanes past `k` untouched). Keeping
 /// one engine guarantees the plain and session paths can never diverge
 /// in packing, buffer layout, or cycle accounting.
+///
+/// Staging storage comes from `pool` and is reclaimed from the backend
+/// after each round's `execute` ([`PimBackend::take_buffer`]), so across
+/// rounds — and across batches when the caller keeps the pool — the
+/// same allocations are recycled instead of churned.
 pub(crate) fn run_packed_rounds<B, FA, FB>(
     backend: &mut B,
     plan: &GemmPlan,
     jobs: usize,
     mut fill_a: FA,
     mut fill_b: FB,
+    pool: &mut ScratchPool,
 ) -> Result<(Vec<Vec<i64>>, RunStats)>
 where
     B: PimBackend + ?Sized,
@@ -324,8 +411,8 @@ where
         // Stage the operand slices for every live row. Row `r` computes
         // global output `first_out + r`, i.e. element `local` of job `t`.
         for s in 0..plan.slices {
-            let mut a_stage = vec![0i64; rows * q];
-            let mut b_stage = vec![0i64; rows * q];
+            let mut a_stage = pool.take(rows * q);
+            let mut b_stage = pool.take(rows * q);
             for r in 0..live {
                 let g = first_out + r;
                 let (t, local) = (g / per_job, g % per_job);
@@ -340,6 +427,16 @@ where
         for r in 0..live {
             let g = first_out + r;
             c[g / per_job][g % per_job] = backend.row_result(r, WL_PARTIAL, plan.acc_width as u32);
+        }
+        // Reclaim the staging storage the backend no longer needs: the
+        // round's results are harvested above, so the buffers can go
+        // straight back into the pool for the next round / batch.
+        for s in 0..plan.slices {
+            for half in 0..2u16 {
+                if let Some(v) = backend.take_buffer(BufId(BUF_A.0 + 2 * s as u16 + half)) {
+                    pool.put(v);
+                }
+            }
         }
     }
     Ok((c, total))
@@ -430,12 +527,25 @@ pub fn merge_shard_outputs(shape: GemmShape, parts: &[(usize, usize, Vec<i64>)])
     let GemmShape { m, n, .. } = shape;
     let mut c = vec![0i64; m * n];
     for (col0, cols, out) in parts {
-        debug_assert_eq!(out.len(), m * cols, "shard output size");
-        for i in 0..m {
-            c[i * n + col0..i * n + col0 + cols].copy_from_slice(&out[i * cols..(i + 1) * cols]);
-        }
+        copy_shard_into(&mut c, shape, *col0, *cols, out);
     }
     c
+}
+
+/// In-place variant of [`merge_shard_outputs`] for one shard: copy a
+/// row-major `m×cols` shard output into columns `[col0, col0 + cols)` of
+/// the preallocated parent `m×n` buffer `c`. One `copy_from_slice` per
+/// row, no intermediate allocation — the zero-copy gather primitive the
+/// coordinator's merge uses so a scatter of `S` shards costs exactly one
+/// parent allocation instead of `S + 1`.
+pub fn copy_shard_into(c: &mut [i64], shape: GemmShape, col0: usize, cols: usize, out: &[i64]) {
+    let GemmShape { m, n, .. } = shape;
+    debug_assert_eq!(c.len(), m * n, "parent buffer covers the full output");
+    debug_assert!(col0 + cols <= n, "column slice out of range");
+    debug_assert_eq!(out.len(), m * cols, "shard output size");
+    for i in 0..m {
+        c[i * n + col0..i * n + col0 + cols].copy_from_slice(&out[i * cols..(i + 1) * cols]);
+    }
 }
 
 /// Reference GEMM used by tests and the golden cross-check.
@@ -650,6 +760,59 @@ pub fn add_reduce_partials(parts: &[Vec<i64>], acc_bits: u32) -> Result<Vec<i64>
     Ok(sum)
 }
 
+/// In-place fusion of [`add_reduce_partials`] and the column placement
+/// of [`merge_shard_outputs`]: element-wise sum the same-`ni` partial
+/// outputs (each row-major `m×cols`) **directly into** columns
+/// `[col0, col0 + cols)` of the preallocated parent `m×n` buffer `c`,
+/// with the identical exact-`i64` + logical-accumulator-range overflow
+/// checks. The zero-copy gather path for a k-split grid: no reduced
+/// intermediate `Vec` exists between the partials and the parent
+/// output. On error the affected parent columns are left in an
+/// unspecified partially-summed state — callers discard the buffer.
+pub fn add_reduce_into(
+    c: &mut [i64],
+    shape: GemmShape,
+    col0: usize,
+    cols: usize,
+    parts: &[&[i64]],
+    acc_bits: u32,
+) -> Result<()> {
+    let GemmShape { m, n, .. } = shape;
+    debug_assert_eq!(c.len(), m * n, "parent buffer covers the full output");
+    debug_assert!(col0 + cols <= n, "column slice out of range");
+    if parts.is_empty() {
+        return Err(Error::Compile("add-reduce of zero partial outputs".into()));
+    }
+    for (ki, part) in parts.iter().enumerate() {
+        if part.len() != m * cols {
+            return Err(Error::Compile(format!(
+                "partial output {ki} has {} elements, expected {}",
+                part.len(),
+                m * cols
+            )));
+        }
+    }
+    let (lo, hi) = acc_range(acc_bits);
+    for i in 0..m {
+        let dst = &mut c[i * n + col0..i * n + col0 + cols];
+        dst.copy_from_slice(&parts[0][i * cols..(i + 1) * cols]);
+        for part in &parts[1..] {
+            for (acc, v) in dst.iter_mut().zip(&part[i * cols..(i + 1) * cols]) {
+                *acc = acc.checked_add(*v).ok_or_else(|| {
+                    Error::Compile("partial-sum overflow: i64 wraparound in add-reduce".into())
+                })?;
+            }
+        }
+        if let Some(v) = dst.iter().find(|v| **v < lo || **v > hi) {
+            return Err(Error::Compile(format!(
+                "partial-sum overflow: reduced value {v} outside the {acc_bits}-bit accumulator \
+                 range [{lo}, {hi}] — operands exceed the declared width"
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Checked scalar reference GEMM: like [`gemm_ref`], but every dot
 /// product accumulates with overflow checks and the result is validated
 /// against the logical accumulator range for `(width, k)` — the exact
@@ -710,6 +873,56 @@ mod tests {
         rng.fill_signed(&mut a, width);
         rng.fill_signed(&mut b, width);
         (a, b)
+    }
+
+    #[test]
+    fn scratch_pool_reuses_and_counts() {
+        let mut pool = ScratchPool::new();
+        let v = pool.take(16);
+        assert_eq!(v, vec![0i64; 16]);
+        pool.put(v);
+        // Smaller request reuses the bigger buffer (capacity match).
+        let mut w = pool.take(8);
+        assert_eq!(w, vec![0i64; 8]);
+        w[0] = 99;
+        pool.put(w);
+        // Dirty returns come back zeroed.
+        let z = pool.take(8);
+        assert_eq!(z, vec![0i64; 8]);
+        // Larger than anything pooled: a fresh allocation.
+        let big = pool.take(32);
+        assert_eq!(big.len(), 32);
+        let (hits, misses, bytes) = pool.take_stats();
+        assert_eq!((hits, misses), (2, 2));
+        assert_eq!(bytes, (16 + 32) * std::mem::size_of::<i64>() as u64);
+        // Stats drain on read.
+        assert_eq!(pool.take_stats(), (0, 0, 0));
+    }
+
+    #[test]
+    fn pooled_batches_stop_allocating_after_warmup() {
+        let geom = ArrayGeometry::new(4, 1); // multi-round, multi-slice
+        let shape = GemmShape { m: 3, k: 20, n: 3 };
+        let plan = PimCompiler::new(geom).gemm(shape, 8).unwrap();
+        let mut arr = PimArray::new(geom, PipelineConfig::FullPipe);
+        let mut pool = ScratchPool::new();
+        for batch in 0..3 {
+            let (a, b) = random_gemm(shape, 8, 0xB00 + batch);
+            let (outs, _) =
+                execute_gemm_batch_pooled(&mut arr, &plan, &[(&a[..], &b[..])], &mut pool)
+                    .unwrap();
+            assert_eq!(outs[0], gemm_ref(shape, &a, &b));
+            let (hits, misses, _) = pool.take_stats();
+            if batch == 0 {
+                // First batch warms the pool: the first round's slices
+                // miss, later rounds reuse the reclaimed buffers.
+                assert!(misses > 0);
+            } else {
+                // Steady state: every staging buffer is a pool hit.
+                assert_eq!(misses, 0, "batch {batch} allocated {misses} buffers");
+                assert!(hits > 0);
+            }
+        }
     }
 
     #[test]
@@ -1132,6 +1345,57 @@ mod tests {
         // Boundary values inside the range pass.
         let (lo, hi) = acc_range(bits);
         assert_eq!(add_reduce_partials(&[vec![lo, hi]], bits).unwrap(), vec![lo, hi]);
+    }
+
+    #[test]
+    fn in_place_gather_matches_allocating_path() {
+        // copy_shard_into / add_reduce_into against a preallocated
+        // parent buffer reproduce the allocating helpers bit for bit.
+        let shape = GemmShape { m: 3, k: 50, n: 7 };
+        let (a, b) = random_gemm(shape, 8, 0xFACE);
+        let expect = gemm_ref(shape, &a, &b);
+        let bits = acc_bits(8, shape.k);
+        for (kt, nt) in [(1, 1), (1, 3), (2, 3), (5, 7)] {
+            let krs = split_axis(shape.k, kt);
+            let nrs = split_axis(shape.n, nt);
+            let mut c = vec![0i64; shape.m * shape.n];
+            for &(col0, nn) in &nrs {
+                let partials: Vec<Vec<i64>> = krs
+                    .iter()
+                    .map(|&(k0, kk)| {
+                        let sa = slice_a_cols(shape, &a, k0, kk);
+                        let sb = slice_b_block(shape, &b, k0, kk, col0, nn);
+                        gemm_ref(GemmShape { m: shape.m, k: kk, n: nn }, &sa, &sb)
+                    })
+                    .collect();
+                if krs.len() >= 2 {
+                    let refs: Vec<&[i64]> = partials.iter().map(|p| p.as_slice()).collect();
+                    add_reduce_into(&mut c, shape, col0, nn, &refs, bits).unwrap();
+                } else {
+                    copy_shard_into(&mut c, shape, col0, nn, &partials[0]);
+                }
+            }
+            assert_eq!(c, expect, "grid {kt}x{nt}");
+        }
+    }
+
+    #[test]
+    fn in_place_add_reduce_checks_overflow_and_geometry() {
+        let shape = GemmShape { m: 1, k: 4, n: 2 };
+        let bits = acc_bits(8, 4); // 18 bits => range ±2^17
+        let mut c = vec![0i64; 2];
+        add_reduce_into(&mut c, shape, 0, 2, &[&[5, -7], &[-2, 3]], bits).unwrap();
+        assert_eq!(c, vec![3, -4]);
+        // Out-of-range reduced value and i64 wraparound both report
+        // "overflow"; mismatched geometry and the empty reduce error.
+        let too_big = [1i64 << 20, 0];
+        let err = add_reduce_into(&mut c, shape, 0, 2, &[&too_big, &too_big], bits).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        let err =
+            add_reduce_into(&mut c, shape, 0, 2, &[&[i64::MAX, 0], &[1, 0]], 64).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        assert!(add_reduce_into(&mut c, shape, 0, 2, &[&[1, 2], &[3]], bits).is_err());
+        assert!(add_reduce_into(&mut c, shape, 0, 2, &[], bits).is_err());
     }
 
     #[test]

@@ -251,8 +251,10 @@ impl Batcher {
             }
             // Nothing compatible queued: sleep until a *new* submission
             // lands (the arrival clock moves), the budget expires, or the
-            // scheduler closes.
-            let (now_seen, ended) = sched.wait_new_arrival(seen, deadline);
+            // scheduler closes. Parked on this worker's class lane, so
+            // foreign-class arrivals don't wake a filling batch that
+            // could never take them.
+            let (now_seen, ended) = sched.wait_new_arrival_for(seen, deadline, class);
             seen = now_seen;
             if ended {
                 break;
@@ -357,7 +359,7 @@ mod tests {
     fn session_shard_partitions_do_not_coalesce_across_slots() {
         let s = sched();
         let session = SessionId(9);
-        let sjob = |id: u64| Job::new(id, JobKind::SessionGemm { session, a: vec![0; 2] });
+        let sjob = |id: u64| Job::new(id, JobKind::SessionGemm { session, a: vec![0; 2].into() });
         // Shard (0 of 2) of parents 1 and 2, shard (1 of 2) of parent 1:
         // the two slot-0 shards coalesce (different parents, same column
         // range); the slot-1 shard runs its own sub-plan.
@@ -387,7 +389,7 @@ mod tests {
         // and thus the output shape — is identical.
         let s = sched();
         let session = SessionId(9);
-        let sjob = |id: u64| Job::new(id, JobKind::SessionGemm { session, a: vec![0; 4] });
+        let sjob = |id: u64| Job::new(id, JobKind::SessionGemm { session, a: vec![0; 4].into() });
         let slot = |ki: usize| TileSlot { ki, ni: 0, k_tiles: 2, n_tiles: 1 };
         s.submit_shard_with_priority(sjob(1), 0, Some(TileInfo { parent: 1, slot: slot(0) }))
             .unwrap();

@@ -81,8 +81,8 @@ pub mod session;
 pub use batcher::{BatchKey, BatchPolicy, Batcher};
 pub use scheduler::{
     BackoffPolicy, Backpressure, Completion, JobHandle, QuarantinePolicy, QueuePolicy,
-    Reservation, RetryPolicy, Scheduler, SchedulerConfig, Ticket, TicketState, TileInfo,
-    TileSlot,
+    QueueSharding, Reservation, RetryPolicy, Scheduler, SchedulerConfig, Ticket, TicketState,
+    TileInfo, TileSlot,
 };
 pub use session::{ModelSession, SessionId, SessionSpec};
 
@@ -90,8 +90,8 @@ use crate::arch::{ArchKind, PipelineConfig};
 use crate::array::{ArrayGeometry, RunStats};
 use crate::backend::{make_backend, BackendClass, PimBackend};
 use crate::compiler::{
-    execute_gemm, execute_gemm_batch, slice_a_cols, slice_b_block, split_shape_kn, GemmPlan,
-    GemmShape, PimCompiler,
+    execute_gemm, execute_gemm_batch_pooled, slice_a_cols, slice_b_block, split_shape_kn,
+    GemmPlan, GemmShape, PimCompiler, ScratchPool,
 };
 use crate::metrics::{Metrics, MetricsSnapshot, ServingMetrics};
 use crate::verify::{verify_on_pool, VerifyMode, VerifyOutcome};
@@ -188,9 +188,9 @@ pub struct CoordinatorConfig {
     /// ([`crate::verify`]): ad-hoc GEMM jobs are verified at
     /// [`Coordinator::submit_job`] and session programs at
     /// [`Coordinator::open_session`], against every region kind the
-    /// work may be placed on. Under [`VerifyMode::Enforce`], refuted
-    /// programs are rejected with [`Error::Verify`] **before** any
-    /// scheduler slot is debited; [`VerifyMode::Warn`] (the default)
+    /// work may be placed on. Under [`VerifyMode::Enforce`] (the
+    /// default), refuted programs are rejected with [`Error::Verify`]
+    /// **before** any scheduler slot is debited; [`VerifyMode::Warn`]
     /// only counts findings in the metrics verify lane.
     pub verify: VerifyMode,
 }
@@ -389,8 +389,11 @@ pub enum JobKind {
     SessionGemm {
         /// The session to run against.
         session: SessionId,
-        /// Activations, row-major `m×k`.
-        a: Vec<i64>,
+        /// Activations, row-major `m×k`. Shared, not owned: a tiled
+        /// scatter fans one submission out into many tickets that all
+        /// carry the same activation payload — an `Arc` slice makes
+        /// that fan-out a refcount bump instead of `tiles × m·k` copies.
+        a: Arc<[i64]>,
     },
 }
 
@@ -803,7 +806,9 @@ impl Coordinator {
                     b: slice_b_block(*shape, b, k0, sshape.k, col0, sshape.n),
                 },
                 JobKind::SessionGemm { session, a } => {
-                    JobKind::SessionGemm { session: *session, a: a.clone() }
+                    // Refcount bump, not a data copy: every tile shares
+                    // the parent's activation buffer.
+                    JobKind::SessionGemm { session: *session, a: Arc::clone(a) }
                 }
             };
             let sub = Job {
@@ -888,13 +893,17 @@ impl Coordinator {
     }
 
     /// Convenience: submit one inference against an open session.
+    /// Accepts anything convertible into the shared activation slice
+    /// (`Vec<i64>`, `Arc<[i64]>`, `&[i64]`), so callers that fan the
+    /// same activations across several submissions can share one
+    /// allocation.
     pub fn submit_session(
         &self,
         job_id: u64,
         session: SessionId,
-        a: Vec<i64>,
+        a: impl Into<Arc<[i64]>>,
     ) -> Result<JobHandle> {
-        self.submit_job(Job::new(job_id, JobKind::SessionGemm { session, a }))
+        self.submit_job(Job::new(job_id, JobKind::SessionGemm { session, a: a.into() }))
     }
 
     /// Enqueue a job (legacy path). Prefer [`submit_job`](Self::submit_job),
@@ -1101,6 +1110,10 @@ fn worker_loop(
     // column-range) sliced sub-tables — swept against the registry
     // whenever a close happens.
     let mut sessions: HashMap<(SessionId, Option<TileSlot>), ModelSession> = HashMap::new();
+    // Per-worker staging-buffer pool: after the first batch warms it,
+    // packed-round staging reuses these allocations batch after batch
+    // (drained into the `pool_hit`/`alloc/job` perf counters below).
+    let mut scratch = ScratchPool::new();
     let mut seen_epoch = 0u64;
     while let Some(batch) = batcher.collect_for(&sched, Some(widx), Some(class)) {
         let epoch = registry.closed_epoch.load(Ordering::Acquire);
@@ -1112,9 +1125,15 @@ fn worker_loop(
         let queue_waits: Vec<f64> = batch.iter().map(Ticket::queue_wait_us).collect();
         let t0 = Instant::now();
         let outcome = match batch[0].key {
-            BatchKey::Gemm { shape, width } => {
-                run_gemm_batch(&mut *backend, &compiler, &mut plans, shape, width, &batch)
-            }
+            BatchKey::Gemm { shape, width } => run_gemm_batch(
+                &mut *backend,
+                &compiler,
+                &mut plans,
+                shape,
+                width,
+                &batch,
+                &mut scratch,
+            ),
             BatchKey::Session { session, part } => run_session_batch(
                 &mut *backend,
                 &compiler,
@@ -1123,11 +1142,15 @@ fn worker_loop(
                 session,
                 part,
                 &batch,
+                &mut scratch,
             ),
         };
         let batch_wall_us = t0.elapsed().as_secs_f64() * 1e6;
         let batch_size = batch.len();
         metrics.record_batch(batch_size, batch_wall_us);
+        let (pool_hits, pool_misses, bytes_alloc) = scratch.take_stats();
+        metrics.record_pool(pool_hits, pool_misses);
+        metrics.record_alloc(bytes_alloc);
         // Region health for the quarantine policy: any transient error
         // in this batch is a fault event for this region's streak; a
         // clean batch with at least one success resets it (permanent
@@ -1260,6 +1283,7 @@ fn deliver_result(
 /// error falls back to per-job execution for the same reason. Validation
 /// and compile failures are permanent; execution failures are transient
 /// (retryable on another region).
+#[allow(clippy::too_many_arguments)]
 fn run_gemm_batch<B: PimBackend + ?Sized>(
     backend: &mut B,
     compiler: &PimCompiler,
@@ -1267,6 +1291,7 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
     shape: GemmShape,
     width: u16,
     batch: &[Ticket],
+    pool: &mut ScratchPool,
 ) -> BatchOutcome {
     let mut per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)> = batch
         .iter()
@@ -1311,7 +1336,7 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
     if items.is_empty() {
         return BatchOutcome { per_job };
     }
-    match execute_gemm_batch(backend, plan, &items) {
+    match execute_gemm_batch_pooled(backend, plan, &items, pool) {
         Ok((outs, stats)) => {
             let shares = stats_shares(&stats, items.len());
             for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {
@@ -1339,6 +1364,7 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
 /// carry the **full** parent activations; the tile view windows them
 /// to its k-range at operand-fill time, so validation here is always
 /// against the parent shape.
+#[allow(clippy::too_many_arguments)]
 fn run_session_batch<B: PimBackend + ?Sized>(
     backend: &mut B,
     compiler: &PimCompiler,
@@ -1347,6 +1373,7 @@ fn run_session_batch<B: PimBackend + ?Sized>(
     sid: SessionId,
     part: Option<TileSlot>,
     batch: &[Ticket],
+    pool: &mut ScratchPool,
 ) -> BatchOutcome {
     let mut per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)> = batch
         .iter()
@@ -1402,7 +1429,7 @@ fn run_session_batch<B: PimBackend + ?Sized>(
         match &t.job.kind {
             JobKind::SessionGemm { a, .. } if a.len() == m * k => {
                 valid_idx.push(idx);
-                acts.push(a.as_slice());
+                acts.push(&a[..]);
             }
             JobKind::SessionGemm { a, .. } => {
                 per_job[idx].2 = Some(JobError::permanent(format!(
@@ -1420,7 +1447,7 @@ fn run_session_batch<B: PimBackend + ?Sized>(
     if acts.is_empty() {
         return BatchOutcome { per_job };
     }
-    match session.infer_batch(backend, &acts) {
+    match session.infer_batch_pooled(backend, &acts, pool) {
         Ok((outs, stats)) => {
             let shares = stats_shares(&stats, acts.len());
             for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {
@@ -1816,7 +1843,7 @@ mod tests {
             let mut a = vec![0i64; shape.m * shape.k];
             rng.fill_signed(&mut a, 8);
             let expect = gemm_ref(shape, &a, &weights);
-            let job = Job::new(i as u64, JobKind::SessionGemm { session: sid, a })
+            let job = Job::new(i as u64, JobKind::SessionGemm { session: sid, a: a.into() })
                 .with_shards(policy);
             let r = coord.submit_job(job).unwrap().wait();
             assert!(r.error.is_none(), "{policy:?}: {:?}", r.error);
@@ -1826,7 +1853,7 @@ mod tests {
         // Sharding against a closed session degrades to one ticket whose
         // worker reports the unknown session.
         coord.close_session(sid);
-        let job = Job::new(9, JobKind::SessionGemm { session: sid, a: vec![0; 40] })
+        let job = Job::new(9, JobKind::SessionGemm { session: sid, a: vec![0; 40].into() })
             .with_shards(ShardPolicy::Fixed(3));
         let r = coord.submit_job(job).unwrap().wait();
         assert_eq!(r.shards, 1);

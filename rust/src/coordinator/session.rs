@@ -264,6 +264,20 @@ impl ModelSession {
         backend: &mut B,
         acts: &[&[i64]],
     ) -> Result<(Vec<Vec<i64>>, RunStats)> {
+        let mut pool = crate::compiler::ScratchPool::new();
+        self.infer_batch_pooled(backend, acts, &mut pool)
+    }
+
+    /// [`infer_batch`](Self::infer_batch) with a caller-owned
+    /// [`ScratchPool`](crate::compiler::ScratchPool): staging buffers are
+    /// recycled through `pool`, so a serving worker that keeps one pool
+    /// across batches stops allocating staging storage after warm-up.
+    pub fn infer_batch_pooled<B: PimBackend + ?Sized>(
+        &self,
+        backend: &mut B,
+        acts: &[&[i64]],
+        pool: &mut crate::compiler::ScratchPool,
+    ) -> Result<(Vec<Vec<i64>>, RunStats)> {
         if backend.rows() != self.geom.rows || backend.row_lanes() != self.geom.row_lanes() {
             return Err(Error::Config(format!(
                 "session prepared for {} rows x {} lanes, backend is {} rows x {} lanes",
@@ -307,6 +321,7 @@ impl ModelSession {
             |_t, local, s, lanes| {
                 lanes.copy_from_slice(&self.b_rows[local][s * q..(s + 1) * q]);
             },
+            pool,
         )
     }
 }

@@ -323,6 +323,10 @@ impl PimBackend for CustomRegion {
         self.host.get(&buf.0).map(|v| v.as_slice())
     }
 
+    fn take_buffer(&mut self, buf: BufId) -> Option<Vec<i64>> {
+        self.host.remove(&buf.0)
+    }
+
     fn execute(&mut self, mc: &Microcode) -> Result<RunStats> {
         let mut stats = RunStats::default();
         for instr in &mc.instrs {

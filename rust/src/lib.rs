@@ -112,8 +112,8 @@ pub mod prelude {
     pub use crate::coordinator::{
         BackendHook, BackoffPolicy, Backpressure, BatchPolicy, Coordinator, CoordinatorConfig,
         Job, JobHandle, JobKind, JobResult, ModelSession, QuarantinePolicy, QueuePolicy,
-        RegionSpec, RetryPolicy, SchedulerConfig, SessionId, ShardPolicy, TicketState, TileInfo,
-        TilePolicy, TileSlot,
+        QueueSharding, RegionSpec, RetryPolicy, SchedulerConfig, SessionId, ShardPolicy,
+        TicketState, TileInfo, TilePolicy, TileSlot,
     };
     pub use crate::custom::{CustomRegion, CustomTile};
     pub use crate::model::{

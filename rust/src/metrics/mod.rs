@@ -311,6 +311,25 @@ struct ServingInner {
     /// Programs rejected at admission under
     /// [`VerifyMode::Enforce`](crate::verify::VerifyMode::Enforce).
     verify_rejects: u64,
+    /// Perf lane: time spent waiting on a contended scheduler lane
+    /// mutex (ns). The scheduler's `try_lock` fast path records nothing,
+    /// so `lock_waits` counts only contended acquisitions.
+    lock_waits: u64,
+    lock_wait_ns: LatencyTrack,
+    /// Perf lane: pop efficiency. `pops` counts dispatches;
+    /// `pops_scanned` sums the queued tickets each dispatch examined
+    /// before choosing one — `scanned/pops → 1.0` means class-sharded
+    /// lanes are doing their job and nobody walks foreign tickets.
+    pops: u64,
+    pops_scanned: u64,
+    /// Perf lane: worker scratch-pool reuse. A hit serves a staging or
+    /// packed-round buffer from the pool; a miss allocates fresh.
+    pool_hits: u64,
+    pool_misses: u64,
+    /// Perf lane: bytes of fresh heap allocation on the serving path
+    /// (gather parent buffers, pool misses) — divided by `jobs` this is
+    /// the bytes-allocated-per-job figure of the bench reports.
+    bytes_alloc: u64,
     /// Per-model-layer rollups (graph executor), indexed by layer.
     per_layer: Vec<LayerTrack>,
     /// Latest analytic-tuner decision per model layer (sparse — `None`
@@ -534,6 +553,55 @@ impl ServingMetrics {
         }
     }
 
+    /// Record one **contended** scheduler-lane lock acquisition and the
+    /// nanoseconds spent blocked on it. The scheduler's `try_lock` fast
+    /// path never calls this, so the lane reports pure contention cost:
+    /// an uncontended deployment records nothing at all here.
+    pub fn record_lock_wait(&self, ns: u64) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.lock_waits += 1;
+        g.lock_wait_ns.push(ns as f64);
+    }
+
+    /// Record one pop dispatch and the number of queued tickets it
+    /// examined before choosing one. Per-class lane sharding drives the
+    /// scanned-per-pop ratio toward 1.0; a ratio well above 1 means
+    /// workers are walking tickets they cannot serve.
+    pub fn record_pop(&self, scanned: u64) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.pops += 1;
+        g.pops_scanned += scanned;
+    }
+
+    /// Record worker scratch-pool activity in bulk: `hits` requests
+    /// served from the pool, `misses` that allocated fresh. Workers
+    /// drain their pool's counters once per batch
+    /// ([`ScratchPool::take_stats`](crate::compiler::ScratchPool::take_stats))
+    /// instead of taking this lock per buffer.
+    pub fn record_pool(&self, hits: u64, misses: u64) {
+        if hits == 0 && misses == 0 {
+            return;
+        }
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.pool_hits += hits;
+        g.pool_misses += misses;
+    }
+
+    /// Record `bytes` of fresh heap allocation on the serving path
+    /// (gather parent buffers, scratch-pool misses). Feeds the
+    /// bytes-allocated-per-job figure of the perf lane.
+    pub fn record_alloc(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.bytes_alloc += bytes;
+    }
+
     /// The mean queue depth observed at enqueue over the current window.
     pub fn mean_queue_depth(&self) -> f64 {
         self.lock().queue_depth.mean()
@@ -700,6 +768,13 @@ impl ServingMetrics {
             verify_passes: g.verify_passes,
             verify_warns: g.verify_warns,
             verify_rejects: g.verify_rejects,
+            lock_waits: g.lock_waits,
+            lock_wait_ns: g.lock_wait_ns.summary(),
+            pops: g.pops,
+            pops_scanned: g.pops_scanned,
+            pool_hits: g.pool_hits,
+            pool_misses: g.pool_misses,
+            bytes_alloc: g.bytes_alloc,
             per_layer,
             tuner,
             per_backend,
@@ -857,6 +932,22 @@ pub struct MetricsSnapshot {
     /// [`VerifyMode::Enforce`](crate::verify::VerifyMode::Enforce) —
     /// each rejection happened before any queue slot was debited.
     pub verify_rejects: u64,
+    /// Perf lane: contended scheduler-lane lock acquisitions (the
+    /// `try_lock` fast path records nothing, so 0 means no contention).
+    pub lock_waits: u64,
+    /// Perf lane: blocked time per contended lane-lock acquisition (ns).
+    pub lock_wait_ns: LatencySummary,
+    /// Perf lane: pop dispatches.
+    pub pops: u64,
+    /// Perf lane: queued tickets examined across all pop dispatches —
+    /// see [`scanned_per_pop`](Self::scanned_per_pop).
+    pub pops_scanned: u64,
+    /// Perf lane: worker scratch-pool requests served from the pool.
+    pub pool_hits: u64,
+    /// Perf lane: scratch-pool requests that allocated fresh.
+    pub pool_misses: u64,
+    /// Perf lane: bytes of fresh heap allocation on the serving path.
+    pub bytes_alloc: u64,
     /// Per-model-layer rollups from the graph executor (empty when no
     /// model inference ran in the window).
     pub per_layer: Vec<LayerSnapshot>,
@@ -882,6 +973,38 @@ impl MetricsSnapshot {
     pub fn macs_per_sec(&self) -> f64 {
         if self.elapsed_s > 0.0 {
             self.macs as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean queued tickets examined per pop dispatch (0.0 before the
+    /// first pop). 1.0 is the sharded-lane ideal: every worker's first
+    /// candidate is a ticket it can serve.
+    pub fn scanned_per_pop(&self) -> f64 {
+        if self.pops > 0 {
+            self.pops_scanned as f64 / self.pops as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Worker scratch-pool hit rate in `[0, 1]` (0.0 before the first
+    /// request).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let total = self.pool_hits + self.pool_misses;
+        if total > 0 {
+            self.pool_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Bytes of fresh serving-path heap allocation per completed job
+    /// (0.0 before the first job).
+    pub fn bytes_per_job(&self) -> f64 {
+        if self.jobs > 0 {
+            self.bytes_alloc as f64 / self.jobs as f64
         } else {
             0.0
         }
@@ -933,6 +1056,17 @@ impl MetricsSnapshot {
             out.push_str(&format!(
                 "\nverify      passes={} warns={} rejects={}",
                 self.verify_passes, self.verify_warns, self.verify_rejects,
+            ));
+        }
+        if self.pops > 0 || self.lock_waits > 0 || self.pool_hits + self.pool_misses > 0 {
+            out.push_str(&format!(
+                "\nperf        scanned/pop={:.2} lock_waits={} lock_wait_p95={:.0}ns \
+                 pool_hit={:.0}% alloc/job={:.0}B",
+                self.scanned_per_pop(),
+                self.lock_waits,
+                self.lock_wait_ns.p95,
+                self.pool_hit_rate() * 100.0,
+                self.bytes_per_job(),
             ));
         }
         for l in &self.per_layer {
@@ -1150,6 +1284,40 @@ mod tests {
         assert!(text.contains("rejects=1"), "{text}");
         // Windows with no verification activity keep the line out.
         assert!(!ServingMetrics::new().snapshot().render().contains("verify"));
+    }
+
+    #[test]
+    fn perf_lane_tracks_and_renders() {
+        let m = ServingMetrics::new();
+        m.record_pop(1);
+        m.record_pop(3);
+        m.record_lock_wait(500);
+        m.record_lock_wait(1500);
+        m.record_pool(2, 1);
+        m.record_alloc(4096);
+        m.record_job(None, 10.0, 5.0, 20.0, 100, 1000, false);
+        m.record_job(None, 10.0, 5.0, 20.0, 100, 1000, false);
+        let s = m.snapshot();
+        assert_eq!(s.pops, 2);
+        assert_eq!(s.pops_scanned, 4);
+        assert!((s.scanned_per_pop() - 2.0).abs() < 1e-12);
+        assert_eq!(s.lock_waits, 2);
+        assert!(s.lock_wait_ns.p95 >= 500.0, "{}", s.lock_wait_ns.p95);
+        assert_eq!(s.pool_hits, 2);
+        assert_eq!(s.pool_misses, 1);
+        assert!((s.pool_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.bytes_alloc, 4096);
+        assert!((s.bytes_per_job() - 2048.0).abs() < 1e-12);
+        let text = s.render();
+        assert!(text.contains("perf"), "{text}");
+        assert!(text.contains("scanned/pop=2.00"), "{text}");
+        // Quiet windows keep the perf line out, and the empty-snapshot
+        // ratios are all defined.
+        let quiet = ServingMetrics::new().snapshot();
+        assert!(!quiet.render().contains("perf"));
+        assert_eq!(quiet.scanned_per_pop(), 0.0);
+        assert_eq!(quiet.pool_hit_rate(), 0.0);
+        assert_eq!(quiet.bytes_per_job(), 0.0);
     }
 
     #[test]

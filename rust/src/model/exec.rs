@@ -644,7 +644,7 @@ impl<'a> GraphExecutor<'a> {
         };
         let cl = &self.model.layers[idx];
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let job = Job::new(id, JobKind::SessionGemm { session: cl.session, a })
+        let job = Job::new(id, JobKind::SessionGemm { session: cl.session, a: a.into() })
             .with_shards(cl.shards)
             .with_retry(self.model.retry);
         self.coord.submit_job(job)

@@ -74,13 +74,16 @@ pub enum VerifyMode {
     /// No static verification.
     Off,
     /// Verify and count findings in the metrics verify lane, but admit
-    /// the job regardless (the default: observability without new
-    /// rejection behavior).
-    #[default]
+    /// the job regardless — observability without rejection, for
+    /// migrating pools that still submit known-dirty programs.
     Warn,
     /// Reject programs with [`Severity::Error`] findings at admission
     /// with [`Error::Verify`](crate::Error::Verify), before any
     /// scheduler slot is debited. Warning-grade findings still admit.
+    /// The default: an error-grade finding is a program that would fault
+    /// or corrupt results at execute time, so admitting it only converts
+    /// a cheap admission rejection into a wasted array invocation.
+    #[default]
     Enforce,
 }
 
@@ -1007,8 +1010,8 @@ mod tests {
     }
 
     #[test]
-    fn verify_mode_parses_and_defaults_to_warn() {
-        assert_eq!(VerifyMode::default(), VerifyMode::Warn);
+    fn verify_mode_parses_and_defaults_to_enforce() {
+        assert_eq!(VerifyMode::default(), VerifyMode::Enforce);
         assert_eq!("enforce".parse::<VerifyMode>().unwrap(), VerifyMode::Enforce);
         assert_eq!("OFF".parse::<VerifyMode>().unwrap(), VerifyMode::Off);
         assert!("loose".parse::<VerifyMode>().is_err());

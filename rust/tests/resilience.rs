@@ -69,7 +69,7 @@ fn sharded_jobs_survive_poisoned_regions_bit_exact() {
             gemm_job(i, shape, 0xAB5 + i)
         } else {
             let expect = gemm_ref(shape, &a, &weights);
-            (Job::new(i, JobKind::SessionGemm { session: sid, a }), expect)
+            (Job::new(i, JobKind::SessionGemm { session: sid, a: a.into() }), expect)
         };
         let r = coord.submit_job(job.with_shards(ShardPolicy::Fixed(3))).unwrap().wait();
         assert!(r.error.is_none(), "job {i}: {:?}", r.error);

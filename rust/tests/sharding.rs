@@ -246,7 +246,7 @@ fn sharded_session_jobs_bit_exact_across_pools() {
             let mut a = vec![0i64; shape.m * shape.k];
             rng.fill_signed(&mut a, 8);
             let expect = gemm_ref(shape, &a, &weights);
-            let job = Job::new(i as u64, JobKind::SessionGemm { session: sid, a })
+            let job = Job::new(i as u64, JobKind::SessionGemm { session: sid, a: a.into() })
                 .with_shards(policy);
             let h = coord.submit_job(job).unwrap();
             let want_shards = match policy {

@@ -85,7 +85,7 @@ fn tiled_gemm_bit_exact_across_pools_grids_and_paths() {
                 let mut a = vec![0i64; shape.m * shape.k];
                 rng.fill_signed(&mut a, u32::from(*width));
                 let expect = gemm_ref(*shape, &a, &weights);
-                let job = Job::new(id + 1, JobKind::SessionGemm { session: sid, a })
+                let job = Job::new(id + 1, JobKind::SessionGemm { session: sid, a: a.into() })
                     .with_shards(policy);
                 let r = coord.submit_job(job).unwrap().wait();
                 assert!(r.error.is_none(), "{ctx} session: {:?}", r.error);
@@ -125,7 +125,7 @@ fn deep_k_session_tiles_reuse_cache_bit_exact() {
         let mut a = vec![0i64; shape.m * shape.k];
         rng.fill_signed(&mut a, 8);
         let expect = gemm_ref(shape, &a, &weights);
-        let job = Job::new(round, JobKind::SessionGemm { session: sid, a })
+        let job = Job::new(round, JobKind::SessionGemm { session: sid, a: a.into() })
             .with_shards(TilePolicy::Grid { k_tiles: 4, n_tiles: 2 });
         let r = coord.submit_job(job).unwrap().wait();
         assert!(r.error.is_none(), "round {round}: {:?}", r.error);
@@ -136,7 +136,7 @@ fn deep_k_session_tiles_reuse_cache_bit_exact() {
     // through the same add-reduce path.
     let a = vec![-3i64; shape.m * shape.k];
     let expect = gemm_ref(shape, &a, &weights);
-    let job = Job::new(9, JobKind::SessionGemm { session: sid, a })
+    let job = Job::new(9, JobKind::SessionGemm { session: sid, a: a.into() })
         .with_shards(TilePolicy::Grid { k_tiles: 6, n_tiles: 1 });
     let r = coord.submit_job(job).unwrap().wait();
     assert!(r.error.is_none(), "{:?}", r.error);
@@ -205,7 +205,7 @@ fn grid_tiles_survive_poisoned_region_bit_exact() {
             gemm_job(i, shape, 8, 0xF00 + i)
         } else {
             let expect = gemm_ref(shape, &a, &weights);
-            (Job::new(i, JobKind::SessionGemm { session: sid, a }), expect)
+            (Job::new(i, JobKind::SessionGemm { session: sid, a: a.into() }), expect)
         };
         let r = coord
             .submit_job(job.with_shards(TilePolicy::Grid { k_tiles: 2, n_tiles: 2 }))
@@ -244,7 +244,7 @@ fn sibling_tiles_do_not_share_a_batch() {
     let mut a = vec![0i64; shape.m * shape.k];
     rng.fill_signed(&mut a, 8);
     let expect = gemm_ref(shape, &a, &weights);
-    let job = Job::new(0, JobKind::SessionGemm { session: sid, a })
+    let job = Job::new(0, JobKind::SessionGemm { session: sid, a: a.into() })
         .with_shards(TilePolicy::Grid { k_tiles: 2, n_tiles: 2 });
     let r = coord.submit_job(job).unwrap().wait();
     assert!(r.error.is_none(), "{:?}", r.error);

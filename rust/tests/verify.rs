@@ -248,11 +248,13 @@ fn enforce_rejects_before_any_scheduler_slot_is_debited() {
 
 #[test]
 fn warn_mode_counts_findings_but_admits() {
-    // The default mode lints: the same refuted program passes through
-    // with its findings tallied in the metrics verify lane.
+    // Warn (opt-in; the default is Enforce) lints: the same refuted
+    // program passes through with its findings tallied in the metrics
+    // verify lane.
     let coord = Coordinator::new(CoordinatorConfig {
         workers: 1,
         geom: ArrayGeometry::new(2, 1),
+        verify: VerifyMode::Warn,
         ..Default::default()
     })
     .unwrap();
@@ -298,7 +300,7 @@ fn session_open_verifies_once_and_serves() {
         rng.fill_signed(&mut a, 8);
         let expect = gemm_ref(shape, &a, &weights);
         let h = coord
-            .submit_job(Job::new(id, JobKind::SessionGemm { session, a }))
+            .submit_job(Job::new(id, JobKind::SessionGemm { session, a: a.into() }))
             .unwrap();
         let r = h.wait();
         assert!(r.error.is_none(), "{:?}", r.error);
