@@ -108,6 +108,29 @@ step "bench gate: BENCH_serve.json (cycle-domain keys, ±${BENCH_TOL_PCT}%)"
 bench_gate "serve" BENCH_serve.json BENCH_serve.fresh.json pim_cycles_per_job \
     || { echo "serve bench gate failed (rerun and commit BENCH_serve.json if intended)"; exit 1; }
 
+# ---------------------------------------------------------------------
+# Trace gate: rerun the serve smoke with the span journal attached,
+# validate the journal through the summarizer (`picaso trace` exits
+# non-zero on malformed JSON, unclosed spans, or children escaping
+# their parents), and check tracing didn't tank throughput — traced
+# jobs/s must stay within tolerance of the untraced run just above
+# (wall-clock, so BENCH_TRACE_TOL_PCT can widen it on noisy hosts).
+step "trace smoke: examples/serve --trace -> BENCH_serve.trace.json"
+SERVE_BENCH_JSON=BENCH_serve.traced.json \
+    cargo run --release --example serve -- 48 2 picaso --trace=BENCH_serve.trace.json >/dev/null
+test -s BENCH_serve.trace.json || { echo "BENCH_serve.trace.json missing or empty"; exit 1; }
+test -s BENCH_serve.traced.json || { echo "BENCH_serve.traced.json missing or empty"; exit 1; }
+
+step "trace gate: picaso trace BENCH_serve.trace.json (journal must validate)"
+cargo run --release -- trace BENCH_serve.trace.json \
+    || { echo "trace gate failed: span journal is malformed or ill-formed"; exit 1; }
+
+step "trace gate: traced throughput vs untraced (jobs_per_sec, ±${BENCH_TRACE_TOL_PCT:-$BENCH_TOL_PCT}%)"
+BENCH_TOL_PCT="${BENCH_TRACE_TOL_PCT:-$BENCH_TOL_PCT}" \
+    bench_gate "serve-traced" BENCH_serve.fresh.json BENCH_serve.traced.json jobs_per_sec \
+    || { echo "trace overhead gate failed: tracing slowed serving beyond tolerance"; exit 1; }
+rm -f BENCH_serve.trace.json BENCH_serve.traced.json
+
 step "bench smoke: examples/infer headless -> BENCH_infer.fresh.json"
 INFER_BENCH_JSON=BENCH_infer.fresh.json \
     cargo run --release --example infer -- 24 2 picaso >/dev/null

@@ -22,8 +22,12 @@
 //! cycle-makespan comparison (sequential vs pipelined).
 //!
 //! ```bash
-//! cargo run --release --example infer -- [requests] [workers] [backend]
+//! cargo run --release --example infer -- [requests] [workers] [backend] [--trace=<p>]
 //! ```
+//!
+//! `--trace=<path>` attaches a span journal (model-request roots with
+//! per-layer child spans) and writes it as Chrome trace-event JSON —
+//! load it in Perfetto or summarize it with `picaso trace <path>`.
 //!
 //! Set `INFER_BENCH_JSON=<path>` to persist the headline numbers (per
 //! layer + end-to-end latency, throughput, makespans) for the per-PR
@@ -41,10 +45,23 @@ const DIMS: [usize; 4] = [48, 32, 24, 10];
 const WIDTH: u16 = 8;
 
 fn main() -> picaso::Result<()> {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // `--trace=<path>` can appear anywhere; the remaining tokens are the
+    // positional [requests] [workers] [backend].
+    let (trace_path, argv): (Option<String>, Vec<String>) = {
+        let mut trace = None;
+        let mut rest = Vec::new();
+        for tok in std::env::args().skip(1) {
+            match tok.strip_prefix("--trace=") {
+                Some(p) => trace = Some(p.to_string()),
+                None => rest.push(tok),
+            }
+        }
+        (trace, rest)
+    };
     let requests: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(32);
     let workers: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let backend_name: String = argv.get(2).cloned().unwrap_or_else(|| "picaso".into());
+    let tracer = trace_path.as_ref().map(|_| std::sync::Arc::new(Tracer::new(workers)));
 
     let (kind, regions): (ArchKind, Vec<RegionSpec>) = if backend_name == "mixed" {
         (ArchKind::PICASO_F, RegionSpec::mixed_pool(workers))
@@ -79,6 +96,7 @@ fn main() -> picaso::Result<()> {
         kind,
         regions,
         batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_micros(200) },
+        trace: tracer.clone(),
         ..Default::default()
     })?;
     let model = CompiledModel::compile(&coord, graph, CompileOptions::default())?;
@@ -184,6 +202,17 @@ fn main() -> picaso::Result<()> {
 
     model.close(&coord);
     coord.shutdown();
+
+    // ------------------------------------------------ trace export
+    if let (Some(tr), Some(path)) = (&tracer, &trace_path) {
+        TraceSink::write(tr, std::path::Path::new(path))?;
+        println!(
+            "wrote {} spans (dropped {}) to {path} — summarize with `picaso trace {path}`",
+            tr.events().len(),
+            tr.dropped(),
+        );
+    }
+
     println!("\ninfer OK — all {requests} requests bit-exact in both modes");
     Ok(())
 }

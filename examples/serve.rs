@@ -29,8 +29,12 @@
 //! executing.
 //!
 //! ```bash
-//! cargo run --release --example serve -- [jobs-per-phase] [workers] [backend]
+//! cargo run --release --example serve -- [jobs-per-phase] [workers] [backend] [--trace=<p>]
 //! ```
+//!
+//! `--trace=<path>` attaches a span journal to the serving and chaos
+//! phases and writes it as Chrome trace-event JSON — load it in
+//! Perfetto or summarize it with `picaso trace <path>`.
 //!
 //! Set `SERVE_BENCH_JSON=<path>` to also write the headline numbers
 //! (p50/p95 queue + end-to-end latency, throughput, retry/shed counts)
@@ -109,10 +113,25 @@ fn run_phase(
 }
 
 fn main() -> picaso::Result<()> {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // `--trace=<path>` can appear anywhere; the remaining tokens are the
+    // positional [jobs] [workers] [backend].
+    let (trace_path, argv): (Option<String>, Vec<String>) = {
+        let mut trace = None;
+        let mut rest = Vec::new();
+        for tok in std::env::args().skip(1) {
+            match tok.strip_prefix("--trace=") {
+                Some(p) => trace = Some(p.to_string()),
+                None => rest.push(tok),
+            }
+        }
+        (trace, rest)
+    };
     let jobs: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(96);
     let workers: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let backend_name: String = argv.get(2).cloned().unwrap_or_else(|| "picaso".into());
+    // Sized for the largest pool of the run (the chaos phase uses at
+    // least two regions).
+    let tracer = trace_path.as_ref().map(|_| Arc::new(Tracer::new(workers.max(2))));
 
     // Backend selection: homogeneous pool (same names/aliases as the
     // CLI's --backend, via the shared parser), or the mixed
@@ -181,6 +200,7 @@ fn main() -> picaso::Result<()> {
         kind,
         regions: regions.clone(),
         batch: BatchPolicy::Fixed { max_batch: 8, max_wait: Duration::from_micros(200) },
+        trace: tracer.clone(),
         ..Default::default()
     })?);
     let sid = coord.open_session(shape, 8, weights.as_ref().clone())?;
@@ -336,6 +356,7 @@ fn main() -> picaso::Result<()> {
                 inner
             }
         }))),
+        trace: tracer.clone(),
         ..Default::default()
     })?);
     chaos.serving_metrics().reset_window();
@@ -410,6 +431,16 @@ fn main() -> picaso::Result<()> {
             std::fs::write(&path, json)?;
             println!("\nwrote bench snapshot to {path}");
         }
+    }
+
+    // ------------------------------------------------ trace export
+    if let (Some(tr), Some(path)) = (&tracer, &trace_path) {
+        TraceSink::write(tr, std::path::Path::new(path))?;
+        println!(
+            "wrote {} spans (dropped {}) to {path} — summarize with `picaso trace {path}`",
+            tr.events().len(),
+            tr.dropped(),
+        );
     }
 
     println!("\nserve OK");

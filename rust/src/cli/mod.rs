@@ -16,6 +16,8 @@
 //!              --backend --device]
 //!   check     --file=<path> [--width --backend --rows --cols --booth-skip]
 //!                                        statically verify an .asm program
+//!   trace     <journal.json>             summarize a span journal written
+//!                                        by serve/infer --trace=<path>
 //!   info                                 device database summary
 //! ```
 
@@ -47,6 +49,9 @@ pub struct Args {
     pub command: String,
     /// `--key=value` / `--flag` options.
     pub opts: HashMap<String, String>,
+    /// Bare (non-`--`) arguments in order, e.g. the journal file of
+    /// `picaso trace <file>`.
+    pub positional: Vec<String>,
 }
 
 impl Args {
@@ -57,16 +62,19 @@ impl Args {
             .next()
             .ok_or_else(|| Error::Config("missing command; try `picaso help`".into()))?;
         let mut opts = HashMap::new();
+        let mut positional = Vec::new();
         for tok in it {
-            let body = tok
-                .strip_prefix("--")
-                .ok_or_else(|| Error::Config(format!("unexpected argument '{tok}'")))?;
-            match body.split_once('=') {
-                Some((k, v)) => opts.insert(k.to_string(), v.to_string()),
-                None => opts.insert(body.to_string(), "true".to_string()),
-            };
+            match tok.strip_prefix("--") {
+                Some(body) => {
+                    match body.split_once('=') {
+                        Some((k, v)) => opts.insert(k.to_string(), v.to_string()),
+                        None => opts.insert(body.to_string(), "true".to_string()),
+                    };
+                }
+                None => positional.push(tok),
+            }
         }
-        Ok(Args { command, opts })
+        Ok(Args { command, opts, positional })
     }
 
     /// Get an option parsed as `T`, with a default.
@@ -139,6 +147,10 @@ system:
                                          rejects refuted programs before
                                          they reach the scheduler, warn
                                          only lints
+         [--trace=<path>]                write a Chrome trace-event span
+                                         journal of every job's lifecycle
+                                         (load in Perfetto, or summarize
+                                         with `picaso trace <path>`)
          [--device=U55]                  device for per-backend cycles→ns
   infer  --model=mlp:32x16x10            multi-layer MLP through the
                                          model-graph executor, pipelined
@@ -166,7 +178,15 @@ system:
          [--workers=4 --rows=8 --cols=4 --width=8]
          [--batch=8 --max-wait-us=200]   micro-batch flush policy
          [--window=0]                    max requests in flight (0 = all)
+         [--trace=<path>]                span journal incl. model-request
+                                         roots and per-layer spans
          [--backend=...|mixed] [--device=U55] [--seed=42]
+  trace  <journal.json>                  summarize a --trace journal: top
+                                         spans by self-time and the
+                                         critical path of the slowest
+                                         jobs; exits nonzero on malformed
+                                         or unclosed spans, so it doubles
+                                         as a CI gate on the exporter
   check  --file=prog.asm                 parse an assembler program and run
                                          the static dataflow verifier over
                                          it (exit nonzero on any
@@ -211,6 +231,7 @@ pub fn run(args: &Args) -> Result<String> {
         "serve" => cmd_serve(args),
         "infer" => cmd_infer(args),
         "check" => cmd_check(args),
+        "trace" => cmd_trace(args),
         "info" => Ok(cmd_info()),
         "help" | "--help" | "-h" => Ok(USAGE.to_string()),
         other => Err(Error::Config(format!("unknown command '{other}'; try `picaso help`"))),
@@ -381,6 +402,9 @@ fn cmd_serve(args: &Args) -> Result<String> {
     let quarantine_threshold: u32 = args.get("quarantine", 3u32)?;
     let backoff_us: u64 = args.get("backoff-us", 50u64)?;
     let verify_mode: VerifyMode = args.get("verify", VerifyMode::default())?;
+    let trace_path: String = args.get("trace", String::new())?;
+    let tracer =
+        (!trace_path.is_empty()).then(|| Arc::new(crate::trace::Tracer::new(workers)));
     let cfg = CoordinatorConfig {
         workers,
         geom: ArrayGeometry::new(rows, cols),
@@ -420,6 +444,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
                 max_wait: Duration::from_micros(max_wait_us),
             }
         },
+        trace: tracer.clone(),
         ..Default::default()
     };
     let coord = Arc::new(Coordinator::new(cfg)?);
@@ -524,6 +549,14 @@ fn cmd_serve(args: &Args) -> Result<String> {
     if let Ok(c) = Arc::try_unwrap(coord) {
         c.shutdown();
     }
+    let mut trace_note = String::new();
+    if let Some(tr) = &tracer {
+        crate::trace::TraceSink::write(tr, std::path::Path::new(&trace_path))?;
+        trace_note = format!(
+            "\ntrace: {} spans written to {trace_path} (summarize with `picaso trace {trace_path}`)",
+            tr.events().len(),
+        );
+    }
 
     // Clock-aware latency: convert each backend class's simulated
     // cycles to time at its design clock on the requested device.
@@ -560,7 +593,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
         "served {served} gemm jobs on {nworkers} {backend_name} workers \
          ({clients} closed-loop clients, {m}x{k}x{n}, {mode})\n\
          failures: {failures}\nshed on deadline: {shed}\n\
-         rejected then retried: {rejected}\n{report}{clock_report}\n",
+         rejected then retried: {rejected}\n{report}{clock_report}{trace_note}\n",
         m = shape.m,
         k = shape.k,
         n = shape.n,
@@ -825,6 +858,9 @@ fn cmd_infer(args: &Args) -> Result<String> {
     };
 
     let graph = build_model(&spec, width, &act, seed)?;
+    let trace_path: String = args.get("trace", String::new())?;
+    let tracer =
+        (!trace_path.is_empty()).then(|| Arc::new(crate::trace::Tracer::new(workers)));
     let coord = Coordinator::new(CoordinatorConfig {
         workers,
         geom: ArrayGeometry::new(rows, cols),
@@ -834,6 +870,7 @@ fn cmd_infer(args: &Args) -> Result<String> {
             max_batch: batch.max(1),
             max_wait: Duration::from_micros(max_wait_us),
         },
+        trace: tracer.clone(),
         ..Default::default()
     })?;
 
@@ -926,6 +963,14 @@ fn cmd_infer(args: &Args) -> Result<String> {
     ));
     model.close(&coord);
     coord.shutdown();
+    if let Some(tr) = &tracer {
+        crate::trace::TraceSink::write(tr, std::path::Path::new(&trace_path))?;
+        out.push_str(&format!(
+            "trace: {} spans written to {trace_path} \
+             (summarize with `picaso trace {trace_path}`)\n",
+            tr.events().len(),
+        ));
+    }
     if mismatched > 0 {
         return Err(Error::Runtime(format!(
             "{mismatched}/{requests} outputs mismatched the scalar reference"
@@ -979,6 +1024,23 @@ fn cmd_check(args: &Args) -> Result<String> {
     }
 }
 
+/// `trace <journal.json>`: validate and summarize a span journal
+/// written by `serve`/`infer --trace=<path>` — top spans by self-time
+/// and the critical path of the slowest jobs. Malformed JSON, unclosed
+/// spans, or parenting violations fail the command ([`Error::Runtime`]),
+/// so the exit status gates the exporter in CI.
+fn cmd_trace(args: &Args) -> Result<String> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.opts.get("file").cloned())
+        .ok_or_else(|| {
+            Error::Config("trace needs a journal file: picaso trace <trace.json>".into())
+        })?;
+    crate::trace::summarize_file(&path)
+}
+
 fn cmd_info() -> String {
     let mut out = String::from("device database:\n");
     for d in crate::device::DEVICES {
@@ -1016,9 +1078,16 @@ mod tests {
     #[test]
     fn parse_errors() {
         assert!(Args::parse(std::iter::empty::<String>()).is_err());
-        assert!(Args::parse(["x".into(), "stray".into()]).is_err());
         let a = Args::parse(["gemm".into(), "--m=abc".into()]).unwrap();
         assert!(a.get("m", 0usize).is_err());
+    }
+
+    #[test]
+    fn parse_positional() {
+        let a = Args::parse(["trace".into(), "out.json".into(), "--x=1".into()]).unwrap();
+        assert_eq!(a.positional, vec!["out.json".to_string()]);
+        assert_eq!(a.get("x", 0usize).unwrap(), 1);
+        assert!(Args::parse(["gemm".into()]).unwrap().positional.is_empty());
     }
 
     #[test]
@@ -1255,6 +1324,29 @@ mod tests {
         // Missing or unreadable files fail loudly.
         assert!(run_line("check").is_err());
         assert!(run_line("check --file=/nonexistent/x.asm").is_err());
+    }
+
+    #[test]
+    fn serve_trace_flag_roundtrips_through_trace_command() {
+        let path = std::env::temp_dir().join("picaso_cli_serve.trace.json");
+        let path = path.display().to_string();
+        let out = run_line(&format!(
+            "serve --jobs=6 --workers=2 --rows=2 --cols=1 --trace={path}"
+        ))
+        .unwrap();
+        assert!(out.contains("served 6"), "{out}");
+        assert!(out.contains("spans written"), "{out}");
+        // The summarizer validates and reports on the journal just
+        // written.
+        let sum = run_line(&format!("trace {path}")).unwrap();
+        assert!(sum.contains("top spans by self-time"), "{sum}");
+        assert!(sum.contains("submit"), "{sum}");
+        // Missing operand / missing file / malformed journal all fail.
+        assert!(run_line("trace").is_err());
+        assert!(run_line("trace /nonexistent/t.json").is_err());
+        let bad = std::env::temp_dir().join("picaso_cli_bad.trace.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        assert!(run_line(&format!("trace {}", bad.display())).is_err());
     }
 
     #[test]

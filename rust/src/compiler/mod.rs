@@ -18,6 +18,7 @@ use crate::arch::check_reduction_q;
 use crate::array::{ArrayGeometry, RunStats};
 use crate::backend::PimBackend;
 use crate::isa::{AluOp, BufId, FoldPattern, Instruction, Microcode, PoolOp, RfAddr};
+use crate::trace::ExecScope;
 use crate::util::ceil_log2;
 use crate::{Error, Result};
 
@@ -327,6 +328,20 @@ pub fn execute_gemm_batch_pooled<B: PimBackend + ?Sized>(
     items: &[(&[i64], &[i64])],
     pool: &mut ScratchPool,
 ) -> Result<(Vec<Vec<i64>>, RunStats)> {
+    execute_gemm_batch_scoped(backend, plan, items, pool, None)
+}
+
+/// [`execute_gemm_batch_pooled`] under an optional trace scope: each
+/// packed round records a `round[i]` span nested under the worker's
+/// batch span (see [`crate::trace`]). The untraced entry points delegate
+/// here with `scope = None`.
+pub(crate) fn execute_gemm_batch_scoped<B: PimBackend + ?Sized>(
+    backend: &mut B,
+    plan: &GemmPlan,
+    items: &[(&[i64], &[i64])],
+    pool: &mut ScratchPool,
+    scope: Option<&ExecScope<'_>>,
+) -> Result<(Vec<Vec<i64>>, RunStats)> {
     let GemmShape { m, k, n } = plan.shape;
     for (idx, (a, b)) in items.iter().enumerate() {
         if a.len() != m * k || b.len() != k * n {
@@ -363,6 +378,7 @@ pub fn execute_gemm_batch_pooled<B: PimBackend + ?Sized>(
             }
         },
         pool,
+        scope,
     )
 }
 
@@ -388,6 +404,7 @@ pub(crate) fn run_packed_rounds<B, FA, FB>(
     mut fill_a: FA,
     mut fill_b: FB,
     pool: &mut ScratchPool,
+    scope: Option<&ExecScope<'_>>,
 ) -> Result<(Vec<Vec<i64>>, RunStats)>
 where
     B: PimBackend + ?Sized,
@@ -406,6 +423,9 @@ where
     let mut c = vec![vec![0i64; per_job]; jobs];
     let mut total = RunStats::default();
     for round in 0..rounds {
+        // `round[i]` span: staging + array execute + harvest, nested
+        // under the worker's batch span. A branch when tracing is off.
+        let round_open = scope.map(ExecScope::open);
         let first_out = round * rows;
         let live = rows.min(outputs - first_out);
         // Stage the operand slices for every live row. Row `r` computes
@@ -437,6 +457,9 @@ where
                     pool.put(v);
                 }
             }
+        }
+        if let (Some(sc), Some(open)) = (scope, round_open) {
+            sc.close(open, &format!("round[{round}]"));
         }
     }
     Ok((c, total))

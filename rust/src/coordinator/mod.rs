@@ -90,10 +90,11 @@ use crate::arch::{ArchKind, PipelineConfig};
 use crate::array::{ArrayGeometry, RunStats};
 use crate::backend::{make_backend, BackendClass, PimBackend};
 use crate::compiler::{
-    execute_gemm, execute_gemm_batch_pooled, slice_a_cols, slice_b_block, split_shape_kn,
+    execute_gemm, execute_gemm_batch_scoped, slice_a_cols, slice_b_block, split_shape_kn,
     GemmPlan, GemmShape, PimCompiler, ScratchPool,
 };
 use crate::metrics::{Metrics, MetricsSnapshot, ServingMetrics};
+use crate::trace::{ExecScope, OpenSpan, TraceParent, Tracer};
 use crate::verify::{verify_on_pool, VerifyMode, VerifyOutcome};
 use crate::{Error, Result};
 use std::collections::{HashMap, VecDeque};
@@ -193,6 +194,14 @@ pub struct CoordinatorConfig {
     /// **before** any scheduler slot is debited; [`VerifyMode::Warn`]
     /// only counts findings in the metrics verify lane.
     pub verify: VerifyMode,
+    /// Optional span journal ([`crate::trace`]). When set, every
+    /// submission is assigned a trace id and the whole lifecycle
+    /// (`submit`/`verify`/`reserve`, `queued`, `batch`/`dispatch`,
+    /// `round[i]`, retry/backoff/shed, `gather`/`add-reduce`) records
+    /// nested spans into its bounded per-lane rings; export with
+    /// [`crate::trace::TraceSink`]. `None` (the default) keeps the hot
+    /// path span-free — the only cost is a branch on this `Option`.
+    pub trace: Option<Arc<Tracer>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -209,6 +218,7 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             backend_hook: None,
             verify: VerifyMode::default(),
+            trace: None,
         }
     }
 }
@@ -328,6 +338,13 @@ pub struct Job {
     /// invocation on an answer nobody is waiting for. `None` (the
     /// default) never sheds.
     pub deadline_us: Option<f64>,
+    /// Trace context ([`crate::trace`]). Usually left `None`: the
+    /// coordinator mints a fresh trace root at submission when
+    /// [`CoordinatorConfig::trace`] is enabled. The model executor
+    /// pre-fills it so layer jobs parent under their request's
+    /// `layer[i]` span; shard sub-jobs inherit it so a scatter/gather
+    /// reads as one logical timeline.
+    pub trace: Option<TraceParent>,
 }
 
 impl Job {
@@ -340,6 +357,7 @@ impl Job {
             shards: ShardPolicy::None,
             retry: RetryPolicy::default(),
             deadline_us: None,
+            trace: None,
         }
     }
 
@@ -605,20 +623,46 @@ impl Coordinator {
                 )));
             }
         }
+        // Trace root: every admitted logical job gets a trace id. The
+        // model executor pre-fills `job.trace` so its layer jobs parent
+        // under the request's `layer[i]` span instead.
+        if job.trace.is_none() {
+            if let Some(tr) = &self.cfg.trace {
+                job.trace = Some(TraceParent {
+                    tracer: Arc::clone(tr),
+                    trace: tr.new_trace(),
+                    span: 0,
+                });
+            }
+        }
+        let job_id = job.id;
+        let submit_open = job.trace.as_ref().map(|tp| tp.tracer.start());
+        let submit_span = submit_open.map(|o| o.id).unwrap_or(0);
         // Static verification of ad-hoc GEMM programs, before any
         // scheduler slot is reserved or debited. Session jobs run the
         // program already verified at `open_session` and skip the
         // (identical) re-check per submission.
         if let JobKind::Gemm { shape, width, .. } = &job.kind {
-            self.verify_admission(*shape, *width, job.backend)?;
+            let vopen = job.trace.as_ref().map(|tp| tp.tracer.start());
+            let verdict = self.verify_admission(*shape, *width, job.backend);
+            if let (Some(tp), Some(open)) = (&job.trace, vopen) {
+                tp.tracer.end(0, open, tp.trace, submit_span, job_id, "verify");
+            }
+            verdict?;
         }
         let (k_tiles, n_tiles) = self.resolve_tiles(&job)?;
-        if k_tiles * n_tiles >= 2 {
-            return self.scatter(job, priority, k_tiles, n_tiles);
+        let tp = job.trace.clone();
+        let result = if k_tiles * n_tiles >= 2 {
+            self.scatter(job, priority, k_tiles, n_tiles, submit_span)
+        } else {
+            self.metrics.record_shards(1);
+            self.metrics.record_tiles(1);
+            self.sched.submit_with_priority(job, priority)
+        };
+        if let (Some(tp), Some(open)) = (&tp, submit_open) {
+            tp.tracer.end(0, open, tp.trace, tp.span, job_id, "submit");
         }
-        self.metrics.record_shards(1);
-        self.metrics.record_tiles(1);
-        self.sched.submit_with_priority(job, priority)
+        result
     }
 
     /// Resolve a job's [`TilePolicy`] to a concrete `(k_tiles, n_tiles)`
@@ -758,7 +802,14 @@ impl Coordinator {
     /// (the worker windows them to the tile's k-range at fill time) and
     /// the worker slices the session's pinned staging table per tile
     /// slot.
-    fn scatter(&self, job: Job, priority: u8, k_tiles: usize, n_tiles: usize) -> Result<JobHandle> {
+    fn scatter(
+        &self,
+        job: Job,
+        priority: u8,
+        k_tiles: usize,
+        n_tiles: usize,
+        submit_span: u64,
+    ) -> Result<JobHandle> {
         // A tiled session job needs its spec for the parent shape and
         // width; the session may close concurrently — degrade to one
         // ticket then (the worker reports the unknown session).
@@ -773,7 +824,7 @@ impl Coordinator {
             },
             JobKind::Gemm { .. } => None,
         };
-        let Job { id, kind, backend, retry, deadline_us, .. } = job;
+        let Job { id, kind, backend, retry, deadline_us, trace, .. } = job;
         let (shape, width) = match (&kind, &spec) {
             (JobKind::Gemm { shape, width, .. }, _) => (*shape, *width),
             (JobKind::SessionGemm { .. }, Some(spec)) => (spec.shape, spec.width),
@@ -787,7 +838,11 @@ impl Coordinator {
         // All-or-none admission: the whole scatter's slots are held
         // before the first tile enqueues, so `Reject` either admits
         // every tile or fails cleanly with nothing queued.
+        let reserve_open = trace.as_ref().map(|tp| tp.tracer.start());
         let mut reservation = self.sched.reserve(of)?;
+        if let (Some(tp), Some(open)) = (&trace, reserve_open) {
+            tp.tracer.end(0, open, tp.trace, submit_span, id, "reserve");
+        }
         self.metrics.record_shards(of);
         self.metrics.record_tiles(k_tiles);
         let mut handles = Vec::with_capacity(of);
@@ -818,11 +873,14 @@ impl Coordinator {
                 shards: TilePolicy::None,
                 retry,
                 deadline_us,
+                // Every tile shares the logical job's trace, so the
+                // shard timelines parent to one per-job track.
+                trace: trace.clone(),
             };
             let h = reservation.submit(sub, priority, Some(TileInfo { parent: id, slot }))?;
             handles.push((slot, col0, sshape.n, h));
         }
-        Ok(JobHandle::gather(id, shape, width, handles))
+        Ok(JobHandle::gather(id, shape, width, handles, trace))
     }
 
     /// Open a persistent session: pins `weights` (row-major `k×n`) and
@@ -1124,6 +1182,26 @@ fn worker_loop(
         }
         let queue_waits: Vec<f64> = batch.iter().map(Ticket::queue_wait_us).collect();
         let t0 = Instant::now();
+        // Batch window span on this worker's lane (fleet-side: trace 0),
+        // with per-ticket `dispatch` spans duplicated onto each job's
+        // logical track. With tracing off both stay `None`/empty — no
+        // allocation, a branch per batch.
+        let lane = widx + 1;
+        let batch_open = cfg.trace.as_ref().map(|tr| tr.start());
+        let mut dispatch_opens: Vec<Option<OpenSpan>> = Vec::new();
+        if batch.iter().any(|t| t.trace_parent().is_some()) {
+            dispatch_opens = batch
+                .iter()
+                .map(|t| t.trace_parent().map(|tp| tp.tracer.start()))
+                .collect();
+        }
+        let scope = cfg.trace.as_deref().zip(batch_open).map(|(tr, open)| ExecScope {
+            tracer: tr,
+            lane,
+            trace: 0,
+            parent: open.id,
+            job: 0,
+        });
         let outcome = match batch[0].key {
             BatchKey::Gemm { shape, width } => run_gemm_batch(
                 &mut *backend,
@@ -1133,6 +1211,7 @@ fn worker_loop(
                 width,
                 &batch,
                 &mut scratch,
+                scope.as_ref(),
             ),
             BatchKey::Session { session, part } => run_session_batch(
                 &mut *backend,
@@ -1143,9 +1222,13 @@ fn worker_loop(
                 part,
                 &batch,
                 &mut scratch,
+                scope.as_ref(),
             ),
         };
         let batch_wall_us = t0.elapsed().as_secs_f64() * 1e6;
+        if let (Some(tr), Some(open)) = (&cfg.trace, batch_open) {
+            tr.end(lane, open, 0, 0, 0, "batch");
+        }
         let batch_size = batch.len();
         metrics.record_batch(batch_size, batch_wall_us);
         let (pool_hits, pool_misses, bytes_alloc) = scratch.take_stats();
@@ -1172,12 +1255,20 @@ fn worker_loop(
         // comparable with the seed one-job-per-invocation path.
         let out_lens: Vec<usize> = outcome.per_job.iter().map(|(o, _, _)| o.len()).collect();
         let shares = wall_shares(batch_wall_us, &out_lens);
-        for (((ticket, (output, stats, error)), queue_us), wall_us) in batch
+        for (ti, (((ticket, (output, stats, error)), queue_us), wall_us)) in batch
             .into_iter()
             .zip(outcome.per_job)
             .zip(queue_waits)
             .zip(shares)
+            .enumerate()
         {
+            // Close this ticket's dispatch span (covers its whole stay
+            // on the worker, batch-mates included).
+            if let (Some(tp), Some(open)) =
+                (ticket.trace_parent(), dispatch_opens.get(ti).copied().flatten())
+            {
+                tp.tracer.end(lane, open, tp.trace, tp.span, ticket.job.id, "dispatch");
+            }
             // Failure-domain retry: a transient error with attempts and
             // untried compatible regions left re-queues the ticket with
             // this region excluded — the handle resolves on a later
@@ -1187,6 +1278,15 @@ fn worker_loop(
                     && ticket.attempt + 1 < ticket.job.retry.attempts()
                     && untried_domains(&pool_kinds, &ticket, widx) > 0
                 {
+                    if let Some(tp) = ticket.trace_parent() {
+                        tp.tracer.instant(
+                            lane,
+                            tp.trace,
+                            tp.span,
+                            ticket.job.id,
+                            &format!("retry[{}]", ticket.attempt + 1),
+                        );
+                    }
                     match sched.retry(ticket, widx) {
                         Ok(()) => {
                             metrics.record_retry(Some(class));
@@ -1253,6 +1353,26 @@ fn deliver_result(
     let retries = ticket.attempt;
     let total_us = ticket.enqueued_at.elapsed().as_secs_f64() * 1e6;
     let macs = output.len() as u64;
+    // Deadline-margin lane: how close each deadline-carrying ticket
+    // (shards individually) came to its SLO. Negative margin = miss.
+    if let Some(deadline) = ticket.job.deadline_us {
+        metrics.record_deadline_margin(deadline - total_us);
+    }
+    // Flight recorder: a job that ends in an error keeps its span tree
+    // (retained past ring eviction) and renders it into the error
+    // context, so the post-mortem shows where the wall time went.
+    let error = match (error, ticket.trace_parent()) {
+        (Some(msg), Some(tp)) => {
+            tp.tracer.retain_trace(tp.trace);
+            let timeline = tp.tracer.render_timeline(tp.trace, 2000);
+            if timeline.is_empty() {
+                Some(msg)
+            } else {
+                Some(format!("{msg}\ntrace timeline:\n{timeline}"))
+            }
+        }
+        (e, _) => e,
+    };
     metrics.record_job(
         Some(class),
         queue_us,
@@ -1292,6 +1412,7 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
     width: u16,
     batch: &[Ticket],
     pool: &mut ScratchPool,
+    scope: Option<&ExecScope<'_>>,
 ) -> BatchOutcome {
     let mut per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)> = batch
         .iter()
@@ -1336,7 +1457,7 @@ fn run_gemm_batch<B: PimBackend + ?Sized>(
     if items.is_empty() {
         return BatchOutcome { per_job };
     }
-    match execute_gemm_batch_pooled(backend, plan, &items, pool) {
+    match execute_gemm_batch_scoped(backend, plan, &items, pool, scope) {
         Ok((outs, stats)) => {
             let shares = stats_shares(&stats, items.len());
             for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {
@@ -1374,6 +1495,7 @@ fn run_session_batch<B: PimBackend + ?Sized>(
     part: Option<TileSlot>,
     batch: &[Ticket],
     pool: &mut ScratchPool,
+    scope: Option<&ExecScope<'_>>,
 ) -> BatchOutcome {
     let mut per_job: Vec<(Vec<i64>, RunStats, Option<JobError>)> = batch
         .iter()
@@ -1447,7 +1569,7 @@ fn run_session_batch<B: PimBackend + ?Sized>(
     if acts.is_empty() {
         return BatchOutcome { per_job };
     }
-    match session.infer_batch_pooled(backend, &acts, pool) {
+    match session.infer_batch_scoped(backend, &acts, pool, scope) {
         Ok((outs, stats)) => {
             let shares = stats_shares(&stats, acts.len());
             for ((slot, out), share) in valid_idx.iter().zip(outs).zip(shares) {

@@ -130,6 +130,7 @@ use crate::array::RunStats;
 use crate::backend::BackendClass;
 use crate::compiler::{acc_bits, add_reduce_into, copy_shard_into, GemmShape};
 use crate::metrics::ServingMetrics;
+use crate::trace::{OpenSpan, TraceParent};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -437,6 +438,9 @@ enum HandleInner {
         shape: GemmShape,
         width: u16,
         parts: Vec<(TileSlot, usize, usize, JobHandle)>,
+        /// The logical job's trace context, so the gather barrier and
+        /// add-reduce record spans on the parent's timeline.
+        trace: Option<TraceParent>,
     },
 }
 
@@ -492,9 +496,10 @@ impl JobHandle {
         shape: GemmShape,
         width: u16,
         parts: Vec<(TileSlot, usize, usize, JobHandle)>,
+        trace: Option<TraceParent>,
     ) -> JobHandle {
         debug_assert!(!parts.is_empty(), "gather of zero tiles");
-        JobHandle { id, inner: HandleInner::Gather { shape, width, parts } }
+        JobHandle { id, inner: HandleInner::Gather { shape, width, parts, trace } }
     }
 
     /// True once the result is available (non-blocking). A sharded
@@ -517,17 +522,25 @@ impl JobHandle {
             HandleInner::Single(shared) => {
                 shared.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
             }
-            HandleInner::Gather { shape, width, parts } => {
+            HandleInner::Gather { shape, width, parts, trace } => {
                 if !self.is_done() {
                     return None;
                 }
+                // Every shard is already terminal, so the gather span
+                // here covers just the take + merge.
+                let gather_open = trace.as_ref().map(|tp| tp.tracer.start());
                 let mut results = Vec::with_capacity(parts.len());
                 for (_, _, _, h) in parts {
                     results.push(h.try_take()?);
                 }
                 let metas: Vec<(TileSlot, usize, usize)> =
                     parts.iter().map(|(s, c, n, _)| (*s, *c, *n)).collect();
-                Some(merge_shard_results(self.id, *shape, *width, &metas, results))
+                let tctx = trace.as_ref().zip(gather_open).map(|(tp, o)| (tp, o.id));
+                let merged = merge_shard_results(self.id, *shape, *width, &metas, results, tctx);
+                if let (Some(tp), Some(open)) = (trace, gather_open) {
+                    tp.tracer.end(0, open, tp.trace, tp.span, self.id, "gather");
+                }
+                Some(merged)
             }
         }
     }
@@ -546,12 +559,20 @@ impl JobHandle {
                     slot = shared.done.wait(slot).unwrap_or_else(|e| e.into_inner());
                 }
             }
-            HandleInner::Gather { shape, width, parts } => {
+            HandleInner::Gather { shape, width, parts, trace } => {
+                // The gather span starts before the barrier: waiting out
+                // the slowest shard IS the gather cost.
+                let gather_open = trace.as_ref().map(|tp| tp.tracer.start());
                 let metas: Vec<(TileSlot, usize, usize)> =
                     parts.iter().map(|(s, c, n, _)| (*s, *c, *n)).collect();
                 let results: Vec<JobResult> =
                     parts.into_iter().map(|(_, _, _, h)| h.wait()).collect();
-                merge_shard_results(self.id, shape, width, &metas, results)
+                let tctx = trace.as_ref().zip(gather_open).map(|(tp, o)| (tp, o.id));
+                let merged = merge_shard_results(self.id, shape, width, &metas, results, tctx);
+                if let (Some(tp), Some(open)) = (trace, gather_open) {
+                    tp.tracer.end(0, open, tp.trace, tp.span, self.id, "gather");
+                }
+                merged
             }
         }
     }
@@ -585,6 +606,7 @@ fn merge_shard_results(
     width: u16,
     metas: &[(TileSlot, usize, usize)],
     results: Vec<JobResult>,
+    trace: Option<(&TraceParent, u64)>,
 ) -> JobResult {
     let of = results.len();
     let mut stats = RunStats::default();
@@ -625,7 +647,9 @@ fn merge_shard_results(
         let mut c = vec![0i64; shape.m * shape.n];
         if k_tiles >= 2 {
             // Group partial products by column range and add-reduce each
-            // group under the parent's logical accumulator range.
+            // group under the parent's logical accumulator range. The
+            // whole reduction is one `add-reduce` span under the gather.
+            let reduce_open = trace.map(|(tp, _)| tp.tracer.start());
             let bits = acc_bits(width, shape.k);
             for (slot, col0, cols) in metas.iter() {
                 if slot.ki != 0 {
@@ -642,6 +666,9 @@ fn merge_shard_results(
                     break;
                 }
             }
+            if let (Some((tp, gather_span)), Some(open)) = (trace, reduce_open) {
+                tp.tracer.end(0, open, tp.trace, gather_span, id, "add-reduce");
+            }
         } else {
             for ((_, col0, cols), r) in metas.iter().zip(results.iter()) {
                 copy_shard_into(&mut c, shape, *col0, *cols, &r.output);
@@ -655,6 +682,20 @@ fn merge_shard_results(
     } else {
         Vec::new()
     };
+    // Flight recorder, gather edition: a parent that fails (shard error
+    // or add-reduce overflow) keeps the logical job's span tree and
+    // renders it into the error context — unless a failing shard already
+    // embedded the timeline on its way through `deliver_result`.
+    if let (Some(msg), Some((tp, _))) = (&mut error, trace) {
+        if !msg.contains("trace timeline:") {
+            tp.tracer.retain_trace(tp.trace);
+            let timeline = tp.tracer.render_timeline(tp.trace, 2000);
+            if !timeline.is_empty() {
+                msg.push_str("\ntrace timeline:\n");
+                msg.push_str(&timeline);
+            }
+        }
+    }
     JobResult {
         id,
         output,
@@ -776,6 +817,18 @@ pub struct Ticket {
     /// it (an expired ticket sheds even mid-backoff).
     pub not_before: Option<Instant>,
     completion: Completion,
+    /// Trace state: the job's trace context plus the currently open
+    /// `queued` span (re-opened on retry re-queue). Boxed so an untraced
+    /// ticket pays one `None` word, and `None` costs no allocation.
+    trace: Option<Box<JobTrace>>,
+}
+
+/// Per-ticket tracing state (see [`crate::trace`]).
+struct JobTrace {
+    tp: TraceParent,
+    /// The open `queued` interval: submit → dispatch (or shed), and
+    /// backoff-end → re-dispatch after a retry.
+    queued: Option<OpenSpan>,
 }
 
 impl std::fmt::Debug for Ticket {
@@ -837,14 +890,57 @@ impl Ticket {
         self.completion.complete(result);
     }
 
+    /// The job's trace context, if the submission was traced — the
+    /// worker loop uses it to record `dispatch`/`retry[n]` spans on the
+    /// job's logical timeline.
+    pub fn trace_parent(&self) -> Option<&TraceParent> {
+        self.trace.as_deref().map(|jt| &jt.tp)
+    }
+
+    /// Close the open `queued` span (the ticket is leaving the queue for
+    /// a worker) and, when the pop is a quarantine probation probe, mark
+    /// it on the job's timeline.
+    fn note_dispatched(&mut self, probe: bool) {
+        let id = self.job.id;
+        if let Some(jt) = self.trace.as_deref_mut() {
+            if let Some(open) = jt.queued.take() {
+                jt.tp.tracer.end(0, open, jt.tp.trace, jt.tp.span, id, "queued");
+            }
+            if probe {
+                jt.tp.tracer.instant(0, jt.tp.trace, jt.tp.span, id, "quarantine-probe");
+            }
+        }
+    }
+
     /// Resolve this ticket as shed: the deadline expired in the queue,
     /// so the job is dropped without executing and its handle gets an
     /// empty [`shed`](super::JobResult::shed) result.
-    fn shed(self, metrics: &ServingMetrics) {
+    fn shed(mut self, metrics: &ServingMetrics) {
         metrics.record_shed();
         let queued = self.queue_wait_us();
         let deadline = self.job.deadline_us.unwrap_or(0.0);
         let id = self.job.id;
+        // A shed is an SLO miss by definition: the margin lane records
+        // the (negative) distance to the deadline at drop time.
+        metrics.record_deadline_margin(deadline - queued);
+        let mut error = format!(
+            "shed: deadline {deadline:.0}us expired after {queued:.0}us in queue"
+        );
+        // Flight recorder: close the queued span, mark the shed, retain
+        // the trace past ring eviction and render it into the error.
+        if let Some(jt) = self.trace.take() {
+            let jt = *jt;
+            if let Some(open) = jt.queued {
+                jt.tp.tracer.end(0, open, jt.tp.trace, jt.tp.span, id, "queued");
+            }
+            jt.tp.tracer.instant(0, jt.tp.trace, jt.tp.span, id, "shed");
+            jt.tp.tracer.retain_trace(jt.tp.trace);
+            let timeline = jt.tp.tracer.render_timeline(jt.tp.trace, 2000);
+            if !timeline.is_empty() {
+                error.push_str("\ntrace timeline:\n");
+                error.push_str(&timeline);
+            }
+        }
         self.complete(JobResult {
             id,
             output: Vec::new(),
@@ -857,9 +953,7 @@ impl Ticket {
             shards: 1,
             retries: self.attempt,
             shed: true,
-            error: Some(format!(
-                "shed: deadline {deadline:.0}us expired after {queued:.0}us in queue"
-            )),
+            error: Some(error),
         });
     }
 
@@ -1285,6 +1379,11 @@ impl Scheduler {
         }
         let (handle, completion) = Completion::pair(job.id);
         let seq = self.inner.next_seq.fetch_add(1, Ordering::SeqCst);
+        // Traced jobs open their `queued` span here (closed at pop or
+        // shed). A branch and no allocation when the job is untraced.
+        let trace = job.trace.as_ref().map(|tp| {
+            Box::new(JobTrace { tp: tp.clone(), queued: Some(tp.tracer.start()) })
+        });
         let ticket = Ticket {
             job,
             priority,
@@ -1296,6 +1395,7 @@ impl Scheduler {
             tried_workers: Vec::new(),
             not_before: None,
             completion,
+            trace,
         };
         self.insert_ticket(&mut st, ticket, false);
         // The arrival-clock bump must happen under the lane lock so the
@@ -1463,6 +1563,25 @@ impl Scheduler {
         let delay = self.inner.cfg.retry_backoff.delay(t.job.id, t.attempt);
         t.not_before = if delay.is_zero() { None } else { Some(Instant::now() + delay) };
         t.completion.set_state(TicketState::Retrying(t.attempt));
+        // Timeline: the backoff window is recorded with its known
+        // duration up front, and a fresh `queued` interval opens for the
+        // re-queue (the previous one closed at dispatch).
+        let jid = t.job.id;
+        if let Some(jt) = t.trace.as_deref_mut() {
+            if !delay.is_zero() {
+                let t0 = jt.tp.tracer.now_us();
+                jt.tp.tracer.record(
+                    0,
+                    jt.tp.trace,
+                    jt.tp.span,
+                    jid,
+                    "backoff",
+                    t0,
+                    delay.as_secs_f64() * 1e6,
+                );
+            }
+            jt.queued = Some(jt.tp.tracer.start());
+        }
         t.seq = self.inner.next_seq.fetch_add(1, Ordering::SeqCst);
         let lane = self.lane_for(t.job.backend);
         let mut st = self.lock_lane(lane);
@@ -1726,10 +1845,14 @@ impl Scheduler {
                 }
             }
             if let Some((gi, pos, _, _)) = chosen {
-                let t = guards[gi].items.remove(pos).expect("position is in range");
+                let mut t = guards[gi].items.remove(pos).expect("position is in range");
                 t.completion.set_state(TicketState::Dispatched);
                 let lane = scan.lanes[gi];
                 drop(guards);
+                // A pop by a probation-flagged worker is the quarantine
+                // re-probe — mark it on the job's timeline (health lock
+                // taken after the lane guards are released).
+                t.note_dispatched(!self.is_closed() && self.quarantine_flagged_for(worker));
                 self.inner.depth.fetch_sub(1, Ordering::SeqCst);
                 self.inner.metrics.record_pop(scanned);
                 self.inner.lanes[lane].not_full.notify_all();
@@ -1813,8 +1936,11 @@ impl Scheduler {
             }
         }
         let popped = found.map(|(gi, i, _)| {
-            let t = guards[gi].items.remove(i).expect("position is in range");
+            let mut t = guards[gi].items.remove(i).expect("position is in range");
             t.completion.set_state(TicketState::Dispatched);
+            // Coalesced into an existing batch: probation workers never
+            // reach here (`gated` above), so no probe to mark.
+            t.note_dispatched(false);
             (t, scan.lanes[gi])
         });
         drop(guards);

@@ -278,6 +278,20 @@ impl ModelSession {
         acts: &[&[i64]],
         pool: &mut crate::compiler::ScratchPool,
     ) -> Result<(Vec<Vec<i64>>, RunStats)> {
+        self.infer_batch_scoped(backend, acts, pool, None)
+    }
+
+    /// [`infer_batch_pooled`](Self::infer_batch_pooled) under an
+    /// optional trace scope: each packed round records a `round[i]` span
+    /// nested under the worker's batch span (see [`crate::trace`]). The
+    /// untraced entry points delegate here with `scope = None`.
+    pub(crate) fn infer_batch_scoped<B: PimBackend + ?Sized>(
+        &self,
+        backend: &mut B,
+        acts: &[&[i64]],
+        pool: &mut crate::compiler::ScratchPool,
+        scope: Option<&crate::trace::ExecScope<'_>>,
+    ) -> Result<(Vec<Vec<i64>>, RunStats)> {
         if backend.rows() != self.geom.rows || backend.row_lanes() != self.geom.row_lanes() {
             return Err(Error::Config(format!(
                 "session prepared for {} rows x {} lanes, backend is {} rows x {} lanes",
@@ -322,6 +336,7 @@ impl ModelSession {
                 lanes.copy_from_slice(&self.b_rows[local][s * q..(s + 1) * q]);
             },
             pool,
+            scope,
         )
     }
 }

@@ -61,8 +61,14 @@
 //!   plans and pre-staged weights (and shard them across regions), and
 //!   the [`coordinator::Coordinator`] worker pool tying them together.
 //! * [`metrics`] — request-path metrics: queue depth, batch size,
-//!   per-stage latency percentiles (p50/p95/p99), and resilience
-//!   counters (retries, sheds).
+//!   per-stage latency percentiles (p50/p95/p99), resilience
+//!   counters (retries, sheds), and a deadline-margin lane with an
+//!   SLO-miss counter.
+//! * [`trace`] — per-job observability: a lock-cheap span journal
+//!   threaded through submit → queue → dispatch → execute → gather,
+//!   with a bounded flight recorder for failed jobs, Chrome
+//!   trace-event export (Perfetto-loadable), and the `picaso trace`
+//!   summarizer (top self-time spans, per-job critical path).
 //! * [`runtime`] — PJRT/XLA golden-model execution of the AOT-compiled JAX
 //!   models in `artifacts/` (Python is build-time only, never on the request
 //!   path). Stubbed unless the `xla` feature is enabled.
@@ -96,6 +102,7 @@ pub mod report;
 pub mod runtime;
 pub mod synth;
 pub mod testutil;
+pub mod trace;
 pub mod tuner;
 pub mod util;
 pub mod verify;
@@ -124,6 +131,7 @@ pub mod prelude {
     pub use crate::isa::{AluOp, BoothConf, Instruction, Microcode, OpMuxConf};
     pub use crate::metrics::{MetricsSnapshot, ServingMetrics};
     pub use crate::synth::{ImplModel, ImplReport, TileReport};
+    pub use crate::trace::{TraceParent, TraceSink, Tracer};
     pub use crate::tuner::{choose_grid, predict_cycles, TilePrediction};
     pub use crate::verify::{verify, verify_on_pool, Report, Severity, VerifyCtx, VerifyMode};
     pub use crate::workload::ConvWorkload;

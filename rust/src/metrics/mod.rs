@@ -297,6 +297,15 @@ struct ServingInner {
     /// Tickets shed unexecuted at pop time because their deadline
     /// expired in the queue.
     sheds: u64,
+    /// Deadline-carrying jobs that reached a terminal state (delivered
+    /// or shed) — the deadline-margin lane's denominator.
+    deadline_jobs: u64,
+    /// Deadline-carrying jobs that finished (or were shed) past their
+    /// deadline, i.e. with a negative margin.
+    slo_misses: u64,
+    /// Signed deadline margin `(deadline − completion)` per
+    /// deadline-carrying job (µs; negative = SLO miss).
+    deadline_margin_us: LatencyTrack,
     /// Region-quarantine events: a worker region left the pop rotation
     /// after its consecutive-fault threshold (re-entries after a failed
     /// probe count again).
@@ -468,6 +477,22 @@ impl ServingMetrics {
         let mut g = self.lock();
         g.window_start.get_or_insert_with(Instant::now);
         g.sheds += 1;
+    }
+
+    /// Record the deadline margin of one terminal deadline-carrying
+    /// job: `deadline_us − end_to_end_us` for a delivered job, or the
+    /// (negative) time past deadline for a shed ticket. Negative
+    /// margins count as SLO misses. Feeds the deadline lane of the
+    /// snapshot — p50/p95 margin is how much headroom the deployment
+    /// has before sheds begin.
+    pub fn record_deadline_margin(&self, margin_us: f64) {
+        let mut g = self.lock();
+        g.window_start.get_or_insert_with(Instant::now);
+        g.deadline_jobs += 1;
+        if margin_us < 0.0 {
+            g.slo_misses += 1;
+        }
+        g.deadline_margin_us.push(margin_us);
     }
 
     /// Record one region-quarantine event: a worker region left the pop
@@ -764,6 +789,9 @@ impl ServingMetrics {
             ktiled_jobs: g.ktiled_jobs,
             retries: g.retries,
             sheds: g.sheds,
+            deadline_jobs: g.deadline_jobs,
+            slo_misses: g.slo_misses,
+            deadline_margin: g.deadline_margin_us.summary(),
             quarantines: g.quarantines,
             verify_passes: g.verify_passes,
             verify_warns: g.verify_warns,
@@ -921,6 +949,15 @@ pub struct MetricsSnapshot {
     /// Tickets shed unexecuted because their deadline expired in the
     /// queue.
     pub sheds: u64,
+    /// Deadline-carrying jobs that reached a terminal state (delivered
+    /// or shed) in the window.
+    pub deadline_jobs: u64,
+    /// Deadline-carrying jobs that missed their deadline (negative
+    /// margin), including sheds.
+    pub slo_misses: u64,
+    /// Signed deadline margin `(deadline − completion)` per
+    /// deadline-carrying job (µs; negative = missed).
+    pub deadline_margin: LatencySummary,
     /// Region-quarantine events: a region left the pop rotation after
     /// its consecutive-fault threshold (probe failures re-count).
     pub quarantines: u64,
@@ -1050,6 +1087,16 @@ impl MetricsSnapshot {
             out.push_str(&format!(
                 "\nresilience  retries={} shed={} quarantines={}",
                 self.retries, self.sheds, self.quarantines,
+            ));
+        }
+        if self.deadline_jobs > 0 {
+            out.push_str(&format!(
+                "\ndeadline    jobs={} slo_misses={} margin p50={:.0}us p95={:.0}us max={:.0}us",
+                self.deadline_jobs,
+                self.slo_misses,
+                self.deadline_margin.p50,
+                self.deadline_margin.p95,
+                self.deadline_margin.max,
             ));
         }
         if self.verify_passes > 0 || self.verify_warns > 0 || self.verify_rejects > 0 {
@@ -1260,6 +1307,26 @@ mod tests {
         assert!(text.contains("shed=1"), "{text}");
         // Quiet windows keep the resilience line out.
         assert!(!ServingMetrics::new().snapshot().render().contains("resilience"));
+    }
+
+    #[test]
+    fn deadline_lane_tracks_and_renders() {
+        let m = ServingMetrics::new();
+        m.record_deadline_margin(500.0);
+        m.record_deadline_margin(120.0);
+        m.record_deadline_margin(-40.0); // late delivery
+        m.record_deadline_margin(-10.0); // shed past deadline
+        let s = m.snapshot();
+        assert_eq!(s.deadline_jobs, 4);
+        assert_eq!(s.slo_misses, 2);
+        assert!(s.deadline_margin.p50 <= s.deadline_margin.p95);
+        assert!((s.deadline_margin.max - 500.0).abs() < 1e-9);
+        assert_eq!(s.deadline_margin.count, 4);
+        let text = s.render();
+        assert!(text.contains("deadline"), "{text}");
+        assert!(text.contains("slo_misses=2"), "{text}");
+        // Deadline-free windows keep the line out.
+        assert!(!ServingMetrics::new().snapshot().render().contains("deadline"));
     }
 
     #[test]

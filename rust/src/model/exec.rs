@@ -46,6 +46,7 @@ use crate::coordinator::{
     TilePolicy,
 };
 use crate::device::Device;
+use crate::trace::{OpenSpan, TraceParent, Tracer};
 use crate::tuner::{self, TilePrediction};
 use crate::verify::{verify_on_pool, VerifyMode};
 use crate::{Error, Result};
@@ -469,6 +470,26 @@ struct ReqState {
     /// Post-epilogue outputs by layer (residual producers stay
     /// available until the request completes).
     outs: Vec<Option<Vec<i64>>>,
+    /// Request-level span bookkeeping when the coordinator is traced.
+    trace: Option<ReqTrace>,
+}
+
+/// A request's `model-request` root span plus the currently-open layer
+/// span. Layer jobs parent to the layer span, so the journal shows
+/// `model-request → layer[i] → submit/queued/dispatch/…`.
+struct ReqTrace {
+    tracer: std::sync::Arc<Tracer>,
+    trace: u64,
+    root: OpenSpan,
+    layer: Option<(OpenSpan, usize)>,
+}
+
+/// Close a request's `model-request` root span (lane 0, top-level in its
+/// trace) once its output layer has gathered.
+fn close_request_root(state: &mut ReqState, req: usize) {
+    if let Some(rt) = state.trace.take() {
+        rt.tracer.end(0, rt.root, rt.trace, 0, req as u64, "model-request");
+    }
 }
 
 /// Runs request batches through a [`CompiledModel`] on its coordinator.
@@ -531,7 +552,7 @@ impl<'a> GraphExecutor<'a> {
         let t_start = Instant::now();
         let mut states: Vec<ReqState> = inputs
             .iter()
-            .map(|_| ReqState { t0: t_start, outs: vec![None; nl] })
+            .map(|_| ReqState { t0: t_start, outs: vec![None; nl], trace: None })
             .collect();
         report.request_us = vec![0.0; inputs.len()];
         match mode {
@@ -578,6 +599,7 @@ impl<'a> GraphExecutor<'a> {
                 in_flight.push_back((req, pos + 1, h));
             } else {
                 report.request_us[req] = states[req].t0.elapsed().as_secs_f64() * 1e6;
+                close_request_root(&mut states[req], req);
                 if admitted < inputs.len() {
                     states[admitted].t0 = Instant::now();
                     let h = self.submit_stage(admitted, 0, inputs, states)?;
@@ -608,6 +630,7 @@ impl<'a> GraphExecutor<'a> {
                 self.absorb(req, pos, result, states, report)?;
                 if pos + 1 == topo_len {
                     report.request_us[req] = states[req].t0.elapsed().as_secs_f64() * 1e6;
+                    close_request_root(&mut states[req], req);
                 }
             }
         }
@@ -624,7 +647,7 @@ impl<'a> GraphExecutor<'a> {
         req: usize,
         pos: usize,
         inputs: &[Vec<i64>],
-        states: &[ReqState],
+        states: &mut [ReqState],
     ) -> Result<crate::coordinator::JobHandle> {
         let g = self.model.graph();
         let idx = g.topo_order()[pos];
@@ -644,9 +667,24 @@ impl<'a> GraphExecutor<'a> {
         };
         let cl = &self.model.layers[idx];
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let job = Job::new(id, JobKind::SessionGemm { session: cl.session, a: a.into() })
+        let mut job = Job::new(id, JobKind::SessionGemm { session: cl.session, a: a.into() })
             .with_shards(cl.shards)
             .with_retry(self.model.retry);
+        if let Some(tracer) = &self.coord.config().trace {
+            let rt = states[req].trace.get_or_insert_with(|| ReqTrace {
+                tracer: std::sync::Arc::clone(tracer),
+                trace: tracer.new_trace(),
+                root: tracer.start(),
+                layer: None,
+            });
+            let open = rt.tracer.start();
+            rt.layer = Some((open, idx));
+            job.trace = Some(TraceParent {
+                tracer: std::sync::Arc::clone(&rt.tracer),
+                trace: rt.trace,
+                span: open.id,
+            });
+        }
         self.coord.submit_job(job)
     }
 
@@ -664,6 +702,11 @@ impl<'a> GraphExecutor<'a> {
     ) -> Result<()> {
         let g = self.model.graph();
         let idx = g.topo_order()[pos];
+        if let Some(rt) = &mut states[req].trace {
+            if let Some((open, lidx)) = rt.layer.take() {
+                rt.tracer.end(0, open, rt.trace, rt.root.id, req as u64, &format!("layer[{lidx}]"));
+            }
+        }
         if let Some(e) = &result.error {
             return Err(Error::Runtime(format!("request {req} layer {idx}: {e}")));
         }

@@ -1,0 +1,1064 @@
+//! End-to-end job tracing: span journal, flight recorder, Chrome export.
+//!
+//! The serving stack's aggregate metrics ([`crate::metrics`]) say *how
+//! much* time the fleet spends queued, batched, or retrying — this module
+//! says *where one job's* wall time went. It is the attribution layer the
+//! PrIM benchmarking study uses to split time between host, queue, and
+//! in-memory execution, applied to the PiCaSO serving stack:
+//!
+//! * [`Tracer`] — a lock-cheap span journal. Spans are recorded into
+//!   bounded per-lane ring buffers (lane 0 = the submit/queue side, lane
+//!   `w + 1` = worker `w`), each guarded by its own mutex, so workers
+//!   never contend with each other on the hot path. When a ring fills,
+//!   the oldest span is dropped and counted — the journal is a flight
+//!   recorder, not an unbounded log.
+//! * [`TraceParent`] — the handle a job carries through the stack: the
+//!   tracer, the logical-job trace id, and the span id new child spans
+//!   parent to. Cloning is an `Arc` bump; a job without one
+//!   (`Option::None`) costs a single branch everywhere — that is the
+//!   whole disabled-tracing overhead contract.
+//! * [`ExecScope`] — the worker-side context threaded into the compiler's
+//!   packed-round executor so each `round[i]` nests under its batch span.
+//! * [`TraceSink`] — exports the journal as Chrome trace-event JSON
+//!   (loadable in Perfetto / `about://tracing`): one track per scheduler
+//!   lane and worker (pid 1), plus one track per logical job (pid 2) so a
+//!   sharded gather reads as one timeline.
+//! * [`summarize_file`] — the `picaso trace` summarizer: parses the
+//!   export back (malformed JSON or an unclosed span is an error), checks
+//!   span-tree well-formedness (parents exist, children nest within
+//!   parents), and reports top spans by self-time plus a per-job critical
+//!   path.
+//!
+//! On job failure or shed, the job's span tree is copied into a bounded
+//! retained buffer ([`Tracer::retain_trace`]) and rendered into the error
+//! string ([`Tracer::render_timeline`]) so a post-mortem survives ring
+//! eviction.
+
+use std::collections::{HashMap, HashSet};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::{Error, Result};
+
+/// Default per-lane ring capacity (spans). At ~100 bytes a span this
+/// bounds a lane at a few MiB; older spans are dropped and counted.
+pub const DEFAULT_LANE_CAP: usize = 65_536;
+
+/// Default retained-buffer capacity (spans preserved for post-mortems).
+pub const DEFAULT_RETAINED_CAP: usize = 4_096;
+
+/// One closed span (or instant, when `dur_us == 0.0`) in the journal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Unique span id (never 0; 0 means "no parent" in [`Self::parent`]).
+    pub id: u64,
+    /// Parent span id, or 0 for a root span.
+    pub parent: u64,
+    /// Logical-job trace id, or 0 for fleet-side spans (batch windows).
+    pub trace: u64,
+    /// Job / request id the span belongs to (0 when not job-scoped).
+    pub job: u64,
+    /// Ring lane the span was recorded on (0 = submit/queue side,
+    /// `w + 1` = worker `w`).
+    pub lane: usize,
+    /// Span name (`submit`, `queued`, `dispatch`, `round[3]`, …).
+    pub name: String,
+    /// Start time in microseconds since the tracer's epoch.
+    pub t0_us: f64,
+    /// Duration in microseconds (0.0 for instant events).
+    pub dur_us: f64,
+}
+
+/// A started-but-not-yet-recorded span: the id is allocated eagerly so
+/// children can parent to it before it closes.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenSpan {
+    /// The span id children should use as their `parent`.
+    pub id: u64,
+    /// Start time in microseconds since the tracer's epoch.
+    pub t0_us: f64,
+}
+
+/// The trace context a job carries through the serving stack.
+///
+/// `span` is the id the job's lifecycle spans (`queued`, `dispatch`,
+/// `gather`, …) parent to: 0 for an ad-hoc submission, or the enclosing
+/// `layer[i]` span for a job the model executor issued.
+#[derive(Debug, Clone)]
+pub struct TraceParent {
+    /// The journal this job records into.
+    pub tracer: std::sync::Arc<Tracer>,
+    /// Logical-job trace id (one per submission / model request).
+    pub trace: u64,
+    /// Span id lifecycle spans parent to (0 = root of the trace).
+    pub span: u64,
+}
+
+/// Worker-side execution scope threaded into the compiler so per-round
+/// spans nest under the worker's batch span.
+#[derive(Debug)]
+pub struct ExecScope<'a> {
+    /// The journal to record into.
+    pub tracer: &'a Tracer,
+    /// The worker's ring lane (`widx + 1`).
+    pub lane: usize,
+    /// Trace id for recorded spans (0: batch windows are fleet-side).
+    pub trace: u64,
+    /// Parent span id (the enclosing batch span).
+    pub parent: u64,
+    /// Job id tag (0 for multi-job batch windows).
+    pub job: u64,
+}
+
+impl ExecScope<'_> {
+    /// Start a child span of this scope.
+    pub fn open(&self) -> OpenSpan {
+        self.tracer.start()
+    }
+
+    /// Close `open` as a child span of this scope named `name`.
+    pub fn close(&self, open: OpenSpan, name: &str) {
+        self.tracer
+            .end(self.lane, open, self.trace, self.parent, self.job, name);
+    }
+}
+
+#[derive(Debug)]
+struct Lane {
+    ring: Mutex<VecDeque<SpanEvent>>,
+}
+
+/// The span journal: bounded per-lane rings plus a retained buffer.
+///
+/// All recording paths take exactly one per-lane mutex for a push/pop —
+/// no allocation is amortized across jobs beyond the span itself, and a
+/// worker's lane is touched by that worker alone on the hot path.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    next_span: AtomicU64,
+    next_trace: AtomicU64,
+    lanes: Vec<Lane>,
+    lane_cap: usize,
+    retained: Mutex<VecDeque<SpanEvent>>,
+    retained_cap: usize,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    /// A tracer with one submit/queue lane plus one lane per worker, at
+    /// the default ring capacities.
+    pub fn new(workers: usize) -> Self {
+        Self::with_capacity(workers, DEFAULT_LANE_CAP, DEFAULT_RETAINED_CAP)
+    }
+
+    /// A tracer with explicit per-lane ring and retained-buffer
+    /// capacities (both clamped to at least 16 spans).
+    pub fn with_capacity(workers: usize, lane_cap: usize, retained_cap: usize) -> Self {
+        let lanes = (0..workers + 1)
+            .map(|_| Lane {
+                ring: Mutex::new(VecDeque::new()),
+            })
+            .collect();
+        Tracer {
+            epoch: Instant::now(),
+            next_span: AtomicU64::new(1),
+            next_trace: AtomicU64::new(1),
+            lanes,
+            lane_cap: lane_cap.max(16),
+            retained: Mutex::new(VecDeque::new()),
+            retained_cap: retained_cap.max(16),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of ring lanes (workers + 1).
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Microseconds elapsed since the tracer's epoch.
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Allocate a fresh logical-job trace id (never 0).
+    pub fn new_trace(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Start a span: allocates its id and stamps the start time. Nothing
+    /// is recorded until [`Self::end`] — an abandoned `OpenSpan` simply
+    /// never appears in the journal.
+    pub fn start(&self) -> OpenSpan {
+        OpenSpan {
+            id: self.next_span.fetch_add(1, Ordering::Relaxed),
+            t0_us: self.now_us(),
+        }
+    }
+
+    /// Close `open` and record it on `lane`, returning the span id.
+    pub fn end(
+        &self,
+        lane: usize,
+        open: OpenSpan,
+        trace: u64,
+        parent: u64,
+        job: u64,
+        name: &str,
+    ) -> u64 {
+        let dur = (self.now_us() - open.t0_us).max(0.0);
+        self.push(lane, SpanEvent {
+            id: open.id,
+            parent,
+            trace,
+            job,
+            lane: lane.min(self.lanes.len() - 1),
+            name: name.to_string(),
+            t0_us: open.t0_us,
+            dur_us: dur,
+        });
+        open.id
+    }
+
+    /// Record an instant event (a zero-duration span) on `lane`.
+    pub fn instant(&self, lane: usize, trace: u64, parent: u64, job: u64, name: &str) -> u64 {
+        let t0 = self.now_us();
+        self.record(lane, trace, parent, job, name, t0, 0.0)
+    }
+
+    /// Record a span with an explicit start and duration — used for
+    /// intervals whose length is known up front (a retry backoff delay).
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        lane: usize,
+        trace: u64,
+        parent: u64,
+        job: u64,
+        name: &str,
+        t0_us: f64,
+        dur_us: f64,
+    ) -> u64 {
+        let id = self.next_span.fetch_add(1, Ordering::Relaxed);
+        self.push(lane, SpanEvent {
+            id,
+            parent,
+            trace,
+            job,
+            lane: lane.min(self.lanes.len() - 1),
+            name: name.to_string(),
+            t0_us,
+            dur_us,
+        });
+        id
+    }
+
+    fn push(&self, lane: usize, ev: SpanEvent) {
+        let lane = lane.min(self.lanes.len() - 1);
+        let mut ring = self.lanes[lane].ring.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.len() >= self.lane_cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Copy every still-buffered span of `trace` into the retained
+    /// buffer, so a failed job's timeline survives later ring eviction.
+    /// Idempotent per span (a shard fan-out retains its shared logical
+    /// trace once per failing shard without duplicating spans).
+    pub fn retain_trace(&self, trace: u64) {
+        if trace == 0 {
+            return;
+        }
+        let mut picked: Vec<SpanEvent> = Vec::new();
+        for lane in &self.lanes {
+            let ring = lane.ring.lock().unwrap_or_else(|p| p.into_inner());
+            picked.extend(ring.iter().filter(|e| e.trace == trace).cloned());
+        }
+        let mut kept = self.retained.lock().unwrap_or_else(|p| p.into_inner());
+        let seen: HashSet<u64> = kept.iter().map(|e| e.id).collect();
+        for ev in picked {
+            if seen.contains(&ev.id) {
+                continue;
+            }
+            if kept.len() >= self.retained_cap {
+                kept.pop_front();
+            }
+            kept.push_back(ev);
+        }
+    }
+
+    /// Render `trace`'s span tree as an indented timeline for error
+    /// contexts, truncated to at most `max_len` characters.
+    pub fn render_timeline(&self, trace: u64, max_len: usize) -> String {
+        let mut evs: Vec<SpanEvent> = self
+            .events()
+            .into_iter()
+            .filter(|e| e.trace == trace)
+            .collect();
+        if evs.is_empty() {
+            return String::new();
+        }
+        evs.sort_by(|a, b| a.t0_us.partial_cmp(&b.t0_us).unwrap_or(std::cmp::Ordering::Equal));
+        let ids: HashSet<u64> = evs.iter().map(|e| e.id).collect();
+        let mut children: HashMap<u64, Vec<&SpanEvent>> = HashMap::new();
+        let mut roots: Vec<&SpanEvent> = Vec::new();
+        for ev in &evs {
+            if ev.parent != 0 && ids.contains(&ev.parent) {
+                children.entry(ev.parent).or_default().push(ev);
+            } else {
+                roots.push(ev);
+            }
+        }
+        let mut out = String::new();
+        let t_base = evs[0].t0_us;
+        let mut stack: Vec<(&SpanEvent, usize)> =
+            roots.into_iter().rev().map(|e| (e, 0)).collect();
+        while let Some((ev, depth)) = stack.pop() {
+            if out.len() >= max_len {
+                out.push_str("  … (truncated)");
+                break;
+            }
+            out.push_str(&format!(
+                "{:indent$}{} +{:.0}us {:.0}us\n",
+                "",
+                ev.name,
+                ev.t0_us - t_base,
+                ev.dur_us,
+                indent = depth * 2
+            ));
+            if let Some(kids) = children.get(&ev.id) {
+                for kid in kids.iter().rev() {
+                    stack.push((kid, depth + 1));
+                }
+            }
+        }
+        while out.ends_with('\n') {
+            out.pop();
+        }
+        out.truncate(max_len.max(16));
+        out
+    }
+
+    /// Snapshot every buffered span (lanes + retained buffer), deduped
+    /// by span id and sorted by start time.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut out: Vec<SpanEvent> = Vec::new();
+        let mut seen: HashSet<u64> = HashSet::new();
+        for lane in &self.lanes {
+            let ring = lane.ring.lock().unwrap_or_else(|p| p.into_inner());
+            for ev in ring.iter() {
+                if seen.insert(ev.id) {
+                    out.push(ev.clone());
+                }
+            }
+        }
+        let kept = self.retained.lock().unwrap_or_else(|p| p.into_inner());
+        for ev in kept.iter() {
+            if seen.insert(ev.id) {
+                out.push(ev.clone());
+            }
+        }
+        drop(kept);
+        out.sort_by(|a, b| a.t0_us.partial_cmp(&b.t0_us).unwrap_or(std::cmp::Ordering::Equal));
+        out
+    }
+
+    /// Spans evicted from full rings since the tracer was created.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------
+
+/// Exports a [`Tracer`]'s journal as Chrome trace-event JSON.
+///
+/// The export uses the object format (`{"traceEvents": [...]}`) with
+/// complete (`ph:"X"`) events. Two process groups make the two useful
+/// views: pid 1 ("serving lanes") has one thread per ring lane — the
+/// physical where-did-the-worker-spend-time view — and pid 2 ("logical
+/// jobs") duplicates every job-scoped span onto one thread per trace id,
+/// so a sharded scatter/gather or a pipelined model request reads as a
+/// single timeline.
+#[derive(Debug)]
+pub struct TraceSink;
+
+impl TraceSink {
+    /// Render the journal as a Chrome trace-event JSON string.
+    pub fn to_chrome_json(tracer: &Tracer) -> String {
+        let events = tracer.events();
+        let mut out = String::with_capacity(events.len() * 160 + 256);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"dropped\":");
+        out.push_str(&tracer.dropped().to_string());
+        out.push_str(",\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, s: String| {
+            if !std::mem::take(&mut first) {
+                out.push(',');
+            }
+            out.push_str(&s);
+        };
+        push(
+            &mut out,
+            "{\"ph\":\"M\",\"pid\":1,\"name\":\"process_name\",\"args\":{\"name\":\"serving lanes\"}}".to_string(),
+        );
+        push(
+            &mut out,
+            "{\"ph\":\"M\",\"pid\":2,\"name\":\"process_name\",\"args\":{\"name\":\"logical jobs\"}}".to_string(),
+        );
+        for lane in 0..tracer.lanes() {
+            let label = if lane == 0 {
+                "submit/queue".to_string()
+            } else {
+                format!("worker {}", lane - 1)
+            };
+            push(&mut out, format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{lane},\"name\":\"thread_name\",\"args\":{{\"name\":\"{label}\"}}}}"
+            ));
+        }
+        let mut traces: Vec<u64> = events
+            .iter()
+            .map(|e| e.trace)
+            .filter(|&t| t != 0)
+            .collect::<HashSet<_>>()
+            .into_iter()
+            .collect();
+        traces.sort_unstable();
+        for t in &traces {
+            push(&mut out, format!(
+                "{{\"ph\":\"M\",\"pid\":2,\"tid\":{t},\"name\":\"thread_name\",\"args\":{{\"name\":\"job trace {t}\"}}}}"
+            ));
+        }
+        for ev in &events {
+            push(&mut out, Self::event_json(ev, 1, ev.lane as u64));
+            if ev.trace != 0 {
+                push(&mut out, Self::event_json(ev, 2, ev.trace));
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+
+    fn event_json(ev: &SpanEvent, pid: u32, tid: u64) -> String {
+        format!(
+            "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\"name\":\"{}\",\"args\":{{\"id\":{},\"parent\":{},\"trace\":{},\"job\":{}}}}}",
+            ev.t0_us,
+            ev.dur_us,
+            escape_json(&ev.name),
+            ev.id,
+            ev.parent,
+            ev.trace,
+            ev.job,
+        )
+    }
+
+    /// Write the Chrome trace-event JSON export to `path`.
+    pub fn write(tracer: &Tracer, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, Self::to_chrome_json(tracer))?;
+        Ok(())
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Parse-back + summarizer (`picaso trace`)
+// ---------------------------------------------------------------------
+
+/// A parsed JSON value — the crate is dependency-free, so the summarizer
+/// carries its own minimal recursive-descent parser.
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(text: &'a str) -> Self {
+        Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        }
+    }
+
+    fn err(&self, msg: &str) -> Error {
+        Error::Runtime(format!("malformed trace json at byte {}: {msg}", self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > 64 {
+            return Err(self.err("nesting too deep"));
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let code = self.hex4()?;
+                            // Unpaired surrogates degrade to U+FFFD; the
+                            // exporter never emits them.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            continue;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Advance one full UTF-8 character.
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().ok_or_else(|| self.err("unexpected end"))?;
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+                None => return Err(self.err("unterminated string")),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let code = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value(depth + 1)?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser::new(text);
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing data after document"));
+    }
+    Ok(v)
+}
+
+/// One pid-1 span recovered from a Chrome-trace export.
+#[derive(Debug, Clone)]
+struct ParsedSpan {
+    id: u64,
+    parent: u64,
+    trace: u64,
+    name: String,
+    ts: f64,
+    dur: f64,
+}
+
+/// Summarize a Chrome-trace JSON file written by [`TraceSink`]: validate
+/// it (malformed JSON, unclosed spans, dangling parents, or children
+/// escaping their parents are errors), then report top spans by
+/// self-time and the critical path of the slowest logical jobs.
+pub fn summarize_file(path: &str) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read trace file '{path}': {e}")))?;
+    summarize_str(&text, path)
+}
+
+/// [`summarize_file`] over an in-memory JSON string; `label` names the
+/// source in the rendered report.
+pub fn summarize_str(text: &str, label: &str) -> Result<String> {
+    let doc = parse_json(text)?;
+    let dropped = doc.get("dropped").and_then(Json::num).unwrap_or(0.0) as u64;
+    let events = match doc.get("traceEvents") {
+        Some(Json::Arr(evs)) => evs,
+        _ => {
+            return Err(Error::Runtime(
+                "malformed trace json: no 'traceEvents' array".into(),
+            ))
+        }
+    };
+
+    let mut spans: Vec<ParsedSpan> = Vec::new();
+    let mut total_events = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::str)
+            .ok_or_else(|| Error::Runtime(format!("event {i}: missing 'ph'")))?;
+        if ph != "X" {
+            continue;
+        }
+        total_events += 1;
+        let name = ev
+            .get("name")
+            .and_then(Json::str)
+            .ok_or_else(|| Error::Runtime(format!("event {i}: X event missing 'name'")))?
+            .to_string();
+        let ts = ev
+            .get("ts")
+            .and_then(Json::num)
+            .ok_or_else(|| Error::Runtime(format!("event {i} ('{name}'): missing 'ts'")))?;
+        let dur = ev.get("dur").and_then(Json::num).ok_or_else(|| {
+            Error::Runtime(format!("event {i} ('{name}'): unclosed span (no 'dur')"))
+        })?;
+        let pid = ev.get("pid").and_then(Json::num).unwrap_or(0.0) as u32;
+        if pid != 1 {
+            continue; // pid 2 duplicates every job-scoped span
+        }
+        let args = ev.get("args");
+        let fld = |k: &str| args.and_then(|a| a.get(k)).and_then(Json::num).unwrap_or(0.0) as u64;
+        spans.push(ParsedSpan {
+            id: fld("id"),
+            parent: fld("parent"),
+            trace: fld("trace"),
+            name,
+            ts,
+            dur,
+        });
+    }
+
+    // Well-formedness: parents exist and children nest within them. A
+    // journal that dropped spans under ring pressure can legitimately
+    // have dangling parents — downgrade to warnings then.
+    let by_id: HashMap<u64, &ParsedSpan> = spans.iter().map(|s| (s.id, s)).collect();
+    let mut warnings: Vec<String> = Vec::new();
+    const EPS_US: f64 = 1.0;
+    for s in &spans {
+        if s.parent == 0 {
+            continue;
+        }
+        match by_id.get(&s.parent) {
+            None => {
+                let msg = format!("span {} ('{}') has unknown parent {}", s.id, s.name, s.parent);
+                if dropped > 0 {
+                    warnings.push(msg);
+                } else {
+                    return Err(Error::Runtime(format!("trace validation failed: {msg}")));
+                }
+            }
+            Some(p) => {
+                let escapes = s.ts < p.ts - EPS_US || s.ts + s.dur > p.ts + p.dur + EPS_US;
+                if escapes && p.dur > 0.0 {
+                    let msg = format!(
+                        "span {} ('{}') [{:.1}..{:.1}]us escapes parent '{}' [{:.1}..{:.1}]us",
+                        s.id,
+                        s.name,
+                        s.ts,
+                        s.ts + s.dur,
+                        p.name,
+                        p.ts,
+                        p.ts + p.dur
+                    );
+                    if dropped > 0 {
+                        warnings.push(msg);
+                    } else {
+                        return Err(Error::Runtime(format!("trace validation failed: {msg}")));
+                    }
+                }
+            }
+        }
+    }
+
+    // Self-time per name: duration minus direct children's durations.
+    let mut child_dur: HashMap<u64, f64> = HashMap::new();
+    for s in &spans {
+        if s.parent != 0 && by_id.contains_key(&s.parent) {
+            *child_dur.entry(s.parent).or_insert(0.0) += s.dur;
+        }
+    }
+    let mut by_name: HashMap<&str, (usize, f64, f64)> = HashMap::new();
+    for s in &spans {
+        let self_us = (s.dur - child_dur.get(&s.id).copied().unwrap_or(0.0)).max(0.0);
+        let e = by_name.entry(s.name.as_str()).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += s.dur;
+        e.2 += self_us;
+    }
+    let mut ranked: Vec<(&str, usize, f64, f64)> =
+        by_name.iter().map(|(n, &(c, t, s))| (*n, c, t, s)).collect();
+    ranked.sort_by(|a, b| b.3.partial_cmp(&a.3).unwrap_or(std::cmp::Ordering::Equal));
+
+    // Critical path per logical job: the chronological chain of the
+    // trace's top-level spans (or, for a single-root model request, its
+    // direct layer children).
+    let mut traces: HashMap<u64, Vec<&ParsedSpan>> = HashMap::new();
+    for s in &spans {
+        if s.trace != 0 {
+            traces.entry(s.trace).or_default().push(s);
+        }
+    }
+    let mut trace_rows: Vec<(u64, f64, String)> = Vec::new();
+    for (&tid, group) in &traces {
+        let ids: HashSet<u64> = group.iter().map(|s| s.id).collect();
+        let t0 = group.iter().map(|s| s.ts).fold(f64::INFINITY, f64::min);
+        let t1 = group
+            .iter()
+            .map(|s| s.ts + s.dur)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mut tops: Vec<&ParsedSpan> = group
+            .iter()
+            .filter(|s| s.parent == 0 || !ids.contains(&s.parent))
+            .copied()
+            .collect();
+        if tops.len() == 1 {
+            let root = tops[0];
+            let mut kids: Vec<&ParsedSpan> = group
+                .iter()
+                .filter(|s| s.parent == root.id)
+                .copied()
+                .collect();
+            if !kids.is_empty() {
+                kids.insert(0, root);
+                tops = kids;
+            }
+        }
+        tops.sort_by(|a, b| a.ts.partial_cmp(&b.ts).unwrap_or(std::cmp::Ordering::Equal));
+        let chain = tops
+            .iter()
+            .take(12)
+            .map(|s| format!("{} {:.0}us", s.name, s.dur))
+            .collect::<Vec<_>>()
+            .join(" -> ");
+        trace_rows.push((tid, (t1 - t0).max(0.0), chain));
+    }
+    trace_rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+
+    let mut out = String::new();
+    out.push_str(&format!("trace summary: {label}\n"));
+    out.push_str(&format!(
+        "events={} spans={} logical-jobs={} dropped={}\n",
+        total_events,
+        spans.len(),
+        traces.len(),
+        dropped
+    ));
+    for w in warnings.iter().take(8) {
+        out.push_str(&format!("warning: {w}\n"));
+    }
+    out.push_str("\ntop spans by self-time:\n");
+    for (name, count, total, self_us) in ranked.iter().take(10) {
+        out.push_str(&format!(
+            "  {name:<18} count={count:<6} total={total:>10.0}us self={self_us:>10.0}us\n"
+        ));
+    }
+    if !trace_rows.is_empty() {
+        out.push_str(&format!(
+            "\ncritical path ({} slowest of {} logical jobs):\n",
+            trace_rows.len().min(5),
+            trace_rows.len()
+        ));
+        for (tid, total, chain) in trace_rows.iter().take(5) {
+            out.push_str(&format!("  trace {tid} ({total:.0}us): {chain}\n"));
+        }
+    }
+    while out.ends_with('\n') {
+        out.pop();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn span_ids_and_traces_are_unique_and_nonzero() {
+        let tr = Tracer::new(2);
+        let a = tr.start();
+        let b = tr.start();
+        assert!(a.id >= 1 && b.id > a.id);
+        let t1 = tr.new_trace();
+        let t2 = tr.new_trace();
+        assert!(t1 >= 1 && t2 > t1);
+    }
+
+    #[test]
+    fn end_records_on_the_right_lane() {
+        let tr = Tracer::new(2);
+        let open = tr.start();
+        tr.end(1, open, 7, 0, 42, "dispatch");
+        let evs = tr.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].lane, 1);
+        assert_eq!(evs[0].trace, 7);
+        assert_eq!(evs[0].job, 42);
+        assert_eq!(evs[0].name, "dispatch");
+        assert!(evs[0].dur_us >= 0.0);
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let tr = Tracer::with_capacity(0, 16, 16);
+        for i in 0..40 {
+            tr.instant(0, 1, 0, i, "tick");
+        }
+        assert_eq!(tr.events().len(), 16);
+        assert_eq!(tr.dropped(), 24);
+    }
+
+    #[test]
+    fn retain_survives_eviction_and_dedups() {
+        let tr = Tracer::with_capacity(0, 16, 64);
+        tr.instant(0, 9, 0, 1, "keep-me");
+        tr.retain_trace(9);
+        tr.retain_trace(9); // idempotent
+        for i in 0..32 {
+            tr.instant(0, 1, 0, i, "noise");
+        }
+        let evs = tr.events();
+        assert_eq!(evs.iter().filter(|e| e.name == "keep-me").count(), 1);
+    }
+
+    #[test]
+    fn timeline_renders_nested_tree() {
+        let tr = Tracer::new(1);
+        let root = tr.start();
+        let child = tr.start();
+        tr.end(0, child, 5, root.id, 1, "queued");
+        tr.end(0, root, 5, 0, 1, "submit");
+        let tl = tr.render_timeline(5, 4096);
+        assert!(tl.contains("submit"), "{tl}");
+        assert!(tl.contains("  queued"), "expected indented child: {tl}");
+    }
+
+    #[test]
+    fn chrome_export_parses_back_and_summarizes() {
+        let tr = Arc::new(Tracer::new(2));
+        let t = tr.new_trace();
+        let submit = tr.start();
+        let q = tr.start();
+        tr.end(0, q, t, 0, 1, "queued");
+        let d = tr.start();
+        tr.end(1, d, t, 0, 1, "dispatch");
+        tr.end(0, submit, t, 0, 1, "submit");
+        let json = TraceSink::to_chrome_json(&tr);
+        let report = summarize_str(&json, "mem").expect("valid export");
+        assert!(report.contains("top spans by self-time"), "{report}");
+        assert!(report.contains("critical path"), "{report}");
+        assert!(report.contains("queued"), "{report}");
+    }
+
+    #[test]
+    fn summarizer_rejects_malformed_and_unclosed() {
+        assert!(summarize_str("{not json", "x").is_err());
+        assert!(summarize_str("{\"dropped\":0}", "x").is_err());
+        // An X event with no dur is an unclosed span.
+        let unclosed = "{\"dropped\":0,\"traceEvents\":[{\"ph\":\"X\",\"pid\":1,\"tid\":0,\"ts\":1.0,\"name\":\"queued\"}]}";
+        let err = summarize_str(unclosed, "x").unwrap_err();
+        assert!(format!("{err}").contains("unclosed"), "{err}");
+    }
+
+    #[test]
+    fn summarizer_rejects_dangling_parent_and_escaping_child() {
+        let dangling = "{\"dropped\":0,\"traceEvents\":[{\"ph\":\"X\",\"pid\":1,\"tid\":0,\"ts\":1.0,\"dur\":2.0,\"name\":\"a\",\"args\":{\"id\":5,\"parent\":99,\"trace\":1,\"job\":1}}]}";
+        assert!(summarize_str(dangling, "x").is_err());
+        let escaping = concat!(
+            "{\"dropped\":0,\"traceEvents\":[",
+            "{\"ph\":\"X\",\"pid\":1,\"tid\":0,\"ts\":10.0,\"dur\":5.0,\"name\":\"parent\",\"args\":{\"id\":1,\"parent\":0,\"trace\":1,\"job\":1}},",
+            "{\"ph\":\"X\",\"pid\":1,\"tid\":0,\"ts\":100.0,\"dur\":5.0,\"name\":\"child\",\"args\":{\"id\":2,\"parent\":1,\"trace\":1,\"job\":1}}",
+            "]}"
+        );
+        let err = summarize_str(escaping, "x").unwrap_err();
+        assert!(format!("{err}").contains("escapes"), "{err}");
+        // With drops recorded, the same defect degrades to a warning.
+        let with_drops = escaping.replacen("\"dropped\":0", "\"dropped\":3", 1);
+        let report = summarize_str(&with_drops, "x").expect("warnings only");
+        assert!(report.contains("warning"), "{report}");
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_nesting() {
+        let v = parse_json("{\"a\\n\\\"b\":[1,2.5,-3e2,true,false,null,\"\\u0041\"]}").unwrap();
+        let arr = v.get("a\n\"b").expect("key with escapes");
+        match arr {
+            Json::Arr(items) => {
+                assert_eq!(items.len(), 7);
+                assert_eq!(items[0].num(), Some(1.0));
+                assert_eq!(items[2].num(), Some(-300.0));
+                assert_eq!(items[6].str(), Some("A"));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        assert!(parse_json("[1,2,").is_err());
+        assert!(parse_json("{\"a\":1} extra").is_err());
+    }
+}

@@ -1,0 +1,364 @@
+//! End-to-end tracing: span-tree well-formedness through the real
+//! serving stack, scatter/gather parenting across a poisoned-region
+//! retry, per-layer spans under pipelined model requests, the
+//! zero-per-job-allocation contract when tracing is off, and Chrome
+//! trace-event parse-back through the summarizer.
+
+use picaso::compiler::gemm_ref;
+use picaso::prelude::*;
+use picaso::trace::summarize_str;
+use picaso::util::Xoshiro256;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+// ------------------------------------------------ counting allocator
+//
+// Every allocation in this test binary is tallied so the
+// tracing-off-costs-nothing contract is measurable. The allocator is
+// process-global, so tests serialize through `lock()` to keep one
+// test's serving run out of another's byte counts.
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn lock() -> MutexGuard<'static, ()> {
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn gemm_job(id: u64, shape: GemmShape, seed: u64) -> (Job, Vec<i64>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut a = vec![0i64; shape.m * shape.k];
+    let mut b = vec![0i64; shape.k * shape.n];
+    rng.fill_signed(&mut a, 8);
+    rng.fill_signed(&mut b, 8);
+    let expect = gemm_ref(shape, &a, &b);
+    (Job::new(id, JobKind::Gemm { shape, width: 8, a, b }), expect)
+}
+
+fn traced_pool(workers: usize) -> (Arc<Tracer>, Coordinator) {
+    let tracer = Arc::new(Tracer::new(workers));
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy::Fixed { max_batch: 4, max_wait: Duration::from_micros(100) },
+        trace: Some(Arc::clone(&tracer)),
+        ..Default::default()
+    })
+    .unwrap();
+    (tracer, coord)
+}
+
+// ------------------------------------------- span-tree well-formedness
+
+/// A traced run — plain jobs plus a 2x2 tiled scatter — produces every
+/// lifecycle span, gather/add-reduce parenting holds, and the Chrome
+/// export parses back through the summarizer's validation.
+#[test]
+fn span_tree_well_formed_and_parses_back() {
+    let _g = lock();
+    let (tracer, coord) = traced_pool(2);
+    let shape = GemmShape { m: 2, k: 16, n: 4 };
+    for i in 0..4u64 {
+        let (job, expect) = gemm_job(i, shape, 0x7A + i);
+        let r = coord.submit_job(job).unwrap().wait();
+        assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+        assert_eq!(r.output, expect, "job {i}");
+    }
+    // A 2-D tiled scatter: 2 k-tiles force the add-reduce gather path.
+    let (job, expect) = gemm_job(100, shape, 0x77);
+    let r = coord
+        .submit_job(job.with_shards(ShardPolicy::Grid { k_tiles: 2, n_tiles: 2 }))
+        .unwrap()
+        .wait();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.output, expect);
+    assert_eq!(r.shards, 4);
+    coord.shutdown();
+
+    let events = tracer.events();
+    let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+    for want in ["submit", "verify", "queued", "dispatch", "batch", "gather", "add-reduce"] {
+        assert!(names.contains(&want), "missing span '{want}' in {names:?}");
+    }
+    assert!(
+        names.iter().any(|n| n.starts_with("round[")),
+        "packed rounds must record round[i] spans: {names:?}"
+    );
+    // The verify child nests under its submission's submit span.
+    let verify = events.iter().find(|e| e.name == "verify").unwrap();
+    let submit_parent = events
+        .iter()
+        .find(|e| e.id == verify.parent)
+        .expect("verify's parent span is in the journal");
+    assert_eq!(submit_parent.name, "submit");
+    // add-reduce is a child of the gather span of the same trace.
+    let addred = events.iter().find(|e| e.name == "add-reduce").unwrap();
+    let gather = events
+        .iter()
+        .find(|e| e.id == addred.parent)
+        .expect("add-reduce's parent span is in the journal");
+    assert_eq!(gather.name, "gather");
+    assert_eq!(gather.trace, addred.trace, "gather and add-reduce share the logical trace");
+    // Every shard ticket of the tiled job shares that one trace id: at
+    // least 4 queued spans carry it.
+    let shard_queued =
+        events.iter().filter(|e| e.trace == addred.trace && e.name == "queued").count();
+    assert_eq!(shard_queued, 4, "one queued span per tile shard");
+    // Batch windows are fleet-side (trace 0) on worker lanes.
+    let batch = events.iter().find(|e| e.name == "batch").unwrap();
+    assert_eq!(batch.trace, 0);
+    assert!(batch.lane >= 1, "batch spans live on worker lanes");
+    assert_eq!(tracer.dropped(), 0);
+
+    // Parse-back: the export validates clean and summarizes.
+    let json = TraceSink::to_chrome_json(&tracer);
+    assert!(json.contains("\"displayTimeUnit\":\"ms\""), "object-format export");
+    assert!(json.contains("serving lanes") && json.contains("logical jobs"));
+    let report = summarize_str(&json, "test").unwrap();
+    assert!(report.contains("top spans by self-time"), "{report}");
+    assert!(report.contains("critical path"), "{report}");
+    assert!(report.contains("submit"), "{report}");
+}
+
+// ------------------------------- retry parenting on a poisoned region
+
+/// A k-split scatter through a pool with one poisoned region: the
+/// failing shard's retry instant, the gather, and the add-reduce all
+/// stay on the one logical trace, and the result is bit-exact.
+#[test]
+fn retry_keeps_scatter_gather_on_one_trace() {
+    let _g = lock();
+    let tracer = Arc::new(Tracer::new(2));
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        geom: ArrayGeometry::new(2, 1),
+        batch: BatchPolicy::disabled(),
+        trace: Some(Arc::clone(&tracer)),
+        backend_hook: Some(BackendHook(Arc::new(|widx, inner| {
+            if widx == 0 {
+                Box::new(FaultInjector::new(inner, FaultPlan::Poisoned))
+            } else {
+                inner
+            }
+        }))),
+        ..Default::default()
+    })
+    .unwrap();
+    let shape = GemmShape { m: 2, k: 16, n: 4 };
+    // Several k-split jobs: the poisoned region keeps pulling tickets,
+    // so at least one shard must travel through a retry.
+    let mut total_retries = 0u32;
+    for i in 0..6u64 {
+        let (job, expect) = gemm_job(i, shape, 0xBEEF + i);
+        let r = coord
+            .submit_job(job.with_shards(ShardPolicy::Grid { k_tiles: 2, n_tiles: 1 }))
+            .unwrap()
+            .wait();
+        assert!(r.error.is_none(), "job {i}: {:?}", r.error);
+        assert_eq!(r.output, expect, "job {i} must stay bit-exact through retry");
+        total_retries += r.retries;
+    }
+    assert!(total_retries >= 1, "the poisoned region must have forced a retry");
+    coord.shutdown();
+
+    let events = tracer.events();
+    let retry = events
+        .iter()
+        .find(|e| e.name.starts_with("retry["))
+        .expect("a retry[n] instant is recorded");
+    assert_ne!(retry.trace, 0, "retries are job-scoped");
+    let gather = events
+        .iter()
+        .find(|e| e.trace == retry.trace && e.name == "gather")
+        .expect("the retried shard's logical job still gathers");
+    let addred = events
+        .iter()
+        .find(|e| e.trace == retry.trace && e.name == "add-reduce")
+        .expect("k-split gather add-reduces partial sums");
+    assert_eq!(addred.parent, gather.id);
+    // The shard was re-queued: its trace has more queued spans than
+    // shards (the retry re-opens the queued span).
+    let queued =
+        events.iter().filter(|e| e.trace == retry.trace && e.name == "queued").count();
+    assert!(queued >= 3, "2 shards + >=1 re-queue, got {queued}");
+}
+
+// --------------------------------------- pipelined model-layer spans
+
+/// Pipelined model requests trace as `model-request` roots with one
+/// `layer[i]` child per stage, and the layer jobs' lifecycle spans
+/// parent under those layer spans.
+#[test]
+fn pipelined_requests_trace_per_layer_spans() {
+    let _g = lock();
+    let (tracer, coord) = traced_pool(2);
+    let dims = [12usize, 8, 6];
+    let graph = picaso::cli::build_mlp(&dims, 8, "sign", 0xD1).unwrap();
+    let requests = 3usize;
+    let mut rng = Xoshiro256::seeded(0xF00D);
+    let mut inputs = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let mut a = vec![0i64; dims[0]];
+        rng.fill_signed(&mut a, 8);
+        inputs.push(a);
+    }
+    let expects: Vec<Vec<i64>> =
+        inputs.iter().map(|a| graph.forward_ref(a, 1)).collect::<picaso::Result<_>>().unwrap();
+    let model = CompiledModel::compile(&coord, graph, CompileOptions::default()).unwrap();
+    let exec = GraphExecutor::new(&coord, &model);
+    let report = exec.infer_batch(&inputs, ExecMode::Pipelined).unwrap();
+    assert_eq!(report.outputs, expects, "traced inference stays bit-exact");
+    model.close(&coord);
+    coord.shutdown();
+
+    let events = tracer.events();
+    let roots: Vec<_> = events.iter().filter(|e| e.name == "model-request").collect();
+    assert_eq!(roots.len(), requests, "one root span per request");
+    for layer in 0..dims.len() - 1 {
+        let name = format!("layer[{layer}]");
+        let spans: Vec<_> = events.iter().filter(|e| e.name == name).collect();
+        assert_eq!(spans.len(), requests, "one {name} span per request");
+        for s in &spans {
+            let root = roots
+                .iter()
+                .find(|r| r.id == s.parent)
+                .unwrap_or_else(|| panic!("{name} must parent to a model-request root"));
+            assert_eq!(root.trace, s.trace, "layer spans stay on the request's trace");
+        }
+    }
+    // Layer jobs' submit spans parent under a layer span of the same
+    // trace (never the 0 root an ad-hoc submission would use).
+    let layer_ids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.name.starts_with("layer["))
+        .map(|e| e.id)
+        .collect();
+    let submits: Vec<_> = events.iter().filter(|e| e.name == "submit").collect();
+    assert_eq!(submits.len(), requests * (dims.len() - 1), "one submit per layer job");
+    for s in submits {
+        assert!(
+            layer_ids.contains(&s.parent),
+            "submit span {} must nest under a layer span, parent was {}",
+            s.id,
+            s.parent
+        );
+    }
+    // Distinct requests get distinct traces.
+    let mut traces: Vec<u64> = roots.iter().map(|r| r.trace).collect();
+    traces.sort_unstable();
+    traces.dedup();
+    assert_eq!(traces.len(), requests);
+
+    // The export of a model run also validates clean.
+    let json = TraceSink::to_chrome_json(&tracer);
+    let report = summarize_str(&json, "model").unwrap();
+    assert!(report.contains("model-request"), "{report}");
+}
+
+// --------------------------------------------- disabled-tracing cost
+
+/// With tracing off, serving N extra jobs allocates the same bytes per
+/// job as any other N jobs (no hidden per-job tracing overhead); with
+/// tracing on, the per-job byte cost is strictly higher (the spans).
+#[test]
+fn tracing_off_adds_no_per_job_allocation() {
+    let _g = lock();
+    fn serve_bytes(jobs: u64, traced: bool) -> u64 {
+        let tracer = traced.then(|| Arc::new(Tracer::new(1)));
+        let coord = Coordinator::new(CoordinatorConfig {
+            workers: 1,
+            geom: ArrayGeometry::new(2, 1),
+            batch: BatchPolicy::disabled(),
+            trace: tracer,
+            ..Default::default()
+        })
+        .unwrap();
+        let shape = GemmShape { m: 1, k: 8, n: 2 };
+        // Warmup: the first job pays one-off worker/pool setup.
+        let (wjob, wexpect) = gemm_job(u64::MAX, shape, 0x5EED);
+        assert_eq!(coord.submit_job(wjob).unwrap().wait().output, wexpect);
+        let before = ALLOCATED.load(Ordering::Relaxed);
+        for i in 0..jobs {
+            let (job, expect) = gemm_job(i, shape, 0x999 + i);
+            let r = coord.submit_job(job).unwrap().wait();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.output, expect);
+        }
+        let bytes = ALLOCATED.load(Ordering::Relaxed) - before;
+        coord.shutdown();
+        bytes
+    }
+    // Marginal per-job cost between an N-job and a 2N-job run, so
+    // fixed setup cancels out.
+    let n = 32u64;
+    let marginal = |traced: bool| {
+        let small = serve_bytes(n, traced);
+        let big = serve_bytes(2 * n, traced);
+        big.saturating_sub(small) / n
+    };
+    let off_a = marginal(false);
+    let off_b = marginal(false);
+    let on = marginal(true);
+    // The untraced per-job cost is reproducible run to run (generous
+    // tolerance: scheduling can shift amortized buffer growth).
+    let spread = off_a.abs_diff(off_b);
+    assert!(
+        spread <= off_a.max(off_b) / 2 + 2048,
+        "untraced per-job bytes unstable: {off_a} vs {off_b}"
+    );
+    // Turning tracing on must cost strictly more per job — and
+    // therefore tracing off cannot be paying for spans.
+    assert!(
+        on > off_a.max(off_b),
+        "traced per-job bytes ({on}) must exceed untraced ({off_a}/{off_b})"
+    );
+}
+
+// ------------------------------------------------- summarizer gating
+
+/// The summarizer is a usable CI gate: malformed JSON and unclosed
+/// spans fail, a minimal valid journal passes.
+#[test]
+fn summarizer_accepts_valid_and_rejects_broken_journals() {
+    let _g = lock();
+    assert!(summarize_str("{not json", "bad").is_err());
+    let unclosed = r#"{"traceEvents":[
+        {"ph":"X","pid":1,"tid":0,"ts":0.0,"name":"submit",
+         "args":{"id":1,"parent":0,"trace":1,"job":0}}]}"#;
+    let err = summarize_str(unclosed, "unclosed").unwrap_err();
+    assert!(format!("{err}").contains("unclosed"), "{err}");
+    let ok = r#"{"displayTimeUnit":"ms","dropped":0,"traceEvents":[
+        {"ph":"M","pid":1,"name":"process_name","args":{"name":"serving lanes"}},
+        {"ph":"X","pid":1,"tid":0,"ts":0.0,"dur":10.0,"name":"submit",
+         "args":{"id":1,"parent":0,"trace":1,"job":0}},
+        {"ph":"X","pid":1,"tid":0,"ts":1.0,"dur":4.0,"name":"verify",
+         "args":{"id":2,"parent":1,"trace":1,"job":0}}]}"#;
+    let report = summarize_str(ok, "tiny").unwrap();
+    assert!(report.contains("top spans by self-time"), "{report}");
+    assert!(report.contains("verify"), "{report}");
+}
